@@ -1,0 +1,219 @@
+//! Reproduce the generalization experiments:
+//!
+//! * **Fig. 6** — homogeneous 2x V100 cluster, InceptionV3: relative
+//!   training speed vs the human-expert strategy, compared with the
+//!   reported improvements of HDP / Post / PlaceTo / GDP / Baechi /
+//!   FlexFlow (per the paper's §5.4 methodology, non-open-source systems
+//!   enter via their published speedups).
+//! * **Table 7** — MCTS iterations needed to beat DP-NCCL on unseen
+//!   random topologies: GNN-guided TAG vs pure MCTS.
+//! * **Table 8** — hold-out generalization: average speed-up over
+//!   DP-NCCL on testbed and cloud when the GNN was trained *without*
+//!   the evaluated model (TAG-) vs with it (TAG).
+//!
+//!   cargo run --release --example generalization [-- fig6] [-- tab7] [-- tab8]
+//!   (no args = run everything at a small budget)
+
+use tag::cluster::generator::random_topologies;
+use tag::cluster::presets::{cloud, homogeneous, testbed};
+use tag::coordinator::{prepare, search_session, SearchConfig, Trainer};
+use tag::dist::Lowering;
+use tag::gnn::{params, GnnService};
+use tag::mcts::{Mcts, UniformPrior};
+use tag::models;
+use tag::strategy::{baselines, enumerate_actions};
+
+fn has(flag: &str) -> bool {
+    std::env::args().any(|a| a == flag)
+}
+
+fn arg(name: &str, default: usize) -> usize {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}="))?.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let all = !(has("fig6") || has("tab7") || has("tab8"));
+    if all || has("fig6") {
+        fig6();
+    }
+    if all || has("tab7") {
+        tab7();
+    }
+    if all || has("tab8") {
+        tab8();
+    }
+}
+
+/// Fig. 6: relative speed vs expert on homogeneous 2x V100.
+fn fig6() {
+    let topo = homogeneous();
+    let model = models::inception_v3(32, 0.5);
+    let cfg = SearchConfig {
+        max_groups: 24,
+        mcts_iterations: arg("iters", 200),
+        seed: 6,
+        apply_sfb: true,
+        profile_noise: 0.0,
+    };
+    let prep = prepare(model, &topo, &cfg);
+    let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+    let ng = prep.gg.num_groups();
+    let t_expert = low.evaluate(&baselines::expert(ng, &topo)).time;
+    let t_baechi = low.evaluate(&baselines::baechi_msct(&low)).time;
+    let t_ff = low
+        .evaluate(&baselines::flexflow_mcmc(
+            &low,
+            &enumerate_actions(&topo),
+            cfg.mcts_iterations,
+            6,
+        ))
+        .time;
+    let res = search_session(&prep, &topo, None, &cfg);
+    let t_tag = res.dp_time / res.speedup;
+
+    println!("=== Fig. 6: InceptionV3 on homogeneous 2x V100 (speed vs expert) ===");
+    // Reported relative speeds from the papers (expert = 1.0), used for
+    // the systems without open-source implementations — the paper's own
+    // comparison methodology (§5.4).
+    let reported = [("HDP*", 1.05), ("Post*", 1.14), ("PlaceTo*", 1.08), ("GDP*", 1.20)];
+    println!("{:<10} {:>8}", "system", "rel.speed");
+    println!("{:<10} {:>8.2}", "Expert", 1.0);
+    for (n, v) in reported {
+        println!("{:<10} {:>8.2}", n, v);
+    }
+    println!("{:<10} {:>8.2}", "Baechi", t_expert / t_baechi);
+    println!("{:<10} {:>8.2}", "FlexFlow", t_expert / t_ff);
+    println!("{:<10} {:>8.2}", "TAG", t_expert / t_tag);
+    println!("(* = reported numbers, per the paper's methodology)\n");
+}
+
+/// Table 7: iterations to beat DP-NCCL, pure MCTS vs GNN-guided.
+fn tab7() {
+    let n_topos = arg("topos", 12);
+    let iters = arg("iters", 200);
+    let gnn = load_gnn();
+    println!("=== Table 7: avg MCTS iterations to first beat DP-NCCL ===");
+    println!("(over {n_topos} unseen random topologies; cap {iters})");
+    println!("{:<12} {:>10} {:>10}", "model", "PureMCTS", "TAG");
+
+    for name in ["InceptionV3", "ResNet101", "VGG19", "Transformer", "BERT-Small"] {
+        let mut sum_pure = 0.0;
+        let mut sum_tag = 0.0;
+        let topos = random_topologies(0xBEEF + name.len() as u64, n_topos);
+        for (ti, topo) in topos.iter().enumerate() {
+            let model = models::by_name(name, 0.25).unwrap();
+            let cfg = SearchConfig {
+                max_groups: 16,
+                mcts_iterations: iters,
+                seed: 1000 + ti as u64,
+                apply_sfb: false,
+                profile_noise: 0.0,
+            };
+            let prep = prepare(model, topo, &cfg);
+            let low = Lowering::new(&prep.gg, topo, &prep.cost, &prep.comm);
+            let actions = enumerate_actions(topo);
+
+            // Disable the root sweep in both arms so the metric compares
+            // raw prior quality (the paper's Table 7 setting).
+            let mut pure = Mcts::new(&low, actions.clone(), UniformPrior, cfg.seed);
+            pure.root_sweep = false;
+            let rp = pure.search(iters);
+            sum_pure += rp.first_beats_dp.unwrap_or(iters) as f64;
+
+            match &gnn {
+                Some((svc, p)) => {
+                    let builder =
+                        tag::gnn::FeatureBuilder::new(&prep.gg, topo, &actions);
+                    let prior = tag::gnn::GnnPrior::new(svc, builder, p.clone());
+                    let mut guided = Mcts::new(&low, actions.clone(), prior, cfg.seed);
+                    guided.root_sweep = false;
+                    let rg = guided.search(iters);
+                    sum_tag += rg.first_beats_dp.unwrap_or(iters) as f64;
+                }
+                None => sum_tag += rp.first_beats_dp.unwrap_or(iters) as f64,
+            }
+        }
+        println!(
+            "{:<12} {:>10.1} {:>10.1}",
+            name,
+            sum_pure / n_topos as f64,
+            sum_tag / n_topos as f64
+        );
+    }
+    if gnn.is_none() {
+        println!("(! no trained GNN found — TAG column == pure; run train_gnn first)");
+    }
+    println!();
+}
+
+/// Table 8: hold-out-model speedups on testbed and cloud.
+fn tab8() {
+    let Some((svc, base)) = load_gnn_service() else {
+        println!("=== Table 8 skipped: run `make artifacts` first ===");
+        return;
+    };
+    let games = arg("games", 8);
+    println!("=== Table 8: avg speed-up over DP-NCCL (hold-out GNN training) ===");
+    println!("{:<12} {:>10} {:>10} {:>10} {:>10}", "model", "tb TAG", "tb TAG-", "cl TAG", "cl TAG-");
+
+    for name in ["InceptionV3", "ResNet101", "VGG19", "Transformer", "BERT-Small"] {
+        // TAG: trained on all models; TAG-: trained without `name`.
+        let mut full = Trainer::new(&svc, base.clone(), 42);
+        full.model_scale = 0.25;
+        full.mcts_iterations = 64;
+        full.run(games, 3);
+
+        let mut holdout = Trainer::new(&svc, base.clone(), 42);
+        holdout.model_scale = 0.25;
+        holdout.mcts_iterations = 64;
+        holdout.model_filter = Some(
+            models::MODEL_NAMES.iter().copied().filter(|&m| m != name).collect(),
+        );
+        holdout.run(games, 3);
+
+        let mut row = Vec::new();
+        for topo in [testbed(), cloud()] {
+            for p in [&full.params, &holdout.params] {
+                let model = models::by_name(name, 0.25).unwrap();
+                let cfg = SearchConfig {
+                    max_groups: 16,
+                    mcts_iterations: 120,
+                    seed: 9,
+                    apply_sfb: false,
+                    profile_noise: 0.0,
+                };
+                let prep = prepare(model, &topo, &cfg);
+                let res = search_session(&prep, &topo, Some((&svc, p.clone())), &cfg);
+                row.push((res.speedup - 1.0) * 100.0);
+            }
+        }
+        println!(
+            "{:<12} {:>9.1}% {:>9.1}% {:>9.1}% {:>9.1}%",
+            name, row[0], row[1], row[2], row[3]
+        );
+    }
+}
+
+fn load_gnn() -> Option<(GnnService, Vec<f32>)> {
+    let svc = GnnService::load("artifacts").ok()?;
+    let path = if std::path::Path::new("artifacts/params_trained.bin").exists() {
+        "artifacts/params_trained.bin"
+    } else {
+        return None;
+    };
+    let p = params::load_params(path).ok()?;
+    Some((svc, p))
+}
+
+fn load_gnn_service() -> Option<(GnnService, Vec<f32>)> {
+    let svc = GnnService::load("artifacts").ok()?;
+    let path = if std::path::Path::new("artifacts/params_trained.bin").exists() {
+        "artifacts/params_trained.bin"
+    } else {
+        "artifacts/params_init.bin"
+    };
+    let p = params::load_params(path).ok()?;
+    Some((svc, p))
+}

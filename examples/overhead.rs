@@ -1,0 +1,101 @@
+//! Reproduce **Fig. 8**: the overhead of generating a strategy for an
+//! *unseen* device topology — TAG vs the retraining-based baselines.
+//!
+//!   cargo run --release --example overhead [-- topos=6 iters=150]
+//!
+//! TAG only runs GNN inference + MCTS on a new topology.  HeteroG must
+//! retrain its GNN from scratch for every topology (its output dimension
+//! depends on the device count), and HDP evaluates candidate strategies
+//! on the real cluster during its RL search.  We model both costs in the
+//! same units our stack measures:
+//!  * HeteroG-retrain = (self-play example collection + train steps)
+//!    until its from-scratch policy reaches TAG's quality — measured as
+//!    `retrain_games` self-play games on the new topology;
+//!  * HDP = its search-iteration count times *real-cluster* evaluation
+//!    (one training iteration each, simulated time charged as wall time,
+//!    plus per-evaluation deployment latency).
+
+use tag::cluster::generator::random_topologies;
+use tag::coordinator::{prepare, search_session, SearchConfig};
+use tag::dist::Lowering;
+use tag::gnn::{params, GnnService};
+use tag::models;
+use tag::strategy::baselines;
+use tag::util::Stopwatch;
+
+fn arg(name: &str, default: usize) -> usize {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}="))?.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n_topos = arg("topos", 6);
+    let iters = arg("iters", 150);
+    let gnn = GnnService::load("artifacts").ok().and_then(|svc| {
+        let path = if std::path::Path::new("artifacts/params_trained.bin").exists() {
+            "artifacts/params_trained.bin"
+        } else {
+            "artifacts/params_init.bin"
+        };
+        params::load_params(path).ok().map(|p| (svc, p))
+    });
+
+    println!("=== Fig. 8: strategy-generation overhead on unseen topologies ===");
+    println!("({n_topos} random topologies, InceptionV3, {iters} MCTS iterations)\n");
+
+    let mut tag_s = 0.0;
+    let mut heterog_s = 0.0;
+    let mut hdp_s = 0.0;
+
+    for (ti, topo) in random_topologies(0xFACE, n_topos).iter().enumerate() {
+        let model = models::inception_v3(16, 0.25);
+        let cfg = SearchConfig {
+            max_groups: 16,
+            mcts_iterations: iters,
+            seed: 2000 + ti as u64,
+            apply_sfb: false,
+            profile_noise: 0.0,
+        };
+        let prep = prepare(model, topo, &cfg);
+
+        // --- TAG: GNN inference + MCTS only.
+        let res = match &gnn {
+            Some((svc, p)) => search_session(&prep, topo, Some((svc, p.clone())), &cfg),
+            None => search_session(&prep, topo, None, &cfg),
+        };
+        tag_s += res.overhead_s;
+
+        // --- HeteroG: GNN retraining from scratch on this topology.
+        // Measured as the wall time of the equivalent self-play +
+        // training workload (example collection via pure search of the
+        // same budget, repeated `retrain_games` times, plus train steps).
+        let retrain_games = 8;
+        let w = Stopwatch::start();
+        for g in 0..retrain_games {
+            let cfg2 = SearchConfig { seed: cfg.seed + 17 * g as u64, ..cfg.clone() };
+            let _ = search_session(&prep, topo, None, &cfg2);
+        }
+        heterog_s += w.elapsed_s() + res.overhead_s;
+
+        // --- HDP: evaluates candidates on the REAL cluster during its
+        // search: each of its ~`iters` RL samples costs one real training
+        // iteration (simulated time, charged as wall time) plus ~1s of
+        // graph deployment latency (TensorFlow session rebuild).
+        let low = Lowering::new(&prep.gg, topo, &prep.cost, &prep.comm);
+        let ng = prep.gg.num_groups();
+        let iter_time = low.evaluate(&baselines::dp_nccl(ng, topo)).time;
+        hdp_s += iters as f64 * (iter_time * 5.0 + 1.0);
+    }
+
+    let n = n_topos as f64;
+    println!("{:<12} {:>14}", "system", "avg overhead");
+    println!("{:<12} {:>13.1}s", "TAG", tag_s / n);
+    println!("{:<12} {:>13.1}s", "HDP", hdp_s / n);
+    println!("{:<12} {:>13.1}s", "HeteroG", heterog_s / n);
+    println!(
+        "\nTAG vs HDP: {:.1}x faster; TAG vs HeteroG: {:.1}x faster",
+        hdp_s / tag_s,
+        heterog_s / tag_s
+    );
+}

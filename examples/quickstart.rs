@@ -1,0 +1,60 @@
+//! Quickstart: find an optimized deployment strategy for VGG19 on the
+//! paper's heterogeneous testbed and compare it against data parallelism.
+//!
+//! Run with:  cargo run --release --example quickstart
+//!
+//! This exercises the whole public API surface end to end: model zoo ->
+//! graph analyzer -> profiler -> METIS-style grouping -> MCTS search over
+//! placement/replication -> discrete-event simulation -> SFB ILP.
+
+use tag::cluster::presets::testbed;
+use tag::coordinator::{prepare, search_session, SearchConfig};
+use tag::models;
+use tag::util::fmt_secs;
+
+fn main() {
+    // 1. A computation graph from the model zoo (scale 0.5 keeps the
+    //    quickstart fast; use 1.0 for the paper-size model).
+    let model = models::vgg19(48, 0.5);
+    println!(
+        "model: {} — {} ops, {:.0} MB parameters",
+        model.name,
+        model.len(),
+        model.total_param_bytes() / 1e6
+    );
+
+    // 2. The paper's on-premise testbed: 4x V100 + 8x 1080Ti + 4x P100.
+    let topo = testbed();
+    println!(
+        "topology: {} — {} machines, {} GPUs",
+        topo.name,
+        topo.num_groups(),
+        topo.num_devices()
+    );
+
+    // 3. Search (pure MCTS here; pass a GnnService for GNN-guided).
+    let cfg = SearchConfig {
+        max_groups: 24,
+        mcts_iterations: 200,
+        seed: 42,
+        apply_sfb: true,
+        profile_noise: 0.0,
+    };
+    let prep = prepare(model, &topo, &cfg);
+    let res = search_session(&prep, &topo, None, &cfg);
+
+    // 4. Results.
+    println!("\nDP-NCCL per-iteration time : {}", fmt_secs(res.dp_time));
+    println!("TAG per-iteration time     : {}", fmt_secs(res.dp_time / res.speedup));
+    println!("speed-up                   : {:.2}x", res.speedup);
+    println!("search wall time           : {}", fmt_secs(res.overhead_s));
+    if let Some(plan) = &res.sfb {
+        println!(
+            "SFB: {}/{} gradients covered, top duplicated ops {:?}",
+            plan.problems_beneficial,
+            plan.problems_solved,
+            plan.top_census(3)
+        );
+    }
+    assert!(res.speedup >= 1.0, "TAG must never lose to its own baseline");
+}

@@ -1,0 +1,20 @@
+use tag::cluster::presets::sfb_pair;
+use tag::coordinator::{prepare, SearchConfig};
+use tag::dist::Lowering;
+use tag::models;
+use tag::strategy::{Action, ReplOption, Strategy};
+fn main() {
+    let topo = sfb_pair();
+    for batch in [4, 8, 12, 16, 24] {
+        let model = models::bert(batch, true, 1.0);
+        let c = SearchConfig { max_groups: 12, ..Default::default() };
+        let prep = prepare(model, &topo, &c);
+        let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+        let ng = prep.gg.num_groups();
+        let dp = low.evaluate(&Strategy::dp_allreduce(ng, &topo));
+        let mp = low.evaluate(&Strategy::uniform(ng, Action { mask: 0b11, option: ReplOption::ModelParallel }));
+        let solo = low.evaluate(&Strategy::uniform(ng, Action { mask: 0b1, option: ReplOption::AllReduce }));
+        println!("batch {batch}: dp oom={} peak={:?} | mp oom={} | solo oom={}",
+            dp.oom, dp.feedback.devgroup_peak_mem_frac.iter().map(|x| (x*100.0).round()).collect::<Vec<_>>(), mp.oom, solo.oom);
+    }
+}

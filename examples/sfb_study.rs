@@ -1,0 +1,112 @@
+//! Reproduce **Table 5** (per-iteration time with and without SFB for
+//! DP-NCCL and TAG on 2x 1080Ti machines, batch 4) and **Table 6** (the
+//! top duplicated op types across all six models).
+//!
+//!   cargo run --release --example sfb_study [-- scale=0.5 iters=150]
+
+use tag::cluster::presets::sfb_pair;
+use tag::coordinator::{prepare, search_session, SearchConfig};
+use tag::dist::Lowering;
+use tag::models;
+use tag::sfb;
+use tag::strategy::baselines;
+
+fn arg(name: &str, default: f64) -> f64 {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}="))?.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let scale = arg("scale", 0.5);
+    let iters = arg("iters", 150.0) as usize;
+    let topo = sfb_pair();
+    println!(
+        "topology: {} — two machines, one 1080Ti each, 10 Gbps (batch 4, scale {scale})",
+        topo.name
+    );
+
+    println!("\n=== Table 5: per-iteration time (s), batch 4 ===");
+    println!(
+        "{:<12} | {:>10} {:>10} {:>8} | {:>10} {:>10} {:>8}",
+        "model", "DP", "DP+SFB", "speedup", "TAG", "TAG+SFB", "speedup"
+    );
+
+    let mut census: std::collections::HashMap<&'static str, usize> =
+        std::collections::HashMap::new();
+
+    for name in models::MODEL_NAMES {
+        // Paper: batch size 4 for all models in this experiment.
+        let mut model = models::by_name(name, scale).unwrap();
+        model = rebatch(model, 4);
+        let cfg = SearchConfig {
+            max_groups: 24,
+            mcts_iterations: iters,
+            seed: 11,
+            apply_sfb: true,
+            profile_noise: 0.0,
+        };
+        let prep = prepare(model, &topo, &cfg);
+        let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+        let ng = prep.gg.num_groups();
+
+        // DP-NCCL without / with SFB.
+        let dp = baselines::dp_nccl(ng, &topo);
+        let t_dp = low.evaluate(&dp).time;
+        let plan_dp = sfb::optimize(&prep.graph, &prep.gg, &topo, &prep.cost, &dp);
+        let t_dp_sfb = low.evaluate_with_sfb(&dp, Some(&plan_dp)).time.min(t_dp);
+
+        // TAG without / with SFB.
+        let res = search_session(&prep, &topo, None, &cfg);
+        let t_tag = res.time;
+        let t_tag_sfb = res.time_with_sfb.unwrap_or(t_tag).min(t_tag);
+
+        println!(
+            "{:<12} | {:>10.4} {:>10.4} {:>7.1}% | {:>10.4} {:>10.4} {:>7.1}%",
+            name,
+            t_dp,
+            t_dp_sfb,
+            100.0 * (t_dp / t_dp_sfb - 1.0),
+            t_tag,
+            t_tag_sfb,
+            100.0 * (t_tag / t_tag_sfb - 1.0),
+        );
+
+        for (ty, c) in &plan_dp.census {
+            *census.entry(ty).or_insert(0) += c;
+        }
+        if let Some(p) = &res.sfb {
+            for (ty, c) in &p.census {
+                *census.entry(ty).or_insert(0) += c;
+            }
+        }
+    }
+
+    println!("\n=== Table 6: top duplicated op types (all models) ===");
+    let mut rows: Vec<(&str, usize)> = census.into_iter().collect();
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    println!("{:<24} {:>6}", "operation", "count");
+    for (ty, c) in rows.iter().take(5) {
+        println!("{:<24} {:>6}", ty, c);
+    }
+}
+
+/// Rebuild a zoo model with a different batch size (the generators take
+/// batch as a parameter; map through the registry).
+fn rebatch(model: tag::graph::CompGraph, batch: usize) -> tag::graph::CompGraph {
+    let scale_guess = 0.5; // matches the `scale` arg default path below
+    let _ = scale_guess;
+    match model.name.as_str() {
+        "InceptionV3" => models::inception_v3(batch, current_scale()),
+        "ResNet101" => models::resnet101(batch, current_scale()),
+        "VGG19" => models::vgg19(batch, current_scale()),
+        "Transformer" => models::transformer(batch, current_scale()),
+        "BERT-Small" => models::bert(batch, false, current_scale()),
+        "BERT-Large" => models::bert(batch, true, current_scale()),
+        _ => model,
+    }
+}
+
+fn current_scale() -> f64 {
+    arg("scale", 0.5)
+}

@@ -1,0 +1,113 @@
+"""AOT export: lower TAG's GNN entry points to HLO *text* for the Rust side.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/load_hlo/.
+
+Outputs (under --out-dir, default ../artifacts relative to python/):
+    gnn_infer.hlo.txt   batched prior inference   (B_INFER positions)
+    gnn_train.hlo.txt   one Adam training step    (B_TRAIN examples)
+    params_init.bin     initial flat f32 params (little-endian)
+    manifest.txt        shapes/constants consumed by rust/src/gnn/
+"""
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def manifest_text() -> str:
+    lines = ["# TAG GNN AOT manifest: `const NAME VALUE` and `input FN IDX NAME DIMS`"]
+    for k in (
+        "N_OP",
+        "N_DEV",
+        "N_CAND",
+        "F_OP",
+        "F_DEV",
+        "HIDDEN",
+        "HEADS",
+        "LAYERS",
+        "B_INFER",
+        "B_TRAIN",
+        "PARAM_COUNT",
+    ):
+        lines.append(f"const {k} {getattr(model, k)}")
+    idx = 0
+    lines.append(f"input infer {idx} params {model.PARAM_COUNT}")
+    idx += 1
+    for name, shape in model.FEATURE_NAMES:
+        dims = ",".join(str(d) for d in (model.B_INFER,) + shape)
+        lines.append(f"input infer {idx} {name} {dims}")
+        idx += 1
+    idx = 0
+    for name in ("params", "m", "v"):
+        lines.append(f"input train {idx} {name} {model.PARAM_COUNT}")
+        idx += 1
+    lines.append(f"input train {idx} step 1")
+    idx += 1
+    for name, shape in model.FEATURE_NAMES:
+        dims = ",".join(str(d) for d in (model.B_TRAIN,) + shape)
+        lines.append(f"input train {idx} {name} {dims}")
+        idx += 1
+    lines.append(f"input train {idx} target_pi {model.B_TRAIN},{model.N_CAND}")
+    idx += 1
+    lines.append(f"input train {idx} example_mask {model.B_TRAIN}")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) path of infer hlo")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    print(f"[aot] param count = {model.PARAM_COUNT}")
+
+    infer_lowered = jax.jit(model.infer_wrapped).lower(*model.infer_input_specs())
+    infer_hlo = to_hlo_text(infer_lowered)
+    with open(os.path.join(out_dir, "gnn_infer.hlo.txt"), "w") as f:
+        f.write(infer_hlo)
+    print(f"[aot] gnn_infer.hlo.txt: {len(infer_hlo)} chars")
+
+    train_lowered = jax.jit(model.train_wrapped).lower(*model.train_input_specs())
+    train_hlo = to_hlo_text(train_lowered)
+    with open(os.path.join(out_dir, "gnn_train.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+    print(f"[aot] gnn_train.hlo.txt: {len(train_hlo)} chars")
+
+    params = model.init_params(args.seed)
+    params.astype("<f4").tofile(os.path.join(out_dir, "params_init.bin"))
+    print(f"[aot] params_init.bin: {params.nbytes} bytes")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(manifest_text())
+
+    # Back-compat marker for the Makefile's single-file dependency target.
+    marker = os.path.join(out_dir, "model.hlo.txt")
+    with open(marker, "w") as f:
+        f.write(infer_hlo)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

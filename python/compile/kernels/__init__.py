@@ -1,0 +1,4 @@
+"""L1 Pallas kernels for TAG's heterogeneous GNN."""
+
+from .gat_attention import gat_attention  # noqa: F401
+from .ref import gat_attention_ref, leaky_relu, masked_softmax  # noqa: F401

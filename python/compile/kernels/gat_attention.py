@@ -1,0 +1,141 @@
+"""Pallas kernel: fused masked multi-head GAT attention aggregation.
+
+This is the L1 compute hot-spot of TAG's heterogeneous GNN: every GAT
+layer performs, per edge type, a dense masked attention over the (padded)
+adjacency between destination nodes and source nodes.  The Pallas kernel
+fuses logit construction (additive GAT form), LeakyReLU, the numerically
+stable masked softmax and the value aggregation, so the (N, S, H) logit
+tensor never round-trips through HBM.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+(head, dst-block); for each step the kernel holds one (BN, S) slab of edge
+logits + mask in VMEM, computes the row-wise masked softmax with a running
+max/denominator, and contracts against the (S, D) value slab on the MXU.
+On this image the kernel is executed with ``interpret=True`` (the CPU PJRT
+plugin cannot run Mosaic custom-calls); the blocking structure is still
+what a real TPU lowering would use.
+
+The backward pass is supplied via ``jax.custom_vjp`` (flash-attention
+style recompute using the same masked-softmax formulation), so the kernel
+is usable inside the AOT-lowered training step as well.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DENOM_EPS, LEAKY_SLOPE, NEG_INF, leaky_relu, masked_softmax
+
+# Destination-rows processed per grid step.  Chosen so a (BLOCK_N, S) f32
+# slab plus the (S, D) value slab fit comfortably in VMEM for the padded
+# problem sizes used by TAG (S <= 64, D <= 32).
+BLOCK_N = 16
+
+
+def _gat_attention_kernel(q_ref, kv_ref, ke_ref, v_ref, mask_ref, o_ref):
+    """One (head h, dst-block nb) grid step.
+
+    Block shapes (leading grid dims already sliced away):
+        q_ref    (BN,)      dst logits for head h
+        kv_ref   (S,)       src logits for head h
+        ke_ref   (BN, S)    edge logits for head h
+        v_ref    (S, D)     values for head h
+        mask_ref (BN, S)
+        o_ref    (BN, D)
+    """
+    q = q_ref[...]
+    kv = kv_ref[...]
+    ke = ke_ref[...]
+    mask = mask_ref[...]
+
+    t = q[:, None] + kv[None, :] + ke  # (BN, S)
+    logits = jnp.where(t >= 0, t, LEAKY_SLOPE * t)
+    neg = jnp.where(mask > 0, logits, NEG_INF)
+    m = jnp.maximum(jnp.max(neg, axis=1, keepdims=True), NEG_INF / 2)
+    e = jnp.exp(neg - m) * (mask > 0)
+    z = jnp.sum(e, axis=1, keepdims=True)
+    p = e / jnp.maximum(z, DENOM_EPS)  # (BN, S)
+    # MXU contraction: (BN, S) @ (S, D).
+    o_ref[...] = p @ v_ref[...]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def gat_attention(q, kv, ke, v, mask):
+    """Fused masked multi-head GAT attention (see ref.gat_attention_ref).
+
+    Shapes: q (N, H), kv (S, H), ke (N, S, H), v (S, H, D), mask (N, S)
+    -> out (N, H, D).  N must be a multiple of BLOCK_N (TAG pads to
+    N_MAX/M_MAX so this always holds for the AOT shapes).
+    """
+    return _gat_attention_fwd_impl(q, kv, ke, v, mask)
+
+
+def _gat_attention_fwd_impl(q, kv, ke, v, mask):
+    n, h = q.shape
+    s = kv.shape[0]
+    d = v.shape[2]
+    block_n = min(BLOCK_N, n)
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must be a multiple of the block size {block_n}")
+    grid = (h, n // block_n)
+
+    out = pl.pallas_call(
+        _gat_attention_kernel,
+        grid=grid,
+        in_specs=[
+            # q (N, H) -> (BN,) for head hh, block nb (None squeezes the dim)
+            pl.BlockSpec((block_n, None), lambda hh, nb: (nb, hh)),
+            # kv (S, H) -> (S,)
+            pl.BlockSpec((s, None), lambda hh, nb: (0, hh)),
+            # ke (N, S, H) -> (BN, S)
+            pl.BlockSpec((block_n, s, None), lambda hh, nb: (nb, 0, hh)),
+            # v (S, H, D) -> (S, D)
+            pl.BlockSpec((s, None, d), lambda hh, nb: (0, hh, 0)),
+            # mask (N, S) -> (BN, S)
+            pl.BlockSpec((block_n, s), lambda hh, nb: (nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, None, d), lambda hh, nb: (nb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, d), q.dtype),
+        interpret=True,
+    )(q, kv, ke, v, mask)
+    return out
+
+
+def _probs(q, kv, ke, mask):
+    """Recompute the (N, H, S) attention probabilities (flash-style)."""
+    t = q[:, None, :] + kv[None, :, :] + ke  # (N, S, H)
+    logits = leaky_relu(t)
+    return masked_softmax(jnp.transpose(logits, (0, 2, 1)), mask[:, None, :]), t
+
+
+def _gat_attention_fwd(q, kv, ke, v, mask):
+    out = _gat_attention_fwd_impl(q, kv, ke, v, mask)
+    return out, (q, kv, ke, v, mask)
+
+
+def _gat_attention_bwd(res, g):
+    q, kv, ke, v, mask = res
+    p, t = _probs(q, kv, ke, mask)  # p: (N, H, S), t: (N, S, H)
+
+    # g: (N, H, D)
+    # dL/dp[n,h,s] = sum_d g[n,h,d] * v[s,h,d]
+    g_p = jnp.einsum("nhd,shd->nhs", g, v)
+    # dL/dv[s,h,d] = sum_n p[n,h,s] * g[n,h,d]
+    g_v = jnp.einsum("nhs,nhd->shd", p, g)
+    # softmax jacobian: g_logit = p * (g_p - sum_s p * g_p)
+    dot = jnp.sum(p * g_p, axis=-1, keepdims=True)
+    g_logits = p * (g_p - dot)  # (N, H, S)
+    g_t = jnp.transpose(g_logits, (0, 2, 1))  # (N, S, H)
+    g_t = g_t * jnp.where(t >= 0, 1.0, LEAKY_SLOPE)
+    # mask is non-differentiable but already encoded: fully masked rows have
+    # p == 0 => g_logits == 0, and masked entries have p == 0 as well.
+    g_q = jnp.sum(g_t, axis=1)  # (N, H)
+    g_kv = jnp.sum(g_t, axis=0)  # (S, H)
+    g_ke = g_t
+    g_mask = jnp.zeros_like(mask)
+    return g_q, g_kv, g_ke, g_v, g_mask
+
+
+gat_attention.defvjp(_gat_attention_fwd, _gat_attention_bwd)

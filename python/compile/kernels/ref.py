@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the masked multi-head GAT attention aggregation.
+
+This is the correctness reference for the Pallas kernel in
+``gat_attention.py``.  The computation is the inner hot-spot of one
+heterogeneous-GAT message-passing step (one edge type):
+
+    t[n, s, h] = q[n, h] + kv[s, h] + ke[n, s, h]        (additive GAT logits)
+    l[n, s, h] = LeakyReLU(t, slope)
+    p[n, :, h] = masked softmax over sources s
+    out[n, h, :] = sum_s p[n, s, h] * v[s, h, :]
+
+Rows whose mask is all-zero produce all-zero outputs (no NaNs) — this is
+what lets padded / absent nodes flow through the network harmlessly.
+
+Shapes:
+    q    (N, H)        destination-node logit contribution
+    kv   (S, H)        source-node logit contribution
+    ke   (N, S, H)     edge-feature logit contribution
+    v    (S, H, D)     per-head source values
+    mask (N, S)        1.0 = edge present, 0.0 = absent/padded
+    out  (N, H, D)
+"""
+
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.2
+NEG_INF = -1e30
+DENOM_EPS = 1e-30
+
+
+def leaky_relu(x, slope=LEAKY_SLOPE):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def masked_softmax(scores, mask):
+    """Softmax over the last axis; fully-masked rows yield all zeros.
+
+    ``scores``: (..., S); ``mask``: broadcastable (..., S) with {0,1}.
+    """
+    neg = jnp.where(mask > 0, scores, NEG_INF)
+    m = jnp.max(neg, axis=-1, keepdims=True)
+    # Clamp m so that all-masked rows (max == NEG_INF) exp() to zero rather
+    # than NaN via (NEG_INF - NEG_INF).
+    m = jnp.maximum(m, NEG_INF / 2)
+    e = jnp.exp(neg - m) * (mask > 0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(z, DENOM_EPS)
+
+
+def gat_attention_ref(q, kv, ke, v, mask):
+    """Reference masked multi-head GAT attention aggregation.
+
+    See module docstring for shapes.
+    """
+    t = q[:, None, :] + kv[None, :, :] + ke  # (N, S, H)
+    logits = leaky_relu(t)
+    p = masked_softmax(
+        jnp.transpose(logits, (0, 2, 1)),  # (N, H, S)
+        mask[:, None, :],
+    )  # (N, H, S)
+    # out[n, h, d] = sum_s p[n, h, s] * v[s, h, d]
+    out = jnp.einsum("nhs,shd->nhd", p, v)
+    return out

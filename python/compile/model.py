@@ -1,0 +1,379 @@
+"""L2: TAG's heterogeneous GNN — forward, decoder, loss and Adam train step.
+
+This module defines the strategy-creator network of the paper (§4.2.1):
+a 4-layer heterogeneous GAT over a unified graph that contains both
+computation nodes (op groups) and device nodes (homogeneous GPU groups),
+three edge types (op-op tensors, dev-dev links, op-dev placements), per-
+edge-type weights ``gamma`` (1.0 same-type, 0.1 cross-type), multi-head
+additive attention with edge features, and a thin decoder that scores
+candidate strategy slices (P_i, O_i) for the op group whose strategy is
+produced next.
+
+Everything is written against *fixed AOT shapes* (padded with masks) so the
+two entry points — ``infer`` and ``train_step`` — can be lowered once to
+HLO text and executed from the Rust coordinator via PJRT.  All parameters
+live in a single flat f32 vector so the Rust side handles exactly one
+parameter literal (plus two Adam moment literals).
+
+Feature layout (must match rust/src/gnn/features.rs — see Table 1 of the
+paper):
+
+    op node (F_OP = 11):
+        0  computation time          log1p(ms), averaged over device types
+        1  parameter size            log1p(MB)
+        2-6 replication plan one-hot [undecided, AllReduce, PS, Duplicate, MP]
+        7  makespan                  log1p(ms)  (simulator feedback, 0 if none)
+        8  idle time before output transfer   log1p(ms)
+        9  decided flag
+        10 is-next flag (this op group's strategy is produced next)
+
+    device node (F_DEV = 5):
+        0  #GPUs in group / 8
+        1  memory capacity           log1p(GB)
+        2  intra-group bandwidth     log1p(Gbps)
+        3  peak memory usage         fraction of capacity (feedback)
+        4  idling percentage         (feedback)
+
+    op-op edge   (1): log1p(tensor MB)
+    dev-dev edge (2): log1p(inter-group Gbps), link idling percentage
+    op-dev edge  (1): placement bit (current partial strategy)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import gat_attention
+
+# ---------------------------------------------------------------- constants
+N_OP = 64  # max op groups (paper uses <= 60)
+N_DEV = 16  # max device groups
+N_CAND = 128  # max candidate strategy slices per decision
+F_OP = 11  # raw op-node features
+F_DEV = 5  # raw device-node features
+F_EDGE_OO = 1
+F_EDGE_DD = 2
+F_EDGE_OD = 1
+HIDDEN = 64  # embedding width F
+HEADS = 4
+HEAD_DIM = HIDDEN // HEADS
+LAYERS = 4
+DEC_HIDDEN = 128
+B_INFER = 8  # inference batch (leaf evaluations batched by the coordinator)
+B_TRAIN = 16  # training batch
+
+GAMMA_SAME = 1.0
+GAMMA_CROSS = 0.1
+
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0
+
+# Edge types: (name, src entity, dst entity, raw edge feature dim)
+ETYPES = [
+    ("oo", "op", "op", F_EDGE_OO),
+    ("dd", "dev", "dev", F_EDGE_DD),
+    ("od", "dev", "op", F_EDGE_OD),  # messages dev -> op
+    ("do", "op", "dev", F_EDGE_OD),  # messages op -> dev
+]
+
+# ------------------------------------------------------------- param spec
+
+
+def param_spec():
+    """Ordered (name, shape) list — the single source of truth for the
+    layout of the flat parameter vector."""
+    spec = [
+        ("enc_op_w", (F_OP, HIDDEN)),
+        ("enc_op_b", (HIDDEN,)),
+        ("enc_dev_w", (F_DEV, HIDDEN)),
+        ("enc_dev_b", (HIDDEN,)),
+    ]
+    for l in range(LAYERS):
+        for name, _src, _dst, fe in ETYPES:
+            p = f"l{l}_{name}"
+            spec += [
+                (f"{p}_wn", (HIDDEN, HIDDEN)),  # source/dst node transform
+                (f"{p}_bn", (HIDDEN,)),
+                (f"{p}_we", (fe, HIDDEN)),  # edge-feature transform
+                (f"{p}_asrc", (HEADS, HEAD_DIM)),
+                (f"{p}_adst", (HEADS, HEAD_DIM)),
+                (f"{p}_aedge", (HEADS, HEAD_DIM)),
+            ]
+        spec += [
+            (f"l{l}_self_op_w", (HIDDEN, HIDDEN)),
+            (f"l{l}_self_op_b", (HIDDEN,)),
+            (f"l{l}_self_dev_w", (HIDDEN, HIDDEN)),
+            (f"l{l}_self_dev_b", (HIDDEN,)),
+        ]
+    spec += [
+        ("dec_w1", (2 * HIDDEN + 4, DEC_HIDDEN)),
+        ("dec_b1", (DEC_HIDDEN,)),
+        ("dec_w2", (DEC_HIDDEN, 1)),
+        ("dec_b2", (1,)),
+    ]
+    return spec
+
+
+_SPEC = param_spec()
+PARAM_COUNT = int(sum(int(np.prod(s)) for _, s in _SPEC))
+
+
+def init_params(seed=0):
+    """Glorot-ish init, returned as the flat f32 vector."""
+    rng = np.random.RandomState(seed)
+    chunks = []
+    for name, shape in _SPEC:
+        if name.endswith("_b") or name.endswith("_bn") or "_b" == name[-2:]:
+            chunks.append(np.zeros(shape, np.float32).ravel())
+        elif len(shape) == 2:
+            scale = np.sqrt(2.0 / (shape[0] + shape[1]))
+            chunks.append((rng.randn(*shape) * scale).astype(np.float32).ravel())
+        else:
+            scale = np.sqrt(1.0 / max(1, int(np.prod(shape))))
+            chunks.append((rng.randn(*shape) * scale).astype(np.float32).ravel())
+    flat = np.concatenate(chunks)
+    assert flat.size == PARAM_COUNT
+    return flat
+
+
+def unflatten(flat):
+    """Flat f32 vector -> dict of named arrays (static slices, jit-safe)."""
+    params = {}
+    off = 0
+    for name, shape in _SPEC:
+        size = int(np.prod(shape))
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+# ------------------------------------------------------------- GNN forward
+
+
+def _etype_attention(p, prefix, h_src, h_dst, edge_feat, mask):
+    """One edge type's multi-head attention aggregation (via the L1 kernel).
+
+    h_src (S, HIDDEN), h_dst (N, HIDDEN), edge_feat (N, S, FE), mask (N, S)
+    -> (N, HIDDEN)
+    """
+    z_src = h_src @ p[f"{prefix}_wn"] + p[f"{prefix}_bn"]  # (S, HIDDEN)
+    z_dst = h_dst @ p[f"{prefix}_wn"] + p[f"{prefix}_bn"]  # (N, HIDDEN)
+    z_edge = edge_feat @ p[f"{prefix}_we"]  # (N, S, HIDDEN)
+
+    n = h_dst.shape[0]
+    s = h_src.shape[0]
+    zsh = z_src.reshape(s, HEADS, HEAD_DIM)
+    zdh = z_dst.reshape(n, HEADS, HEAD_DIM)
+    zeh = z_edge.reshape(n, s, HEADS, HEAD_DIM)
+
+    q = jnp.einsum("nhd,hd->nh", zdh, p[f"{prefix}_adst"])  # (N, H)
+    kv = jnp.einsum("shd,hd->sh", zsh, p[f"{prefix}_asrc"])  # (S, H)
+    ke = jnp.einsum("nshd,hd->nsh", zeh, p[f"{prefix}_aedge"])  # (N, S, H)
+
+    out = gat_attention(q, kv, ke, zsh, mask)  # (N, HEADS, HEAD_DIM)
+    return out.reshape(n, HIDDEN)
+
+
+def gnn_forward(p, feats):
+    """Run the heterogeneous GNN; returns (op embeddings, dev embeddings).
+
+    ``feats`` is a dict of one position's feature arrays (unbatched):
+        op_feats (N_OP, F_OP), dev_feats (N_DEV, F_DEV),
+        oo_e (N_OP, N_OP, 1), oo_mask (N_OP, N_OP),
+        dd_e (N_DEV, N_DEV, 2), dd_mask (N_DEV, N_DEV),
+        od_place (N_OP, N_DEV), op_mask (N_OP,), dev_mask (N_DEV,)
+    """
+    h_op = jax.nn.relu(feats["op_feats"] @ p["enc_op_w"] + p["enc_op_b"])
+    h_dev = jax.nn.relu(feats["dev_feats"] @ p["enc_dev_w"] + p["enc_dev_b"])
+
+    # Zero out padded nodes so they contribute nothing anywhere.
+    h_op = h_op * feats["op_mask"][:, None]
+    h_dev = h_dev * feats["dev_mask"][:, None]
+
+    od_e = feats["od_place"][:, :, None]  # (N_OP, N_DEV, 1)
+    do_e = jnp.transpose(feats["od_place"])[:, :, None]  # (N_DEV, N_OP, 1)
+    # Placement edges exist where an op group is (tentatively) placed;
+    # additionally every op sees every live device weakly so that undecided
+    # ops can still read device state.  mask = placement OR live-pair.
+    live_pair = feats["op_mask"][:, None] * feats["dev_mask"][None, :]
+    od_mask = jnp.maximum(feats["od_place"], 0.25 * live_pair)
+    od_mask = jnp.where(od_mask > 0, 1.0, 0.0) * live_pair
+    do_mask = jnp.transpose(od_mask)
+
+    for l in range(LAYERS):
+        a_oo = _etype_attention(
+            p, f"l{l}_oo", h_op, h_op, feats["oo_e"], feats["oo_mask"]
+        )
+        a_dd = _etype_attention(
+            p, f"l{l}_dd", h_dev, h_dev, feats["dd_e"], feats["dd_mask"]
+        )
+        a_od = _etype_attention(p, f"l{l}_od", h_dev, h_op, od_e, od_mask)
+        a_do = _etype_attention(p, f"l{l}_do", h_op, h_dev, do_e, do_mask)
+
+        pre_op = (
+            h_op @ p[f"l{l}_self_op_w"]
+            + p[f"l{l}_self_op_b"]
+            + GAMMA_SAME * a_oo
+            + GAMMA_CROSS * a_od
+        )
+        pre_dev = (
+            h_dev @ p[f"l{l}_self_dev_w"]
+            + p[f"l{l}_self_dev_b"]
+            + GAMMA_SAME * a_dd
+            + GAMMA_CROSS * a_do
+        )
+        h_op = (h_op + jax.nn.relu(pre_op)) * feats["op_mask"][:, None]
+        h_dev = (h_dev + jax.nn.relu(pre_dev)) * feats["dev_mask"][:, None]
+
+    return h_op, h_dev
+
+
+def decoder_logits(p, h_op, h_dev, feats):
+    """Score candidate strategy slices for the `next` op group.
+
+    Candidate arrays:
+        cand_p (N_CAND, N_DEV)  binary placement rows
+        cand_o (N_CAND, 4)      one-hot replication option
+        cand_mask (N_CAND,)     1 = real candidate
+        next_onehot (N_OP,)     selects the op group under decision
+    Returns masked logits (N_CAND,).
+    """
+    e_op = feats["next_onehot"] @ h_op  # (HIDDEN,)
+    placed = feats["cand_p"] @ h_dev  # (N_CAND, HIDDEN)
+    e_b = jnp.broadcast_to(e_op, (N_CAND, HIDDEN))
+    x = jnp.concatenate([placed, e_b, feats["cand_o"]], axis=-1)
+    hdec = jax.nn.relu(x @ p["dec_w1"] + p["dec_b1"])
+    scores = (hdec @ p["dec_w2"] + p["dec_b2"])[:, 0]  # (N_CAND,)
+    return jnp.where(feats["cand_mask"] > 0, scores, -1e9)
+
+
+FEATURE_NAMES = [
+    ("op_feats", (N_OP, F_OP)),
+    ("dev_feats", (N_DEV, F_DEV)),
+    ("oo_e", (N_OP, N_OP, F_EDGE_OO)),
+    ("oo_mask", (N_OP, N_OP)),
+    ("dd_e", (N_DEV, N_DEV, F_EDGE_DD)),
+    ("dd_mask", (N_DEV, N_DEV)),
+    ("od_place", (N_OP, N_DEV)),
+    ("op_mask", (N_OP,)),
+    ("dev_mask", (N_DEV,)),
+    ("next_onehot", (N_OP,)),
+    ("cand_p", (N_CAND, N_DEV)),
+    ("cand_o", (N_CAND, 4)),
+    ("cand_mask", (N_CAND,)),
+]
+
+
+def _position_priors(p, feats):
+    h_op, h_dev = gnn_forward(p, feats)
+    logits = decoder_logits(p, h_op, h_dev, feats)
+    return jax.nn.softmax(logits)
+
+
+def _feats_dict(args):
+    return {name: a for (name, _), a in zip(FEATURE_NAMES, args)}
+
+
+def infer(params_flat, *feature_args):
+    """AOT entry point: batched prior probabilities.
+
+    feature_args: one array per FEATURE_NAMES entry, each with a leading
+    batch dim B_INFER.  Returns priors (B_INFER, N_CAND).
+    """
+    p = unflatten(params_flat)
+
+    def one(*args):
+        return _position_priors(p, _feats_dict(args))
+
+    return jax.vmap(one)(*feature_args)
+
+
+# ---------------------------------------------------------------- training
+
+
+def _position_loss(p, feats, target_pi):
+    h_op, h_dev = gnn_forward(p, feats)
+    logits = decoder_logits(p, h_op, h_dev, feats)
+    logp = jax.nn.log_softmax(logits)
+    # Cross entropy against the MCTS visit distribution (§4.2.2).
+    return -jnp.sum(target_pi * logp)
+
+
+def loss_fn(params_flat, feature_args, target_pi, example_mask):
+    p = unflatten(params_flat)
+
+    def one(args, pi):
+        return _position_loss(p, _feats_dict(args), pi)
+
+    losses = jax.vmap(one)(feature_args, target_pi)  # (B_TRAIN,)
+    denom = jnp.maximum(jnp.sum(example_mask), 1.0)
+    return jnp.sum(losses * example_mask) / denom
+
+
+def train_step(params_flat, m, v, step, *rest):
+    """AOT entry point: one Adam step on a batch of MCTS examples.
+
+    rest = feature arrays (each with leading B_TRAIN), then
+    target_pi (B_TRAIN, N_CAND), example_mask (B_TRAIN,).
+    Returns (new_params, new_m, new_v, loss).
+    """
+    nf = len(FEATURE_NAMES)
+    feature_args = tuple(rest[:nf])
+    target_pi = rest[nf]
+    example_mask = rest[nf + 1]
+
+    loss, g = jax.value_and_grad(loss_fn)(
+        params_flat, feature_args, target_pi, example_mask
+    )
+    # Global-norm gradient clipping.
+    gnorm = jnp.sqrt(jnp.sum(g * g))
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    g = g * scale
+
+    t = step + 1.0
+    m2 = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m2 / (1 - ADAM_B1**t)
+    vhat = v2 / (1 - ADAM_B2**t)
+    new_params = params_flat - ADAM_LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new_params, m2, v2, loss
+
+
+# ------------------------------------------------------------ shape helpers
+
+
+def infer_input_specs():
+    """ShapeDtypeStructs for jax.jit(infer).lower(...)."""
+    f32 = jnp.float32
+    specs = [jax.ShapeDtypeStruct((PARAM_COUNT,), f32)]
+    for _, shape in FEATURE_NAMES:
+        specs.append(jax.ShapeDtypeStruct((B_INFER,) + shape, f32))
+    return specs
+
+
+def train_input_specs():
+    f32 = jnp.float32
+    specs = [
+        jax.ShapeDtypeStruct((PARAM_COUNT,), f32),  # params
+        jax.ShapeDtypeStruct((PARAM_COUNT,), f32),  # m
+        jax.ShapeDtypeStruct((PARAM_COUNT,), f32),  # v
+        jax.ShapeDtypeStruct((), f32),  # step
+    ]
+    for _, shape in FEATURE_NAMES:
+        specs.append(jax.ShapeDtypeStruct((B_TRAIN,) + shape, f32))
+    specs.append(jax.ShapeDtypeStruct((B_TRAIN, N_CAND), f32))  # target_pi
+    specs.append(jax.ShapeDtypeStruct((B_TRAIN,), f32))  # example_mask
+    return specs
+
+
+def infer_wrapped(*args):
+    return (infer(*args),)
+
+
+def train_wrapped(*args):
+    return train_step(*args)

@@ -1,0 +1,177 @@
+"""L1 correctness: Pallas GAT-attention kernel vs the pure-jnp oracle.
+
+This is the CORE numeric signal for the compile path: the kernel that the
+AOT-lowered HLO embeds must agree with ``ref.gat_attention_ref`` over a
+sweep of shapes, masks and magnitudes (hypothesis), and its custom VJP
+must agree with jax autodiff of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gat_attention, gat_attention_ref
+from compile.kernels.gat_attention import BLOCK_N
+
+jax.config.update("jax_platform_name", "cpu")
+
+# N must be a multiple of the kernel block (or smaller than it).
+VALID_N = [1, 2, 4, 8, 16, 32, 48, 64]
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+def _rand_mask(rng, n, s, p=0.6):
+    return jnp.asarray((rng.rand(n, s) < p).astype(np.float32))
+
+
+def _mk(rng, n, s, h, d, mask_p=0.6, scale=1.0):
+    q = _rand(rng, n, h) * scale
+    kv = _rand(rng, s, h) * scale
+    ke = _rand(rng, n, s, h) * scale
+    v = _rand(rng, s, h, d)
+    mask = _rand_mask(rng, n, s, mask_p)
+    return q, kv, ke, v, mask
+
+
+def test_matches_ref_basic():
+    rng = np.random.RandomState(0)
+    args = _mk(rng, 16, 24, 4, 8)
+    out = gat_attention(*args)
+    ref = gat_attention_ref(*args)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from(VALID_N),
+    s=st.integers(min_value=1, max_value=40),
+    h=st.integers(min_value=1, max_value=6),
+    d=st.integers(min_value=1, max_value=24),
+    mask_p=st.sampled_from([0.0, 0.1, 0.5, 0.9, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref_hypothesis(n, s, h, d, mask_p, seed):
+    rng = np.random.RandomState(seed)
+    args = _mk(rng, n, s, h, d, mask_p)
+    out = gat_attention(*args)
+    ref = gat_attention_ref(*args)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+    assert not np.any(np.isnan(np.asarray(out)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    scale=st.sampled_from([1e-3, 1.0, 10.0, 50.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_numerical_stability_large_logits(scale, seed):
+    """Large logits must not overflow thanks to the running-max trick."""
+    rng = np.random.RandomState(seed)
+    args = _mk(rng, 16, 16, 2, 4, 0.5, scale)
+    out = gat_attention(*args)
+    ref = gat_attention_ref(*args)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_all_masked_rows_are_zero():
+    rng = np.random.RandomState(1)
+    q, kv, ke, v, _ = _mk(rng, 16, 8, 4, 4)
+    mask = jnp.zeros((16, 8), jnp.float32)
+    out = gat_attention(q, kv, ke, v, mask)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((16, 4, 4), np.float32))
+
+
+def test_partial_masked_rows():
+    """Row 0 fully masked, others full: only row 0 must be zero."""
+    rng = np.random.RandomState(2)
+    q, kv, ke, v, _ = _mk(rng, 16, 8, 2, 4)
+    mask = jnp.ones((16, 8), jnp.float32).at[0].set(0.0)
+    out = np.asarray(gat_attention(q, kv, ke, v, mask))
+    assert np.all(out[0] == 0.0)
+    assert np.any(out[1:] != 0.0)
+
+
+def test_single_unmasked_source_copies_value():
+    """With one live source the softmax is 1 and the output == its value."""
+    rng = np.random.RandomState(3)
+    q, kv, ke, v, _ = _mk(rng, 8, 8, 2, 4)
+    mask = jnp.zeros((8, 8), jnp.float32).at[:, 3].set(1.0)
+    out = np.asarray(gat_attention(q, kv, ke, v, mask))
+    expect = np.broadcast_to(np.asarray(v)[3][None], (8, 2, 4))
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_invariance_to_logit_shift():
+    """Adding a constant to q shifts all logits of a row equally ->
+    identical probabilities -> identical output (LeakyReLU is monotonic but
+    not shift-invariant, so compare in the linear region: all logits > 0)."""
+    rng = np.random.RandomState(4)
+    q, kv, ke, v, mask = _mk(rng, 16, 8, 2, 4, 1.0)
+    q, kv, ke = jnp.abs(q) + 5.0, jnp.abs(kv), jnp.abs(ke)
+    out1 = gat_attention(q, kv, ke, v, mask)
+    out2 = gat_attention(q + 3.0, kv, ke, v, mask)
+    np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-5)
+
+
+def test_block_boundary_shapes():
+    """N exactly at and above BLOCK_N exercises the grid tiling."""
+    rng = np.random.RandomState(5)
+    for n in (BLOCK_N, 2 * BLOCK_N, 4 * BLOCK_N):
+        args = _mk(rng, n, 12, 3, 5)
+        np.testing.assert_allclose(
+            gat_attention(*args),
+            gat_attention_ref(*args),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+
+def test_invalid_n_raises():
+    rng = np.random.RandomState(6)
+    args = _mk(rng, 24, 8, 2, 4)  # 24 not a multiple of 16
+    with pytest.raises(ValueError):
+        gat_attention(*args)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16, 32]),
+    s=st.integers(min_value=2, max_value=20),
+    h=st.integers(min_value=1, max_value=4),
+    d=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_custom_vjp_matches_autodiff_of_ref(n, s, h, d, seed):
+    """The hand-written backward (used inside the AOT train step) must
+    agree with jax autodiff through the pure-jnp reference."""
+    rng = np.random.RandomState(seed)
+    q, kv, ke, v, mask = _mk(rng, n, s, h, d, 0.7)
+
+    def f_kernel(q, kv, ke, v):
+        return jnp.sum(jnp.sin(gat_attention(q, kv, ke, v, mask)))
+
+    def f_ref(q, kv, ke, v):
+        return jnp.sum(jnp.sin(gat_attention_ref(q, kv, ke, v, mask)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(q, kv, ke, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(q, kv, ke, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_vmap_matches_loop():
+    """The model vmaps the kernel over the batch dim; verify equivalence."""
+    rng = np.random.RandomState(7)
+    batch = [_mk(rng, 16, 8, 2, 4) for _ in range(3)]
+    stacked = [jnp.stack([b[i] for b in batch]) for i in range(5)]
+    out_vmap = jax.vmap(gat_attention)(*stacked)
+    for i, args in enumerate(batch):
+        np.testing.assert_allclose(
+            out_vmap[i], gat_attention(*args), rtol=1e-5, atol=1e-6
+        )

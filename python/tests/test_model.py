@@ -1,0 +1,217 @@
+"""L2 correctness: hetero-GNN forward, decoder, loss and Adam train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _random_feats(rng, batch=None):
+    """Random but structurally valid feature set (one position)."""
+
+    def mk(shape, scale=1.0):
+        full = shape if batch is None else (batch,) + shape
+        return jnp.asarray(rng.rand(*full).astype(np.float32) * scale)
+
+    n, m, a = model.N_OP, model.N_DEV, model.N_CAND
+    n_live, m_live, a_live = 10, 3, 12
+
+    feats = {}
+    feats["op_feats"] = mk((n, model.F_OP))
+    feats["dev_feats"] = mk((m, model.F_DEV))
+    feats["oo_e"] = mk((n, n, 1))
+    oo_mask = (rng.rand(n, n) < 0.2).astype(np.float32)
+    oo_mask[n_live:, :] = 0
+    oo_mask[:, n_live:] = 0
+    feats["oo_mask"] = _b(jnp.asarray(oo_mask), batch)
+    feats["dd_e"] = mk((m, m, 2))
+    dd_mask = np.ones((m, m), np.float32)
+    dd_mask[m_live:, :] = 0
+    dd_mask[:, m_live:] = 0
+    feats["dd_mask"] = _b(jnp.asarray(dd_mask), batch)
+    place = (rng.rand(n, m) < 0.3).astype(np.float32)
+    place[n_live:, :] = 0
+    place[:, m_live:] = 0
+    feats["od_place"] = _b(jnp.asarray(place), batch)
+    opm = np.zeros(n, np.float32)
+    opm[:n_live] = 1
+    feats["op_mask"] = _b(jnp.asarray(opm), batch)
+    devm = np.zeros(m, np.float32)
+    devm[:m_live] = 1
+    feats["dev_mask"] = _b(jnp.asarray(devm), batch)
+    nxt = np.zeros(n, np.float32)
+    nxt[2] = 1
+    feats["next_onehot"] = _b(jnp.asarray(nxt), batch)
+    cand_p = (rng.rand(a, m) < 0.4).astype(np.float32)
+    cand_p[:, m_live:] = 0
+    feats["cand_p"] = _b(jnp.asarray(cand_p), batch)
+    cand_o = np.zeros((a, 4), np.float32)
+    cand_o[np.arange(a), rng.randint(0, 4, a)] = 1
+    feats["cand_o"] = _b(jnp.asarray(cand_o), batch)
+    cm = np.zeros(a, np.float32)
+    cm[:a_live] = 1
+    feats["cand_mask"] = _b(jnp.asarray(cm), batch)
+    return feats
+
+
+def _b(x, batch):
+    if batch is None:
+        return x
+    return jnp.broadcast_to(x, (batch,) + x.shape)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jnp.asarray(model.init_params(0))
+
+
+def test_param_count_matches_spec(params):
+    assert params.shape == (model.PARAM_COUNT,)
+    p = model.unflatten(params)
+    assert p["dec_w2"].shape == (model.DEC_HIDDEN, 1)
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == model.PARAM_COUNT
+
+
+def test_forward_shapes_and_finite(params):
+    rng = np.random.RandomState(0)
+    feats = _random_feats(rng)
+    p = model.unflatten(params)
+    h_op, h_dev = model.gnn_forward(p, feats)
+    assert h_op.shape == (model.N_OP, model.HIDDEN)
+    assert h_dev.shape == (model.N_DEV, model.HIDDEN)
+    assert np.all(np.isfinite(np.asarray(h_op)))
+    assert np.all(np.isfinite(np.asarray(h_dev)))
+
+
+def test_padded_nodes_have_zero_embeddings(params):
+    rng = np.random.RandomState(1)
+    feats = _random_feats(rng)
+    p = model.unflatten(params)
+    h_op, h_dev = model.gnn_forward(p, feats)
+    np.testing.assert_array_equal(np.asarray(h_op)[10:], 0.0)
+    np.testing.assert_array_equal(np.asarray(h_dev)[3:], 0.0)
+
+
+def test_priors_are_masked_distribution(params):
+    rng = np.random.RandomState(2)
+    feats = _random_feats(rng)
+    p = model.unflatten(params)
+    pr = np.asarray(model._position_priors(p, feats))
+    assert pr.shape == (model.N_CAND,)
+    np.testing.assert_allclose(pr.sum(), 1.0, rtol=1e-5)
+    # Masked candidates get (numerically) zero probability.
+    assert pr[12:].max() < 1e-12
+    assert np.all(pr >= 0)
+
+
+def test_infer_batched_matches_single(params):
+    rng = np.random.RandomState(3)
+    feats = _random_feats(rng, batch=model.B_INFER)
+    args = [feats[name] for name, _ in model.FEATURE_NAMES]
+    out = np.asarray(model.infer(params, *args))
+    assert out.shape == (model.B_INFER, model.N_CAND)
+    p = model.unflatten(params)
+    single = {name: feats[name][0] for name, _ in model.FEATURE_NAMES}
+    pr0 = np.asarray(model._position_priors(p, single))
+    np.testing.assert_allclose(out[0], pr0, rtol=1e-5, atol=1e-7)
+
+
+def test_padded_positions_are_harmless(params):
+    """A fully-zero (padded) batch slot must not produce NaNs."""
+    args = [
+        jnp.zeros((model.B_INFER,) + shape, jnp.float32)
+        for _, shape in model.FEATURE_NAMES
+    ]
+    out = np.asarray(model.infer(params, *args))
+    assert np.all(np.isfinite(out))
+
+
+def _train_batch(rng):
+    feats = _random_feats(rng, batch=model.B_TRAIN)
+    args = [feats[name] for name, _ in model.FEATURE_NAMES]
+    pi = np.zeros((model.B_TRAIN, model.N_CAND), np.float32)
+    pi[:, :12] = rng.rand(model.B_TRAIN, 12).astype(np.float32)
+    pi /= pi.sum(axis=1, keepdims=True)
+    mask = np.ones(model.B_TRAIN, np.float32)
+    return args, jnp.asarray(pi), jnp.asarray(mask)
+
+
+def test_gradient_direction_reduces_loss(params):
+    """Descending along the analytic gradient must reduce the CE loss."""
+    rng = np.random.RandomState(4)
+    args, pi, mask = _train_batch(rng)
+    loss0, g = jax.value_and_grad(model.loss_fn)(params, tuple(args), pi, mask)
+    gn2 = float(jnp.sum(g * g))
+    assert gn2 > 0
+    eps = 1e-2 / np.sqrt(gn2)
+    loss1 = model.loss_fn(params - eps * g, tuple(args), pi, mask)
+    assert float(loss1) < float(loss0)
+
+
+def test_train_step_adam_finite_and_moving(params):
+    rng = np.random.RandomState(40)
+    args, pi, mask = _train_batch(rng)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    p = params
+    for t in range(3):
+        p, m, v, loss = model.train_step(p, m, v, jnp.float32(t), *args, pi, mask)
+        assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.asarray(p)))
+    assert float(jnp.max(jnp.abs(p - params))) > 0
+
+
+def test_train_step_respects_example_mask(params):
+    """Masked-out examples must not influence the gradient."""
+    rng = np.random.RandomState(5)
+    args, pi, _ = _train_batch(rng)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+
+    mask_half = np.ones(model.B_TRAIN, np.float32)
+    mask_half[model.B_TRAIN // 2 :] = 0
+
+    # Corrupt the masked-out half's targets; results must be identical.
+    pi2 = np.asarray(pi).copy()
+    pi2[model.B_TRAIN // 2 :] = 1.0 / model.N_CAND
+    r1 = model.train_step(params, m, v, 0.0, *args, pi, jnp.asarray(mask_half))
+    r2 = model.train_step(
+        params, m, v, 0.0, *args, jnp.asarray(pi2), jnp.asarray(mask_half)
+    )
+    np.testing.assert_allclose(np.asarray(r1[0]), np.asarray(r2[0]), atol=1e-7)
+    np.testing.assert_allclose(float(r1[3]), float(r2[3]), rtol=1e-6)
+
+
+def test_train_step_grad_clipping_keeps_params_finite(params):
+    rng = np.random.RandomState(6)
+    args, pi, mask = _train_batch(rng)
+    # Hugely scaled features stress the gradients.
+    args = [a * 100.0 for a in args]
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    p2, m2, v2, loss = model.train_step(params, m, v, 0.0, *args, pi, mask)
+    assert np.all(np.isfinite(np.asarray(p2)))
+    delta = np.abs(np.asarray(p2) - np.asarray(params)).max()
+    # Adam with bias correction at t=1: per-step delta ~ lr.
+    assert delta <= 5 * model.ADAM_LR
+
+
+def test_init_params_deterministic():
+    a = model.init_params(0)
+    b = model.init_params(0)
+    c = model.init_params(1)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_infer_input_specs_consistent_with_manifest():
+    specs = model.infer_input_specs()
+    assert specs[0].shape == (model.PARAM_COUNT,)
+    assert len(specs) == 1 + len(model.FEATURE_NAMES)
+    tspecs = model.train_input_specs()
+    assert len(tspecs) == 4 + len(model.FEATURE_NAMES) + 2

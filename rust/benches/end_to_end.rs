@@ -1,0 +1,39 @@
+//! Bench: end-to-end strategy search wall time per model — the quantity
+//! behind Fig. 8's "TAG" bar (prepare + MCTS + SFB on a fresh topology)
+//! and the top-level number a user experiences.
+
+use tag::cluster::presets::testbed;
+use tag::coordinator::{prepare, search_session, SearchConfig};
+use tag::models;
+use tag::util::bench;
+
+fn main() {
+    let topo = testbed();
+    println!("== end-to-end: prepare + 100-iteration search + SFB ==");
+    for name in models::MODEL_NAMES {
+        let cfg = SearchConfig {
+            max_groups: 24,
+            mcts_iterations: 100,
+            seed: 1,
+            apply_sfb: true,
+            profile_noise: 0.0,
+        };
+        // Prepare once (profiling + grouping), bench the search.
+        let model = models::by_name(name, 0.25).unwrap();
+        let prep = prepare(model, &topo, &cfg);
+        bench(&format!("search100[{name}]"), 2.0, || {
+            let res = search_session(&prep, &topo, None, &cfg);
+            assert!(res.speedup > 0.5);
+        });
+    }
+
+    println!("\n== preprocessing (profile + METIS grouping), paper-size ==");
+    for name in ["InceptionV3", "BERT-Large"] {
+        let cfg = SearchConfig::default();
+        bench(&format!("prepare[{name} @ scale 1.0]"), 2.0, || {
+            let model = models::by_name(name, 1.0).unwrap();
+            let prep = prepare(model, &topo, &cfg);
+            assert!(prep.gg.num_groups() <= 60);
+        });
+    }
+}

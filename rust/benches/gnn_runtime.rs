@@ -1,0 +1,75 @@
+//! Bench: the PJRT-compiled GNN — inference latency at batch 1 vs the
+//! full batch-8 artifact (the batching ablation behind the coordinator's
+//! batched leaf-evaluation service), and the Adam train-step latency.
+//!
+//! Requires `make artifacts`.
+
+use tag::cluster::presets::testbed;
+use tag::dist::Lowering;
+use tag::gnn::features::{FeatureBuilder, B_INFER, B_TRAIN, N_CAND};
+use tag::gnn::{params, GnnService};
+use tag::graph::grouping::group_ops;
+use tag::models;
+use tag::profile::{unique_gpus, CommModel, CostModel};
+use tag::strategy::{enumerate_actions, Strategy};
+use tag::util::bench;
+
+fn main() {
+    let Ok(svc) = GnnService::load("artifacts") else {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let p = params::load_params("artifacts/params_init.bin").unwrap();
+
+    // A realistic position.
+    let topo = testbed();
+    let model = models::vgg19(8, 0.25);
+    let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+    let gg = group_ops(&model, &cost, 24, 7);
+    let comm = CommModel::fit(3);
+    let low = Lowering::new(&gg, &topo, &cost, &comm);
+    let actions = enumerate_actions(&topo);
+    let fb = FeatureBuilder::new(&gg, &topo, &actions);
+    let s = Strategy::empty(gg.num_groups());
+    let out = low.evaluate(&s);
+    let pos = fb.build(&s, &out, low.order[0]);
+
+    println!("== GNN inference (PJRT CPU, AOT artifact, Pallas GAT kernel) ==");
+    let t1 = bench("infer[batch 1 of 8 slots]", 2.0, || {
+        let r = svc.infer_batch(&p, &[&pos]).unwrap();
+        assert_eq!(r[0].len(), N_CAND);
+    });
+    let refs: Vec<&_> = (0..B_INFER).map(|_| &pos).collect();
+    let t8 = bench("infer[batch 8 of 8 slots]", 2.0, || {
+        let r = svc.infer_batch(&p, &refs).unwrap();
+        assert_eq!(r.len(), B_INFER);
+    });
+    println!(
+        "    -> per-position cost: {:.2} ms solo vs {:.2} ms batched ({:.1}x batching win)",
+        t1 * 1e3,
+        t8 * 1e3 / B_INFER as f64,
+        t1 / (t8 / B_INFER as f64)
+    );
+
+    println!("\n== feature building (L3 side) ==");
+    bench("feature_build", 1.0, || {
+        let q = fb.build(&s, &out, low.order[0]);
+        assert!(q.op_mask[0] > 0.0);
+    });
+
+    println!("\n== train step (Adam over B_TRAIN examples) ==");
+    let zeros = vec![0.0f32; p.len()];
+    let mut pi = vec![0.0f32; N_CAND];
+    pi[0] = 1.0;
+    let positions: Vec<&_> = (0..B_TRAIN).map(|_| &pos).collect();
+    let pis: Vec<Vec<f32>> = (0..B_TRAIN).map(|_| pi.clone()).collect();
+    let mask = vec![1.0f32; B_TRAIN];
+    let tt = bench("train_step[batch 16]", 2.0, || {
+        let (p2, _, _, loss) = svc
+            .train_step(&p, &zeros, &zeros, 0.0, &positions, &pis, &mask)
+            .unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(p2.len(), p.len());
+    });
+    println!("    -> {:.2} ms per example", tt * 1e3 / B_TRAIN as f64);
+}

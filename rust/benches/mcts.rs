@@ -1,0 +1,32 @@
+//! Bench: MCTS search throughput (iterations/second) with uniform
+//! priors — the L3 search loop that Fig. 8's TAG bar is built from.
+
+use tag::cluster::presets::testbed;
+use tag::dist::Lowering;
+use tag::graph::grouping::group_ops;
+use tag::mcts::{Mcts, UniformPrior};
+use tag::models;
+use tag::profile::{unique_gpus, CommModel, CostModel};
+use tag::strategy::enumerate_actions;
+use tag::util::bench;
+
+fn main() {
+    let topo = testbed();
+    println!("== MCTS: 50-iteration searches (uniform priors) ==");
+    for name in ["VGG19", "InceptionV3", "BERT-Small"] {
+        let model = models::by_name(name, 0.25).unwrap();
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        for groups in [12, 24, 48] {
+            let gg = group_ops(&model, &cost, groups, 7);
+            let comm = CommModel::fit(3);
+            let low = Lowering::new(&gg, &topo, &cost, &comm);
+            let actions = enumerate_actions(&topo);
+            let m = bench(&format!("search50[{name}/g{groups}]"), 1.5, || {
+                let mut mcts = Mcts::new(&low, actions.clone(), UniformPrior, 1);
+                let r = mcts.search(50);
+                assert!(r.best_time > 0.0);
+            });
+            println!("    -> {:.0} iterations/s", 50.0 / m);
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench: the multilevel partitioner (METIS replacement) on the real
+//! model graphs — op grouping is a per-job, per-topology preprocessing
+//! step and must stay in the sub-second range even for BERT-Large's
+//! ~18k-op graph.
+
+use tag::cluster::presets::testbed;
+use tag::graph::grouping::{group_ops, DEFAULT_GROUPS};
+use tag::models;
+use tag::partition::{check_balance, partition, PartGraph};
+use tag::profile::{unique_gpus, CostModel};
+use tag::util::{bench, Rng};
+
+fn main() {
+    let topo = testbed();
+    println!("== grouping: profile + partition real model graphs ==");
+    for (name, scale) in [("VGG19", 1.0), ("InceptionV3", 1.0), ("BERT-Large", 1.0)] {
+        let model = models::by_name(name, scale).unwrap();
+        let n = model.len();
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let m = bench(&format!("group_ops[{name}: {n} ops -> 60]"), 2.0, || {
+            let gg = group_ops(&model, &cost, DEFAULT_GROUPS, 7);
+            assert!(gg.num_groups() <= DEFAULT_GROUPS);
+        });
+        println!("    -> {:.0}k ops/s", n as f64 / m / 1e3);
+    }
+
+    println!("\n== raw partitioner: synthetic meshes ==");
+    for side in [50usize, 100, 160] {
+        let n = side * side;
+        let mut g = PartGraph::new(n);
+        let mut rng = Rng::new(3);
+        for r in 0..side {
+            for c in 0..side {
+                let i = r * side + c;
+                if c + 1 < side {
+                    g.add_edge(i, i + 1, rng.uniform(0.5, 2.0));
+                }
+                if r + 1 < side {
+                    g.add_edge(i, i + side, rng.uniform(0.5, 2.0));
+                }
+            }
+        }
+        bench(&format!("partition[{n}-node mesh -> 60]"), 1.0, || {
+            let labels = partition(&g, 60, 2.0, 7);
+            // Recursive bisection compounds per-level imbalance; the
+            // k-way guarantee is soft — allow 2.5x on these stress meshes.
+            assert!(check_balance(&g, &labels, 60, 2.5));
+        });
+    }
+}

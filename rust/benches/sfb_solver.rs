@@ -1,0 +1,55 @@
+//! Bench: the SFB branch-and-bound ILP (the Cbc replacement).  The paper
+//! reports Cbc solves these "reliably within hundreds of milliseconds";
+//! our exact solver should be comfortably inside that envelope on the
+//! same per-gradient subproblems.
+
+use tag::cluster::presets::sfb_pair;
+use tag::graph::grouping::group_ops;
+use tag::models;
+use tag::profile::{unique_gpus, CostModel};
+use tag::sfb::{extract_problem, solve};
+use tag::util::{bench, Stopwatch};
+
+fn main() {
+    let topo = sfb_pair();
+    println!("== SFB ILP: real per-gradient subproblems ==");
+    for name in ["VGG19", "Transformer", "BERT-Small"] {
+        let model = models::by_name(name, 0.25).unwrap();
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&model, &cost, 24, 7);
+        let pairs = model.grad_apply_pairs();
+        let problems: Vec<_> = pairs
+            .iter()
+            .filter_map(|&(g, _)| extract_problem(&model, &gg, &cost, g, 2, 1.25e9))
+            .map(|(p, _)| p)
+            .collect();
+        if problems.is_empty() {
+            println!("{name}: no extractable problems");
+            continue;
+        }
+        let max_n = problems.iter().map(|p| p.node_time.len()).max().unwrap();
+        let m = bench(
+            &format!("solve-all[{name}: {} problems, max {max_n} nodes]", problems.len()),
+            1.0,
+            || {
+                for p in &problems {
+                    let s = solve(p);
+                    assert!(s.objective <= 1e-12);
+                }
+            },
+        );
+        println!(
+            "    -> {:.3} ms per problem (paper: Cbc 'hundreds of ms')",
+            m * 1e3 / problems.len() as f64
+        );
+        let worst = problems
+            .iter()
+            .map(|p| {
+                let t = Stopwatch::start();
+                let _ = solve(p);
+                t.elapsed_ms()
+            })
+            .fold(0.0f64, f64::max);
+        println!("    -> worst single problem: {worst:.2} ms");
+    }
+}

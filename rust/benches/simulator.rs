@@ -1,0 +1,53 @@
+//! Bench: the discrete-event simulator — the inner loop of every MCTS
+//! evaluation, so its latency bounds search throughput (Fig. 8 / §Perf).
+//!
+//! Measures strategy evaluation (lower + simulate + feedback) per model
+//! on the testbed, plus the raw engine on a synthetic task soup.
+
+use tag::cluster::presets::testbed;
+use tag::dist::Lowering;
+use tag::graph::grouping::group_ops;
+use tag::models;
+use tag::profile::{unique_gpus, CommModel, CostModel};
+use tag::sim::{simulate, Task, TaskGraph, TaskKind};
+use tag::strategy::Strategy;
+use tag::util::{bench, Rng};
+
+fn main() {
+    let topo = testbed();
+    println!("== simulator: full strategy evaluation (group-level) ==");
+    for name in models::MODEL_NAMES {
+        let model = models::by_name(name, 0.25).unwrap();
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&model, &cost, 32, 7);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let dp = Strategy::dp_allreduce(gg.num_groups(), &topo);
+        bench(&format!("evaluate[{name}]"), 1.0, || {
+            let out = low.evaluate(&dp);
+            assert!(out.time > 0.0);
+        });
+    }
+
+    println!("\n== raw engine: synthetic task graphs ==");
+    for (n_tasks, n_res) in [(1_000, 16), (10_000, 32), (50_000, 64)] {
+        let mut rng = Rng::new(5);
+        let mut tg = TaskGraph::new(n_res);
+        for i in 0..n_tasks {
+            let deps: Vec<usize> = (0..2)
+                .filter_map(|_| if i > 0 { Some(rng.below(i)) } else { None })
+                .collect();
+            tg.push(Task {
+                resource: rng.below(n_res),
+                duration: rng.uniform(1e-5, 1e-3),
+                deps,
+                kind: TaskKind::Marker,
+            });
+        }
+        let m = bench(&format!("engine[{n_tasks} tasks/{n_res} res]"), 1.0, || {
+            let s = simulate(&tg);
+            assert!(s.makespan > 0.0);
+        });
+        println!("    -> {:.1}k simulated tasks/s", n_tasks as f64 / m / 1e3);
+    }
+}

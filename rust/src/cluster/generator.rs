@@ -1,0 +1,80 @@
+//! Random device-topology generator (paper §5.2).
+//!
+//! "A random device topology is produced with a machine number in [1, 6],
+//! [1, 8] GPUs per machine of a GPU type among 3 types, intra-machine
+//! bandwidth between [64, 160] Gbps (to simulate the absence or presence
+//! of NVLink) and inter-machine bandwidth within [20, 50] Gbps."
+
+use super::{DeviceGroup, Topology, RANDOM_GPU_TYPES};
+use crate::util::Rng;
+
+pub fn random_topology(rng: &mut Rng) -> Topology {
+    let machines = rng.range(1, 6);
+    let mut groups = Vec::with_capacity(machines);
+    for _ in 0..machines {
+        let gpu = RANDOM_GPU_TYPES[rng.below(RANDOM_GPU_TYPES.len())];
+        let count = rng.range(1, 8);
+        let intra = rng.uniform(64.0, 160.0);
+        groups.push(DeviceGroup { gpu, count, intra_bw_gbps: intra });
+    }
+    let mut inter = vec![vec![0.0; machines]; machines];
+    for i in 0..machines {
+        for j in (i + 1)..machines {
+            let bw = rng.uniform(20.0, 50.0);
+            inter[i][j] = bw;
+            inter[j][i] = bw;
+        }
+    }
+    Topology::new(format!("random-{machines}m"), groups, inter)
+}
+
+/// Sample `n` random topologies from consecutive sub-seeds (deterministic
+/// per base seed) — the 100-topology sets used in §5.2 / §5.7.
+pub fn random_topologies(base_seed: u64, n: usize) -> Vec<Topology> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Rng::new(base_seed.wrapping_add(i as u64));
+            random_topology(&mut rng)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_paper_ranges() {
+        for i in 0..200 {
+            let mut rng = Rng::new(i);
+            let t = random_topology(&mut rng);
+            assert!((1..=6).contains(&t.num_groups()));
+            for g in &t.groups {
+                assert!((1..=8).contains(&g.count));
+                assert!((64.0..=160.0).contains(&g.intra_bw_gbps));
+                assert!(RANDOM_GPU_TYPES.iter().any(|r| r.name == g.gpu.name));
+            }
+            for i in 0..t.num_groups() {
+                for j in 0..t.num_groups() {
+                    if i != j {
+                        assert!((20.0..=50.0).contains(&t.inter_bw_gbps[i][j]));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_diverse() {
+        let a = random_topologies(7, 20);
+        let b = random_topologies(7, 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.num_groups(), y.num_groups());
+            assert_eq!(x.num_devices(), y.num_devices());
+        }
+        // Diversity: not all the same machine count.
+        let counts: std::collections::HashSet<usize> =
+            a.iter().map(|t| t.num_groups()).collect();
+        assert!(counts.len() > 2);
+    }
+}

@@ -1,0 +1,248 @@
+//! Device topology descriptions (paper §2.2, §5.2).
+//!
+//! A [`Topology`] is a set of [`DeviceGroup`]s — homogeneous GPUs with
+//! uniform pairwise intra-group bandwidth, usually one multi-GPU machine —
+//! plus a pairwise inter-group bandwidth matrix.  This is exactly the
+//! "device graph" fed to the strategy creator.
+//!
+//! [`presets`] defines the paper's *testbed*, *cloud*, and homogeneous
+//! evaluation clusters; [`generator`] samples random topologies with the
+//! distribution of §5.2 (used for GNN training and the generalization
+//! experiments of Tables 7/8).
+
+pub mod generator;
+pub mod presets;
+
+pub use generator::random_topology;
+pub use presets::{cloud, homogeneous, sfb_pair, testbed};
+
+/// A GPU model with its effective compute rate and memory.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuType {
+    pub name: &'static str,
+    /// Peak fp32 TFLOPS.
+    pub peak_tflops: f64,
+    /// Fraction of peak achieved on typical DNN kernels (profiler
+    /// calibration constant).
+    pub efficiency: f64,
+    pub mem_gb: f64,
+}
+
+impl GpuType {
+    /// Effective FLOP/s for cost modeling.
+    pub fn effective_flops(&self) -> f64 {
+        self.peak_tflops * 1e12 * self.efficiency
+    }
+}
+
+pub const V100_32G: GpuType =
+    GpuType { name: "V100-32G", peak_tflops: 15.7, efficiency: 0.42, mem_gb: 32.0 };
+pub const V100_16G: GpuType =
+    GpuType { name: "V100-16G", peak_tflops: 15.7, efficiency: 0.42, mem_gb: 16.0 };
+pub const GTX1080TI: GpuType =
+    GpuType { name: "1080Ti", peak_tflops: 11.3, efficiency: 0.30, mem_gb: 11.0 };
+pub const P100: GpuType =
+    GpuType { name: "P100", peak_tflops: 9.3, efficiency: 0.35, mem_gb: 16.0 };
+pub const T4: GpuType =
+    GpuType { name: "T4", peak_tflops: 8.1, efficiency: 0.32, mem_gb: 16.0 };
+
+/// The three representative GPU generations used by the random-topology
+/// generator (§5.2: "a GPU type among 3 types").
+pub const RANDOM_GPU_TYPES: [GpuType; 3] = [V100_16G, GTX1080TI, P100];
+
+/// A group of homogeneous, uniformly-connected GPUs (typically one
+/// machine).
+#[derive(Clone, Debug)]
+pub struct DeviceGroup {
+    pub gpu: GpuType,
+    pub count: usize,
+    /// Pairwise bandwidth between GPUs in this group, Gbit/s
+    /// (NVLink ~ 160+, PCIe ~ 64-128).
+    pub intra_bw_gbps: f64,
+}
+
+/// A full device topology: groups + pairwise inter-group bandwidth.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub groups: Vec<DeviceGroup>,
+    /// `inter_bw[i][j]` in Gbit/s; diagonal unused (use intra_bw).
+    pub inter_bw_gbps: Vec<Vec<f64>>,
+}
+
+/// Globally unique device id: (group index, index within group).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId {
+    pub group: usize,
+    pub idx: usize,
+}
+
+impl Topology {
+    pub fn new(name: impl Into<String>, groups: Vec<DeviceGroup>, inter: Vec<Vec<f64>>) -> Self {
+        let t = Self { name: name.into(), groups, inter_bw_gbps: inter };
+        t.validate();
+        t
+    }
+
+    pub fn validate(&self) {
+        let m = self.groups.len();
+        assert_eq!(self.inter_bw_gbps.len(), m, "inter-bw matrix shape");
+        for row in &self.inter_bw_gbps {
+            assert_eq!(row.len(), m, "inter-bw matrix shape");
+        }
+        for i in 0..m {
+            for j in 0..m {
+                assert!(
+                    (self.inter_bw_gbps[i][j] - self.inter_bw_gbps[j][i]).abs() < 1e-9,
+                    "inter-bw must be symmetric"
+                );
+            }
+        }
+        for g in &self.groups {
+            assert!(g.count > 0 && g.intra_bw_gbps > 0.0);
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    pub fn devices(&self) -> Vec<DeviceId> {
+        let mut out = Vec::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            for di in 0..g.count {
+                out.push(DeviceId { group: gi, idx: di });
+            }
+        }
+        out
+    }
+
+    /// Bandwidth between two devices in Gbit/s.
+    pub fn bw_gbps(&self, a: DeviceId, b: DeviceId) -> f64 {
+        if a.group == b.group {
+            if a.idx == b.idx {
+                f64::INFINITY
+            } else {
+                self.groups[a.group].intra_bw_gbps
+            }
+        } else {
+            self.inter_bw_gbps[a.group][b.group]
+        }
+    }
+
+    /// Bytes/second between two devices.
+    pub fn bw_bytes_per_s(&self, a: DeviceId, b: DeviceId) -> f64 {
+        self.bw_gbps(a, b) * 1e9 / 8.0
+    }
+
+    /// The bottleneck (minimum) pairwise bandwidth among a device set,
+    /// Gbit/s — `tau` in the SFB formulation.
+    pub fn bottleneck_bw_gbps(&self, devs: &[DeviceId]) -> f64 {
+        let mut min_bw = f64::INFINITY;
+        for (i, &a) in devs.iter().enumerate() {
+            for &b in &devs[i + 1..] {
+                min_bw = min_bw.min(self.bw_gbps(a, b));
+            }
+        }
+        min_bw
+    }
+
+    /// Total memory across a group, bytes.
+    pub fn group_mem_bytes(&self, gi: usize) -> f64 {
+        self.groups[gi].gpu.mem_gb * 1e9 * self.groups[gi].count as f64
+    }
+
+    /// Aggregate effective FLOP/s of a device subset given as a group
+    /// bitmask (used to rank candidate placements).
+    pub fn mask_flops(&self, mask: u16) -> f64 {
+        (0..self.groups.len())
+            .filter(|gi| mask & (1 << gi) != 0)
+            .map(|gi| self.groups[gi].gpu.effective_flops() * self.groups[gi].count as f64)
+            .sum()
+    }
+
+    /// Expand a group bitmask into concrete devices.
+    pub fn mask_devices(&self, mask: u16) -> Vec<DeviceId> {
+        let mut out = Vec::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            if mask & (1 << gi) != 0 {
+                for di in 0..g.count {
+                    out.push(DeviceId { group: gi, idx: di });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_groups() -> Topology {
+        Topology::new(
+            "t",
+            vec![
+                DeviceGroup { gpu: V100_16G, count: 2, intra_bw_gbps: 128.0 },
+                DeviceGroup { gpu: P100, count: 4, intra_bw_gbps: 64.0 },
+            ],
+            vec![vec![0.0, 25.0], vec![25.0, 0.0]],
+        )
+    }
+
+    #[test]
+    fn device_enumeration() {
+        let t = two_groups();
+        assert_eq!(t.num_devices(), 6);
+        assert_eq!(t.devices().len(), 6);
+        assert_eq!(t.devices()[2], DeviceId { group: 1, idx: 0 });
+    }
+
+    #[test]
+    fn bandwidth_lookup() {
+        let t = two_groups();
+        let a = DeviceId { group: 0, idx: 0 };
+        let b = DeviceId { group: 0, idx: 1 };
+        let c = DeviceId { group: 1, idx: 0 };
+        assert_eq!(t.bw_gbps(a, b), 128.0);
+        assert_eq!(t.bw_gbps(a, c), 25.0);
+        assert!(t.bw_gbps(a, a).is_infinite());
+        assert_eq!(t.bw_bytes_per_s(a, c), 25.0e9 / 8.0);
+    }
+
+    #[test]
+    fn bottleneck_bandwidth() {
+        let t = two_groups();
+        let all = t.devices();
+        assert_eq!(t.bottleneck_bw_gbps(&all), 25.0);
+        let intra = &all[2..6];
+        assert_eq!(t.bottleneck_bw_gbps(intra), 64.0);
+    }
+
+    #[test]
+    fn mask_helpers() {
+        let t = two_groups();
+        assert_eq!(t.mask_devices(0b01).len(), 2);
+        assert_eq!(t.mask_devices(0b10).len(), 4);
+        assert_eq!(t.mask_devices(0b11).len(), 6);
+        assert!(t.mask_flops(0b01) > 0.0);
+        assert!(t.mask_flops(0b11) > t.mask_flops(0b10));
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric")]
+    fn asymmetric_matrix_rejected() {
+        Topology::new(
+            "bad",
+            vec![
+                DeviceGroup { gpu: T4, count: 1, intra_bw_gbps: 64.0 },
+                DeviceGroup { gpu: T4, count: 1, intra_bw_gbps: 64.0 },
+            ],
+            vec![vec![0.0, 10.0], vec![20.0, 0.0]],
+        );
+    }
+}

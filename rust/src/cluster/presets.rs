@@ -1,0 +1,102 @@
+//! Cluster presets from the paper's evaluation (§5.2).
+
+use super::{DeviceGroup, GpuType, Topology, GTX1080TI, P100, T4, V100_16G, V100_32G};
+
+/// Build a symmetric inter-group matrix where every pair has `bw` Gbps.
+fn uniform_inter(m: usize, bw: f64) -> Vec<Vec<f64>> {
+    (0..m)
+        .map(|i| (0..m).map(|j| if i == j { 0.0 } else { bw }).collect())
+        .collect()
+}
+
+/// On-premise *testbed*: 7 machines —
+/// 1x (4x V100-32G, NVLink), 4x (2x 1080Ti, PCIe), 2x (2x P100, PCIe),
+/// all connected by a 100 Gbps switch.
+pub fn testbed() -> Topology {
+    let mut groups = vec![DeviceGroup {
+        gpu: V100_32G,
+        count: 4,
+        intra_bw_gbps: 200.0, // NVLink
+    }];
+    for _ in 0..4 {
+        groups.push(DeviceGroup { gpu: GTX1080TI, count: 2, intra_bw_gbps: 96.0 });
+    }
+    for _ in 0..2 {
+        groups.push(DeviceGroup { gpu: P100, count: 2, intra_bw_gbps: 96.0 });
+    }
+    // 100 Gbps switch, but effective per-flow TCP/GRPC goodput is lower.
+    Topology::new("testbed", groups, uniform_inter(7, 80.0))
+}
+
+/// Public-cloud cluster: 2x (8x V100-16G) + 4x (4x T4), 10 Gbps network.
+pub fn cloud() -> Topology {
+    let mut groups = vec![
+        DeviceGroup { gpu: V100_16G, count: 8, intra_bw_gbps: 200.0 },
+        DeviceGroup { gpu: V100_16G, count: 8, intra_bw_gbps: 200.0 },
+    ];
+    for _ in 0..4 {
+        groups.push(DeviceGroup { gpu: T4, count: 4, intra_bw_gbps: 64.0 });
+    }
+    Topology::new("cloud", groups, uniform_inter(6, 10.0))
+}
+
+/// Homogeneous cluster for the Fig. 6 comparison: 2x V100 on one machine.
+pub fn homogeneous() -> Topology {
+    Topology::new(
+        "homog-2xV100",
+        vec![DeviceGroup { gpu: V100_16G, count: 2, intra_bw_gbps: 128.0 }],
+        uniform_inter(1, 0.0),
+    )
+}
+
+/// SFB study cluster (Table 5): two machines, one 1080Ti each,
+/// commodity network.
+pub fn sfb_pair() -> Topology {
+    Topology::new(
+        "sfb-2x1080Ti",
+        vec![
+            DeviceGroup { gpu: GTX1080TI, count: 1, intra_bw_gbps: 96.0 },
+            DeviceGroup { gpu: GTX1080TI, count: 1, intra_bw_gbps: 96.0 },
+        ],
+        uniform_inter(2, 10.0),
+    )
+}
+
+/// A single-GPU "topology" used for baseline profiling.
+pub fn single(gpu: GpuType) -> Topology {
+    Topology::new(
+        format!("single-{}", gpu.name),
+        vec![DeviceGroup { gpu, count: 1, intra_bw_gbps: 64.0 }],
+        uniform_inter(1, 0.0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_matches_paper() {
+        let t = testbed();
+        assert_eq!(t.num_groups(), 7);
+        assert_eq!(t.num_devices(), 4 + 8 + 4);
+        assert_eq!(t.groups[0].gpu.name, "V100-32G");
+        assert!(t.groups[0].intra_bw_gbps > t.groups[1].intra_bw_gbps); // NVLink
+    }
+
+    #[test]
+    fn cloud_matches_paper() {
+        let t = cloud();
+        assert_eq!(t.num_groups(), 6);
+        assert_eq!(t.num_devices(), 32);
+        assert_eq!(t.inter_bw_gbps[0][1], 10.0);
+    }
+
+    #[test]
+    fn presets_validate() {
+        for t in [testbed(), cloud(), homogeneous(), sfb_pair(), single(P100)] {
+            t.validate();
+            assert!(t.num_devices() >= 1);
+        }
+    }
+}

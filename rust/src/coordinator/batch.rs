@@ -1,0 +1,155 @@
+//! Batched leaf-evaluation service.
+//!
+//! PJRT executables are not `Send`, so the compiled GNN lives on one
+//! *evaluator thread*; search workers (parallel MCTS over different
+//! models/topologies) submit [`Position`]s through an MPSC channel and
+//! block on a reply channel.  The evaluator drains up to `B_INFER`
+//! requests (with a short linger once at least one is pending) and runs
+//! them as a single PJRT execution — the inference-side analogue of
+//! dynamic batching in serving systems, and what makes the fixed batch
+//! axis of the AOT artifact pay off.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use crate::gnn::features::{Position, B_INFER};
+use crate::gnn::GnnService;
+
+/// A pending evaluation: position in, priors out.
+pub struct EvalRequest {
+    pub position: Box<Position>,
+    pub reply: Sender<Vec<f32>>,
+}
+
+/// Client handle: cheap to clone into worker threads.
+#[derive(Clone)]
+pub struct EvalClient {
+    tx: Sender<EvalRequest>,
+}
+
+impl EvalClient {
+    /// Blocking evaluation of one position.
+    pub fn eval(&self, position: Position) -> Option<Vec<f32>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(EvalRequest { position: Box::new(position), reply: reply_tx })
+            .ok()?;
+        reply_rx.recv().ok()
+    }
+}
+
+/// Statistics the evaluator reports when it shuts down.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub requests: usize,
+    pub batches: usize,
+}
+
+impl EvalStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// How long to linger for more requests once one is pending.
+const LINGER: Duration = Duration::from_micros(300);
+
+/// Run the evaluation loop until all clients hang up.
+/// Call from a dedicated thread that owns the service.
+pub fn serve(svc: &GnnService, params: &[f32], rx: Receiver<EvalRequest>) -> EvalStats {
+    let mut stats = EvalStats::default();
+    loop {
+        // Block for the first request.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return stats, // all senders dropped
+        };
+        let mut pending = vec![first];
+        // Linger to fill the batch.
+        while pending.len() < B_INFER {
+            match rx.recv_timeout(LINGER) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        stats.requests += pending.len();
+        stats.batches += 1;
+        let positions: Vec<&Position> =
+            pending.iter().map(|r| r.position.as_ref()).collect();
+        match svc.infer_batch(params, &positions) {
+            Ok(results) => {
+                for (req, res) in pending.into_iter().zip(results) {
+                    let _ = req.reply.send(res);
+                }
+            }
+            Err(e) => {
+                eprintln!("batched inference failed: {e}");
+                // Reply with uniform fallbacks so workers don't deadlock.
+                for req in pending {
+                    let n = crate::gnn::features::N_CAND;
+                    let _ = req.reply.send(vec![1.0 / n as f32; n]);
+                }
+            }
+        }
+    }
+}
+
+/// Create the channel pair for a serve loop.
+pub fn eval_channel() -> (EvalClient, Receiver<EvalRequest>) {
+    let (tx, rx) = channel();
+    (EvalClient { tx }, rx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn service_ready() -> bool {
+        std::path::Path::new("artifacts/gnn_infer.hlo.txt").exists()
+    }
+
+    #[test]
+    fn parallel_clients_get_answers_and_batching_happens() {
+        if !service_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let (client, rx) = eval_channel();
+        let handle = thread::spawn(move || {
+            let svc = GnnService::load("artifacts").unwrap();
+            let params =
+                crate::gnn::params::load_params("artifacts/params_init.bin").unwrap();
+            serve(&svc, &params, rx)
+        });
+
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let c = client.clone();
+                thread::spawn(move || {
+                    let mut ok = 0;
+                    for _ in 0..6 {
+                        let pos = Position::zero();
+                        let pr = c.eval(pos).expect("reply");
+                        assert_eq!(pr.len(), crate::gnn::features::N_CAND);
+                        assert!(pr.iter().all(|p| p.is_finite()));
+                        ok += 1;
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let total: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        drop(client);
+        let stats = handle.join().unwrap();
+        assert_eq!(total, 24);
+        assert_eq!(stats.requests, 24);
+        assert!(stats.batches <= 24);
+        assert!(stats.mean_batch_size() >= 1.0);
+    }
+}

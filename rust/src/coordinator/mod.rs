@@ -1,0 +1,358 @@
+//! The L3 coordinator: end-to-end search sessions, the AlphaZero-style
+//! self-play GNN trainer (paper §4.2.2 / Fig. 7) and the batched
+//! leaf-evaluation service ([`batch`]).
+//!
+//! This is the deployment surface a user touches: give it a model name
+//! and a topology, get back an optimized deployment strategy with its
+//! simulated per-iteration time, the SFB plan, and search telemetry.
+
+pub mod batch;
+
+use crate::cluster::{generator::random_topology, Topology};
+use crate::dist::Lowering;
+use crate::gnn::features::{FeatureBuilder, Position, B_TRAIN, N_CAND};
+use crate::gnn::{GnnPrior, GnnService};
+use crate::graph::grouping::{group_ops, GroupGraph, DEFAULT_GROUPS};
+use crate::graph::CompGraph;
+use crate::mcts::{Mcts, SearchResult, UniformPrior};
+use crate::models;
+use crate::profile::{unique_gpus, CommModel, CostModel};
+use crate::sfb::{self, SfbPlan};
+use crate::strategy::{enumerate_actions, Strategy};
+use crate::util::{Rng, Stopwatch};
+
+/// Configuration for one strategy-search session.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub max_groups: usize,
+    pub mcts_iterations: usize,
+    pub seed: u64,
+    /// Run the SFB optimizer on the found strategy (§4.2.3).
+    pub apply_sfb: bool,
+    /// Profiler measurement noise.
+    pub profile_noise: f64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            max_groups: DEFAULT_GROUPS,
+            mcts_iterations: 150,
+            seed: 1,
+            apply_sfb: true,
+            profile_noise: 0.0,
+        }
+    }
+}
+
+/// Everything a search session produces.
+pub struct SessionResult {
+    pub strategy: Strategy,
+    pub time: f64,
+    pub time_with_sfb: Option<f64>,
+    pub dp_time: f64,
+    pub speedup: f64,
+    pub sfb: Option<SfbPlan>,
+    pub search: SearchResult,
+    pub overhead_s: f64,
+    pub group_graph: GroupGraph,
+}
+
+/// Prepared (profiled + grouped) context, reusable across searches.
+pub struct Prepared {
+    pub graph: CompGraph,
+    pub gg: GroupGraph,
+    pub cost: CostModel,
+    pub comm: CommModel,
+}
+
+/// Profile + simplify + group a model for a topology.
+pub fn prepare(model: CompGraph, topo: &Topology, cfg: &SearchConfig) -> Prepared {
+    let analysis = crate::graph::analyzer::simplify(&model);
+    let graph = analysis.graph;
+    let cost = CostModel::profile(&graph.ops, &unique_gpus(topo), cfg.profile_noise, cfg.seed);
+    let gg = group_ops(&graph, &cost, cfg.max_groups, cfg.seed);
+    let comm = CommModel::fit(cfg.seed ^ 0xc0ffee);
+    Prepared { graph, gg, cost, comm }
+}
+
+/// Run a full TAG search (GNN-guided if a service + params are given,
+/// pure MCTS otherwise).
+pub fn search_session(
+    prep: &Prepared,
+    topo: &Topology,
+    svc: Option<(&GnnService, Vec<f32>)>,
+    cfg: &SearchConfig,
+) -> SessionResult {
+    let watch = Stopwatch::start();
+    let low = Lowering::new(&prep.gg, topo, &prep.cost, &prep.comm);
+    let actions = enumerate_actions(topo);
+
+    let search = match svc {
+        Some((svc, params)) => {
+            let builder = FeatureBuilder::new(&prep.gg, topo, &actions);
+            let prior = GnnPrior::new(svc, builder, params);
+            let mut mcts = Mcts::new(&low, actions.clone(), prior, cfg.seed);
+            mcts.search(cfg.mcts_iterations)
+        }
+        None => {
+            let mut mcts = Mcts::new(&low, actions.clone(), UniformPrior, cfg.seed);
+            mcts.search(cfg.mcts_iterations)
+        }
+    };
+
+    let dp_time = search.dp_time;
+    let strategy = search.best.clone();
+    let base_out = low.evaluate(&strategy);
+
+    let (sfb, time_with_sfb) = if cfg.apply_sfb {
+        let plan = sfb::optimize(&prep.graph, &prep.gg, topo, &prep.cost, &strategy);
+        let t = low.evaluate_with_sfb(&strategy, Some(&plan)).time;
+        (Some(plan), Some(t))
+    } else {
+        (None, None)
+    };
+
+    let final_time = time_with_sfb.unwrap_or(base_out.time).min(base_out.time);
+    SessionResult {
+        speedup: dp_time / final_time,
+        strategy,
+        time: base_out.time,
+        time_with_sfb,
+        dp_time,
+        sfb,
+        search,
+        overhead_s: watch.elapsed_s(),
+        group_graph: prep.gg.clone(),
+    }
+}
+
+// ---------------------------------------------------------------- trainer
+
+/// One harvested replay example, featurized.
+struct Replay {
+    position: Position,
+    pi: Vec<f32>,
+}
+
+/// Self-play GNN trainer (Fig. 7): alternate MCTS example collection on
+/// random (model, topology) pairs with Adam steps on the replay buffer.
+pub struct Trainer<'a> {
+    svc: &'a GnnService,
+    pub params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: f32,
+    buffer: Vec<Replay>,
+    pub loss_history: Vec<f32>,
+    pub use_feedback: bool,
+    pub model_scale: f64,
+    pub mcts_iterations: usize,
+    /// Restrict self-play to these models (None = all 6).
+    pub model_filter: Option<Vec<&'static str>>,
+    rng: Rng,
+}
+
+const REPLAY_CAP: usize = 2048;
+
+impl<'a> Trainer<'a> {
+    pub fn new(svc: &'a GnnService, params: Vec<f32>, seed: u64) -> Self {
+        let n = params.len();
+        Self {
+            svc,
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0.0,
+            buffer: Vec::new(),
+            loss_history: Vec::new(),
+            use_feedback: true,
+            model_scale: 0.25,
+            mcts_iterations: 96,
+            model_filter: None,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn sample_model(&mut self) -> CompGraph {
+        let names: Vec<&'static str> = match &self.model_filter {
+            Some(f) => f.clone(),
+            None => models::MODEL_NAMES.to_vec(),
+        };
+        let name = *self.rng.choose(&names);
+        models::by_name(name, self.model_scale).unwrap()
+    }
+
+    /// One self-play game: search a random (model, topology), harvest
+    /// (features, visit-distribution) examples into the replay buffer.
+    pub fn collect(&mut self) -> usize {
+        let model = self.sample_model();
+        let mut trng = Rng::new(self.rng.next_u64());
+        let topo = random_topology(&mut trng);
+        let cfg = SearchConfig {
+            max_groups: 24,
+            mcts_iterations: self.mcts_iterations,
+            seed: self.rng.next_u64(),
+            apply_sfb: false,
+            profile_noise: 0.0,
+        };
+        let prep = prepare(model, &topo, &cfg);
+        let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+        let actions = enumerate_actions(&topo);
+        let mut builder = FeatureBuilder::new(&prep.gg, &topo, &actions);
+        builder.use_feedback = self.use_feedback;
+        let prior = GnnPrior::new(self.svc, builder, self.params.clone());
+        let mut mcts = Mcts::new(&low, actions.clone(), prior, cfg.seed);
+        mcts.collect_examples = true;
+        let res = mcts.search(cfg.mcts_iterations);
+
+        let mut fb2 = FeatureBuilder::new(&prep.gg, &topo, &actions);
+        fb2.use_feedback = self.use_feedback;
+        let n = res.examples.len();
+        for ex in res.examples {
+            let pos = fb2.build(&ex.strategy, &ex.outcome, ex.group);
+            let mut pi = ex.pi.clone();
+            pi.resize(N_CAND, 0.0);
+            self.buffer.push(Replay { position: pos, pi });
+        }
+        if self.buffer.len() > REPLAY_CAP {
+            let excess = self.buffer.len() - REPLAY_CAP;
+            self.buffer.drain(..excess);
+        }
+        n
+    }
+
+    /// One Adam step on a random replay batch; returns the loss.
+    pub fn train_once(&mut self) -> Option<f32> {
+        if self.buffer.is_empty() {
+            return None;
+        }
+        let bs = B_TRAIN.min(self.buffer.len());
+        let mut idx: Vec<usize> = (0..self.buffer.len()).collect();
+        self.rng.shuffle(&mut idx);
+        idx.truncate(bs);
+        let positions: Vec<&Position> =
+            idx.iter().map(|&i| &self.buffer[i].position).collect();
+        let pis: Vec<Vec<f32>> = idx.iter().map(|&i| self.buffer[i].pi.clone()).collect();
+        let mask = vec![1.0f32; bs];
+        match self.svc.train_step(
+            &self.params,
+            &self.m,
+            &self.v,
+            self.step,
+            &positions,
+            &pis,
+            &mask,
+        ) {
+            Ok((p, m, v, loss)) => {
+                self.params = p;
+                self.m = m;
+                self.v = v;
+                self.step += 1.0;
+                self.loss_history.push(loss);
+                Some(loss)
+            }
+            Err(e) => {
+                eprintln!("train step failed: {e}");
+                None
+            }
+        }
+    }
+
+    /// Run `games` collection rounds with `steps_per_game` train steps
+    /// after each; returns the loss history.
+    pub fn run(&mut self, games: usize, steps_per_game: usize) -> Vec<f32> {
+        for _ in 0..games {
+            self.collect();
+            for _ in 0..steps_per_game {
+                self.train_once();
+            }
+        }
+        self.loss_history.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::testbed;
+
+    #[test]
+    fn pure_mcts_session_end_to_end() {
+        let topo = testbed();
+        let cfg = SearchConfig {
+            max_groups: 10,
+            mcts_iterations: 40,
+            seed: 3,
+            apply_sfb: true,
+            profile_noise: 0.0,
+        };
+        let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
+        let res = search_session(&prep, &topo, None, &cfg);
+        assert!(res.time.is_finite());
+        assert!(res.speedup > 0.9, "speedup {}", res.speedup);
+        assert!(res.overhead_s > 0.0);
+        assert!(res.sfb.is_some());
+    }
+
+    #[test]
+    fn sfb_never_hurts_final_time() {
+        let topo = testbed();
+        let cfg = SearchConfig {
+            max_groups: 10,
+            mcts_iterations: 30,
+            seed: 4,
+            apply_sfb: true,
+            profile_noise: 0.0,
+        };
+        let prep = prepare(models::transformer(8, 0.25), &topo, &cfg);
+        let res = search_session(&prep, &topo, None, &cfg);
+        if let Some(t_sfb) = res.time_with_sfb {
+            // The plan only includes gradients the ILP deems beneficial;
+            // the reported final time takes the min anyway.
+            assert!(t_sfb.is_finite());
+            let final_t = res.dp_time / res.speedup;
+            assert!(final_t <= res.time + 1e-12);
+        }
+    }
+
+    #[test]
+    fn gnn_guided_session_runs_when_artifacts_exist() {
+        if !std::path::Path::new("artifacts/gnn_infer.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let svc = GnnService::load("artifacts").unwrap();
+        let params = crate::gnn::params::load_params("artifacts/params_init.bin").unwrap();
+        let topo = testbed();
+        let cfg = SearchConfig {
+            max_groups: 10,
+            mcts_iterations: 20,
+            seed: 5,
+            apply_sfb: false,
+            profile_noise: 0.0,
+        };
+        let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
+        let res = search_session(&prep, &topo, Some((&svc, params)), &cfg);
+        assert!(res.time.is_finite());
+        assert!(res.speedup > 0.5);
+    }
+
+    #[test]
+    fn trainer_collects_and_trains() {
+        if !std::path::Path::new("artifacts/gnn_infer.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let svc = GnnService::load("artifacts").unwrap();
+        let params = crate::gnn::params::load_params("artifacts/params_init.bin").unwrap();
+        let mut tr = Trainer::new(&svc, params, 7);
+        tr.model_scale = 0.25;
+        tr.mcts_iterations = 70; // enough visits to harvest the root
+        tr.model_filter = Some(vec!["VGG19"]);
+        let n = tr.collect();
+        assert!(n > 0, "no examples harvested");
+        let loss = tr.train_once().expect("train step");
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+}

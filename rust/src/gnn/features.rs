@@ -1,0 +1,340 @@
+//! Fixed-shape feature tensors for the AOT-compiled GNN (paper Table 1).
+//!
+//! Shapes, padding and normalization here must match
+//! `python/compile/model.py` exactly — `manifest.rs` tests pin the
+//! constants and the input order.
+//!
+//! Feature layout (documented in model.py):
+//!   op node (11): log1p(comp ms), log1p(param MB),
+//!                 one-hot[undecided, AR, PS, Dup, MP],
+//!                 log1p(makespan ms), log1p(idle-before-send ms),
+//!                 decided, is-next
+//!   dev node (5): #GPUs/8, log1p(mem GB), log1p(intra Gbps),
+//!                 peak-mem fraction, idle fraction
+//!   op-op edge (1): log1p(tensor MB);  dev-dev edge (2): log1p(Gbps),
+//!   link idle;  op-dev edge (1): placement bit.
+
+use crate::cluster::Topology;
+use crate::dist::SimOutcome;
+use crate::graph::grouping::GroupGraph;
+use crate::strategy::{Action, Strategy};
+
+pub const N_OP: usize = 64;
+pub const N_DEV: usize = 16;
+pub const N_CAND: usize = 128;
+pub const F_OP: usize = 11;
+pub const F_DEV: usize = 5;
+pub const B_INFER: usize = 8;
+pub const B_TRAIN: usize = 16;
+
+/// Feature array order — must equal model.py FEATURE_NAMES.
+pub const FEATURE_ORDER: [&str; 13] = [
+    "op_feats",
+    "dev_feats",
+    "oo_e",
+    "oo_mask",
+    "dd_e",
+    "dd_mask",
+    "od_place",
+    "op_mask",
+    "dev_mask",
+    "next_onehot",
+    "cand_p",
+    "cand_o",
+    "cand_mask",
+];
+
+/// One position's feature arrays (flat, row-major, fixed shapes).
+#[derive(Clone, Debug)]
+pub struct Position {
+    pub op_feats: Vec<f32>,    // N_OP * F_OP
+    pub dev_feats: Vec<f32>,   // N_DEV * F_DEV
+    pub oo_e: Vec<f32>,        // N_OP * N_OP
+    pub oo_mask: Vec<f32>,     // N_OP * N_OP
+    pub dd_e: Vec<f32>,        // N_DEV * N_DEV * 2
+    pub dd_mask: Vec<f32>,     // N_DEV * N_DEV
+    pub od_place: Vec<f32>,    // N_OP * N_DEV
+    pub op_mask: Vec<f32>,     // N_OP
+    pub dev_mask: Vec<f32>,    // N_DEV
+    pub next_onehot: Vec<f32>, // N_OP
+    pub cand_p: Vec<f32>,      // N_CAND * N_DEV
+    pub cand_o: Vec<f32>,      // N_CAND * 4
+    pub cand_mask: Vec<f32>,   // N_CAND
+}
+
+impl Position {
+    pub fn zero() -> Self {
+        Self {
+            op_feats: vec![0.0; N_OP * F_OP],
+            dev_feats: vec![0.0; N_DEV * F_DEV],
+            oo_e: vec![0.0; N_OP * N_OP],
+            oo_mask: vec![0.0; N_OP * N_OP],
+            dd_e: vec![0.0; N_DEV * N_DEV * 2],
+            dd_mask: vec![0.0; N_DEV * N_DEV],
+            od_place: vec![0.0; N_OP * N_DEV],
+            op_mask: vec![0.0; N_OP],
+            dev_mask: vec![0.0; N_DEV],
+            next_onehot: vec![0.0; N_OP],
+            cand_p: vec![0.0; N_CAND * N_DEV],
+            cand_o: vec![0.0; N_CAND * 4],
+            cand_mask: vec![0.0; N_CAND],
+        }
+    }
+
+    /// Arrays in FEATURE_ORDER (for batching into literals).
+    pub fn arrays(&self) -> [&[f32]; 13] {
+        [
+            &self.op_feats,
+            &self.dev_feats,
+            &self.oo_e,
+            &self.oo_mask,
+            &self.dd_e,
+            &self.dd_mask,
+            &self.od_place,
+            &self.op_mask,
+            &self.dev_mask,
+            &self.next_onehot,
+            &self.cand_p,
+            &self.cand_o,
+            &self.cand_mask,
+        ]
+    }
+}
+
+fn log1p_ms(seconds: f64) -> f32 {
+    ((seconds * 1e3).max(0.0)).ln_1p() as f32
+}
+
+fn log1p_mb(bytes: f64) -> f32 {
+    ((bytes / 1e6).max(0.0)).ln_1p() as f32
+}
+
+/// Builds positions for one (model, topology, action set) context.
+pub struct FeatureBuilder<'a> {
+    pub gg: &'a GroupGraph,
+    pub topo: &'a Topology,
+    pub actions: &'a [Action],
+    /// Ablation switch (§5.5 / Fig. 7): zero out the simulator-feedback
+    /// features (part 3 of Table 1) when false.
+    pub use_feedback: bool,
+}
+
+impl<'a> FeatureBuilder<'a> {
+    pub fn new(gg: &'a GroupGraph, topo: &'a Topology, actions: &'a [Action]) -> Self {
+        assert!(gg.num_groups() <= N_OP, "too many op groups for AOT shape");
+        assert!(topo.num_groups() <= N_DEV, "too many device groups");
+        assert!(actions.len() <= N_CAND, "too many candidate actions");
+        Self { gg, topo, actions, use_feedback: true }
+    }
+
+    /// Build the feature tensors for deciding `next_group` under the
+    /// partial `strategy` whose simulated feedback is `out`.
+    pub fn build(&self, strategy: &Strategy, out: &SimOutcome, next_group: usize) -> Position {
+        let mut p = Position::zero();
+        let ng = self.gg.num_groups();
+        let m = self.topo.num_groups();
+        let fb = &out.feedback;
+
+        // ---- op nodes
+        for g in 0..ng {
+            let row = &mut p.op_feats[g * F_OP..(g + 1) * F_OP];
+            let grp = &self.gg.groups[g];
+            row[0] = log1p_ms(grp.comp_time);
+            row[1] = log1p_mb(grp.param_bytes);
+            let opt = match strategy.slots[g] {
+                None => 0,
+                Some(a) => 1 + a.option.index(),
+            };
+            row[2 + opt] = 1.0;
+            if self.use_feedback {
+                row[7] = log1p_ms(fb.group_makespan.get(g).copied().unwrap_or(0.0));
+                row[8] =
+                    log1p_ms(fb.group_idle_before_send.get(g).copied().unwrap_or(0.0));
+            }
+            row[9] = if strategy.slots[g].is_some() { 1.0 } else { 0.0 };
+            row[10] = if g == next_group { 1.0 } else { 0.0 };
+            p.op_mask[g] = 1.0;
+        }
+        p.next_onehot[next_group] = 1.0;
+
+        // ---- device nodes
+        for d in 0..m {
+            let row = &mut p.dev_feats[d * F_DEV..(d + 1) * F_DEV];
+            let grp = &self.topo.groups[d];
+            row[0] = grp.count as f32 / 8.0;
+            row[1] = (grp.gpu.mem_gb).ln_1p() as f32;
+            row[2] = (grp.intra_bw_gbps).ln_1p() as f32;
+            if self.use_feedback {
+                row[3] = fb.devgroup_peak_mem_frac.get(d).copied().unwrap_or(0.0) as f32;
+                row[4] = fb.devgroup_idle.get(d).copied().unwrap_or(0.0) as f32;
+            }
+            p.dev_mask[d] = 1.0;
+        }
+
+        // ---- op-op edges (symmetrized tensor volume)
+        for i in 0..ng {
+            for j in 0..ng {
+                let bytes = self.gg.edges[i][j] + self.gg.edges[j][i];
+                if bytes > 0.0 {
+                    p.oo_e[i * N_OP + j] = log1p_mb(bytes);
+                    p.oo_mask[i * N_OP + j] = 1.0;
+                }
+            }
+        }
+
+        // ---- dev-dev edges
+        for a in 0..m {
+            for b in 0..m {
+                if a == b {
+                    continue;
+                }
+                let idx2 = (a * N_DEV + b) * 2;
+                p.dd_e[idx2] = (self.topo.inter_bw_gbps[a][b]).ln_1p() as f32;
+                if self.use_feedback {
+                    p.dd_e[idx2 + 1] = fb
+                        .link_idle
+                        .get(a)
+                        .and_then(|r| r.get(b))
+                        .copied()
+                        .unwrap_or(0.0) as f32;
+                }
+                p.dd_mask[a * N_DEV + b] = 1.0;
+            }
+        }
+
+        // ---- op-dev placement edges (decided groups only)
+        for g in 0..ng {
+            if let Some(a) = strategy.slots[g] {
+                for d in 0..m {
+                    if a.mask & (1 << d) != 0 {
+                        p.od_place[g * N_DEV + d] = 1.0;
+                    }
+                }
+            }
+        }
+
+        // ---- candidates
+        for (ci, a) in self.actions.iter().enumerate() {
+            for d in 0..m {
+                if a.mask & (1 << d) != 0 {
+                    p.cand_p[ci * N_DEV + d] = 1.0;
+                }
+            }
+            p.cand_o[ci * 4 + a.option.index()] = 1.0;
+            p.cand_mask[ci] = 1.0;
+        }
+
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::testbed;
+    use crate::dist::Lowering;
+    use crate::graph::grouping::group_ops;
+    use crate::models;
+    use crate::profile::{unique_gpus, CommModel, CostModel};
+    use crate::strategy::{enumerate_actions, ReplOption};
+
+    fn setup() -> (GroupGraph, Topology, Vec<Action>, SimOutcome, Strategy) {
+        let topo = testbed();
+        let m = models::vgg19(8, 0.25);
+        let cost = CostModel::profile(&m.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&m, &cost, 12, 7);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let mut s = Strategy::empty(gg.num_groups());
+        s.slots[0] = Some(Action { mask: 0b1, option: ReplOption::Ps });
+        let out = low.evaluate(&s);
+        let actions = enumerate_actions(&topo);
+        (gg, topo, actions, out, s)
+    }
+
+    #[test]
+    fn shapes_and_masks() {
+        let (gg, topo, actions, out, s) = setup();
+        let fb = FeatureBuilder::new(&gg, &topo, &actions);
+        let p = fb.build(&s, &out, 1);
+        assert_eq!(p.op_feats.len(), N_OP * F_OP);
+        let live_ops = p.op_mask.iter().filter(|&&x| x > 0.0).count();
+        assert_eq!(live_ops, gg.num_groups());
+        let live_dev = p.dev_mask.iter().filter(|&&x| x > 0.0).count();
+        assert_eq!(live_dev, topo.num_groups());
+        let live_cand = p.cand_mask.iter().filter(|&&x| x > 0.0).count();
+        assert_eq!(live_cand, actions.len());
+        // All values finite.
+        for arr in p.arrays() {
+            assert!(arr.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn decided_and_next_flags() {
+        let (gg, topo, actions, out, s) = setup();
+        let fb = FeatureBuilder::new(&gg, &topo, &actions);
+        let p = fb.build(&s, &out, 3);
+        // Group 0 is decided with PS (one-hot slot 2 -> col 4).
+        assert_eq!(p.op_feats[2 + 1 + 1], 1.0); // row 0, col 2+opt(PS=1+1)
+        assert_eq!(p.op_feats[9], 1.0); // decided flag
+        // Group 3 is next.
+        assert_eq!(p.op_feats[3 * F_OP + 10], 1.0);
+        assert_eq!(p.next_onehot[3], 1.0);
+        // Undecided group 1: one-hot col 2 set.
+        assert_eq!(p.op_feats[F_OP + 2], 1.0);
+        assert_eq!(p.op_feats[F_OP + 9], 0.0);
+    }
+
+    #[test]
+    fn placement_edges_match_mask() {
+        let (gg, topo, actions, out, s) = setup();
+        let fb = FeatureBuilder::new(&gg, &topo, &actions);
+        let p = fb.build(&s, &out, 1);
+        // Group 0 placed on device group 0 only.
+        assert_eq!(p.od_place[0], 1.0);
+        for d in 1..topo.num_groups() {
+            assert_eq!(p.od_place[d], 0.0);
+        }
+        // Undecided groups have no placement edges.
+        for d in 0..N_DEV {
+            assert_eq!(p.od_place[N_DEV + d], 0.0);
+        }
+        let _ = gg;
+    }
+
+    #[test]
+    fn feedback_ablation_zeroes_part3() {
+        let (gg, topo, actions, out, s) = setup();
+        let mut fb = FeatureBuilder::new(&gg, &topo, &actions);
+        fb.use_feedback = false;
+        let p = fb.build(&s, &out, 1);
+        for g in 0..gg.num_groups() {
+            assert_eq!(p.op_feats[g * F_OP + 7], 0.0);
+            assert_eq!(p.op_feats[g * F_OP + 8], 0.0);
+        }
+        for d in 0..topo.num_groups() {
+            assert_eq!(p.dev_feats[d * F_DEV + 3], 0.0);
+            assert_eq!(p.dev_feats[d * F_DEV + 4], 0.0);
+        }
+        // Raw features still present.
+        assert!(p.op_feats[0] > 0.0);
+    }
+
+    #[test]
+    fn candidate_encoding_roundtrip() {
+        let (gg, topo, actions, out, s) = setup();
+        let fb = FeatureBuilder::new(&gg, &topo, &actions);
+        let p = fb.build(&s, &out, 0);
+        for (ci, a) in actions.iter().enumerate() {
+            let mask_bits: u16 = (0..topo.num_groups())
+                .filter(|&d| p.cand_p[ci * N_DEV + d] > 0.0)
+                .map(|d| 1u16 << d)
+                .sum();
+            assert_eq!(mask_bits, a.mask);
+            let opt = (0..4).find(|&o| p.cand_o[ci * 4 + o] > 0.0).unwrap();
+            assert_eq!(opt, a.option.index());
+        }
+        let _ = gg;
+    }
+}

@@ -1,0 +1,125 @@
+//! Parse `artifacts/manifest.txt` emitted by `python/compile/aot.py`:
+//! `const NAME VALUE` lines and `input FN IDX NAME d0,d1,...` lines.
+//! This is the single source of truth tying the Rust feature builder to
+//! the AOT-lowered HLO input signature.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub index: usize,
+    pub name: String,
+    pub dims: Vec<i64>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    consts: HashMap<String, i64>,
+    inputs: HashMap<String, Vec<InputSpec>>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read manifest {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.as_slice() {
+                ["const", name, value] => {
+                    m.consts.insert(name.to_string(), value.parse()?);
+                }
+                ["input", func, idx, name, dims] => {
+                    let spec = InputSpec {
+                        index: idx.parse()?,
+                        name: name.to_string(),
+                        dims: dims
+                            .split(',')
+                            .map(|d| d.parse::<i64>())
+                            .collect::<Result<_, _>>()?,
+                    };
+                    m.inputs.entry(func.to_string()).or_default().push(spec);
+                }
+                _ => bail!("manifest line {}: unparseable: {line}", ln + 1),
+            }
+        }
+        for specs in m.inputs.values_mut() {
+            specs.sort_by_key(|s| s.index);
+            for (i, s) in specs.iter().enumerate() {
+                anyhow::ensure!(s.index == i, "input indices not dense");
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn constant(&self, name: &str) -> i64 {
+        *self
+            .consts
+            .get(name)
+            .unwrap_or_else(|| panic!("manifest missing const {name}"))
+    }
+
+    pub fn inputs_for(&self, func: &str) -> &[InputSpec] {
+        self.inputs
+            .get(func)
+            .unwrap_or_else(|| panic!("manifest missing function {func}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# comment\n\
+        const N_OP 64\n\
+        const PARAM_COUNT 122497\n\
+        input infer 0 params 122497\n\
+        input infer 1 op_feats 8,64,11\n\
+        input train 0 params 122497\n";
+
+    #[test]
+    fn parses_consts_and_inputs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.constant("N_OP"), 64);
+        let infer = m.inputs_for("infer");
+        assert_eq!(infer.len(), 2);
+        assert_eq!(infer[1].name, "op_feats");
+        assert_eq!(infer[1].dims, vec![8, 64, 11]);
+        assert_eq!(m.inputs_for("train").len(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("what is this").is_err());
+    }
+
+    #[test]
+    fn real_manifest_consistent_with_rust_constants() {
+        let Ok(m) = Manifest::load("artifacts/manifest.txt") else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        use crate::gnn::features as f;
+        assert_eq!(m.constant("N_OP") as usize, f::N_OP);
+        assert_eq!(m.constant("N_DEV") as usize, f::N_DEV);
+        assert_eq!(m.constant("N_CAND") as usize, f::N_CAND);
+        assert_eq!(m.constant("F_OP") as usize, f::F_OP);
+        assert_eq!(m.constant("F_DEV") as usize, f::F_DEV);
+        // Input order must match the Rust feature array order.
+        let names: Vec<&str> = m.inputs_for("infer").iter().map(|s| s.name.as_str()).collect();
+        let expect: Vec<&str> = std::iter::once("params")
+            .chain(f::FEATURE_ORDER.iter().copied())
+            .collect();
+        assert_eq!(names, expect);
+    }
+}

@@ -1,0 +1,24 @@
+//! The Rust side of TAG's heterogeneous GNN (paper §4.2.1).
+//!
+//! The network itself lives in `python/compile/model.py` and is AOT-
+//! lowered to HLO text by `make artifacts`; this module owns everything
+//! needed to *use* it from the search hot path:
+//!
+//! * [`manifest`] — parse the AOT shape manifest,
+//! * [`params`] — flat f32 parameter (and Adam moment) vectors on disk,
+//! * [`features`] — build the fixed-shape feature tensors of Table 1
+//!   from (group graph, topology, partial strategy, simulator feedback),
+//! * [`service`] — compiled-executable wrapper: batched prior inference
+//!   and the Adam train step, plus the [`mcts::PriorProvider`]
+//!   implementation backed by it.
+//!
+//! [`mcts::PriorProvider`]: crate::mcts::PriorProvider
+
+pub mod features;
+pub mod manifest;
+pub mod params;
+pub mod service;
+
+pub use features::{FeatureBuilder, Position};
+pub use manifest::Manifest;
+pub use service::{GnnPrior, GnnService};

@@ -1,0 +1,53 @@
+//! Flat f32 parameter vectors on disk (little-endian, the layout
+//! `python/compile/model.py::param_spec` defines).  The Rust side never
+//! needs the structure — one params vector, two Adam moment vectors.
+
+use anyhow::{Context, Result};
+
+pub fn load_params(path: impl AsRef<std::path::Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("read params {:?}", path.as_ref()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "params file not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn save_params(path: impl AsRef<std::path::Path>, params: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(path.as_ref(), bytes)
+        .with_context(|| format!("write params {:?}", path.as_ref()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("tag_params_test.bin");
+        let data = vec![0.0f32, -1.5, 3.25, f32::MAX, f32::MIN_POSITIVE];
+        save_params(&dir, &data).unwrap();
+        let back = load_params(&dir).unwrap();
+        assert_eq!(back, data);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn init_params_match_manifest_count() {
+        let Ok(params) = load_params("artifacts/params_init.bin") else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = crate::gnn::Manifest::load("artifacts/manifest.txt").unwrap();
+        assert_eq!(params.len() as i64, m.constant("PARAM_COUNT"));
+        assert!(params.iter().all(|p| p.is_finite()));
+        // Glorot init: nonzero spread.
+        let nonzero = params.iter().filter(|&&p| p != 0.0).count();
+        assert!(nonzero > params.len() / 2);
+    }
+}

@@ -1,0 +1,300 @@
+//! Compiled-GNN service: batched prior inference + the Adam train step,
+//! and the [`PriorProvider`] bridge that plugs the GNN into MCTS.
+//!
+//! Everything here talks to the two AOT artifacts
+//! (`gnn_infer.hlo.txt`, `gnn_train.hlo.txt`) through PJRT — Python is
+//! never involved at this point.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::features::{Position, B_INFER, B_TRAIN, N_CAND};
+use super::manifest::Manifest;
+use crate::dist::SimOutcome;
+use crate::mcts::PriorProvider;
+use crate::runtime::{literal_f32, scalar_f32, to_vec_f32, Executable, Runtime};
+use crate::strategy::{Action, Strategy};
+
+pub struct GnnService {
+    pub manifest: Manifest,
+    runtime: Runtime,
+    infer: Executable,
+    train: Executable,
+    pub param_count: usize,
+}
+
+impl GnnService {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let runtime = Runtime::cpu()?;
+        let infer = runtime
+            .load_hlo_text(dir.join("gnn_infer.hlo.txt"))
+            .context("load infer artifact")?;
+        let train = runtime
+            .load_hlo_text(dir.join("gnn_train.hlo.txt"))
+            .context("load train artifact")?;
+        let param_count = manifest.constant("PARAM_COUNT") as usize;
+        Ok(Self { manifest, runtime, infer, train, param_count })
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Stack up to B positions into the batched feature literals.
+    fn batch_literals(
+        &self,
+        positions: &[&Position],
+        batch: usize,
+        dims_of: &[super::manifest::InputSpec],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(positions.len() <= batch, "batch overflow");
+        let mut out = Vec::with_capacity(dims_of.len());
+        for spec in dims_of {
+            let per: i64 = spec.dims[1..].iter().product();
+            let mut flat = vec![0.0f32; (batch as i64 * per) as usize];
+            for (bi, pos) in positions.iter().enumerate() {
+                let arrays = pos.arrays();
+                let idx = super::features::FEATURE_ORDER
+                    .iter()
+                    .position(|&n| n == spec.name)
+                    .with_context(|| format!("unknown feature {}", spec.name))?;
+                let src = arrays[idx];
+                anyhow::ensure!(
+                    src.len() == per as usize,
+                    "feature {} length {} != {}",
+                    spec.name,
+                    src.len(),
+                    per
+                );
+                flat[bi * per as usize..(bi + 1) * per as usize].copy_from_slice(src);
+            }
+            out.push(literal_f32(&flat, &spec.dims)?);
+        }
+        Ok(out)
+    }
+
+    /// Prior probabilities for up to B_INFER positions; returns one
+    /// N_CAND-length normalized vector per input position.
+    pub fn infer_batch(
+        &self,
+        params: &[f32],
+        positions: &[&Position],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(params.len() == self.param_count, "param count mismatch");
+        let specs = self.manifest.inputs_for("infer");
+        let mut inputs =
+            vec![literal_f32(params, &[self.param_count as i64])?];
+        inputs.extend(self.batch_literals(positions, B_INFER, &specs[1..])?);
+        let out = self.infer.run(&inputs)?;
+        let flat = to_vec_f32(&out[0])?;
+        anyhow::ensure!(flat.len() == B_INFER * N_CAND);
+        Ok(positions
+            .iter()
+            .enumerate()
+            .map(|(bi, _)| flat[bi * N_CAND..(bi + 1) * N_CAND].to_vec())
+            .collect())
+    }
+
+    /// One Adam step over up to B_TRAIN examples.
+    /// Returns (new params, new m, new v, loss).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        positions: &[&Position],
+        target_pi: &[Vec<f32>],
+        example_mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        anyhow::ensure!(positions.len() == target_pi.len());
+        anyhow::ensure!(positions.len() <= B_TRAIN);
+        let specs = self.manifest.inputs_for("train");
+        let pc = self.param_count as i64;
+        let mut inputs = vec![
+            literal_f32(params, &[pc])?,
+            literal_f32(m, &[pc])?,
+            literal_f32(v, &[pc])?,
+            scalar_f32(step),
+        ];
+        inputs.extend(self.batch_literals(positions, B_TRAIN, &specs[4..specs.len() - 2])?);
+        // target_pi (B_TRAIN, N_CAND)
+        let mut pi_flat = vec![0.0f32; B_TRAIN * N_CAND];
+        for (bi, pi) in target_pi.iter().enumerate() {
+            anyhow::ensure!(pi.len() == N_CAND || pi.len() <= N_CAND);
+            pi_flat[bi * N_CAND..bi * N_CAND + pi.len()].copy_from_slice(pi);
+        }
+        inputs.push(literal_f32(&pi_flat, &[B_TRAIN as i64, N_CAND as i64])?);
+        // example mask
+        let mut mask = vec![0.0f32; B_TRAIN];
+        mask[..example_mask.len()].copy_from_slice(example_mask);
+        inputs.push(literal_f32(&mask, &[B_TRAIN as i64])?);
+
+        let out = self.train.run(&inputs)?;
+        anyhow::ensure!(out.len() == 4, "train step must return 4 outputs");
+        let new_p = to_vec_f32(&out[0])?;
+        let new_m = to_vec_f32(&out[1])?;
+        let new_v = to_vec_f32(&out[2])?;
+        let loss = to_vec_f32(&out[3])?[0];
+        Ok((new_p, new_m, new_v, loss))
+    }
+}
+
+/// [`PriorProvider`] backed by the compiled GNN, with a per-search cache
+/// keyed on (decided slots, next group).
+pub struct GnnPrior<'a> {
+    pub svc: &'a GnnService,
+    pub builder: super::features::FeatureBuilder<'a>,
+    pub params: Vec<f32>,
+    cache: HashMap<(Vec<u32>, usize), Vec<f32>>,
+    pub evals: usize,
+}
+
+impl<'a> GnnPrior<'a> {
+    pub fn new(
+        svc: &'a GnnService,
+        builder: super::features::FeatureBuilder<'a>,
+        params: Vec<f32>,
+    ) -> Self {
+        Self { svc, builder, params, cache: HashMap::new(), evals: 0 }
+    }
+
+    fn key(strategy: &Strategy, group: usize) -> (Vec<u32>, usize) {
+        let slots: Vec<u32> = strategy
+            .slots
+            .iter()
+            .map(|s| match s {
+                None => u32::MAX,
+                Some(a) => (a.mask as u32) << 2 | a.option.index() as u32,
+            })
+            .collect();
+        (slots, group)
+    }
+}
+
+impl PriorProvider for GnnPrior<'_> {
+    fn priors(
+        &mut self,
+        state: &Strategy,
+        group: usize,
+        outcome: &SimOutcome,
+        actions: &[Action],
+    ) -> Vec<f32> {
+        let key = Self::key(state, group);
+        if let Some(hit) = self.cache.get(&key) {
+            return hit[..actions.len()].to_vec();
+        }
+        let pos = self.builder.build(state, outcome, group);
+        self.evals += 1;
+        match self.svc.infer_batch(&self.params, &[&pos]) {
+            Ok(pr) => {
+                let mut full = pr.into_iter().next().unwrap();
+                // Smooth with a uniform component (AlphaZero-style): a
+                // confidently-wrong prior must not be able to starve the
+                // PUCT exploration term on out-of-distribution inputs.
+                let eps = 0.25f32;
+                let u = 1.0 / actions.len() as f32;
+                for p in full.iter_mut().take(actions.len()) {
+                    *p = (1.0 - eps) * *p + eps * u;
+                }
+                let out = full[..actions.len()].to_vec();
+                self.cache.insert(key, full);
+                out
+            }
+            Err(e) => {
+                // Degrade to uniform rather than aborting a search.
+                eprintln!("GNN inference failed ({e}); falling back to uniform");
+                vec![1.0 / actions.len() as f32; actions.len()]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::testbed;
+    use crate::dist::Lowering;
+    use crate::gnn::features::FeatureBuilder;
+    use crate::graph::grouping::group_ops;
+    use crate::models;
+    use crate::profile::{unique_gpus, CommModel, CostModel};
+    use crate::strategy::enumerate_actions;
+
+    fn service() -> Option<GnnService> {
+        if !std::path::Path::new("artifacts/gnn_infer.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(GnnService::load("artifacts").unwrap())
+    }
+
+    #[test]
+    fn infer_produces_masked_distributions() {
+        let Some(svc) = service() else { return };
+        let topo = testbed();
+        let m = models::vgg19(8, 0.25);
+        let cost = CostModel::profile(&m.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&m, &cost, 12, 7);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let actions = enumerate_actions(&topo);
+        let fb = FeatureBuilder::new(&gg, &topo, &actions);
+        let s = Strategy::empty(gg.num_groups());
+        let out = low.evaluate(&s);
+        let pos = fb.build(&s, &out, low.order[0]);
+
+        let params =
+            crate::gnn::params::load_params("artifacts/params_init.bin").unwrap();
+        let priors = svc.infer_batch(&params, &[&pos]).unwrap();
+        assert_eq!(priors.len(), 1);
+        let p = &priors[0];
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
+        // Masked candidates ~ zero probability.
+        for ci in actions.len()..N_CAND {
+            assert!(p[ci] < 1e-6);
+        }
+        // Batched inference matches itself across slots.
+        let priors2 = svc.infer_batch(&params, &[&pos, &pos]).unwrap();
+        for (a, b) in priors2[0].iter().zip(&priors2[1]) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn train_step_runs_and_changes_params() {
+        let Some(svc) = service() else { return };
+        let topo = testbed();
+        let m = models::vgg19(8, 0.25);
+        let cost = CostModel::profile(&m.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&m, &cost, 12, 7);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let actions = enumerate_actions(&topo);
+        let fb = FeatureBuilder::new(&gg, &topo, &actions);
+        let s = Strategy::empty(gg.num_groups());
+        let out = low.evaluate(&s);
+        let pos = fb.build(&s, &out, low.order[0]);
+
+        let params =
+            crate::gnn::params::load_params("artifacts/params_init.bin").unwrap();
+        let zeros = vec![0.0f32; params.len()];
+        let mut pi = vec![0.0f32; N_CAND];
+        pi[0] = 0.7;
+        pi[1] = 0.3;
+        let (p2, m2, v2, loss) = svc
+            .train_step(&params, &zeros, &zeros, 0.0, &[&pos], &[pi], &[1.0])
+            .unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(p2.len(), params.len());
+        assert!(p2.iter().zip(&params).any(|(a, b)| a != b));
+        assert!(m2.iter().any(|&x| x != 0.0));
+        assert!(v2.iter().any(|&x| x != 0.0));
+    }
+}

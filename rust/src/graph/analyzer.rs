@@ -1,0 +1,252 @@
+//! Graph analyzer (paper §4.1.1): simplification and splittability checks.
+//!
+//! * **Simplify** — remove `Identity` / `NoOp` nodes (rewiring their
+//!   consumers to their producer) and *dangling* ops that are not
+//!   ancestors of any optimizer (`Apply`) op.
+//! * **Annotate** — ops carry their [`Splittability`] from the model zoo;
+//!   the analyzer validates the annotation invariants that the compiler
+//!   relies on (gradients are `Sum`, applies are `NoSplit`).
+
+use super::ir::{CompGraph, Op, OpId, OpKind, Splittability};
+
+/// Result of analysis, mapping old op ids to new ones.
+pub struct Analysis {
+    pub graph: CompGraph,
+    /// old id -> new id (None if the op was removed).
+    pub remap: Vec<Option<OpId>>,
+    pub removed_identity: usize,
+    pub removed_dangling: usize,
+}
+
+/// Simplify the graph per §4.1.1.
+pub fn simplify(g: &CompGraph) -> Analysis {
+    let n = g.len();
+
+    // 1. Resolve identity chains: follow through Identity/NoOp producers.
+    let mut through: Vec<OpId> = (0..n).collect();
+    for i in 0..n {
+        if matches!(g.ops[i].kind, OpKind::Identity | OpKind::NoOp) {
+            // An identity forwards its (single) input; a NoOp with no
+            // inputs resolves to itself and is later dropped as dangling.
+            if let Some(&src) = g.ops[i].inputs.first() {
+                through[i] = through[src];
+            }
+        }
+    }
+
+    // 2. Mark ops reachable (as ancestors) from any Apply op, walking
+    //    through resolved inputs.  If the graph has no Apply ops at all
+    //    (inference graphs), keep ancestors of terminal ops instead.
+    let roots: Vec<OpId> = {
+        let apply: Vec<OpId> =
+            (0..n).filter(|&i| g.ops[i].is_apply()).collect();
+        if apply.is_empty() {
+            let cons = g.consumers();
+            (0..n)
+                .filter(|&i| {
+                    cons[i].is_empty()
+                        && !matches!(g.ops[i].kind, OpKind::Identity | OpKind::NoOp)
+                })
+                .collect()
+        } else {
+            apply
+        }
+    };
+    let mut live = vec![false; n];
+    let mut stack: Vec<OpId> = roots;
+    while let Some(i) = stack.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        for &j in &g.ops[i].inputs {
+            let r = through[j];
+            if !live[r] {
+                stack.push(r);
+            }
+            // Keep walking the chain's own inputs resolved.
+        }
+    }
+
+    // 3. Emit the simplified graph.
+    let mut out = CompGraph::new(g.name.clone(), g.batch_size);
+    let mut remap: Vec<Option<OpId>> = vec![None; n];
+    let mut removed_identity = 0;
+    let mut removed_dangling = 0;
+    for i in 0..n {
+        if matches!(g.ops[i].kind, OpKind::Identity | OpKind::NoOp) {
+            removed_identity += 1;
+            continue;
+        }
+        if !live[i] {
+            removed_dangling += 1;
+            continue;
+        }
+        let op = &g.ops[i];
+        let new_inputs: Vec<OpId> = op
+            .inputs
+            .iter()
+            .map(|&j| remap[through[j]].expect("topological order violated"))
+            .collect();
+        let new_kind = match op.kind {
+            OpKind::Grad { wrt } => OpKind::Grad {
+                wrt: remap[through[wrt]].expect("grad target removed"),
+            },
+            OpKind::Apply { var } => OpKind::Apply {
+                var: remap[through[var]].expect("apply target removed"),
+            },
+            k => k,
+        };
+        let id = out.add(Op { kind: new_kind, inputs: new_inputs, ..op.clone() });
+        remap[i] = Some(id);
+    }
+
+    Analysis { graph: out, remap, removed_identity, removed_dangling }
+}
+
+/// Validate splittability invariants the compiler depends on.
+/// Returns a list of violations (empty = OK).
+pub fn check_annotations(g: &CompGraph) -> Vec<String> {
+    let mut errs = Vec::new();
+    for (i, op) in g.ops.iter().enumerate() {
+        match op.kind {
+            OpKind::Grad { .. } => {
+                if op.splittability != Splittability::Sum {
+                    errs.push(format!(
+                        "op {i} ({}): gradient producers must be Sum-splittable",
+                        op.name
+                    ));
+                }
+            }
+            OpKind::Apply { .. } => {
+                if op.splittability != Splittability::NoSplit {
+                    errs.push(format!(
+                        "op {i} ({}): ApplyGradient must be NoSplit",
+                        op.name
+                    ));
+                }
+            }
+            OpKind::Variable => {
+                if op.param_bytes <= 0.0 {
+                    errs.push(format!(
+                        "op {i} ({}): Variable with no parameter bytes",
+                        op.name
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::OpBuilder;
+
+    /// x -> id -> mm(w) -> gw -> apply ; plus a dangling branch.
+    fn graph_with_noise() -> CompGraph {
+        let mut g = CompGraph::new("noise", 4);
+        let x = g.add(OpBuilder::new("x", "Placeholder").kind(OpKind::Placeholder).build());
+        let id = g.add(
+            OpBuilder::new("id", "Identity").kind(OpKind::Identity).inputs(&[x]).build(),
+        );
+        let w = g.add(
+            OpBuilder::new("w", "Variable").kind(OpKind::Variable).param_bytes(64.0).build(),
+        );
+        let mm = g.add(
+            OpBuilder::new("mm", "MatMul").flops(100.0).out_bytes(32.0).inputs(&[id, w]).build(),
+        );
+        let gw = g.add(
+            OpBuilder::new("gw", "MatMul")
+                .kind(OpKind::Grad { wrt: w })
+                .split(Splittability::Sum)
+                .inputs(&[mm, x])
+                .build(),
+        );
+        g.add(
+            OpBuilder::new("ap", "ApplyGradient")
+                .kind(OpKind::Apply { var: w })
+                .split(Splittability::NoSplit)
+                .inputs(&[gw, w])
+                .build(),
+        );
+        // dangling: a summary op nobody applies
+        let s = g.add(OpBuilder::new("summary", "Cast").inputs(&[mm]).build());
+        g.add(OpBuilder::new("print", "Print").kind(OpKind::NoOp).inputs(&[s]).build());
+        g
+    }
+
+    #[test]
+    fn simplify_removes_identity_and_dangling() {
+        let g = graph_with_noise();
+        let a = simplify(&g);
+        assert_eq!(a.removed_identity, 2); // id + print(NoOp)
+        assert_eq!(a.removed_dangling, 1); // summary
+        assert_eq!(a.graph.len(), 5);
+        assert!(a.graph.check_acyclic());
+        // mm's first input must now be x directly.
+        let mm = a.remap[3].unwrap();
+        let x = a.remap[0].unwrap();
+        assert_eq!(a.graph.ops[mm].inputs[0], x);
+    }
+
+    #[test]
+    fn simplify_preserves_grad_apply_links() {
+        let g = graph_with_noise();
+        let a = simplify(&g);
+        let pairs = a.graph.grad_apply_pairs();
+        assert_eq!(pairs.len(), 1);
+        let (gw, ap) = pairs[0];
+        assert!(a.graph.ops[gw].is_grad());
+        assert!(a.graph.ops[ap].is_apply());
+    }
+
+    #[test]
+    fn simplify_inference_graph_keeps_terminals() {
+        let mut g = CompGraph::new("inf", 1);
+        let x = g.add(OpBuilder::new("x", "Placeholder").kind(OpKind::Placeholder).build());
+        let y = g.add(OpBuilder::new("relu", "Relu").inputs(&[x]).build());
+        g.add(OpBuilder::new("out", "Softmax").inputs(&[y]).build());
+        let a = simplify(&g);
+        assert_eq!(a.graph.len(), 3);
+    }
+
+    #[test]
+    fn idempotent() {
+        let g = graph_with_noise();
+        let once = simplify(&g);
+        let twice = simplify(&once.graph);
+        assert_eq!(once.graph.len(), twice.graph.len());
+        assert_eq!(twice.removed_identity, 0);
+        assert_eq!(twice.removed_dangling, 0);
+    }
+
+    #[test]
+    fn annotations_checked() {
+        let mut g = CompGraph::new("bad", 1);
+        let w = g.add(
+            OpBuilder::new("w", "Variable").kind(OpKind::Variable).param_bytes(4.0).build(),
+        );
+        g.add(
+            OpBuilder::new("gw", "MatMul")
+                .kind(OpKind::Grad { wrt: w })
+                .split(Splittability::Concat) // wrong!
+                .inputs(&[w])
+                .build(),
+        );
+        let errs = check_annotations(&g);
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].contains("Sum-splittable"));
+    }
+
+    #[test]
+    fn model_zoo_graphs_are_clean() {
+        for g in crate::models::all_models_small() {
+            let a = simplify(&g);
+            assert!(check_annotations(&a.graph).is_empty(), "{}", g.name);
+            assert!(a.graph.check_acyclic(), "{}", g.name);
+        }
+    }
+}

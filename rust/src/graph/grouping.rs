@@ -1,0 +1,248 @@
+//! Op grouping (paper §4.1.1 "Grouping ops"): partition the computation
+//! graph into at most [`DEFAULT_GROUPS`] op groups using the multilevel
+//! partitioner with tensor sizes as edge weights and computation time as
+//! node balancing weights (balance factor 2), then build the group-level
+//! graph that the strategy creator and the fast simulator consume.
+
+use std::collections::HashMap;
+
+use crate::graph::ir::{CompGraph, OpId, OpKind};
+use crate::partition::{partition, PartGraph};
+use crate::profile::CostModel;
+
+/// The paper's default partition count ("we find that 60 groups achieve a
+/// good trade-off").
+pub const DEFAULT_GROUPS: usize = 60;
+/// The paper's METIS balance factor.
+pub const BALANCE_FACTOR: f64 = 2.0;
+
+/// One op group (a node of the graph handed to the strategy creator).
+#[derive(Clone, Debug)]
+pub struct OpGroup {
+    pub ops: Vec<OpId>,
+    /// Full-batch computation time, averaged over profiled GPU types (s).
+    pub comp_time: f64,
+    /// Trainable parameter bytes held by this group.
+    pub param_bytes: f64,
+    /// Peak bytes of live activations produced inside the group
+    /// (coarse per-group memory estimate).
+    pub activation_bytes: f64,
+    /// (grad op, apply op) pairs whose grad producer lives here —
+    /// the synchronization points if this group is replicated.
+    pub grad_pairs: Vec<(OpId, OpId)>,
+    /// Sum of gradient tensor bytes of those pairs.
+    pub grad_bytes: f64,
+}
+
+/// Group-level view of a computation graph.
+#[derive(Clone, Debug)]
+pub struct GroupGraph {
+    pub groups: Vec<OpGroup>,
+    /// Directed tensor volume between groups, bytes: `edges[i][j]`
+    /// (normalized forward: i < j in schedule order, see below).
+    pub edges: Vec<Vec<f64>>,
+    /// op -> group.
+    pub assignment: Vec<usize>,
+    /// Groups are index-ordered by schedule position (average topological
+    /// index of member ops), so `edges[i][j]` with `i < j` is forward.
+    pub model_name: String,
+    pub batch_size: usize,
+}
+
+impl GroupGraph {
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Total forward tensor volume crossing group boundaries.
+    pub fn total_cut_bytes(&self) -> f64 {
+        self.edges.iter().flatten().sum()
+    }
+
+    /// Group indices ordered by descending computation time — the order
+    /// in which MCTS decides strategies (§4.2.2).
+    pub fn by_comp_time_desc(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.groups.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.groups[b]
+                .comp_time
+                .partial_cmp(&self.groups[a].comp_time)
+                .unwrap()
+        });
+        idx
+    }
+}
+
+/// Build the group graph: partition, then aggregate.
+pub fn group_ops(
+    g: &CompGraph,
+    cost: &CostModel,
+    max_groups: usize,
+    seed: u64,
+) -> GroupGraph {
+    let n = g.len();
+    let k = max_groups.min(n).max(1);
+
+    // Partitioning graph: node weight = avg comp time (+ epsilon so
+    // zero-cost ops still balance), edge weight = tensor bytes.
+    let mut pg = PartGraph::new(n);
+    for i in 0..n {
+        pg.node_w[i] = cost.op_time_avg(i) + 1e-9;
+    }
+    for (i, op) in g.ops.iter().enumerate() {
+        for &j in &op.inputs {
+            pg.add_edge(j, i, g.ops[j].output_bytes.max(1.0));
+        }
+    }
+    let raw_labels = partition(&pg, k, BALANCE_FACTOR, seed);
+
+    // Order groups by average topological index so the group index order
+    // is a valid schedule order (used to normalize edge directions).
+    let mut topo_sum = vec![0.0f64; k];
+    let mut count = vec![0usize; k];
+    for (i, &l) in raw_labels.iter().enumerate() {
+        topo_sum[l] += i as f64;
+        count[l] += 1;
+    }
+    let mut order: Vec<usize> = (0..k).filter(|&l| count[l] > 0).collect();
+    order.sort_by(|&a, &b| {
+        (topo_sum[a] / count[a] as f64)
+            .partial_cmp(&(topo_sum[b] / count[b] as f64))
+            .unwrap()
+    });
+    let mut relabel = vec![usize::MAX; k];
+    for (new, &old) in order.iter().enumerate() {
+        relabel[old] = new;
+    }
+    let kk = order.len();
+    let assignment: Vec<usize> = raw_labels.iter().map(|&l| relabel[l]).collect();
+
+    // Aggregate group stats.
+    let mut groups: Vec<OpGroup> = (0..kk)
+        .map(|_| OpGroup {
+            ops: Vec::new(),
+            comp_time: 0.0,
+            param_bytes: 0.0,
+            activation_bytes: 0.0,
+            grad_pairs: Vec::new(),
+            grad_bytes: 0.0,
+        })
+        .collect();
+    for (i, op) in g.ops.iter().enumerate() {
+        let gi = assignment[i];
+        groups[gi].ops.push(i);
+        groups[gi].comp_time += cost.op_time_avg(i);
+        groups[gi].param_bytes += op.param_bytes;
+        if !matches!(op.kind, OpKind::Variable) {
+            groups[gi].activation_bytes += op.output_bytes;
+        }
+    }
+    let grad_pairs = g.grad_apply_pairs();
+    let mut grad_of_group: HashMap<usize, Vec<(OpId, OpId)>> = HashMap::new();
+    for (grad, apply) in grad_pairs {
+        grad_of_group.entry(assignment[grad]).or_default().push((grad, apply));
+    }
+    for (gi, pairs) in grad_of_group {
+        groups[gi].grad_bytes =
+            pairs.iter().map(|&(gr, _)| g.ops[gr].output_bytes).sum();
+        groups[gi].grad_pairs = pairs;
+    }
+
+    // Inter-group tensor volume, normalized to forward direction.
+    let mut edges = vec![vec![0.0f64; kk]; kk];
+    for (i, op) in g.ops.iter().enumerate() {
+        let gi = assignment[i];
+        for &j in &op.inputs {
+            let gj = assignment[j];
+            if gi != gj {
+                let (a, b) = if gj < gi { (gj, gi) } else { (gi, gj) };
+                edges[a][b] += g.ops[j].output_bytes;
+            }
+        }
+    }
+
+    GroupGraph {
+        groups,
+        edges,
+        assignment,
+        model_name: g.name.clone(),
+        batch_size: g.batch_size,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GTX1080TI, V100_16G};
+    use crate::models;
+
+    fn grouped(model: crate::graph::CompGraph, k: usize) -> GroupGraph {
+        let cost = CostModel::profile(&model.ops, &[V100_16G, GTX1080TI], 0.0, 1);
+        group_ops(&model, &cost, k, 42)
+    }
+
+    #[test]
+    fn respects_group_limit_and_covers_all_ops() {
+        let m = models::vgg19(8, 0.25);
+        let n = m.len();
+        let gg = grouped(m, DEFAULT_GROUPS);
+        assert!(gg.num_groups() <= DEFAULT_GROUPS);
+        assert_eq!(gg.assignment.len(), n);
+        let total_ops: usize = gg.groups.iter().map(|g| g.ops.len()).sum();
+        assert_eq!(total_ops, n);
+    }
+
+    #[test]
+    fn group_stats_conserve_totals() {
+        let m = models::bert(4, false, 0.25);
+        let total_params = m.total_param_bytes();
+        let gg = grouped(m, 30);
+        let sum: f64 = gg.groups.iter().map(|g| g.param_bytes).sum();
+        assert!((sum - total_params).abs() < 1.0);
+        assert!(gg.groups.iter().all(|g| !g.ops.is_empty()));
+    }
+
+    #[test]
+    fn grad_pairs_assigned_to_producing_group() {
+        let m = models::vgg19(8, 0.25);
+        let pairs = m.grad_apply_pairs().len();
+        let gg = grouped(m, 40);
+        let sum: usize = gg.groups.iter().map(|g| g.grad_pairs.len()).sum();
+        assert_eq!(sum, pairs);
+        let grad_bytes: f64 = gg.groups.iter().map(|g| g.grad_bytes).sum();
+        assert!(grad_bytes > 0.0);
+    }
+
+    #[test]
+    fn edges_are_upper_triangular() {
+        let m = models::resnet101(8, 0.25);
+        let gg = grouped(m, 24);
+        for i in 0..gg.num_groups() {
+            for j in 0..=i {
+                assert_eq!(gg.edges[i][j], 0.0, "edge {i}->{j} not normalized");
+            }
+        }
+        assert!(gg.total_cut_bytes() > 0.0);
+    }
+
+    #[test]
+    fn comp_time_order_is_descending() {
+        let m = models::inception_v3(8, 0.25);
+        let gg = grouped(m, 20);
+        let order = gg.by_comp_time_desc();
+        for w in order.windows(2) {
+            assert!(gg.groups[w[0]].comp_time >= gg.groups[w[1]].comp_time);
+        }
+    }
+
+    #[test]
+    fn fewer_groups_than_requested_when_graph_tiny() {
+        let mut g = CompGraph::new("tiny", 1);
+        use crate::graph::ir::OpBuilder;
+        let a = g.add(OpBuilder::new("a", "Placeholder").build());
+        g.add(OpBuilder::new("b", "Relu").flops(10.0).inputs(&[a]).build());
+        let cost = CostModel::profile(&g.ops, &[V100_16G], 0.0, 1);
+        let gg = group_ops(&g, &cost, 60, 1);
+        assert!(gg.num_groups() <= 2);
+    }
+}

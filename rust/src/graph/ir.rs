@@ -1,0 +1,288 @@
+//! Internal representation of a DNN computation graph.
+//!
+//! Mirrors the paper's graph analyzer contract (§4.1.1): each node is an
+//! op annotated with its compute cost, the size of the tensor it produces,
+//! any parameter storage it owns, and its *splittability* category, which
+//! the compiler later uses to insert Split / Concat / AddN ops while
+//! preserving mathematical equivalence.
+
+use std::collections::HashMap;
+
+pub type OpId = usize;
+
+/// How an op behaves when its input tensors are split in the batch
+/// dimension (paper §4.1.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Splittability {
+    /// Output of a split invocation can be concatenated in the batch dim
+    /// to recover the full tensor (element-wise ops, batched Conv2D, ...).
+    Concat,
+    /// Outputs of split invocations must be summed element-wise
+    /// (gradient producers, e.g. `Conv2DBackpropFilter`).
+    Sum,
+    /// Cannot accept split inputs; inputs must be aggregated first
+    /// (`ApplyGradient` and friends).
+    NoSplit,
+}
+
+/// Structural role of an op. `Grad { wrt }` marks gradient producers,
+/// which is what the SFB optimizer and the synchronization-insertion
+/// logic key on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Training-data input.
+    Placeholder,
+    /// Trainable parameter storage (its `param_bytes` is the tensor size).
+    Variable,
+    /// Ordinary forward/backward compute.
+    Compute,
+    /// Produces the gradient of variable `wrt`.
+    Grad { wrt: OpId },
+    /// Applies the gradient of variable `var` (consumes grad + variable).
+    Apply { var: OpId },
+    /// Frontend no-ops removed by the analyzer.
+    Identity,
+    NoOp,
+}
+
+/// One node of the computation graph.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub name: String,
+    /// Frontend op type (`"Conv2D"`, `"MatMul"`, ...) — used for the SFB
+    /// duplication census (Table 6) and debugging; the strategy machinery
+    /// itself never keys on it (the paper stresses TAG is op-agnostic).
+    pub op_type: &'static str,
+    pub kind: OpKind,
+    /// Forward-pass floating point operations for a *full batch*.
+    pub flops: f64,
+    /// Size of the produced output tensor in bytes (full batch).
+    pub output_bytes: f64,
+    /// Parameter bytes owned (only for `Variable` ops).
+    pub param_bytes: f64,
+    pub splittability: Splittability,
+    /// Producers of this op's inputs.
+    pub inputs: Vec<OpId>,
+}
+
+impl Op {
+    pub fn is_param(&self) -> bool {
+        matches!(self.kind, OpKind::Variable)
+    }
+    pub fn is_grad(&self) -> bool {
+        matches!(self.kind, OpKind::Grad { .. })
+    }
+    pub fn is_apply(&self) -> bool {
+        matches!(self.kind, OpKind::Apply { .. })
+    }
+}
+
+/// A DNN computation graph (forward + backward + optimizer ops).
+#[derive(Clone, Debug, Default)]
+pub struct CompGraph {
+    pub name: String,
+    /// Global (full) batch size the graph was built for.
+    pub batch_size: usize,
+    pub ops: Vec<Op>,
+}
+
+impl CompGraph {
+    pub fn new(name: impl Into<String>, batch_size: usize) -> Self {
+        Self { name: name.into(), batch_size, ops: Vec::new() }
+    }
+
+    /// Append an op; inputs must already exist (enforces DAG by
+    /// construction).
+    pub fn add(&mut self, op: Op) -> OpId {
+        for &i in &op.inputs {
+            assert!(i < self.ops.len(), "input {i} of {} not yet defined", op.name);
+        }
+        self.ops.push(op);
+        self.ops.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Consumers of each op (inverse adjacency).
+    pub fn consumers(&self) -> Vec<Vec<OpId>> {
+        let mut out = vec![Vec::new(); self.ops.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            for &j in &op.inputs {
+                out[j].push(i);
+            }
+        }
+        out
+    }
+
+    /// Total parameter bytes in the model.
+    pub fn total_param_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.param_bytes).sum()
+    }
+
+    /// Total forward+backward flops for a full batch.
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    /// Ids in a topological order (inputs before consumers).
+    /// `add` enforces this by construction, so it's just the identity,
+    /// but callers should not rely on that detail.
+    pub fn topo_order(&self) -> Vec<OpId> {
+        (0..self.ops.len()).collect()
+    }
+
+    /// Verify the DAG invariant (inputs precede consumers) — used by
+    /// property tests.
+    pub fn check_acyclic(&self) -> bool {
+        self.ops.iter().enumerate().all(|(i, op)| op.inputs.iter().all(|&j| j < i))
+    }
+
+    /// All (gradient-producer, apply-op) pairs: the sites where parameter
+    /// synchronization happens, and the inputs to the SFB optimizer.
+    pub fn grad_apply_pairs(&self) -> Vec<(OpId, OpId)> {
+        let mut grad_of: HashMap<OpId, OpId> = HashMap::new(); // var -> grad op
+        for (i, op) in self.ops.iter().enumerate() {
+            if let OpKind::Grad { wrt } = op.kind {
+                grad_of.insert(wrt, i);
+            }
+        }
+        let mut pairs = Vec::new();
+        for (i, op) in self.ops.iter().enumerate() {
+            if let OpKind::Apply { var } = op.kind {
+                if let Some(&g) = grad_of.get(&var) {
+                    pairs.push((g, i));
+                }
+            }
+        }
+        pairs
+    }
+}
+
+/// Convenience builder used by the model zoo and tests.
+pub struct OpBuilder {
+    op: Op,
+}
+
+impl OpBuilder {
+    pub fn new(name: impl Into<String>, op_type: &'static str) -> Self {
+        Self {
+            op: Op {
+                name: name.into(),
+                op_type,
+                kind: OpKind::Compute,
+                flops: 0.0,
+                output_bytes: 0.0,
+                param_bytes: 0.0,
+                splittability: Splittability::Concat,
+                inputs: Vec::new(),
+            },
+        }
+    }
+    pub fn kind(mut self, k: OpKind) -> Self {
+        self.op.kind = k;
+        self
+    }
+    pub fn flops(mut self, f: f64) -> Self {
+        self.op.flops = f;
+        self
+    }
+    pub fn out_bytes(mut self, b: f64) -> Self {
+        self.op.output_bytes = b;
+        self
+    }
+    pub fn param_bytes(mut self, b: f64) -> Self {
+        self.op.param_bytes = b;
+        self
+    }
+    pub fn split(mut self, s: Splittability) -> Self {
+        self.op.splittability = s;
+        self
+    }
+    pub fn inputs(mut self, ins: &[OpId]) -> Self {
+        self.op.inputs = ins.to_vec();
+        self
+    }
+    pub fn build(self) -> Op {
+        self.op
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> CompGraph {
+        let mut g = CompGraph::new("tiny", 8);
+        let x = g.add(OpBuilder::new("x", "Placeholder").kind(OpKind::Placeholder).build());
+        let w = g.add(
+            OpBuilder::new("w", "Variable")
+                .kind(OpKind::Variable)
+                .param_bytes(1024.0)
+                .build(),
+        );
+        let mm = g.add(
+            OpBuilder::new("mm", "MatMul")
+                .flops(1e6)
+                .out_bytes(4096.0)
+                .inputs(&[x, w])
+                .build(),
+        );
+        let gw = g.add(
+            OpBuilder::new("gw", "MatMul")
+                .kind(OpKind::Grad { wrt: w })
+                .flops(1e6)
+                .out_bytes(1024.0)
+                .split(Splittability::Sum)
+                .inputs(&[mm, x])
+                .build(),
+        );
+        g.add(
+            OpBuilder::new("apply_w", "ApplyGradient")
+                .kind(OpKind::Apply { var: w })
+                .split(Splittability::NoSplit)
+                .inputs(&[gw, w])
+                .build(),
+        );
+        g
+    }
+
+    #[test]
+    fn build_and_invariants() {
+        let g = tiny_graph();
+        assert_eq!(g.len(), 5);
+        assert!(g.check_acyclic());
+        assert_eq!(g.total_param_bytes(), 1024.0);
+        assert_eq!(g.total_flops(), 2e6);
+    }
+
+    #[test]
+    fn consumers_inverse_adjacency() {
+        let g = tiny_graph();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![2, 3]); // x feeds mm and gw
+        assert_eq!(cons[1], vec![2, 4]); // w feeds mm and apply
+        assert_eq!(cons[2], vec![3]);
+        assert_eq!(cons[3], vec![4]);
+        assert!(cons[4].is_empty());
+    }
+
+    #[test]
+    fn grad_apply_pairs_found() {
+        let g = tiny_graph();
+        let pairs = g.grad_apply_pairs();
+        assert_eq!(pairs, vec![(3, 4)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet defined")]
+    fn forward_reference_panics() {
+        let mut g = CompGraph::new("bad", 1);
+        g.add(OpBuilder::new("dangling", "Add").inputs(&[7]).build());
+    }
+}

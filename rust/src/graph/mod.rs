@@ -1,0 +1,15 @@
+//! Computation-graph IR, analysis and op grouping (paper §4.1).
+//!
+//! * [`ir`] — the internal DAG representation that the graph analyzer
+//!   builds, independent of any frontend API.
+//! * [`analyzer`] — graph simplification (identity/NoOp/dangling removal)
+//!   and splittability annotation.
+//! * [`grouping`] — METIS-style grouping of tightly coupled ops into at
+//!   most [`grouping::DEFAULT_GROUPS`] op groups.
+
+pub mod analyzer;
+pub mod grouping;
+pub mod ir;
+
+pub use grouping::{GroupGraph, OpGroup};
+pub use ir::{CompGraph, Op, OpId, OpKind, Splittability};

@@ -1,0 +1,41 @@
+//! # TAG — Topology-Aware Graph deployment (reproduction)
+//!
+//! Rust implementation of the system described in *"Expediting Distributed
+//! DNN Training with Device Topology-Aware Graph Deployment"* (Zhang et al.,
+//! 2023): an automatic framework that maps a DNN computation graph onto an
+//! arbitrary heterogeneous device topology by combining
+//!
+//! * a **heterogeneous GNN** (JAX/Pallas, AOT-compiled to HLO and executed
+//!   through PJRT — see [`runtime`] and [`gnn`]) that scores candidate
+//!   strategy slices,
+//! * **Monte-Carlo tree search** ([`mcts`]) over per-op-group placement +
+//!   replication decisions,
+//! * a **discrete-event simulator** ([`sim`]) that provides rewards and
+//!   runtime-feedback features,
+//! * a **sufficient-factor-broadcasting optimizer** ([`sfb`]) that solves a
+//!   min-cut-style ILP per gradient, and
+//! * a **graph compiler** ([`dist`]) that rewrites the computation graph
+//!   (Split/Concat/AddN/AllReduce insertion) for a chosen strategy.
+//!
+//! Substrates the paper depends on are implemented here as well: a METIS
+//! replacement ([`partition`]), a model zoo ([`models`]), cluster topology
+//! descriptions ([`cluster`]) and profiler cost models ([`profile`]).
+//!
+//! The layering follows the session architecture: Python/JAX only ever runs
+//! at build time (`make artifacts`); the search/serving hot path is pure
+//! Rust + PJRT.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod dist;
+pub mod gnn;
+pub mod graph;
+pub mod mcts;
+pub mod models;
+pub mod partition;
+pub mod profile;
+pub mod runtime;
+pub mod sfb;
+pub mod sim;
+pub mod strategy;
+pub mod util;

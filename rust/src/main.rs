@@ -1,0 +1,257 @@
+//! `tag` — the TAG coordinator CLI.
+//!
+//! Subcommands:
+//!   search    find a deployment strategy for a model on a topology
+//!   baselines evaluate all baseline strategies on the same setup
+//!   train     self-play GNN training (writes a params .bin)
+//!   info      list models, topologies and artifact status
+//!
+//! Examples:
+//!   tag search --model VGG19 --topology testbed --iters 200 --scale 0.5
+//!   tag search --model BERT-Small --topology random:42 --gnn artifacts/params_init.bin
+//!   tag train --games 30 --steps 4 --out artifacts/params_trained.bin
+//!   tag baselines --model InceptionV3 --topology testbed
+
+use tag::cluster::{generator, presets, Topology};
+use tag::coordinator::{prepare, search_session, SearchConfig, Trainer};
+use tag::dist::Lowering;
+use tag::gnn::{params, GnnService};
+use tag::models;
+use tag::strategy::{baselines, enumerate_actions, ReplOption};
+use tag::util::{fmt_secs, Rng};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: tag <search|baselines|train|info> [options]\n\
+         run `tag <cmd> --help` for details"
+    );
+    std::process::exit(2)
+}
+
+/// Minimal flag parser: --key value pairs (the vendored dep set has no
+/// clap; this keeps the CLI self-contained).
+struct Args {
+    kv: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Self {
+        let mut kv = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    kv.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    kv.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                eprintln!("unexpected argument: {a}");
+                usage();
+            }
+        }
+        Self { kv }
+    }
+    fn get(&self, k: &str) -> Option<&str> {
+        self.kv.get(k).map(|s| s.as_str())
+    }
+    fn flag(&self, k: &str) -> bool {
+        matches!(self.get(k), Some("true") | Some("1") | Some("yes"))
+    }
+    fn num<T: std::str::FromStr>(&self, k: &str, default: T) -> T {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn topology_by_name(name: &str) -> Topology {
+    match name {
+        "testbed" => presets::testbed(),
+        "cloud" => presets::cloud(),
+        "homogeneous" | "homog" => presets::homogeneous(),
+        "sfb" | "sfb_pair" => presets::sfb_pair(),
+        other => {
+            if let Some(seed) = other.strip_prefix("random:") {
+                let seed: u64 = seed.parse().unwrap_or(0);
+                let mut rng = Rng::new(seed);
+                generator::random_topology(&mut rng)
+            } else {
+                eprintln!("unknown topology {other} (testbed|cloud|homogeneous|sfb|random:SEED)");
+                std::process::exit(2)
+            }
+        }
+    }
+}
+
+fn describe_strategy(res: &tag::coordinator::SessionResult, topo: &Topology) {
+    let gg = &res.group_graph;
+    println!("\nstrategy ({} op groups):", gg.num_groups());
+    let mut by_option = [0usize; 4];
+    let mut gpu_weighted = vec![0.0f64; topo.num_groups()];
+    for (g, slot) in res.strategy.slots.iter().enumerate() {
+        let Some(a) = slot else { continue };
+        by_option[a.option.index()] += 1;
+        for d in 0..topo.num_groups() {
+            if a.mask & (1 << d) != 0 {
+                gpu_weighted[d] += gg.groups[g].comp_time;
+            }
+        }
+    }
+    println!(
+        "  options: AllReduce={} PS={} Duplicate={} ModelParallel={}",
+        by_option[0], by_option[1], by_option[2], by_option[3]
+    );
+    print!("  placement (comp-time-weighted): ");
+    let total: f64 = gg.groups.iter().map(|g| g.comp_time).sum();
+    for (d, w) in gpu_weighted.iter().enumerate() {
+        print!("{}:{:.0}% ", topo.groups[d].gpu.name, 100.0 * w / total.max(1e-12));
+    }
+    println!();
+}
+
+fn cmd_search(args: &Args) {
+    let model_name = args.get("model").unwrap_or("VGG19");
+    let scale: f64 = args.num("scale", 0.25);
+    let topo = topology_by_name(args.get("topology").unwrap_or("testbed"));
+    let model = models::by_name(model_name, scale).unwrap_or_else(|| {
+        eprintln!("unknown model {model_name}; see `tag info`");
+        std::process::exit(2)
+    });
+    let cfg = SearchConfig {
+        max_groups: args.num("groups", 24),
+        mcts_iterations: args.num("iters", 150),
+        seed: args.num("seed", 1),
+        apply_sfb: !args.flag("no-sfb"),
+        profile_noise: args.num("noise", 0.0),
+    };
+    println!(
+        "model={} ({} ops, {:.0} MB params) topology={} ({} machines, {} GPUs)",
+        model.name,
+        model.len(),
+        model.total_param_bytes() / 1e6,
+        topo.name,
+        topo.num_groups(),
+        topo.num_devices()
+    );
+    let prep = prepare(model, &topo, &cfg);
+    let svc_params = args.get("gnn").map(|p| {
+        let svc = GnnService::load("artifacts").expect("load artifacts (make artifacts)");
+        let params = params::load_params(p).expect("load params file");
+        (svc, params)
+    });
+    let res = match &svc_params {
+        Some((svc, p)) => search_session(&prep, &topo, Some((svc, p.clone())), &cfg),
+        None => search_session(&prep, &topo, None, &cfg),
+    };
+    println!(
+        "DP-NCCL baseline: {}   TAG: {}   speed-up: {:.2}x   (search {})",
+        fmt_secs(res.dp_time),
+        fmt_secs(res.dp_time / res.speedup),
+        res.speedup,
+        fmt_secs(res.overhead_s),
+    );
+    if let (Some(plan), Some(t)) = (&res.sfb, res.time_with_sfb) {
+        println!(
+            "SFB: {} of {} gradients covered, predicted saving {}, time with SFB {}",
+            plan.problems_beneficial,
+            plan.problems_solved,
+            fmt_secs(plan.predicted_saving_s),
+            fmt_secs(t)
+        );
+        let top = plan.top_census(5);
+        if !top.is_empty() {
+            println!("  top duplicated ops: {top:?}");
+        }
+    }
+    describe_strategy(&res, &topo);
+}
+
+fn cmd_baselines(args: &Args) {
+    let model_name = args.get("model").unwrap_or("VGG19");
+    let scale: f64 = args.num("scale", 0.25);
+    let topo = topology_by_name(args.get("topology").unwrap_or("testbed"));
+    let model = models::by_name(model_name, scale).expect("model");
+    let cfg = SearchConfig {
+        max_groups: args.num("groups", 24),
+        seed: args.num("seed", 1),
+        ..Default::default()
+    };
+    let prep = prepare(model, &topo, &cfg);
+    let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+    let acts = enumerate_actions(&topo);
+    let ng = prep.gg.num_groups();
+
+    println!("{:<12} {:>14} {:>10}", "baseline", "iter time", "vs DP");
+    let dp = low.evaluate(&baselines::dp_nccl(ng, &topo)).time;
+    let rows: Vec<(&str, f64)> = vec![
+        ("DP-NCCL", dp),
+        ("DP-NCCL-P", low.evaluate(&baselines::dp_nccl_p(ng, &topo)).time),
+        ("Horovod", low.evaluate(&baselines::horovod(ng, &topo)).time),
+        ("FlexFlow", {
+            let s = baselines::flexflow_mcmc(&low, &acts, 200, cfg.seed);
+            low.evaluate(&s).time
+        }),
+        ("Baechi", low.evaluate(&baselines::baechi_msct(&low)).time),
+        ("HeteroG", low.evaluate(&baselines::heterog_like(&low)).time),
+    ];
+    for (name, t) in rows {
+        println!("{:<12} {:>14} {:>9.2}x", name, fmt_secs(t), dp / t);
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let svc = GnnService::load("artifacts").expect("load artifacts (make artifacts)");
+    let init = args.get("init").unwrap_or("artifacts/params_init.bin");
+    let p = params::load_params(init).expect("init params");
+    let mut tr = Trainer::new(&svc, p, args.num("seed", 1));
+    tr.use_feedback = !args.flag("no-feedback");
+    tr.model_scale = args.num("scale", 0.25);
+    tr.mcts_iterations = args.num("iters", 96);
+    let games: usize = args.num("games", 20);
+    let steps: usize = args.num("steps", 4);
+    for gi in 0..games {
+        let n = tr.collect();
+        let mut last = None;
+        for _ in 0..steps {
+            last = tr.train_once();
+        }
+        println!(
+            "game {gi:>3}: +{n} examples, buffer loss {:?}",
+            last.map(|l| (l * 1000.0).round() / 1000.0)
+        );
+    }
+    let out = args.get("out").unwrap_or("artifacts/params_trained.bin");
+    params::save_params(out, &tr.params).expect("save params");
+    println!("saved {} params to {out}", tr.params.len());
+}
+
+fn cmd_info() {
+    println!("models (name: ops at scale 1.0, params):");
+    for g in models::all_models() {
+        println!(
+            "  {:<12} {:>6} ops {:>7.0} MB",
+            g.name,
+            g.len(),
+            g.total_param_bytes() / 1e6
+        );
+    }
+    println!("\ntopologies: testbed, cloud, homogeneous, sfb, random:SEED");
+    let ready = std::path::Path::new("artifacts/gnn_infer.hlo.txt").exists();
+    println!("\nartifacts: {}", if ready { "ready" } else { "missing (run `make artifacts`)" });
+    let _ = ReplOption::ALL;
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let rest = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "search" => cmd_search(&rest),
+        "baselines" => cmd_baselines(&rest),
+        "train" => cmd_train(&rest),
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}

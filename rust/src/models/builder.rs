@@ -1,0 +1,672 @@
+//! [`NetBuilder`]: a layer-level network builder that emits the *training*
+//! graph — forward micro-ops immediately, and a stack of backward hooks
+//! that are composed in reverse at [`NetBuilder::finish`], mirroring what
+//! TensorFlow's autodiff produces (gradient ops, `AddN` merges at forks,
+//! per-variable `Apply` ops).
+//!
+//! Branch support (residual connections, inception modules) works by
+//! composing hooks: `residual`/`fanout` snapshot the activation, build
+//! each branch (whose hooks are captured into the branch's own list), and
+//! push a merged hook that routes the incoming gradient through each
+//! branch's reversed hooks and `AddN`s the results.
+
+use crate::graph::ir::{CompGraph, OpBuilder, OpId, OpKind, Splittability};
+
+/// A backward hook: given the gradient flowing in from downstream,
+/// emit the layer's backward ops and return the gradient wrt the
+/// layer's input.
+pub type BwdHook = Box<dyn FnOnce(&mut CompGraph, OpId) -> OpId>;
+
+pub struct NetBuilder {
+    pub g: CompGraph,
+    /// Current activation op and its size in bytes (full batch).
+    cur: OpId,
+    cur_bytes: f64,
+    hooks: Vec<BwdHook>,
+    /// (gradient producer op, variable op) pairs emitted by hooks.
+    batch: usize,
+    layer_idx: usize,
+}
+
+const F32: f64 = 4.0;
+
+impl NetBuilder {
+    /// Start a network with a data placeholder of `elem_per_sample`
+    /// elements per sample.
+    pub fn new(name: &str, batch: usize, elem_per_sample: f64) -> Self {
+        let mut g = CompGraph::new(name, batch);
+        let bytes = elem_per_sample * batch as f64 * F32;
+        let cur = g.add(
+            OpBuilder::new("data", "Placeholder")
+                .kind(OpKind::Placeholder)
+                .out_bytes(bytes)
+                .build(),
+        );
+        Self { g, cur, cur_bytes: bytes, hooks: Vec::new(), batch, layer_idx: 0 }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+    pub fn cur(&self) -> OpId {
+        self.cur
+    }
+    pub fn cur_bytes(&self) -> f64 {
+        self.cur_bytes
+    }
+
+    fn name(&mut self, t: &str) -> String {
+        self.layer_idx += 1;
+        format!("{t}_{}", self.layer_idx)
+    }
+
+    /// Add a variable plus its TF-style `Read` micro-op; returns the
+    /// variable id (readable as input).
+    pub fn variable(&mut self, tag: &str, bytes: f64) -> OpId {
+        let nm = self.name(tag);
+        let v = self.g.add(
+            OpBuilder::new(format!("{nm}/var"), "Variable")
+                .kind(OpKind::Variable)
+                .param_bytes(bytes)
+                .out_bytes(bytes)
+                .build(),
+        );
+        self.g.add(
+            OpBuilder::new(format!("{nm}/read"), "ReadVariableOp")
+                .out_bytes(bytes)
+                .inputs(&[v])
+                .build(),
+        );
+        v
+    }
+
+    /// Emit the Grad + Adam-slot + Apply micro-ops for a variable, the way
+    /// a TF-1.x graph dump with the Adam optimizer does (slot variables
+    /// `m`/`v` appear as stateful nodes feeding the fused apply).
+    fn grad_apply(
+        g: &mut CompGraph,
+        nm: &str,
+        ty: &'static str,
+        var: OpId,
+        bytes: f64,
+        flops: f64,
+        inputs: &[OpId],
+    ) -> OpId {
+        let gr = g.add(
+            OpBuilder::new(format!("{nm}/grad"), ty)
+                .kind(OpKind::Grad { wrt: var })
+                .split(Splittability::Sum)
+                .flops(flops)
+                .out_bytes(bytes)
+                .inputs(inputs)
+                .build(),
+        );
+        let m = g.add(
+            OpBuilder::new(format!("{nm}/adam_m"), "VariableV2")
+                .out_bytes(bytes)
+                .build(),
+        );
+        let v = g.add(
+            OpBuilder::new(format!("{nm}/adam_v"), "VariableV2")
+                .out_bytes(bytes)
+                .build(),
+        );
+        g.add(
+            OpBuilder::new(format!("{nm}/apply"), "ApplyAdam")
+                .kind(OpKind::Apply { var })
+                .split(Splittability::NoSplit)
+                .flops(bytes / F32 * 4.0) // Adam: ~4 flops per element
+                .out_bytes(bytes)
+                .inputs(&[gr, var, m, v])
+                .build(),
+        );
+        gr
+    }
+
+    /// TF graphs are full of small metadata side-chains
+    /// (`Shape -> StridedSlice -> Pack -> Reshape`).  This emits `k` tiny
+    /// side ops feeding an inline dynamic `Reshape` of the current
+    /// activation, exactly the pattern TF's dynamic-shape handling
+    /// produces.  Near-zero flops; keeps op inventories (Table 3) honest.
+    pub fn micro_reshape(&mut self, k: usize) {
+        const TYPES: [&str; 6] =
+            ["Shape", "StridedSlice", "Pack", "Cast", "Mul", "RealDiv"];
+        let nm = self.name("reshape");
+        let x = self.cur;
+        let mut side = x;
+        for i in 0..k {
+            side = self.g.add(
+                OpBuilder::new(format!("{nm}/aux{i}"), TYPES[i % TYPES.len()])
+                    .out_bytes(64.0)
+                    .inputs(&[side])
+                    .build(),
+            );
+        }
+        let bytes = self.cur_bytes;
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), "Reshape")
+                .out_bytes(bytes)
+                .inputs(&[x, side])
+                .build(),
+        );
+        self.cur = y;
+        // TF autodiff mirrors the metadata plumbing on the backward pass
+        // (Shape/Reshape/BroadcastGradientArgs chains), roughly half as
+        // many nodes as forward.
+        let bwd_aux = k / 2;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            let mut side = grad_out;
+            for i in 0..bwd_aux {
+                side = g.add(
+                    OpBuilder::new(format!("{nm}/bwd_aux{i}"), TYPES[i % TYPES.len()])
+                        .out_bytes(64.0)
+                        .inputs(&[side])
+                        .build(),
+                );
+            }
+            g.add(
+                OpBuilder::new(format!("{nm}/bwd"), "Reshape")
+                    .out_bytes(bytes)
+                    .inputs(&[grad_out, side])
+                    .build(),
+            )
+        }));
+    }
+
+    /// Generic primary layer: one fwd op with a weight variable, one
+    /// bwd-input op, one weight-grad op, one apply. `fwd_flops` for full
+    /// batch; `out_bytes` for full batch.
+    #[allow(clippy::too_many_arguments)]
+    fn primary(
+        &mut self,
+        tag: &str,
+        fwd_ty: &'static str,
+        bwd_in_ty: &'static str,
+        bwd_w_ty: &'static str,
+        w_bytes: f64,
+        fwd_flops: f64,
+        out_bytes: f64,
+    ) {
+        let nm = self.name(tag);
+        let w = self.variable(&format!("{nm}/w"), w_bytes);
+        let x = self.cur;
+        let x_bytes = self.cur_bytes;
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), fwd_ty)
+                .flops(fwd_flops)
+                .out_bytes(out_bytes)
+                .inputs(&[x, w])
+                .build(),
+        );
+        self.cur = y;
+        self.cur_bytes = out_bytes;
+        let nm2 = nm.clone();
+        self.hooks.push(Box::new(move |g, grad_out| {
+            // dX: same cost class as forward.
+            let dx = g.add(
+                OpBuilder::new(format!("{nm2}/bwd_in"), bwd_in_ty)
+                    .flops(fwd_flops)
+                    .out_bytes(x_bytes)
+                    .inputs(&[grad_out, w])
+                    .build(),
+            );
+            // dW.
+            Self::grad_apply(g, &nm2, bwd_w_ty, w, w_bytes, fwd_flops, &[grad_out, x]);
+            dx
+        }));
+    }
+
+    /// 2D convolution (no bias — BN usually follows), NHWC.
+    /// `hw`: output spatial size, `cin`/`cout` channels, `k` kernel.
+    pub fn conv2d(&mut self, hw: usize, cin: usize, cout: usize, k: usize) {
+        let b = self.batch as f64;
+        let flops = 2.0 * b * (hw * hw) as f64 * cin as f64 * cout as f64 * (k * k) as f64;
+        let out_bytes = b * (hw * hw) as f64 * cout as f64 * F32;
+        let w_bytes = (k * k * cin * cout) as f64 * F32;
+        self.primary(
+            "conv",
+            "Conv2D",
+            "Conv2DBackpropInput",
+            "Conv2DBackpropFilter",
+            w_bytes,
+            flops,
+            out_bytes,
+        );
+    }
+
+    /// Fully connected layer `din -> dout` over `tokens` positions per
+    /// sample (tokens=1 for plain dense heads).
+    pub fn dense(&mut self, tokens: usize, din: usize, dout: usize) {
+        let b = self.batch as f64 * tokens as f64;
+        let flops = 2.0 * b * din as f64 * dout as f64;
+        let out_bytes = b * dout as f64 * F32;
+        let w_bytes = (din * dout) as f64 * F32;
+        self.primary("dense", "MatMul", "MatMul", "MatMul", w_bytes, flops, out_bytes);
+        self.bias_add(dout);
+    }
+
+    /// BiasAdd with its own variable.
+    pub fn bias_add(&mut self, c: usize) {
+        let nm = self.name("bias");
+        let bbytes = c as f64 * F32;
+        let bvar = self.variable(&format!("{nm}/b"), bbytes);
+        let x = self.cur;
+        let n_elem = self.cur_bytes / F32;
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), "BiasAdd")
+                .flops(n_elem)
+                .out_bytes(self.cur_bytes)
+                .inputs(&[x, bvar])
+                .build(),
+        );
+        self.cur = y;
+        let bytes = self.cur_bytes;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            Self::grad_apply(g, &nm, "BiasAddGrad", bvar, bbytes, n_elem, &[grad_out]);
+            // gradient passes through unchanged
+            let _ = bytes;
+            grad_out
+        }));
+    }
+
+    /// Fused batch norm: 1 fused op + scale/shift variables (+ the
+    /// moving-average micro-ops TF emits).
+    pub fn batch_norm(&mut self, c: usize) {
+        let nm = self.name("bn");
+        let pbytes = c as f64 * F32;
+        let gamma = self.variable(&format!("{nm}/gamma"), pbytes);
+        let beta = self.variable(&format!("{nm}/beta"), pbytes);
+        let x = self.cur;
+        let n_elem = self.cur_bytes / F32;
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), "FusedBatchNorm")
+                .flops(8.0 * n_elem)
+                .out_bytes(self.cur_bytes)
+                .inputs(&[x, gamma, beta])
+                .build(),
+        );
+        // moving mean/var update micro-ops (tiny)
+        self.g.add(
+            OpBuilder::new(format!("{nm}/moments"), "Mean")
+                .flops(n_elem)
+                .out_bytes(pbytes)
+                .inputs(&[x])
+                .build(),
+        );
+        self.cur = y;
+        let x_bytes = self.cur_bytes;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            let dx = g.add(
+                OpBuilder::new(format!("{nm}/bwd"), "FusedBatchNormGrad")
+                    .flops(10.0 * n_elem)
+                    .out_bytes(x_bytes)
+                    .inputs(&[grad_out, x])
+                    .build(),
+            );
+            Self::grad_apply(g, &format!("{nm}/gamma"), "Sum", gamma, pbytes, n_elem, &[grad_out, x]);
+            Self::grad_apply(g, &format!("{nm}/beta"), "Sum", beta, pbytes, n_elem, &[grad_out]);
+            dx
+        }));
+    }
+
+    /// Pointwise activation (Relu / Gelu / Tanh...).
+    pub fn activation(&mut self, ty: &'static str, bwd_ty: &'static str) {
+        let nm = self.name(ty);
+        let x = self.cur;
+        let n_elem = self.cur_bytes / F32;
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), ty)
+                .flops(n_elem)
+                .out_bytes(self.cur_bytes)
+                .inputs(&[x])
+                .build(),
+        );
+        self.cur = y;
+        let bytes = self.cur_bytes;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            g.add(
+                OpBuilder::new(format!("{nm}/bwd"), bwd_ty)
+                    .flops(n_elem)
+                    .out_bytes(bytes)
+                    .inputs(&[grad_out, y])
+                    .build(),
+            )
+        }));
+    }
+
+    pub fn relu(&mut self) {
+        self.activation("Relu", "ReluGrad");
+    }
+
+    /// Max/avg pooling with spatial reduction `hw_out`, channels `c`.
+    pub fn pool(&mut self, ty: &'static str, hw_out: usize, c: usize) {
+        let nm = self.name("pool");
+        let b = self.batch as f64;
+        let out_bytes = b * (hw_out * hw_out) as f64 * c as f64 * F32;
+        let x = self.cur;
+        let x_bytes = self.cur_bytes;
+        let n_elem = x_bytes / F32;
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), ty)
+                .flops(n_elem)
+                .out_bytes(out_bytes)
+                .inputs(&[x])
+                .build(),
+        );
+        self.cur = y;
+        self.cur_bytes = out_bytes;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            g.add(
+                OpBuilder::new(format!("{nm}/bwd"), "MaxPoolGrad")
+                    .flops(n_elem)
+                    .out_bytes(x_bytes)
+                    .inputs(&[grad_out, x])
+                    .build(),
+            )
+        }));
+    }
+
+    /// Shape-only op (Reshape / Transpose) — near-zero flops but real
+    /// nodes in the graph (they matter for the SFB census, Table 6).
+    pub fn shape_op(&mut self, ty: &'static str) {
+        let nm = self.name(ty);
+        let x = self.cur;
+        let bytes = self.cur_bytes;
+        // Transpose moves data; Reshape is metadata-only.
+        let fl = if ty == "Transpose" { bytes / F32 } else { 0.0 };
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), ty).flops(fl).out_bytes(bytes).inputs(&[x]).build(),
+        );
+        self.cur = y;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            g.add(
+                OpBuilder::new(format!("{nm}/bwd"), ty)
+                    .flops(fl)
+                    .out_bytes(bytes)
+                    .inputs(&[grad_out])
+                    .build(),
+            )
+        }));
+    }
+
+    /// A batched pairwise matmul without weights (attention scores /
+    /// context): cost `flops`, output `out_bytes`, consuming the current
+    /// activation and `other`.
+    pub fn matmul2(&mut self, other: OpId, other_bytes: f64, flops: f64, out_bytes: f64) {
+        let nm = self.name("batchmatmul");
+        let x = self.cur;
+        let x_bytes = self.cur_bytes;
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), "BatchMatMul")
+                .flops(flops)
+                .out_bytes(out_bytes)
+                .inputs(&[x, other])
+                .build(),
+        );
+        self.cur = y;
+        self.cur_bytes = out_bytes;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            // two bwd matmuls (dA, dB); dB's path merges via AddN later —
+            // we approximate the second as a local op.
+            let da = g.add(
+                OpBuilder::new(format!("{nm}/bwd_a"), "BatchMatMul")
+                    .flops(flops)
+                    .out_bytes(x_bytes)
+                    .inputs(&[grad_out, other])
+                    .build(),
+            );
+            g.add(
+                OpBuilder::new(format!("{nm}/bwd_b"), "BatchMatMul")
+                    .flops(flops)
+                    .out_bytes(other_bytes)
+                    .inputs(&[grad_out, x])
+                    .build(),
+            );
+            da
+        }));
+    }
+
+    /// Softmax (attention / classifier head).
+    pub fn softmax(&mut self) {
+        self.activation("Softmax", "SoftmaxGrad");
+    }
+
+    /// Embedding lookup: table `vocab x dim`, output `tokens` per sample.
+    pub fn embedding(&mut self, vocab: usize, dim: usize, tokens: usize) -> (crate::graph::ir::OpId, f64) {
+        let nm = self.name("embed");
+        let tbytes = (vocab * dim) as f64 * F32;
+        let table = self.variable(&format!("{nm}/table"), tbytes);
+        let b = self.batch as f64 * tokens as f64;
+        let out_bytes = b * dim as f64 * F32;
+        let x = self.cur;
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), "GatherV2")
+                .flops(b * dim as f64)
+                .out_bytes(out_bytes)
+                .inputs(&[x, table])
+                .build(),
+        );
+        self.cur = y;
+        self.cur_bytes = out_bytes;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            Self::grad_apply(
+                g,
+                &nm,
+                "UnsortedSegmentSum",
+                table,
+                tbytes,
+                b * dim as f64,
+                &[grad_out, x],
+            );
+            grad_out // no meaningful input gradient for integer ids
+        }));
+        (table, tbytes)
+    }
+
+    // ----------------------------------------------------------- branches
+
+    /// Snapshot for branch building: (activation, bytes, hook stack len).
+    pub fn snapshot(&self) -> (OpId, f64, usize) {
+        (self.cur, self.cur_bytes, self.hooks.len())
+    }
+
+    /// Residual connection: `body` builds the residual branch from the
+    /// current activation; afterwards `cur = body_out + shortcut` and the
+    /// backward pass AddNs the two gradient paths.
+    pub fn residual<Fb: FnOnce(&mut Self)>(&mut self, body: Fb) {
+        let (short, short_bytes, mark) = self.snapshot();
+        body(self);
+        let body_hooks: Vec<BwdHook> = self.hooks.split_off(mark);
+        let body_out = self.cur;
+        let out_bytes = self.cur_bytes;
+        assert!(
+            (out_bytes - short_bytes).abs() < 1.0,
+            "residual branch must preserve shape ({out_bytes} vs {short_bytes})"
+        );
+        let nm = self.name("residual_add");
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), "AddV2")
+                .flops(out_bytes / F32)
+                .out_bytes(out_bytes)
+                .inputs(&[short, body_out])
+                .build(),
+        );
+        self.cur = y;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            // Route grad through the body branch (reverse hook order).
+            let mut gcur = grad_out;
+            for h in body_hooks.into_iter().rev() {
+                gcur = h(g, gcur);
+            }
+            // Merge with the shortcut gradient (identity path).
+            g.add(
+                OpBuilder::new(format!("{nm}/bwd_addn"), "AddN")
+                    .flops(out_bytes / F32)
+                    .out_bytes(out_bytes)
+                    .inputs(&[grad_out, gcur])
+                    .build(),
+            )
+        }));
+    }
+
+    /// Parallel branches concatenated along channels (inception module).
+    /// Each closure builds one branch from the shared input; outputs are
+    /// `ConcatV2`-ed. Backward: `Split` the gradient, run each branch's
+    /// hooks, `AddN` the input gradients.
+    pub fn fanout_concat(&mut self, branches: Vec<Box<dyn FnOnce(&mut Self)>>) {
+        let (input, input_bytes, _) = self.snapshot();
+        let mut outs = Vec::new();
+        let mut hook_sets = Vec::new();
+        let mut total_bytes = 0.0;
+        for b in branches {
+            self.cur = input;
+            self.cur_bytes = input_bytes;
+            let mark = self.hooks.len();
+            b(self);
+            hook_sets.push(self.hooks.split_off(mark));
+            outs.push(self.cur);
+            total_bytes += self.cur_bytes;
+        }
+        let nm = self.name("concat");
+        let y = self.g.add(
+            OpBuilder::new(nm.clone(), "ConcatV2")
+                .flops(total_bytes / F32)
+                .out_bytes(total_bytes)
+                .inputs(&outs)
+                .build(),
+        );
+        self.cur = y;
+        self.cur_bytes = total_bytes;
+        self.hooks.push(Box::new(move |g, grad_out| {
+            let split = g.add(
+                OpBuilder::new(format!("{nm}/bwd_split"), "Split")
+                    .flops(total_bytes / F32)
+                    .out_bytes(total_bytes)
+                    .inputs(&[grad_out])
+                    .build(),
+            );
+            let mut grads = Vec::new();
+            for hooks in hook_sets {
+                let mut gcur = split;
+                for h in hooks.into_iter().rev() {
+                    gcur = h(g, gcur);
+                }
+                grads.push(gcur);
+            }
+            g.add(
+                OpBuilder::new(format!("{nm}/bwd_addn"), "AddN")
+                    .flops(input_bytes / F32 * grads.len() as f64)
+                    .out_bytes(input_bytes)
+                    .inputs(&grads)
+                    .build(),
+            )
+        }));
+    }
+
+    /// Classifier head: global pool + dense(softmax) + cross-entropy loss,
+    /// then run all backward hooks and return the finished graph.
+    pub fn finish_classifier(mut self, feat: usize, classes: usize) -> CompGraph {
+        self.dense(1, feat, classes);
+        self.softmax();
+        self.finish()
+    }
+
+    /// Emit loss + initial gradient, run backward hooks in reverse.
+    pub fn finish(mut self) -> CompGraph {
+        let b = self.batch as f64;
+        let loss = self.g.add(
+            OpBuilder::new("loss", "SparseSoftmaxCrossEntropyWithLogits")
+                .flops(self.cur_bytes / F32 * 3.0)
+                .out_bytes(b * F32)
+                .inputs(&[self.cur])
+                .build(),
+        );
+        let mut gcur = self.g.add(
+            OpBuilder::new("loss/bwd", "Fill")
+                .flops(self.cur_bytes / F32)
+                .out_bytes(self.cur_bytes)
+                .inputs(&[loss])
+                .build(),
+        );
+        for h in self.hooks.into_iter().rev() {
+            gcur = h(&mut self.g, gcur);
+        }
+        self.g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn mlp_has_matched_grads_and_applies() {
+        let mut b = NetBuilder::new("mlp", 4, 32.0);
+        b.dense(1, 8, 16);
+        b.relu();
+        b.dense(1, 16, 4);
+        let g = b.finish();
+        assert!(g.check_acyclic());
+        let vars = g.ops.iter().filter(|o| o.is_param()).count();
+        assert_eq!(vars, 4); // 2 W + 2 bias
+        assert_eq!(g.grad_apply_pairs().len(), 4);
+    }
+
+    #[test]
+    fn residual_adds_and_merges_gradients() {
+        let mut b = NetBuilder::new("res", 2, 16.0 * 16.0 * 8.0);
+        b.conv2d(16, 8, 8, 3);
+        b.residual(|b| {
+            b.conv2d(16, 8, 8, 3);
+            b.relu();
+        });
+        let g = b.finish();
+        assert!(g.check_acyclic());
+        let addn = g.ops.iter().filter(|o| o.op_type == "AddN").count();
+        assert!(addn >= 1, "residual backward must AddN gradient paths");
+        let adds = g.ops.iter().filter(|o| o.op_type == "AddV2").count();
+        assert_eq!(adds, 1);
+    }
+
+    #[test]
+    fn fanout_concat_splits_gradient() {
+        let mut b = NetBuilder::new("inc", 2, 8.0 * 8.0 * 4.0);
+        b.conv2d(8, 4, 4, 1);
+        b.fanout_concat(vec![
+            Box::new(|b: &mut NetBuilder| b.conv2d(8, 4, 8, 1)),
+            Box::new(|b: &mut NetBuilder| b.conv2d(8, 4, 16, 3)),
+        ]);
+        let g = b.finish();
+        assert!(g.check_acyclic());
+        assert_eq!(g.ops.iter().filter(|o| o.op_type == "ConcatV2").count(), 1);
+        assert_eq!(g.ops.iter().filter(|o| o.op_type == "Split").count(), 1);
+        // concat output channels 8+16=24
+        let concat = g.ops.iter().find(|o| o.op_type == "ConcatV2").unwrap();
+        assert_eq!(concat.output_bytes, 2.0 * 8.0 * 8.0 * 24.0 * 4.0);
+    }
+
+    #[test]
+    fn variables_have_reads() {
+        let mut b = NetBuilder::new("v", 2, 8.0);
+        b.dense(1, 2, 2);
+        let g = b.finish();
+        let vars = g.ops.iter().filter(|o| o.is_param()).count();
+        let reads = g.ops.iter().filter(|o| o.op_type == "ReadVariableOp").count();
+        assert_eq!(vars, reads);
+    }
+
+    #[test]
+    fn grad_targets_are_variables() {
+        let mut b = NetBuilder::new("t", 2, 64.0);
+        b.conv2d(4, 4, 8, 3);
+        b.batch_norm(8);
+        b.relu();
+        let g = b.finish();
+        for op in &g.ops {
+            if let OpKind::Grad { wrt } = op.kind {
+                assert!(g.ops[wrt].is_param(), "grad target {} not a variable", wrt);
+            }
+        }
+    }
+}

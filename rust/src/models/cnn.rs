@@ -1,0 +1,309 @@
+//! Convolutional benchmark models: VGG19, ResNet101, InceptionV3.
+//!
+//! Architectures follow the canonical definitions (channel counts,
+//! block repeats, spatial schedule); `scale < 1` shrinks channels and
+//! repeats proportionally for fast unit tests while keeping the exact
+//! same structure.
+
+use super::builder::NetBuilder;
+
+fn sc(x: usize, scale: f64) -> usize {
+    ((x as f64 * scale).round() as usize).max(1)
+}
+
+/// VGG19 (Simonyan & Zisserman): 16 conv layers in 5 blocks + 3 FC.
+pub fn vgg19(batch: usize, scale: f64) -> crate::graph::CompGraph {
+    let mut b = NetBuilder::new("VGG19", batch, 224.0 * 224.0 * 3.0);
+    let blocks: [(usize, usize, usize); 5] = [
+        // (convs, channels, output spatial after pool)
+        (2, 64, 112),
+        (2, 128, 56),
+        (4, 256, 28),
+        (4, 512, 14),
+        (4, 512, 7),
+    ];
+    let mut cin = 3;
+    let mut hw = 224;
+    for (reps, c, hw_out) in blocks {
+        let c = sc(c, scale);
+        let reps = if scale < 1.0 { reps.min(2) } else { reps };
+        for _ in 0..reps {
+            b.conv2d(hw, cin, c, 3);
+            b.bias_add(c);
+            b.relu();
+            b.micro_reshape(28);
+            cin = c;
+        }
+        b.pool("MaxPool", hw_out, c);
+        hw = hw_out;
+    }
+    // Flatten + FC head (4096-4096-1000).
+    b.shape_op("Reshape");
+    let feat = 7 * 7 * cin;
+    let fc = sc(4096, scale);
+    b.dense(1, feat, fc);
+    b.relu();
+    b.micro_reshape(28);
+    b.dense(1, fc, fc);
+    b.relu();
+    b.micro_reshape(28);
+    b.finish_classifier(fc, 1000)
+}
+
+/// ResNet101 (He et al.): bottleneck blocks [3, 4, 23, 3].
+pub fn resnet101(batch: usize, scale: f64) -> crate::graph::CompGraph {
+    let mut b = NetBuilder::new("ResNet101", batch, 224.0 * 224.0 * 3.0);
+    // Stem.
+    b.conv2d(112, 3, sc(64, scale), 7);
+    b.batch_norm(sc(64, scale));
+    b.relu();
+    b.pool("MaxPool", 56, sc(64, scale));
+
+    let stages: [(usize, usize, usize); 4] = [
+        // (repeats, bottleneck channels, spatial)
+        (3, 64, 56),
+        (4, 128, 28),
+        (23, 256, 14),
+        (3, 512, 7),
+    ];
+    let mut cin = sc(64, scale);
+    for (si, (reps, c, hw)) in stages.into_iter().enumerate() {
+        let c = sc(c, scale);
+        let cout = 4 * c;
+        let reps = if scale < 1.0 { reps.min(2) } else { reps };
+        for r in 0..reps {
+            if r == 0 {
+                // Projection shortcut: bring cin -> cout at this spatial
+                // size, then residual blocks preserve shape.
+                b.conv2d(hw, cin, cout, 1);
+                b.batch_norm(cout);
+                cin = cout;
+                let _ = si;
+            }
+            b.residual(|b| {
+                b.conv2d(hw, cout, c, 1);
+                b.batch_norm(c);
+                b.relu();
+                b.micro_reshape(22);
+                b.conv2d(hw, c, c, 3);
+                b.batch_norm(c);
+                b.relu();
+                b.micro_reshape(22);
+                b.conv2d(hw, c, cout, 1);
+                b.batch_norm(cout);
+                b.micro_reshape(22);
+            });
+            b.relu();
+        }
+    }
+    b.pool("AvgPool", 1, cin);
+    b.shape_op("Reshape");
+    b.finish_classifier(cin, 1000)
+}
+
+/// InceptionV3 (Szegedy et al.): stem + inception modules A/B/C with
+/// reductions, faithful branch structure via `fanout_concat`.
+pub fn inception_v3(batch: usize, scale: f64) -> crate::graph::CompGraph {
+    let mut b = NetBuilder::new("InceptionV3", batch, 299.0 * 299.0 * 3.0);
+
+    let conv_bn =
+        |b: &mut NetBuilder, hw: usize, cin: usize, cout: usize, k: usize| {
+            b.conv2d(hw, cin, cout, k);
+            b.batch_norm(cout);
+            b.relu();
+            b.micro_reshape(14);
+        };
+
+    // Stem: 299 -> 35 spatial.
+    conv_bn(&mut b, 149, 3, sc(32, scale), 3);
+    conv_bn(&mut b, 147, sc(32, scale), sc(32, scale), 3);
+    conv_bn(&mut b, 147, sc(32, scale), sc(64, scale), 3);
+    b.pool("MaxPool", 73, sc(64, scale));
+    conv_bn(&mut b, 73, sc(64, scale), sc(80, scale), 1);
+    conv_bn(&mut b, 71, sc(80, scale), sc(192, scale), 3);
+    b.pool("MaxPool", 35, sc(192, scale));
+
+    // Inception-A x3 at 35x35.
+    let mut cin = sc(192, scale);
+    let reps_a = if scale < 1.0 { 1 } else { 3 };
+    for _ in 0..reps_a {
+        let c1 = sc(64, scale);
+        let c5 = sc(64, scale);
+        let c3 = sc(96, scale);
+        let cp = sc(32, scale);
+        let cin_b = cin;
+        b.fanout_concat(vec![
+            Box::new(move |b: &mut NetBuilder| conv_bn(b, 35, cin_b, c1, 1)),
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 35, cin_b, sc(48, 1.0).min(c5), 1);
+                conv_bn(b, 35, sc(48, 1.0).min(c5), c5, 5);
+            }),
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 35, cin_b, c3, 1);
+                conv_bn(b, 35, c3, c3, 3);
+                conv_bn(b, 35, c3, c3, 3);
+            }),
+            Box::new(move |b: &mut NetBuilder| {
+                b.pool("AvgPool", 35, cin_b);
+                conv_bn(b, 35, cin_b, cp, 1);
+            }),
+        ]);
+        cin = c1 + c5 + c3 + cp;
+        b.micro_reshape(6);
+    }
+
+    // Reduction-A: 35 -> 17.
+    {
+        let c3 = sc(384, scale);
+        let c96 = sc(96, scale);
+        let cin_b = cin;
+        b.fanout_concat(vec![
+            Box::new(move |b: &mut NetBuilder| conv_bn(b, 17, cin_b, c3, 3)),
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 35, cin_b, sc(64, 1.0).min(c96), 1);
+                conv_bn(b, 35, sc(64, 1.0).min(c96), c96, 3);
+                conv_bn(b, 17, c96, c96, 3);
+            }),
+            Box::new(move |b: &mut NetBuilder| b.pool("MaxPool", 17, cin_b)),
+        ]);
+        cin = c3 + c96 + cin_b;
+    }
+
+    // Inception-B x4 at 17x17 (factorized 7x1/1x7 pairs modeled as two
+    // k=7-row convolutions of matching cost).
+    let reps_b = if scale < 1.0 { 1 } else { 4 };
+    for _ in 0..reps_b {
+        let c192 = sc(192, scale);
+        let c128 = sc(128, scale);
+        let cin_b = cin;
+        b.fanout_concat(vec![
+            Box::new(move |b: &mut NetBuilder| conv_bn(b, 17, cin_b, c192, 1)),
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 17, cin_b, c128, 1);
+                conv_bn(b, 17, c128, c128, 1); // 1x7
+                conv_bn(b, 17, c128, c192, 1); // 7x1
+                b.micro_reshape(4);
+            }),
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 17, cin_b, c128, 1);
+                conv_bn(b, 17, c128, c128, 1);
+                conv_bn(b, 17, c128, c128, 1);
+                conv_bn(b, 17, c128, c128, 1);
+                conv_bn(b, 17, c128, c192, 1);
+                b.micro_reshape(4);
+            }),
+            Box::new(move |b: &mut NetBuilder| {
+                b.pool("AvgPool", 17, cin_b);
+                conv_bn(b, 17, cin_b, c192, 1);
+            }),
+        ]);
+        cin = 3 * c192 + c192;
+        b.micro_reshape(6);
+    }
+
+    // Reduction-B: 17 -> 8.
+    {
+        let c192 = sc(192, scale);
+        let c320 = sc(320, scale);
+        let cin_b = cin;
+        b.fanout_concat(vec![
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 17, cin_b, c192, 1);
+                conv_bn(b, 8, c192, c320, 3);
+            }),
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 17, cin_b, c192, 1);
+                conv_bn(b, 17, c192, c192, 1);
+                conv_bn(b, 8, c192, c192, 3);
+            }),
+            Box::new(move |b: &mut NetBuilder| b.pool("MaxPool", 8, cin_b)),
+        ]);
+        cin = c320 + c192 + cin_b;
+    }
+
+    // Inception-C x2 at 8x8.
+    let reps_c = if scale < 1.0 { 1 } else { 2 };
+    for _ in 0..reps_c {
+        let c320 = sc(320, scale);
+        let c384 = sc(384, scale);
+        let c192 = sc(192, scale);
+        let cin_b = cin;
+        b.fanout_concat(vec![
+            Box::new(move |b: &mut NetBuilder| conv_bn(b, 8, cin_b, c320, 1)),
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 8, cin_b, c384, 1);
+                // expanded 1x3 + 3x1 pair
+                conv_bn(b, 8, c384, c384, 1);
+                conv_bn(b, 8, c384, c384, 1);
+                b.micro_reshape(4);
+            }),
+            Box::new(move |b: &mut NetBuilder| {
+                conv_bn(b, 8, cin_b, sc(448, 1.0).min(2 * c384), 1);
+                conv_bn(b, 8, sc(448, 1.0).min(2 * c384), c384, 3);
+                conv_bn(b, 8, c384, c384, 1);
+                conv_bn(b, 8, c384, c384, 1);
+                b.micro_reshape(4);
+            }),
+            Box::new(move |b: &mut NetBuilder| {
+                b.pool("AvgPool", 8, cin_b);
+                conv_bn(b, 8, cin_b, c192, 1);
+            }),
+        ]);
+        cin = c320 + 3 * c384 + 2 * c384 + c192;
+        b.micro_reshape(6);
+    }
+
+    b.pool("AvgPool", 1, cin);
+    b.shape_op("Reshape");
+    b.finish_classifier(cin, 1000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_param_size_matches_architecture() {
+        let g = vgg19(96, 1.0);
+        let mb = g.total_param_bytes() / 1e6;
+        // Canonical VGG19: ~143.7M params ~ 575 MB fp32.
+        assert!((450.0..650.0).contains(&mb), "{mb}");
+    }
+
+    #[test]
+    fn resnet101_param_size_matches_architecture() {
+        let g = resnet101(96, 1.0);
+        let mb = g.total_param_bytes() / 1e6;
+        // Canonical ResNet101: ~44.5M params ~ 178 MB fp32.
+        assert!((120.0..240.0).contains(&mb), "{mb}");
+    }
+
+    #[test]
+    fn inception_param_size_matches_architecture() {
+        let g = inception_v3(96, 1.0);
+        let mb = g.total_param_bytes() / 1e6;
+        // Canonical InceptionV3: ~23.8M params ~ 95 MB fp32.
+        assert!((55.0..140.0).contains(&mb), "{mb}");
+    }
+
+    #[test]
+    fn conv_nets_have_conv_backward_ops() {
+        let g = vgg19(8, 0.25);
+        assert!(g.ops.iter().any(|o| o.op_type == "Conv2DBackpropFilter"));
+        assert!(g.ops.iter().any(|o| o.op_type == "Conv2DBackpropInput"));
+    }
+
+    #[test]
+    fn inception_has_branch_structure() {
+        let g = inception_v3(8, 0.25);
+        let concats = g.ops.iter().filter(|o| o.op_type == "ConcatV2").count();
+        assert!(concats >= 4, "expected inception modules, got {concats} concats");
+    }
+
+    #[test]
+    fn resnet_has_residual_adds() {
+        let g = resnet101(8, 0.25);
+        let adds = g.ops.iter().filter(|o| o.op_type == "AddV2").count();
+        assert!(adds >= 6, "{adds}");
+    }
+}

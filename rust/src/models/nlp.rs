@@ -1,0 +1,200 @@
+//! Sequence benchmark models: Transformer (Vaswani et al.) and BERT.
+//!
+//! Both are built from a shared `encoder_layer` helper that emits the
+//! full micro-op inventory a TF dump contains: per-head reshape/transpose
+//! ops, score scaling, masking, dropout, layer norms, residuals — this is
+//! what makes Reshape/Transpose/MatMul the dominant op types, as in the
+//! paper's Table 6 SFB census.
+
+use super::builder::NetBuilder;
+use crate::graph::CompGraph;
+
+fn sc(x: usize, scale: f64) -> usize {
+    ((x as f64 * scale).round() as usize).max(1)
+}
+
+/// LayerNorm: statistically like BN but per-token; reuse batch_norm's
+/// op inventory with the right parameter size.
+fn layer_norm(b: &mut NetBuilder, d: usize) {
+    b.batch_norm(d);
+    // TF expands LayerNorm into mean/variance/rsqrt/mul/sub chains.
+    b.micro_reshape(24);
+}
+
+/// Dense as it appears in a TF transformer dump: the matmul plus the
+/// reshape/bias/dropout plumbing around it.
+fn dense_tf(b: &mut NetBuilder, tokens: usize, din: usize, dout: usize) {
+    b.dense(tokens, din, dout);
+    b.micro_reshape(30);
+}
+
+/// One self-attention sublayer over `tokens` positions, model dim `d`,
+/// `heads` heads, wrapped in residual + layer norm.
+fn self_attention(b: &mut NetBuilder, tokens: usize, d: usize, heads: usize) {
+    let bt = b.batch() as f64 * tokens as f64;
+    let f32b = 4.0;
+    b.residual(|b| {
+        // Q, K, V projections.
+        let q_in = b.cur();
+        let _ = q_in;
+        dense_tf(b, tokens, d, d); // Q
+        b.shape_op("Reshape"); // split heads
+        b.shape_op("Transpose");
+        let q = b.cur();
+        let q_bytes = b.cur_bytes();
+        // K and V branch from the same input: model as sequential matmuls
+        // whose outputs feed the score/context matmuls (TF emits exactly
+        // this shape of graph after autodiff, with AddN merges).
+        dense_tf(b, tokens, d, d); // K (approximates branch as chain)
+        b.shape_op("Reshape");
+        b.shape_op("Transpose");
+        // scores = Q @ K^T / sqrt(dk): (B*heads, T, T)
+        let score_flops = 2.0 * bt * tokens as f64 * d as f64;
+        let score_bytes = b.batch() as f64 * heads as f64 * (tokens * tokens) as f64 * f32b;
+        b.matmul2(q, q_bytes, score_flops, score_bytes);
+        b.micro_reshape(40); // scale + mask add + shape plumbing
+        b.softmax();
+        b.micro_reshape(30); // dropout
+        // V projection feeding context matmul.
+        let p = b.cur();
+        let p_bytes = b.cur_bytes();
+        dense_tf(b, tokens, d, d); // V (chained)
+        b.shape_op("Reshape");
+        b.shape_op("Transpose");
+        let ctx_flops = 2.0 * bt * tokens as f64 * d as f64;
+        let ctx_bytes = bt * d as f64 * f32b;
+        b.matmul2(p, p_bytes, ctx_flops, ctx_bytes);
+        b.shape_op("Transpose"); // merge heads
+        b.shape_op("Reshape");
+        dense_tf(b, tokens, d, d); // output projection
+        b.micro_reshape(20); // dropout
+    });
+    layer_norm(b, d);
+}
+
+/// Position-wise feed-forward sublayer (d -> dff -> d), residual + LN.
+fn ffn(b: &mut NetBuilder, tokens: usize, d: usize, dff: usize) {
+    b.residual(|b| {
+        dense_tf(b, tokens, d, dff);
+        b.activation("Gelu", "GeluGrad");
+        b.micro_reshape(20); // TF expands gelu into erf/mul/add chains
+        dense_tf(b, tokens, dff, d);
+        b.micro_reshape(20); // dropout
+    });
+    layer_norm(b, d);
+}
+
+fn encoder_layer(b: &mut NetBuilder, tokens: usize, d: usize, heads: usize, dff: usize) {
+    self_attention(b, tokens, d, heads);
+    ffn(b, tokens, d, dff);
+}
+
+/// Transformer for NMT (paper batch 480 sentences): 6 encoder + 6 decoder
+/// layers, d=768, dff=3072 — ~110M parameters (~440 MB), matching the
+/// paper's 407 MB within tolerance.
+pub fn transformer(batch: usize, scale: f64) -> CompGraph {
+    let tokens = 64; // average sentence length
+    let d = sc(768, scale);
+    let dff = sc(3072, scale);
+    let heads = sc(12, scale.max(0.34));
+    let vocab = sc(32_000, scale);
+    let layers = if scale < 1.0 { 2 } else { 6 };
+
+    let mut b = NetBuilder::new("Transformer", batch, tokens as f64);
+    let (table, tbytes) = b.embedding(vocab, d, tokens);
+    b.micro_reshape(30); // position encodings, scaling, masks
+    for _ in 0..layers {
+        encoder_layer(&mut b, tokens, d, heads, dff);
+    }
+    // Decoder layers: self-attention + cross-attention + ffn.
+    for _ in 0..layers {
+        self_attention(&mut b, tokens, d, heads);
+        self_attention(&mut b, tokens, d, heads); // cross-attn (same cost shape)
+        ffn(&mut b, tokens, d, dff);
+    }
+    // Output projection to vocab, weight-tied to the embedding table
+    // (standard for NMT transformers).
+    let bt = batch as f64 * tokens as f64;
+    b.matmul2(table, tbytes, 2.0 * bt * (d * vocab) as f64, bt * vocab as f64 * 4.0);
+    b.softmax();
+    b.finish()
+}
+
+/// BERT.  `large = false`: BERT-Small (L=4, H=512, A=8);
+/// `large = true`: BERT-Large (L=24, H=1024, A=16) with the MLM head.
+pub fn bert(batch: usize, large: bool, scale: f64) -> CompGraph {
+    let (layers_full, d, heads, name) = if large {
+        (24, sc(1024, scale), sc(16, scale.max(0.26)), "BERT-Large")
+    } else {
+        (4, sc(512, scale), sc(8, scale.max(0.26)), "BERT-Small")
+    };
+    let layers = if scale < 1.0 { 2 } else { layers_full };
+    let tokens = 128;
+    let dff = 4 * d;
+    let vocab = sc(30_522, scale);
+
+    let mut b = NetBuilder::new(name, batch, tokens as f64);
+    let (table, tbytes) = b.embedding(vocab, d, tokens); // word embeddings
+    b.micro_reshape(40); // token-type + position embeddings + dropout
+    layer_norm(&mut b, d);
+    for _ in 0..layers {
+        encoder_layer(&mut b, tokens, d, heads, dff);
+        b.micro_reshape(20);
+    }
+    // Pooler + MLM head: transform dense + tied decoder matmul against
+    // the embedding table (as in the reference BERT implementation).
+    dense_tf(&mut b, tokens, d, d);
+    b.activation("Tanh", "TanhGrad");
+    let bt = batch as f64 * tokens as f64;
+    b.matmul2(table, tbytes, 2.0 * bt * (d * vocab) as f64, bt * vocab as f64 * 4.0);
+    b.micro_reshape(30); // output bias, log-softmax plumbing
+    b.softmax();
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transformer_param_size() {
+        let g = transformer(480, 1.0);
+        let mb = g.total_param_bytes() / 1e6;
+        // target: paper 407 MB; canonical-ish 6+6 d=768: ~400-500 MB
+        assert!((280.0..570.0).contains(&mb), "{mb}");
+    }
+
+    #[test]
+    fn bert_small_param_size() {
+        let g = bert(96, false, 1.0);
+        let mb = g.total_param_bytes() / 1e6;
+        // BERT-Small ~29M params ~ 115 MB; paper reports 98 MB.
+        assert!((60.0..150.0).contains(&mb), "{mb}");
+    }
+
+    #[test]
+    fn bert_large_param_size() {
+        let g = bert(16, true, 1.0);
+        let mb = g.total_param_bytes() / 1e6;
+        // BERT-Large + MLM head: ~371M params ~ 1.48 GB; paper says
+        // 2313 MB (likely including optimizer state) — see EXPERIMENTS.md.
+        assert!((1100.0..2400.0).contains(&mb), "{mb}");
+    }
+
+    #[test]
+    fn attention_emits_reshape_transpose_matmul() {
+        let g = bert(8, false, 0.25);
+        let count = |t: &str| g.ops.iter().filter(|o| o.op_type == t).count();
+        assert!(count("Reshape") > 20);
+        assert!(count("Transpose") > 10);
+        assert!(count("MatMul") > 10);
+        assert!(count("BatchMatMul") >= 4);
+    }
+
+    #[test]
+    fn bert_large_bigger_than_small() {
+        let s = bert(8, false, 0.25);
+        let l = bert(4, true, 0.25);
+        assert!(l.total_param_bytes() > s.total_param_bytes());
+    }
+}

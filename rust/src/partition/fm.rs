@@ -1,0 +1,237 @@
+//! Fiduccia–Mattheyses boundary refinement for bisections.
+//!
+//! Single-move-at-a-time passes with best-prefix rollback: each pass
+//! tentatively moves every node once (highest gain first, subject to the
+//! balance constraint) and finally rolls back to the best cut seen.
+//!
+//! Move selection uses a lazy max-heap over gains (stale entries are
+//! re-pushed on pop; balance-infeasible pops are parked and re-offered
+//! after the next applied move), replacing the original O(n) scan per
+//! move — the §Perf optimization that took BERT-Large grouping from
+//! 1.6 s to well under half (see EXPERIMENTS.md §Perf).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::PartGraph;
+
+/// Max-heap key: (gain, node id), total order on f64.
+#[derive(PartialEq)]
+struct Key(f64, usize);
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.1.cmp(&other.1))
+    }
+}
+
+/// Refine `side` (values 0/1) in place. `frac` is side-0's target weight
+/// share, `balance` the allowed multiple of the target per side.
+pub fn fm_refine(g: &PartGraph, side: &mut [usize], frac: f64, balance: f64, passes: usize) {
+    let n = g.len();
+    if n < 2 {
+        return;
+    }
+    let total = g.total_node_weight();
+    // Plateau guard: only keep passes that improve the cut by more than
+    // float noise relative to the total edge weight — otherwise FM walks
+    // along zero-gain plateaus (e.g. shifting a whole cluster across) and
+    // silently destroys the balance of the bisection.
+    let total_edge_w: f64 =
+        g.adj.iter().flatten().map(|&(_, w)| w).sum::<f64>() / 2.0;
+    let eps = 1e-9 * (1.0 + total_edge_w);
+    let target0 = total * frac;
+    let target1 = total - target0;
+    // Per-side caps: balance * target, but never allow a side to absorb
+    // (almost) everything — a bisection with an empty side is degenerate
+    // even when the nominal balance constraint would allow it.
+    let heaviest = g.node_w.iter().cloned().fold(0.0, f64::max);
+    let cap = total - (total / (4.0 * balance)).min(total * 0.125);
+    let max0 = (target0 * balance).max(heaviest).min(cap);
+    let max1 = (target1 * balance).max(heaviest).min(cap);
+
+    for _ in 0..passes {
+        let mut w0: f64 = (0..n).filter(|&i| side[i] == 0).map(|i| g.node_w[i]).sum();
+        // gain[i] = cut reduction if i moves to the other side.
+        let mut gain: Vec<f64> = (0..n)
+            .map(|i| {
+                let mut ext = 0.0;
+                let mut int = 0.0;
+                for &(j, w) in &g.adj[i] {
+                    if side[j] == side[i] {
+                        int += w;
+                    } else {
+                        ext += w;
+                    }
+                }
+                ext - int
+            })
+            .collect();
+        let mut locked = vec![false; n];
+        let mut moves: Vec<usize> = Vec::with_capacity(n);
+        let mut cum_gain = 0.0;
+        let mut best_gain = 0.0;
+        let mut best_len = 0usize;
+
+        // Lazy max-heap of candidate moves.
+        let mut heap: BinaryHeap<Key> = (0..n).map(|i| Key(gain[i], i)).collect();
+        // Balance-infeasible pops parked until the next applied move.
+        let mut parked: Vec<usize> = Vec::new();
+
+        'pass: loop {
+            let mut chosen = usize::MAX;
+            while let Some(Key(gk, i)) = heap.pop() {
+                if locked[i] {
+                    continue;
+                }
+                if (gk - gain[i]).abs() > 1e-12 {
+                    // Stale entry: re-push with the current gain.
+                    heap.push(Key(gain[i], i));
+                    continue;
+                }
+                let feasible = if side[i] == 0 {
+                    w0 - g.node_w[i] >= 0.0 && (total - w0 + g.node_w[i]) <= max1
+                } else {
+                    w0 + g.node_w[i] <= max0
+                };
+                if !feasible {
+                    parked.push(i);
+                    continue;
+                }
+                chosen = i;
+                break;
+            }
+            if chosen == usize::MAX {
+                break 'pass;
+            }
+            // Apply the move.
+            let i = chosen;
+            locked[i] = true;
+            cum_gain += gain[i];
+            if side[i] == 0 {
+                w0 -= g.node_w[i];
+                side[i] = 1;
+            } else {
+                w0 += g.node_w[i];
+                side[i] = 0;
+            }
+            moves.push(i);
+            for &(j, w) in &g.adj[i] {
+                if side[j] == side[i] {
+                    gain[j] -= 2.0 * w;
+                } else {
+                    gain[j] += 2.0 * w;
+                }
+                if !locked[j] {
+                    heap.push(Key(gain[j], j));
+                }
+            }
+            // Re-offer parked nodes now that the balance moved.
+            for p in parked.drain(..) {
+                if !locked[p] {
+                    heap.push(Key(gain[p], p));
+                }
+            }
+            if cum_gain > best_gain + eps {
+                best_gain = cum_gain;
+                best_len = moves.len();
+            }
+        }
+
+        // Roll back to the best prefix.
+        for &i in moves.iter().skip(best_len).rev() {
+            side[i] = 1 - side[i];
+        }
+        if best_gain <= eps {
+            break; // converged
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improves_a_bad_bisection() {
+        // Two triangles joined by one weak edge; start with a split that
+        // cuts a triangle.
+        let mut g = PartGraph::new(6);
+        for (a, b) in [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)] {
+            g.add_edge(a, b, 10.0);
+        }
+        g.add_edge(2, 3, 0.5);
+        let mut side = vec![0, 0, 1, 1, 1, 1]; // cuts two heavy edges
+        let before = g.cut(&side);
+        fm_refine(&g, &mut side, 0.5, 2.0, 4);
+        let after = g.cut(&side);
+        assert!(after < before);
+        assert!(after <= 0.5 + 1e-9, "should settle on the weak edge, cut={after}");
+    }
+
+    #[test]
+    fn respects_balance() {
+        let mut g = PartGraph::new(8);
+        for i in 0..7 {
+            g.add_edge(i, i + 1, 1.0);
+        }
+        let mut side = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        fm_refine(&g, &mut side, 0.5, 1.3, 4);
+        let w0 = side.iter().filter(|&&s| s == 0).count();
+        assert!((2..=6).contains(&w0), "w0={w0}");
+    }
+
+    #[test]
+    fn noop_on_optimal() {
+        let mut g = PartGraph::new(4);
+        g.add_edge(0, 1, 5.0);
+        g.add_edge(2, 3, 5.0);
+        g.add_edge(1, 2, 0.1);
+        let mut side = vec![0, 0, 1, 1];
+        fm_refine(&g, &mut side, 0.5, 2.0, 4);
+        assert_eq!(g.cut(&side), 0.1);
+    }
+
+    #[test]
+    fn handles_singleton() {
+        let g = PartGraph::new(1);
+        let mut side = vec![0];
+        fm_refine(&g, &mut side, 0.5, 2.0, 2);
+        assert_eq!(side, vec![0]);
+    }
+
+    #[test]
+    fn heap_matches_semantics_on_random_graphs() {
+        // The lazy-heap implementation must still produce valid
+        // bisections that never worsen the cut, across random graphs.
+        use crate::util::Rng;
+        for case in 0..30 {
+            let mut rng = Rng::new(case);
+            let n = rng.range(4, 80);
+            let mut g = PartGraph::new(n);
+            for _ in 0..(3 * n) {
+                let a = rng.below(n);
+                let b = rng.below(n);
+                if a != b {
+                    g.add_edge(a, b, rng.uniform(0.1, 5.0));
+                }
+            }
+            let mut side: Vec<usize> = (0..n).map(|i| i % 2).collect();
+            let before = g.cut(&side);
+            fm_refine(&g, &mut side, 0.5, 2.0, 6);
+            let after = g.cut(&side);
+            assert!(after <= before + 1e-9, "case {case}: {after} > {before}");
+            // Both sides non-empty.
+            let w0 = side.iter().filter(|&&s| s == 0).count();
+            assert!(w0 > 0 && w0 < n, "case {case}");
+        }
+    }
+}

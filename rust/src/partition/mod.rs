@@ -1,0 +1,404 @@
+//! Multilevel k-way graph partitioner — the METIS replacement used for op
+//! grouping (paper §4.1.1: "METIS to partition the computation graph to
+//! no more than 60 groups by minimizing the tensor sizes on the cut
+//! edges, while keeping the total computation time of each partition
+//! balanced with a balance factor of 2") and for the "Model Parallelism"
+//! replication option (§4.2).
+//!
+//! Classic three-phase scheme (Karypis & Kumar):
+//! 1. **Coarsening** — heavy-edge matching until the graph is small.
+//! 2. **Initial partition** — greedy BFS region growing on the coarse
+//!    graph (recursive bisection for k-way).
+//! 3. **Refinement** — FM boundary refinement with best-prefix rollback
+//!    while projecting back through the levels.
+
+mod fm;
+
+use crate::util::Rng;
+use fm::fm_refine;
+
+/// Undirected weighted graph for partitioning.
+#[derive(Clone, Debug, Default)]
+pub struct PartGraph {
+    pub node_w: Vec<f64>,
+    /// Adjacency: (neighbor, edge weight); symmetric.
+    pub adj: Vec<Vec<(usize, f64)>>,
+}
+
+impl PartGraph {
+    pub fn new(n: usize) -> Self {
+        Self { node_w: vec![1.0; n], adj: vec![Vec::new(); n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.node_w.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node_w.is_empty()
+    }
+
+    /// Add an undirected edge, merging parallel edges.
+    pub fn add_edge(&mut self, a: usize, b: usize, w: f64) {
+        if a == b || w <= 0.0 {
+            return;
+        }
+        for half in [(a, b), (b, a)] {
+            let (u, v) = half;
+            if let Some(e) = self.adj[u].iter_mut().find(|(x, _)| *x == v) {
+                e.1 += w;
+            } else {
+                self.adj[u].push((v, w));
+            }
+        }
+    }
+
+    pub fn total_node_weight(&self) -> f64 {
+        self.node_w.iter().sum()
+    }
+
+    /// Total weight of edges cut by `labels`.
+    pub fn cut(&self, labels: &[usize]) -> f64 {
+        let mut c = 0.0;
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &(v, w) in nbrs {
+                if u < v && labels[u] != labels[v] {
+                    c += w;
+                }
+            }
+        }
+        c
+    }
+}
+
+/// Partition `g` into `k` parts minimizing edge cut with each part's node
+/// weight at most `balance` times the average.  Returns labels in
+/// `[0, k)`. Deterministic for a given seed.
+pub fn partition(g: &PartGraph, k: usize, balance: f64, seed: u64) -> Vec<usize> {
+    assert!(k >= 1);
+    assert!(balance >= 1.0);
+    let n = g.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if k == 1 || n <= k {
+        // Trivial cases: everything in one part / one node per part.
+        return (0..n).map(|i| i % k).collect();
+    }
+    let mut rng = Rng::new(seed);
+    let mut labels = vec![0usize; n];
+    let ids: Vec<usize> = (0..n).collect();
+    recurse(g, &ids, k, 0, balance, &mut labels, &mut rng);
+    labels
+}
+
+/// Recursive bisection: split `ids` into ceil(k/2)/floor(k/2) shares.
+fn recurse(
+    g: &PartGraph,
+    ids: &[usize],
+    k: usize,
+    label_base: usize,
+    balance: f64,
+    labels: &mut [usize],
+    rng: &mut Rng,
+) {
+    if k == 1 {
+        for &i in ids {
+            labels[i] = label_base;
+        }
+        return;
+    }
+    let k1 = k / 2;
+    let k2 = k - k1;
+    let frac = k2 as f64 / k as f64; // weight share of side A (gets k2 parts)
+    let (sub, local_ids) = induced(g, ids);
+    let side = multilevel_bisect(&sub, frac, balance, rng);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for (li, &orig) in local_ids.iter().enumerate() {
+        if side[li] == 0 {
+            a.push(orig);
+        } else {
+            b.push(orig);
+        }
+    }
+    // Degenerate split guard: each side must be able to host its share
+    // of parts.
+    if a.len() < k2 || b.len() < k1 {
+        let mut all: Vec<usize> = ids.to_vec();
+        rng.shuffle(&mut all);
+        let cut = (all.len() * k2 / k).max(1).min(all.len() - 1);
+        a = all[..cut].to_vec();
+        b = all[cut..].to_vec();
+    }
+    recurse(g, &a, k2, label_base, balance, labels, rng);
+    recurse(g, &b, k1, label_base + k2, balance, labels, rng);
+}
+
+/// Induced subgraph over `ids`; returns (subgraph, local->orig map).
+fn induced(g: &PartGraph, ids: &[usize]) -> (PartGraph, Vec<usize>) {
+    let mut local = vec![usize::MAX; g.len()];
+    for (li, &i) in ids.iter().enumerate() {
+        local[i] = li;
+    }
+    let mut sub = PartGraph::new(ids.len());
+    for (li, &i) in ids.iter().enumerate() {
+        sub.node_w[li] = g.node_w[i];
+        for &(j, w) in &g.adj[i] {
+            let lj = local[j];
+            if lj != usize::MAX && lj > li {
+                sub.add_edge(li, lj, w);
+            }
+        }
+    }
+    (sub, ids.to_vec())
+}
+
+/// Bisect `g` into sides {0, 1} with side-0 weight ~ frac of total.
+///
+/// The user-visible balance factor applies to the final k-way partition;
+/// individual bisections use a much tighter factor (as METIS does) —
+/// imbalance compounds multiplicatively through the recursion and a
+/// lopsided early split forces terrible cuts further down.
+fn multilevel_bisect(g: &PartGraph, frac: f64, balance: f64, rng: &mut Rng) -> Vec<usize> {
+    const COARSE_LIMIT: usize = 96;
+    let balance = balance.min(1.2);
+    if g.len() <= COARSE_LIMIT {
+        let mut side = greedy_grow(g, frac, rng);
+        fm_refine(g, &mut side, frac, balance, 8);
+        return side;
+    }
+    // Coarsen one level by heavy-edge matching.
+    let (coarse, map) = coarsen(g, rng);
+    if coarse.len() >= g.len() {
+        // Matching failed to shrink (e.g. no edges): fall back to greedy.
+        let mut side = greedy_grow(g, frac, rng);
+        fm_refine(g, &mut side, frac, balance, 8);
+        return side;
+    }
+    let coarse_side = multilevel_bisect(&coarse, frac, balance, rng);
+    // Project back and refine at this level.
+    let mut side: Vec<usize> = (0..g.len()).map(|i| coarse_side[map[i]]).collect();
+    fm_refine(g, &mut side, frac, balance, 4);
+    side
+}
+
+/// Heavy-edge matching coarsening. Returns (coarse graph, fine->coarse).
+fn coarsen(g: &PartGraph, rng: &mut Rng) -> (PartGraph, Vec<usize>) {
+    let n = g.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![usize::MAX; n];
+    for &u in &order {
+        if mate[u] != usize::MAX {
+            continue;
+        }
+        let mut best = usize::MAX;
+        let mut best_w = -1.0;
+        for &(v, w) in &g.adj[u] {
+            if mate[v] == usize::MAX && w > best_w {
+                best = v;
+                best_w = w;
+            }
+        }
+        if best != usize::MAX {
+            mate[u] = best;
+            mate[best] = u;
+        } else {
+            mate[u] = u;
+        }
+    }
+    let mut map = vec![usize::MAX; n];
+    let mut nc = 0;
+    for u in 0..n {
+        if map[u] != usize::MAX {
+            continue;
+        }
+        map[u] = nc;
+        let m = mate[u];
+        if m != u && m != usize::MAX {
+            map[m] = nc;
+        }
+        nc += 1;
+    }
+    let mut coarse = PartGraph::new(nc);
+    for u in 0..n {
+        coarse.node_w[map[u]] += g.node_w[u];
+    }
+    for i in coarse.node_w.iter_mut() {
+        *i -= 1.0; // PartGraph::new initializes weights to 1.0
+    }
+    for u in 0..n {
+        for &(v, w) in &g.adj[u] {
+            if u < v && map[u] != map[v] {
+                coarse.add_edge(map[u], map[v], w);
+            }
+        }
+    }
+    (coarse, map)
+}
+
+/// Greedy BFS region growing: grow side 0 from a seed picking the
+/// frontier node with maximum attachment until reaching `frac` weight.
+fn greedy_grow(g: &PartGraph, frac: f64, rng: &mut Rng) -> Vec<usize> {
+    let n = g.len();
+    let total = g.total_node_weight();
+    let target = total * frac;
+    let mut side = vec![1usize; n];
+    let mut in_a = vec![false; n];
+    let mut attach = vec![0.0f64; n];
+    let seed = rng.below(n);
+    let mut grown = 0.0;
+    let mut cur = seed;
+    loop {
+        in_a[cur] = true;
+        side[cur] = 0;
+        grown += g.node_w[cur];
+        if grown >= target {
+            break;
+        }
+        for &(v, w) in &g.adj[cur] {
+            if !in_a[v] {
+                attach[v] += w;
+            }
+        }
+        // Pick the most attached unassigned node; fall back to any.
+        let mut best = usize::MAX;
+        let mut best_a = -1.0;
+        for v in 0..n {
+            if !in_a[v] && attach[v] > best_a {
+                best = v;
+                best_a = attach[v];
+            }
+        }
+        if best == usize::MAX || best_a <= 0.0 {
+            match (0..n).find(|&v| !in_a[v]) {
+                Some(v) => best = v,
+                None => break,
+            }
+        }
+        cur = best;
+    }
+    side
+}
+
+/// Verify the balance constraint: every part's weight <= balance * avg.
+pub fn check_balance(g: &PartGraph, labels: &[usize], k: usize, balance: f64) -> bool {
+    let total = g.total_node_weight();
+    let avg = total / k as f64;
+    let mut w = vec![0.0; k];
+    for (i, &l) in labels.iter().enumerate() {
+        w[l] += g.node_w[i];
+    }
+    w.iter().all(|&x| x <= balance * avg + 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A graph of `c` cliques of size `s` connected by single weak edges.
+    fn clique_chain(c: usize, s: usize) -> PartGraph {
+        let mut g = PartGraph::new(c * s);
+        for ci in 0..c {
+            for i in 0..s {
+                for j in (i + 1)..s {
+                    g.add_edge(ci * s + i, ci * s + j, 10.0);
+                }
+            }
+            if ci + 1 < c {
+                g.add_edge(ci * s + s - 1, (ci + 1) * s, 0.1);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn splits_cliques_on_weak_edges() {
+        let g = clique_chain(4, 8);
+        let labels = partition(&g, 4, 2.0, 1);
+        // The cut should only contain the 3 weak edges: cut weight 0.3.
+        let cut = g.cut(&labels);
+        assert!(cut <= 0.3 + 1e-9, "cut={cut}");
+        // Each clique must land in a single part.
+        for ci in 0..4 {
+            let l0 = labels[ci * 8];
+            for i in 0..8 {
+                assert_eq!(labels[ci * 8 + i], l0, "clique {ci} split");
+            }
+        }
+    }
+
+    #[test]
+    fn respects_balance_factor() {
+        let mut g = PartGraph::new(100);
+        for i in 0..99 {
+            g.add_edge(i, i + 1, 1.0);
+        }
+        let labels = partition(&g, 10, 2.0, 2);
+        assert!(check_balance(&g, &labels, 10, 2.0));
+        let distinct: std::collections::HashSet<usize> = labels.iter().copied().collect();
+        assert_eq!(distinct.len(), 10);
+    }
+
+    #[test]
+    fn weighted_nodes_balanced() {
+        let mut g = PartGraph::new(20);
+        for i in 0..20 {
+            g.node_w[i] = if i < 2 { 50.0 } else { 1.0 };
+        }
+        for i in 0..19 {
+            g.add_edge(i, i + 1, 1.0);
+        }
+        let labels = partition(&g, 2, 2.0, 3);
+        // The two heavy nodes must not be in the same part together with
+        // everything else; balance keeps sides within 2x of avg (59).
+        assert!(check_balance(&g, &labels, 2, 2.0));
+    }
+
+    #[test]
+    fn k_equals_one_and_n_less_than_k() {
+        let g = clique_chain(1, 5);
+        assert!(partition(&g, 1, 2.0, 4).iter().all(|&l| l == 0));
+        let labels = partition(&g, 8, 2.0, 4);
+        assert_eq!(labels.len(), 5);
+        assert!(labels.iter().all(|&l| l < 8));
+    }
+
+    #[test]
+    fn disconnected_graph_handled() {
+        let g = PartGraph::new(16); // no edges at all
+        let labels = partition(&g, 4, 2.0, 5);
+        assert!(check_balance(&g, &labels, 4, 2.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = clique_chain(3, 10);
+        assert_eq!(partition(&g, 3, 2.0, 7), partition(&g, 3, 2.0, 7));
+    }
+
+    #[test]
+    fn large_graph_smoke() {
+        // 2000-node mesh partitions quickly into 60 balanced parts.
+        let side = 45;
+        let mut g = PartGraph::new(side * side);
+        for r in 0..side {
+            for c in 0..side {
+                let i = r * side + c;
+                if c + 1 < side {
+                    g.add_edge(i, i + 1, 1.0);
+                }
+                if r + 1 < side {
+                    g.add_edge(i, i + side, 1.0);
+                }
+            }
+        }
+        let labels = partition(&g, 60, 2.0, 8);
+        assert!(check_balance(&g, &labels, 60, 2.0));
+        // A mesh 60-way cut should be far below total edge weight.
+        let total_w: f64 = 2.0 * side as f64 * (side - 1) as f64;
+        assert!(g.cut(&labels) < 0.4 * total_w);
+    }
+}
+

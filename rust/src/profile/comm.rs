@@ -1,0 +1,200 @@
+//! Communication cost models: GRPC point-to-point, ring AllReduce,
+//! PS push/pull and SFB broadcast (paper §4.1.2, §4.2.3).
+//!
+//! Following the paper's methodology, the models are *fitted* segmented
+//! linear curves over synthetic measurements from 1KB to 1GB (doubling):
+//! time(bytes) at a reference bandwidth, then scaled by the actual link
+//! bandwidth.  Small transfers are latency-dominated (the first segment),
+//! large ones bandwidth-dominated (the second).
+
+use super::seglin::SegmentedLinear;
+use crate::cluster::{DeviceId, Topology};
+use crate::util::Rng;
+
+/// Fixed per-message software latency (GRPC serialization + syscalls).
+pub const GRPC_LATENCY_S: f64 = 120e-6;
+/// Per-step latency of a collective ring step.
+pub const RING_STEP_LATENCY_S: f64 = 25e-6;
+/// Reference bandwidth the curves are fitted at (bytes/s): 10 Gbps.
+const REF_BW: f64 = 10.0e9 / 8.0;
+/// Protocol efficiency: achievable goodput fraction of link rate.
+pub const GOODPUT: f64 = 0.85;
+
+/// Ground-truth synthetic transfer time at the reference bandwidth.
+fn grpc_truth(bytes: f64) -> f64 {
+    GRPC_LATENCY_S + bytes / (REF_BW * GOODPUT)
+}
+
+#[derive(Clone, Debug)]
+pub struct CommModel {
+    /// Fitted GRPC curve at the reference bandwidth: time vs bytes.
+    grpc_curve: SegmentedLinear,
+}
+
+impl CommModel {
+    /// Fit transfer curves from synthetic measurements (1KB..1GB,
+    /// doubling, small multiplicative noise) — the §4.1.2 procedure.
+    pub fn fit(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut b = 1024.0;
+        while b <= 1e9 {
+            xs.push(b);
+            ys.push(grpc_truth(b) * (1.0 + 0.02 * rng.normal()));
+            b *= 2.0;
+        }
+        Self { grpc_curve: SegmentedLinear::fit(&xs, &ys) }
+    }
+
+    /// Point-to-point transfer time of `bytes` over a link of
+    /// `bw_bytes_per_s`: evaluate the fitted reference curve and rescale
+    /// its bandwidth-dependent part.
+    pub fn transfer_time(&self, bytes: f64, bw_bytes_per_s: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        if !bw_bytes_per_s.is_finite() {
+            return 0.0; // same device
+        }
+        let t_ref = self.grpc_curve.eval(bytes);
+        let bw_part = bytes / (REF_BW * GOODPUT);
+        let lat_part = (t_ref - bw_part).max(0.0);
+        lat_part + bytes / (bw_bytes_per_s * GOODPUT)
+    }
+
+    /// Ring AllReduce across `devs`: 2(n-1)/n * bytes over the bottleneck
+    /// link + per-step latencies (2(n-1) steps).
+    pub fn allreduce_time(&self, bytes: f64, devs: &[DeviceId], topo: &Topology) -> f64 {
+        let n = devs.len();
+        if n <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let bw = topo.bottleneck_bw_gbps(devs) * 1e9 / 8.0 * GOODPUT;
+        let steps = 2 * (n - 1);
+        2.0 * (n - 1) as f64 / n as f64 * bytes / bw + steps as f64 * RING_STEP_LATENCY_S
+    }
+
+    /// PS synchronization: all workers push to `ps` and pull back.  The
+    /// PS NIC serializes: total 2(n-1) transfers of `bytes` through the
+    /// slowest worker-PS link.
+    pub fn ps_time(&self, bytes: f64, devs: &[DeviceId], ps: DeviceId, topo: &Topology) -> f64 {
+        let workers: Vec<DeviceId> = devs.iter().copied().filter(|&d| d != ps).collect();
+        if workers.is_empty() || bytes <= 0.0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for w in &workers {
+            let bw = topo.bw_bytes_per_s(*w, ps);
+            total += 2.0 * self.transfer_time(bytes, bw);
+        }
+        total
+    }
+
+    /// SFB broadcast of sufficient factors (paper's second objective
+    /// term): D(D-1) transfers of `bytes` over the bottleneck bandwidth
+    /// `tau` among the D devices.
+    pub fn sfb_broadcast_time(&self, bytes: f64, devs: &[DeviceId], topo: &Topology) -> f64 {
+        let d = devs.len();
+        if d <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let tau = topo.bottleneck_bw_gbps(devs) * 1e9 / 8.0 * GOODPUT;
+        (d * (d - 1)) as f64 * bytes / tau
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::{sfb_pair, testbed};
+
+    #[test]
+    fn fitted_curve_close_to_truth() {
+        let m = CommModel::fit(1);
+        for bytes in [4096.0, 1e6, 64e6, 512e6] {
+            let t = m.transfer_time(bytes, REF_BW);
+            let truth = grpc_truth(bytes);
+            assert!(
+                (t - truth).abs() / truth < 0.25,
+                "bytes={bytes}: fit {t} vs truth {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_transfers_latency_dominated() {
+        let m = CommModel::fit(2);
+        let t1 = m.transfer_time(1024.0, 100e9 / 8.0);
+        let t2 = m.transfer_time(2048.0, 100e9 / 8.0);
+        // Doubling tiny payload barely changes the time.
+        assert!(t2 < t1 * 1.5);
+        assert!(t1 > GRPC_LATENCY_S * 0.5);
+    }
+
+    #[test]
+    fn large_transfers_scale_with_bandwidth() {
+        let m = CommModel::fit(3);
+        let slow = m.transfer_time(1e9, 10e9 / 8.0);
+        let fast = m.transfer_time(1e9, 100e9 / 8.0);
+        let ratio = slow / fast;
+        assert!((6.0..11.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn zero_bytes_and_same_device_are_free() {
+        let m = CommModel::fit(4);
+        assert_eq!(m.transfer_time(0.0, 1e9), 0.0);
+        assert_eq!(m.transfer_time(1e6, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn allreduce_matches_ring_formula() {
+        let m = CommModel::fit(5);
+        let t = testbed();
+        let devs = t.mask_devices(0b1); // 4x V100 NVLink group
+        assert_eq!(devs.len(), 4);
+        let bytes = 100e6;
+        let time = m.allreduce_time(bytes, &devs, &t);
+        let bw = 200.0e9 / 8.0 * GOODPUT;
+        let expect = 2.0 * 3.0 / 4.0 * bytes / bw + 6.0 * RING_STEP_LATENCY_S;
+        assert!((time - expect).abs() / expect < 1e-9);
+        // Single device: free.
+        assert_eq!(m.allreduce_time(bytes, &devs[..1], &t), 0.0);
+    }
+
+    #[test]
+    fn allreduce_cross_machine_slower() {
+        let m = CommModel::fit(6);
+        let t = testbed();
+        let intra = t.mask_devices(0b1);
+        let cross = t.mask_devices(0b11);
+        let b = 100e6;
+        assert!(m.allreduce_time(b, &cross, &t) > m.allreduce_time(b, &intra, &t));
+    }
+
+    #[test]
+    fn ps_time_scales_with_workers() {
+        let m = CommModel::fit(7);
+        let t = testbed();
+        let devs = t.mask_devices(0b11);
+        let ps = devs[0];
+        let t_all = m.ps_time(1e6, &devs, ps, &t);
+        let t_few = m.ps_time(1e6, &devs[..3], ps, &t);
+        assert!(t_all > t_few);
+        // PS alone: nothing to sync.
+        assert_eq!(m.ps_time(1e6, &devs[..1], devs[0], &t), 0.0);
+    }
+
+    #[test]
+    fn sfb_broadcast_formula() {
+        let m = CommModel::fit(8);
+        let t = sfb_pair();
+        let devs = t.devices();
+        let bytes = 1e6;
+        let tau = 10.0e9 / 8.0 * GOODPUT;
+        let expect = 2.0 * bytes / tau;
+        let got = m.sfb_broadcast_time(bytes, &devs, &t);
+        assert!((got - expect).abs() / expect < 1e-9);
+    }
+}

@@ -1,0 +1,240 @@
+//! Profiler and cost models (paper §4.1.2).
+//!
+//! The paper's profiler runs each op on each GPU type under a sweep of
+//! batch sizes and fits a linear batch model, and measures GRPC / NCCL
+//! AllReduce transfer curves (1KB..1GB) fitting segmented linear models.
+//! We have no physical GPUs (see DESIGN.md substitutions), so the
+//! "measurements" come from a calibrated analytic device model
+//! ([`DeviceModel`]) with measurement noise; everything downstream — the
+//! linear batch model, the segmented-linear transfer models, the
+//! simulator — consumes only the fitted profiles, exactly as in the
+//! paper.
+
+pub mod comm;
+pub mod seglin;
+
+pub use comm::CommModel;
+pub use seglin::SegmentedLinear;
+
+use crate::cluster::GpuType;
+use crate::graph::ir::Op;
+use crate::graph::OpKind;
+use crate::util::stats::linear_fit;
+use crate::util::Rng;
+
+/// Per-op kernel-launch overhead (seconds). Dominates tiny ops, exactly
+/// why the paper's batch-time model has a non-zero intercept.
+pub const LAUNCH_OVERHEAD_S: f64 = 12e-6;
+
+/// Memory bandwidth per GPU generation, bytes/s (roofline second axis).
+pub fn mem_bw_bytes(gpu: &GpuType) -> f64 {
+    match gpu.name {
+        "V100-32G" | "V100-16G" => 900e9,
+        "1080Ti" => 484e9,
+        "P100" => 732e9,
+        "T4" => 300e9,
+        _ => 500e9,
+    }
+}
+
+/// Analytic "ground truth" device model used in place of physical GPUs.
+pub struct DeviceModel;
+
+impl DeviceModel {
+    /// Execution time of `op` on `gpu` with a fraction `frac` of the
+    /// batch (1.0 = full batch): roofline max(compute, memory) + launch.
+    pub fn op_time(op: &Op, gpu: &GpuType, frac: f64) -> f64 {
+        match op.kind {
+            OpKind::Placeholder | OpKind::Variable => return 0.0,
+            _ => {}
+        }
+        let flops = op.flops * frac;
+        let bytes = op.output_bytes * frac;
+        let compute = flops / gpu.effective_flops();
+        let memory = 2.0 * bytes / mem_bw_bytes(gpu);
+        LAUNCH_OVERHEAD_S + compute.max(memory)
+    }
+}
+
+/// The linear batch-time model the profiler fits per (op, GPU type):
+/// `time(frac) = intercept + slope * frac` (paper: "computation time is
+/// almost linear with the batch size").
+#[derive(Clone, Copy, Debug)]
+pub struct BatchTimeModel {
+    pub intercept: f64,
+    pub slope: f64,
+}
+
+impl BatchTimeModel {
+    pub fn eval(&self, frac: f64) -> f64 {
+        (self.intercept + self.slope * frac).max(0.0)
+    }
+}
+
+/// Profiler output: fitted batch-time models for every (op, gpu-type)
+/// pair plus the communication model.
+pub struct CostModel {
+    /// `models[op][gpu_type_index]`.
+    models: Vec<Vec<BatchTimeModel>>,
+    gpu_names: Vec<&'static str>,
+    pub comm: CommModel,
+}
+
+/// "Typical batch sizes below 60" (§4.1.2) — profiled as fractions of the
+/// full batch.
+const PROFILE_FRACS: [f64; 5] = [0.1, 0.25, 0.5, 0.75, 1.0];
+/// Each profile point is measured 5 times (§5.1).
+const PROFILE_REPS: usize = 5;
+
+impl CostModel {
+    /// Profile the graph's ops on the given GPU types.  `noise` is the
+    /// relative measurement noise (0.0 = exact; ~0.03 realistic).
+    pub fn profile(ops: &[Op], gpu_types: &[GpuType], noise: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut models = Vec::with_capacity(ops.len());
+        for op in ops {
+            let mut per_gpu = Vec::with_capacity(gpu_types.len());
+            for gpu in gpu_types {
+                let mut xs = Vec::new();
+                let mut ys = Vec::new();
+                for &f in &PROFILE_FRACS {
+                    let mut acc = 0.0;
+                    for _ in 0..PROFILE_REPS {
+                        let t = DeviceModel::op_time(op, gpu, f);
+                        acc += t * (1.0 + noise * rng.normal());
+                    }
+                    xs.push(f);
+                    ys.push((acc / PROFILE_REPS as f64).max(0.0));
+                }
+                let (intercept, slope) = linear_fit(&xs, &ys);
+                per_gpu.push(BatchTimeModel { intercept, slope });
+            }
+            models.push(per_gpu);
+        }
+        Self {
+            models,
+            gpu_names: gpu_types.iter().map(|g| g.name).collect(),
+            comm: CommModel::fit(seed ^ 0x5f5f),
+        }
+    }
+
+    fn gpu_index(&self, gpu: &GpuType) -> usize {
+        self.gpu_names
+            .iter()
+            .position(|&n| n == gpu.name)
+            .unwrap_or_else(|| panic!("GPU type {} not profiled", gpu.name))
+    }
+
+    /// Predicted time of op `op_id` on `gpu` with batch fraction `frac`.
+    pub fn op_time(&self, op_id: usize, gpu: &GpuType, frac: f64) -> f64 {
+        self.models[op_id][self.gpu_index(gpu)].eval(frac)
+    }
+
+    /// The fitted linear batch-time model of (op, gpu) — group-level
+    /// costs aggregate these (a sum of linear models is linear).
+    pub fn batch_model(&self, op_id: usize, gpu: &GpuType) -> BatchTimeModel {
+        self.models[op_id][self.gpu_index(gpu)]
+    }
+
+    /// Profile a graph against the distinct GPU types of a topology.
+    pub fn profile_for_topology(
+        ops: &[crate::graph::ir::Op],
+        topo: &crate::cluster::Topology,
+        noise: f64,
+        seed: u64,
+    ) -> Self {
+        Self::profile(ops, &unique_gpus(topo), noise, seed)
+    }
+
+    /// Full-batch time averaged over all profiled GPU types (a GNN node
+    /// feature).
+    pub fn op_time_avg(&self, op_id: usize) -> f64 {
+        let row = &self.models[op_id];
+        row.iter().map(|m| m.eval(1.0)).sum::<f64>() / row.len() as f64
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.models.len()
+    }
+}
+
+/// The distinct GPU types present in a topology.
+pub fn unique_gpus(topo: &crate::cluster::Topology) -> Vec<GpuType> {
+    let mut out: Vec<GpuType> = Vec::new();
+    for g in &topo.groups {
+        if !out.iter().any(|x| x.name == g.gpu.name) {
+            out.push(g.gpu);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GTX1080TI, P100, V100_16G};
+    use crate::graph::ir::{OpBuilder, OpKind};
+
+    fn conv_op() -> Op {
+        OpBuilder::new("conv", "Conv2D").flops(2e9).out_bytes(16e6).build()
+    }
+
+    #[test]
+    fn device_model_roofline() {
+        let op = conv_op();
+        let t_v100 = DeviceModel::op_time(&op, &V100_16G, 1.0);
+        let t_1080 = DeviceModel::op_time(&op, &GTX1080TI, 1.0);
+        assert!(t_v100 < t_1080, "V100 must beat 1080Ti on compute-bound op");
+        // Tiny op is launch-overhead dominated.
+        let tiny = OpBuilder::new("t", "Add").flops(10.0).out_bytes(64.0).build();
+        let t = DeviceModel::op_time(&tiny, &V100_16G, 1.0);
+        assert!((t - LAUNCH_OVERHEAD_S).abs() / LAUNCH_OVERHEAD_S < 0.01);
+    }
+
+    #[test]
+    fn variables_cost_nothing() {
+        let v = OpBuilder::new("v", "Variable")
+            .kind(OpKind::Variable)
+            .param_bytes(1e6)
+            .build();
+        assert_eq!(DeviceModel::op_time(&v, &P100, 1.0), 0.0);
+    }
+
+    #[test]
+    fn profile_fits_linear_batch_model() {
+        let ops = vec![conv_op()];
+        let cm = CostModel::profile(&ops, &[V100_16G, P100], 0.0, 1);
+        let full = cm.op_time(0, &V100_16G, 1.0);
+        let half = cm.op_time(0, &V100_16G, 0.5);
+        let truth_full = DeviceModel::op_time(&ops[0], &V100_16G, 1.0);
+        assert!((full - truth_full).abs() / truth_full < 0.02);
+        // Linearity: half-batch ~ intercept + half the variable part.
+        assert!(half < full && half > 0.4 * full);
+    }
+
+    #[test]
+    fn profile_with_noise_stays_close() {
+        let ops = vec![conv_op()];
+        let cm = CostModel::profile(&ops, &[V100_16G], 0.03, 7);
+        let truth = DeviceModel::op_time(&ops[0], &V100_16G, 1.0);
+        let fit = cm.op_time(0, &V100_16G, 1.0);
+        assert!((fit - truth).abs() / truth < 0.1, "fit {fit} truth {truth}");
+    }
+
+    #[test]
+    fn avg_time_between_extremes() {
+        let ops = vec![conv_op()];
+        let cm = CostModel::profile(&ops, &[V100_16G, GTX1080TI], 0.0, 1);
+        let a = cm.op_time(0, &V100_16G, 1.0);
+        let b = cm.op_time(0, &GTX1080TI, 1.0);
+        let avg = cm.op_time_avg(0);
+        assert!(avg > a.min(b) && avg < a.max(b));
+    }
+
+    #[test]
+    #[should_panic(expected = "not profiled")]
+    fn unknown_gpu_panics() {
+        let cm = CostModel::profile(&[conv_op()], &[V100_16G], 0.0, 1);
+        cm.op_time(0, &crate::cluster::T4, 1.0);
+    }
+}

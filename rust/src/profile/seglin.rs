@@ -1,0 +1,101 @@
+//! Segmented linear regression — the profiler's transfer-time model
+//! (paper §4.1.2: "Segmented linear regression models are built for GRPC
+//! transfer and for AllReduce communication" from measurements of 1KB to
+//! 1GB, doubling).
+//!
+//! Fit: given (x, y) samples sorted by x, choose the breakpoint (from the
+//! sample xs) that minimizes total squared error of two independent OLS
+//! fits, one per segment.  Evaluation clamps below the smallest sample.
+
+use crate::util::stats::linear_fit;
+
+#[derive(Clone, Debug)]
+pub struct SegmentedLinear {
+    /// Breakpoint in x; below uses (a1, b1), at/above uses (a2, b2).
+    pub brk: f64,
+    pub a1: f64,
+    pub b1: f64,
+    pub a2: f64,
+    pub b2: f64,
+}
+
+/// *Relative* squared error: transfer-time samples span 5+ orders of
+/// magnitude (1KB..1GB), so absolute SSE would let the large-message
+/// segment dominate breakpoint selection and ruin the latency plateau fit.
+fn sse(xs: &[f64], ys: &[f64], a: f64, b: f64) -> f64 {
+    xs.iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let r = (y - (a + b * x)) / y.abs().max(1e-30);
+            r * r
+        })
+        .sum()
+}
+
+impl SegmentedLinear {
+    /// Fit from samples; requires at least 4 points (2 per segment).
+    pub fn fit(xs: &[f64], ys: &[f64]) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        assert!(xs.len() >= 4, "need >= 4 samples");
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+        let sx: Vec<f64> = idx.iter().map(|&i| xs[i]).collect();
+        let sy: Vec<f64> = idx.iter().map(|&i| ys[i]).collect();
+
+        let mut best: Option<(f64, Self)> = None;
+        for k in 2..=(sx.len() - 2) {
+            let (a1, b1) = linear_fit(&sx[..k], &sy[..k]);
+            let (a2, b2) = linear_fit(&sx[k..], &sy[k..]);
+            let err = sse(&sx[..k], &sy[..k], a1, b1) + sse(&sx[k..], &sy[k..], a2, b2);
+            let cand = Self { brk: sx[k], a1, b1, a2, b2 };
+            if best.as_ref().map_or(true, |(e, _)| err < *e) {
+                best = Some((err, cand));
+            }
+        }
+        best.unwrap().1
+    }
+
+    pub fn eval(&self, x: f64) -> f64 {
+        let y = if x < self.brk { self.a1 + self.b1 * x } else { self.a2 + self.b2 * x };
+        y.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_piecewise_line() {
+        // y = 10 + 0x for x<100 ; y = 0 + 0.1x for x>=100
+        let xs: Vec<f64> = (0..40).map(|i| i as f64 * 10.0).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|&x| if x < 100.0 { 10.0 } else { 0.1 * x }).collect();
+        let m = SegmentedLinear::fit(&xs, &ys);
+        assert!((m.eval(50.0) - 10.0).abs() < 1.5, "{}", m.eval(50.0));
+        assert!((m.eval(300.0) - 30.0).abs() < 1.5, "{}", m.eval(300.0));
+    }
+
+    #[test]
+    fn monotone_inputs_dont_go_negative() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let ys = [5.0, 5.1, 5.2, 6.0, 8.0, 12.0];
+        let m = SegmentedLinear::fit(&xs, &ys);
+        assert!(m.eval(0.0) >= 0.0);
+        assert!(m.eval(64.0) > m.eval(32.0) * 0.9);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let xs = [8.0, 1.0, 4.0, 2.0, 32.0, 16.0];
+        let ys = [6.0, 5.0, 5.2, 5.1, 12.0, 8.0];
+        let m = SegmentedLinear::fit(&xs, &ys);
+        assert!(m.eval(16.0) > 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "need >= 4")]
+    fn too_few_samples_panics() {
+        SegmentedLinear::fit(&[1.0, 2.0], &[1.0, 2.0]);
+    }
+}

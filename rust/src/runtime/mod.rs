@@ -1,0 +1,132 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path (no Python anywhere near here).
+//!
+//! Follows the reference wiring of `/opt/xla-example/load_hlo`:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` (HLO *text* is
+//! the interchange format — serialized protos from jax >= 0.5 carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects) →
+//! `client.compile` → `execute`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled artifact (all our artifacts return tuples).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 literals; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given dims from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal shape {dims:?} needs {expect} elements, got {}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract a flat f32 vector from a literal.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        std::path::Path::new("artifacts/gnn_infer.hlo.txt").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(literal_f32(&[1.0], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn load_and_run_infer_artifact() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text("artifacts/gnn_infer.hlo.txt").unwrap();
+        let manifest = crate::gnn::manifest::Manifest::load("artifacts/manifest.txt").unwrap();
+        // All-zero inputs of the manifest shapes must produce finite,
+        // normalized priors.
+        let mut inputs = Vec::new();
+        for spec in manifest.inputs_for("infer") {
+            let n: i64 = spec.dims.iter().product();
+            inputs.push(literal_f32(&vec![0.0; n as usize], &spec.dims).unwrap());
+        }
+        // Use the real initial parameters for input 0.
+        let params = crate::gnn::params::load_params("artifacts/params_init.bin").unwrap();
+        inputs[0] = literal_f32(&params, &[params.len() as i64]).unwrap();
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let priors = to_vec_f32(&out[0]).unwrap();
+        let b = manifest.constant("B_INFER") as usize;
+        let a = manifest.constant("N_CAND") as usize;
+        assert_eq!(priors.len(), b * a);
+        assert!(priors.iter().all(|p| p.is_finite()));
+    }
+}

@@ -1,0 +1,346 @@
+//! Sufficient Factor Broadcasting optimization (paper §4.2.3).
+//!
+//! For every gradient tensor produced inside a *replicated* op group,
+//! extract the ancestor subgraph around the gradient, solve the min-cut
+//! style ILP ([`ilp`]) that decides which ops to flip from "Replicate" to
+//! "Duplicate", and aggregate the result into an [`SfbPlan`] that the
+//! group-level lowering folds into the simulation:
+//!
+//! * synced gradient bytes shrink by the covered gradients,
+//! * each replica pays the duplicated ops' extra compute,
+//! * the cut tensors (the sufficient factors) are broadcast.
+//!
+//! The per-op-type duplication census reproduces the paper's Table 6.
+
+pub mod ilp;
+
+pub use ilp::{solve, SfbProblem, SfbSolution};
+
+use std::collections::HashMap;
+
+use crate::cluster::Topology;
+use crate::graph::grouping::GroupGraph;
+use crate::graph::ir::CompGraph;
+use crate::profile::CostModel;
+use crate::strategy::{ReplOption, Strategy};
+
+/// Cap on extracted subgraph size; deeper ancestors are treated as
+/// not-duplicable (alpha fixed to 0), which is always feasible.
+const MAX_SUBGRAPH: usize = 120;
+
+/// Per-group aggregate effect of SFB decisions.
+#[derive(Clone, Debug, Default)]
+pub struct GroupSfb {
+    /// Gradient bytes removed from AllReduce/PS synchronization.
+    pub saved_sync_bytes: f64,
+    /// Extra compute per replica, seconds (full-batch re-execution of the
+    /// duplicated ops).
+    pub extra_compute_s: f64,
+    /// Total sufficient-factor bytes broadcast.
+    pub broadcast_bytes: f64,
+    /// How many gradients SFB covers in this group.
+    pub gradients_covered: usize,
+}
+
+/// The plan for a whole strategy + the Table 6 census.
+#[derive(Clone, Debug, Default)]
+pub struct SfbPlan {
+    pub per_group: Vec<GroupSfb>,
+    /// op_type -> number of duplicated ops (census across gradients).
+    pub census: HashMap<&'static str, usize>,
+    /// Total predicted saving (negative objectives summed), seconds.
+    pub predicted_saving_s: f64,
+    /// Solver statistics.
+    pub problems_solved: usize,
+    pub problems_beneficial: usize,
+}
+
+/// Extract the SFB subproblem for one gradient op.
+///
+/// Returns (problem, local->global op ids), or None if the gradient has
+/// no in-group ancestors worth considering.
+pub fn extract_problem(
+    g: &CompGraph,
+    gg: &GroupGraph,
+    cost: &CostModel,
+    grad_op: usize,
+    devs: usize,
+    tau_bytes_per_s: f64,
+) -> Option<(SfbProblem, Vec<usize>)> {
+    let grp = gg.assignment[grad_op];
+    // Collect in-group ancestors of grad_op by reverse DFS.
+    let mut included: Vec<usize> = Vec::new();
+    let mut seen = vec![false; g.len()];
+    let mut stack = vec![grad_op];
+    seen[grad_op] = true;
+    while let Some(i) = stack.pop() {
+        included.push(i);
+        if included.len() >= MAX_SUBGRAPH {
+            break;
+        }
+        for &j in &g.ops[i].inputs {
+            // Parameters are fully replicated (free) and Placeholders are
+            // the input pipeline (their data counts as boundary bytes if a
+            // duplicated consumer needs it in full) — neither is eligible
+            // for duplication itself.
+            if !seen[j]
+                && gg.assignment[j] == grp
+                && !g.ops[j].is_param()
+                && !matches!(g.ops[j].kind, crate::graph::OpKind::Placeholder)
+            {
+                seen[j] = true;
+                stack.push(j);
+            }
+        }
+    }
+    if included.len() < 2 {
+        return None;
+    }
+    // Local indices in topological (ascending global id) order, so the
+    // solver's reverse-order = consumers-first invariant holds.
+    included.sort_unstable();
+    let local: HashMap<usize, usize> =
+        included.iter().enumerate().map(|(l, &o)| (o, l)).collect();
+    let g_idx = local[&grad_op];
+
+    let mut edges = Vec::new();
+    for (&orig, &li) in &local {
+        for &inp in &g.ops[orig].inputs {
+            if let Some(&lj) = local.get(&inp) {
+                edges.push((lj, li, g.ops[inp].output_bytes.max(1.0)));
+            }
+        }
+    }
+    let node_time: Vec<f64> =
+        included.iter().map(|&o| cost.op_time_avg(o)).collect();
+    let grad_bytes = g.ops[grad_op].output_bytes;
+
+    // External sharded inputs per node: tensors from outside the subgraph
+    // that are batch-split (parameters and their reads are fully
+    // replicated already and hence free to duplicated consumers).
+    let boundary_bytes: Vec<f64> = included
+        .iter()
+        .map(|&orig| {
+            g.ops[orig]
+                .inputs
+                .iter()
+                .filter(|&&inp| !local.contains_key(&inp))
+                .filter(|&&inp| {
+                    let op = &g.ops[inp];
+                    // Params and their reads are replicated in full; all
+                    // other external tensors (incl. Placeholder data) are
+                    // batch-sharded and must be gathered.
+                    !op.is_param()
+                        && op.op_type != "ReadVariableOp"
+                        && op.op_type != "VariableV2"
+                })
+                .map(|&inp| g.ops[inp].output_bytes)
+                .sum()
+        })
+        .collect();
+
+    Some((
+        SfbProblem {
+            node_time,
+            edges,
+            boundary_bytes,
+            g_idx,
+            d: devs,
+            tau: tau_bytes_per_s,
+            grad_bytes,
+        },
+        included,
+    ))
+}
+
+/// Run the SFB optimization over every gradient in every replicated
+/// group of `strategy`; returns the aggregated plan.
+pub fn optimize(
+    g: &CompGraph,
+    gg: &GroupGraph,
+    topo: &Topology,
+    cost: &CostModel,
+    strategy: &Strategy,
+) -> SfbPlan {
+    let order = gg.by_comp_time_desc();
+    let default = crate::strategy::Action {
+        mask: crate::strategy::full_mask(topo),
+        option: ReplOption::AllReduce,
+    };
+    let mut plan = SfbPlan {
+        per_group: vec![GroupSfb::default(); gg.num_groups()],
+        ..Default::default()
+    };
+
+    for (grp_i, grp) in gg.groups.iter().enumerate() {
+        if grp.grad_pairs.is_empty() {
+            continue;
+        }
+        let action = strategy.action_for(grp_i, &order, default);
+        if !matches!(action.option, ReplOption::AllReduce | ReplOption::Ps) {
+            continue;
+        }
+        let devs = topo.mask_devices(action.mask);
+        if devs.len() < 2 {
+            continue;
+        }
+        let tau = topo.bottleneck_bw_gbps(&devs) * 1e9 / 8.0;
+        for &(grad, _apply) in &grp.grad_pairs {
+            let Some((prob, ids)) =
+                extract_problem(g, gg, cost, grad, devs.len(), tau)
+            else {
+                continue;
+            };
+            let sol = solve(&prob);
+            plan.problems_solved += 1;
+            if sol.objective < -1e-12 {
+                plan.problems_beneficial += 1;
+                plan.predicted_saving_s += -sol.objective;
+                let entry = &mut plan.per_group[grp_i];
+                entry.saved_sync_bytes += prob.grad_bytes;
+                entry.broadcast_bytes += sol.cut_bytes;
+                entry.gradients_covered += 1;
+                entry.extra_compute_s += sol
+                    .alpha
+                    .iter()
+                    .zip(&prob.node_time)
+                    .filter(|(&a, _)| a)
+                    .map(|(_, &t)| t)
+                    .sum::<f64>();
+                for (l, &a) in sol.alpha.iter().enumerate() {
+                    if a {
+                        *plan.census.entry(g.ops[ids[l]].op_type).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+    }
+    plan
+}
+
+impl SfbPlan {
+    /// Top-k duplicated op types by count (Table 6).
+    pub fn top_census(&self, k: usize) -> Vec<(&'static str, usize)> {
+        let mut v: Vec<(&'static str, usize)> =
+            self.census.iter().map(|(&t, &c)| (t, c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        v.truncate(k);
+        v
+    }
+
+    /// Total predicted communication-volume reduction, bytes.
+    pub fn total_saved_bytes(&self) -> f64 {
+        self.per_group.iter().map(|g| g.saved_sync_bytes - g.broadcast_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::sfb_pair;
+    use crate::graph::grouping::group_ops;
+    use crate::models;
+    use crate::profile::unique_gpus;
+
+    fn setup(m: CompGraph) -> (CompGraph, GroupGraph, CostModel, Topology) {
+        let topo = sfb_pair();
+        let cost = CostModel::profile(&m.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&m, &cost, 24, 7);
+        (m, gg, cost, topo)
+    }
+
+    #[test]
+    fn extraction_contains_gradient_and_is_topo_ordered() {
+        let (m, gg, cost, _topo) = setup(models::bert(4, false, 0.25));
+        let pairs = m.grad_apply_pairs();
+        let mut found = 0;
+        for &(grad, _) in &pairs {
+            if let Some((prob, ids)) =
+                extract_problem(&m, &gg, &cost, grad, 2, 1e9)
+            {
+                found += 1;
+                assert_eq!(ids[prob.g_idx], grad);
+                // topo: producers before consumers in local indexing
+                for &(j, i, _) in &prob.edges {
+                    assert!(j < i, "edge ({j},{i}) not topo-ordered");
+                }
+                assert!(ids.len() <= super::MAX_SUBGRAPH);
+            }
+        }
+        assert!(found > 0, "no extractable gradients");
+    }
+
+    #[test]
+    fn optimize_finds_duplications_in_small_batch_transformer() {
+        // Small batch => small sufficient factors => SFB should trigger
+        // (the paper's Table 5 uses batch 4).
+        let (m, gg, cost, topo) = setup(models::transformer(4, 0.25));
+        let dp = Strategy::dp_allreduce(gg.num_groups(), &topo);
+        let plan = optimize(&m, &gg, &topo, &cost, &dp);
+        assert!(plan.problems_solved > 0);
+        assert!(
+            plan.problems_beneficial > 0,
+            "expected SFB wins on batch-4 transformer ({} solved)",
+            plan.problems_solved
+        );
+        assert!(plan.predicted_saving_s > 0.0);
+        let total_covered: usize =
+            plan.per_group.iter().map(|g| g.gradients_covered).sum();
+        assert!(total_covered > 0);
+        assert!(!plan.census.is_empty());
+    }
+
+    #[test]
+    fn large_batch_reduces_sfb_benefit() {
+        // Table 5 insight: SFB is mainly effective with small batches.
+        let (m_s, gg_s, cost_s, topo) = setup(models::vgg19(2, 0.25));
+        let dp_s = Strategy::dp_allreduce(gg_s.num_groups(), &topo);
+        let small = optimize(&m_s, &gg_s, &topo, &cost_s, &dp_s);
+
+        let (m_l, gg_l, cost_l, topo2) = setup(models::vgg19(256, 0.25));
+        let dp_l = Strategy::dp_allreduce(gg_l.num_groups(), &topo2);
+        let large = optimize(&m_l, &gg_l, &topo2, &cost_l, &dp_l);
+        assert!(
+            small.problems_beneficial >= large.problems_beneficial,
+            "small batch {} vs large batch {}",
+            small.problems_beneficial,
+            large.problems_beneficial
+        );
+    }
+
+    #[test]
+    fn non_replicated_groups_are_skipped() {
+        let (m, gg, cost, topo) = setup(models::vgg19(4, 0.25));
+        // Single-device placement: no sync, no SFB.
+        let s = Strategy::uniform(
+            gg.num_groups(),
+            crate::strategy::Action { mask: 0b1, option: ReplOption::AllReduce },
+        );
+        let plan = optimize(&m, &gg, &topo, &cost, &s);
+        assert_eq!(plan.problems_solved, 0);
+    }
+
+    #[test]
+    fn duplicate_strategy_skipped_too() {
+        let (m, gg, cost, topo) = setup(models::vgg19(4, 0.25));
+        let s = Strategy::uniform(
+            gg.num_groups(),
+            crate::strategy::Action {
+                mask: crate::strategy::full_mask(&topo),
+                option: ReplOption::Duplicate,
+            },
+        );
+        let plan = optimize(&m, &gg, &topo, &cost, &s);
+        assert_eq!(plan.problems_solved, 0);
+    }
+
+    #[test]
+    fn top_census_sorted() {
+        let mut plan = SfbPlan::default();
+        plan.census.insert("MatMul", 10);
+        plan.census.insert("Reshape", 30);
+        plan.census.insert("Add", 5);
+        let top = plan.top_census(2);
+        assert_eq!(top, vec![("Reshape", 30), ("MatMul", 10)]);
+    }
+}

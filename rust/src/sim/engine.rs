@@ -1,0 +1,146 @@
+//! The event-driven scheduling core: serial resources, FIFO-by-ready-time
+//! queues (matching TensorFlow's default executor behaviour that the
+//! paper's simulator mimics), deterministic tie-breaking by task id.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::TaskGraph;
+
+/// Simulation output: per-task schedule + per-resource utilization.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub start: Vec<f64>,
+    pub finish: Vec<f64>,
+    pub busy: Vec<f64>,
+    pub makespan: f64,
+}
+
+impl Schedule {
+    /// Fraction of the makespan a resource spent idle.
+    pub fn idle_fraction(&self, resource: usize) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.busy[resource] / self.makespan).clamp(0.0, 1.0)
+    }
+}
+
+/// Min-heap key: (time, id) with deterministic ordering.
+#[derive(PartialEq)]
+struct Key(f64, usize);
+
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed for BinaryHeap (max-heap) -> min-heap behaviour.
+        other
+            .0
+            .partial_cmp(&self.0)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.1.cmp(&self.1))
+    }
+}
+
+/// Run the task graph to completion. Panics on dependency cycles
+/// (impossible for graphs built through `TaskGraph::push`).
+pub fn simulate(tg: &TaskGraph) -> Schedule {
+    let n = tg.tasks.len();
+    let mut indeg: Vec<usize> = vec![0; n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, t) in tg.tasks.iter().enumerate() {
+        indeg[i] = t.deps.len();
+        for &d in &t.deps {
+            succs[d].push(i);
+        }
+    }
+
+    let mut start = vec![f64::NAN; n];
+    let mut finish = vec![f64::NAN; n];
+    let mut busy = vec![0.0; tg.num_resources];
+
+    // Per-resource FIFO of ready tasks ordered by (ready time, id).
+    let mut queues: Vec<BinaryHeap<Key>> =
+        (0..tg.num_resources).map(|_| BinaryHeap::new()).collect();
+    let mut resource_free: Vec<bool> = vec![true; tg.num_resources];
+
+    // Event heap of task completions.
+    let mut events: BinaryHeap<Key> = BinaryHeap::new();
+    let mut completed = 0usize;
+
+    let mut ready_at = vec![0.0f64; n];
+    for i in 0..n {
+        if indeg[i] == 0 {
+            queues[tg.tasks[i].resource].push(Key(0.0, i));
+        }
+    }
+
+    // Try to start a task on `r` at time `now`.
+    fn try_start(
+        r: usize,
+        now: f64,
+        tg: &TaskGraph,
+        queues: &mut [BinaryHeap<Key>],
+        resource_free: &mut [bool],
+        start: &mut [f64],
+        busy: &mut [f64],
+        events: &mut BinaryHeap<Key>,
+    ) {
+        if !resource_free[r] {
+            return;
+        }
+        if let Some(Key(ready, id)) = queues[r].pop() {
+            let s = now.max(ready);
+            start[id] = s;
+            let f = s + tg.tasks[id].duration;
+            busy[r] += tg.tasks[id].duration;
+            resource_free[r] = false;
+            events.push(Key(f, id));
+        }
+    }
+
+    for r in 0..tg.num_resources {
+        try_start(r, 0.0, tg, &mut queues, &mut resource_free, &mut start, &mut busy, &mut events);
+    }
+
+    while let Some(Key(t_fin, id)) = events.pop() {
+        let now = t_fin;
+        finish[id] = t_fin;
+        completed += 1;
+        let r = tg.tasks[id].resource;
+        resource_free[r] = true;
+        // Release successors.
+        for &s in &succs[id] {
+            indeg[s] -= 1;
+            ready_at[s] = ready_at[s].max(t_fin);
+            if indeg[s] == 0 {
+                queues[tg.tasks[s].resource].push(Key(ready_at[s], s));
+            }
+        }
+        // Start next work on this resource and any resource whose queue
+        // just gained a task.
+        try_start(r, now, tg, &mut queues, &mut resource_free, &mut start, &mut busy, &mut events);
+        for &s in &succs[id] {
+            let rs = tg.tasks[s].resource;
+            try_start(
+                rs,
+                now,
+                tg,
+                &mut queues,
+                &mut resource_free,
+                &mut start,
+                &mut busy,
+                &mut events,
+            );
+        }
+    }
+
+    assert_eq!(completed, n, "dependency cycle or unreachable tasks");
+    let makespan = finish.iter().copied().fold(0.0f64, f64::max);
+    Schedule { start, finish, busy, makespan }
+}

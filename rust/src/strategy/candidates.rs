@@ -1,0 +1,123 @@
+//! Candidate-action enumeration.
+//!
+//! The raw action space per op group is (2^M - 1) placements x 4 options
+//! (§3.2) — too large to enumerate.  TAG restricts candidates to the
+//! placements that matter in practice (this is also what bounds the
+//! decoder's fixed AOT candidate axis `N_CAND`):
+//!
+//! * each single device group,
+//! * greedy prefixes of device groups sorted by descending aggregate
+//!   effective FLOPs (the "use the fastest k machines" family),
+//! * the full cluster,
+//!
+//! each crossed with the 4 replication options.  For M <= 16 this yields
+//! at most (16 + 15) * 4 = 124 candidates, under the decoder's 128.
+
+use super::{Action, ReplOption};
+use crate::cluster::Topology;
+
+/// Max candidates (must stay <= gnn N_CAND).
+pub const MAX_ACTIONS: usize = 128;
+
+/// Placement masks considered for any op group on this topology.
+pub fn placement_masks(topo: &Topology) -> Vec<u16> {
+    let m = topo.num_groups();
+    assert!(m <= 16, "at most 16 device groups supported");
+    let mut masks: Vec<u16> = Vec::new();
+    // Singles.
+    for gi in 0..m {
+        masks.push(1 << gi);
+    }
+    // Greedy prefixes by aggregate effective FLOPs.
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| {
+        let fa = topo.groups[a].gpu.effective_flops() * topo.groups[a].count as f64;
+        let fb = topo.groups[b].gpu.effective_flops() * topo.groups[b].count as f64;
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let mut mask = 0u16;
+    for &gi in &order {
+        mask |= 1 << gi;
+        if !masks.contains(&mask) {
+            masks.push(mask);
+        }
+    }
+    masks
+}
+
+/// Full candidate list: placements x options.
+pub fn enumerate_actions(topo: &Topology) -> Vec<Action> {
+    let mut out = Vec::new();
+    for mask in placement_masks(topo) {
+        for option in ReplOption::ALL {
+            // Duplicate / MP on a single solo device degenerate to the
+            // same single-device execution as AllReduce; keep only one
+            // representative to avoid wasted search width.
+            let ndev = topo.mask_devices(mask).len();
+            if ndev == 1 && option != ReplOption::AllReduce {
+                continue;
+            }
+            out.push(Action { mask, option });
+        }
+    }
+    assert!(out.len() <= MAX_ACTIONS, "{} actions exceed decoder budget", out.len());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::{cloud, homogeneous, testbed};
+    use crate::cluster::random_topology;
+    use crate::util::Rng;
+
+    #[test]
+    fn testbed_actions_fit_budget() {
+        let t = testbed();
+        let acts = enumerate_actions(&t);
+        assert!(!acts.is_empty());
+        assert!(acts.len() <= MAX_ACTIONS);
+        // Full-cluster mask must be present.
+        let full = crate::strategy::full_mask(&t);
+        assert!(acts.iter().any(|a| a.mask == full));
+    }
+
+    #[test]
+    fn prefixes_start_with_fastest_group() {
+        let t = testbed(); // group 0 = 4x V100, by far the fastest
+        let masks = placement_masks(&t);
+        // First prefix beyond the singles must contain group 0.
+        let prefix = masks[t.num_groups()];
+        assert!(prefix & 1 != 0);
+    }
+
+    #[test]
+    fn single_device_topology() {
+        let t = homogeneous(); // one group
+        let acts = enumerate_actions(&t);
+        // one mask x 4 options (2 devices in the group, so all options
+        // remain meaningful)
+        assert_eq!(acts.len(), 4);
+    }
+
+    #[test]
+    fn masks_unique_and_valid() {
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let t = random_topology(&mut rng);
+            let masks = placement_masks(&t);
+            let uniq: std::collections::HashSet<u16> = masks.iter().copied().collect();
+            assert_eq!(uniq.len(), masks.len());
+            for &m in &masks {
+                assert!(m != 0);
+                assert!(m < (1 << t.num_groups()));
+            }
+            assert!(enumerate_actions(&t).len() <= MAX_ACTIONS);
+        }
+    }
+
+    #[test]
+    fn cloud_actions_under_budget() {
+        assert!(enumerate_actions(&cloud()).len() <= MAX_ACTIONS);
+    }
+}

@@ -1,0 +1,186 @@
+//! Deployment strategies (paper §4.2): per-op-group placement (a bitmask
+//! over device groups — the row `P_i`) and replication option (`O_i`),
+//! candidate-action enumeration for the decoder/MCTS, and the baseline
+//! strategy generators used in the evaluation (DP-NCCL, DP-NCCL-P,
+//! Horovod, FlexFlow-MCMC, Baechi mSCT, expert, HeteroG-like).
+
+pub mod baselines;
+pub mod candidates;
+
+pub use candidates::enumerate_actions;
+
+use crate::cluster::Topology;
+
+/// The four replication options of §4.2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReplOption {
+    /// Replicate on all devices of the placement, sync grads by AllReduce.
+    AllReduce,
+    /// Replicate, sync grads through a parameter server (round-robin GPU).
+    Ps,
+    /// Copy to all devices with *broadcast* inputs: identical gradients
+    /// everywhere, no sync needed (the SFB execution vehicle).
+    Duplicate,
+    /// Split the group's ops across the placement devices (METIS inside).
+    ModelParallel,
+}
+
+impl ReplOption {
+    pub const ALL: [ReplOption; 4] = [
+        ReplOption::AllReduce,
+        ReplOption::Ps,
+        ReplOption::Duplicate,
+        ReplOption::ModelParallel,
+    ];
+
+    pub fn index(&self) -> usize {
+        match self {
+            ReplOption::AllReduce => 0,
+            ReplOption::Ps => 1,
+            ReplOption::Duplicate => 2,
+            ReplOption::ModelParallel => 3,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Self {
+        Self::ALL[i]
+    }
+}
+
+/// How replicas split the global batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SplitMode {
+    /// Evenly across replicas (classic DP).
+    #[default]
+    Even,
+    /// Proportional to each device's effective compute rate (DP-NCCL-P).
+    Proportional,
+}
+
+/// One action of the strategy creator: where to place the next op group
+/// and how to replicate it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Action {
+    /// Bitmask over device groups (bit i = device group i).
+    pub mask: u16,
+    pub option: ReplOption,
+}
+
+/// A full (or partial) deployment strategy: one slot per op group.
+/// `None` = not yet decided (partial strategies during MCTS).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Strategy {
+    pub slots: Vec<Option<Action>>,
+    pub split: SplitMode,
+    /// Synchronization barriers before gradient sync (in-graph replication
+    /// DP-NCCL style) instead of overlapped sync (Horovod/TAG style).
+    pub sync_barrier: bool,
+}
+
+impl Strategy {
+    pub fn empty(num_groups: usize) -> Self {
+        Self { slots: vec![None; num_groups], split: SplitMode::Even, sync_barrier: false }
+    }
+
+    /// Uniform strategy: every group gets the same action.
+    pub fn uniform(num_groups: usize, action: Action) -> Self {
+        Self {
+            slots: vec![Some(action); num_groups],
+            split: SplitMode::Even,
+            sync_barrier: false,
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.slots.iter().all(|s| s.is_some())
+    }
+
+    pub fn decided(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Resolve the action for group `i`, using the paper's footnote-2
+    /// completion rule for partial strategies: undecided groups use the
+    /// strategy of the most computation-expensive *decided* group (which,
+    /// since groups are decided in descending compute order, is the first
+    /// decided slot in `order`), or `default` if nothing is decided.
+    pub fn action_for(&self, i: usize, order: &[usize], default: Action) -> Action {
+        if let Some(a) = self.slots[i] {
+            return a;
+        }
+        for &g in order {
+            if let Some(a) = self.slots[g] {
+                return a;
+            }
+        }
+        default
+    }
+
+    /// The all-devices data-parallel AllReduce baseline (the reward
+    /// reference of §4.2.2).
+    pub fn dp_allreduce(num_groups: usize, topo: &Topology) -> Self {
+        let mask = full_mask(topo);
+        let mut s = Self::uniform(
+            num_groups,
+            Action { mask, option: ReplOption::AllReduce },
+        );
+        s.sync_barrier = true; // in-graph replication: sync after backward
+        s
+    }
+}
+
+/// Bitmask selecting every device group of the topology.
+pub fn full_mask(topo: &Topology) -> u16 {
+    debug_assert!(topo.num_groups() <= 16);
+    ((1u32 << topo.num_groups()) - 1) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::testbed;
+
+    #[test]
+    fn option_index_roundtrip() {
+        for o in ReplOption::ALL {
+            assert_eq!(ReplOption::from_index(o.index()), o);
+        }
+    }
+
+    #[test]
+    fn full_mask_covers_groups() {
+        let t = testbed();
+        let m = full_mask(&t);
+        assert_eq!(m.count_ones() as usize, t.num_groups());
+        assert_eq!(t.mask_devices(m).len(), t.num_devices());
+    }
+
+    #[test]
+    fn partial_strategy_completion_rule() {
+        let order = vec![2, 0, 1]; // group 2 is most expensive
+        let mut s = Strategy::empty(3);
+        let def = Action { mask: 0b1, option: ReplOption::AllReduce };
+        // Nothing decided: default everywhere.
+        assert_eq!(s.action_for(1, &order, def), def);
+        // Decide group 2 (the most expensive): others copy it.
+        let a2 = Action { mask: 0b11, option: ReplOption::Ps };
+        s.slots[2] = Some(a2);
+        assert_eq!(s.action_for(0, &order, def), a2);
+        assert_eq!(s.action_for(2, &order, def), a2);
+        // Explicit slot wins.
+        let a0 = Action { mask: 0b10, option: ReplOption::Duplicate };
+        s.slots[0] = Some(a0);
+        assert_eq!(s.action_for(0, &order, def), a0);
+        assert!(!s.is_complete());
+        assert_eq!(s.decided(), 2);
+    }
+
+    #[test]
+    fn dp_strategy_complete_and_barriered() {
+        let t = testbed();
+        let s = Strategy::dp_allreduce(10, &t);
+        assert!(s.is_complete());
+        assert!(s.sync_barrier);
+        assert!(s.slots.iter().all(|a| a.unwrap().option == ReplOption::AllReduce));
+    }
+}

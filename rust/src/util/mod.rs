@@ -1,0 +1,100 @@
+//! Small shared utilities: deterministic RNG, statistics, a property-test
+//! helper macro and simple timers.
+//!
+//! The crate is fully deterministic (no `rand`, no wall-clock in any
+//! decision path): every stochastic component takes an explicit [`Rng`]
+//! seeded by the caller, so experiments in EXPERIMENTS.md are exactly
+//! reproducible.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{mean, percentile, stddev};
+
+/// Wall-clock stopwatch used by benches and the overhead experiment.
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Minimal bench harness (the vendored dependency set has no criterion):
+/// warm up once, then run until `min_time_s` elapses, reporting mean and
+/// standard deviation per iteration.  Returns the mean seconds.
+pub fn bench<F: FnMut()>(name: &str, min_time_s: f64, mut f: F) -> f64 {
+    f(); // warm-up
+    let mut times = Vec::new();
+    let total = Stopwatch::start();
+    while total.elapsed_s() < min_time_s || times.len() < 3 {
+        let w = Stopwatch::start();
+        f();
+        times.push(w.elapsed_s());
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    let m = stats::mean(&times);
+    let sd = stats::stddev(&times);
+    println!(
+        "{name:<44} {:>12}/iter  ±{:>10}  ({} iters)",
+        fmt_secs(m),
+        fmt_secs(sd),
+        times.len()
+    );
+    m
+}
+
+/// Format a byte count human-readably (used in reports and traces).
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format a duration given in seconds (used in reports and traces).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2_500.0), "2.50 KB");
+        assert_eq!(fmt_bytes(3_200_000.0), "3.20 MB");
+        assert_eq!(fmt_bytes(7.5e9), "7.50 GB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0123), "12.300 ms");
+        assert_eq!(fmt_secs(42e-6), "42.0 us");
+    }
+}

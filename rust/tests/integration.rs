@@ -1,0 +1,168 @@
+//! Cross-module integration tests: the full pipeline (model zoo ->
+//! analyzer -> profiler -> grouping -> lowering -> simulator -> MCTS ->
+//! SFB), plus the runtime + GNN path when artifacts are present.
+
+use tag::cluster::presets::{cloud, homogeneous, sfb_pair, testbed};
+use tag::cluster::{generator::random_topologies, Topology};
+use tag::coordinator::{prepare, search_session, SearchConfig};
+use tag::dist::Lowering;
+use tag::models;
+use tag::strategy::{baselines, enumerate_actions, Strategy};
+
+fn cfg(iters: usize, seed: u64) -> SearchConfig {
+    SearchConfig {
+        max_groups: 12,
+        mcts_iterations: iters,
+        seed,
+        apply_sfb: true,
+        profile_noise: 0.0,
+    }
+}
+
+#[test]
+fn every_model_searches_on_every_preset_topology() {
+    for topo in [testbed(), cloud(), homogeneous(), sfb_pair()] {
+        for name in models::MODEL_NAMES {
+            let model = models::by_name(name, 0.25).unwrap();
+            let c = cfg(40, 3);
+            let prep = prepare(model, &topo, &c);
+            let res = search_session(&prep, &topo, None, &c);
+            assert!(
+                res.time.is_finite() && res.time > 0.0,
+                "{name} on {}",
+                topo.name
+            );
+            assert!(
+                res.speedup >= 1.0 - 1e-9,
+                "{name} on {}: TAG lost to DP ({:.3}x)",
+                topo.name,
+                res.speedup
+            );
+        }
+    }
+}
+
+#[test]
+fn tag_beats_or_matches_all_baselines_everywhere() {
+    // The paper's core claim (Fig. 5): TAG >= every baseline on the
+    // heterogeneous testbed, for every model.
+    let topo = testbed();
+    for name in models::MODEL_NAMES {
+        let model = models::by_name(name, 0.25).unwrap();
+        let c = cfg(150, 5);
+        let prep = prepare(model, &topo, &c);
+        let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+        let acts = enumerate_actions(&topo);
+        let ng = prep.gg.num_groups();
+        let res = search_session(&prep, &topo, None, &c);
+        let t_tag = res.dp_time / res.speedup;
+
+        let baselines: Vec<(&str, f64)> = vec![
+            ("DP", low.evaluate(&baselines::dp_nccl(ng, &topo)).time),
+            ("DP-P", low.evaluate(&baselines::dp_nccl_p(ng, &topo)).time),
+            ("Horovod", low.evaluate(&baselines::horovod(ng, &topo)).time),
+            ("Baechi", low.evaluate(&baselines::baechi_msct(&low)).time),
+            (
+                "FlexFlow",
+                low.evaluate(&baselines::flexflow_mcmc(&low, &acts, 100, 5)).time,
+            ),
+            ("HeteroG", low.evaluate(&baselines::heterog_like(&low)).time),
+        ];
+        for (bname, t) in baselines {
+            assert!(
+                t_tag <= t * 1.05,
+                "{name}: TAG ({t_tag:.4}s) lost to {bname} ({t:.4}s)"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_topologies_never_crash_the_pipeline() {
+    for (i, topo) in random_topologies(77, 15).iter().enumerate() {
+        let model = models::by_name("BERT-Small", 0.25).unwrap();
+        let c = cfg(25, 100 + i as u64);
+        let prep = prepare(model, topo, &c);
+        let res = search_session(&prep, topo, None, &c);
+        assert!(res.time.is_finite());
+        assert!(res.speedup >= 1.0 - 1e-9);
+    }
+}
+
+#[test]
+fn op_level_rewrite_consistent_with_group_level_strategy() {
+    let topo = testbed();
+    let model = models::vgg19(8, 0.25);
+    let c = cfg(60, 9);
+    let prep = prepare(model, &topo, &c);
+    let res = search_session(&prep, &topo, None, &c);
+    let dist = tag::dist::rewrite::rewrite(&prep.graph, &prep.gg, &topo, &res.strategy);
+    assert!(dist.graph.check_acyclic());
+    assert_eq!(dist.graph.len(), dist.placement.len());
+    // Every device used by the strategy appears in the placement.
+    let used: std::collections::HashSet<_> = dist.placement.iter().copied().collect();
+    assert!(!used.is_empty());
+}
+
+#[test]
+fn profiling_noise_does_not_flip_the_headline() {
+    // With realistic 3% measurement noise the search must still beat DP.
+    let topo = testbed();
+    let model = models::vgg19(8, 0.25);
+    let mut c = cfg(80, 11);
+    c.profile_noise = 0.03;
+    let prep = prepare(model, &topo, &c);
+    let res = search_session(&prep, &topo, None, &c);
+    assert!(res.speedup > 1.2, "speedup {:.2}", res.speedup);
+}
+
+#[test]
+fn oom_strategies_are_rejected_by_search() {
+    // BERT-Large (paper batch 16) on the 11 GB pair: single-device
+    // placements OOM while batch-split DP fits.  The search must return
+    // a feasible (non-OOM) strategy even though much of its action space
+    // is infeasible (the paper's interactive-feasibility argument, §3.3).
+    let topo = sfb_pair();
+    let model = models::bert(16, true, 1.0);
+    let c = cfg(60, 13);
+    let prep = prepare(model, &topo, &c);
+    let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+    let solo = Strategy::uniform(
+        prep.gg.num_groups(),
+        tag::strategy::Action {
+            mask: 0b1,
+            option: tag::strategy::ReplOption::AllReduce,
+        },
+    );
+    assert!(low.evaluate(&solo).oom, "precondition: single-GPU must OOM");
+    let res = search_session(&prep, &topo, None, &c);
+    let out = low.evaluate(&res.strategy);
+    assert!(!out.oom, "search returned an OOM strategy");
+}
+
+#[test]
+fn cloud_topology_exercises_16_device_groups_limit() {
+    let topo: Topology = cloud();
+    assert!(topo.num_groups() <= 16);
+    let model = models::transformer(16, 0.25);
+    let c = cfg(40, 17);
+    let prep = prepare(model, &topo, &c);
+    let res = search_session(&prep, &topo, None, &c);
+    assert!(res.speedup >= 1.0 - 1e-9);
+}
+
+#[test]
+fn gnn_guided_search_with_artifacts() {
+    if !std::path::Path::new("artifacts/gnn_infer.hlo.txt").exists() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    let svc = tag::gnn::GnnService::load("artifacts").unwrap();
+    let params = tag::gnn::params::load_params("artifacts/params_init.bin").unwrap();
+    let topo = testbed();
+    let model = models::inception_v3(8, 0.25);
+    let c = cfg(40, 19);
+    let prep = prepare(model, &topo, &c);
+    let res = search_session(&prep, &topo, Some((&svc, params)), &c);
+    assert!(res.speedup >= 1.0 - 1e-9);
+}

@@ -1,0 +1,241 @@
+//! Property-based tests over randomized inputs (the vendored dependency
+//! set has no proptest; these use the crate's deterministic RNG with
+//! many-case sweeps, shrinking manually by keeping cases tiny).
+//!
+//! Invariants covered:
+//!  * partitioner: labels valid, balanced, deterministic, cut <= total
+//!  * simulator: makespan >= critical path and >= per-resource load;
+//!    monotone in added durations
+//!  * SFB ILP: objective matches a brute-force enumeration on small
+//!    instances; never positive
+//!  * comm model: monotone in bytes, inverse-monotone in bandwidth
+//!  * strategies: evaluation finite for arbitrary random strategies
+
+use tag::cluster::generator::random_topology;
+use tag::dist::Lowering;
+use tag::graph::grouping::group_ops;
+use tag::models;
+use tag::partition::{check_balance, partition, PartGraph};
+use tag::profile::{unique_gpus, CommModel, CostModel};
+use tag::sfb::{solve, SfbProblem};
+use tag::sim::{simulate, Task, TaskGraph, TaskKind};
+use tag::strategy::{enumerate_actions, Strategy};
+use tag::util::Rng;
+
+fn random_part_graph(rng: &mut Rng, n: usize) -> PartGraph {
+    let mut g = PartGraph::new(n);
+    for i in 0..n {
+        g.node_w[i] = rng.uniform(0.1, 5.0);
+    }
+    let edges = n * 2;
+    for _ in 0..edges {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a != b {
+            g.add_edge(a, b, rng.uniform(0.1, 10.0));
+        }
+    }
+    g
+}
+
+#[test]
+fn prop_partitioner_valid_balanced_deterministic() {
+    for case in 0..40 {
+        let mut rng = Rng::new(case);
+        let n = rng.range(8, 200);
+        let k = rng.range(2, 8).min(n);
+        let g = random_part_graph(&mut rng, n);
+        let labels = partition(&g, k, 2.0, case);
+        assert_eq!(labels.len(), n);
+        assert!(labels.iter().all(|&l| l < k), "case {case}");
+        assert!(check_balance(&g, &labels, k, 2.0), "case {case}: imbalance");
+        assert_eq!(labels, partition(&g, k, 2.0, case), "case {case}: nondet");
+        let total_w: f64 =
+            g.adj.iter().flatten().map(|&(_, w)| w).sum::<f64>() / 2.0;
+        assert!(g.cut(&labels) <= total_w + 1e-9);
+    }
+}
+
+fn random_task_graph(rng: &mut Rng, n: usize, r: usize) -> TaskGraph {
+    let mut tg = TaskGraph::new(r);
+    for i in 0..n {
+        let mut deps = Vec::new();
+        if i > 0 {
+            for _ in 0..rng.below(3) {
+                deps.push(rng.below(i));
+            }
+            deps.dedup();
+        }
+        tg.push(Task {
+            resource: rng.below(r),
+            duration: rng.uniform(0.0, 1.0),
+            deps,
+            kind: TaskKind::Marker,
+        });
+    }
+    tg
+}
+
+#[test]
+fn prop_simulator_lower_bounds_and_monotonicity() {
+    for case in 0..40 {
+        let mut rng = Rng::new(1000 + case);
+        let n = rng.range(5, 120);
+        let r = rng.range(1, 8);
+        let tg = random_task_graph(&mut rng, n, r);
+        let s = simulate(&tg);
+
+        // Makespan >= busiest resource's total load.
+        for res in 0..r {
+            assert!(s.makespan >= s.busy[res] - 1e-9, "case {case}");
+        }
+        // Makespan >= critical path (longest dependency chain).
+        let mut cp = vec![0.0f64; n];
+        for i in 0..n {
+            let dep_max = tg.tasks[i]
+                .deps
+                .iter()
+                .map(|&d| cp[d])
+                .fold(0.0f64, f64::max);
+            cp[i] = dep_max + tg.tasks[i].duration;
+        }
+        let crit = cp.iter().copied().fold(0.0f64, f64::max);
+        assert!(s.makespan >= crit - 1e-9, "case {case}");
+
+        // Start/finish sanity.
+        for i in 0..n {
+            assert!(s.finish[i] >= s.start[i] - 1e-12);
+            for &d in &tg.tasks[i].deps {
+                assert!(s.start[i] >= s.finish[d] - 1e-9, "case {case}: dep order");
+            }
+        }
+
+        // Monotonicity: growing one task's duration never shrinks the
+        // makespan... (true for work-conserving FIFO with fixed priority
+        // order only in expectation; we check weak monotonicity against
+        // growing ALL durations, which is safe).
+        let mut tg2 = tg.clone();
+        for t in &mut tg2.tasks {
+            t.duration *= 1.5;
+        }
+        let s2 = simulate(&tg2);
+        assert!(s2.makespan >= s.makespan - 1e-9, "case {case}");
+    }
+}
+
+/// Brute-force reference for the SFB ILP on tiny instances.
+fn brute_force(p: &SfbProblem) -> f64 {
+    let n = p.node_time.len();
+    let dd = p.d as f64;
+    let mut best = 0.0f64;
+    for mask in 0u32..(1 << n) {
+        let alpha = |i: usize| mask & (1 << i) != 0;
+        // Constraint: alpha_k needs a duplicated consumer (k != g).
+        let mut ok = true;
+        for k in 0..n {
+            if k != p.g_idx && alpha(k) {
+                let has = p.edges.iter().any(|&(j, i, _)| j == k && alpha(i));
+                if !has {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let mut cost = 0.0;
+        for i in 0..n {
+            if alpha(i) {
+                cost += (dd - 1.0) * p.node_time[i]
+                    + dd * (dd - 1.0) * p.boundary_bytes[i] / p.tau;
+            }
+        }
+        for &(j, i, l) in &p.edges {
+            if alpha(i) && !alpha(j) {
+                cost += dd * (dd - 1.0) * l / p.tau;
+            }
+        }
+        if alpha(p.g_idx) {
+            cost -= 2.0 * (dd - 1.0) / dd * p.grad_bytes / p.tau;
+        }
+        best = best.min(cost);
+    }
+    best
+}
+
+#[test]
+fn prop_sfb_solver_matches_brute_force() {
+    for case in 0..60 {
+        let mut rng = Rng::new(2000 + case);
+        let n = rng.range(2, 10);
+        let mut edges = Vec::new();
+        for i in 1..n {
+            // random DAG edges j < i
+            let deg = rng.range(1, 2.min(i));
+            for _ in 0..deg {
+                edges.push((rng.below(i), i, rng.uniform(1e3, 50e6)));
+            }
+        }
+        let p = SfbProblem {
+            node_time: (0..n).map(|_| rng.uniform(0.0, 1e-3)).collect(),
+            edges,
+            boundary_bytes: (0..n).map(|_| rng.uniform(0.0, 20e6)).collect(),
+            g_idx: n - 1,
+            d: rng.range(2, 8),
+            tau: rng.uniform(1e8, 1e10),
+            grad_bytes: rng.uniform(0.0, 300e6),
+        };
+        let sol = solve(&p);
+        assert!(sol.optimal, "case {case}");
+        let bf = brute_force(&p);
+        assert!(
+            (sol.objective - bf).abs() < 1e-9 * (1.0 + bf.abs()),
+            "case {case}: solver {} vs brute force {}",
+            sol.objective,
+            bf
+        );
+        assert!(sol.objective <= 1e-12);
+    }
+}
+
+#[test]
+fn prop_comm_model_monotonicity() {
+    let m = CommModel::fit(4);
+    let mut rng = Rng::new(3000);
+    for _ in 0..50 {
+        let b1 = rng.uniform(1e3, 5e8);
+        let b2 = b1 * rng.uniform(1.0, 4.0);
+        let bw = rng.uniform(1e8, 3e10);
+        assert!(m.transfer_time(b2, bw) >= m.transfer_time(b1, bw) - 1e-12);
+        let bw2 = bw * rng.uniform(1.0, 4.0);
+        assert!(m.transfer_time(b1, bw2) <= m.transfer_time(b1, bw) + 1e-12);
+    }
+}
+
+#[test]
+fn prop_random_strategies_evaluate_finitely() {
+    for case in 0..12 {
+        let mut rng = Rng::new(4000 + case);
+        let topo = random_topology(&mut rng);
+        let model = models::by_name("InceptionV3", 0.25).unwrap();
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&model, &cost, 16, case);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let actions = enumerate_actions(&topo);
+        for _ in 0..5 {
+            let mut s = Strategy::empty(gg.num_groups());
+            for g in 0..gg.num_groups() {
+                if rng.chance(0.8) {
+                    s.slots[g] = Some(*rng.choose(&actions));
+                }
+            }
+            let out = low.evaluate(&s);
+            assert!(out.time.is_finite() && out.time > 0.0, "case {case}");
+            for f in &out.feedback.devgroup_idle {
+                assert!((0.0..=1.0).contains(f));
+            }
+        }
+    }
+}
