@@ -1,5 +1,8 @@
 //! Bench: MCTS search throughput (iterations/second) with uniform
-//! priors — the L3 search loop that Fig. 8's TAG bar is built from.
+//! priors — the L3 search loop that Fig. 8's TAG bar is built from —
+//! plus the effect of the `dist` transposition table on that loop
+//! (cold = fresh memo per search, warm = memo shared across searches,
+//! the steady state of self-play / repeated coordinator sessions).
 
 use tag::cluster::presets::testbed;
 use tag::dist::Lowering;
@@ -28,5 +31,34 @@ fn main() {
             });
             println!("    -> {:.0} iterations/s", 50.0 / m);
         }
+    }
+
+    println!("\n== MCTS: memoized vs cold repeated searches ==");
+    {
+        let model = models::by_name("VGG19", 0.25).unwrap();
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&model, &cost, 24, 7);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let actions = enumerate_actions(&topo);
+        // Cold: drop the transposition table before every search, so each
+        // of the 50 iterations re-lowers and re-simulates.
+        let cold = bench("search50[cold memo]", 1.5, || {
+            low.clear_memo();
+            let mut mcts = Mcts::new(&low, actions.clone(), UniformPrior, 1);
+            assert!(mcts.search(50).best_time > 0.0);
+        });
+        // Warm: the table persists across searches — every evaluation of a
+        // previously-seen effective strategy is a cache hit.
+        low.clear_memo();
+        let warm = bench("search50[warm memo]", 1.5, || {
+            let mut mcts = Mcts::new(&low, actions.clone(), UniformPrior, 1);
+            assert!(mcts.search(50).best_time > 0.0);
+        });
+        let (hits, misses) = low.memo_stats();
+        println!(
+            "    -> warm search speed-up: {:.1}x ({hits} hits / {misses} misses across runs)",
+            cold / warm
+        );
     }
 }

@@ -10,7 +10,7 @@ use tag::graph::grouping::group_ops;
 use tag::models;
 use tag::profile::{unique_gpus, CommModel, CostModel};
 use tag::sim::{simulate, Task, TaskGraph, TaskKind};
-use tag::strategy::Strategy;
+use tag::strategy::{enumerate_actions, Strategy};
 use tag::util::{bench, Rng};
 
 fn main() {
@@ -24,9 +24,48 @@ fn main() {
         let low = Lowering::new(&gg, &topo, &cost, &comm);
         let dp = Strategy::dp_allreduce(gg.num_groups(), &topo);
         bench(&format!("evaluate[{name}]"), 1.0, || {
-            let out = low.evaluate(&dp);
+            let out = low.evaluate_uncached(&dp);
             assert!(out.time > 0.0);
         });
+    }
+
+    // The dist memo layer: a repeated-strategy workload (what MCTS
+    // produces — the same effective deployments evaluated over and over)
+    // through the uncached path vs the transposition table.
+    println!("\n== dist memo: cold vs warm evaluate (repeated strategies) ==");
+    {
+        let model = models::by_name("VGG19", 0.25).unwrap();
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&model, &cost, 32, 7);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let strategies: Vec<Strategy> = enumerate_actions(&topo)
+            .into_iter()
+            .map(|a| Strategy::uniform(gg.num_groups(), a))
+            .collect();
+        let n = strategies.len();
+        let cold = bench(&format!("evaluate[cold x{n} strategies]"), 1.0, || {
+            for s in &strategies {
+                assert!(low.evaluate_uncached(s).time > 0.0);
+            }
+        });
+        // Warm-up fill, then measure pure cache-hit evaluation.
+        for s in &strategies {
+            let _ = low.evaluate(s);
+        }
+        let warm = bench(&format!("evaluate[warm x{n} strategies]"), 1.0, || {
+            for s in &strategies {
+                assert!(low.evaluate(s).time > 0.0);
+            }
+        });
+        let (hits, misses) = low.memo_stats();
+        println!(
+            "    -> memo speed-up: {:.1}x (cold {:.1} us vs warm {:.1} us per evaluate; \
+             {hits} hits / {misses} misses)",
+            cold / warm,
+            cold / n as f64 * 1e6,
+            warm / n as f64 * 1e6,
+        );
     }
 
     println!("\n== raw engine: synthetic task graphs ==");

@@ -1,0 +1,744 @@
+//! Group-level strategy lowering + simulation (paper §4.2.2/§4.3.2): the
+//! MCTS hot path.
+//!
+//! ## Simulation model
+//!
+//! Resources (for a topology with `M` device groups / machines):
+//!
+//! * `0..M` — one gang-scheduled compute slot per machine (a group's
+//!   replicas on the machine's GPUs run in lockstep, so the machine is
+//!   the scheduling granularity; per-device batch shares set durations).
+//! * `M..2M` — one NIC per machine.  Inter-machine tensor transfers
+//!   serialize on a NIC (scatter on the source side, deficit-gathers on
+//!   the destination side), which is what makes "spray op groups across
+//!   machines" cost what it does on real clusters.
+//! * `2M` — the collective channel: gradient AllReduce/PS syncs and SFB
+//!   broadcasts serialize here, overlapping compute unless the strategy
+//!   sets the in-graph-replication `sync_barrier`.
+//!
+//! Durations come from the profiler's fitted models: per-(group, GPU)
+//! summed linear batch-time models for compute, the fitted GRPC curve
+//! for transfers, and the ring/PS formulas for syncs.
+//!
+//! ## Batch shares per replication option
+//!
+//! * `AllReduce`/`Ps` — data parallel over the placement's devices
+//!   ([`SplitMode::Even`] or proportional-to-capability), gradients
+//!   synchronized on the channel.
+//! * `Duplicate` — every device computes the full batch on broadcast
+//!   inputs; identical gradients, no sync (the SFB execution vehicle).
+//! * `ModelParallel` — the group's ops are partitioned across devices
+//!   (capability-proportional, [`MP_IMBALANCE`] slack), full batch, no
+//!   replication; an internal-communication task charges the cut tensors
+//!   ([`MP_INTERNAL_COMM_FRAC`] of the group's activations) at the
+//!   placement's bottleneck bandwidth.
+//!
+//! ## Memory / OOM
+//!
+//! Peak per-device memory is estimated analytically: replicated
+//! parameters count [`PARAM_MEM_FACTOR`]× (weights + gradients; optimizer
+//! slots are part of the activation inventory), live activations count
+//! [`ACT_LIVE_FRAC`] of the group's produced-tensor bytes scaled by the
+//! device's batch share.  Any device above its capacity marks the
+//! outcome OOM (reward −1 in the search).
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::cluster::{DeviceId, Topology};
+use crate::graph::grouping::GroupGraph;
+use crate::profile::{CommModel, CostModel};
+use crate::sfb::SfbPlan;
+use crate::sim::{Simulator, Task, TaskGraph, TaskKind};
+use crate::strategy::{full_mask, Action, ReplOption, SplitMode, Strategy};
+
+use super::memo::MemoTable;
+
+/// Weights + gradients per replicated parameter byte (Adam slots are
+/// already in the activation inventory).
+pub const PARAM_MEM_FACTOR: f64 = 2.0;
+/// Fraction of a group's produced-tensor bytes live at the peak.
+pub const ACT_LIVE_FRAC: f64 = 0.40;
+/// Fraction of a group's activation bytes crossing the internal cut when
+/// the group is model-parallelized.
+pub const MP_INTERNAL_COMM_FRAC: f64 = 0.25;
+/// Partition-imbalance slack of the internal METIS split.
+pub const MP_IMBALANCE: f64 = 1.10;
+
+/// Runtime-feedback features extracted from the simulated schedule
+/// (part 3 of Table 1; consumed by `gnn::features`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Feedback {
+    /// Latest finish time of any task attributed to the group (s).
+    pub group_makespan: Vec<f64>,
+    /// Worst wait between an outbound tensor being ready and its
+    /// transfer starting (NIC contention), per group (s).
+    pub group_idle_before_send: Vec<f64>,
+    /// Estimated peak memory / capacity per device group.
+    pub devgroup_peak_mem_frac: Vec<f64>,
+    /// Idle fraction of each machine's compute slot.
+    pub devgroup_idle: Vec<f64>,
+    /// Idle fraction of the sending NIC for each machine pair `[a][b]`.
+    pub link_idle: Vec<Vec<f64>>,
+}
+
+/// What one strategy evaluation returns: simulated per-iteration time,
+/// the OOM verdict, and the feedback features.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SimOutcome {
+    pub time: f64,
+    pub oom: bool,
+    pub feedback: Feedback,
+}
+
+/// Precomputed per-mask placement info (shared across evaluations).
+struct MaskInfo {
+    devices: Vec<DeviceId>,
+    /// Sorted machine (device-group) indices present in the mask.
+    machines: Vec<usize>,
+    /// Device count per entry of `machines`.
+    counts: Vec<usize>,
+    /// Total device count.
+    dev_count: usize,
+    /// Per-device capability share (eff-FLOPs proportional), per machine.
+    frac_cap: Vec<f64>,
+}
+
+impl MaskInfo {
+    fn machine_pos(&self, dg: usize) -> Option<usize> {
+        self.machines.iter().position(|&m| m == dg)
+    }
+}
+
+/// Per-group lowered fragments, built once in [`Lowering::new`].
+struct Fragments {
+    /// `lin[g * M + dg]` = (intercept, slope) of the group's summed
+    /// batch-time model on machine `dg`'s GPU type.
+    lin: Vec<(f64, f64)>,
+    /// Forward inter-group edges `(i, j, bytes)` with `i < j`.
+    edges: Vec<(usize, usize, f64)>,
+    grad_bytes: Vec<f64>,
+    act_bytes: Vec<f64>,
+    param_bytes: Vec<f64>,
+}
+
+struct EvalBuffers {
+    tg: TaskGraph,
+    sim: Simulator,
+    /// Compute-task id per (group, machine), `usize::MAX` = absent.
+    comp: Vec<usize>,
+    /// MP internal-comm task id per group, `usize::MAX` = absent.
+    penalty: Vec<usize>,
+}
+
+/// The strategy → task-graph compiler with its transposition table.
+pub struct Lowering<'a> {
+    pub gg: &'a GroupGraph,
+    pub topo: &'a Topology,
+    pub cost: &'a CostModel,
+    pub comm: &'a CommModel,
+    /// Group indices in descending computation-time order — the order in
+    /// which MCTS decides strategies (§4.2.2).
+    pub order: Vec<usize>,
+    frag: Fragments,
+    masks: RefCell<HashMap<u16, Rc<MaskInfo>>>,
+    memo: RefCell<MemoTable>,
+    buffers: RefCell<EvalBuffers>,
+    dp_cache: Cell<f64>,
+}
+
+impl<'a> Lowering<'a> {
+    pub fn new(
+        gg: &'a GroupGraph,
+        topo: &'a Topology,
+        cost: &'a CostModel,
+        comm: &'a CommModel,
+    ) -> Self {
+        let m = topo.num_groups();
+        let k = gg.num_groups();
+        let mut lin = vec![(0.0, 0.0); k * m];
+        for dg in 0..m {
+            let gpu = &topo.groups[dg].gpu;
+            for g in 0..k {
+                let mut i_sum = 0.0;
+                let mut s_sum = 0.0;
+                for &op in &gg.groups[g].ops {
+                    let bm = cost.batch_model(op, gpu);
+                    i_sum += bm.intercept;
+                    s_sum += bm.slope;
+                }
+                lin[g * m + dg] = (i_sum, s_sum);
+            }
+        }
+        let mut edges = Vec::new();
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if gg.edges[i][j] > 0.0 {
+                    edges.push((i, j, gg.edges[i][j]));
+                }
+            }
+        }
+        let frag = Fragments {
+            lin,
+            edges,
+            grad_bytes: gg.groups.iter().map(|g| g.grad_bytes).collect(),
+            act_bytes: gg.groups.iter().map(|g| g.activation_bytes).collect(),
+            param_bytes: gg.groups.iter().map(|g| g.param_bytes).collect(),
+        };
+        Self {
+            order: gg.by_comp_time_desc(),
+            gg,
+            topo,
+            cost,
+            comm,
+            frag,
+            masks: RefCell::new(HashMap::new()),
+            memo: RefCell::new(MemoTable::new()),
+            buffers: RefCell::new(EvalBuffers {
+                tg: TaskGraph::new(0),
+                sim: Simulator::new(),
+                comp: Vec::new(),
+                penalty: Vec::new(),
+            }),
+            dp_cache: Cell::new(f64::NAN),
+        }
+    }
+
+    /// Fitted computation time of group `g` on one device of machine
+    /// `dev_group` processing a `frac` share of the global batch.
+    pub fn group_time_on(&self, g: usize, dev_group: usize, frac: f64) -> f64 {
+        let (i, s) = self.frag.lin[g * self.topo.num_groups() + dev_group];
+        // clamp (not max) so a NaN from a corrupted cost model propagates
+        // to the TaskGraph::push guard instead of silently becoming 0.
+        (i + s * frac).clamp(0.0, f64::INFINITY)
+    }
+
+    /// Simulated time of the DP-NCCL reference strategy (cached).
+    pub fn dp_time(&self) -> f64 {
+        let cached = self.dp_cache.get();
+        if cached.is_finite() {
+            return cached;
+        }
+        let dp = Strategy::dp_allreduce(self.gg.num_groups(), self.topo);
+        let t = self.evaluate(&dp).time;
+        self.dp_cache.set(t);
+        t
+    }
+
+    /// (hits, misses) of the evaluation transposition table.
+    pub fn memo_stats(&self) -> (u64, u64) {
+        self.memo.borrow().stats()
+    }
+
+    /// Drop all cached evaluations (used by the cold/warm benchmarks).
+    pub fn clear_memo(&self) {
+        self.memo.borrow_mut().clear();
+    }
+
+    /// Resolve a (possibly partial) strategy to per-group effective
+    /// actions under the footnote-2 completion rule, with the
+    /// all-devices AllReduce default.
+    fn resolve(&self, s: &Strategy) -> Vec<Action> {
+        let default = Action { mask: full_mask(self.topo), option: ReplOption::AllReduce };
+        (0..self.gg.num_groups()).map(|g| s.action_for(g, &self.order, default)).collect()
+    }
+
+    /// Exact memo key: resolved action per group + a flags word.
+    fn signature(&self, acts: &[Action], s: &Strategy) -> Box<[u32]> {
+        let mut key = Vec::with_capacity(acts.len() + 1);
+        for a in acts {
+            key.push((a.mask as u32) << 3 | a.option.index() as u32);
+        }
+        let flags = u32::from(s.split == SplitMode::Proportional)
+            | (u32::from(s.sync_barrier) << 1);
+        key.push(flags);
+        key.into_boxed_slice()
+    }
+
+    fn mask_info(&self, mask: u16) -> Rc<MaskInfo> {
+        if let Some(info) = self.masks.borrow().get(&mask) {
+            return Rc::clone(info);
+        }
+        let devices = self.topo.mask_devices(mask);
+        assert!(!devices.is_empty(), "action mask {mask:#x} selects no devices");
+        let mut machines: Vec<usize> = devices.iter().map(|d| d.group).collect();
+        machines.dedup();
+        let counts: Vec<usize> =
+            machines.iter().map(|&dg| self.topo.groups[dg].count).collect();
+        let total_eff: f64 = devices
+            .iter()
+            .map(|d| self.topo.groups[d.group].gpu.effective_flops())
+            .sum();
+        let frac_cap: Vec<f64> = machines
+            .iter()
+            .map(|&dg| self.topo.groups[dg].gpu.effective_flops() / total_eff)
+            .collect();
+        let info = Rc::new(MaskInfo {
+            dev_count: devices.len(),
+            devices,
+            machines,
+            counts,
+            frac_cap,
+        });
+        self.masks.borrow_mut().insert(mask, Rc::clone(&info));
+        info
+    }
+
+    /// Memoized evaluation of a strategy (the MCTS hot path).
+    pub fn evaluate(&self, strategy: &Strategy) -> SimOutcome {
+        let acts = self.resolve(strategy);
+        let key = self.signature(&acts, strategy);
+        if let Some(hit) = self.memo.borrow_mut().get(&key) {
+            return hit;
+        }
+        let out = self.lower_and_simulate(strategy, &acts, None);
+        self.memo.borrow_mut().insert(key, out.clone());
+        out
+    }
+
+    /// Evaluation bypassing the transposition table (bit-identical to
+    /// [`Lowering::evaluate`]; used by property tests and the cold/warm
+    /// benchmarks).
+    pub fn evaluate_uncached(&self, strategy: &Strategy) -> SimOutcome {
+        let acts = self.resolve(strategy);
+        self.lower_and_simulate(strategy, &acts, None)
+    }
+
+    /// Evaluate with an SFB plan folded in: covered gradients leave the
+    /// sync volume, duplicated ops add per-replica compute, and the
+    /// sufficient factors are broadcast on the collective channel.
+    pub fn evaluate_with_sfb(&self, strategy: &Strategy, plan: Option<&SfbPlan>) -> SimOutcome {
+        match plan {
+            None => self.evaluate(strategy),
+            Some(p) => {
+                let acts = self.resolve(strategy);
+                self.lower_and_simulate(strategy, &acts, Some(p))
+            }
+        }
+    }
+
+    /// Per-device batch share of machine entry `mi` under the action's
+    /// replication option and the strategy's split mode.
+    fn dev_frac(&self, a: Action, info: &MaskInfo, mi: usize, split: SplitMode) -> f64 {
+        match a.option {
+            ReplOption::AllReduce | ReplOption::Ps => match split {
+                SplitMode::Even => 1.0 / info.dev_count as f64,
+                SplitMode::Proportional => info.frac_cap[mi],
+            },
+            ReplOption::Duplicate => 1.0,
+            ReplOption::ModelParallel => info.frac_cap[mi],
+        }
+    }
+
+    /// Fraction of an inter-group tensor consumed (or produced) at
+    /// machine entry `mi` of the action's placement.
+    fn machine_frac(&self, a: Action, info: &MaskInfo, mi: usize, split: SplitMode) -> f64 {
+        if a.option == ReplOption::Duplicate {
+            return 1.0;
+        }
+        (self.dev_frac(a, info, mi, split) * info.counts[mi] as f64).min(1.0)
+    }
+
+    fn lower_and_simulate(
+        &self,
+        strategy: &Strategy,
+        acts: &[Action],
+        plan: Option<&SfbPlan>,
+    ) -> SimOutcome {
+        let m = self.topo.num_groups();
+        let k = self.gg.num_groups();
+        let chan = 2 * m;
+        let split = strategy.split;
+
+        let infos: Vec<Rc<MaskInfo>> = acts.iter().map(|a| self.mask_info(a.mask)).collect();
+
+        let mut bufs = self.buffers.borrow_mut();
+        let EvalBuffers { tg, sim, comp, penalty } = &mut *bufs;
+        tg.tasks.clear();
+        tg.num_resources = 2 * m + 1;
+        comp.clear();
+        comp.resize(k * m, usize::MAX);
+        penalty.clear();
+        penalty.resize(k, usize::MAX);
+
+        // ---- compute tasks (one per group per machine) + MP internal comm
+        for g in 0..k {
+            let a = acts[g];
+            let info = &infos[g];
+            for (mi, &dg) in info.machines.iter().enumerate() {
+                let (i0, s0) = self.frag.lin[g * m + dg];
+                // NaN-preserving clamps: the push-time duration guard must
+                // see a corrupted cost model, not a silent 0.
+                let mut dur = match a.option {
+                    ReplOption::AllReduce | ReplOption::Ps | ReplOption::Duplicate => {
+                        (i0 + s0 * self.dev_frac(a, info, mi, split)).clamp(0.0, f64::INFINITY)
+                    }
+                    ReplOption::ModelParallel => ((i0 + s0) * info.frac_cap[mi] * MP_IMBALANCE)
+                        .clamp(0.0, f64::INFINITY),
+                };
+                if let Some(p) = plan {
+                    dur += p.per_group[g].extra_compute_s;
+                }
+                comp[g * m + dg] = tg.push(Task {
+                    resource: dg,
+                    duration: dur,
+                    deps: Vec::new(),
+                    kind: TaskKind::Compute { group: g, dev_group: dg },
+                });
+            }
+            if a.option == ReplOption::ModelParallel && info.dev_count > 1 {
+                let bytes = MP_INTERNAL_COMM_FRAC * self.frag.act_bytes[g];
+                let bw = self.topo.bottleneck_bw_gbps(&info.devices) * 1e9 / 8.0;
+                let deps: Vec<usize> =
+                    info.machines.iter().map(|&dg| comp[g * m + dg]).collect();
+                penalty[g] = tg.push(Task {
+                    resource: m + info.machines[0],
+                    duration: self.comm.transfer_time(bytes, bw),
+                    deps,
+                    kind: TaskKind::Transfer {
+                        from: g,
+                        to: g,
+                        src_dg: info.machines[0],
+                        dst_dg: *info.machines.last().unwrap(),
+                    },
+                });
+            }
+        }
+
+        // ---- inter-group tensor transfers (NIC-serialized)
+        for &(i, j, bytes) in &self.frag.edges {
+            let (ai, aj) = (acts[i], acts[j]);
+            let (fi, fj) = (&infos[i], &infos[j]);
+            for (mj, &b) in fj.machines.iter().enumerate() {
+                let need = bytes * self.machine_frac(aj, fj, mj, split);
+                let local = fi.machine_pos(b);
+                let consumer = comp[j * m + b];
+                if let Some(pi_local) = local {
+                    // Local share is free; gather any deficit from the best
+                    // remote producer machine on b's inbound NIC.
+                    tg.tasks[consumer].deps.push(comp[i * m + b]);
+                    let have = if ai.option == ReplOption::Duplicate {
+                        bytes
+                    } else {
+                        bytes * self.machine_frac(ai, fi, pi_local, split)
+                    };
+                    let deficit = (need - have).max(0.0);
+                    let remotes: Vec<usize> =
+                        fi.machines.iter().copied().filter(|&a| a != b).collect();
+                    if deficit > 1.0 && !remotes.is_empty() {
+                        let src = remotes
+                            .iter()
+                            .copied()
+                            .max_by(|&x, &y| {
+                                self.topo.inter_bw_gbps[x][b]
+                                    .partial_cmp(&self.topo.inter_bw_gbps[y][b])
+                                    .unwrap()
+                                    .then(y.cmp(&x))
+                            })
+                            .unwrap();
+                        let bw = self.topo.inter_bw_gbps[src][b] * 1e9 / 8.0;
+                        let mut deps = vec![comp[i * m + src]];
+                        if penalty[i] != usize::MAX {
+                            deps.push(penalty[i]);
+                        }
+                        let t = tg.push(Task {
+                            resource: m + b,
+                            duration: self.comm.transfer_time(deficit, bw),
+                            deps,
+                            kind: TaskKind::Transfer { from: i, to: j, src_dg: src, dst_dg: b },
+                        });
+                        tg.tasks[consumer].deps.push(t);
+                    }
+                } else {
+                    // Remote consumer machine: full needed share travels
+                    // from the best producer machine over its NIC.
+                    let src = fi
+                        .machines
+                        .iter()
+                        .copied()
+                        .max_by(|&x, &y| {
+                            self.topo.inter_bw_gbps[x][b]
+                                .partial_cmp(&self.topo.inter_bw_gbps[y][b])
+                                .unwrap()
+                                .then(y.cmp(&x))
+                        })
+                        .unwrap();
+                    if need > 1.0 {
+                        let bw = self.topo.inter_bw_gbps[src][b] * 1e9 / 8.0;
+                        let mut deps = vec![comp[i * m + src]];
+                        if penalty[i] != usize::MAX {
+                            deps.push(penalty[i]);
+                        }
+                        let t = tg.push(Task {
+                            resource: m + src,
+                            duration: self.comm.transfer_time(need, bw),
+                            deps,
+                            kind: TaskKind::Transfer { from: i, to: j, src_dg: src, dst_dg: b },
+                        });
+                        tg.tasks[consumer].deps.push(t);
+                    }
+                }
+                if penalty[i] != usize::MAX {
+                    tg.tasks[consumer].deps.push(penalty[i]);
+                }
+            }
+        }
+
+        // ---- gradient synchronization + SFB broadcast on the channel
+        let mut barrier = usize::MAX;
+        for g in 0..k {
+            let a = acts[g];
+            if !matches!(a.option, ReplOption::AllReduce | ReplOption::Ps) {
+                continue;
+            }
+            let info = &infos[g];
+            if info.dev_count < 2 || self.frag.grad_bytes[g] <= 0.0 {
+                continue;
+            }
+            let mut sync_bytes = self.frag.grad_bytes[g];
+            let mut bcast_bytes = 0.0;
+            if let Some(p) = plan {
+                sync_bytes = (sync_bytes - p.per_group[g].saved_sync_bytes).max(0.0);
+                bcast_bytes = p.per_group[g].broadcast_bytes;
+            }
+            let dur = match a.option {
+                ReplOption::AllReduce => {
+                    self.comm.allreduce_time(sync_bytes, &info.devices, self.topo)
+                }
+                _ => {
+                    let ps = info.devices[g % info.dev_count];
+                    self.comm.ps_time(sync_bytes, &info.devices, ps, self.topo)
+                }
+            };
+            let mut deps: Vec<usize> =
+                info.machines.iter().map(|&dg| comp[g * m + dg]).collect();
+            if strategy.sync_barrier {
+                if barrier == usize::MAX {
+                    let all: Vec<usize> =
+                        comp.iter().copied().filter(|&t| t != usize::MAX).collect();
+                    barrier = tg.push(Task {
+                        resource: chan,
+                        duration: 0.0,
+                        deps: all,
+                        kind: TaskKind::Marker,
+                    });
+                }
+                deps.push(barrier);
+            }
+            tg.push(Task { resource: chan, duration: dur, deps, kind: TaskKind::Sync { group: g } });
+            if bcast_bytes > 0.0 {
+                let deps: Vec<usize> =
+                    info.machines.iter().map(|&dg| comp[g * m + dg]).collect();
+                tg.push(Task {
+                    resource: chan,
+                    duration: self.comm.sfb_broadcast_time(bcast_bytes, &info.devices, self.topo),
+                    deps,
+                    kind: TaskKind::Sync { group: g },
+                });
+            }
+        }
+
+        // ---- simulate
+        let sched = sim.run(tg);
+
+        // ---- feedback extraction
+        let mut fb = Feedback {
+            group_makespan: vec![0.0; k],
+            group_idle_before_send: vec![0.0; k],
+            devgroup_peak_mem_frac: vec![0.0; m],
+            devgroup_idle: vec![0.0; m],
+            link_idle: vec![vec![0.0; m]; m],
+        };
+        for (t, task) in tg.tasks.iter().enumerate() {
+            match task.kind {
+                TaskKind::Compute { group, .. } | TaskKind::Sync { group } => {
+                    fb.group_makespan[group] = fb.group_makespan[group].max(sched.finish[t]);
+                }
+                TaskKind::Transfer { from, .. } => {
+                    fb.group_makespan[from] = fb.group_makespan[from].max(sched.finish[t]);
+                    let ready = task
+                        .deps
+                        .iter()
+                        .map(|&d| sched.finish[d])
+                        .fold(0.0f64, f64::max);
+                    let wait = (sched.start[t] - ready).max(0.0);
+                    fb.group_idle_before_send[from] = fb.group_idle_before_send[from].max(wait);
+                }
+                TaskKind::Marker => {}
+            }
+        }
+        for dg in 0..m {
+            fb.devgroup_idle[dg] = sched.idle_fraction(dg);
+        }
+        for a in 0..m {
+            let idle = sched.idle_fraction(m + a);
+            for b in 0..m {
+                if a != b {
+                    fb.link_idle[a][b] = idle;
+                }
+            }
+        }
+
+        // ---- analytic peak memory / OOM
+        let mut mem = vec![0.0f64; m];
+        for g in 0..k {
+            let a = acts[g];
+            let info = &infos[g];
+            for (mi, &dg) in info.machines.iter().enumerate() {
+                let params = self.frag.param_bytes[g] * PARAM_MEM_FACTOR;
+                let act = self.frag.act_bytes[g] * ACT_LIVE_FRAC;
+                mem[dg] += match a.option {
+                    ReplOption::AllReduce | ReplOption::Ps => {
+                        params + act * self.dev_frac(a, info, mi, split)
+                    }
+                    ReplOption::Duplicate => params + act,
+                    ReplOption::ModelParallel => (params + act) * info.frac_cap[mi],
+                };
+            }
+        }
+        let mut oom = false;
+        for dg in 0..m {
+            let cap = self.topo.groups[dg].gpu.mem_gb * 1e9;
+            let frac = mem[dg] / cap;
+            fb.devgroup_peak_mem_frac[dg] = frac;
+            if frac > 1.0 {
+                oom = true;
+            }
+        }
+
+        SimOutcome { time: sched.makespan.max(1e-9), oom, feedback: fb }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::{sfb_pair, testbed};
+    use crate::graph::grouping::group_ops;
+    use crate::models;
+    use crate::profile::unique_gpus;
+    use crate::strategy::enumerate_actions;
+
+    fn setup(topo: &Topology) -> (GroupGraph, CostModel, CommModel) {
+        let m = models::vgg19(8, 0.25);
+        let cost = CostModel::profile(&m.ops, &unique_gpus(topo), 0.0, 1);
+        let gg = group_ops(&m, &cost, 12, 7);
+        let comm = CommModel::fit(3);
+        (gg, cost, comm)
+    }
+
+    #[test]
+    fn dp_strategies_evaluate_and_barrier_never_helps() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let ng = gg.num_groups();
+        let dp = Strategy::dp_allreduce(ng, &topo);
+        let mut hv = dp.clone();
+        hv.sync_barrier = false;
+        let t_dp = low.evaluate(&dp);
+        let t_hv = low.evaluate(&hv);
+        assert!(t_dp.time.is_finite() && t_dp.time > 0.0);
+        assert!(t_hv.time <= t_dp.time + 1e-12, "overlap must not hurt");
+        assert!(!t_dp.oom);
+        assert_eq!(low.dp_time(), t_dp.time);
+    }
+
+    #[test]
+    fn memo_hits_on_equivalent_partial_strategies() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let actions = enumerate_actions(&topo);
+        let a0 = actions[0];
+        // A depth-1 partial strategy completes (footnote 2) to the uniform
+        // strategy of its action — both must share one memo entry.
+        let mut partial = Strategy::empty(gg.num_groups());
+        partial.slots[low.order[0]] = Some(a0);
+        let uniform = Strategy::uniform(gg.num_groups(), a0);
+        let o1 = low.evaluate(&partial);
+        let (_, misses_before) = low.memo_stats();
+        let o2 = low.evaluate(&uniform);
+        let (hits, misses) = low.memo_stats();
+        assert_eq!(o1, o2);
+        assert_eq!(misses, misses_before, "uniform must hit the memo");
+        assert!(hits >= 1);
+    }
+
+    #[test]
+    fn cached_and_uncached_identical() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        for a in enumerate_actions(&topo).into_iter().take(8) {
+            let s = Strategy::uniform(gg.num_groups(), a);
+            let cold = low.evaluate_uncached(&s);
+            let warm1 = low.evaluate(&s);
+            let warm2 = low.evaluate(&s);
+            assert_eq!(cold, warm1);
+            assert_eq!(warm1, warm2);
+        }
+    }
+
+    #[test]
+    fn single_gpu_placement_ooms_large_model() {
+        // BERT-Large at paper scale on one 11 GB 1080Ti must OOM; splitting
+        // the batch across both machines must fit (the §3.3 scenario).
+        let topo = sfb_pair();
+        let m = models::bert(16, true, 1.0);
+        let cost = CostModel::profile(&m.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&m, &cost, 12, 7);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let ng = gg.num_groups();
+        let solo = Strategy::uniform(
+            ng,
+            Action { mask: 0b1, option: ReplOption::AllReduce },
+        );
+        let dp = Strategy::uniform(
+            ng,
+            Action { mask: 0b11, option: ReplOption::AllReduce },
+        );
+        assert!(low.evaluate(&solo).oom, "solo must exceed 11 GB");
+        assert!(!low.evaluate(&dp).oom, "batch-split DP must fit");
+    }
+
+    #[test]
+    fn feedback_shapes_and_ranges() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let out = low.evaluate(&Strategy::empty(gg.num_groups()));
+        let fbk = &out.feedback;
+        assert_eq!(fbk.group_makespan.len(), gg.num_groups());
+        assert_eq!(fbk.devgroup_idle.len(), topo.num_groups());
+        assert_eq!(fbk.link_idle.len(), topo.num_groups());
+        for v in &fbk.devgroup_idle {
+            assert!((0.0..=1.0).contains(v));
+        }
+        for row in &fbk.link_idle {
+            for v in row {
+                assert!((0.0..=1.0).contains(v));
+            }
+        }
+        for v in &fbk.group_makespan {
+            assert!(v.is_finite() && *v >= 0.0);
+        }
+        assert!(fbk.devgroup_peak_mem_frac.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn proportional_split_not_slower_on_heterogeneous_cluster() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let mut even = Strategy::dp_allreduce(gg.num_groups(), &topo);
+        even.sync_barrier = false;
+        let mut prop = even.clone();
+        prop.split = SplitMode::Proportional;
+        let t_even = low.evaluate(&even).time;
+        let t_prop = low.evaluate(&prop).time;
+        assert!(t_prop <= t_even + 1e-12, "prop {t_prop} vs even {t_even}");
+    }
+}

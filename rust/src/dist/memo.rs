@@ -1,0 +1,118 @@
+//! Transposition table for strategy evaluations.
+//!
+//! MCTS revisits the same *effective* deployment many times: the
+//! footnote-2 completion rule maps every partial strategy to a complete
+//! one, and different tree paths frequently complete to identical
+//! deployments (every depth-1 vertex is the uniform strategy of its root
+//! action, deeper vertices repeat whenever later groups copy the first
+//! decided action).  Keying the cache on the *resolved* per-group action
+//! vector — not the raw slot vector — therefore collapses all of them
+//! onto one entry.
+//!
+//! The signature is exact (no hashing tricks beyond `HashMap`'s): one
+//! `u32` per op group encoding `(mask << 3) | option`, plus one flags
+//! word for the batch-split mode and the sync-barrier bit.  Outcomes are
+//! stored by value and cloned out; a [`SimOutcome`] is a few short
+//! vectors, which is 1–2 orders of magnitude cheaper than re-lowering
+//! and re-simulating.
+
+use std::collections::HashMap;
+
+use super::lower::SimOutcome;
+
+/// Hard cap on cached entries; the table is cleared wholesale when it
+/// fills (searches are bounded, so eviction order is irrelevant — this
+/// only guards pathological long-lived `Lowering` instances).
+pub const MEMO_CAPACITY: usize = 1 << 16;
+
+#[derive(Default)]
+pub struct MemoTable {
+    map: HashMap<Box<[u32]>, SimOutcome>,
+    hits: u64,
+    misses: u64,
+}
+
+impl MemoTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&mut self, key: &[u32]) -> Option<SimOutcome> {
+        match self.map.get(key) {
+            Some(v) => {
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: Box<[u32]>, value: SimOutcome) {
+        if self.map.len() >= MEMO_CAPACITY {
+            self.map.clear();
+        }
+        self.map.insert(key, value);
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// (hits, misses) since construction or the last `clear`.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(time: f64) -> SimOutcome {
+        SimOutcome { time, ..Default::default() }
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut m = MemoTable::new();
+        let key: Box<[u32]> = vec![1, 2, 3].into_boxed_slice();
+        assert!(m.get(&key).is_none());
+        m.insert(key.clone(), outcome(1.5));
+        let got = m.get(&key).unwrap();
+        assert_eq!(got.time, 1.5);
+        assert_eq!(m.stats(), (1, 1));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_entries() {
+        let mut m = MemoTable::new();
+        m.insert(vec![1].into_boxed_slice(), outcome(1.0));
+        m.insert(vec![2].into_boxed_slice(), outcome(2.0));
+        assert_eq!(m.get(&[1u32][..]).unwrap().time, 1.0);
+        assert_eq!(m.get(&[2u32][..]).unwrap().time, 2.0);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut m = MemoTable::new();
+        m.insert(vec![1].into_boxed_slice(), outcome(1.0));
+        let _ = m.get(&[1u32][..]);
+        m.clear();
+        assert!(m.is_empty());
+        assert_eq!(m.stats(), (0, 0));
+    }
+}

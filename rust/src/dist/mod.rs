@@ -1,0 +1,45 @@
+//! The strategy compiler (paper §4.3): lowering a (group graph, device
+//! topology, deployment strategy) triple into an executable form.
+//!
+//! Two lowering levels live here:
+//!
+//! * [`lower`] — the **group-level** lowering that the search hot path
+//!   runs: [`Lowering`] compiles a [`Strategy`] into a [`crate::sim`]
+//!   task graph (compute replicas per machine, NIC-serialized tensor
+//!   transfers, gradient synchronization on a collective channel),
+//!   simulates it, and interprets the schedule into a [`SimOutcome`]
+//!   (iteration time + the runtime-feedback features of Table 1 + the
+//!   peak-memory/OOM estimate).  This is the function called from every
+//!   MCTS iteration, every baseline, and the coordinator.
+//! * [`rewrite`] — the **op-level** graph compiler (§4.3.1): rewrites the
+//!   full computation graph for a chosen strategy, inserting
+//!   Split/Concat/AddN/NcclAllReduce auxiliary ops while preserving the
+//!   mathematical-equivalence invariants checked in
+//!   `rust/tests/equivalence.rs`.
+//!
+//! ## The performance layer
+//!
+//! MCTS evaluates hundreds of (mostly repeated) partial strategies per
+//! search, so [`Lowering`] is built as a *compiler with a transposition
+//! table* rather than a plain function:
+//!
+//! * [`memo`] — evaluations are memoized under a cheap **strategy
+//!   signature**: the per-group *effective* action vector after the
+//!   paper's footnote-2 completion rule, so distinct partial strategies
+//!   that complete to the same deployment share one cache entry.
+//! * per-group task *fragments* (summed linear batch-time models per
+//!   machine, the inter-group edge list, mask → device-set expansions)
+//!   are precomputed once in [`Lowering::new`] and stitched per strategy
+//!   instead of re-deriving them from the op graph on every call.
+//! * the discrete-event simulator's indegree/successor/queue buffers are
+//!   preallocated and reused across evaluations
+//!   ([`crate::sim::Simulator`]).
+//!
+//! [`Strategy`]: crate::strategy::Strategy
+
+pub mod lower;
+pub mod memo;
+pub mod rewrite;
+
+pub use lower::{Feedback, Lowering, SimOutcome};
+pub use rewrite::{rewrite as rewrite_graph, DistGraph};

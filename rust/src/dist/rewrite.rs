@@ -1,0 +1,503 @@
+//! Op-level graph rewriting (paper §4.3.1): compile a deployment
+//! strategy into a distributed computation graph.
+//!
+//! For every op group the resolved action decides how its ops are
+//! instantiated:
+//!
+//! * **AllReduce / Ps** — one replica per placement device, batch work
+//!   and batch-dim tensors scaled by the device's share; every gradient
+//!   producer gets a synchronization op (`NcclAllReduce` / `PsUpdate`)
+//!   reading all replicas, and `Apply` ops consume the synchronized
+//!   gradient with their device-local variable copy.
+//! * **Duplicate** — full-batch replicas on broadcast inputs: identical
+//!   gradients everywhere, no synchronization inserted.
+//! * **ModelParallel** — ops are partitioned across the placement
+//!   devices (greedy capability-proportional balance), one instance per
+//!   op.
+//!
+//! Auxiliary ops restore mathematical equivalence at placement
+//! boundaries: `ConcatV2` reassembles batch-split (`Concat`-splittable)
+//! tensors, `AddN` reduces partial-sum (`Sum`-splittable) tensors, and
+//! `Split` carves a replica's shard out of a full tensor.  `NoSplit`
+//! consumers only ever read full tensors (a synchronized gradient, a
+//! device-local stateful tensor, or an aggregation op) — the invariants
+//! `rust/tests/equivalence.rs` checks.
+
+use std::collections::HashMap;
+
+use crate::cluster::{DeviceId, Topology};
+use crate::graph::grouping::GroupGraph;
+use crate::graph::ir::{CompGraph, Op, OpId, OpKind, Splittability};
+use crate::strategy::{full_mask, Action, ReplOption, SplitMode, Strategy};
+
+/// The rewritten graph with per-op device placement and a census of the
+/// inserted auxiliary ops.
+pub struct DistGraph {
+    pub graph: CompGraph,
+    /// Device of every op in `graph` (same indexing).
+    pub placement: Vec<DeviceId>,
+    /// op_type -> number of inserted auxiliary ops.
+    pub inserted: HashMap<&'static str, usize>,
+}
+
+/// How one group's ops are instantiated (resolved, self-contained).
+enum GroupPlan {
+    /// Batch-split replicas with optional gradient sync op type.
+    Replicate { devices: Vec<DeviceId>, fracs: Vec<f64>, sync: Option<&'static str> },
+    /// Full-batch replicas, no sync.
+    Duplicate { devices: Vec<DeviceId> },
+    /// One instance per op; `op_dev[pos]` is the device of the group's
+    /// `pos`-th op.
+    ModelParallel { devices: Vec<DeviceId>, op_dev: Vec<usize> },
+}
+
+/// One materialized instance of an original op.
+#[derive(Clone, Copy)]
+struct Instance {
+    id: OpId,
+    device: DeviceId,
+    /// Whether this instance carries the full tensor value (as opposed
+    /// to a batch shard or a partial sum).
+    full: bool,
+}
+
+struct Rewriter<'a> {
+    orig: &'a CompGraph,
+    out: CompGraph,
+    placement: Vec<DeviceId>,
+    inserted: HashMap<&'static str, usize>,
+    instances: Vec<Vec<Instance>>,
+    /// Aggregated full-tensor instance per original op (sync output,
+    /// Concat, or AddN), inserted on demand.
+    full_of: HashMap<OpId, OpId>,
+    /// Shard instance per (orig op, consumer group, replica index).
+    shard_of: HashMap<(OpId, usize, usize), OpId>,
+}
+
+impl Rewriter<'_> {
+    fn insert_aux(
+        &mut self,
+        name: String,
+        op_type: &'static str,
+        splittability: Splittability,
+        flops: f64,
+        output_bytes: f64,
+        inputs: Vec<OpId>,
+        device: DeviceId,
+    ) -> OpId {
+        let id = self.out.add(Op {
+            name,
+            op_type,
+            kind: OpKind::Compute,
+            flops,
+            output_bytes,
+            param_bytes: 0.0,
+            splittability,
+            inputs,
+        });
+        self.placement.push(device);
+        *self.inserted.entry(op_type).or_insert(0) += 1;
+        id
+    }
+}
+
+fn resolve_actions(gg: &GroupGraph, topo: &Topology, strategy: &Strategy) -> Vec<Action> {
+    let order = gg.by_comp_time_desc();
+    let default = Action { mask: full_mask(topo), option: ReplOption::AllReduce };
+    (0..gg.num_groups()).map(|g| strategy.action_for(g, &order, default)).collect()
+}
+
+/// Greedy capability-proportional op→device assignment for a
+/// model-parallel group ("METIS inside", §4.2).
+fn mp_assign(
+    ops: &[OpId],
+    graph: &CompGraph,
+    topo: &Topology,
+    devices: &[DeviceId],
+) -> Vec<usize> {
+    let eff: Vec<f64> =
+        devices.iter().map(|d| topo.groups[d.group].gpu.effective_flops()).collect();
+    let mut load = vec![0.0f64; devices.len()];
+    let mut out = Vec::with_capacity(ops.len());
+    for &op in ops {
+        let w = graph.ops[op].flops + 1.0;
+        // Least normalized load; ties go to the first (deterministic).
+        let mut best = 0;
+        for d in 1..devices.len() {
+            if load[d] / eff[d] < load[best] / eff[best] - 1e-18 {
+                best = d;
+            }
+        }
+        load[best] += w;
+        out.push(best);
+    }
+    out
+}
+
+fn build_plans(
+    gg: &GroupGraph,
+    topo: &Topology,
+    orig: &CompGraph,
+    strategy: &Strategy,
+) -> Vec<GroupPlan> {
+    resolve_actions(gg, topo, strategy)
+        .into_iter()
+        .enumerate()
+        .map(|(g, a)| {
+            let devices = topo.mask_devices(a.mask);
+            assert!(!devices.is_empty(), "action mask selects no devices");
+            let d = devices.len();
+            match a.option {
+                ReplOption::AllReduce | ReplOption::Ps => {
+                    let fracs = match strategy.split {
+                        SplitMode::Even => vec![1.0 / d as f64; d],
+                        SplitMode::Proportional => {
+                            let tot: f64 = devices
+                                .iter()
+                                .map(|dev| topo.groups[dev.group].gpu.effective_flops())
+                                .sum();
+                            devices
+                                .iter()
+                                .map(|dev| topo.groups[dev.group].gpu.effective_flops() / tot)
+                                .collect()
+                        }
+                    };
+                    let sync = if d >= 2 {
+                        Some(match a.option {
+                            ReplOption::AllReduce => "NcclAllReduce",
+                            _ => "PsUpdate",
+                        })
+                    } else {
+                        None
+                    };
+                    GroupPlan::Replicate { devices, fracs, sync }
+                }
+                ReplOption::Duplicate => GroupPlan::Duplicate { devices },
+                ReplOption::ModelParallel => {
+                    let op_dev = mp_assign(&gg.groups[g].ops, orig, topo, &devices);
+                    GroupPlan::ModelParallel { devices, op_dev }
+                }
+            }
+        })
+        .collect()
+}
+
+/// Rewrite the computation graph for a (possibly partial) strategy —
+/// undecided groups follow the footnote-2 completion rule.
+pub fn rewrite(
+    orig: &CompGraph,
+    gg: &GroupGraph,
+    topo: &Topology,
+    strategy: &Strategy,
+) -> DistGraph {
+    let plans = build_plans(gg, topo, orig, strategy);
+
+    // Position of each op within its group's op list (for MP lookup).
+    let mut pos_in_group = vec![0usize; orig.len()];
+    for grp in &gg.groups {
+        for (p, &op) in grp.ops.iter().enumerate() {
+            pos_in_group[op] = p;
+        }
+    }
+
+    let mut rw = Rewriter {
+        orig,
+        out: CompGraph::new(format!("{}/dist", orig.name), orig.batch_size),
+        placement: Vec::new(),
+        inserted: HashMap::new(),
+        instances: vec![Vec::new(); orig.len()],
+        full_of: HashMap::new(),
+        shard_of: HashMap::new(),
+    };
+
+    for i in 0..orig.len() {
+        let g = gg.assignment[i];
+        match &plans[g] {
+            GroupPlan::Replicate { devices, fracs, sync } => {
+                for (r, (&dev, &frac)) in devices.iter().zip(fracs.iter()).enumerate() {
+                    emit_replica(&mut rw, i, g, r, dev, frac, devices.len() > 1);
+                }
+                if orig.ops[i].is_grad() {
+                    if let Some(sync_ty) = *sync {
+                        let inputs: Vec<OpId> =
+                            rw.instances[i].iter().map(|inst| inst.id).collect();
+                        let bytes = orig.ops[i].output_bytes;
+                        let dev0 = devices[0];
+                        let sid = rw.insert_aux(
+                            format!("{}/{}", orig.ops[i].name, sync_ty.to_lowercase()),
+                            sync_ty,
+                            Splittability::NoSplit,
+                            bytes / 4.0,
+                            bytes,
+                            inputs,
+                            dev0,
+                        );
+                        rw.full_of.insert(i, sid);
+                    }
+                }
+            }
+            GroupPlan::Duplicate { devices } => {
+                for (r, &dev) in devices.iter().enumerate() {
+                    emit_replica(&mut rw, i, g, r, dev, 1.0, devices.len() > 1);
+                }
+            }
+            GroupPlan::ModelParallel { devices, op_dev } => {
+                let dev = devices[op_dev[pos_in_group[i]]];
+                emit_replica(&mut rw, i, g, 0, dev, 1.0, false);
+            }
+        }
+    }
+
+    DistGraph { graph: rw.out, placement: rw.placement, inserted: rw.inserted }
+}
+
+/// Whether an op keeps its full tensor value on every replica even when
+/// the batch is split: parameters, and input-less zero-flop stateful
+/// tensors (optimizer slots).
+fn is_stateful_full(op: &Op) -> bool {
+    op.is_param()
+        || (matches!(op.kind, OpKind::Compute) && op.flops == 0.0 && op.inputs.is_empty())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_replica(
+    rw: &mut Rewriter,
+    i: OpId,
+    g: usize,
+    r: usize,
+    dev: DeviceId,
+    frac: f64,
+    multi: bool,
+) {
+    let op = &rw.orig.ops[i];
+    let split_batch = frac < 1.0 && !is_stateful_full(op);
+    // Batch-scaled work for splittable ops; NoSplit ops run in full.
+    let flops = if split_batch && op.splittability != Splittability::NoSplit {
+        op.flops * frac
+    } else {
+        op.flops
+    };
+    // Batch-dim tensors shrink with the share; Sum tensors (partial
+    // gradients) and NoSplit outputs keep their full shape.
+    let output_bytes = if split_batch && op.splittability == Splittability::Concat {
+        op.output_bytes * frac
+    } else {
+        op.output_bytes
+    };
+    let full = !split_batch
+        || (op.splittability == Splittability::NoSplit && !op.is_grad());
+
+    let needs_full = op.splittability == Splittability::NoSplit || frac >= 1.0;
+    let orig_inputs = op.inputs.clone();
+    let op_kind = op.kind;
+    let op_name = op.name.clone();
+    let op_type = op.op_type;
+    let op_split = op.splittability;
+    let op_params = op.param_bytes;
+
+    let inputs: Vec<OpId> = orig_inputs
+        .into_iter()
+        .map(|p| resolve_input(rw, p, g, r, dev, needs_full, frac))
+        .collect();
+
+    let kind = match op_kind {
+        OpKind::Grad { wrt } => OpKind::Grad { wrt: instance_near(rw, wrt, dev) },
+        OpKind::Apply { var } => OpKind::Apply { var: instance_near(rw, var, dev) },
+        k => k,
+    };
+    let name = if multi { format!("{op_name}/rep{r}") } else { op_name };
+    let id = rw.out.add(Op {
+        name,
+        op_type,
+        kind,
+        flops,
+        output_bytes,
+        param_bytes: op_params,
+        splittability: op_split,
+        inputs,
+    });
+    rw.placement.push(dev);
+    rw.instances[i].push(Instance { id, device: dev, full });
+}
+
+/// The already-emitted instance of `p` nearest to `dev` (same device if
+/// possible, else the first replica).
+fn instance_near(rw: &Rewriter, p: OpId, dev: DeviceId) -> OpId {
+    let insts = &rw.instances[p];
+    insts
+        .iter()
+        .find(|inst| inst.device == dev)
+        .or_else(|| insts.first())
+        .map(|inst| inst.id)
+        .expect("producer emitted before consumer (topological order)")
+}
+
+/// Aggregated full-tensor instance of `p`, inserting ConcatV2/AddN over
+/// the replicas when needed (memoized).
+fn full_instance(rw: &mut Rewriter, p: OpId) -> OpId {
+    if let Some(&f) = rw.full_of.get(&p) {
+        return f;
+    }
+    if let Some(inst) = rw.instances[p].iter().find(|inst| inst.full) {
+        return inst.id;
+    }
+    let insts = rw.instances[p].clone();
+    assert!(!insts.is_empty(), "producer {p} has no instances");
+    let op = &rw.orig.ops[p];
+    let (ty, flops) = match op.splittability {
+        Splittability::Sum => ("AddN", op.output_bytes / 4.0),
+        _ => ("ConcatV2", 0.0),
+    };
+    let name = format!("{}/{}", op.name, ty.to_lowercase());
+    let bytes = op.output_bytes;
+    let inputs: Vec<OpId> = insts.iter().map(|inst| inst.id).collect();
+    let device = insts[0].device;
+    let id = rw.insert_aux(name, ty, Splittability::NoSplit, flops, bytes, inputs, device);
+    rw.full_of.insert(p, id);
+    id
+}
+
+/// Resolve input `p` for replica `r` of a consumer in group `g_cons` on
+/// `dev` — device-local instances when valid, otherwise aggregate (and
+/// re-shard for batch-split consumers).
+fn resolve_input(
+    rw: &mut Rewriter,
+    p: OpId,
+    g_cons: usize,
+    r: usize,
+    dev: DeviceId,
+    needs_full: bool,
+    frac: f64,
+) -> OpId {
+    if needs_full {
+        // Synchronized gradients take precedence over local partials.
+        if let Some(&f) = rw.full_of.get(&p) {
+            return f;
+        }
+        if let Some(inst) =
+            rw.instances[p].iter().find(|inst| inst.device == dev && inst.full)
+        {
+            return inst.id;
+        }
+        return full_instance(rw, p);
+    }
+    // Stateful tensors (weights, optimizer slots) are full everywhere —
+    // read the nearest copy, never shard them.
+    if is_stateful_full(&rw.orig.ops[p]) {
+        return instance_near(rw, p, dev);
+    }
+    // Batch-split consumer: a same-device batch-split instance carries
+    // exactly this replica's shard; a same-device full non-partial tensor
+    // (variable, broadcast input) is readable directly.
+    if let Some(inst) = rw.instances[p].iter().find(|inst| inst.device == dev) {
+        if !inst.full || rw.orig.ops[p].splittability != Splittability::Sum {
+            return inst.id;
+        }
+    }
+    // Otherwise carve the shard out of the aggregated tensor.
+    if let Some(&s) = rw.shard_of.get(&(p, g_cons, r)) {
+        return s;
+    }
+    let full = full_instance(rw, p);
+    let name = format!("{}/split_g{g_cons}_r{r}", rw.orig.ops[p].name);
+    let bytes = rw.orig.ops[p].output_bytes * frac;
+    let id =
+        rw.insert_aux(name, "Split", Splittability::Concat, 0.0, bytes, vec![full], dev);
+    rw.shard_of.insert((p, g_cons, r), id);
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::sfb_pair;
+    use crate::graph::grouping::group_ops;
+    use crate::models;
+    use crate::profile::{unique_gpus, CostModel};
+
+    fn setup() -> (CompGraph, GroupGraph, Topology) {
+        let topo = sfb_pair();
+        let m = models::vgg19(4, 0.25);
+        let cost = CostModel::profile(&m.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&m, &cost, 8, 3);
+        (m, gg, topo)
+    }
+
+    #[test]
+    fn dp_rewrite_replicates_and_syncs() {
+        let (m, gg, topo) = setup();
+        let s = Strategy::dp_allreduce(gg.num_groups(), &topo);
+        let d = rewrite(&m, &gg, &topo, &s);
+        assert!(d.graph.check_acyclic());
+        assert_eq!(d.graph.len(), d.placement.len());
+        let n_sync = d.inserted.get("NcclAllReduce").copied().unwrap_or(0);
+        assert_eq!(n_sync, m.grad_apply_pairs().len());
+        // Both devices appear in the placement.
+        let machines: std::collections::HashSet<usize> =
+            d.placement.iter().map(|dev| dev.group).collect();
+        assert_eq!(machines.len(), 2);
+    }
+
+    #[test]
+    fn solo_placement_inserts_nothing() {
+        let (m, gg, topo) = setup();
+        let s = Strategy::uniform(
+            gg.num_groups(),
+            Action { mask: 0b1, option: ReplOption::AllReduce },
+        );
+        let d = rewrite(&m, &gg, &topo, &s);
+        assert!(d.inserted.is_empty(), "{:?}", d.inserted);
+        assert_eq!(d.graph.len(), m.len());
+        assert!(d.placement.iter().all(|dev| dev.group == 0));
+    }
+
+    #[test]
+    fn model_parallel_uses_both_devices_without_replication() {
+        let (m, gg, topo) = setup();
+        let s = Strategy::uniform(
+            gg.num_groups(),
+            Action { mask: 0b11, option: ReplOption::ModelParallel },
+        );
+        let d = rewrite(&m, &gg, &topo, &s);
+        assert!(d.graph.check_acyclic());
+        let vars_orig = m.ops.iter().filter(|o| o.is_param()).count();
+        let vars_dist = d.graph.ops.iter().filter(|o| o.is_param()).count();
+        assert_eq!(vars_orig, vars_dist);
+        let machines: std::collections::HashSet<usize> =
+            d.placement.iter().map(|dev| dev.group).collect();
+        assert_eq!(machines.len(), 2);
+        assert!(d.inserted.get("NcclAllReduce").is_none());
+    }
+
+    #[test]
+    fn flops_conserved_under_dp() {
+        let (m, gg, topo) = setup();
+        let s = Strategy::dp_allreduce(gg.num_groups(), &topo);
+        let d = rewrite(&m, &gg, &topo, &s);
+        let extra: f64 = d
+            .graph
+            .ops
+            .iter()
+            .filter(|o| o.op_type == "NcclAllReduce" || o.op_type == "AddN")
+            .map(|o| o.flops)
+            .sum();
+        let ratio = (d.graph.total_flops() - extra) / m.total_flops();
+        assert!((0.95..1.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn duplicate_rewrite_has_no_sync_and_full_flops() {
+        let (m, gg, topo) = setup();
+        let s = Strategy::uniform(
+            gg.num_groups(),
+            Action { mask: 0b11, option: ReplOption::Duplicate },
+        );
+        let d = rewrite(&m, &gg, &topo, &s);
+        assert!(d.graph.check_acyclic());
+        assert!(d.inserted.get("NcclAllReduce").is_none());
+        assert!(d.inserted.get("PsUpdate").is_none());
+        // Every replica runs the full batch: ~2x original flops.
+        let ratio = d.graph.total_flops() / m.total_flops();
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+}

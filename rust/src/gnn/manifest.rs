@@ -5,7 +5,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 #[derive(Clone, Debug)]
 pub struct InputSpec {
@@ -56,7 +57,7 @@ impl Manifest {
         for specs in m.inputs.values_mut() {
             specs.sort_by_key(|s| s.index);
             for (i, s) in specs.iter().enumerate() {
-                anyhow::ensure!(s.index == i, "input indices not dense");
+                crate::ensure!(s.index == i, "input indices not dense");
             }
         }
         Ok(m)

@@ -2,12 +2,12 @@
 //! `python/compile/model.py::param_spec` defines).  The Rust side never
 //! needs the structure — one params vector, two Adam moment vectors.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 pub fn load_params(path: impl AsRef<std::path::Path>) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path.as_ref())
         .with_context(|| format!("read params {:?}", path.as_ref()))?;
-    anyhow::ensure!(bytes.len() % 4 == 0, "params file not a multiple of 4 bytes");
+    crate::ensure!(bytes.len() % 4 == 0, "params file not a multiple of 4 bytes");
     Ok(bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))

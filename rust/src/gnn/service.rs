@@ -8,14 +8,13 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use super::features::{Position, B_INFER, B_TRAIN, N_CAND};
 use super::manifest::Manifest;
 use crate::dist::SimOutcome;
 use crate::mcts::PriorProvider;
-use crate::runtime::{literal_f32, scalar_f32, to_vec_f32, Executable, Runtime};
+use crate::runtime::{literal_f32, scalar_f32, to_vec_f32, Executable, Literal, Runtime};
 use crate::strategy::{Action, Strategy};
+use crate::util::error::{Context, Result};
 
 pub struct GnnService {
     pub manifest: Manifest,
@@ -50,8 +49,8 @@ impl GnnService {
         positions: &[&Position],
         batch: usize,
         dims_of: &[super::manifest::InputSpec],
-    ) -> Result<Vec<xla::Literal>> {
-        anyhow::ensure!(positions.len() <= batch, "batch overflow");
+    ) -> Result<Vec<Literal>> {
+        crate::ensure!(positions.len() <= batch, "batch overflow");
         let mut out = Vec::with_capacity(dims_of.len());
         for spec in dims_of {
             let per: i64 = spec.dims[1..].iter().product();
@@ -63,7 +62,7 @@ impl GnnService {
                     .position(|&n| n == spec.name)
                     .with_context(|| format!("unknown feature {}", spec.name))?;
                 let src = arrays[idx];
-                anyhow::ensure!(
+                crate::ensure!(
                     src.len() == per as usize,
                     "feature {} length {} != {}",
                     spec.name,
@@ -84,14 +83,14 @@ impl GnnService {
         params: &[f32],
         positions: &[&Position],
     ) -> Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(params.len() == self.param_count, "param count mismatch");
+        crate::ensure!(params.len() == self.param_count, "param count mismatch");
         let specs = self.manifest.inputs_for("infer");
         let mut inputs =
             vec![literal_f32(params, &[self.param_count as i64])?];
         inputs.extend(self.batch_literals(positions, B_INFER, &specs[1..])?);
         let out = self.infer.run(&inputs)?;
         let flat = to_vec_f32(&out[0])?;
-        anyhow::ensure!(flat.len() == B_INFER * N_CAND);
+        crate::ensure!(flat.len() == B_INFER * N_CAND);
         Ok(positions
             .iter()
             .enumerate()
@@ -112,8 +111,8 @@ impl GnnService {
         target_pi: &[Vec<f32>],
         example_mask: &[f32],
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
-        anyhow::ensure!(positions.len() == target_pi.len());
-        anyhow::ensure!(positions.len() <= B_TRAIN);
+        crate::ensure!(positions.len() == target_pi.len());
+        crate::ensure!(positions.len() <= B_TRAIN);
         let specs = self.manifest.inputs_for("train");
         let pc = self.param_count as i64;
         let mut inputs = vec![
@@ -126,7 +125,7 @@ impl GnnService {
         // target_pi (B_TRAIN, N_CAND)
         let mut pi_flat = vec![0.0f32; B_TRAIN * N_CAND];
         for (bi, pi) in target_pi.iter().enumerate() {
-            anyhow::ensure!(pi.len() == N_CAND || pi.len() <= N_CAND);
+            crate::ensure!(pi.len() <= N_CAND);
             pi_flat[bi * N_CAND..bi * N_CAND + pi.len()].copy_from_slice(pi);
         }
         inputs.push(literal_f32(&pi_flat, &[B_TRAIN as i64, N_CAND as i64])?);
@@ -136,7 +135,7 @@ impl GnnService {
         inputs.push(literal_f32(&mask, &[B_TRAIN as i64])?);
 
         let out = self.train.run(&inputs)?;
-        anyhow::ensure!(out.len() == 4, "train step must return 4 outputs");
+        crate::ensure!(out.len() == 4, "train step must return 4 outputs");
         let new_p = to_vec_f32(&out[0])?;
         let new_m = to_vec_f32(&out[1])?;
         let new_v = to_vec_f32(&out[2])?;

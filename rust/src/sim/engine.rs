@@ -1,6 +1,18 @@
 //! The event-driven scheduling core: serial resources, FIFO-by-ready-time
 //! queues (matching TensorFlow's default executor behaviour that the
 //! paper's simulator mimics), deterministic tie-breaking by task id.
+//!
+//! Two properties the `dist` hot path depends on:
+//!
+//! * **Only-ready dispatch** — a resource never starts a task whose ready
+//!   time lies in the future.  If the head of a queue is not ready yet,
+//!   the resource stays idle and a *wake event* is scheduled for the head's
+//!   ready time, so a task that becomes ready earlier (enqueued later) is
+//!   never blocked behind a future-ready head.
+//! * **Buffer reuse** — [`Simulator`] keeps the indegree/successor/queue
+//!   buffers across runs; `dist::Lowering` evaluates hundreds of task
+//!   graphs per search, and reallocation would dominate the simulation
+//!   itself.  [`simulate`] stays as the one-shot convenience wrapper.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -8,7 +20,7 @@ use std::collections::BinaryHeap;
 use super::TaskGraph;
 
 /// Simulation output: per-task schedule + per-resource utilization.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Schedule {
     pub start: Vec<f64>,
     pub finish: Vec<f64>,
@@ -47,100 +59,205 @@ impl Ord for Key {
     }
 }
 
-/// Run the task graph to completion. Panics on dependency cycles
-/// (impossible for graphs built through `TaskGraph::push`).
-pub fn simulate(tg: &TaskGraph) -> Schedule {
-    let n = tg.tasks.len();
-    let mut indeg: Vec<usize> = vec![0; n];
-    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (i, t) in tg.tasks.iter().enumerate() {
-        indeg[i] = t.deps.len();
-        for &d in &t.deps {
-            succs[d].push(i);
-        }
+/// Reusable simulation engine.  `run` never allocates the dependency
+/// buffers after the first call at a given problem size.
+#[derive(Default)]
+pub struct Simulator {
+    indeg: Vec<usize>,
+    succs: Vec<Vec<usize>>,
+    ready_at: Vec<f64>,
+    queues: Vec<BinaryHeap<Key>>,
+    resource_free: Vec<bool>,
+    events: BinaryHeap<Key>,
+}
+
+/// Try to start work on resource `r` at time `now`.  Event tags `>= n`
+/// encode "wake resource `tag - n`".
+#[allow(clippy::too_many_arguments)]
+fn try_start(
+    r: usize,
+    now: f64,
+    tg: &TaskGraph,
+    n: usize,
+    queues: &mut [BinaryHeap<Key>],
+    resource_free: &mut [bool],
+    start: &mut [f64],
+    busy: &mut [f64],
+    events: &mut BinaryHeap<Key>,
+) {
+    if !resource_free[r] {
+        return;
+    }
+    let Some(&Key(ready, id)) = queues[r].peek() else {
+        return;
+    };
+    if ready > now {
+        // Head not ready yet: keep the resource idle (a later-enqueued but
+        // earlier-ready task would land ahead of it in the queue) and
+        // revisit when the head becomes startable.
+        events.push(Key(ready, n + r));
+        return;
+    }
+    queues[r].pop();
+    start[id] = now;
+    let f = now + tg.tasks[id].duration;
+    busy[r] += tg.tasks[id].duration;
+    resource_free[r] = false;
+    events.push(Key(f, id));
+}
+
+impl Simulator {
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    let mut start = vec![f64::NAN; n];
-    let mut finish = vec![f64::NAN; n];
-    let mut busy = vec![0.0; tg.num_resources];
+    /// Run the task graph to completion. Panics on dependency cycles
+    /// (impossible for graphs built through `TaskGraph::push`).
+    pub fn run(&mut self, tg: &TaskGraph) -> Schedule {
+        let n = tg.tasks.len();
+        let nr = tg.num_resources;
 
-    // Per-resource FIFO of ready tasks ordered by (ready time, id).
-    let mut queues: Vec<BinaryHeap<Key>> =
-        (0..tg.num_resources).map(|_| BinaryHeap::new()).collect();
-    let mut resource_free: Vec<bool> = vec![true; tg.num_resources];
-
-    // Event heap of task completions.
-    let mut events: BinaryHeap<Key> = BinaryHeap::new();
-    let mut completed = 0usize;
-
-    let mut ready_at = vec![0.0f64; n];
-    for i in 0..n {
-        if indeg[i] == 0 {
-            queues[tg.tasks[i].resource].push(Key(0.0, i));
+        let Simulator { indeg, succs, ready_at, queues, resource_free, events } = self;
+        indeg.clear();
+        indeg.resize(n, 0);
+        ready_at.clear();
+        ready_at.resize(n, 0.0);
+        for s in succs.iter_mut() {
+            s.clear();
         }
-    }
-
-    // Try to start a task on `r` at time `now`.
-    fn try_start(
-        r: usize,
-        now: f64,
-        tg: &TaskGraph,
-        queues: &mut [BinaryHeap<Key>],
-        resource_free: &mut [bool],
-        start: &mut [f64],
-        busy: &mut [f64],
-        events: &mut BinaryHeap<Key>,
-    ) {
-        if !resource_free[r] {
-            return;
+        if succs.len() < n {
+            succs.resize_with(n, Vec::new);
         }
-        if let Some(Key(ready, id)) = queues[r].pop() {
-            let s = now.max(ready);
-            start[id] = s;
-            let f = s + tg.tasks[id].duration;
-            busy[r] += tg.tasks[id].duration;
-            resource_free[r] = false;
-            events.push(Key(f, id));
+        for q in queues.iter_mut() {
+            q.clear();
         }
-    }
+        if queues.len() < nr {
+            queues.resize_with(nr, BinaryHeap::new);
+        }
+        resource_free.clear();
+        resource_free.resize(nr, true);
+        events.clear();
 
-    for r in 0..tg.num_resources {
-        try_start(r, 0.0, tg, &mut queues, &mut resource_free, &mut start, &mut busy, &mut events);
-    }
-
-    while let Some(Key(t_fin, id)) = events.pop() {
-        let now = t_fin;
-        finish[id] = t_fin;
-        completed += 1;
-        let r = tg.tasks[id].resource;
-        resource_free[r] = true;
-        // Release successors.
-        for &s in &succs[id] {
-            indeg[s] -= 1;
-            ready_at[s] = ready_at[s].max(t_fin);
-            if indeg[s] == 0 {
-                queues[tg.tasks[s].resource].push(Key(ready_at[s], s));
+        for (i, t) in tg.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for &d in &t.deps {
+                succs[d].push(i);
             }
         }
-        // Start next work on this resource and any resource whose queue
-        // just gained a task.
-        try_start(r, now, tg, &mut queues, &mut resource_free, &mut start, &mut busy, &mut events);
-        for &s in &succs[id] {
-            let rs = tg.tasks[s].resource;
-            try_start(
-                rs,
-                now,
-                tg,
-                &mut queues,
-                &mut resource_free,
-                &mut start,
-                &mut busy,
-                &mut events,
-            );
+
+        let mut start = vec![f64::NAN; n];
+        let mut finish = vec![f64::NAN; n];
+        let mut busy = vec![0.0; nr];
+        let mut completed = 0usize;
+
+        for i in 0..n {
+            if indeg[i] == 0 {
+                queues[tg.tasks[i].resource].push(Key(0.0, i));
+            }
         }
+        for r in 0..nr {
+            try_start(r, 0.0, tg, n, queues, resource_free, &mut start, &mut busy, events);
+        }
+
+        while let Some(Key(t_ev, tag)) = events.pop() {
+            if tag >= n {
+                // Wake event: the queue head of this resource became ready.
+                try_start(
+                    tag - n,
+                    t_ev,
+                    tg,
+                    n,
+                    queues,
+                    resource_free,
+                    &mut start,
+                    &mut busy,
+                    events,
+                );
+                continue;
+            }
+            let id = tag;
+            let now = t_ev;
+            finish[id] = t_ev;
+            completed += 1;
+            let r = tg.tasks[id].resource;
+            resource_free[r] = true;
+            // Release successors.
+            for &s in &succs[id] {
+                indeg[s] -= 1;
+                ready_at[s] = ready_at[s].max(t_ev);
+                if indeg[s] == 0 {
+                    queues[tg.tasks[s].resource].push(Key(ready_at[s], s));
+                }
+            }
+            // Start next work on this resource and any resource whose queue
+            // just gained a task.
+            try_start(r, now, tg, n, queues, resource_free, &mut start, &mut busy, events);
+            for &s in &succs[id] {
+                let rs = tg.tasks[s].resource;
+                try_start(rs, now, tg, n, queues, resource_free, &mut start, &mut busy, events);
+            }
+        }
+
+        assert_eq!(completed, n, "dependency cycle or unreachable tasks");
+        let makespan = finish.iter().copied().fold(0.0f64, f64::max);
+        Schedule { start, finish, busy, makespan }
+    }
+}
+
+/// One-shot convenience wrapper around [`Simulator::run`].
+pub fn simulate(tg: &TaskGraph) -> Schedule {
+    Simulator::new().run(tg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Task, TaskKind};
+
+    fn t(resource: usize, duration: f64, deps: &[usize]) -> Task {
+        Task { resource, duration, deps: deps.to_vec(), kind: TaskKind::Marker }
     }
 
-    assert_eq!(completed, n, "dependency cycle or unreachable tasks");
-    let makespan = finish.iter().copied().fold(0.0f64, f64::max);
-    Schedule { start, finish, busy, makespan }
+    #[test]
+    fn reused_simulator_matches_one_shot() {
+        let mut sim = Simulator::new();
+        let mut tg = TaskGraph::new(2);
+        let a = tg.push(t(0, 1.0, &[]));
+        tg.push(t(1, 2.0, &[a]));
+        let s1 = sim.run(&tg);
+        // Different graph with the same engine instance.
+        let mut tg2 = TaskGraph::new(3);
+        let a = tg2.push(t(0, 1.0, &[]));
+        let b = tg2.push(t(1, 5.0, &[a]));
+        let c = tg2.push(t(2, 2.0, &[a]));
+        tg2.push(t(0, 1.0, &[b, c]));
+        let s2 = sim.run(&tg2);
+        assert_eq!(s1.makespan, simulate(&tg).makespan);
+        assert_eq!(s2.makespan, simulate(&tg2).makespan);
+        assert_eq!(s2.makespan, 7.0);
+        // And the original graph again — buffers fully reset.
+        let s3 = sim.run(&tg);
+        assert_eq!(s3.makespan, s1.makespan);
+        assert_eq!(s3.start, s1.start);
+    }
+
+    #[test]
+    fn tasks_never_start_before_ready_and_dispatch_in_ready_order() {
+        // Two producers on separate resources release consumers onto the
+        // shared resource 2 at different times; the engine must dispatch
+        // them in ready order and never before their ready times.
+        let mut tg = TaskGraph::new(3);
+        let p_slow = tg.push(t(0, 4.0, &[]));
+        let p_fast = tg.push(t(1, 1.0, &[]));
+        let c_late = tg.push(t(2, 1.0, &[p_slow])); // ready at 4
+        let c_early = tg.push(t(2, 2.0, &[p_fast])); // ready at 1
+        let s = simulate(&tg);
+        assert_eq!(s.start[c_early], 1.0);
+        assert_eq!(s.start[c_late], 4.0); // early finishes at 3; late waits for ready
+        for i in 0..tg.len() {
+            for &d in &tg.tasks[i].deps {
+                assert!(s.start[i] >= s.finish[d] - 1e-12);
+            }
+        }
+    }
 }

@@ -13,7 +13,7 @@
 
 pub mod engine;
 
-pub use engine::{simulate, Schedule};
+pub use engine::{simulate, Schedule, Simulator};
 
 /// What a task models — used for runtime-feedback attribution.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -50,6 +50,13 @@ impl TaskGraph {
     }
 
     pub fn push(&mut self, t: Task) -> usize {
+        // A NaN (or negative/infinite) duration would silently corrupt the
+        // engine's heap ordering — fail fast at construction time instead.
+        assert!(
+            t.duration.is_finite() && t.duration >= 0.0,
+            "task duration must be finite and non-negative, got {}",
+            t.duration
+        );
         debug_assert!(t.resource < self.num_resources);
         debug_assert!(t.deps.iter().all(|&d| d < self.tasks.len()));
         self.tasks.push(t);
@@ -159,5 +166,19 @@ mod tests {
         let tg = TaskGraph::new(1);
         let s = simulate(&tg);
         assert_eq!(s.makespan, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn nan_duration_rejected_at_push() {
+        let mut tg = TaskGraph::new(1);
+        tg.push(t(0, f64::NAN, &[]));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn negative_duration_rejected_at_push() {
+        let mut tg = TaskGraph::new(1);
+        tg.push(t(0, -1.0, &[]));
     }
 }

@@ -1,0 +1,154 @@
+//! Minimal error plumbing for the I/O-facing modules ([`crate::runtime`],
+//! [`crate::gnn`]): a string-backed error type, a `Context` extension
+//! trait and `ensure!`/`bail!` macros.  The vendored dependency set has no
+//! `anyhow`; this mirrors the slice of its API the crate uses so the
+//! artifact-loading paths keep readable error chains.
+
+use std::fmt;
+
+/// A flat, message-only error.  Context layers are joined with `: `,
+/// outermost first, matching the chain formatting callers print.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Self { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Self {
+        Self::msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Self {
+        Self::msg(m)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (or a missing `Option` value), outermost
+/// message first.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Return early with an [`Error`] if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            ))
+            .into());
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)+)).into());
+        }
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)+)).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        let parsed: Result<u32> = "nope".parse::<u32>().map_err(Error::from);
+        parsed.context("parsing the answer")
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fails().unwrap_err();
+        assert!(e.to_string().starts_with("parsing the answer: "), "{e}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(7).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            crate::ensure!(x != 5);
+            if x == 3 {
+                crate::bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(check(2).unwrap(), 2);
+        assert!(check(12).unwrap_err().to_string().contains("x too big"));
+        assert!(check(5).unwrap_err().to_string().contains("x != 5"));
+        assert!(check(3).unwrap_err().to_string().contains("right out"));
+    }
+}

@@ -6,6 +6,7 @@
 //! seeded by the caller, so experiments in EXPERIMENTS.md are exactly
 //! reproducible.
 
+pub mod error;
 pub mod rng;
 pub mod stats;
 

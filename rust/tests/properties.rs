@@ -10,6 +10,7 @@
 //!    instances; never positive
 //!  * comm model: monotone in bytes, inverse-monotone in bandwidth
 //!  * strategies: evaluation finite for arbitrary random strategies
+//!  * dist memo: cached and cache-bypassed evaluation bit-identical
 
 use tag::cluster::generator::random_topology;
 use tag::dist::Lowering;
@@ -210,6 +211,39 @@ fn prop_comm_model_monotonicity() {
         assert!(m.transfer_time(b2, bw) >= m.transfer_time(b1, bw) - 1e-12);
         let bw2 = bw * rng.uniform(1.0, 4.0);
         assert!(m.transfer_time(b1, bw2) <= m.transfer_time(b1, bw) + 1e-12);
+    }
+}
+
+#[test]
+fn prop_memo_cached_and_uncached_bit_identical() {
+    // 100 random (partial and complete) strategies across 4 random
+    // topologies: the transposition table must return outcomes that are
+    // bit-identical to a fresh lowering+simulation, both on the filling
+    // pass and on repeated hits.
+    let model = models::by_name("VGG19", 0.25).unwrap();
+    for case in 0..4 {
+        let mut rng = Rng::new(7000 + case);
+        let topo = random_topology(&mut rng);
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&model, &cost, 12, case);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let actions = enumerate_actions(&topo);
+        for _ in 0..25 {
+            let mut s = Strategy::empty(gg.num_groups());
+            for g in 0..gg.num_groups() {
+                if rng.chance(0.85) {
+                    s.slots[g] = Some(*rng.choose(&actions));
+                }
+            }
+            let cold = low.evaluate_uncached(&s);
+            let warm1 = low.evaluate(&s);
+            let warm2 = low.evaluate(&s);
+            assert_eq!(cold, warm1, "case {case}: fill differs from bypass");
+            assert_eq!(warm1, warm2, "case {case}: hit differs from fill");
+        }
+        let (hits, _misses) = low.memo_stats();
+        assert!(hits >= 25, "case {case}: memo never hit ({hits})");
     }
 }
 
