@@ -13,15 +13,20 @@
 //!
 //!   cargo run --release --example generalization [-- fig6] [-- tab7] [-- tab8]
 //!   (no args = run everything at a small budget)
+//!
+//! Every arm is a `tag::api::Planner` plan call; backends encode the
+//! experiment's search variant (pure vs GNN-guided, root sweep on/off).
 
+use std::rc::Rc;
+
+use tag::api::{
+    BaselineSweepBackend, GnnMctsBackend, MctsBackend, PlanRequest, Planner,
+};
 use tag::cluster::generator::random_topologies;
 use tag::cluster::presets::{cloud, homogeneous, testbed};
-use tag::coordinator::{prepare, search_session, SearchConfig, Trainer};
-use tag::dist::Lowering;
+use tag::coordinator::Trainer;
 use tag::gnn::{params, GnnService};
-use tag::mcts::{Mcts, UniformPrior};
 use tag::models;
-use tag::strategy::{baselines, enumerate_actions};
 
 fn has(flag: &str) -> bool {
     std::env::args().any(|a| a == flag)
@@ -49,29 +54,21 @@ fn main() {
 /// Fig. 6: relative speed vs expert on homogeneous 2x V100.
 fn fig6() {
     let topo = homogeneous();
-    let model = models::inception_v3(32, 0.5);
-    let cfg = SearchConfig {
-        max_groups: 24,
-        mcts_iterations: arg("iters", 200),
-        seed: 6,
-        apply_sfb: true,
-        profile_noise: 0.0,
-    };
-    let prep = prepare(model, &topo, &cfg);
-    let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
-    let ng = prep.gg.num_groups();
-    let t_expert = low.evaluate(&baselines::expert(ng, &topo)).time;
-    let t_baechi = low.evaluate(&baselines::baechi_msct(&low)).time;
-    let t_ff = low
-        .evaluate(&baselines::flexflow_mcmc(
-            &low,
-            &enumerate_actions(&topo),
-            cfg.mcts_iterations,
-            6,
-        ))
-        .time;
-    let res = search_session(&prep, &topo, None, &cfg);
-    let t_tag = res.dp_time / res.speedup;
+    let iters = arg("iters", 200);
+    let request = PlanRequest::new(models::inception_v3(32, 0.5), topo)
+        .budget(iters, 24)
+        .seed(6);
+
+    let sweep = Planner::builder()
+        .backend(BaselineSweepBackend::new())
+        .build()
+        .plan(&request.clone().sfb(false))
+        .plan;
+    let row = |key: &str| sweep.telemetry.metric(key).unwrap_or(f64::NAN);
+    let t_expert = row("Expert");
+
+    let plan = Planner::builder().build().plan(&request).plan;
+    let t_tag = plan.times.final_time;
 
     println!("=== Fig. 6: InceptionV3 on homogeneous 2x V100 (speed vs expert) ===");
     // Reported relative speeds from the papers (expert = 1.0), used for
@@ -83,8 +80,8 @@ fn fig6() {
     for (n, v) in reported {
         println!("{:<10} {:>8.2}", n, v);
     }
-    println!("{:<10} {:>8.2}", "Baechi", t_expert / t_baechi);
-    println!("{:<10} {:>8.2}", "FlexFlow", t_expert / t_ff);
+    println!("{:<10} {:>8.2}", "Baechi", t_expert / row("Baechi"));
+    println!("{:<10} {:>8.2}", "FlexFlow", t_expert / row("FlexFlow"));
     println!("{:<10} {:>8.2}", "TAG", t_expert / t_tag);
     println!("(* = reported numbers, per the paper's methodology)\n");
 }
@@ -93,46 +90,42 @@ fn fig6() {
 fn tab7() {
     let n_topos = arg("topos", 12);
     let iters = arg("iters", 200);
-    let gnn = load_gnn();
+    let gnn = load_trained_gnn();
     println!("=== Table 7: avg MCTS iterations to first beat DP-NCCL ===");
     println!("(over {n_topos} unseen random topologies; cap {iters})");
     println!("{:<12} {:>10} {:>10}", "model", "PureMCTS", "TAG");
+
+    // Disable the root sweep in both arms so the metric compares raw
+    // prior quality (the paper's Table 7 setting).
+    let mut pure_planner =
+        Planner::builder().backend(MctsBackend::new().root_sweep(false)).build();
+    let mut tag_planner = gnn.as_ref().map(|(svc, p)| {
+        Planner::builder()
+            .backend(GnnMctsBackend::new(svc.clone(), p.clone()).root_sweep(false))
+            .build()
+    });
 
     for name in ["InceptionV3", "ResNet101", "VGG19", "Transformer", "BERT-Small"] {
         let mut sum_pure = 0.0;
         let mut sum_tag = 0.0;
         let topos = random_topologies(0xBEEF + name.len() as u64, n_topos);
         for (ti, topo) in topos.iter().enumerate() {
-            let model = models::by_name(name, 0.25).unwrap();
-            let cfg = SearchConfig {
-                max_groups: 16,
-                mcts_iterations: iters,
-                seed: 1000 + ti as u64,
-                apply_sfb: false,
-                profile_noise: 0.0,
-            };
-            let prep = prepare(model, topo, &cfg);
-            let low = Lowering::new(&prep.gg, topo, &prep.cost, &prep.comm);
-            let actions = enumerate_actions(topo);
+            let request =
+                PlanRequest::new(models::by_name(name, 0.25).unwrap(), topo.clone())
+                    .budget(iters, 16)
+                    .seed(1000 + ti as u64)
+                    .sfb(false);
 
-            // Disable the root sweep in both arms so the metric compares
-            // raw prior quality (the paper's Table 7 setting).
-            let mut pure = Mcts::new(&low, actions.clone(), UniformPrior, cfg.seed);
-            pure.root_sweep = false;
-            let rp = pure.search(iters);
-            sum_pure += rp.first_beats_dp.unwrap_or(iters) as f64;
+            let pure = pure_planner.plan(&request).plan;
+            let first_pure = pure.telemetry.first_beats_dp.unwrap_or(iters);
+            sum_pure += first_pure as f64;
 
-            match &gnn {
-                Some((svc, p)) => {
-                    let builder =
-                        tag::gnn::FeatureBuilder::new(&prep.gg, topo, &actions);
-                    let prior = tag::gnn::GnnPrior::new(svc, builder, p.clone());
-                    let mut guided = Mcts::new(&low, actions.clone(), prior, cfg.seed);
-                    guided.root_sweep = false;
-                    let rg = guided.search(iters);
-                    sum_tag += rg.first_beats_dp.unwrap_or(iters) as f64;
+            match &mut tag_planner {
+                Some(planner) => {
+                    let guided = planner.plan(&request).plan;
+                    sum_tag += guided.telemetry.first_beats_dp.unwrap_or(iters) as f64;
                 }
-                None => sum_tag += rp.first_beats_dp.unwrap_or(iters) as f64,
+                None => sum_tag += first_pure as f64,
             }
         }
         println!(
@@ -156,7 +149,10 @@ fn tab8() {
     };
     let games = arg("games", 8);
     println!("=== Table 8: avg speed-up over DP-NCCL (hold-out GNN training) ===");
-    println!("{:<12} {:>10} {:>10} {:>10} {:>10}", "model", "tb TAG", "tb TAG-", "cl TAG", "cl TAG-");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10}",
+        "model", "tb TAG", "tb TAG-", "cl TAG", "cl TAG-"
+    );
 
     for name in ["InceptionV3", "ResNet101", "VGG19", "Transformer", "BERT-Small"] {
         // TAG: trained on all models; TAG-: trained without `name`.
@@ -176,17 +172,16 @@ fn tab8() {
         let mut row = Vec::new();
         for topo in [testbed(), cloud()] {
             for p in [&full.params, &holdout.params] {
-                let model = models::by_name(name, 0.25).unwrap();
-                let cfg = SearchConfig {
-                    max_groups: 16,
-                    mcts_iterations: 120,
-                    seed: 9,
-                    apply_sfb: false,
-                    profile_noise: 0.0,
-                };
-                let prep = prepare(model, &topo, &cfg);
-                let res = search_session(&prep, &topo, Some((&svc, p.clone())), &cfg);
-                row.push((res.speedup - 1.0) * 100.0);
+                let mut planner = Planner::builder()
+                    .backend(GnnMctsBackend::new(svc.clone(), p.clone()))
+                    .build();
+                let request =
+                    PlanRequest::new(models::by_name(name, 0.25).unwrap(), topo.clone())
+                        .budget(120, 16)
+                        .seed(9)
+                        .sfb(false);
+                let plan = planner.plan(&request).plan;
+                row.push((plan.times.speedup - 1.0) * 100.0);
             }
         }
         println!(
@@ -196,18 +191,16 @@ fn tab8() {
     }
 }
 
-fn load_gnn() -> Option<(GnnService, Vec<f32>)> {
+fn load_trained_gnn() -> Option<(Rc<GnnService>, Vec<f32>)> {
     let svc = GnnService::load("artifacts").ok()?;
-    let path = if std::path::Path::new("artifacts/params_trained.bin").exists() {
-        "artifacts/params_trained.bin"
-    } else {
+    if !std::path::Path::new("artifacts/params_trained.bin").exists() {
         return None;
-    };
-    let p = params::load_params(path).ok()?;
-    Some((svc, p))
+    }
+    let p = params::load_params("artifacts/params_trained.bin").ok()?;
+    Some((Rc::new(svc), p))
 }
 
-fn load_gnn_service() -> Option<(GnnService, Vec<f32>)> {
+fn load_gnn_service() -> Option<(Rc<GnnService>, Vec<f32>)> {
     let svc = GnnService::load("artifacts").ok()?;
     let path = if std::path::Path::new("artifacts/params_trained.bin").exists() {
         "artifacts/params_trained.bin"
@@ -215,5 +208,5 @@ fn load_gnn_service() -> Option<(GnnService, Vec<f32>)> {
         "artifacts/params_init.bin"
     };
     let p = params::load_params(path).ok()?;
-    Some((svc, p))
+    Some((Rc::new(svc), p))
 }

@@ -5,16 +5,17 @@
 //!
 //!   cargo run --release --example heterogeneous_cluster [-- scale=1.0 iters=300]
 //!
-//! Absolute times are simulator-measured (see DESIGN.md substitutions);
-//! the paper's *shape* — who wins and by roughly what factor — is what
-//! this reproduces.
+//! Both arms go through `tag::api::Planner`: the competitor columns are
+//! one `BaselineSweepBackend` plan per model (every row lands in the
+//! plan's telemetry), TAG is an MCTS / GNN-MCTS plan.  Absolute times
+//! are simulator-measured (see DESIGN.md substitutions); the paper's
+//! *shape* — who wins and by roughly what factor — is what this
+//! reproduces.
 
+use tag::api::{BaselineSweepBackend, GnnMctsBackend, PlanRequest, Planner};
 use tag::cluster::presets::testbed;
-use tag::coordinator::{prepare, search_session, SearchConfig};
-use tag::dist::Lowering;
-use tag::gnn::{params, GnnService};
 use tag::models;
-use tag::strategy::{baselines, enumerate_actions, ReplOption};
+use tag::strategy::ReplOption;
 
 fn arg(name: &str, default: f64) -> f64 {
     std::env::args()
@@ -26,15 +27,22 @@ fn main() {
     let scale = arg("scale", 0.5);
     let iters = arg("iters", 250.0) as usize;
     let topo = testbed();
-    let gnn = if std::path::Path::new("artifacts/params_trained.bin").exists() {
-        let svc = GnnService::load("artifacts").expect("artifacts");
-        let p = params::load_params("artifacts/params_trained.bin").unwrap();
-        println!("(using trained GNN priors)");
-        Some((svc, p))
-    } else {
-        println!("(no trained params found; TAG runs pure-MCTS priors)");
-        None
+
+    let mut tag_planner = match GnnMctsBackend::from_artifacts(
+        "artifacts",
+        "artifacts/params_trained.bin",
+    ) {
+        Ok(backend) => {
+            println!("(using trained GNN priors)");
+            Planner::builder().backend(backend).build()
+        }
+        Err(_) => {
+            println!("(no trained params found; TAG runs pure-MCTS priors)");
+            Planner::builder().build()
+        }
     };
+    let mut sweep_planner =
+        Planner::builder().backend(BaselineSweepBackend::new()).build();
 
     println!(
         "\n=== Fig. 5: per-iteration time (s) on {} — scale {scale} ===",
@@ -48,55 +56,41 @@ fn main() {
     let mut table4: Vec<(String, Vec<f64>, f64, f64, f64)> = Vec::new();
 
     for name in models::MODEL_NAMES {
-        let model = models::by_name(name, scale).unwrap();
-        let cfg = SearchConfig {
-            max_groups: 32,
-            mcts_iterations: iters,
-            seed: 7,
-            apply_sfb: true,
-            profile_noise: 0.0,
+        let request = |sfb: bool| {
+            PlanRequest::new(models::by_name(name, scale).unwrap(), topo.clone())
+                .budget(iters, 32)
+                .seed(7)
+                .sfb(sfb)
         };
-        let prep = prepare(model, &topo, &cfg);
-        let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
-        let acts = enumerate_actions(&topo);
-        let ng = prep.gg.num_groups();
+        let sweep = sweep_planner.plan(&request(false)).plan;
+        let row = |key: &str| sweep.telemetry.metric(key).unwrap_or(f64::NAN);
 
-        let t_dp = low.evaluate(&baselines::dp_nccl(ng, &topo)).time;
-        let t_dpp = low.evaluate(&baselines::dp_nccl_p(ng, &topo)).time;
-        let t_hv = low.evaluate(&baselines::horovod(ng, &topo)).time;
-        let t_ff = low
-            .evaluate(&baselines::flexflow_mcmc(&low, &acts, iters, 7))
-            .time;
-        let t_hg = low.evaluate(&baselines::heterog_like(&low)).time;
-
-        let res = match &gnn {
-            Some((svc, p)) => search_session(&prep, &topo, Some((svc, p.clone())), &cfg),
-            None => search_session(&prep, &topo, None, &cfg),
-        };
-        let t_tag = res.dp_time / res.speedup;
+        let plan = tag_planner.plan(&request(true)).plan;
+        let t_tag = plan.times.final_time;
+        let t_dp = row("DP-NCCL");
 
         // DP-NCCL on BERT-Large at paper scale OOMs (the paper's Fig. 5
         // footnote); report it but mark it.
-        let oom_dp = low.evaluate(&baselines::dp_nccl(ng, &topo)).oom;
         println!(
             "{:<12} {:>9} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>7.2}x",
             name,
-            if oom_dp { format!("{t_dp:.4}*") } else { format!("{t_dp:.4}") },
-            t_dpp,
-            t_hv,
-            t_ff,
-            t_hg,
+            if plan.telemetry.dp_oom { format!("{t_dp:.4}*") } else { format!("{t_dp:.4}") },
+            row("DP-NCCL-P"),
+            row("Horovod"),
+            row("FlexFlow"),
+            row("HeteroG"),
             t_tag,
             t_dp / t_tag
         );
 
-        // ---- Table 4 aggregation for TAG's strategy.
+        // ---- Table 4 aggregation for TAG's strategy (everything it
+        // needs rides on the plan itself).
         let mut per_type: std::collections::HashMap<&str, (f64, usize)> =
             std::collections::HashMap::new();
         let mut ps_bytes = 0.0;
         let mut ar_bytes = 0.0;
         let mut dup_bytes = 0.0;
-        for (g, slot) in res.strategy.slots.iter().enumerate() {
+        for (g, slot) in plan.strategy.slots.iter().enumerate() {
             let Some(a) = slot else { continue };
             let devs = topo.mask_devices(a.mask);
             for tname in ["V100-32G", "1080Ti", "P100"] {
@@ -108,8 +102,8 @@ fn main() {
                 e.0 += cnt as f64;
                 e.1 += 1;
             }
-            let gb = prep.gg.groups[g].grad_bytes;
-            match a.option {
+            let gb = plan.groups[g].grad_bytes;
+            match ReplOption::from_index(a.option as usize) {
                 ReplOption::AllReduce => ar_bytes += gb,
                 ReplOption::Ps => ps_bytes += gb,
                 ReplOption::Duplicate => dup_bytes += gb,

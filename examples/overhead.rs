@@ -1,5 +1,6 @@
 //! Reproduce **Fig. 8**: the overhead of generating a strategy for an
-//! *unseen* device topology — TAG vs the retraining-based baselines.
+//! *unseen* device topology — TAG vs the retraining-based baselines —
+//! plus the serving-path punchline: a cached replan is ~free.
 //!
 //!   cargo run --release --example overhead [-- topos=6 iters=150]
 //!
@@ -15,12 +16,9 @@
 //!    (one training iteration each, simulated time charged as wall time,
 //!    plus per-evaluation deployment latency).
 
+use tag::api::{GnnMctsBackend, PlanRequest, Planner};
 use tag::cluster::generator::random_topologies;
-use tag::coordinator::{prepare, search_session, SearchConfig};
-use tag::dist::Lowering;
-use tag::gnn::{params, GnnService};
 use tag::models;
-use tag::strategy::baselines;
 use tag::util::Stopwatch;
 
 fn arg(name: &str, default: usize) -> usize {
@@ -32,70 +30,75 @@ fn arg(name: &str, default: usize) -> usize {
 fn main() {
     let n_topos = arg("topos", 6);
     let iters = arg("iters", 150);
-    let gnn = GnnService::load("artifacts").ok().and_then(|svc| {
-        let path = if std::path::Path::new("artifacts/params_trained.bin").exists() {
-            "artifacts/params_trained.bin"
-        } else {
-            "artifacts/params_init.bin"
-        };
-        params::load_params(path).ok().map(|p| (svc, p))
-    });
+    let params_path = if std::path::Path::new("artifacts/params_trained.bin").exists() {
+        "artifacts/params_trained.bin"
+    } else {
+        "artifacts/params_init.bin"
+    };
+    let mut planner = match GnnMctsBackend::from_artifacts("artifacts", params_path) {
+        Ok(backend) => Planner::builder().backend(backend).build(),
+        Err(_) => Planner::builder().build(),
+    };
 
     println!("=== Fig. 8: strategy-generation overhead on unseen topologies ===");
     println!("({n_topos} random topologies, InceptionV3, {iters} MCTS iterations)\n");
 
     let mut tag_s = 0.0;
+    let mut cached_s = 0.0;
     let mut heterog_s = 0.0;
     let mut hdp_s = 0.0;
 
     for (ti, topo) in random_topologies(0xFACE, n_topos).iter().enumerate() {
-        let model = models::inception_v3(16, 0.25);
-        let cfg = SearchConfig {
-            max_groups: 16,
-            mcts_iterations: iters,
-            seed: 2000 + ti as u64,
-            apply_sfb: false,
-            profile_noise: 0.0,
-        };
-        let prep = prepare(model, topo, &cfg);
+        let request = PlanRequest::new(models::inception_v3(16, 0.25), topo.clone())
+            .budget(iters, 16)
+            .seed(2000 + ti as u64)
+            .sfb(false);
 
         // --- TAG: GNN inference + MCTS only.
-        let res = match &gnn {
-            Some((svc, p)) => search_session(&prep, topo, Some((svc, p.clone())), &cfg),
-            None => search_session(&prep, topo, None, &cfg),
-        };
-        tag_s += res.overhead_s;
+        let outcome = planner.plan(&request);
+        tag_s += outcome.overhead_s;
+        let dp_iter_time = outcome.plan.times.dp_time;
+
+        // --- Repeat traffic on the same (model, topology, config):
+        // answered from the plan cache.
+        cached_s += planner.plan(&request).overhead_s;
 
         // --- HeteroG: GNN retraining from scratch on this topology.
         // Measured as the wall time of the equivalent self-play +
-        // training workload (example collection via pure search of the
-        // same budget, repeated `retrain_games` times, plus train steps).
+        // training workload (example collection via search of the same
+        // budget, repeated `retrain_games` times, plus train steps).
         let retrain_games = 8;
         let w = Stopwatch::start();
         for g in 0..retrain_games {
-            let cfg2 = SearchConfig { seed: cfg.seed + 17 * g as u64, ..cfg.clone() };
-            let _ = search_session(&prep, topo, None, &cfg2);
+            let replay = request.clone().seed(2000 + ti as u64 + 1000 * (g as u64 + 1));
+            let _ = planner.plan(&replay);
         }
-        heterog_s += w.elapsed_s() + res.overhead_s;
+        heterog_s += w.elapsed_s() + outcome.overhead_s;
 
         // --- HDP: evaluates candidates on the REAL cluster during its
         // search: each of its ~`iters` RL samples costs one real training
         // iteration (simulated time, charged as wall time) plus ~1s of
         // graph deployment latency (TensorFlow session rebuild).
-        let low = Lowering::new(&prep.gg, topo, &prep.cost, &prep.comm);
-        let ng = prep.gg.num_groups();
-        let iter_time = low.evaluate(&baselines::dp_nccl(ng, topo)).time;
-        hdp_s += iters as f64 * (iter_time * 5.0 + 1.0);
+        hdp_s += iters as f64 * (dp_iter_time * 5.0 + 1.0);
     }
 
     let n = n_topos as f64;
-    println!("{:<12} {:>14}", "system", "avg overhead");
-    println!("{:<12} {:>13.1}s", "TAG", tag_s / n);
-    println!("{:<12} {:>13.1}s", "HDP", hdp_s / n);
-    println!("{:<12} {:>13.1}s", "HeteroG", heterog_s / n);
+    println!("{:<14} {:>14}", "system", "avg overhead");
+    println!("{:<14} {:>13.1}s", "TAG", tag_s / n);
+    println!("{:<14} {:>13.1}s", "HDP", hdp_s / n);
+    println!("{:<14} {:>13.1}s", "HeteroG", heterog_s / n);
+    println!("{:<14} {:>13.4}s", "TAG (cached)", cached_s / n);
     println!(
         "\nTAG vs HDP: {:.1}x faster; TAG vs HeteroG: {:.1}x faster",
         hdp_s / tag_s,
         heterog_s / tag_s
     );
+    if let Some(stats) = planner.cache_stats() {
+        println!(
+            "plan cache: {} entries, hit rate {:.0}% over {} lookups",
+            stats.entries,
+            100.0 * stats.hit_rate(),
+            stats.hits + stats.misses
+        );
+    }
 }

@@ -1,60 +1,72 @@
-//! Quickstart: find an optimized deployment strategy for VGG19 on the
+//! Quickstart: find an optimized deployment plan for VGG19 on the
 //! paper's heterogeneous testbed and compare it against data parallelism.
 //!
 //! Run with:  cargo run --release --example quickstart
 //!
-//! This exercises the whole public API surface end to end: model zoo ->
-//! graph analyzer -> profiler -> METIS-style grouping -> MCTS search over
-//! placement/replication -> discrete-event simulation -> SFB ILP.
+//! This exercises the whole public API surface end to end: a typed
+//! `PlanRequest` into the `Planner` (model zoo -> graph analyzer ->
+//! profiler -> METIS-style grouping -> MCTS search -> discrete-event
+//! simulation -> SFB ILP), then the plan's JSON round-trip and the
+//! plan cache answering repeat traffic.
 
+use tag::api::{DeploymentPlan, PlanRequest, Planner};
 use tag::cluster::presets::testbed;
-use tag::coordinator::{prepare, search_session, SearchConfig};
 use tag::models;
 use tag::util::fmt_secs;
 
 fn main() {
-    // 1. A computation graph from the model zoo (scale 0.5 keeps the
-    //    quickstart fast; use 1.0 for the paper-size model).
-    let model = models::vgg19(48, 0.5);
+    // 1. A request: computation graph + device topology + search budget
+    //    (scale 0.5 keeps the quickstart fast; use 1.0 for paper size).
+    let request = PlanRequest::new(models::vgg19(48, 0.5), testbed())
+        .budget(200, 24)
+        .seed(42);
     println!(
         "model: {} — {} ops, {:.0} MB parameters",
-        model.name,
-        model.len(),
-        model.total_param_bytes() / 1e6
+        request.model.name,
+        request.model.len(),
+        request.model.total_param_bytes() / 1e6
     );
-
-    // 2. The paper's on-premise testbed: 4x V100 + 8x 1080Ti + 4x P100.
-    let topo = testbed();
     println!(
         "topology: {} — {} machines, {} GPUs",
-        topo.name,
-        topo.num_groups(),
-        topo.num_devices()
+        request.topology.name,
+        request.topology.num_groups(),
+        request.topology.num_devices()
     );
 
-    // 3. Search (pure MCTS here; pass a GnnService for GNN-guided).
-    let cfg = SearchConfig {
-        max_groups: 24,
-        mcts_iterations: 200,
-        seed: 42,
-        apply_sfb: true,
-        profile_noise: 0.0,
-    };
-    let prep = prepare(model, &topo, &cfg);
-    let res = search_session(&prep, &topo, None, &cfg);
+    // 2. Plan (pure-MCTS backend by default; plug a GnnMctsBackend into
+    //    the builder for GNN-guided search).
+    let mut planner = Planner::builder().build();
+    let outcome = planner.plan(&request);
+    let plan = &outcome.plan;
 
-    // 4. Results.
-    println!("\nDP-NCCL per-iteration time : {}", fmt_secs(res.dp_time));
-    println!("TAG per-iteration time     : {}", fmt_secs(res.dp_time / res.speedup));
-    println!("speed-up                   : {:.2}x", res.speedup);
-    println!("search wall time           : {}", fmt_secs(res.overhead_s));
-    if let Some(plan) = &res.sfb {
+    // 3. Results.
+    println!("\nDP-NCCL per-iteration time : {}", fmt_secs(plan.times.dp_time));
+    println!("TAG per-iteration time     : {}", fmt_secs(plan.times.final_time));
+    println!("speed-up                   : {:.2}x", plan.times.speedup);
+    println!("search wall time           : {}", fmt_secs(outcome.overhead_s));
+    if let Some(sfb) = &plan.sfb {
         println!(
             "SFB: {}/{} gradients covered, top duplicated ops {:?}",
-            plan.problems_beneficial,
-            plan.problems_solved,
-            plan.top_census(3)
+            sfb.problems_beneficial,
+            sfb.problems_solved,
+            sfb.top_census(3)
         );
     }
-    assert!(res.speedup >= 1.0, "TAG must never lose to its own baseline");
+    assert!(plan.times.speedup >= 1.0, "TAG must never lose to its own baseline");
+
+    // 4. Plans are serializable — persist, serve, rehydrate.
+    let json = plan.encode();
+    let restored = DeploymentPlan::decode(&json).expect("plan JSON round-trip");
+    assert_eq!(&restored, plan);
+    println!("plan JSON                  : {} bytes (lossless round-trip)", json.len());
+
+    // 5. Repeat traffic hits the plan cache instead of re-searching.
+    let again = planner.plan(&request);
+    assert!(again.cache_hit && again.plan == outcome.plan);
+    let stats = planner.cache_stats().unwrap();
+    println!(
+        "replan wall time           : {} (cache hit; hit rate {:.0}%)",
+        fmt_secs(again.overhead_s),
+        100.0 * stats.hit_rate()
+    );
 }

@@ -1,20 +1,62 @@
+//! Memory-feasibility probe: how do the canonical strategies behave as
+//! BERT-Large's batch grows on the 11 GB `sfb_pair` machines?
+//!
+//! The baseline roster runs through `tag::api::Planner` (each probe is a
+//! served `DeploymentPlan` whose telemetry carries per-baseline times
+//! and OOM markers); the model-parallel and single-GPU arms — which no
+//! baseline generator emits — plus the per-device peak-memory fractions
+//! are evaluated on the same engine underneath.
+
+use tag::api::{BaselineSweepBackend, PlanRequest, Planner, BASELINE_NAMES};
 use tag::cluster::presets::sfb_pair;
-use tag::coordinator::{prepare, SearchConfig};
+use tag::coordinator::prepare;
 use tag::dist::Lowering;
 use tag::models;
 use tag::strategy::{Action, ReplOption, Strategy};
+
 fn main() {
     let topo = sfb_pair();
+    let mut planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
     for batch in [4, 8, 12, 16, 24] {
-        let model = models::bert(batch, true, 1.0);
-        let c = SearchConfig { max_groups: 12, ..Default::default() };
-        let prep = prepare(model, &topo, &c);
+        let request = PlanRequest::new(models::bert(batch, true, 1.0), topo.clone())
+            .budget(60, 12)
+            .sfb(false);
+        let plan = planner.plan(&request).plan;
+        let oom_rows: Vec<&str> = BASELINE_NAMES
+            .iter()
+            .copied()
+            .filter(|n| plan.telemetry.metric(&format!("{n}.oom")).is_some())
+            .collect();
+        let all_oom = oom_rows.len() == BASELINE_NAMES.len();
+
+        // The arms the roster can't express, on the engine the planner
+        // drives: full model parallelism and a single GPU.
+        let cfg = request.search_config();
+        let prep = prepare(request.model.clone(), &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
         let ng = prep.gg.num_groups();
         let dp = low.evaluate(&Strategy::dp_allreduce(ng, &topo));
-        let mp = low.evaluate(&Strategy::uniform(ng, Action { mask: 0b11, option: ReplOption::ModelParallel }));
-        let solo = low.evaluate(&Strategy::uniform(ng, Action { mask: 0b1, option: ReplOption::AllReduce }));
-        println!("batch {batch}: dp oom={} peak={:?} | mp oom={} | solo oom={}",
-            dp.oom, dp.feedback.devgroup_peak_mem_frac.iter().map(|x| (x*100.0).round()).collect::<Vec<_>>(), mp.oom, solo.oom);
+        let mp = low.evaluate(&Strategy::uniform(
+            ng,
+            Action { mask: 0b11, option: ReplOption::ModelParallel },
+        ));
+        let solo = low.evaluate(&Strategy::uniform(
+            ng,
+            Action { mask: 0b1, option: ReplOption::AllReduce },
+        ));
+
+        println!(
+            "batch {batch}: dp oom={} peak={:?}% | mp oom={} | solo oom={} | sweep best {} ({:.4}s) | oom rows: {oom_rows:?}",
+            plan.telemetry.dp_oom,
+            dp.feedback
+                .devgroup_peak_mem_frac
+                .iter()
+                .map(|x| (x * 100.0).round())
+                .collect::<Vec<_>>(),
+            mp.oom,
+            solo.oom,
+            if all_oom { "NONE FEASIBLE (DP fallback)" } else { "feasible" },
+            plan.times.final_time,
+        );
     }
 }

@@ -3,9 +3,14 @@
 //! top duplicated op types across all six models).
 //!
 //!   cargo run --release --example sfb_study [-- scale=0.5 iters=150]
+//!
+//! The TAG arm goes through `tag::api::Planner`; the DP arm applies the
+//! SFB optimizer to the fixed DP-NCCL strategy via the engine API
+//! (there is nothing to search).
 
+use tag::api::{PlanRequest, Planner};
 use tag::cluster::presets::sfb_pair;
-use tag::coordinator::{prepare, search_session, SearchConfig};
+use tag::coordinator::prepare;
 use tag::dist::Lowering;
 use tag::models;
 use tag::sfb;
@@ -32,34 +37,29 @@ fn main() {
         "model", "DP", "DP+SFB", "speedup", "TAG", "TAG+SFB", "speedup"
     );
 
-    let mut census: std::collections::HashMap<&'static str, usize> =
+    let mut census: std::collections::HashMap<String, usize> =
         std::collections::HashMap::new();
+    let mut planner = Planner::builder().build();
 
     for name in models::MODEL_NAMES {
         // Paper: batch size 4 for all models in this experiment.
-        let mut model = models::by_name(name, scale).unwrap();
-        model = rebatch(model, 4);
-        let cfg = SearchConfig {
-            max_groups: 24,
-            mcts_iterations: iters,
-            seed: 11,
-            apply_sfb: true,
-            profile_noise: 0.0,
-        };
-        let prep = prepare(model, &topo, &cfg);
-        let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
-        let ng = prep.gg.num_groups();
+        let model = with_batch(name, 4, scale);
+        let request = PlanRequest::new(model, topo.clone()).budget(iters, 24).seed(11);
 
-        // DP-NCCL without / with SFB.
-        let dp = baselines::dp_nccl(ng, &topo);
+        // DP-NCCL without / with SFB: a fixed strategy, evaluated on the
+        // same engine the planner drives.
+        let cfg = request.search_config();
+        let prep = prepare(request.model.clone(), &topo, &cfg);
+        let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+        let dp = baselines::dp_nccl(prep.gg.num_groups(), &topo);
         let t_dp = low.evaluate(&dp).time;
         let plan_dp = sfb::optimize(&prep.graph, &prep.gg, &topo, &prep.cost, &dp);
         let t_dp_sfb = low.evaluate_with_sfb(&dp, Some(&plan_dp)).time.min(t_dp);
 
-        // TAG without / with SFB.
-        let res = search_session(&prep, &topo, None, &cfg);
-        let t_tag = res.time;
-        let t_tag_sfb = res.time_with_sfb.unwrap_or(t_tag).min(t_tag);
+        // TAG without / with SFB, via the planner.
+        let plan = planner.plan(&request).plan;
+        let t_tag = plan.times.time;
+        let t_tag_sfb = plan.times.time_with_sfb.unwrap_or(t_tag).min(t_tag);
 
         println!(
             "{:<12} | {:>10.4} {:>10.4} {:>7.1}% | {:>10.4} {:>10.4} {:>7.1}%",
@@ -73,40 +73,33 @@ fn main() {
         );
 
         for (ty, c) in &plan_dp.census {
-            *census.entry(ty).or_insert(0) += c;
+            *census.entry(ty.to_string()).or_insert(0) += c;
         }
-        if let Some(p) = &res.sfb {
-            for (ty, c) in &p.census {
-                *census.entry(ty).or_insert(0) += c;
+        if let Some(s) = &plan.sfb {
+            for (ty, c) in &s.census {
+                *census.entry(ty.clone()).or_insert(0) += c;
             }
         }
     }
 
     println!("\n=== Table 6: top duplicated op types (all models) ===");
-    let mut rows: Vec<(&str, usize)> = census.into_iter().collect();
-    rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    let mut rows: Vec<(String, usize)> = census.into_iter().collect();
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
     println!("{:<24} {:>6}", "operation", "count");
     for (ty, c) in rows.iter().take(5) {
         println!("{:<24} {:>6}", ty, c);
     }
 }
 
-/// Rebuild a zoo model with a different batch size (the generators take
-/// batch as a parameter; map through the registry).
-fn rebatch(model: tag::graph::CompGraph, batch: usize) -> tag::graph::CompGraph {
-    let scale_guess = 0.5; // matches the `scale` arg default path below
-    let _ = scale_guess;
-    match model.name.as_str() {
-        "InceptionV3" => models::inception_v3(batch, current_scale()),
-        "ResNet101" => models::resnet101(batch, current_scale()),
-        "VGG19" => models::vgg19(batch, current_scale()),
-        "Transformer" => models::transformer(batch, current_scale()),
-        "BERT-Small" => models::bert(batch, false, current_scale()),
-        "BERT-Large" => models::bert(batch, true, current_scale()),
-        _ => model,
+/// Build a zoo model by name with an explicit batch size.
+fn with_batch(name: &str, batch: usize, scale: f64) -> tag::graph::CompGraph {
+    match name {
+        "InceptionV3" => models::inception_v3(batch, scale),
+        "ResNet101" => models::resnet101(batch, scale),
+        "VGG19" => models::vgg19(batch, scale),
+        "Transformer" => models::transformer(batch, scale),
+        "BERT-Small" => models::bert(batch, false, scale),
+        "BERT-Large" => models::bert(batch, true, scale),
+        other => unreachable!("unknown model {other}"),
     }
-}
-
-fn current_scale() -> f64 {
-    arg("scale", 0.5)
 }

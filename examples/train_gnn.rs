@@ -14,10 +14,17 @@
 //! The loss curve is printed for two configurations: with the simulator
 //! runtime-feedback features (part 3 of Table 1) and without them — the
 //! paper's Fig. 7 ablation.  Trained parameters are saved to
-//! `artifacts/params_trained.bin` for the other examples to pick up.
+//! `artifacts/params_trained.bin`, and the freshly trained checkpoint is
+//! smoke-tested through `tag::api::Planner` (the surface the other
+//! examples serve plans from).
 
+use std::rc::Rc;
+
+use tag::api::{GnnMctsBackend, PlanRequest, Planner};
+use tag::cluster::presets::testbed;
 use tag::coordinator::Trainer;
 use tag::gnn::{params, GnnService};
+use tag::models;
 
 fn arg(name: &str, default: usize) -> usize {
     std::env::args()
@@ -34,12 +41,15 @@ fn smooth(xs: &[f32], w: usize) -> Vec<f32> {
 fn main() {
     let games = arg("games", 24);
     let steps = arg("steps", 4);
-    let svc = GnnService::load("artifacts")
-        .expect("artifacts missing — run `make artifacts` first");
+    let svc = Rc::new(
+        GnnService::load("artifacts")
+            .expect("artifacts missing — run `make artifacts` first"),
+    );
     println!("PJRT platform: {}", svc.platform());
     let init = params::load_params("artifacts/params_init.bin").unwrap();
     println!("GNN parameters: {}", init.len());
 
+    let mut trained: Vec<f32> = Vec::new();
     let mut curves: Vec<(&str, Vec<f32>)> = Vec::new();
     for (label, feedback) in [("with-feedback", true), ("no-feedback", false)] {
         println!("\n=== training {label} ({games} games x {steps} steps) ===");
@@ -60,6 +70,7 @@ fn main() {
         if feedback {
             params::save_params("artifacts/params_trained.bin", &tr.params).unwrap();
             println!("saved artifacts/params_trained.bin");
+            trained = tr.params.clone();
         }
         curves.push((label, tr.loss_history.clone()));
     }
@@ -81,5 +92,20 @@ fn main() {
     println!(
         "\nfinal loss with feedback: {with:.4}   without: {without:.4}   ({})",
         if with < without { "feedback features help ✓ (matches Fig. 7)" } else { "no separation at this budget" }
+    );
+
+    // Serve one plan from the freshly trained checkpoint: the trained
+    // weights are part of the backend's cache identity, so this plan can
+    // never be confused with one from another checkpoint.
+    let mut planner = Planner::builder()
+        .backend(GnnMctsBackend::new(svc.clone(), trained))
+        .build();
+    let request = PlanRequest::new(models::vgg19(8, 0.25), testbed())
+        .budget(80, 16)
+        .seed(7);
+    let outcome = planner.plan(&request);
+    println!(
+        "\nplanner smoke test (trained GNN backend): {:.2}x over DP-NCCL",
+        outcome.plan.times.speedup
     );
 }

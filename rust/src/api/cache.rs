@@ -1,0 +1,171 @@
+//! Session-level plan cache: the `dist::memo` transposition-table idiom
+//! lifted from strategy evaluations to whole deployments.
+//!
+//! Keys are exact `(model, topology, config)` fingerprint triples —
+//! repeat traffic for the same deployment problem (the ROADMAP's serving
+//! scenario, and the reuse emphasis of Placeto/TopoOpt) is answered with
+//! a clone of the stored [`DeploymentPlan`] instead of a search.  Like
+//! the memo table, the map is cleared wholesale at capacity: lookups are
+//! exact, entries are cheap to rebuild, and eviction order is irrelevant
+//! for a bounded serving window.
+
+use std::collections::HashMap;
+
+use super::plan::DeploymentPlan;
+
+/// Default entry cap (a full plan is a few KB; this bounds the cache to
+/// low MBs).
+pub const DEFAULT_CAPACITY: usize = 1 << 10;
+
+/// Cache key: the three structural fingerprints of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub model: u64,
+    pub topology: u64,
+    pub config: u64,
+}
+
+/// Hit/miss counters exposed for serving dashboards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hits over lookups; 0.0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Fingerprint-keyed deployment-plan cache.
+pub struct PlanCache {
+    map: HashMap<PlanKey, DeploymentPlan>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> Self {
+        Self { map: HashMap::new(), capacity: capacity.max(1), hits: 0, misses: 0 }
+    }
+
+    /// Look up a plan, counting the hit or miss.
+    pub fn get(&mut self, key: &PlanKey) -> Option<DeploymentPlan> {
+        match self.map.get(key) {
+            Some(plan) => {
+                self.hits += 1;
+                Some(plan.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a plan; at capacity the table is cleared wholesale (the
+    /// `dist::memo` policy — exact keys, order-free eviction).
+    pub fn insert(&mut self, key: PlanKey, plan: DeploymentPlan) {
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            self.map.clear();
+        }
+        self.map.insert(key, plan);
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits, misses: self.misses, entries: self.map.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::plan::tests::sample_plan;
+
+    fn key(n: u64) -> PlanKey {
+        PlanKey { model: n, topology: n ^ 1, config: n ^ 2 }
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = PlanCache::new(8);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), sample_plan());
+        let hit = c.get(&key(1)).unwrap();
+        assert_eq!(hit, sample_plan());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_fingerprint_components_are_distinct_keys() {
+        let mut c = PlanCache::new(8);
+        let base = key(10);
+        c.insert(base, sample_plan());
+        assert!(c.get(&PlanKey { model: 99, ..base }).is_none());
+        assert!(c.get(&PlanKey { topology: 99, ..base }).is_none());
+        assert!(c.get(&PlanKey { config: 99, ..base }).is_none());
+        assert!(c.get(&base).is_some());
+    }
+
+    #[test]
+    fn capacity_clears_wholesale() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(1), sample_plan());
+        c.insert(key(2), sample_plan());
+        assert_eq!(c.len(), 2);
+        c.insert(key(3), sample_plan());
+        assert_eq!(c.len(), 1, "full table cleared before the new entry");
+        assert!(c.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn reinserting_existing_key_does_not_clear() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(1), sample_plan());
+        c.insert(key(2), sample_plan());
+        c.insert(key(2), sample_plan());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn clear_resets_stats() {
+        let mut c = PlanCache::new(4);
+        c.insert(key(1), sample_plan());
+        let _ = c.get(&key(1));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats(), CacheStats::default());
+        assert_eq!(c.stats().hit_rate(), 0.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Structural fingerprints for plan-cache keys.
+//!
+//! A [`PlanCache`](super::PlanCache) entry must be reusable exactly when
+//! the *deployment problem* is identical, so keys hash structure, not
+//! identity: a model fingerprint covers every op's costs and wiring, a
+//! topology fingerprint covers device groups and the bandwidth matrix
+//! (but **not** the topology's display name — a renamed identical
+//! cluster serves the same plans), and a config fingerprint covers the
+//! search knobs plus the backend's own token (so GNN-guided plans with
+//! different parameters never collide).
+//!
+//! The hash is FNV-1a/64 — the same exact-key philosophy as
+//! `dist::memo`: no probabilistic tricks beyond the hash width, `f64`s
+//! hashed by bit pattern, strings length-prefixed so concatenations
+//! can't alias.
+
+use crate::cluster::Topology;
+use crate::graph::ir::{CompGraph, OpKind, Splittability};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a/64 hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn write_u64(&mut self, x: u64) -> &mut Self {
+        self.write(&x.to_le_bytes())
+    }
+
+    pub fn write_usize(&mut self, x: usize) -> &mut Self {
+        self.write_u64(x as u64)
+    }
+
+    /// Hash the bit pattern (distinguishes -0.0/0.0 and preserves NaN
+    /// payloads; fingerprint inputs are deterministic values, not math).
+    pub fn write_f64(&mut self, x: f64) -> &mut Self {
+        self.write_u64(x.to_bits())
+    }
+
+    pub fn write_bool(&mut self, b: bool) -> &mut Self {
+        self.write(&[b as u8])
+    }
+
+    /// Length-prefixed so `"ab" + "c"` never aliases `"a" + "bc"`.
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        self.write_usize(s.len());
+        self.write(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Fingerprint of a computation graph: name, batch size and the full op
+/// inventory (type, kind, costs, splittability, wiring).
+pub fn model(graph: &CompGraph) -> u64 {
+    let mut h = Fnv::new();
+    h.write_str(&graph.name);
+    h.write_usize(graph.batch_size);
+    h.write_usize(graph.len());
+    for op in &graph.ops {
+        h.write_str(op.op_type);
+        match op.kind {
+            OpKind::Placeholder => h.write(&[0]),
+            OpKind::Variable => h.write(&[1]),
+            OpKind::Compute => h.write(&[2]),
+            OpKind::Grad { wrt } => h.write(&[3]).write_usize(wrt),
+            OpKind::Apply { var } => h.write(&[4]).write_usize(var),
+            OpKind::Identity => h.write(&[5]),
+            OpKind::NoOp => h.write(&[6]),
+        };
+        h.write_f64(op.flops);
+        h.write_f64(op.output_bytes);
+        h.write_f64(op.param_bytes);
+        h.write(&[match op.splittability {
+            Splittability::Concat => 0,
+            Splittability::Sum => 1,
+            Splittability::NoSplit => 2,
+        }]);
+        h.write_usize(op.inputs.len());
+        for &i in &op.inputs {
+            h.write_usize(i);
+        }
+    }
+    h.finish()
+}
+
+/// Fingerprint of a device topology: groups (GPU spec, count, intra
+/// bandwidth) and the inter-group bandwidth matrix.  The display name is
+/// deliberately excluded.
+pub fn topology(topo: &Topology) -> u64 {
+    let mut h = Fnv::new();
+    h.write_usize(topo.num_groups());
+    for g in &topo.groups {
+        h.write_str(g.gpu.name);
+        h.write_f64(g.gpu.peak_tflops);
+        h.write_f64(g.gpu.efficiency);
+        h.write_f64(g.gpu.mem_gb);
+        h.write_usize(g.count);
+        h.write_f64(g.intra_bw_gbps);
+    }
+    for row in &topo.inter_bw_gbps {
+        for &bw in row {
+            h.write_f64(bw);
+        }
+    }
+    h.finish()
+}
+
+/// Render a fingerprint as the fixed-width hex string used in plan JSON.
+pub fn to_hex(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+/// Parse a fingerprint hex string back (inverse of [`to_hex`]).
+pub fn from_hex(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::{sfb_pair, testbed};
+    use crate::cluster::{DeviceGroup, GTX1080TI};
+    use crate::models;
+
+    #[test]
+    fn model_fingerprint_is_stable_and_sensitive() {
+        let a = model(&models::vgg19(8, 0.25));
+        let b = model(&models::vgg19(8, 0.25));
+        assert_eq!(a, b, "same generator inputs must fingerprint equal");
+        assert_ne!(a, model(&models::vgg19(16, 0.25)), "batch changes fp");
+        assert_ne!(a, model(&models::vgg19(8, 0.5)), "scale changes fp");
+        assert_ne!(a, model(&models::resnet101(8, 0.25)), "model changes fp");
+    }
+
+    #[test]
+    fn topology_fingerprint_ignores_name_but_not_structure() {
+        let a = sfb_pair();
+        let mut renamed = sfb_pair();
+        renamed.name = "other-name".into();
+        assert_eq!(topology(&a), topology(&renamed));
+        assert_ne!(topology(&a), topology(&testbed()));
+
+        let mut slower = sfb_pair();
+        slower.inter_bw_gbps[0][1] = 5.0;
+        slower.inter_bw_gbps[1][0] = 5.0;
+        assert_ne!(topology(&a), topology(&slower), "bandwidth changes fp");
+
+        let mut bigger = sfb_pair();
+        bigger.groups.push(DeviceGroup { gpu: GTX1080TI, count: 1, intra_bw_gbps: 96.0 });
+        bigger.inter_bw_gbps = vec![
+            vec![0.0, 10.0, 10.0],
+            vec![10.0, 0.0, 10.0],
+            vec![10.0, 10.0, 0.0],
+        ];
+        assert_ne!(topology(&a), topology(&bigger), "group count changes fp");
+    }
+
+    #[test]
+    fn hex_round_trip() {
+        for fp in [0u64, 1, u64::MAX, 0xdead_beef_cafe_f00d] {
+            assert_eq!(from_hex(&to_hex(fp)), Some(fp));
+        }
+        assert_eq!(to_hex(0xff).len(), 16);
+        assert!(from_hex("zz").is_none());
+    }
+
+    #[test]
+    fn length_prefix_prevents_concat_aliasing() {
+        let mut a = Fnv::new();
+        a.write_str("ab").write_str("c");
+        let mut b = Fnv::new();
+        b.write_str("a").write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

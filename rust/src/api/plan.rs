@@ -1,0 +1,550 @@
+//! The deployment plan: a self-contained, serializable description of
+//! one optimized deployment — strategy, per-iteration times, SFB
+//! summary and search telemetry.
+//!
+//! Unlike [`coordinator::SessionResult`](crate::coordinator::SessionResult),
+//! a [`DeploymentPlan`] owns every byte it references (no borrowed group
+//! graphs, no `&'static str` censuses) and is **deterministic**: it
+//! carries no wall-clock measurements, so two plans produced from equal
+//! [`PlanRequest`](super::PlanRequest)s are bit-identical — the property
+//! that makes fingerprint-keyed caching sound.  Wall time lives in
+//! [`PlanOutcome`](super::PlanOutcome) next to the plan, not inside it.
+//!
+//! [`DeploymentPlan::encode`] / [`DeploymentPlan::decode`] give plans a
+//! dependency-free JSON form for persistence and serving.
+
+use crate::strategy::{Action, ReplOption, SplitMode, Strategy};
+use crate::util::error::{Error, Result};
+
+use super::fingerprint;
+use super::json::Json;
+
+/// Plan-format version stamped into the JSON encoding.
+pub const PLAN_VERSION: u64 = 1;
+
+/// One decided (placement, replication) action, in plain-data form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanAction {
+    /// Bitmask over device groups.
+    pub mask: u16,
+    /// [`ReplOption`] index (0..4).
+    pub option: u8,
+}
+
+impl PlanAction {
+    pub fn from_action(a: Action) -> Self {
+        Self { mask: a.mask, option: a.option.index() as u8 }
+    }
+
+    pub fn to_action(self) -> Action {
+        Action { mask: self.mask, option: ReplOption::from_index(self.option as usize) }
+    }
+}
+
+/// The strategy a plan deploys, op-group by op-group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanStrategy {
+    pub slots: Vec<Option<PlanAction>>,
+    /// Proportional (device-speed-aware) batch split vs. even.
+    pub split_proportional: bool,
+    /// In-graph-replication barrier before gradient sync.
+    pub sync_barrier: bool,
+}
+
+impl PlanStrategy {
+    pub fn from_strategy(s: &Strategy) -> Self {
+        Self {
+            slots: s.slots.iter().map(|o| o.map(PlanAction::from_action)).collect(),
+            split_proportional: s.split == SplitMode::Proportional,
+            sync_barrier: s.sync_barrier,
+        }
+    }
+
+    /// Rehydrate the engine-level [`Strategy`] (e.g. to re-evaluate a
+    /// served plan or feed `dist::rewrite`).
+    pub fn to_strategy(&self) -> Strategy {
+        Strategy {
+            slots: self.slots.iter().map(|o| o.map(PlanAction::to_action)).collect(),
+            split: if self.split_proportional {
+                SplitMode::Proportional
+            } else {
+                SplitMode::Even
+            },
+            sync_barrier: self.sync_barrier,
+        }
+    }
+}
+
+/// Per-op-group context a served plan needs to describe itself
+/// (placement weights for dashboards, gradient mix for Table-4-style
+/// reports) without the producing `GroupGraph` in hand.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanGroup {
+    /// Single-reference-GPU computation time of the group, seconds.
+    pub comp_time: f64,
+    /// Gradient bytes the group synchronizes.
+    pub grad_bytes: f64,
+}
+
+/// Simulated per-iteration times of the plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanTimes {
+    /// Found strategy without SFB.
+    pub time: f64,
+    /// Found strategy with the SFB plan folded in (if SFB ran).
+    pub time_with_sfb: Option<f64>,
+    /// The DP-NCCL reference on the same topology.
+    pub dp_time: f64,
+    /// `min(time, time_with_sfb)` — what the deployment would run at.
+    pub final_time: f64,
+    /// `dp_time / final_time`.
+    pub speedup: f64,
+}
+
+/// Aggregated SFB result (§4.2.3) in owned form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SfbSummary {
+    pub problems_solved: usize,
+    pub problems_beneficial: usize,
+    /// Gradients covered across all groups.
+    pub gradients_covered: usize,
+    /// Predicted saving, seconds.
+    pub predicted_saving_s: f64,
+    /// Duplication census (Table 6), sorted by op type name.
+    pub census: Vec<(String, usize)>,
+}
+
+impl SfbSummary {
+    pub fn from_plan(plan: &crate::sfb::SfbPlan) -> Self {
+        let mut census: Vec<(String, usize)> =
+            plan.census.iter().map(|(ty, c)| (ty.to_string(), *c)).collect();
+        census.sort();
+        Self {
+            problems_solved: plan.problems_solved,
+            problems_beneficial: plan.problems_beneficial,
+            gradients_covered: plan.per_group.iter().map(|g| g.gradients_covered).sum(),
+            predicted_saving_s: plan.predicted_saving_s,
+            census,
+        }
+    }
+
+    /// The `n` most-duplicated op types, by count descending.
+    pub fn top_census(&self, n: usize) -> Vec<(String, usize)> {
+        let mut rows = self.census.clone();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        rows.truncate(n);
+        rows
+    }
+}
+
+/// Deterministic search telemetry (counts and simulated quantities only
+/// — never wall time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Telemetry {
+    /// Search iterations actually spent.
+    pub iterations: usize,
+    /// 1-based iteration at which the search first beat DP-NCCL.
+    pub first_beats_dp: Option<usize>,
+    /// Whether plain DP-NCCL OOMs on this (model, topology).
+    pub dp_oom: bool,
+    pub num_groups: usize,
+    pub num_actions: usize,
+    pub seed: u64,
+    /// Backend-specific named metrics (baseline sweep rows, memo hit
+    /// counts, GNN evaluation counts, ...).
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl Telemetry {
+    /// Look up a named backend metric.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+/// A complete deployment plan — the value the [`Planner`](super::Planner)
+/// returns, caches and serves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeploymentPlan {
+    pub model_name: String,
+    pub topology_name: String,
+    pub model_fingerprint: u64,
+    pub topology_fingerprint: u64,
+    pub config_fingerprint: u64,
+    /// Name of the search backend that produced the plan.
+    pub backend: String,
+    pub strategy: PlanStrategy,
+    pub groups: Vec<PlanGroup>,
+    pub times: PlanTimes,
+    pub sfb: Option<SfbSummary>,
+    pub telemetry: Telemetry,
+}
+
+impl DeploymentPlan {
+    /// Serialize to compact JSON.  All numeric fields are finite; the
+    /// fingerprints are stored as hex strings so no value is squeezed
+    /// through the 53-bit integer window of JSON numbers.
+    pub fn encode(&self) -> String {
+        let slots: Vec<Json> = self
+            .strategy
+            .slots
+            .iter()
+            .map(|slot| match slot {
+                None => Json::Null,
+                Some(a) => {
+                    Json::Arr(vec![Json::Num(a.mask as f64), Json::Num(a.option as f64)])
+                }
+            })
+            .collect();
+        let groups: Vec<Json> = self
+            .groups
+            .iter()
+            .map(|g| {
+                Json::Obj(vec![
+                    ("comp_time".into(), Json::Num(g.comp_time)),
+                    ("grad_bytes".into(), Json::Num(g.grad_bytes)),
+                ])
+            })
+            .collect();
+        let sfb = match &self.sfb {
+            None => Json::Null,
+            Some(s) => Json::Obj(vec![
+                ("problems_solved".into(), Json::Num(s.problems_solved as f64)),
+                ("problems_beneficial".into(), Json::Num(s.problems_beneficial as f64)),
+                ("gradients_covered".into(), Json::Num(s.gradients_covered as f64)),
+                ("predicted_saving_s".into(), Json::Num(s.predicted_saving_s)),
+                (
+                    "census".into(),
+                    Json::Arr(
+                        s.census
+                            .iter()
+                            .map(|(ty, c)| {
+                                Json::Arr(vec![
+                                    Json::Str(ty.clone()),
+                                    Json::Num(*c as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        let telemetry = Json::Obj(vec![
+            ("iterations".into(), Json::Num(self.telemetry.iterations as f64)),
+            (
+                "first_beats_dp".into(),
+                match self.telemetry.first_beats_dp {
+                    None => Json::Null,
+                    Some(i) => Json::Num(i as f64),
+                },
+            ),
+            ("dp_oom".into(), Json::Bool(self.telemetry.dp_oom)),
+            ("num_groups".into(), Json::Num(self.telemetry.num_groups as f64)),
+            ("num_actions".into(), Json::Num(self.telemetry.num_actions as f64)),
+            ("seed".into(), Json::Str(self.telemetry.seed.to_string())),
+            (
+                "metrics".into(),
+                Json::Arr(
+                    self.telemetry
+                        .metrics
+                        .iter()
+                        .map(|(n, v)| Json::Arr(vec![Json::Str(n.clone()), Json::Num(*v)]))
+                        .collect(),
+                ),
+            ),
+        ]);
+        Json::Obj(vec![
+            ("version".into(), Json::Num(PLAN_VERSION as f64)),
+            ("model_name".into(), Json::Str(self.model_name.clone())),
+            ("topology_name".into(), Json::Str(self.topology_name.clone())),
+            (
+                "model_fingerprint".into(),
+                Json::Str(fingerprint::to_hex(self.model_fingerprint)),
+            ),
+            (
+                "topology_fingerprint".into(),
+                Json::Str(fingerprint::to_hex(self.topology_fingerprint)),
+            ),
+            (
+                "config_fingerprint".into(),
+                Json::Str(fingerprint::to_hex(self.config_fingerprint)),
+            ),
+            ("backend".into(), Json::Str(self.backend.clone())),
+            (
+                "strategy".into(),
+                Json::Obj(vec![
+                    ("slots".into(), Json::Arr(slots)),
+                    (
+                        "split_proportional".into(),
+                        Json::Bool(self.strategy.split_proportional),
+                    ),
+                    ("sync_barrier".into(), Json::Bool(self.strategy.sync_barrier)),
+                ]),
+            ),
+            ("groups".into(), Json::Arr(groups)),
+            (
+                "times".into(),
+                Json::Obj(vec![
+                    ("time".into(), Json::Num(self.times.time)),
+                    (
+                        "time_with_sfb".into(),
+                        match self.times.time_with_sfb {
+                            None => Json::Null,
+                            Some(t) => Json::Num(t),
+                        },
+                    ),
+                    ("dp_time".into(), Json::Num(self.times.dp_time)),
+                    ("final_time".into(), Json::Num(self.times.final_time)),
+                    ("speedup".into(), Json::Num(self.times.speedup)),
+                ]),
+            ),
+            ("sfb".into(), sfb),
+            ("telemetry".into(), telemetry),
+        ])
+        .encode()
+    }
+
+    /// Parse a plan back from its [`encode`](Self::encode)d JSON form.
+    pub fn decode(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let version = root.field("version")?.as_u64()?;
+        if version != PLAN_VERSION {
+            return Err(Error::msg(format!(
+                "unsupported plan version {version} (expected {PLAN_VERSION})"
+            )));
+        }
+        let fp = |key: &str| -> Result<u64> {
+            let s = root.field(key)?.as_str()?.to_string();
+            fingerprint::from_hex(&s)
+                .ok_or_else(|| Error::msg(format!("bad fingerprint in `{key}`: {s}")))
+        };
+
+        let strat = root.field("strategy")?;
+        let slots = strat
+            .field("slots")?
+            .as_arr()?
+            .iter()
+            .map(|slot| -> Result<Option<PlanAction>> {
+                if slot.is_null() {
+                    return Ok(None);
+                }
+                let pair = slot.as_arr()?;
+                if pair.len() != 2 {
+                    return Err(Error::msg("slot must be [mask, option]"));
+                }
+                let mask = pair[0].as_u64()?;
+                let option = pair[1].as_u64()?;
+                if mask > u16::MAX as u64 || option >= ReplOption::ALL.len() as u64 {
+                    return Err(Error::msg(format!("slot out of range: [{mask},{option}]")));
+                }
+                Ok(Some(PlanAction { mask: mask as u16, option: option as u8 }))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let strategy = PlanStrategy {
+            slots,
+            split_proportional: strat.field("split_proportional")?.as_bool()?,
+            sync_barrier: strat.field("sync_barrier")?.as_bool()?,
+        };
+
+        let groups = root
+            .field("groups")?
+            .as_arr()?
+            .iter()
+            .map(|g| -> Result<PlanGroup> {
+                Ok(PlanGroup {
+                    comp_time: g.field("comp_time")?.as_f64()?,
+                    grad_bytes: g.field("grad_bytes")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let t = root.field("times")?;
+        let times = PlanTimes {
+            time: t.field("time")?.as_f64()?,
+            time_with_sfb: {
+                let v = t.field("time_with_sfb")?;
+                if v.is_null() { None } else { Some(v.as_f64()?) }
+            },
+            dp_time: t.field("dp_time")?.as_f64()?,
+            final_time: t.field("final_time")?.as_f64()?,
+            speedup: t.field("speedup")?.as_f64()?,
+        };
+
+        let sfb = {
+            let v = root.field("sfb")?;
+            if v.is_null() {
+                None
+            } else {
+                Some(SfbSummary {
+                    problems_solved: v.field("problems_solved")?.as_usize()?,
+                    problems_beneficial: v.field("problems_beneficial")?.as_usize()?,
+                    gradients_covered: v.field("gradients_covered")?.as_usize()?,
+                    predicted_saving_s: v.field("predicted_saving_s")?.as_f64()?,
+                    census: v
+                        .field("census")?
+                        .as_arr()?
+                        .iter()
+                        .map(|row| -> Result<(String, usize)> {
+                            let pair = row.as_arr()?;
+                            if pair.len() != 2 {
+                                return Err(Error::msg("census row must be [type, count]"));
+                            }
+                            Ok((pair[0].as_str()?.to_string(), pair[1].as_usize()?))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            }
+        };
+
+        let tl = root.field("telemetry")?;
+        let telemetry = Telemetry {
+            iterations: tl.field("iterations")?.as_usize()?,
+            first_beats_dp: {
+                let v = tl.field("first_beats_dp")?;
+                if v.is_null() { None } else { Some(v.as_usize()?) }
+            },
+            dp_oom: tl.field("dp_oom")?.as_bool()?,
+            num_groups: tl.field("num_groups")?.as_usize()?,
+            num_actions: tl.field("num_actions")?.as_usize()?,
+            seed: tl
+                .field("seed")?
+                .as_str()?
+                .parse()
+                .map_err(|e| Error::msg(format!("bad seed: {e}")))?,
+            metrics: tl
+                .field("metrics")?
+                .as_arr()?
+                .iter()
+                .map(|row| -> Result<(String, f64)> {
+                    let pair = row.as_arr()?;
+                    if pair.len() != 2 {
+                        return Err(Error::msg("metric row must be [name, value]"));
+                    }
+                    Ok((pair[0].as_str()?.to_string(), pair[1].as_f64()?))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        Ok(Self {
+            model_name: root.field("model_name")?.as_str()?.to_string(),
+            topology_name: root.field("topology_name")?.as_str()?.to_string(),
+            model_fingerprint: fp("model_fingerprint")?,
+            topology_fingerprint: fp("topology_fingerprint")?,
+            config_fingerprint: fp("config_fingerprint")?,
+            backend: root.field("backend")?.as_str()?.to_string(),
+            strategy,
+            groups,
+            times,
+            sfb,
+            telemetry,
+        })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn sample_plan() -> DeploymentPlan {
+        DeploymentPlan {
+            model_name: "VGG19".into(),
+            topology_name: "sfb-2x1080Ti".into(),
+            model_fingerprint: 0xdead_beef_0000_0001,
+            topology_fingerprint: 0xcafe_f00d_0000_0002,
+            config_fingerprint: u64::MAX,
+            backend: "mcts".into(),
+            strategy: PlanStrategy {
+                slots: vec![
+                    Some(PlanAction { mask: 0b11, option: 0 }),
+                    None,
+                    Some(PlanAction { mask: 0b01, option: 3 }),
+                ],
+                split_proportional: true,
+                sync_barrier: false,
+            },
+            groups: vec![
+                PlanGroup { comp_time: 0.125, grad_bytes: 1.5e6 },
+                PlanGroup { comp_time: 0.25, grad_bytes: 0.0 },
+                PlanGroup { comp_time: 1.0 / 3.0, grad_bytes: 7.0 },
+            ],
+            times: PlanTimes {
+                time: 0.31,
+                time_with_sfb: Some(0.29),
+                dp_time: 0.62,
+                final_time: 0.29,
+                speedup: 0.62 / 0.29,
+            },
+            sfb: Some(SfbSummary {
+                problems_solved: 12,
+                problems_beneficial: 7,
+                gradients_covered: 7,
+                predicted_saving_s: 0.02,
+                census: vec![("MatMul".into(), 4), ("Mul".into(), 9)],
+            }),
+            telemetry: Telemetry {
+                iterations: 150,
+                first_beats_dp: Some(3),
+                dp_oom: false,
+                num_groups: 3,
+                num_actions: 24,
+                seed: u64::MAX - 1,
+                metrics: vec![("memo_hits".into(), 120.0), ("memo_misses".into(), 30.0)],
+            },
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let plan = sample_plan();
+        let text = plan.encode();
+        let back = DeploymentPlan::decode(&text).unwrap();
+        assert_eq!(back, plan);
+        // Second encode is byte-identical (stable formatting).
+        assert_eq!(back.encode(), text);
+    }
+
+    #[test]
+    fn round_trip_without_optionals() {
+        let mut plan = sample_plan();
+        plan.sfb = None;
+        plan.times.time_with_sfb = None;
+        plan.telemetry.first_beats_dp = None;
+        let back = DeploymentPlan::decode(&plan.encode()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn strategy_round_trips_through_engine_type() {
+        let plan = sample_plan();
+        let s = plan.strategy.to_strategy();
+        assert_eq!(PlanStrategy::from_strategy(&s), plan.strategy);
+        assert_eq!(s.slots[0].unwrap().option, ReplOption::AllReduce);
+        assert_eq!(s.slots[2].unwrap().option, ReplOption::ModelParallel);
+        assert!(s.slots[1].is_none());
+        assert_eq!(s.split, SplitMode::Proportional);
+    }
+
+    #[test]
+    fn decode_rejects_bad_input() {
+        assert!(DeploymentPlan::decode("not json").is_err());
+        assert!(DeploymentPlan::decode("{}").is_err());
+        let v2 = sample_plan().encode().replacen("\"version\":1.0", "\"version\":2.0", 1);
+        assert!(DeploymentPlan::decode(&v2).is_err(), "future versions rejected");
+        let bad_slot = sample_plan().encode().replacen("[3.0,0.0]", "[3.0,9.0]", 1);
+        assert!(DeploymentPlan::decode(&bad_slot).is_err(), "option out of range");
+    }
+
+    #[test]
+    fn telemetry_metric_lookup() {
+        let plan = sample_plan();
+        assert_eq!(plan.telemetry.metric("memo_hits"), Some(120.0));
+        assert_eq!(plan.telemetry.metric("nope"), None);
+    }
+
+    #[test]
+    fn top_census_sorts_by_count() {
+        let plan = sample_plan();
+        let top = plan.sfb.as_ref().unwrap().top_census(1);
+        assert_eq!(top, vec![("Mul".to_string(), 9)]);
+    }
+}

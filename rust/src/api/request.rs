@@ -1,0 +1,158 @@
+//! Typed plan requests: everything the [`Planner`](super::Planner)
+//! needs to produce a deployment, in one serializable-by-fingerprint
+//! value instead of loose function arguments.
+
+use crate::cluster::Topology;
+use crate::coordinator::SearchConfig;
+use crate::graph::grouping::DEFAULT_GROUPS;
+use crate::graph::CompGraph;
+
+use super::fingerprint::Fnv;
+
+/// How much work the search may spend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SearchBudget {
+    /// MCTS iterations (or, for non-MCTS backends, their own unit of
+    /// proposals — e.g. FlexFlow-MCMC steps).
+    pub iterations: usize,
+    /// Maximum number of op groups the grouper may emit.
+    pub max_groups: usize,
+}
+
+impl Default for SearchBudget {
+    fn default() -> Self {
+        Self { iterations: 150, max_groups: DEFAULT_GROUPS }
+    }
+}
+
+/// One deployment-planning request: model + device topology + search
+/// knobs.  This is the single argument of [`super::Planner::plan`]; two
+/// requests with equal fingerprints are served the same
+/// [`DeploymentPlan`](super::DeploymentPlan) from the cache.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub model: CompGraph,
+    pub topology: Topology,
+    pub budget: SearchBudget,
+    pub seed: u64,
+    /// Run the SFB optimizer (§4.2.3) on the found strategy.
+    pub apply_sfb: bool,
+    /// Profiler measurement noise (0.0 = exact).
+    pub profile_noise: f64,
+}
+
+impl PlanRequest {
+    /// A request with the default budget, seed 1, SFB on, no noise.
+    pub fn new(model: CompGraph, topology: Topology) -> Self {
+        Self {
+            model,
+            topology,
+            budget: SearchBudget::default(),
+            seed: 1,
+            apply_sfb: true,
+            profile_noise: 0.0,
+        }
+    }
+
+    pub fn budget(mut self, iterations: usize, max_groups: usize) -> Self {
+        self.budget = SearchBudget { iterations, max_groups };
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn sfb(mut self, apply: bool) -> Self {
+        self.apply_sfb = apply;
+        self
+    }
+
+    pub fn profile_noise(mut self, noise: f64) -> Self {
+        self.profile_noise = noise;
+        self
+    }
+
+    /// The coordinator-level configuration this request lowers to.
+    pub fn search_config(&self) -> SearchConfig {
+        SearchConfig {
+            max_groups: self.budget.max_groups,
+            mcts_iterations: self.budget.iterations,
+            seed: self.seed,
+            apply_sfb: self.apply_sfb,
+            profile_noise: self.profile_noise,
+        }
+    }
+
+    /// Fingerprint of the search knobs, folded with the backend token
+    /// into the cache key's config component.
+    pub fn config_fingerprint(&self, backend_token: u64) -> u64 {
+        let mut h = Fnv::new();
+        h.write_usize(self.budget.iterations);
+        h.write_usize(self.budget.max_groups);
+        h.write_u64(self.seed);
+        h.write_bool(self.apply_sfb);
+        h.write_f64(self.profile_noise);
+        h.write_u64(backend_token);
+        h.finish()
+    }
+
+    /// Fingerprint of the knobs that shape [`prepare`]d state (profiled
+    /// cost model + grouping); used to decide whether the planner's
+    /// memoized `Prepared` can be reused for this request.
+    ///
+    /// [`prepare`]: crate::coordinator::prepare
+    pub fn prepare_fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write_usize(self.budget.max_groups);
+        h.write_u64(self.seed);
+        h.write_f64(self.profile_noise);
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::sfb_pair;
+    use crate::models;
+
+    fn req() -> PlanRequest {
+        PlanRequest::new(models::vgg19(8, 0.25), sfb_pair())
+    }
+
+    #[test]
+    fn builder_chain_sets_fields() {
+        let r = req().budget(40, 10).seed(9).sfb(false).profile_noise(0.01);
+        assert_eq!(r.budget.iterations, 40);
+        assert_eq!(r.budget.max_groups, 10);
+        let cfg = r.search_config();
+        assert_eq!(cfg.mcts_iterations, 40);
+        assert_eq!(cfg.max_groups, 10);
+        assert_eq!(cfg.seed, 9);
+        assert!(!cfg.apply_sfb);
+        assert_eq!(cfg.profile_noise, 0.01);
+    }
+
+    #[test]
+    fn config_fingerprint_tracks_knobs_and_backend() {
+        let base = req().config_fingerprint(1);
+        assert_eq!(base, req().config_fingerprint(1));
+        assert_ne!(base, req().seed(2).config_fingerprint(1));
+        assert_ne!(base, req().budget(151, DEFAULT_GROUPS).config_fingerprint(1));
+        assert_ne!(base, req().sfb(false).config_fingerprint(1));
+        assert_ne!(base, req().config_fingerprint(2), "backend token matters");
+    }
+
+    #[test]
+    fn prepare_fingerprint_ignores_search_only_knobs() {
+        let base = req().prepare_fingerprint();
+        // Iterations and SFB don't affect profiling/grouping.
+        assert_eq!(base, req().budget(999, DEFAULT_GROUPS).prepare_fingerprint());
+        assert_eq!(base, req().sfb(false).prepare_fingerprint());
+        // max_groups and noise do.
+        assert_ne!(base, req().budget(150, 10).prepare_fingerprint());
+        assert_ne!(base, req().profile_noise(0.05).prepare_fingerprint());
+    }
+}

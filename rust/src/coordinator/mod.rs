@@ -2,9 +2,11 @@
 //! self-play GNN trainer (paper §4.2.2 / Fig. 7) and the batched
 //! leaf-evaluation service ([`batch`]).
 //!
-//! This is the deployment surface a user touches: give it a model name
-//! and a topology, get back an optimized deployment strategy with its
-//! simulated per-iteration time, the SFB plan, and search telemetry.
+//! This is the *engine* layer: [`search_session`] runs one
+//! prior-injected search and [`assemble_session`] folds a raw search
+//! result into times + SFB.  The public deployment surface — typed
+//! requests, pluggable backends, plan caching and serialization — is
+//! [`crate::api`], which drives these functions.
 
 pub mod batch;
 
@@ -14,7 +16,7 @@ use crate::gnn::features::{FeatureBuilder, Position, B_TRAIN, N_CAND};
 use crate::gnn::{GnnPrior, GnnService};
 use crate::graph::grouping::{group_ops, GroupGraph, DEFAULT_GROUPS};
 use crate::graph::CompGraph;
-use crate::mcts::{Mcts, SearchResult, UniformPrior};
+use crate::mcts::{Mcts, PriorProvider, SearchResult, UniformPrior};
 use crate::models;
 use crate::profile::{unique_gpus, CommModel, CostModel};
 use crate::sfb::{self, SfbPlan};
@@ -50,8 +52,14 @@ pub struct SessionResult {
     pub strategy: Strategy,
     pub time: f64,
     pub time_with_sfb: Option<f64>,
+    /// `min(time, time_with_sfb)` — what the deployment would run at;
+    /// `speedup` is always `dp_time / final_time`.
+    pub final_time: f64,
     pub dp_time: f64,
     pub speedup: f64,
+    /// Whether the DP-NCCL reference itself OOMs on this problem (the
+    /// Fig. 5 footnote marker).
+    pub dp_oom: bool,
     pub sfb: Option<SfbPlan>,
     pub search: SearchResult,
     pub overhead_s: f64,
@@ -76,22 +84,24 @@ pub fn prepare(model: CompGraph, topo: &Topology, cfg: &SearchConfig) -> Prepare
     Prepared { graph, gg, cost, comm }
 }
 
-/// Run a full TAG search (GNN-guided if a service + params are given,
-/// pure MCTS otherwise).
+/// Run a full TAG search.  `prior` injects the policy guiding MCTS —
+/// a [`GnnPrior`] for the paper's GNN-guided search, any other
+/// [`PriorProvider`] for experiments, or `None` for pure MCTS with
+/// uniform priors.  (Callers wanting the full request/plan surface —
+/// caching, serialization, backend selection — should use
+/// [`crate::api::Planner`], which drives this engine.)
 pub fn search_session(
     prep: &Prepared,
     topo: &Topology,
-    svc: Option<(&GnnService, Vec<f32>)>,
+    prior: Option<&mut dyn PriorProvider>,
     cfg: &SearchConfig,
 ) -> SessionResult {
     let watch = Stopwatch::start();
     let low = Lowering::new(&prep.gg, topo, &prep.cost, &prep.comm);
     let actions = enumerate_actions(topo);
 
-    let search = match svc {
-        Some((svc, params)) => {
-            let builder = FeatureBuilder::new(&prep.gg, topo, &actions);
-            let prior = GnnPrior::new(svc, builder, params);
+    let search = match prior {
+        Some(prior) => {
             let mut mcts = Mcts::new(&low, actions.clone(), prior, cfg.seed);
             mcts.search(cfg.mcts_iterations)
         }
@@ -100,10 +110,26 @@ pub fn search_session(
             mcts.search(cfg.mcts_iterations)
         }
     };
+    assemble_session(prep, topo, &low, search, cfg, watch.elapsed_s())
+}
 
+/// Finish a session from a raw [`SearchResult`]: evaluate the found
+/// strategy, optionally run the SFB optimizer, and aggregate the final
+/// times.  Shared by [`search_session`] and the `api::Planner` backends
+/// (which own their search loop).
+pub fn assemble_session(
+    prep: &Prepared,
+    topo: &Topology,
+    low: &Lowering,
+    search: SearchResult,
+    cfg: &SearchConfig,
+    overhead_s: f64,
+) -> SessionResult {
     let dp_time = search.dp_time;
     let strategy = search.best.clone();
     let base_out = low.evaluate(&strategy);
+    let dp_oom =
+        low.evaluate(&Strategy::dp_allreduce(prep.gg.num_groups(), topo)).oom;
 
     let (sfb, time_with_sfb) = if cfg.apply_sfb {
         let plan = sfb::optimize(&prep.graph, &prep.gg, topo, &prep.cost, &strategy);
@@ -119,10 +145,12 @@ pub fn search_session(
         strategy,
         time: base_out.time,
         time_with_sfb,
+        final_time,
         dp_time,
+        dp_oom,
         sfb,
         search,
-        overhead_s: watch.elapsed_s(),
+        overhead_s,
         group_graph: prep.gg.clone(),
     }
 }
@@ -333,7 +361,10 @@ mod tests {
             profile_noise: 0.0,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
-        let res = search_session(&prep, &topo, Some((&svc, params)), &cfg);
+        let actions = enumerate_actions(&topo);
+        let builder = FeatureBuilder::new(&prep.gg, &topo, &actions);
+        let mut prior = GnnPrior::new(&svc, builder, params);
+        let res = search_session(&prep, &topo, Some(&mut prior), &cfg);
         assert!(res.time.is_finite());
         assert!(res.speedup > 0.5);
     }

@@ -3,19 +3,50 @@
 //! Rust implementation of the system described in *"Expediting Distributed
 //! DNN Training with Device Topology-Aware Graph Deployment"* (Zhang et al.,
 //! 2023): an automatic framework that maps a DNN computation graph onto an
-//! arbitrary heterogeneous device topology by combining
+//! arbitrary heterogeneous device topology.
+//!
+//! ## The deployment surface: [`api`]
+//!
+//! All consumers — the CLI, the examples, and any serving layer — go
+//! through the [`api`] module: build a [`api::PlanRequest`] (model +
+//! topology + search budget), hand it to a [`api::Planner`], get back a
+//! [`api::DeploymentPlan`] that is deterministic, JSON-serializable and
+//! cached by structural fingerprints for repeat traffic:
+//!
+//! ```no_run
+//! use tag::api::{PlanRequest, Planner};
+//!
+//! let mut planner = Planner::builder().build();
+//! let request = PlanRequest::new(
+//!     tag::models::vgg19(48, 0.5),
+//!     tag::cluster::presets::testbed(),
+//! )
+//! .budget(200, 24)
+//! .seed(42);
+//! let outcome = planner.plan(&request);
+//! println!("{:.2}x over DP-NCCL", outcome.plan.times.speedup);
+//! std::fs::write("plan.json", outcome.plan.encode()).unwrap();
+//! ```
+//!
+//! The planner drives a pluggable [`api::SearchBackend`] — GNN-guided
+//! MCTS, pure MCTS, or a baseline sweep — over the engine layers below.
+//!
+//! ## The engine underneath
 //!
 //! * a **heterogeneous GNN** (JAX/Pallas, AOT-compiled to HLO and executed
 //!   through PJRT — see [`runtime`] and [`gnn`]) that scores candidate
 //!   strategy slices,
 //! * **Monte-Carlo tree search** ([`mcts`]) over per-op-group placement +
-//!   replication decisions,
+//!   replication decisions, guided through its [`mcts::PriorProvider`]
+//!   injection point,
 //! * a **discrete-event simulator** ([`sim`]) that provides rewards and
 //!   runtime-feedback features,
 //! * a **sufficient-factor-broadcasting optimizer** ([`sfb`]) that solves a
-//!   min-cut-style ILP per gradient, and
+//!   min-cut-style ILP per gradient,
 //! * a **graph compiler** ([`dist`]) that rewrites the computation graph
-//!   (Split/Concat/AddN/AllReduce insertion) for a chosen strategy.
+//!   (Split/Concat/AddN/AllReduce insertion) for a chosen strategy, and
+//! * the **[`coordinator`]**: end-to-end search sessions and the
+//!   self-play GNN trainer the planner and examples build on.
 //!
 //! Substrates the paper depends on are implemented here as well: a METIS
 //! replacement ([`partition`]), a model zoo ([`models`]), cluster topology
@@ -25,6 +56,7 @@
 //! at build time (`make artifacts`); the search/serving hot path is pure
 //! Rust + PJRT.
 
+pub mod api;
 pub mod cluster;
 pub mod coordinator;
 pub mod dist;

@@ -1,7 +1,7 @@
-//! `tag` — the TAG coordinator CLI.
+//! `tag` — the TAG coordinator CLI, a thin shell over [`tag::api`].
 //!
 //! Subcommands:
-//!   search    find a deployment strategy for a model on a topology
+//!   search    find a deployment plan for a model on a topology
 //!   baselines evaluate all baseline strategies on the same setup
 //!   train     self-play GNN training (writes a params .bin)
 //!   info      list models, topologies and artifact status
@@ -9,16 +9,23 @@
 //! Examples:
 //!   tag search --model VGG19 --topology testbed --iters 200 --scale 0.5
 //!   tag search --model BERT-Small --topology random:42 --gnn artifacts/params_init.bin
+//!   tag search --model VGG19 --out plan.json     # persist the plan
 //!   tag train --games 30 --steps 4 --out artifacts/params_trained.bin
 //!   tag baselines --model InceptionV3 --topology testbed
+//!
+//! Flags accept both `--key value` and `--key=value`; values may start
+//! with `-` (e.g. `--scale -0.5`).
 
+use tag::api::{
+    BaselineSweepBackend, DeploymentPlan, GnnMctsBackend, PlanRequest, Planner,
+    BASELINE_NAMES,
+};
 use tag::cluster::{generator, presets, Topology};
-use tag::coordinator::{prepare, search_session, SearchConfig, Trainer};
-use tag::dist::Lowering;
+use tag::coordinator::Trainer;
 use tag::gnn::{params, GnnService};
 use tag::models;
-use tag::strategy::{baselines, enumerate_actions, ReplOption};
-use tag::util::{fmt_secs, Rng};
+use tag::strategy::ReplOption;
+use tag::util::{fmt_secs, Args, Rng};
 
 fn usage() -> ! {
     eprintln!(
@@ -28,41 +35,13 @@ fn usage() -> ! {
     std::process::exit(2)
 }
 
-/// Minimal flag parser: --key value pairs (the vendored dep set has no
-/// clap; this keeps the CLI self-contained).
-struct Args {
-    kv: std::collections::HashMap<String, String>,
-}
-
-impl Args {
-    fn parse(args: &[String]) -> Self {
-        let mut kv = std::collections::HashMap::new();
-        let mut i = 0;
-        while i < args.len() {
-            let a = &args[i];
-            if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                    kv.insert(key.to_string(), args[i + 1].clone());
-                    i += 2;
-                } else {
-                    kv.insert(key.to_string(), "true".to_string());
-                    i += 1;
-                }
-            } else {
-                eprintln!("unexpected argument: {a}");
-                usage();
-            }
+fn parse_args(tokens: &[String]) -> Args {
+    match Args::parse(tokens) {
+        Ok(args) => args,
+        Err(unexpected) => {
+            eprintln!("unexpected argument: {unexpected}");
+            usage()
         }
-        Self { kv }
-    }
-    fn get(&self, k: &str) -> Option<&str> {
-        self.kv.get(k).map(|s| s.as_str())
-    }
-    fn flag(&self, k: &str) -> bool {
-        matches!(self.get(k), Some("true") | Some("1") | Some("yes"))
-    }
-    fn num<T: std::str::FromStr>(&self, k: &str, default: T) -> T {
-        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 }
 
@@ -85,17 +64,33 @@ fn topology_by_name(name: &str) -> Topology {
     }
 }
 
-fn describe_strategy(res: &tag::coordinator::SessionResult, topo: &Topology) {
-    let gg = &res.group_graph;
-    println!("\nstrategy ({} op groups):", gg.num_groups());
+/// Build a request from the shared `--model/--topology/--scale/...`
+/// flags.
+fn request_from(args: &Args) -> PlanRequest {
+    let model_name = args.get("model").unwrap_or("VGG19");
+    let scale: f64 = args.num("scale", 0.25);
+    let topo = topology_by_name(args.get("topology").unwrap_or("testbed"));
+    let model = models::by_name(model_name, scale).unwrap_or_else(|| {
+        eprintln!("unknown model {model_name}; see `tag info`");
+        std::process::exit(2)
+    });
+    PlanRequest::new(model, topo)
+        .budget(args.num("iters", 150), args.num("groups", 24))
+        .seed(args.num("seed", 1))
+        .sfb(!args.flag("no-sfb"))
+        .profile_noise(args.num("noise", 0.0))
+}
+
+fn describe_strategy(plan: &DeploymentPlan, topo: &Topology) {
+    println!("\nstrategy ({} op groups):", plan.telemetry.num_groups);
     let mut by_option = [0usize; 4];
     let mut gpu_weighted = vec![0.0f64; topo.num_groups()];
-    for (g, slot) in res.strategy.slots.iter().enumerate() {
+    for (g, slot) in plan.strategy.slots.iter().enumerate() {
         let Some(a) = slot else { continue };
-        by_option[a.option.index()] += 1;
+        by_option[a.option as usize] += 1;
         for d in 0..topo.num_groups() {
             if a.mask & (1 << d) != 0 {
-                gpu_weighted[d] += gg.groups[g].comp_time;
+                gpu_weighted[d] += plan.groups[g].comp_time;
             }
         }
     }
@@ -104,7 +99,7 @@ fn describe_strategy(res: &tag::coordinator::SessionResult, topo: &Topology) {
         by_option[0], by_option[1], by_option[2], by_option[3]
     );
     print!("  placement (comp-time-weighted): ");
-    let total: f64 = gg.groups.iter().map(|g| g.comp_time).sum();
+    let total: f64 = plan.groups.iter().map(|g| g.comp_time).sum();
     for (d, w) in gpu_weighted.iter().enumerate() {
         print!("{}:{:.0}% ", topo.groups[d].gpu.name, 100.0 * w / total.max(1e-12));
     }
@@ -112,92 +107,85 @@ fn describe_strategy(res: &tag::coordinator::SessionResult, topo: &Topology) {
 }
 
 fn cmd_search(args: &Args) {
-    let model_name = args.get("model").unwrap_or("VGG19");
-    let scale: f64 = args.num("scale", 0.25);
-    let topo = topology_by_name(args.get("topology").unwrap_or("testbed"));
-    let model = models::by_name(model_name, scale).unwrap_or_else(|| {
-        eprintln!("unknown model {model_name}; see `tag info`");
-        std::process::exit(2)
-    });
-    let cfg = SearchConfig {
-        max_groups: args.num("groups", 24),
-        mcts_iterations: args.num("iters", 150),
-        seed: args.num("seed", 1),
-        apply_sfb: !args.flag("no-sfb"),
-        profile_noise: args.num("noise", 0.0),
-    };
+    let request = request_from(args);
     println!(
         "model={} ({} ops, {:.0} MB params) topology={} ({} machines, {} GPUs)",
-        model.name,
-        model.len(),
-        model.total_param_bytes() / 1e6,
-        topo.name,
-        topo.num_groups(),
-        topo.num_devices()
+        request.model.name,
+        request.model.len(),
+        request.model.total_param_bytes() / 1e6,
+        request.topology.name,
+        request.topology.num_groups(),
+        request.topology.num_devices()
     );
-    let prep = prepare(model, &topo, &cfg);
-    let svc_params = args.get("gnn").map(|p| {
-        let svc = GnnService::load("artifacts").expect("load artifacts (make artifacts)");
-        let params = params::load_params(p).expect("load params file");
-        (svc, params)
-    });
-    let res = match &svc_params {
-        Some((svc, p)) => search_session(&prep, &topo, Some((svc, p.clone())), &cfg),
-        None => search_session(&prep, &topo, None, &cfg),
+
+    let builder = Planner::builder();
+    let mut planner = match args.get("gnn") {
+        Some(params_path) => {
+            let backend = GnnMctsBackend::from_artifacts("artifacts", params_path)
+                .unwrap_or_else(|e| {
+                    eprintln!("GNN backend unavailable ({e}); run `make artifacts`");
+                    std::process::exit(2)
+                });
+            builder.backend(backend).build()
+        }
+        None => builder.build(),
     };
+
+    let topo = request.topology.clone();
+    let outcome = planner.plan(&request);
+    let plan = &outcome.plan;
     println!(
-        "DP-NCCL baseline: {}   TAG: {}   speed-up: {:.2}x   (search {})",
-        fmt_secs(res.dp_time),
-        fmt_secs(res.dp_time / res.speedup),
-        res.speedup,
-        fmt_secs(res.overhead_s),
+        "DP-NCCL baseline: {}   TAG: {}   speed-up: {:.2}x   (search {}, backend {})",
+        fmt_secs(plan.times.dp_time),
+        fmt_secs(plan.times.final_time),
+        plan.times.speedup,
+        fmt_secs(outcome.overhead_s),
+        plan.backend,
     );
-    if let (Some(plan), Some(t)) = (&res.sfb, res.time_with_sfb) {
+    if let (Some(sfb), Some(t)) = (&plan.sfb, plan.times.time_with_sfb) {
         println!(
             "SFB: {} of {} gradients covered, predicted saving {}, time with SFB {}",
-            plan.problems_beneficial,
-            plan.problems_solved,
-            fmt_secs(plan.predicted_saving_s),
+            sfb.problems_beneficial,
+            sfb.problems_solved,
+            fmt_secs(sfb.predicted_saving_s),
             fmt_secs(t)
         );
-        let top = plan.top_census(5);
+        let top = sfb.top_census(5);
         if !top.is_empty() {
             println!("  top duplicated ops: {top:?}");
         }
     }
-    describe_strategy(&res, &topo);
+    describe_strategy(plan, &topo);
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, plan.encode()).unwrap_or_else(|e| {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1)
+        });
+        println!("\nplan written to {path}");
+    }
 }
 
 fn cmd_baselines(args: &Args) {
-    let model_name = args.get("model").unwrap_or("VGG19");
-    let scale: f64 = args.num("scale", 0.25);
-    let topo = topology_by_name(args.get("topology").unwrap_or("testbed"));
-    let model = models::by_name(model_name, scale).expect("model");
-    let cfg = SearchConfig {
-        max_groups: args.num("groups", 24),
-        seed: args.num("seed", 1),
-        ..Default::default()
-    };
-    let prep = prepare(model, &topo, &cfg);
-    let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
-    let acts = enumerate_actions(&topo);
-    let ng = prep.gg.num_groups();
+    let request = request_from(args).sfb(false);
+    let mut planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
+    let plan = planner.plan(&request).plan;
 
     println!("{:<12} {:>14} {:>10}", "baseline", "iter time", "vs DP");
-    let dp = low.evaluate(&baselines::dp_nccl(ng, &topo)).time;
-    let rows: Vec<(&str, f64)> = vec![
-        ("DP-NCCL", dp),
-        ("DP-NCCL-P", low.evaluate(&baselines::dp_nccl_p(ng, &topo)).time),
-        ("Horovod", low.evaluate(&baselines::horovod(ng, &topo)).time),
-        ("FlexFlow", {
-            let s = baselines::flexflow_mcmc(&low, &acts, 200, cfg.seed);
-            low.evaluate(&s).time
-        }),
-        ("Baechi", low.evaluate(&baselines::baechi_msct(&low)).time),
-        ("HeteroG", low.evaluate(&baselines::heterog_like(&low)).time),
-    ];
-    for (name, t) in rows {
-        println!("{:<12} {:>14} {:>9.2}x", name, fmt_secs(t), dp / t);
+    let dp = plan
+        .telemetry
+        .metric("DP-NCCL")
+        .expect("sweep always reports the DP row");
+    for name in BASELINE_NAMES {
+        let Some(t) = plan.telemetry.metric(name) else { continue };
+        let oom = plan.telemetry.metric(&format!("{name}.oom")).is_some();
+        println!(
+            "{:<12} {:>14} {:>9.2}x{}",
+            name,
+            fmt_secs(t),
+            dp / t,
+            if oom { "  (OOM)" } else { "" }
+        );
     }
 }
 
@@ -246,7 +234,7 @@ fn cmd_info() {
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else { usage() };
-    let rest = Args::parse(&argv[1..]);
+    let rest = parse_args(&argv[1..]);
     match cmd.as_str() {
         "search" => cmd_search(&rest),
         "baselines" => cmd_baselines(&rest),

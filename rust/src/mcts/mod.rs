@@ -33,6 +33,22 @@ pub trait PriorProvider {
     ) -> Vec<f32>;
 }
 
+/// Forwarding impl so callers can inject a borrowed (possibly
+/// type-erased) provider — e.g. `&mut dyn PriorProvider` through
+/// [`crate::coordinator::search_session`] — without giving [`Mcts`]
+/// ownership.
+impl<P: PriorProvider + ?Sized> PriorProvider for &mut P {
+    fn priors(
+        &mut self,
+        state: &Strategy,
+        group: usize,
+        outcome: &SimOutcome,
+        actions: &[Action],
+    ) -> Vec<f32> {
+        (**self).priors(state, group, outcome, actions)
+    }
+}
+
 /// Uniform priors: "Pure MCTS" in Table 7.
 pub struct UniformPrior;
 
@@ -117,6 +133,12 @@ impl<'a, P: PriorProvider> Mcts<'a, P> {
             collect_examples: false,
             root_sweep: true,
         }
+    }
+
+    /// The injected prior provider (e.g. to read GNN evaluation counts
+    /// after a search).
+    pub fn prior(&self) -> &P {
+        &self.prior
     }
 
     fn reward(&self, out: &SimOutcome) -> f64 {

@@ -1,0 +1,156 @@
+//! Minimal CLI flag parser (the vendored dependency set has no `clap`).
+//!
+//! Grammar per token:
+//!
+//! * `--key=value` — explicit pair; the value may be anything,
+//!   including empty or starting with `-`.
+//! * `--key value` — pair, where `value` is the next token when it does
+//!   not itself look like a flag.  Negative numbers (`-0.5`, `-3`,
+//!   `-.25`, `-1e-3`) are values, not flags.
+//! * `--key` followed by another flag (or nothing) — boolean `true`.
+//!
+//! Tokens that are not flags and were not consumed as values are
+//! reported through [`Args::parse`]'s error so the CLI can print usage
+//! instead of silently ignoring them.
+
+use std::collections::HashMap;
+
+/// Parsed `--key value` / `--key=value` / `--flag` arguments.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct Args {
+    kv: HashMap<String, String>,
+}
+
+/// Does a token that starts with `-` denote a *value* (negative number)
+/// rather than a flag?
+fn is_negative_number(token: &str) -> bool {
+    let rest = match token.strip_prefix('-') {
+        Some(r) if !r.is_empty() => r,
+        _ => return false,
+    };
+    rest.starts_with(|c: char| c.is_ascii_digit() || c == '.')
+        && rest.parse::<f64>().is_ok()
+}
+
+impl Args {
+    /// Parse a token list; `Err` carries the first unexpected
+    /// (non-flag, unconsumed) token.
+    pub fn parse(args: &[String]) -> Result<Self, String> {
+        let mut kv = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let token = &args[i];
+            let Some(body) = token.strip_prefix("--") else {
+                return Err(token.clone());
+            };
+            if body.is_empty() {
+                return Err(token.clone());
+            }
+            if let Some((key, value)) = body.split_once('=') {
+                kv.insert(key.to_string(), value.to_string());
+                i += 1;
+                continue;
+            }
+            let value_next = match args.get(i + 1) {
+                Some(next) => !next.starts_with('-') || is_negative_number(next),
+                None => false,
+            };
+            if value_next {
+                kv.insert(body.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                kv.insert(body.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { kv })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag: present bare, or with an explicit truthy value.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse a numeric (or any `FromStr`) value, with a default.
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        let owned: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        Args::parse(&owned).expect("parse")
+    }
+
+    #[test]
+    fn space_separated_pairs() {
+        let a = parse(&["--model", "VGG19", "--iters", "200"]);
+        assert_eq!(a.get("model"), Some("VGG19"));
+        assert_eq!(a.num("iters", 0usize), 200);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--model=BERT-Small", "--scale=0.5", "--note=a=b"]);
+        assert_eq!(a.get("model"), Some("BERT-Small"));
+        assert_eq!(a.num("scale", 0.0f64), 0.5);
+        // Only the first `=` splits.
+        assert_eq!(a.get("note"), Some("a=b"));
+    }
+
+    #[test]
+    fn negative_values_are_not_swallowed_as_flags() {
+        let a = parse(&["--scale", "-0.5", "--offset", "-3", "--eps", "-1e-3"]);
+        assert_eq!(a.num("scale", 0.0f64), -0.5);
+        assert_eq!(a.num("offset", 0i64), -3);
+        assert_eq!(a.num("eps", 0.0f64), -1e-3);
+        let b = parse(&["--scale=-0.5"]);
+        assert_eq!(b.num("scale", 0.0f64), -0.5);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["--no-sfb", "--model", "VGG19", "--verbose"]);
+        assert!(a.flag("no-sfb"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("absent"));
+        assert_eq!(a.get("model"), Some("VGG19"));
+        // A following flag is not consumed as a value.
+        let b = parse(&["--no-sfb", "--iters", "10"]);
+        assert!(b.flag("no-sfb"));
+        assert_eq!(b.num("iters", 0usize), 10);
+    }
+
+    #[test]
+    fn dashed_non_numbers_stay_flags() {
+        // `-x` is not a negative number, so `--mode` is boolean and the
+        // stray `-x` is the parse error.
+        let owned: Vec<String> = ["--mode", "-x"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(Args::parse(&owned), Err("-x".to_string()));
+    }
+
+    #[test]
+    fn unexpected_positional_reported() {
+        let owned: Vec<String> = ["stray"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(Args::parse(&owned), Err("stray".to_string()));
+        let owned: Vec<String> = ["--"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(Args::parse(&owned), Err("--".to_string()));
+    }
+
+    #[test]
+    fn empty_and_defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get("anything"), None);
+        assert_eq!(a.num("iters", 7usize), 7);
+        let b = parse(&["--name="]);
+        assert_eq!(b.get("name"), Some(""));
+    }
+}

@@ -6,10 +6,12 @@
 //! seeded by the caller, so experiments in EXPERIMENTS.md are exactly
 //! reproducible.
 
+pub mod args;
 pub mod error;
 pub mod rng;
 pub mod stats;
 
+pub use args::Args;
 pub use rng::Rng;
 pub use stats::{mean, percentile, stddev};
 

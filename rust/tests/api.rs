@@ -1,0 +1,169 @@
+//! API-surface integration tests: planner determinism (with and without
+//! the plan cache), lossless plan JSON round-trips, and full baseline
+//! coverage on the paper's preset topologies.
+
+use tag::api::{
+    BaselineSweepBackend, DeploymentPlan, MctsBackend, PlanRequest, Planner,
+    BASELINE_NAMES,
+};
+use tag::cluster::presets::{homogeneous, sfb_pair, testbed};
+use tag::coordinator::{prepare, SearchConfig};
+use tag::dist::Lowering;
+use tag::models;
+use tag::strategy::{baselines, enumerate_actions};
+
+fn request(seed: u64) -> PlanRequest {
+    PlanRequest::new(models::vgg19(8, 0.25), testbed()).budget(40, 12).seed(seed)
+}
+
+#[test]
+fn plans_are_deterministic_with_cache_on_and_off() {
+    // Cache off: two independent searches must agree bit-for-bit.
+    let mut cold = Planner::builder().without_cache().build();
+    let a = cold.plan(&request(3));
+    let b = cold.plan(&request(3));
+    assert!(!a.cache_hit && !b.cache_hit);
+    assert_eq!(a.plan, b.plan);
+
+    // Cache on: the served copy is the same plan again.
+    let mut warm = Planner::builder().build();
+    let c = warm.plan(&request(3));
+    let d = warm.plan(&request(3));
+    assert!(!c.cache_hit && d.cache_hit);
+    assert_eq!(c.plan, d.plan);
+
+    // Across planners and cache modes: still identical.
+    assert_eq!(a.plan, c.plan);
+
+    // And so is the serialized form (byte-level determinism).
+    assert_eq!(a.plan.encode(), d.plan.encode());
+}
+
+#[test]
+fn plan_json_round_trip_is_lossless() {
+    let mut planner = Planner::builder().without_cache().build();
+    // Cover both SFB-on (Some(time_with_sfb), Some(sfb)) and SFB-off.
+    for req in [request(5), request(5).sfb(false)] {
+        let plan = planner.plan(&req).plan;
+        let json = plan.encode();
+        let back = DeploymentPlan::decode(&json).expect("decode");
+        assert_eq!(back, plan);
+        assert_eq!(back.encode(), json, "re-encode must be byte-identical");
+        // The rehydrated strategy drives the engine identically.
+        let cfg = req.search_config();
+        let prep = prepare(req.model.clone(), &req.topology, &cfg);
+        let low = Lowering::new(&prep.gg, &req.topology, &prep.cost, &prep.comm);
+        let out = low.evaluate(&back.strategy.to_strategy());
+        assert!((out.time - plan.times.time).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn equal_problems_share_cache_entries_across_request_values() {
+    // Fingerprints key on structure: a *new* but identical request value
+    // (fresh model generation, renamed topology) must hit the cache.
+    let mut planner = Planner::builder().build();
+    let first = planner.plan(&request(7));
+    let mut renamed = request(7);
+    renamed.topology.name = "testbed-imposter".into();
+    let second = planner.plan(&renamed);
+    assert!(!first.cache_hit && second.cache_hit);
+    assert_eq!(first.plan, second.plan);
+}
+
+#[test]
+fn backend_identity_partitions_the_cache() {
+    // The same request through differently-configured backends must not
+    // share plans: the backend token is part of the config fingerprint.
+    let mut sweep = Planner::builder().backend(BaselineSweepBackend::new()).build();
+    let mut rootless =
+        Planner::builder().backend(MctsBackend::new().root_sweep(false)).build();
+    let k_default = Planner::builder().build().key_for(&request(3));
+    assert_ne!(k_default, sweep.key_for(&request(3)));
+    assert_ne!(k_default, rootless.key_for(&request(3)));
+    assert_ne!(sweep.key_for(&request(3)), rootless.key_for(&request(3)));
+    // And the plans really differ in provenance.
+    assert_eq!(sweep.plan(&request(3)).plan.backend, "baseline-sweep");
+    assert_eq!(rootless.plan(&request(3)).plan.backend, "mcts");
+}
+
+#[test]
+fn every_baseline_generator_runs_on_preset_topologies() {
+    // Satellite requirement: each `strategy::baselines` generator on at
+    // least two `cluster::presets` topologies — no panic, finite times.
+    for topo in [testbed(), sfb_pair(), homogeneous()] {
+        let cfg = SearchConfig {
+            max_groups: 10,
+            mcts_iterations: 30,
+            seed: 1,
+            apply_sfb: false,
+            profile_noise: 0.0,
+        };
+        let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
+        let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+        let actions = enumerate_actions(&topo);
+        let ng = prep.gg.num_groups();
+        let strategies = vec![
+            ("dp_nccl", baselines::dp_nccl(ng, &topo)),
+            ("dp_nccl_p", baselines::dp_nccl_p(ng, &topo)),
+            ("horovod", baselines::horovod(ng, &topo)),
+            ("expert", baselines::expert(ng, &topo)),
+            ("flexflow_mcmc", baselines::flexflow_mcmc(&low, &actions, 30, 1)),
+            ("baechi_msct", baselines::baechi_msct(&low)),
+            ("heterog_like", baselines::heterog_like(&low)),
+        ];
+        for (name, s) in strategies {
+            assert!(s.is_complete(), "{name} on {} incomplete", topo.name);
+            let out = low.evaluate(&s);
+            assert!(
+                out.time.is_finite() && out.time > 0.0,
+                "{name} on {}: time {}",
+                topo.name,
+                out.time
+            );
+        }
+    }
+}
+
+#[test]
+fn baseline_sweep_backend_covers_the_roster_on_two_presets() {
+    for topo in [testbed(), sfb_pair()] {
+        let mut planner =
+            Planner::builder().backend(BaselineSweepBackend::new()).build();
+        let req = PlanRequest::new(models::inception_v3(8, 0.25), topo.clone())
+            .budget(30, 10)
+            .seed(2)
+            .sfb(false);
+        let plan = planner.plan(&req).plan;
+        for name in BASELINE_NAMES {
+            let t = plan
+                .telemetry
+                .metric(name)
+                .unwrap_or_else(|| panic!("{name} row missing on {}", topo.name));
+            assert!(t.is_finite() && t > 0.0, "{name} on {}: {t}", topo.name);
+        }
+        // The sweep's chosen plan never loses to its own DP row.
+        assert!(plan.times.final_time <= plan.telemetry.metric("DP-NCCL").unwrap() + 1e-12);
+    }
+}
+
+#[test]
+fn prepared_state_survives_budget_changes_but_plans_differ() {
+    // Same (model, topology, prepare-knobs), different search budget:
+    // the planner reuses prepared state yet produces distinct cached
+    // entries with possibly different strategies.
+    let mut planner = Planner::builder().build();
+    let small = planner.plan(&request(3));
+    let big = planner.plan(&PlanRequest::new(models::vgg19(8, 0.25), testbed())
+        .budget(80, 12)
+        .seed(3));
+    assert!(!big.cache_hit);
+    assert_eq!(
+        small.plan.model_fingerprint, big.plan.model_fingerprint,
+        "same structural problem"
+    );
+    assert_ne!(small.plan.config_fingerprint, big.plan.config_fingerprint);
+    // More iterations never hurt the found strategy's base time (the
+    // longer run's search prefix is the shorter run).
+    assert!(big.plan.times.time <= small.plan.times.time + 1e-12);
+}
