@@ -69,4 +69,21 @@ fn main() {
         fmt_secs(again.overhead_s),
         100.0 * stats.hit_rate()
     );
+
+    // 6. Parallel search: the same request with 4 tree-parallel MCTS
+    //    workers over a shared tree + concurrent evaluation cache.
+    //    (workers=1 is byte-identical to the sequential engine; K>1 is
+    //    seed-stable in its budgets but explores schedule-dependently,
+    //    so it gets its own cache identity.)
+    let fast = planner.plan(&request.clone().workers(4));
+    assert!(!fast.cache_hit, "parallel plans never alias sequential ones");
+    let tl = &fast.plan.telemetry;
+    println!(
+        "parallel (4 workers)       : {} search, speed-up {:.2}x, per-worker iters {:?}",
+        fmt_secs(fast.overhead_s),
+        fast.plan.times.speedup,
+        (0..4)
+            .map(|w| tl.metric(&format!("worker{w}_iterations")).unwrap_or(0.0) as usize)
+            .collect::<Vec<_>>()
+    );
 }

@@ -17,6 +17,7 @@ fn main() {
             seed: 1,
             apply_sfb: true,
             profile_noise: 0.0,
+            parallelism: Default::default(),
         };
         // Prepare once (profiling + grouping), bench the search.
         let model = models::by_name(name, 0.25).unwrap();

@@ -1,0 +1,104 @@
+//! Bench: tree-parallel MCTS scaling (1/2/4/8 workers) on the `cloud()`
+//! preset — the §4.2.2 "deployment in seconds" claim as a curve.
+//!
+//! Two sections:
+//!
+//! 1. **Engine scaling** — `search::run_search` with a cold memo table
+//!    per run, so each worker count pays the full lower+simulate load;
+//!    wall-clock search time should be monotonically non-increasing from
+//!    1 → 4 workers on a multi-core host (8 may flatten out once the
+//!    memo/arena contention meets the core count).
+//! 2. **Plan telemetry** — the same sweep through `api::Planner`,
+//!    printing the per-worker iteration counts and memo hit rates each
+//!    `DeploymentPlan` records, i.e. the scaling curve as it lands in
+//!    served plan JSON.
+
+use tag::api::{PlanRequest, Planner};
+use tag::cluster::presets::cloud;
+use tag::coordinator::{prepare, SearchConfig};
+use tag::dist::Lowering;
+use tag::mcts::UniformPrior;
+use tag::models;
+use tag::search::{run_search, Parallelism, SearchProblem};
+use tag::strategy::enumerate_actions;
+use tag::util::{bench, fmt_secs};
+
+const ITERS: usize = 240;
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let topo = cloud();
+    let cfg = SearchConfig {
+        max_groups: 16,
+        mcts_iterations: ITERS,
+        seed: 1,
+        apply_sfb: false,
+        profile_noise: 0.0,
+        parallelism: Parallelism::default(),
+    };
+    let prep = prepare(models::by_name("VGG19", 0.25).unwrap(), &topo, &cfg);
+    let actions = enumerate_actions(&topo);
+
+    println!("== tree-parallel search: {ITERS}-iteration searches on cloud() ==");
+    let mut curve = Vec::new();
+    for &workers in &WORKER_COUNTS {
+        let m = bench(&format!("search{ITERS}[workers={workers}]"), 1.5, || {
+            // Fresh Lowering (and thus cold memo) per run: every worker
+            // count pays full evaluation cost, so the curve measures
+            // parallel speed-up, not caching.
+            let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+            let prob = SearchProblem {
+                gg: &prep.gg,
+                topo: &topo,
+                cost: &prep.cost,
+                comm: &prep.comm,
+                actions: &actions,
+            };
+            let out = run_search(
+                &prob,
+                &low,
+                (0..workers).map(|_| UniformPrior).collect(),
+                ITERS,
+                1,
+                Parallelism::workers(workers),
+                true,
+                false,
+            );
+            assert_eq!(out.result.iterations, ITERS);
+            assert!(out.result.best_time > 0.0);
+        });
+        curve.push((workers, m));
+        println!("    -> {:.0} iterations/s", ITERS as f64 / m);
+    }
+    println!("\n    scaling curve (workers, search time):");
+    let t1 = curve[0].1;
+    for &(workers, t) in &curve {
+        println!(
+            "      {workers:>2} workers: {:>12}  speed-up {:.2}x",
+            fmt_secs(t),
+            t1 / t
+        );
+    }
+
+    println!("\n== the same sweep as plan telemetry (api::Planner) ==");
+    for &workers in &WORKER_COUNTS {
+        let mut planner = Planner::builder().without_cache().build();
+        let request = PlanRequest::new(models::by_name("VGG19", 0.25).unwrap(), cloud())
+            .budget(ITERS, 16)
+            .seed(1)
+            .sfb(false)
+            .workers(workers);
+        let outcome = planner.plan(&request);
+        let tl = &outcome.plan.telemetry;
+        let per: Vec<usize> = (0..workers)
+            .map(|w| tl.metric(&format!("worker{w}_iterations")).unwrap_or(0.0) as usize)
+            .collect();
+        println!(
+            "    workers={workers}: search {}  speedup {:.2}x  hit_rate {:.2}  per-worker {:?}",
+            fmt_secs(outcome.overhead_s),
+            outcome.plan.times.speedup,
+            tl.metric("memo_hit_rate").unwrap_or(0.0),
+            per,
+        );
+    }
+}

@@ -20,10 +20,12 @@
 use std::rc::Rc;
 
 use crate::cluster::Topology;
+use crate::coordinator::batch::{eval_channel, serve, EvalStats};
 use crate::coordinator::{Prepared, SearchConfig};
 use crate::dist::Lowering;
 use crate::gnn::{params, FeatureBuilder, GnnPrior, GnnService};
 use crate::mcts::{Mcts, SearchResult, UniformPrior};
+use crate::search::{run_search, run_search_with_service, BatchedGnnPrior, SearchProblem};
 use crate::strategy::{baselines, Action, Strategy};
 use crate::util::error::{Context, Result};
 
@@ -66,7 +68,30 @@ fn memo_metrics(low: &Lowering<'_>) -> Vec<(String, f64)> {
     vec![
         ("memo_hits".to_string(), hits as f64),
         ("memo_misses".to_string(), misses as f64),
+        ("memo_hit_rate".to_string(), low.memo_hit_rate()),
     ]
+}
+
+/// Worker-count + per-worker iteration telemetry rows, emitted for
+/// every MCTS-family plan so sequential and parallel plans share one
+/// metric shape.
+fn parallel_metrics(per_worker_iterations: &[usize]) -> Vec<(String, f64)> {
+    let mut rows =
+        vec![("workers".to_string(), per_worker_iterations.len() as f64)];
+    for (w, &it) in per_worker_iterations.iter().enumerate() {
+        rows.push((format!("worker{w}_iterations"), it as f64));
+    }
+    rows
+}
+
+fn problem_of<'a>(ctx: &'a SearchContext<'a>) -> SearchProblem<'a> {
+    SearchProblem {
+        gg: &ctx.prep.gg,
+        topo: ctx.topo,
+        cost: &ctx.prep.cost,
+        comm: &ctx.prep.comm,
+        actions: ctx.actions,
+    }
 }
 
 // ---------------------------------------------------------------- MCTS
@@ -107,10 +132,22 @@ impl SearchBackend for MctsBackend {
     }
 
     fn search(&mut self, ctx: &SearchContext<'_>) -> BackendOutcome {
-        let mut mcts = Mcts::new(ctx.low, ctx.actions.to_vec(), UniformPrior, ctx.cfg.seed);
-        mcts.root_sweep = self.root_sweep;
-        let result = mcts.search(ctx.cfg.mcts_iterations);
-        BackendOutcome { result, metrics: memo_metrics(ctx.low) }
+        let par = ctx.cfg.parallelism;
+        let priors: Vec<UniformPrior> =
+            (0..par.workers.max(1)).map(|_| UniformPrior).collect();
+        let out = run_search(
+            &problem_of(ctx),
+            ctx.low,
+            priors,
+            ctx.cfg.mcts_iterations,
+            ctx.cfg.seed,
+            par,
+            self.root_sweep,
+            false,
+        );
+        let mut metrics = memo_metrics(ctx.low);
+        metrics.extend(parallel_metrics(&out.per_worker_iterations));
+        BackendOutcome { result: out.result, metrics }
     }
 }
 
@@ -180,16 +217,64 @@ impl SearchBackend for GnnMctsBackend {
     }
 
     fn search(&mut self, ctx: &SearchContext<'_>) -> BackendOutcome {
-        let mut builder = FeatureBuilder::new(&ctx.prep.gg, ctx.topo, ctx.actions);
-        builder.use_feedback = self.use_feedback;
-        let prior = GnnPrior::new(&self.svc, builder, self.params.clone());
-        let mut mcts = Mcts::new(ctx.low, ctx.actions.to_vec(), prior, ctx.cfg.seed);
-        mcts.root_sweep = self.root_sweep;
-        let result = mcts.search(ctx.cfg.mcts_iterations);
-        let gnn_evals = mcts.prior().evals;
+        let par = ctx.cfg.parallelism;
+        if par.workers <= 1 {
+            // Sequential: the GNN is evaluated in-process, no channels.
+            let mut builder = FeatureBuilder::new(&ctx.prep.gg, ctx.topo, ctx.actions);
+            builder.use_feedback = self.use_feedback;
+            let prior = GnnPrior::new(&self.svc, builder, self.params.clone());
+            let mut mcts = Mcts::new(ctx.low, ctx.actions.to_vec(), prior, ctx.cfg.seed);
+            mcts.root_sweep = self.root_sweep;
+            let result = mcts.search(ctx.cfg.mcts_iterations);
+            let gnn_evals = mcts.prior().evals;
+            let mut metrics = memo_metrics(ctx.low);
+            metrics.extend(parallel_metrics(&[result.iterations]));
+            metrics.push(("gnn_evals".to_string(), gnn_evals as f64));
+            return BackendOutcome { result, metrics };
+        }
+
+        // Parallel: the PJRT executable is not `Send`, so the compiled
+        // GNN stays on this thread running the dynamic-batching evaluator
+        // while the K workers submit positions through EvalClients.
+        let (client, rx) = eval_channel();
+        let priors: Vec<BatchedGnnPrior<'_>> = (0..par.workers)
+            .map(|_| {
+                let mut builder =
+                    FeatureBuilder::new(&ctx.prep.gg, ctx.topo, ctx.actions);
+                builder.use_feedback = self.use_feedback;
+                BatchedGnnPrior::new(client.clone(), builder)
+            })
+            .collect();
+        drop(client); // workers hold the only senders: serve() returns on their exit
+        let mut eval_stats = EvalStats::default();
+        let out = run_search_with_service(
+            &problem_of(ctx),
+            ctx.low,
+            priors,
+            ctx.cfg.mcts_iterations,
+            ctx.cfg.seed,
+            par,
+            self.root_sweep,
+            false,
+            || {
+                eval_stats = serve(&self.svc, &self.params, rx);
+            },
+        );
         let mut metrics = memo_metrics(ctx.low);
-        metrics.push(("gnn_evals".to_string(), gnn_evals as f64));
-        BackendOutcome { result, metrics }
+        metrics.extend(parallel_metrics(&out.per_worker_iterations));
+        let sum_of = |name: &str| -> f64 {
+            out.prior_metrics
+                .iter()
+                .flatten()
+                .filter(|(n, _)| n == name)
+                .map(|(_, v)| *v)
+                .sum()
+        };
+        metrics.push(("gnn_evals".to_string(), sum_of("gnn_evals")));
+        metrics.push(("eval_cache_hits".to_string(), sum_of("eval_cache_hits")));
+        metrics.push(("eval_requests".to_string(), eval_stats.requests as f64));
+        metrics.push(("eval_batches".to_string(), eval_stats.batches as f64));
+        BackendOutcome { result: out.result, metrics }
     }
 }
 
@@ -301,6 +386,7 @@ mod tests {
             seed: 3,
             apply_sfb: false,
             profile_noise: 0.0,
+            parallelism: Default::default(),
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);

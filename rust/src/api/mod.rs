@@ -47,6 +47,8 @@ pub use plan::{
 };
 pub use request::{PlanRequest, SearchBudget};
 
+pub use crate::search::Parallelism;
+
 use crate::cluster::Topology;
 use crate::coordinator::{self, Prepared, SessionResult};
 use crate::dist::Lowering;
@@ -157,9 +159,15 @@ impl Planner {
 
     /// Produce (or serve from cache) a deployment plan for `request`.
     ///
-    /// The returned [`DeploymentPlan`] is a pure function of the request
-    /// and the backend configuration: repeat calls are bit-identical
-    /// whether they hit the cache or re-search.
+    /// With the default sequential search (`workers == 1`) the returned
+    /// [`DeploymentPlan`] is a pure function of the request and the
+    /// backend configuration: repeat calls are bit-identical whether
+    /// they hit the cache or re-search.  With `workers > 1` the search
+    /// is tree-parallel and schedule-dependent: the cache still serves
+    /// the stored plan byte-for-byte, but an evicted entry may re-search
+    /// to a different (equally valid) plan — which is why parallel
+    /// requests get their own config fingerprint and never alias
+    /// sequential ones.
     pub fn plan(&mut self, request: &PlanRequest) -> PlanOutcome {
         let watch = Stopwatch::start();
         let key = self.key_for(request);

@@ -6,6 +6,7 @@ use crate::cluster::Topology;
 use crate::coordinator::SearchConfig;
 use crate::graph::grouping::DEFAULT_GROUPS;
 use crate::graph::CompGraph;
+use crate::search::Parallelism;
 
 use super::fingerprint::Fnv;
 
@@ -39,10 +40,14 @@ pub struct PlanRequest {
     pub apply_sfb: bool,
     /// Profiler measurement noise (0.0 = exact).
     pub profile_noise: f64,
+    /// Tree-parallel search workers + virtual loss ([`crate::search`]).
+    /// `workers == 1` (the default) is the sequential engine.
+    pub parallelism: Parallelism,
 }
 
 impl PlanRequest {
-    /// A request with the default budget, seed 1, SFB on, no noise.
+    /// A request with the default budget, seed 1, SFB on, no noise, one
+    /// search worker.
     pub fn new(model: CompGraph, topology: Topology) -> Self {
         Self {
             model,
@@ -51,6 +56,7 @@ impl PlanRequest {
             seed: 1,
             apply_sfb: true,
             profile_noise: 0.0,
+            parallelism: Parallelism::default(),
         }
     }
 
@@ -74,6 +80,19 @@ impl PlanRequest {
         self
     }
 
+    /// Run the search with `workers` tree-parallel MCTS workers
+    /// (default virtual loss).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.parallelism.workers = workers.max(1);
+        self
+    }
+
+    /// Full parallelism control (worker count + virtual loss).
+    pub fn parallelism(mut self, parallelism: Parallelism) -> Self {
+        self.parallelism = parallelism;
+        self
+    }
+
     /// The coordinator-level configuration this request lowers to.
     pub fn search_config(&self) -> SearchConfig {
         SearchConfig {
@@ -82,11 +101,20 @@ impl PlanRequest {
             seed: self.seed,
             apply_sfb: self.apply_sfb,
             profile_noise: self.profile_noise,
+            parallelism: self.parallelism,
         }
     }
 
     /// Fingerprint of the search knobs, folded with the backend token
     /// into the cache key's config component.
+    ///
+    /// The default (sequential) parallelism hashes *nothing*, so
+    /// `workers == 1` requests keep the pre-parallelism fingerprints and
+    /// their plans stay byte-identical to the sequential engine's.  Any
+    /// non-default parallelism is folded in: a `workers > 1` search
+    /// explores an OS-schedule-dependent tree, and its cached plan must
+    /// never be served for a deterministic sequential request (or for a
+    /// different worker count).
     pub fn config_fingerprint(&self, backend_token: u64) -> u64 {
         let mut h = Fnv::new();
         h.write_usize(self.budget.iterations);
@@ -95,6 +123,10 @@ impl PlanRequest {
         h.write_bool(self.apply_sfb);
         h.write_f64(self.profile_noise);
         h.write_u64(backend_token);
+        if self.parallelism != Parallelism::default() {
+            h.write_usize(self.parallelism.workers);
+            h.write_f64(self.parallelism.virtual_loss);
+        }
         h.finish()
     }
 
@@ -143,6 +175,29 @@ mod tests {
         assert_ne!(base, req().budget(151, DEFAULT_GROUPS).config_fingerprint(1));
         assert_ne!(base, req().sfb(false).config_fingerprint(1));
         assert_ne!(base, req().config_fingerprint(2), "backend token matters");
+    }
+
+    #[test]
+    fn parallelism_fingerprints_back_compatibly() {
+        // workers == 1 (the default) must not perturb the fingerprint:
+        // sequential plans keep their pre-parallelism cache identity.
+        let base = req().config_fingerprint(1);
+        assert_eq!(base, req().workers(1).config_fingerprint(1));
+        // Any parallel configuration partitions the cache.
+        assert_ne!(base, req().workers(4).config_fingerprint(1));
+        assert_ne!(
+            req().workers(2).config_fingerprint(1),
+            req().workers(4).config_fingerprint(1)
+        );
+        assert_ne!(
+            req().workers(4).config_fingerprint(1),
+            req()
+                .parallelism(Parallelism { workers: 4, virtual_loss: 2.0 })
+                .config_fingerprint(1)
+        );
+        // And the knob reaches the engine config.
+        assert_eq!(req().workers(4).search_config().parallelism.workers, 4);
+        assert_eq!(req().workers(0).search_config().parallelism.workers, 1);
     }
 
     #[test]

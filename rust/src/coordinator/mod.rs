@@ -19,6 +19,7 @@ use crate::graph::CompGraph;
 use crate::mcts::{Mcts, PriorProvider, SearchResult, UniformPrior};
 use crate::models;
 use crate::profile::{unique_gpus, CommModel, CostModel};
+use crate::search::{self, Parallelism, SearchProblem};
 use crate::sfb::{self, SfbPlan};
 use crate::strategy::{enumerate_actions, Strategy};
 use crate::util::{Rng, Stopwatch};
@@ -33,6 +34,8 @@ pub struct SearchConfig {
     pub apply_sfb: bool,
     /// Profiler measurement noise.
     pub profile_noise: f64,
+    /// Tree-parallel search workers + virtual loss ([`crate::search`]).
+    pub parallelism: Parallelism,
 }
 
 impl Default for SearchConfig {
@@ -43,6 +46,7 @@ impl Default for SearchConfig {
             seed: 1,
             apply_sfb: true,
             profile_noise: 0.0,
+            parallelism: Parallelism::default(),
         }
     }
 }
@@ -90,6 +94,13 @@ pub fn prepare(model: CompGraph, topo: &Topology, cfg: &SearchConfig) -> Prepare
 /// uniform priors.  (Callers wanting the full request/plan surface —
 /// caching, serialization, backend selection — should use
 /// [`crate::api::Planner`], which drives this engine.)
+///
+/// `cfg.parallelism` selects the engine: `workers == 1` runs the
+/// sequential [`Mcts`]; `workers > 1` runs the tree-parallel
+/// [`crate::search::run_search`] — for pure MCTS only, since a single
+/// injected `&mut dyn PriorProvider` cannot be split across workers
+/// (per-worker priors are the [`crate::api`] backends' job, which route
+/// GNN evaluations through the batched service instead).
 pub fn search_session(
     prep: &Prepared,
     topo: &Topology,
@@ -104,6 +115,28 @@ pub fn search_session(
         Some(prior) => {
             let mut mcts = Mcts::new(&low, actions.clone(), prior, cfg.seed);
             mcts.search(cfg.mcts_iterations)
+        }
+        None if cfg.parallelism.workers > 1 => {
+            let prob = SearchProblem {
+                gg: &prep.gg,
+                topo,
+                cost: &prep.cost,
+                comm: &prep.comm,
+                actions: &actions,
+            };
+            let priors: Vec<UniformPrior> =
+                (0..cfg.parallelism.workers).map(|_| UniformPrior).collect();
+            search::run_search(
+                &prob,
+                &low,
+                priors,
+                cfg.mcts_iterations,
+                cfg.seed,
+                cfg.parallelism,
+                true,
+                false,
+            )
+            .result
         }
         None => {
             let mut mcts = Mcts::new(&low, actions.clone(), UniformPrior, cfg.seed);
@@ -223,6 +256,7 @@ impl<'a> Trainer<'a> {
             seed: self.rng.next_u64(),
             apply_sfb: false,
             profile_noise: 0.0,
+            parallelism: Default::default(),
         };
         let prep = prepare(model, &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
@@ -314,6 +348,7 @@ mod tests {
             seed: 3,
             apply_sfb: true,
             profile_noise: 0.0,
+            parallelism: Default::default(),
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let res = search_session(&prep, &topo, None, &cfg);
@@ -332,6 +367,7 @@ mod tests {
             seed: 4,
             apply_sfb: true,
             profile_noise: 0.0,
+            parallelism: Default::default(),
         };
         let prep = prepare(models::transformer(8, 0.25), &topo, &cfg);
         let res = search_session(&prep, &topo, None, &cfg);
@@ -359,6 +395,7 @@ mod tests {
             seed: 5,
             apply_sfb: false,
             profile_noise: 0.0,
+            parallelism: Default::default(),
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let actions = enumerate_actions(&topo);

@@ -45,6 +45,7 @@
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::{DeviceId, Topology};
 use crate::graph::grouping::GroupGraph;
@@ -143,7 +144,9 @@ pub struct Lowering<'a> {
     pub order: Vec<usize>,
     frag: Fragments,
     masks: RefCell<HashMap<u16, Rc<MaskInfo>>>,
-    memo: RefCell<MemoTable>,
+    /// Shared concurrent transposition table: per-worker `Lowering`s of a
+    /// parallel search clone this `Arc` so outcomes are pooled.
+    memo: Arc<MemoTable>,
     buffers: RefCell<EvalBuffers>,
     dp_cache: Cell<f64>,
 }
@@ -154,6 +157,20 @@ impl<'a> Lowering<'a> {
         topo: &'a Topology,
         cost: &'a CostModel,
         comm: &'a CommModel,
+    ) -> Self {
+        Self::with_memo(gg, topo, cost, comm, Arc::new(MemoTable::new()))
+    }
+
+    /// Build a lowering that shares `memo` with other lowerings — how the
+    /// tree-parallel search workers of [`crate::search`] pool their
+    /// evaluation outcomes (each worker owns a `Lowering`, all of them one
+    /// table).
+    pub fn with_memo(
+        gg: &'a GroupGraph,
+        topo: &'a Topology,
+        cost: &'a CostModel,
+        comm: &'a CommModel,
+        memo: Arc<MemoTable>,
     ) -> Self {
         let m = topo.num_groups();
         let k = gg.num_groups();
@@ -194,7 +211,7 @@ impl<'a> Lowering<'a> {
             comm,
             frag,
             masks: RefCell::new(HashMap::new()),
-            memo: RefCell::new(MemoTable::new()),
+            memo,
             buffers: RefCell::new(EvalBuffers {
                 tg: TaskGraph::new(0),
                 sim: Simulator::new(),
@@ -228,12 +245,24 @@ impl<'a> Lowering<'a> {
 
     /// (hits, misses) of the evaluation transposition table.
     pub fn memo_stats(&self) -> (u64, u64) {
-        self.memo.borrow().stats()
+        self.memo.stats()
+    }
+
+    /// Hits / (hits + misses) of the transposition table (0.0 when it
+    /// has never been probed).
+    pub fn memo_hit_rate(&self) -> f64 {
+        self.memo.hit_rate()
     }
 
     /// Drop all cached evaluations (used by the cold/warm benchmarks).
     pub fn clear_memo(&self) {
-        self.memo.borrow_mut().clear();
+        self.memo.clear();
+    }
+
+    /// The shared transposition table, for per-worker lowerings built
+    /// through [`Lowering::with_memo`].
+    pub fn memo_handle(&self) -> Arc<MemoTable> {
+        Arc::clone(&self.memo)
     }
 
     /// Resolve a (possibly partial) strategy to per-group effective
@@ -289,11 +318,11 @@ impl<'a> Lowering<'a> {
     pub fn evaluate(&self, strategy: &Strategy) -> SimOutcome {
         let acts = self.resolve(strategy);
         let key = self.signature(&acts, strategy);
-        if let Some(hit) = self.memo.borrow_mut().get(&key) {
+        if let Some(hit) = self.memo.get(&key) {
             return hit;
         }
         let out = self.lower_and_simulate(strategy, &acts, None);
-        self.memo.borrow_mut().insert(key, out.clone());
+        self.memo.insert(key, out.clone());
         out
     }
 

@@ -1,4 +1,4 @@
-//! Transposition table for strategy evaluations.
+//! Concurrent transposition table for strategy evaluations.
 //!
 //! MCTS revisits the same *effective* deployment many times: the
 //! footnote-2 completion rule maps every partial strategy to a complete
@@ -15,65 +15,139 @@
 //! stored by value and cloned out; a [`SimOutcome`] is a few short
 //! vectors, which is 1–2 orders of magnitude cheaper than re-lowering
 //! and re-simulating.
+//!
+//! ## One implementation for both execution modes
+//!
+//! The table is **sharded and `RwLock`-striped** so the sequential
+//! search path and the tree-parallel workers of [`crate::search`] share
+//! a single implementation: a key hashes (FNV-1a over its words) to one
+//! of [`MEMO_SHARDS`] stripes, lookups take that stripe's read lock,
+//! inserts its write lock, and the hit/miss counters are relaxed
+//! atomics.  Uncontended, a stripe lock is a single atomic operation —
+//! the sequential path pays nothing measurable for the sharing — while
+//! under K workers the stripes keep evaluation traffic from serializing
+//! on one lock.  `dist::Lowering` holds the table behind an `Arc`
+//! ([`Lowering::memo_handle`](super::Lowering::memo_handle)), so per-worker
+//! lowerings can pool their outcomes.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 use super::lower::SimOutcome;
 
-/// Hard cap on cached entries; the table is cleared wholesale when it
-/// fills (searches are bounded, so eviction order is irrelevant — this
-/// only guards pathological long-lived `Lowering` instances).
+/// Number of independently locked stripes.  A power of two comfortably
+/// above any realistic worker count, small enough that `len`/`clear`
+/// sweeps stay trivial.
+pub const MEMO_SHARDS: usize = 16;
+
+/// Hard cap on cached entries across all shards; a shard is cleared
+/// wholesale when its share fills (searches are bounded, so eviction
+/// order is irrelevant — this only guards pathological long-lived
+/// `Lowering` instances).
 pub const MEMO_CAPACITY: usize = 1 << 16;
 
+const SHARD_CAPACITY: usize = MEMO_CAPACITY / MEMO_SHARDS;
+
+/// FNV-1a over the signature words, used only to pick a stripe (the
+/// in-shard `HashMap` hashes with its own keyed hasher).
+fn shard_index(key: &[u32]) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in key {
+        h ^= w as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // High bits are the best-mixed ones for a non-power-of-two-agnostic
+    // reduction; MEMO_SHARDS is a power of two so a mask would also do.
+    (h >> 32) as usize % MEMO_SHARDS
+}
+
 #[derive(Default)]
-pub struct MemoTable {
+struct Shard {
     map: HashMap<Box<[u32]>, SimOutcome>,
-    hits: u64,
-    misses: u64,
+}
+
+/// Sharded, lock-striped evaluation cache with exact hit/miss
+/// accounting.  All methods take `&self`; clone an `Arc<MemoTable>` to
+/// share it across search workers.
+pub struct MemoTable {
+    shards: Vec<RwLock<Shard>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for MemoTable {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MemoTable {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            shards: (0..MEMO_SHARDS).map(|_| RwLock::new(Shard::default())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
     }
 
-    pub fn get(&mut self, key: &[u32]) -> Option<SimOutcome> {
-        match self.map.get(key) {
+    pub fn get(&self, key: &[u32]) -> Option<SimOutcome> {
+        let shard = self.shards[shard_index(key)].read().unwrap();
+        match shard.map.get(key) {
             Some(v) => {
-                self.hits += 1;
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(v.clone())
             }
             None => {
-                self.misses += 1;
+                self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
     }
 
-    pub fn insert(&mut self, key: Box<[u32]>, value: SimOutcome) {
-        if self.map.len() >= MEMO_CAPACITY {
-            self.map.clear();
+    pub fn insert(&self, key: Box<[u32]>, value: SimOutcome) {
+        let mut shard = self.shards[shard_index(&key)].write().unwrap();
+        if shard.map.len() >= SHARD_CAPACITY {
+            shard.map.clear();
         }
-        self.map.insert(key, value);
+        shard.map.insert(key, value);
     }
 
-    pub fn clear(&mut self) {
-        self.map.clear();
-        self.hits = 0;
-        self.misses = 0;
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.write().unwrap().map.clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.shards.iter().map(|s| s.read().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.shards.iter().all(|s| s.read().unwrap().map.is_empty())
     }
 
     /// (hits, misses) since construction or the last `clear`.
     pub fn stats(&self) -> (u64, u64) {
-        (self.hits, self.misses)
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Hits / (hits + misses), 0.0 when the table has never been probed.
+    pub fn hit_rate(&self) -> f64 {
+        let (hits, misses) = self.stats();
+        let total = hits + misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Entry count per stripe (test/diagnostic visibility into striping).
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.read().unwrap().map.len()).collect()
     }
 }
 
@@ -87,7 +161,7 @@ mod tests {
 
     #[test]
     fn hit_and_miss_accounting() {
-        let mut m = MemoTable::new();
+        let m = MemoTable::new();
         let key: Box<[u32]> = vec![1, 2, 3].into_boxed_slice();
         assert!(m.get(&key).is_none());
         m.insert(key.clone(), outcome(1.5));
@@ -95,11 +169,12 @@ mod tests {
         assert_eq!(got.time, 1.5);
         assert_eq!(m.stats(), (1, 1));
         assert_eq!(m.len(), 1);
+        assert!((m.hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
     fn distinct_keys_distinct_entries() {
-        let mut m = MemoTable::new();
+        let m = MemoTable::new();
         m.insert(vec![1].into_boxed_slice(), outcome(1.0));
         m.insert(vec![2].into_boxed_slice(), outcome(2.0));
         assert_eq!(m.get(&[1u32][..]).unwrap().time, 1.0);
@@ -108,11 +183,59 @@ mod tests {
 
     #[test]
     fn clear_resets_everything() {
-        let mut m = MemoTable::new();
+        let m = MemoTable::new();
         m.insert(vec![1].into_boxed_slice(), outcome(1.0));
         let _ = m.get(&[1u32][..]);
         m.clear();
         assert!(m.is_empty());
         assert_eq!(m.stats(), (0, 0));
+        assert_eq!(m.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let m = MemoTable::new();
+        for i in 0..256u32 {
+            m.insert(vec![i, i ^ 7, 3].into_boxed_slice(), outcome(i as f64));
+        }
+        let lens = m.shard_lens();
+        assert_eq!(lens.len(), MEMO_SHARDS);
+        assert_eq!(lens.iter().sum::<usize>(), 256);
+        let occupied = lens.iter().filter(|&&l| l > 0).count();
+        assert!(occupied > MEMO_SHARDS / 2, "striping degenerate: {lens:?}");
+    }
+
+    #[test]
+    fn concurrent_hit_miss_accounting_is_exact() {
+        // 8 threads × 40 rounds over 64 shared keys: every probe is either
+        // a hit or a miss (never lost), inserts never duplicate entries,
+        // and each key misses at least once before anyone can hit it.
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 40;
+        const KEYS: usize = 64;
+        let m = MemoTable::new();
+        let keys: Vec<Box<[u32]>> =
+            (0..KEYS as u32).map(|i| vec![i, i.wrapping_mul(31), 5].into_boxed_slice()).collect();
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let m = &m;
+                let keys = &keys;
+                s.spawn(move || {
+                    for round in 0..ROUNDS {
+                        for k in keys {
+                            match m.get(k) {
+                                Some(v) => assert!(v.time >= 0.0),
+                                None => m.insert(k.clone(), outcome(round as f64)),
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let (hits, misses) = m.stats();
+        assert_eq!(hits + misses, (THREADS * ROUNDS * KEYS) as u64);
+        assert!(misses >= KEYS as u64, "each key must miss at least once");
+        assert!(hits > 0, "steady state must hit");
+        assert_eq!(m.len(), KEYS);
     }
 }

@@ -26,7 +26,11 @@
 //! * [`memo`] — evaluations are memoized under a cheap **strategy
 //!   signature**: the per-group *effective* action vector after the
 //!   paper's footnote-2 completion rule, so distinct partial strategies
-//!   that complete to the same deployment share one cache entry.
+//!   that complete to the same deployment share one cache entry.  The
+//!   table is sharded and `RwLock`-striped with atomic counters — the
+//!   one implementation behind both the sequential engine and the
+//!   tree-parallel workers of [`crate::search`], which share it through
+//!   [`Lowering::memo_handle`].
 //! * per-group task *fragments* (summed linear batch-time models per
 //!   machine, the inter-group edge list, mask → device-set expansions)
 //!   are precomputed once in [`Lowering::new`] and stitched per strategy

@@ -59,6 +59,10 @@ struct Instance {
     /// Whether this instance carries the full tensor value (as opposed
     /// to a batch shard or a partial sum).
     full: bool,
+    /// Batch fraction this instance's output covers (1.0 when `full` or
+    /// when the tensor is not batch-sharded).  A same-device consumer may
+    /// read a shard directly only when its own fraction matches.
+    frac: f64,
 }
 
 struct Rewriter<'a> {
@@ -317,7 +321,8 @@ fn emit_replica(
         inputs,
     });
     rw.placement.push(dev);
-    rw.instances[i].push(Instance { id, device: dev, full });
+    let inst_frac = if full { 1.0 } else { frac };
+    rw.instances[i].push(Instance { id, device: dev, full, frac: inst_frac });
 }
 
 /// The already-emitted instance of `p` nearest to `dev` (same device if
@@ -387,10 +392,16 @@ fn resolve_input(
         return instance_near(rw, p, dev);
     }
     // Batch-split consumer: a same-device batch-split instance carries
-    // exactly this replica's shard; a same-device full non-partial tensor
-    // (variable, broadcast input) is readable directly.
+    // exactly this replica's shard *only when producer and consumer split
+    // the batch identically* — on mixed-mask replicate→replicate edges
+    // the fractions differ and the local shard is the wrong slice, so
+    // the tensor must be reassembled and re-sharded below.  A same-device
+    // full non-partial tensor (variable, broadcast input) is readable
+    // directly.
     if let Some(inst) = rw.instances[p].iter().find(|inst| inst.device == dev) {
-        if !inst.full || rw.orig.ops[p].splittability != Splittability::Sum {
+        let aligned_shard = !inst.full && (inst.frac - frac).abs() <= 1e-12;
+        let readable_full = inst.full && rw.orig.ops[p].splittability != Splittability::Sum;
+        if aligned_shard || readable_full {
             return inst.id;
         }
     }
@@ -483,6 +494,91 @@ mod tests {
             .sum();
         let ratio = (d.graph.total_flops() - extra) / m.total_flops();
         assert!((0.95..1.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn mismatched_batch_fractions_take_the_split_from_full_path() {
+        // Mixed-mask replicate→replicate edge (PR-2 review finding):
+        // producer group on mask 0b1 (4 V100 devices, even frac 1/4),
+        // consumer group on mask 0b11 (6 devices, even frac 1/6).  The
+        // consumer replicas on group-0 devices see a *same-device*
+        // producer shard of the wrong fraction and must re-shard through
+        // ConcatV2 + Split instead of reading the local shard directly.
+        use crate::cluster::presets::testbed;
+        use crate::graph::grouping::OpGroup;
+
+        let topo = testbed();
+        let mut m = CompGraph::new("toy", 8);
+        let a = m.add(crate::graph::ir::Op {
+            name: "A".into(),
+            op_type: "Conv2D",
+            kind: crate::graph::ir::OpKind::Compute,
+            flops: 1e9,
+            output_bytes: 4e6,
+            param_bytes: 0.0,
+            splittability: Splittability::Concat,
+            inputs: vec![],
+        });
+        let b = m.add(crate::graph::ir::Op {
+            name: "B".into(),
+            op_type: "Conv2D",
+            kind: crate::graph::ir::OpKind::Compute,
+            flops: 2e9,
+            output_bytes: 4e6,
+            param_bytes: 0.0,
+            splittability: Splittability::Concat,
+            inputs: vec![a],
+        });
+        let group = |ops: Vec<usize>, comp_time: f64| OpGroup {
+            ops,
+            comp_time,
+            param_bytes: 0.0,
+            activation_bytes: 4e6,
+            grad_pairs: vec![],
+            grad_bytes: 0.0,
+        };
+        let gg = GroupGraph {
+            groups: vec![group(vec![a], 0.5), group(vec![b], 1.0)],
+            edges: vec![vec![0.0, 4e6], vec![0.0, 0.0]],
+            assignment: vec![0, 1],
+            model_name: "toy".into(),
+            batch_size: 8,
+        };
+        let mut s = Strategy::empty(2);
+        s.slots[0] = Some(Action { mask: 0b1, option: ReplOption::AllReduce });
+        s.slots[1] = Some(Action { mask: 0b11, option: ReplOption::AllReduce });
+        let d = rewrite(&m, &gg, &topo, &s);
+        assert!(d.graph.check_acyclic());
+        // One reassembly of A, then one re-shard per consumer replica —
+        // including the four same-device (group-0) replicas that the
+        // pre-fix code wired straight to the mismatched 1/4 shard.
+        assert_eq!(d.inserted.get("ConcatV2").copied().unwrap_or(0), 1);
+        assert_eq!(d.inserted.get("Split").copied().unwrap_or(0), 6);
+        for op in &d.graph.ops {
+            if op.name.starts_with("B/rep") {
+                assert_eq!(op.inputs.len(), 1, "{}", op.name);
+                let input = &d.graph.ops[op.inputs[0]];
+                assert_eq!(
+                    input.op_type, "Split",
+                    "{} must read a re-shard, got {}",
+                    op.name, input.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matching_fractions_still_read_the_local_shard() {
+        // Same-mask DP edges must keep the zero-copy local read: no
+        // Split/Concat machinery on plain data parallelism.
+        let (m, gg, topo) = setup();
+        let s = Strategy::uniform(
+            gg.num_groups(),
+            Action { mask: 0b11, option: ReplOption::AllReduce },
+        );
+        let d = rewrite(&m, &gg, &topo, &s);
+        assert!(d.inserted.get("Split").is_none(), "{:?}", d.inserted);
+        assert!(d.inserted.get("ConcatV2").is_none(), "{:?}", d.inserted);
     }
 
     #[test]

@@ -39,6 +39,14 @@
 //! * **Monte-Carlo tree search** ([`mcts`]) over per-op-group placement +
 //!   replication decisions, guided through its [`mcts::PriorProvider`]
 //!   injection point,
+//! * the **parallel search engine** ([`search`]): tree storage (arena +
+//!   atomic edge statistics) split from traversal, so N tree-parallel
+//!   workers with virtual loss share one tree, one concurrent
+//!   evaluation memo table and the batched GNN evaluator.  Request it
+//!   with `PlanRequest::workers(K)` or `tag search --workers K`;
+//!   `workers == 1` is byte-identical to the sequential engine, K > 1
+//!   is seed-stable in its budgets/streams but explores an
+//!   OS-schedule-dependent tree (see [`search`] for the contract),
 //! * a **discrete-event simulator** ([`sim`]) that provides rewards and
 //!   runtime-feedback features,
 //! * a **sufficient-factor-broadcasting optimizer** ([`sfb`]) that solves a
@@ -67,6 +75,7 @@ pub mod models;
 pub mod partition;
 pub mod profile;
 pub mod runtime;
+pub mod search;
 pub mod sfb;
 pub mod sim;
 pub mod strategy;

@@ -10,15 +10,19 @@
 //!   tag search --model VGG19 --topology testbed --iters 200 --scale 0.5
 //!   tag search --model BERT-Small --topology random:42 --gnn artifacts/params_init.bin
 //!   tag search --model VGG19 --out plan.json     # persist the plan
+//!   tag search --model VGG19 --workers=8         # tree-parallel MCTS
 //!   tag train --games 30 --steps 4 --out artifacts/params_trained.bin
 //!   tag baselines --model InceptionV3 --topology testbed
 //!
 //! Flags accept both `--key value` and `--key=value`; values may start
-//! with `-` (e.g. `--scale -0.5`).
+//! with `-` (e.g. `--scale -0.5`).  `--workers=K` runs K tree-parallel
+//! search workers over a shared tree (K=1, the default, is the exact
+//! sequential engine; K>1 is seed-stable but schedule-dependent —
+//! `--vloss` tunes the virtual-loss penalty).
 
 use tag::api::{
-    BaselineSweepBackend, DeploymentPlan, GnnMctsBackend, PlanRequest, Planner,
-    BASELINE_NAMES,
+    BaselineSweepBackend, DeploymentPlan, GnnMctsBackend, Parallelism, PlanRequest,
+    Planner, BASELINE_NAMES,
 };
 use tag::cluster::{generator, presets, Topology};
 use tag::coordinator::Trainer;
@@ -79,6 +83,10 @@ fn request_from(args: &Args) -> PlanRequest {
         .seed(args.num("seed", 1))
         .sfb(!args.flag("no-sfb"))
         .profile_noise(args.num("noise", 0.0))
+        .parallelism(Parallelism {
+            workers: args.num("workers", 1usize).max(1),
+            virtual_loss: args.num("vloss", 1.0),
+        })
 }
 
 fn describe_strategy(plan: &DeploymentPlan, topo: &Topology) {

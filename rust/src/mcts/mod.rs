@@ -12,8 +12,18 @@
 //! for "pure MCTS").  Leaf evaluation simulates the partial strategy
 //! (undecided groups copy the most expensive decided group, footnote 2);
 //! the reward is the speed-up over DP-NCCL, or −1 on OOM.
+//!
+//! Since PR 3 the tree *storage* (arena + atomic per-edge statistics)
+//! lives in [`crate::search::tree`] and the *traversal* loop in
+//! [`crate::search::worker`]; [`Mcts`] here is the sequential engine —
+//! one inline [`Worker`](crate::search::Worker) over a private tree.
+//! The tree-parallel engine ([`crate::search::run_search`]) runs the
+//! same traversal with K workers over one shared tree and is
+//! byte-identical to this one at `workers == 1`.
 
 use crate::dist::{Lowering, SimOutcome};
+use crate::search::worker::{finish_result, harvest_examples, Worker};
+use crate::search::SearchTree;
 use crate::strategy::{Action, Strategy};
 use crate::util::Rng;
 
@@ -31,6 +41,14 @@ pub trait PriorProvider {
         outcome: &SimOutcome,
         actions: &[Action],
     ) -> Vec<f32>;
+
+    /// Named counters the provider wants surfaced in plan telemetry
+    /// (e.g. GNN evaluation counts).  Parallel search workers report
+    /// these before dropping the provider, since the provider itself
+    /// never leaves its worker thread.
+    fn metrics(&self) -> Vec<(String, f64)> {
+        Vec::new()
+    }
 }
 
 /// Forwarding impl so callers can inject a borrowed (possibly
@@ -46,6 +64,10 @@ impl<P: PriorProvider + ?Sized> PriorProvider for &mut P {
         actions: &[Action],
     ) -> Vec<f32> {
         (**self).priors(state, group, outcome, actions)
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        (**self).metrics()
     }
 }
 
@@ -74,16 +96,6 @@ pub const PUCT_C: f64 = 3.0;
 /// budgets).
 pub const TRAIN_VISIT_THRESHOLD: u32 = 32;
 
-struct Node {
-    /// Children indexed by action index; usize::MAX = unexpanded.
-    children: Vec<usize>,
-    n: Vec<u32>,
-    q: Vec<f64>,
-    prior: Vec<f32>,
-    /// Which op group this node decides.
-    depth: usize,
-}
-
 /// A (state-features, visit-distribution) example harvested for GNN
 /// training.
 pub struct TrainExample {
@@ -111,8 +123,8 @@ pub struct Mcts<'a, P: PriorProvider> {
     actions: Vec<Action>,
     prior: P,
     rng: Rng,
-    nodes: Vec<Node>,
-    /// Action sequence per node (reconstruction path).
+    /// Private tree; same storage layout the parallel engine shares.
+    tree: SearchTree,
     dp_time: f64,
     pub collect_examples: bool,
     /// Probe every root action once before PUCT (on by default).  The
@@ -128,7 +140,7 @@ impl<'a, P: PriorProvider> Mcts<'a, P> {
             actions,
             prior,
             rng: Rng::new(seed),
-            nodes: Vec::new(),
+            tree: SearchTree::new(),
             dp_time,
             collect_examples: false,
             root_sweep: true,
@@ -141,216 +153,33 @@ impl<'a, P: PriorProvider> Mcts<'a, P> {
         &self.prior
     }
 
-    fn reward(&self, out: &SimOutcome) -> f64 {
-        if out.oom {
-            return -1.0;
-        }
-        self.dp_time / out.time - 1.0
-    }
-
-    /// Build the strategy corresponding to a path of action indices.
-    fn strategy_of(&self, path: &[usize]) -> Strategy {
-        let mut s = Strategy::empty(self.low.gg.num_groups());
-        for (d, &ai) in path.iter().enumerate() {
-            let g = self.low.order[d];
-            s.slots[g] = Some(self.actions[ai]);
-        }
-        s
-    }
-
-    fn new_node(&mut self, depth: usize, prior: Vec<f32>) -> usize {
-        let a = self.actions.len();
-        self.nodes.push(Node {
-            children: vec![usize::MAX; a],
-            n: vec![0; a],
-            q: vec![0.0; a],
-            prior,
-            depth,
-        });
-        self.nodes.len() - 1
-    }
-
     /// Run `iterations` of MCTS; returns the best complete strategy seen.
+    ///
+    /// This is one inline [`Worker`] — the identical traversal the
+    /// tree-parallel engine ([`crate::search::run_search`]) runs K of.
     pub fn search(&mut self, iterations: usize) -> SearchResult {
-        let ng = self.low.gg.num_groups();
-        let na = self.actions.len();
-
-        // Root node priors from the empty strategy.
-        let empty = Strategy::empty(ng);
-        let out0 = self.low.evaluate(&empty);
-        let root_group = self.low.order[0];
-        let pri0 = self.prior.priors(&empty, root_group, &out0, &self.actions);
-        let root = self.new_node(0, normalize(&pri0));
-
-        let mut best: Option<(f64, Strategy, f64)> = None; // (reward, strat, time)
-        let mut first_beats_dp = None;
-        let mut examples = Vec::new();
-        let mut it = 0usize;
-
-        // ---- root sweep: evaluate every root action once.  Because the
-        // footnote-2 completion rule copies the first decided group's
-        // action to all undecided groups, this probes each *uniform*
-        // strategy — giving the search the same coarse coverage a greedy
-        // one-shot baseline gets, before PUCT refines beyond it.
-        for a0 in 0..na {
-            if !self.root_sweep || it >= iterations {
-                break;
-            }
-            it += 1;
-            let strat = self.strategy_of(&[a0]);
-            let out = self.low.evaluate(&strat);
-            let r = self.reward(&out);
-            if !out.oom {
-                let better = best.as_ref().map_or(true, |(br, _, _)| r > *br);
-                if better {
-                    best = Some((r, strat.clone(), out.time));
-                }
-                if r > 1e-9 && first_beats_dp.is_none() {
-                    first_beats_dp = Some(it);
-                }
-            }
-            let nd = &mut self.nodes[root];
-            nd.n[a0] += 1;
-            nd.q[a0] = r;
+        let mut worker = Worker::new(
+            &self.tree,
+            self.low,
+            &self.actions,
+            &mut self.prior,
+            self.rng.clone(),
+            1.0,
+        );
+        worker.build_root();
+        if self.root_sweep {
+            worker.root_sweep(iterations);
         }
-
-        while it < iterations {
-            it += 1;
-            // ---- selection
-            let mut node = root;
-            let mut path: Vec<usize> = Vec::new();
-            loop {
-                let nd = &self.nodes[node];
-                if nd.depth >= ng {
-                    break;
-                }
-                let total_n: u32 = nd.n.iter().sum();
-                let mut best_a = 0;
-                let mut best_u = f64::NEG_INFINITY;
-                for a in 0..na {
-                    let u = nd.q[a]
-                        + PUCT_C
-                            * nd.prior[a] as f64
-                            * ((total_n as f64).sqrt() / (1.0 + nd.n[a] as f64));
-                    // Deterministic jitter for exact ties.
-                    let u = u + 1e-12 * self.rng.next_f64();
-                    if u > best_u {
-                        best_u = u;
-                        best_a = a;
-                    }
-                }
-                path.push(best_a);
-                let child = self.nodes[node].children[best_a];
-                if child == usize::MAX {
-                    break; // unexpanded edge -> expand + evaluate
-                }
-                node = child;
-            }
-
-            // ---- expansion + evaluation
-            let strat = self.strategy_of(&path);
-            let out = self.low.evaluate(&strat);
-            let r = self.reward(&out);
-            let depth = path.len();
-            if depth >= 1 {
-                // Expand the child if the strategy is still partial.
-                if depth < ng {
-                    let g = self.low.order[depth];
-                    let pri = self.prior.priors(&strat, g, &out, &self.actions);
-                    let child = self.new_node(depth, normalize(&pri));
-                    // Re-walk to attach (node ids shifted by new_node).
-                    let mut cur = root;
-                    for &ai in &path[..depth - 1] {
-                        cur = self.nodes[cur].children[ai];
-                    }
-                    self.nodes[cur].children[path[depth - 1]] = child;
-                } else {
-                    // Complete strategy: attach a terminal sentinel so the
-                    // tree doesn't re-expand; reuse the node itself.
-                }
-            }
-
-            // Track the best *complete-by-completion-rule* outcome.
-            if !out.oom {
-                let better = best.as_ref().map_or(true, |(br, _, _)| r > *br);
-                if better {
-                    best = Some((r, strat.clone(), out.time));
-                }
-                if r > 1e-9 && first_beats_dp.is_none() {
-                    first_beats_dp = Some(it);
-                }
-            }
-
-            // ---- back-propagation
-            let mut cur = root;
-            for &ai in &path {
-                let nd = &mut self.nodes[cur];
-                nd.n[ai] += 1;
-                let n = nd.n[ai] as f64;
-                nd.q[ai] += (r - nd.q[ai]) / n;
-                let next = nd.children[ai];
-                if next == usize::MAX {
-                    break;
-                }
-                cur = next;
-            }
-        }
-        let iterations = it;
-
-        // ---- harvest training examples from well-visited nodes.
-        if self.collect_examples {
-            let mut stack = vec![(root, Vec::<usize>::new())];
-            while let Some((ni, path)) = stack.pop() {
-                let nd = &self.nodes[ni];
-                let total: u32 = nd.n.iter().sum();
-                if total >= TRAIN_VISIT_THRESHOLD && nd.depth < ng {
-                    // pi = softmax(ln N) = N / sum N over visited actions.
-                    let pi: Vec<f32> = nd
-                        .n
-                        .iter()
-                        .map(|&c| c as f32 / total as f32)
-                        .collect();
-                    let strat = self.strategy_of(&path);
-                    let out = self.low.evaluate(&strat);
-                    examples.push(TrainExample {
-                        strategy: strat,
-                        group: self.low.order[nd.depth],
-                        outcome: out,
-                        pi,
-                    });
-                }
-                for (ai, &ch) in nd.children.iter().enumerate() {
-                    if ch != usize::MAX {
-                        let mut p = path.clone();
-                        p.push(ai);
-                        stack.push((ch, p));
-                    }
-                }
-            }
-        }
-
-        let (best_reward, best_strat, best_time) = best.unwrap_or_else(|| {
-            let s = Strategy::dp_allreduce(ng, self.low.topo);
-            (0.0, s, self.dp_time)
-        });
-        SearchResult {
-            best: best_strat,
-            best_time,
-            best_reward,
-            dp_time: self.dp_time,
-            iterations,
-            first_beats_dp,
-            examples,
-        }
+        worker.run(iterations);
+        let examples = if self.collect_examples {
+            harvest_examples(&self.tree, worker.root, self.low, &self.actions)
+        } else {
+            Vec::new()
+        };
+        let Worker { rng, best, first_beats_dp, iterations: consumed, .. } = worker;
+        self.rng = rng;
+        finish_result(self.low, best, self.dp_time, consumed, first_beats_dp, examples)
     }
-}
-
-fn normalize(p: &[f32]) -> Vec<f32> {
-    let s: f32 = p.iter().sum();
-    if s <= 0.0 {
-        return vec![1.0 / p.len() as f32; p.len()];
-    }
-    p.iter().map(|x| x / s).collect()
 }
 
 #[cfg(test)]

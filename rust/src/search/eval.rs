@@ -1,0 +1,95 @@
+//! GNN leaf evaluation for parallel workers, routed through the
+//! dynamic-batching evaluation service.
+//!
+//! PJRT executables are not `Send`, so a parallel GNN-guided search
+//! keeps the compiled network on the thread that owns it and runs
+//! [`coordinator::batch::serve`](crate::coordinator::batch::serve)
+//! there; each worker holds a [`BatchedGnnPrior`] — an
+//! [`EvalClient`] plus a per-worker [`FeatureBuilder`] and prior cache —
+//! and blocks on the reply channel while the evaluator coalesces
+//! concurrent requests into single batched PJRT executions.  This is
+//! the wiring the batching service was built for; the smoothing and
+//! cache semantics mirror [`GnnPrior`](crate::gnn::GnnPrior) so the
+//! sequential and batched paths score candidates identically.
+
+use std::collections::HashMap;
+
+use crate::coordinator::batch::EvalClient;
+use crate::dist::SimOutcome;
+use crate::gnn::FeatureBuilder;
+use crate::mcts::PriorProvider;
+use crate::strategy::{Action, Strategy};
+
+/// A [`PriorProvider`] that evaluates positions through the batched
+/// evaluation service instead of owning a `GnnService`.
+pub struct BatchedGnnPrior<'a> {
+    client: EvalClient,
+    builder: FeatureBuilder<'a>,
+    /// Per-worker prior cache keyed on (decided slots, next group).
+    cache: HashMap<(Vec<u32>, usize), Vec<f32>>,
+    /// Positions actually sent to the evaluator.
+    pub evals: usize,
+    /// Requests served from the local cache.
+    pub cache_hits: usize,
+}
+
+impl<'a> BatchedGnnPrior<'a> {
+    pub fn new(client: EvalClient, builder: FeatureBuilder<'a>) -> Self {
+        Self { client, builder, cache: HashMap::new(), evals: 0, cache_hits: 0 }
+    }
+
+    fn key(strategy: &Strategy, group: usize) -> (Vec<u32>, usize) {
+        let slots: Vec<u32> = strategy
+            .slots
+            .iter()
+            .map(|s| match s {
+                None => u32::MAX,
+                Some(a) => (a.mask as u32) << 2 | a.option.index() as u32,
+            })
+            .collect();
+        (slots, group)
+    }
+}
+
+impl PriorProvider for BatchedGnnPrior<'_> {
+    fn priors(
+        &mut self,
+        state: &Strategy,
+        group: usize,
+        outcome: &SimOutcome,
+        actions: &[Action],
+    ) -> Vec<f32> {
+        let key = Self::key(state, group);
+        if let Some(hit) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            return hit[..actions.len()].to_vec();
+        }
+        let pos = self.builder.build(state, outcome, group);
+        self.evals += 1;
+        match self.client.eval(pos) {
+            Some(mut full) if full.len() >= actions.len() => {
+                // Smooth with a uniform component (AlphaZero-style), as
+                // the in-process GnnPrior does: a confidently-wrong prior
+                // must not starve the PUCT exploration term.
+                let eps = 0.25f32;
+                let u = 1.0 / actions.len() as f32;
+                for p in full.iter_mut().take(actions.len()) {
+                    *p = (1.0 - eps) * *p + eps * u;
+                }
+                let out = full[..actions.len()].to_vec();
+                self.cache.insert(key, full);
+                out
+            }
+            // Evaluator gone or shape mismatch: degrade to uniform
+            // rather than aborting the search.
+            _ => vec![1.0 / actions.len() as f32; actions.len()],
+        }
+    }
+
+    fn metrics(&self) -> Vec<(String, f64)> {
+        vec![
+            ("gnn_evals".to_string(), self.evals as f64),
+            ("eval_cache_hits".to_string(), self.cache_hits as f64),
+        ]
+    }
+}

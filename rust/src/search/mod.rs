@@ -1,0 +1,427 @@
+//! Tree-parallel MCTS: N workers over one shared tree and one shared
+//! evaluation cache (paper §4.2.2's "the search finds a good deployment
+//! in seconds", made true on multi-core hosts).
+//!
+//! The subsystem splits the old monolithic search into three layers:
+//!
+//! * [`tree`] — storage: an append-only node arena with atomic per-edge
+//!   visit/value/virtual-loss statistics;
+//! * [`worker`] — traversal: the select/expand/evaluate/backup loop,
+//!   identical for one worker or many;
+//! * this module — the engine: [`run_search`] splits an iteration
+//!   budget over `K` workers (each with its own seeded RNG stream and
+//!   its own [`Lowering`], all sharing one tree and one
+//!   [`MemoTable`](crate::dist::memo::MemoTable)), merges their results
+//!   deterministically by worker index, and
+//!   [`run_search_with_service`] additionally runs a
+//!   caller-supplied service loop (the batched GNN evaluator of
+//!   [`crate::coordinator::batch`]) on the calling thread while the
+//!   workers search.
+//!
+//! ## Determinism contract
+//!
+//! * `workers == 1` — **byte-identical** to the sequential engine
+//!   ([`crate::mcts::Mcts`]): same RNG stream, same floating-point
+//!   arithmetic, same memo hit/miss sequence, so the assembled
+//!   [`DeploymentPlan`](crate::api::DeploymentPlan) JSON is identical
+//!   byte for byte (pinned by `rust/tests/api.rs`).
+//! * `workers > 1` — **seed-stable statistics**: the per-worker budgets
+//!   and RNG streams are pure functions of `(seed, worker index)`, the
+//!   total iteration count is exactly the requested budget, and the
+//!   merge is deterministic in worker order.  The explored tree itself
+//!   depends on OS scheduling (workers communicate through shared
+//!   visit counts), so the *strategy* found may vary between runs —
+//!   plans produced with `workers > 1` carry a distinct config
+//!   fingerprint so they never alias a sequential plan in the cache.
+
+pub mod eval;
+pub mod tree;
+pub mod worker;
+
+pub use eval::BatchedGnnPrior;
+pub use tree::{Node, SearchTree, UNEXPANDED};
+pub use worker::{harvest_examples, Worker};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+
+use crate::cluster::Topology;
+use crate::dist::Lowering;
+use crate::graph::grouping::GroupGraph;
+use crate::mcts::{PriorProvider, SearchResult};
+use crate::profile::{CommModel, CostModel};
+use crate::strategy::{Action, Strategy};
+use crate::util::Rng;
+
+use worker::finish_result;
+
+/// How a search spreads over threads.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Parallelism {
+    /// Tree-parallel MCTS workers; 1 = the sequential engine.
+    pub workers: usize,
+    /// Pessimistic reward charged per in-flight selection (virtual
+    /// loss).  Irrelevant at `workers == 1`.
+    pub virtual_loss: f64,
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Self { workers: 1, virtual_loss: 1.0 }
+    }
+}
+
+impl Parallelism {
+    /// `workers` tree-parallel workers with the default virtual loss.
+    pub fn workers(workers: usize) -> Self {
+        Self { workers: workers.max(1), ..Self::default() }
+    }
+
+    pub fn is_sequential(&self) -> bool {
+        self.workers <= 1
+    }
+}
+
+/// The prepared deployment problem a search runs on — everything a
+/// per-worker [`Lowering`] is built from.
+pub struct SearchProblem<'a> {
+    pub gg: &'a GroupGraph,
+    pub topo: &'a Topology,
+    pub cost: &'a CostModel,
+    pub comm: &'a CommModel,
+    pub actions: &'a [Action],
+}
+
+/// What the parallel engine returns on top of the merged
+/// [`SearchResult`].
+pub struct ParallelSearch {
+    pub result: SearchResult,
+    /// Iterations actually consumed per worker (sums to
+    /// `result.iterations`).
+    pub per_worker_iterations: Vec<usize>,
+    /// Per-worker prior metrics ([`PriorProvider::metrics`]), in worker
+    /// order — e.g. GNN evaluation and cache-hit counts.
+    pub prior_metrics: Vec<Vec<(String, f64)>>,
+}
+
+/// The RNG stream of worker `w`: worker 0 consumes the caller's seed
+/// exactly (the sequential stream), later workers a seed-derived mix.
+pub fn worker_seed(seed: u64, w: usize) -> u64 {
+    if w == 0 {
+        seed
+    } else {
+        seed ^ (w as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+    }
+}
+
+struct WorkerOutcome {
+    iterations: usize,
+    best: Option<(f64, Strategy, f64)>,
+    first_beats_dp: Option<usize>,
+    metrics: Vec<(String, f64)>,
+}
+
+/// Run a (possibly parallel) MCTS over `prob` with one prior provider
+/// per worker.  `low` is the calling thread's lowering — the inline
+/// engine at one worker, the pre-warm/harvest lowering otherwise; the
+/// spawned workers build their own lowerings sharing its memo table
+/// ([`Lowering::memo_handle`]).  See the module docs for the
+/// determinism contract.
+#[allow(clippy::too_many_arguments)]
+pub fn run_search<P: PriorProvider + Send>(
+    prob: &SearchProblem<'_>,
+    low: &Lowering<'_>,
+    priors: Vec<P>,
+    iterations: usize,
+    seed: u64,
+    par: Parallelism,
+    root_sweep: bool,
+    collect_examples: bool,
+) -> ParallelSearch {
+    run_search_with_service(
+        prob,
+        low,
+        priors,
+        iterations,
+        seed,
+        par,
+        root_sweep,
+        collect_examples,
+        || (),
+    )
+}
+
+/// [`run_search`] that additionally runs `service` on the calling
+/// thread while the workers search — the hook the batched GNN evaluator
+/// plugs into (the evaluator owns a non-`Send` PJRT executable, so it
+/// must stay put while workers submit positions over channels).
+///
+/// `service` must return once every worker-held client handle has been
+/// dropped; with a single worker the search runs to completion *before*
+/// `service` is invoked, so only pass a blocking service loop when
+/// `priors.len() > 1`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
+    prob: &SearchProblem<'_>,
+    low: &Lowering<'_>,
+    priors: Vec<P>,
+    iterations: usize,
+    seed: u64,
+    par: Parallelism,
+    root_sweep: bool,
+    collect_examples: bool,
+    service: S,
+) -> ParallelSearch {
+    let k = priors.len();
+    assert!(k >= 1, "run_search needs at least one prior provider");
+    // Static budget split: pure function of (iterations, k).
+    let budgets: Vec<usize> =
+        (0..k).map(|w| iterations / k + usize::from(w < iterations % k)).collect();
+
+    if k == 1 {
+        // Inline sequential path — byte-identical to `Mcts::search`.
+        let mut priors = priors;
+        let prior = priors.pop().expect("one prior");
+        let tree = SearchTree::new();
+        let mut w =
+            Worker::new(&tree, low, prob.actions, prior, Rng::new(seed), par.virtual_loss);
+        w.build_root();
+        if root_sweep {
+            w.root_sweep(iterations);
+        }
+        w.run(iterations);
+        let examples = if collect_examples {
+            harvest_examples(&tree, w.root, low, prob.actions)
+        } else {
+            Vec::new()
+        };
+        let metrics = w.prior.metrics();
+        let Worker { prior, best, first_beats_dp, iterations: consumed, dp_time, .. } = w;
+        drop(prior); // release any service client before running `service`
+        service();
+        let result = finish_result(low, best, dp_time, consumed, first_beats_dp, examples);
+        return ParallelSearch {
+            result,
+            per_worker_iterations: vec![consumed],
+            prior_metrics: vec![metrics],
+        };
+    }
+
+    // Pre-warm the shared table with the DP-NCCL reference on the calling
+    // thread: every worker needs dp_time for its reward scale, and one
+    // evaluation + K guaranteed hits beats K racing misses.
+    let dp_time = low.dp_time();
+    let memo = low.memo_handle();
+
+    let tree = SearchTree::new();
+    let root_idx = AtomicUsize::new(UNEXPANDED);
+    let barrier = Barrier::new(k);
+    let memo_ref = &memo;
+    let outcomes: Vec<WorkerOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = priors
+            .into_iter()
+            .enumerate()
+            .map(|(wi, prior)| {
+                let tree = &tree;
+                let root_idx = &root_idx;
+                let barrier = &barrier;
+                let budget = budgets[wi];
+                s.spawn(move || {
+                    let low = Lowering::with_memo(
+                        prob.gg,
+                        prob.topo,
+                        prob.cost,
+                        prob.comm,
+                        Arc::clone(memo_ref),
+                    );
+                    let mut w = Worker::new(
+                        tree,
+                        &low,
+                        prob.actions,
+                        prior,
+                        Rng::new(worker_seed(seed, wi)),
+                        par.virtual_loss,
+                    );
+                    if wi == 0 {
+                        // Root build AND root sweep both happen before the
+                        // barrier: record_sweep overwrites edge means, so
+                        // no concurrent PUCT backups may touch the root
+                        // until the sweep has finished.
+                        let idx = w.build_root();
+                        if root_sweep {
+                            w.root_sweep(budget);
+                        }
+                        root_idx.store(idx, Ordering::Release);
+                    }
+                    barrier.wait();
+                    if wi != 0 {
+                        w.set_root(root_idx.load(Ordering::Acquire));
+                    }
+                    w.run(budget);
+                    // Extract metrics, then drop the prior *inside* the
+                    // thread so service clients hang up before `service`
+                    // is expected to return.
+                    let metrics = w.prior.metrics();
+                    WorkerOutcome {
+                        iterations: w.iterations,
+                        best: w.best,
+                        first_beats_dp: w.first_beats_dp,
+                        metrics,
+                    }
+                })
+            })
+            .collect();
+        service();
+        handles.into_iter().map(|h| h.join().expect("search worker panicked")).collect()
+    });
+
+    // Deterministic merge in worker order: max reward wins, ties go to
+    // the lowest worker index; first_beats_dp is the minimum local
+    // index; iterations sum to the requested budget exactly.
+    let mut best: Option<(f64, Strategy, f64)> = None;
+    let mut first_beats_dp: Option<usize> = None;
+    let mut per_worker_iterations = Vec::with_capacity(k);
+    let mut prior_metrics = Vec::with_capacity(k);
+    let mut total = 0usize;
+    for o in outcomes {
+        total += o.iterations;
+        per_worker_iterations.push(o.iterations);
+        prior_metrics.push(o.metrics);
+        if let Some((r, s, t)) = o.best {
+            if best.as_ref().map_or(true, |(br, _, _)| r > *br) {
+                best = Some((r, s, t));
+            }
+        }
+        first_beats_dp = match (first_beats_dp, o.first_beats_dp) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
+    let examples = if collect_examples {
+        harvest_examples(&tree, root_idx.load(Ordering::Acquire), low, prob.actions)
+    } else {
+        Vec::new()
+    };
+    let result = finish_result(low, best, dp_time, total, first_beats_dp, examples);
+    ParallelSearch { result, per_worker_iterations, prior_metrics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::testbed;
+    use crate::graph::grouping::group_ops;
+    use crate::mcts::{Mcts, UniformPrior};
+    use crate::models;
+    use crate::profile::{unique_gpus, CommModel, CostModel};
+    use crate::strategy::enumerate_actions;
+
+    struct Setup {
+        topo: crate::cluster::Topology,
+        gg: GroupGraph,
+        cost: CostModel,
+        comm: CommModel,
+        actions: Vec<Action>,
+    }
+
+    fn setup() -> Setup {
+        let topo = testbed();
+        let m = models::vgg19(8, 0.25);
+        let cost = CostModel::profile(&m.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&m, &cost, 12, 7);
+        let comm = CommModel::fit(3);
+        let actions = enumerate_actions(&topo);
+        Setup { topo, gg, cost, comm, actions }
+    }
+
+    impl Setup {
+        fn problem(&self) -> SearchProblem<'_> {
+            SearchProblem {
+                gg: &self.gg,
+                topo: &self.topo,
+                cost: &self.cost,
+                comm: &self.comm,
+                actions: &self.actions,
+            }
+        }
+    }
+
+    #[test]
+    fn one_worker_reproduces_the_sequential_engine() {
+        let su = setup();
+        let low = Lowering::new(&su.gg, &su.topo, &su.cost, &su.comm);
+        let mut mcts = Mcts::new(&low, su.actions.clone(), UniformPrior, 5);
+        let seq = mcts.search(40);
+
+        let par_low = Lowering::new(&su.gg, &su.topo, &su.cost, &su.comm);
+        let par = run_search(
+            &su.problem(),
+            &par_low,
+            vec![UniformPrior],
+            40,
+            5,
+            Parallelism::default(),
+            true,
+            false,
+        );
+        assert_eq!(par.result.best, seq.best);
+        assert_eq!(par.result.best_time.to_bits(), seq.best_time.to_bits());
+        assert_eq!(par.result.best_reward.to_bits(), seq.best_reward.to_bits());
+        assert_eq!(par.result.iterations, seq.iterations);
+        assert_eq!(par.result.first_beats_dp, seq.first_beats_dp);
+        assert_eq!(par.per_worker_iterations, vec![40]);
+        // Same memo hit/miss sequence as the sequential lowering.
+        assert_eq!(par_low.memo_stats(), low.memo_stats());
+    }
+
+    #[test]
+    fn budgets_split_exactly_and_stats_merge() {
+        let su = setup();
+        let low = Lowering::new(&su.gg, &su.topo, &su.cost, &su.comm);
+        let par = run_search(
+            &su.problem(),
+            &low,
+            (0..4).map(|_| UniformPrior).collect(),
+            42,
+            9,
+            Parallelism::workers(4),
+            true,
+            false,
+        );
+        assert_eq!(par.per_worker_iterations.iter().sum::<usize>(), 42);
+        assert_eq!(par.per_worker_iterations.len(), 4);
+        // Static split: 42 = 11 + 11 + 10 + 10.
+        assert_eq!(par.per_worker_iterations, vec![11, 11, 10, 10]);
+        assert_eq!(par.result.iterations, 42);
+        assert!(par.result.best_time.is_finite() && par.result.best_time > 0.0);
+        // The merged best is never worse than the DP fallback.
+        assert!(par.result.best_reward >= 0.0 || par.result.best_time >= par.result.dp_time);
+    }
+
+    #[test]
+    fn parallel_workers_share_the_memo_table() {
+        let su = setup();
+        let low = Lowering::new(&su.gg, &su.topo, &su.cost, &su.comm);
+        let _ = run_search(
+            &su.problem(),
+            &low,
+            (0..4).map(|_| UniformPrior).collect(),
+            60,
+            3,
+            Parallelism::workers(4),
+            true,
+            false,
+        );
+        let (hits, misses) = low.memo_stats();
+        assert!(misses > 0, "cold table must miss");
+        assert!(hits > 0, "workers must reuse each other's evaluations");
+    }
+
+    #[test]
+    fn worker_seed_streams_are_stable() {
+        assert_eq!(worker_seed(7, 0), 7);
+        assert_ne!(worker_seed(7, 1), worker_seed(7, 2));
+        assert_eq!(worker_seed(7, 3), worker_seed(7, 3));
+    }
+}

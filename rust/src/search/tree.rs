@@ -1,0 +1,233 @@
+//! Shared MCTS tree storage: an append-only arena of nodes whose
+//! per-edge statistics are atomics, so N workers can select, expand and
+//! back-propagate concurrently without a global tree lock.
+//!
+//! Separation of concerns (the PR-3 refactor): this module owns *tree
+//! storage*; [`super::worker`] owns *traversal*.  The sequential engine
+//! ([`crate::mcts::Mcts`]) and the tree-parallel engine
+//! ([`super::run_search`]) are the same traversal over the same storage
+//! — one worker inline vs. K workers on threads.
+//!
+//! Concurrency design:
+//!
+//! * the arena is an `RwLock<Vec<Arc<Node>>>` — reads (every selection
+//!   step) take the read lock for an `Arc` clone, writes (one per
+//!   expansion) append;
+//! * per-edge visit counts `N`, running-mean values `Q` (stored as f64
+//!   bits in an `AtomicU64`, updated by a CAS loop that reproduces the
+//!   sequential `q += (r - q) / n` arithmetic exactly when uncontended)
+//!   and **virtual-loss** counters are atomics on the node;
+//! * child attachment is a compare-and-swap from [`UNEXPANDED`]: when
+//!   two workers race to expand one edge, the loser's freshly pushed
+//!   node simply stays unreachable (arena nodes are never reclaimed —
+//!   searches are bounded, the leak is a handful of nodes per race).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Sentinel child index: the edge has not been expanded.
+pub const UNEXPANDED: usize = usize::MAX;
+
+/// One tree vertex: the op group at `depth` is being decided; edge `a`
+/// carries the statistics of candidate action `a`.
+pub struct Node {
+    /// Which position of the decision order this node decides.
+    pub depth: usize,
+    /// Normalized prior probability per action (immutable after build).
+    pub prior: Vec<f32>,
+    children: Vec<AtomicUsize>,
+    n: Vec<AtomicU32>,
+    /// f64 bits of the running-mean reward per action.
+    q: Vec<AtomicU64>,
+    /// In-flight selections through this edge (virtual loss).
+    vloss: Vec<AtomicU32>,
+}
+
+impl Node {
+    pub fn new(depth: usize, prior: Vec<f32>, num_actions: usize) -> Self {
+        Self {
+            depth,
+            prior,
+            children: (0..num_actions).map(|_| AtomicUsize::new(UNEXPANDED)).collect(),
+            n: (0..num_actions).map(|_| AtomicU32::new(0)).collect(),
+            q: (0..num_actions).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
+            vloss: (0..num_actions).map(|_| AtomicU32::new(0)).collect(),
+        }
+    }
+
+    pub fn num_actions(&self) -> usize {
+        self.n.len()
+    }
+
+    pub fn child(&self, a: usize) -> usize {
+        self.children[a].load(Ordering::Acquire)
+    }
+
+    /// Attach `idx` as the child of edge `a`; `false` when another
+    /// worker expanded the edge first.
+    pub fn try_attach(&self, a: usize, idx: usize) -> bool {
+        self.children[a]
+            .compare_exchange(UNEXPANDED, idx, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    pub fn visits(&self, a: usize) -> u32 {
+        self.n[a].load(Ordering::Relaxed)
+    }
+
+    pub fn q(&self, a: usize) -> f64 {
+        f64::from_bits(self.q[a].load(Ordering::Relaxed))
+    }
+
+    pub fn vloss(&self, a: usize) -> u32 {
+        self.vloss[a].load(Ordering::Relaxed)
+    }
+
+    pub fn add_vloss(&self, a: usize) {
+        self.vloss[a].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn sub_vloss(&self, a: usize) {
+        self.vloss[a].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Record one completed evaluation on edge `a`: increment the visit
+    /// count and fold `reward` into the running mean.  Uncontended this
+    /// is bit-for-bit the sequential `n += 1; q += (r - q) / n`.
+    pub fn record(&self, a: usize, reward: f64) {
+        let n_after = self.n[a].fetch_add(1, Ordering::Relaxed) + 1;
+        loop {
+            let old_bits = self.q[a].load(Ordering::Relaxed);
+            let old = f64::from_bits(old_bits);
+            let new = old + (reward - old) / n_after as f64;
+            if self.q[a]
+                .compare_exchange_weak(
+                    old_bits,
+                    new.to_bits(),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                break;
+            }
+        }
+    }
+
+    /// Root-sweep write: one visit whose reward *replaces* the mean
+    /// (the sequential engine's `n += 1; q = r` probe semantics).
+    ///
+    /// The store is not a CAS fold, so concurrent [`Node::record`]
+    /// backups on the same edge would be erased — callers must finish
+    /// the sweep before any concurrent traversal touches this node
+    /// ([`crate::search::run_search`] orders this via its startup
+    /// barrier: worker 0 sweeps before the other workers are released).
+    pub fn record_sweep(&self, a: usize, reward: f64) {
+        self.n[a].fetch_add(1, Ordering::Relaxed);
+        self.q[a].store(reward.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Append-only node arena shared by all workers of one search.
+#[derive(Default)]
+pub struct SearchTree {
+    nodes: RwLock<Vec<Arc<Node>>>,
+}
+
+impl SearchTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a node; returns its arena index.
+    pub fn push(&self, node: Node) -> usize {
+        let mut nodes = self.nodes.write().unwrap();
+        nodes.push(Arc::new(node));
+        nodes.len() - 1
+    }
+
+    /// Cheap handle to a node (an `Arc` clone under the read lock).
+    pub fn get(&self, idx: usize) -> Arc<Node> {
+        Arc::clone(&self.nodes.read().unwrap()[idx])
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.read().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_matches_sequential_running_mean() {
+        let node = Node::new(0, vec![0.5, 0.5], 2);
+        let rewards = [0.25, -1.0, 0.5, 0.125];
+        let mut q_ref = 0.0f64;
+        for (i, &r) in rewards.iter().enumerate() {
+            node.record(0, r);
+            q_ref += (r - q_ref) / (i + 1) as f64;
+            assert_eq!(node.q(0).to_bits(), q_ref.to_bits(), "visit {i}");
+        }
+        assert_eq!(node.visits(0), rewards.len() as u32);
+        assert_eq!(node.visits(1), 0);
+    }
+
+    #[test]
+    fn sweep_overwrites_mean() {
+        let node = Node::new(0, vec![1.0], 1);
+        node.record_sweep(0, 0.75);
+        assert_eq!(node.q(0), 0.75);
+        assert_eq!(node.visits(0), 1);
+    }
+
+    #[test]
+    fn attach_is_first_writer_wins() {
+        let tree = SearchTree::new();
+        let root = tree.push(Node::new(0, vec![1.0], 1));
+        let a = tree.push(Node::new(1, vec![1.0], 1));
+        let b = tree.push(Node::new(1, vec![1.0], 1));
+        let root_node = tree.get(root);
+        assert_eq!(root_node.child(0), UNEXPANDED);
+        assert!(root_node.try_attach(0, a));
+        assert!(!root_node.try_attach(0, b), "second attach must lose");
+        assert_eq!(root_node.child(0), a);
+        assert_eq!(tree.len(), 3);
+    }
+
+    #[test]
+    fn virtual_loss_pairs_off() {
+        let node = Node::new(0, vec![1.0], 1);
+        node.add_vloss(0);
+        node.add_vloss(0);
+        assert_eq!(node.vloss(0), 2);
+        node.sub_vloss(0);
+        node.sub_vloss(0);
+        assert_eq!(node.vloss(0), 0);
+    }
+
+    #[test]
+    fn concurrent_records_never_lose_visits() {
+        let node = Node::new(0, vec![1.0; 4], 4);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let node = &node;
+                s.spawn(move || {
+                    for i in 0..500 {
+                        node.record(t, (i % 7) as f64 / 7.0 - 0.5);
+                    }
+                });
+            }
+        });
+        for a in 0..4 {
+            assert_eq!(node.visits(a), 500);
+            let q = node.q(a);
+            assert!(q.is_finite() && (-1.0..=1.0).contains(&q));
+        }
+    }
+}

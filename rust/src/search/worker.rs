@@ -1,0 +1,289 @@
+//! The MCTS traversal loop, decoupled from tree storage.
+//!
+//! A [`Worker`] owns a seeded [`Rng`], a prior provider and a reference
+//! to a (possibly shared) [`SearchTree`] plus a per-worker
+//! [`Lowering`]; it runs PUCT iterations — select, expand, evaluate,
+//! back-propagate — exactly as the sequential engine always has.  The
+//! only concurrency addition is **virtual loss**: while a worker's
+//! evaluation is in flight, every edge on its selection path carries a
+//! pending pessimistic visit, steering other workers toward different
+//! subtrees.  With one worker the virtual-loss counters are always zero
+//! at read time, so the single-worker trajectory (including RNG
+//! consumption and floating-point arithmetic) is byte-identical to the
+//! pre-refactor sequential search — the determinism contract
+//! `rust/tests/api.rs` pins.
+
+use std::sync::Arc;
+
+use crate::dist::{Lowering, SimOutcome};
+use crate::mcts::{PriorProvider, SearchResult, TrainExample, PUCT_C, TRAIN_VISIT_THRESHOLD};
+use crate::strategy::{Action, Strategy};
+use crate::util::Rng;
+
+use super::tree::{Node, SearchTree, UNEXPANDED};
+
+/// Normalize non-negative weights into a distribution (uniform fallback
+/// when everything is ~0).
+pub(crate) fn normalize(p: &[f32]) -> Vec<f32> {
+    let s: f32 = p.iter().sum();
+    if s <= 0.0 {
+        return vec![1.0 / p.len() as f32; p.len()];
+    }
+    p.iter().map(|x| x / s).collect()
+}
+
+/// Build the strategy corresponding to a path of action indices along
+/// the decision order.
+pub(crate) fn strategy_of_path(
+    low: &Lowering<'_>,
+    actions: &[Action],
+    path: &[usize],
+) -> Strategy {
+    let mut s = Strategy::empty(low.gg.num_groups());
+    for (d, &ai) in path.iter().enumerate() {
+        let g = low.order[d];
+        s.slots[g] = Some(actions[ai]);
+    }
+    s
+}
+
+/// One search worker: traversal state + per-worker outputs.
+pub struct Worker<'a, P: PriorProvider> {
+    pub tree: &'a SearchTree,
+    pub low: &'a Lowering<'a>,
+    pub actions: &'a [Action],
+    pub prior: P,
+    pub rng: Rng,
+    pub dp_time: f64,
+    /// Pessimistic reward charged per in-flight selection on an edge.
+    pub virtual_loss: f64,
+    /// Arena index of the shared root ([`UNEXPANDED`] until set).
+    pub root: usize,
+    /// Best feasible (reward, strategy, time) this worker has seen.
+    pub best: Option<(f64, Strategy, f64)>,
+    /// Local 1-based iteration at which DP-NCCL was first beaten.
+    pub first_beats_dp: Option<usize>,
+    /// Iterations this worker has consumed (root sweep included).
+    pub iterations: usize,
+}
+
+impl<'a, P: PriorProvider> Worker<'a, P> {
+    pub fn new(
+        tree: &'a SearchTree,
+        low: &'a Lowering<'a>,
+        actions: &'a [Action],
+        prior: P,
+        rng: Rng,
+        virtual_loss: f64,
+    ) -> Self {
+        let dp_time = low.dp_time();
+        Self {
+            tree,
+            low,
+            actions,
+            prior,
+            rng,
+            dp_time,
+            virtual_loss,
+            root: UNEXPANDED,
+            best: None,
+            first_beats_dp: None,
+            iterations: 0,
+        }
+    }
+
+    /// Evaluate the empty strategy, query the prior and push the root
+    /// node.  Exactly one worker per search does this; the others adopt
+    /// the index through [`Worker::set_root`].
+    pub fn build_root(&mut self) -> usize {
+        let ng = self.low.gg.num_groups();
+        let empty = Strategy::empty(ng);
+        let out0 = self.low.evaluate(&empty);
+        let root_group = self.low.order[0];
+        let pri0 = self.prior.priors(&empty, root_group, &out0, self.actions);
+        let idx = self.tree.push(Node::new(0, normalize(&pri0), self.actions.len()));
+        self.root = idx;
+        idx
+    }
+
+    pub fn set_root(&mut self, idx: usize) {
+        self.root = idx;
+    }
+
+    fn reward(&self, out: &SimOutcome) -> f64 {
+        if out.oom {
+            return -1.0;
+        }
+        self.dp_time / out.time - 1.0
+    }
+
+    fn note_outcome(&mut self, out: &SimOutcome, r: f64, strat: &Strategy) {
+        if !out.oom {
+            let better = self.best.as_ref().map_or(true, |(br, _, _)| r > *br);
+            if better {
+                self.best = Some((r, strat.clone(), out.time));
+            }
+            if r > 1e-9 && self.first_beats_dp.is_none() {
+                self.first_beats_dp = Some(self.iterations);
+            }
+        }
+    }
+
+    /// Probe every root action once before PUCT.  Because the footnote-2
+    /// completion rule copies the first decided group's action to all
+    /// undecided groups, this probes each *uniform* strategy — the same
+    /// coarse coverage a greedy one-shot baseline gets.
+    pub fn root_sweep(&mut self, budget: usize) {
+        let root = self.tree.get(self.root);
+        for a0 in 0..self.actions.len() {
+            if self.iterations >= budget {
+                break;
+            }
+            self.iterations += 1;
+            let strat = strategy_of_path(self.low, self.actions, &[a0]);
+            let out = self.low.evaluate(&strat);
+            let r = self.reward(&out);
+            self.note_outcome(&out, r, &strat);
+            root.record_sweep(a0, r);
+        }
+    }
+
+    /// Run PUCT iterations until `budget` is exhausted.
+    pub fn run(&mut self, budget: usize) {
+        let ng = self.low.gg.num_groups();
+        let na = self.actions.len();
+        while self.iterations < budget {
+            self.iterations += 1;
+
+            // ---- selection (virtual loss marks the path in flight)
+            let mut visited: Vec<(Arc<Node>, usize)> = Vec::new();
+            let mut node = self.tree.get(self.root);
+            loop {
+                if node.depth >= ng {
+                    break;
+                }
+                let total: u32 = (0..na).map(|a| node.visits(a) + node.vloss(a)).sum();
+                let mut best_a = 0;
+                let mut best_u = f64::NEG_INFINITY;
+                for a in 0..na {
+                    let n_a = node.visits(a);
+                    let vl = node.vloss(a);
+                    // Each pending visit counts as a `-virtual_loss`
+                    // reward folded into the mean; vl == 0 (always true
+                    // single-worker) leaves q bit-exact.
+                    let q = if vl == 0 {
+                        node.q(a)
+                    } else {
+                        (node.q(a) * n_a as f64 - self.virtual_loss * vl as f64)
+                            / (n_a + vl) as f64
+                    };
+                    let u = q
+                        + PUCT_C
+                            * node.prior[a] as f64
+                            * ((total as f64).sqrt() / (1.0 + (n_a + vl) as f64));
+                    // Deterministic jitter for exact ties.
+                    let u = u + 1e-12 * self.rng.next_f64();
+                    if u > best_u {
+                        best_u = u;
+                        best_a = a;
+                    }
+                }
+                node.add_vloss(best_a);
+                let child = node.child(best_a);
+                visited.push((node, best_a));
+                if child == UNEXPANDED {
+                    break; // unexpanded edge -> expand + evaluate
+                }
+                node = self.tree.get(child);
+            }
+            let path: Vec<usize> = visited.iter().map(|(_, a)| *a).collect();
+
+            // ---- expansion + evaluation
+            let strat = strategy_of_path(self.low, self.actions, &path);
+            let out = self.low.evaluate(&strat);
+            let r = self.reward(&out);
+            let depth = path.len();
+            if depth >= 1 && depth < ng {
+                let g = self.low.order[depth];
+                let pri = self.prior.priors(&strat, g, &out, self.actions);
+                let child = self.tree.push(Node::new(depth, normalize(&pri), na));
+                let (parent, pa) = visited.last().expect("non-empty path");
+                // Racing expansions: the loser's node stays unreachable.
+                let _ = parent.try_attach(*pa, child);
+            }
+
+            self.note_outcome(&out, r, &strat);
+
+            // ---- back-propagation + virtual-loss release (root -> leaf)
+            for (nd, a) in &visited {
+                nd.record(*a, r);
+                nd.sub_vloss(*a);
+            }
+        }
+    }
+}
+
+/// Harvest (features, visit-distribution) training examples from every
+/// well-visited node — shared by the sequential engine and the parallel
+/// merger (called after all workers have joined).
+pub fn harvest_examples(
+    tree: &SearchTree,
+    root: usize,
+    low: &Lowering<'_>,
+    actions: &[Action],
+) -> Vec<TrainExample> {
+    let ng = low.gg.num_groups();
+    let mut examples = Vec::new();
+    let mut stack = vec![(root, Vec::<usize>::new())];
+    while let Some((ni, path)) = stack.pop() {
+        let nd = tree.get(ni);
+        let na = nd.num_actions();
+        let total: u32 = (0..na).map(|a| nd.visits(a)).sum();
+        if total >= TRAIN_VISIT_THRESHOLD && nd.depth < ng {
+            // pi = N / sum N over visited actions.
+            let pi: Vec<f32> = (0..na).map(|a| nd.visits(a) as f32 / total as f32).collect();
+            let strat = strategy_of_path(low, actions, &path);
+            let out = low.evaluate(&strat);
+            examples.push(TrainExample {
+                strategy: strat,
+                group: low.order[nd.depth],
+                outcome: out,
+                pi,
+            });
+        }
+        for a in 0..na {
+            let ch = nd.child(a);
+            if ch != UNEXPANDED {
+                let mut p = path.clone();
+                p.push(a);
+                stack.push((ch, p));
+            }
+        }
+    }
+    examples
+}
+
+/// Fold a finished worker set into a [`SearchResult`] (also used by the
+/// single-worker sequential path, where it is the identity assembly).
+pub(crate) fn finish_result(
+    low: &Lowering<'_>,
+    best: Option<(f64, Strategy, f64)>,
+    dp_time: f64,
+    iterations: usize,
+    first_beats_dp: Option<usize>,
+    examples: Vec<TrainExample>,
+) -> SearchResult {
+    let (best_reward, best_strat, best_time) = best.unwrap_or_else(|| {
+        let s = Strategy::dp_allreduce(low.gg.num_groups(), low.topo);
+        (0.0, s, dp_time)
+    });
+    SearchResult {
+        best: best_strat,
+        best_time,
+        best_reward,
+        dp_time,
+        iterations,
+        first_beats_dp,
+        examples,
+    }
+}

@@ -4,11 +4,15 @@
 //!
 //! Two properties the `dist` hot path depends on:
 //!
-//! * **Only-ready dispatch** — a resource never starts a task whose ready
-//!   time lies in the future.  If the head of a queue is not ready yet,
-//!   the resource stays idle and a *wake event* is scheduled for the head's
-//!   ready time, so a task that becomes ready earlier (enqueued later) is
-//!   never blocked behind a future-ready head.
+//! * **Only-ready dispatch** — a resource never starts a task before its
+//!   ready time.  A task enters its resource's queue at the exact moment
+//!   its last dependency finishes, and the event loop only advances time
+//!   through those completions, so every queue head is already ready when
+//!   the resource looks at it: dispatch is simply `now.max(ready)` (the
+//!   `max` is belt-and-braces; `ready <= now` is invariant).  The old
+//!   idle-until-ready wake-event machinery this replaces was unreachable
+//!   — `rust/tests/properties.rs` keeps it alive as a reference oracle
+//!   and checks schedules are identical over the random corpus.
 //! * **Buffer reuse** — [`Simulator`] keeps the indegree/successor/queue
 //!   buffers across runs; `dist::Lowering` evaluates hundreds of task
 //!   graphs per search, and reallocation would dominate the simulation
@@ -71,14 +75,14 @@ pub struct Simulator {
     events: BinaryHeap<Key>,
 }
 
-/// Try to start work on resource `r` at time `now`.  Event tags `>= n`
-/// encode "wake resource `tag - n`".
+/// Try to start work on resource `r` at time `now`.  Tasks are enqueued
+/// exactly when they become ready, so the head's ready time never lies
+/// in the future; `now.max(ready)` keeps only-ready dispatch explicit.
 #[allow(clippy::too_many_arguments)]
 fn try_start(
     r: usize,
     now: f64,
     tg: &TaskGraph,
-    n: usize,
     queues: &mut [BinaryHeap<Key>],
     resource_free: &mut [bool],
     start: &mut [f64],
@@ -88,19 +92,12 @@ fn try_start(
     if !resource_free[r] {
         return;
     }
-    let Some(&Key(ready, id)) = queues[r].peek() else {
+    let Some(Key(ready, id)) = queues[r].pop() else {
         return;
     };
-    if ready > now {
-        // Head not ready yet: keep the resource idle (a later-enqueued but
-        // earlier-ready task would land ahead of it in the queue) and
-        // revisit when the head becomes startable.
-        events.push(Key(ready, n + r));
-        return;
-    }
-    queues[r].pop();
-    start[id] = now;
-    let f = now + tg.tasks[id].duration;
+    let begin = now.max(ready);
+    start[id] = begin;
+    let f = begin + tg.tasks[id].duration;
     busy[r] += tg.tasks[id].duration;
     resource_free[r] = false;
     events.push(Key(f, id));
@@ -156,32 +153,16 @@ impl Simulator {
             }
         }
         for r in 0..nr {
-            try_start(r, 0.0, tg, n, queues, resource_free, &mut start, &mut busy, events);
+            try_start(r, 0.0, tg, queues, resource_free, &mut start, &mut busy, events);
         }
 
-        while let Some(Key(t_ev, tag)) = events.pop() {
-            if tag >= n {
-                // Wake event: the queue head of this resource became ready.
-                try_start(
-                    tag - n,
-                    t_ev,
-                    tg,
-                    n,
-                    queues,
-                    resource_free,
-                    &mut start,
-                    &mut busy,
-                    events,
-                );
-                continue;
-            }
-            let id = tag;
+        while let Some(Key(t_ev, id)) = events.pop() {
             let now = t_ev;
             finish[id] = t_ev;
             completed += 1;
             let r = tg.tasks[id].resource;
             resource_free[r] = true;
-            // Release successors.
+            // Release successors (enqueued exactly at their ready time).
             for &s in &succs[id] {
                 indeg[s] -= 1;
                 ready_at[s] = ready_at[s].max(t_ev);
@@ -191,10 +172,10 @@ impl Simulator {
             }
             // Start next work on this resource and any resource whose queue
             // just gained a task.
-            try_start(r, now, tg, n, queues, resource_free, &mut start, &mut busy, events);
+            try_start(r, now, tg, queues, resource_free, &mut start, &mut busy, events);
             for &s in &succs[id] {
                 let rs = tg.tasks[s].resource;
-                try_start(rs, now, tg, n, queues, resource_free, &mut start, &mut busy, events);
+                try_start(rs, now, tg, queues, resource_free, &mut start, &mut busy, events);
             }
         }
 

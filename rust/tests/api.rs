@@ -9,7 +9,9 @@ use tag::api::{
 use tag::cluster::presets::{homogeneous, sfb_pair, testbed};
 use tag::coordinator::{prepare, SearchConfig};
 use tag::dist::Lowering;
+use tag::mcts::{Mcts, UniformPrior};
 use tag::models;
+use tag::search::{run_search, Parallelism, SearchProblem};
 use tag::strategy::{baselines, enumerate_actions};
 
 fn request(seed: u64) -> PlanRequest {
@@ -98,6 +100,7 @@ fn every_baseline_generator_runs_on_preset_topologies() {
             seed: 1,
             apply_sfb: false,
             profile_noise: 0.0,
+            parallelism: Default::default(),
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
@@ -145,6 +148,96 @@ fn baseline_sweep_backend_covers_the_roster_on_two_presets() {
         // The sweep's chosen plan never loses to its own DP row.
         assert!(plan.times.final_time <= plan.telemetry.metric("DP-NCCL").unwrap() + 1e-12);
     }
+}
+
+#[test]
+fn workers_one_is_byte_identical_to_the_sequential_engine() {
+    // Engine level: the tree-parallel engine with one worker must retrace
+    // the pre-refactor sequential search exactly — same RNG stream, same
+    // floating-point arithmetic, same memo traffic.
+    let topo = testbed();
+    let cfg = SearchConfig {
+        max_groups: 12,
+        mcts_iterations: 40,
+        seed: 3,
+        apply_sfb: false,
+        profile_noise: 0.0,
+        parallelism: Default::default(),
+    };
+    let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
+    let actions = enumerate_actions(&topo);
+
+    let seq_low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+    let mut mcts = Mcts::new(&seq_low, actions.clone(), UniformPrior, cfg.seed);
+    let seq = mcts.search(cfg.mcts_iterations);
+
+    let par_low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+    let prob = SearchProblem {
+        gg: &prep.gg,
+        topo: &topo,
+        cost: &prep.cost,
+        comm: &prep.comm,
+        actions: &actions,
+    };
+    let par = run_search(
+        &prob,
+        &par_low,
+        vec![UniformPrior],
+        cfg.mcts_iterations,
+        cfg.seed,
+        Parallelism::default(),
+        true,
+        false,
+    );
+    assert_eq!(par.result.best, seq.best);
+    assert_eq!(par.result.best_time.to_bits(), seq.best_time.to_bits());
+    assert_eq!(par.result.best_reward.to_bits(), seq.best_reward.to_bits());
+    assert_eq!(par.result.dp_time.to_bits(), seq.dp_time.to_bits());
+    assert_eq!(par.result.iterations, seq.iterations);
+    assert_eq!(par.result.first_beats_dp, seq.first_beats_dp);
+    // Same memo hit/miss sequence as the sequential lowering.
+    assert_eq!(par_low.memo_stats(), seq_low.memo_stats());
+
+    // Plan level: an explicit `.workers(1)` request is the same plan —
+    // and the same cache identity — byte for byte.
+    let mut a = Planner::builder().without_cache().build();
+    let mut b = Planner::builder().without_cache().build();
+    let p1 = a.plan(&request(3));
+    let p2 = b.plan(&request(3).workers(1));
+    assert_eq!(p1.plan, p2.plan);
+    assert_eq!(p1.plan.encode(), p2.plan.encode());
+}
+
+#[test]
+fn parallel_workers_smoke_and_telemetry_roundtrip() {
+    // 4 tree-parallel workers: the plan is well-formed, per-worker
+    // iteration counts are the exact static split, memo/eval hit rates
+    // ride in telemetry, and everything round-trips through JSON.
+    let mut planner = Planner::builder().without_cache().build();
+    let out = planner.plan(&request(3).workers(4));
+    let p = &out.plan;
+    assert!(p.times.final_time.is_finite() && p.times.final_time > 0.0);
+    assert!(p.times.speedup > 0.0);
+    assert_eq!(p.telemetry.iterations, 40);
+    assert_eq!(p.telemetry.metric("workers"), Some(4.0));
+    let per: Vec<f64> = (0..4)
+        .map(|w| p.telemetry.metric(&format!("worker{w}_iterations")).expect("worker row"))
+        .collect();
+    assert_eq!(per.iter().sum::<f64>() as usize, p.telemetry.iterations);
+    assert_eq!(per, vec![10.0, 10.0, 10.0, 10.0]);
+    let hit_rate = p.telemetry.metric("memo_hit_rate").expect("memo_hit_rate row");
+    assert!((0.0..=1.0).contains(&hit_rate));
+    assert!(hit_rate > 0.0, "workers must share the memo table");
+
+    let back = DeploymentPlan::decode(&p.encode()).expect("decode");
+    assert_eq!(&back, p);
+    assert_eq!(back.telemetry.metric("workers"), Some(4.0));
+
+    // Parallel plans never alias sequential ones in the cache.
+    assert_ne!(
+        planner.key_for(&request(3)).config,
+        planner.key_for(&request(3).workers(4)).config
+    );
 }
 
 #[test]

@@ -16,6 +16,7 @@ fn cfg(iters: usize, seed: u64) -> SearchConfig {
         seed,
         apply_sfb: true,
         profile_noise: 0.0,
+        parallelism: Default::default(),
     }
 }
 

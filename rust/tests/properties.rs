@@ -77,6 +77,194 @@ fn random_task_graph(rng: &mut Rng, n: usize, r: usize) -> TaskGraph {
     tg
 }
 
+/// The pre-PR-3 engine, verbatim: wake events (`tag >= n` encodes "wake
+/// resource `tag - n`") and idle-until-ready head blocking.  Kept as a
+/// reference oracle for the simplified `now.max(ready)` dispatch — the
+/// idle branch is unreachable because tasks are enqueued exactly at
+/// their ready times, and `prop_simplified_engine_matches_wake_event_reference`
+/// below proves the two engines schedule identically on the corpus.
+mod wake_event_reference {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+    use tag::sim::TaskGraph;
+
+    #[derive(PartialEq)]
+    struct Key(f64, usize);
+    impl Eq for Key {}
+    impl PartialOrd for Key {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Key {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .0
+                .partial_cmp(&self.0)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| other.1.cmp(&self.1))
+        }
+    }
+
+    pub struct RefSchedule {
+        pub start: Vec<f64>,
+        pub finish: Vec<f64>,
+        pub busy: Vec<f64>,
+        pub makespan: f64,
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn try_start(
+        r: usize,
+        now: f64,
+        tg: &TaskGraph,
+        n: usize,
+        queues: &mut [BinaryHeap<Key>],
+        resource_free: &mut [bool],
+        start: &mut [f64],
+        busy: &mut [f64],
+        events: &mut BinaryHeap<Key>,
+    ) {
+        if !resource_free[r] {
+            return;
+        }
+        let Some(&Key(ready, id)) = queues[r].peek() else {
+            return;
+        };
+        if ready > now {
+            events.push(Key(ready, n + r));
+            return;
+        }
+        queues[r].pop();
+        start[id] = now;
+        let f = now + tg.tasks[id].duration;
+        busy[r] += tg.tasks[id].duration;
+        resource_free[r] = false;
+        events.push(Key(f, id));
+    }
+
+    pub fn simulate(tg: &TaskGraph) -> RefSchedule {
+        let n = tg.tasks.len();
+        let nr = tg.num_resources;
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut ready_at = vec![0.0f64; n];
+        let mut queues: Vec<BinaryHeap<Key>> = (0..nr).map(|_| BinaryHeap::new()).collect();
+        let mut resource_free = vec![true; nr];
+        let mut events: BinaryHeap<Key> = BinaryHeap::new();
+        for (i, t) in tg.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for &d in &t.deps {
+                succs[d].push(i);
+            }
+        }
+        let mut start = vec![f64::NAN; n];
+        let mut finish = vec![f64::NAN; n];
+        let mut busy = vec![0.0; nr];
+        for i in 0..n {
+            if indeg[i] == 0 {
+                queues[tg.tasks[i].resource].push(Key(0.0, i));
+            }
+        }
+        for r in 0..nr {
+            try_start(
+                r,
+                0.0,
+                tg,
+                n,
+                &mut queues,
+                &mut resource_free,
+                &mut start,
+                &mut busy,
+                &mut events,
+            );
+        }
+        while let Some(Key(t_ev, tag)) = events.pop() {
+            if tag >= n {
+                try_start(
+                    tag - n,
+                    t_ev,
+                    tg,
+                    n,
+                    &mut queues,
+                    &mut resource_free,
+                    &mut start,
+                    &mut busy,
+                    &mut events,
+                );
+                continue;
+            }
+            let id = tag;
+            let now = t_ev;
+            finish[id] = t_ev;
+            let r = tg.tasks[id].resource;
+            resource_free[r] = true;
+            for &s in &succs[id] {
+                indeg[s] -= 1;
+                ready_at[s] = ready_at[s].max(t_ev);
+                if indeg[s] == 0 {
+                    queues[tg.tasks[s].resource].push(Key(ready_at[s], s));
+                }
+            }
+            try_start(
+                r,
+                now,
+                tg,
+                n,
+                &mut queues,
+                &mut resource_free,
+                &mut start,
+                &mut busy,
+                &mut events,
+            );
+            for &s in &succs[id] {
+                let rs = tg.tasks[s].resource;
+                try_start(
+                    rs,
+                    now,
+                    tg,
+                    n,
+                    &mut queues,
+                    &mut resource_free,
+                    &mut start,
+                    &mut busy,
+                    &mut events,
+                );
+            }
+        }
+        let makespan = finish.iter().copied().fold(0.0f64, f64::max);
+        RefSchedule { start, finish, busy, makespan }
+    }
+}
+
+#[test]
+fn prop_simplified_engine_matches_wake_event_reference() {
+    // The PR-2 review suspected the idle-until-ready wake branch was
+    // unreachable; PR 3 simplified dispatch to `now.max(ready)`.  Prove
+    // the two engines produce bit-identical schedules on the random
+    // corpus (same generator as the other simulator properties).
+    for case in 0..60 {
+        let mut rng = Rng::new(5000 + case);
+        let n = rng.range(5, 150);
+        let r = rng.range(1, 8);
+        let tg = random_task_graph(&mut rng, n, r);
+        let s = simulate(&tg);
+        let s_ref = wake_event_reference::simulate(&tg);
+        assert_eq!(s.makespan.to_bits(), s_ref.makespan.to_bits(), "case {case}");
+        for i in 0..n {
+            assert_eq!(s.start[i].to_bits(), s_ref.start[i].to_bits(), "case {case} task {i}");
+            assert_eq!(
+                s.finish[i].to_bits(),
+                s_ref.finish[i].to_bits(),
+                "case {case} task {i}"
+            );
+        }
+        for res in 0..r {
+            assert_eq!(s.busy[res].to_bits(), s_ref.busy[res].to_bits(), "case {case}");
+        }
+    }
+}
+
 #[test]
 fn prop_simulator_lower_bounds_and_monotonicity() {
     for case in 0..40 {
