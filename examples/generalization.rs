@@ -10,8 +10,11 @@
 //! * **Table 8** — hold-out generalization: average speed-up over
 //!   DP-NCCL on testbed and cloud when the GNN was trained *without*
 //!   the evaluated model (TAG-) vs with it (TAG).
+//! * **Hierarchical hold-out** — unseen *routed* topologies (switched
+//!   link graphs from the hierarchical generator): the planner must
+//!   beat DP-NCCL on device structures no flat matrix can express.
 //!
-//!   cargo run --release --example generalization [-- fig6] [-- tab7] [-- tab8]
+//!   cargo run --release --example generalization [-- fig6] [-- tab7] [-- tab8] [-- hier]
 //!   (no args = run everything at a small budget)
 //!
 //! Every arm is a `tag::api::Planner` plan call; backends encode the
@@ -22,7 +25,7 @@ use std::rc::Rc;
 use tag::api::{
     BaselineSweepBackend, GnnMctsBackend, MctsBackend, PlanRequest, Planner,
 };
-use tag::cluster::generator::random_topologies;
+use tag::cluster::generator::{random_hierarchical_topologies, random_topologies};
 use tag::cluster::presets::{cloud, homogeneous, testbed};
 use tag::coordinator::Trainer;
 use tag::gnn::{params, GnnService};
@@ -39,7 +42,7 @@ fn arg(name: &str, default: usize) -> usize {
 }
 
 fn main() {
-    let all = !(has("fig6") || has("tab7") || has("tab8"));
+    let all = !(has("fig6") || has("tab7") || has("tab8") || has("hier"));
     if all || has("fig6") {
         fig6();
     }
@@ -48,6 +51,9 @@ fn main() {
     }
     if all || has("tab8") {
         tab8();
+    }
+    if all || has("hier") {
+        hier();
     }
 }
 
@@ -63,11 +69,12 @@ fn fig6() {
         .backend(BaselineSweepBackend::new())
         .build()
         .plan(&request.clone().sfb(false))
+        .expect("plan")
         .plan;
     let row = |key: &str| sweep.telemetry.metric(key).unwrap_or(f64::NAN);
     let t_expert = row("Expert");
 
-    let plan = Planner::builder().build().plan(&request).plan;
+    let plan = Planner::builder().build().plan(&request).expect("plan").plan;
     let t_tag = plan.times.final_time;
 
     println!("=== Fig. 6: InceptionV3 on homogeneous 2x V100 (speed vs expert) ===");
@@ -116,13 +123,13 @@ fn tab7() {
                     .seed(1000 + ti as u64)
                     .sfb(false);
 
-            let pure = pure_planner.plan(&request).plan;
+            let pure = pure_planner.plan(&request).expect("plan").plan;
             let first_pure = pure.telemetry.first_beats_dp.unwrap_or(iters);
             sum_pure += first_pure as f64;
 
             match &mut tag_planner {
                 Some(planner) => {
-                    let guided = planner.plan(&request).plan;
+                    let guided = planner.plan(&request).expect("plan").plan;
                     sum_tag += guided.telemetry.first_beats_dp.unwrap_or(iters) as f64;
                 }
                 None => sum_tag += first_pure as f64,
@@ -180,7 +187,7 @@ fn tab8() {
                         .budget(120, 16)
                         .seed(9)
                         .sfb(false);
-                let plan = planner.plan(&request).plan;
+                let plan = planner.plan(&request).expect("plan").plan;
                 row.push((plan.times.speedup - 1.0) * 100.0);
             }
         }
@@ -189,6 +196,46 @@ fn tab8() {
             name, row[0], row[1], row[2], row[3]
         );
     }
+}
+
+/// Unseen hierarchical (routed) topologies: racks, host bridges, ToR and
+/// spine switches — structures the flat matrix form cannot express.
+/// Pure-MCTS TAG plans each one end to end through `api::Planner`
+/// (contention-aware simulation) and must beat its own DP reference.
+fn hier() {
+    let n_topos = arg("topos", 4);
+    let iters = arg("iters", 120);
+    println!("=== Hierarchical hold-out: unseen routed topologies ===");
+    println!(
+        "{:<14} {:>7} {:>7} {:>6} {:>9} {:>9}",
+        "topology", "groups", "links", "hops", "DP (s)", "speedup"
+    );
+    let mut planner = Planner::builder().build();
+    for (ti, topo) in random_hierarchical_topologies(0xD00D, n_topos).iter().enumerate() {
+        let request =
+            PlanRequest::new(models::by_name("InceptionV3", 0.25).unwrap(), topo.clone())
+                .budget(iters, 16)
+                .seed(4000 + ti as u64)
+                .sfb(false);
+        let plan = planner.plan(&request).expect("plan").plan;
+        let worst_hops = (0..topo.num_groups())
+            .flat_map(|a| (0..topo.num_groups()).map(move |b| (a, b)))
+            .filter(|&(a, b)| a != b)
+            .map(|(a, b)| topo.group_route(a, b).hops())
+            .max()
+            .unwrap_or(0);
+        println!(
+            "{:<14} {:>7} {:>7} {:>6} {:>9.4} {:>8.2}x",
+            topo.name,
+            topo.num_groups(),
+            topo.link_graph().num_links(),
+            worst_hops,
+            plan.times.dp_time,
+            plan.times.speedup
+        );
+        assert!(plan.times.speedup >= 1.0 - 1e-9, "TAG lost to DP on {}", topo.name);
+    }
+    println!();
 }
 
 fn load_trained_gnn() -> Option<(Rc<GnnService>, Vec<f32>)> {

@@ -62,10 +62,10 @@ fn main() {
                 .seed(7)
                 .sfb(sfb)
         };
-        let sweep = sweep_planner.plan(&request(false)).plan;
+        let sweep = sweep_planner.plan(&request(false)).expect("plan").plan;
         let row = |key: &str| sweep.telemetry.metric(key).unwrap_or(f64::NAN);
 
-        let plan = tag_planner.plan(&request(true)).plan;
+        let plan = tag_planner.plan(&request(true)).expect("plan").plan;
         let t_tag = plan.times.final_time;
         let t_dp = row("DP-NCCL");
 
@@ -136,4 +136,52 @@ fn main() {
         );
     }
     println!("\n(*) = strategy OOMs on this cluster in our memory model");
+
+    hierarchical(scale, iters, &mut tag_planner);
+}
+
+/// The same planning pipeline on a *routed* hierarchical cluster
+/// (NVLink islands behind PCIe host bridges and a shared ethernet
+/// switch), contrasted with the naive flat-matrix collapse of the same
+/// cluster.  The routed times include per-hop latency and shared-link
+/// contention; the flattened clique only sees per-flow bottlenecks —
+/// the gap is what the link graph buys.
+fn hierarchical(scale: f64, iters: usize, tag_planner: &mut Planner) {
+    use tag::cluster::presets::nvlink_island;
+    use tag::cluster::Topology;
+
+    let routed = nvlink_island();
+    let flattened = Topology::new(
+        "nvlink-island-flattened",
+        routed.groups.clone(),
+        routed.inter_bw_gbps.clone(),
+    );
+    println!(
+        "\n=== Hierarchical cluster: {} ({} nodes, {} links) ===",
+        routed.name,
+        routed.link_graph().num_nodes(),
+        routed.link_graph().num_links()
+    );
+    println!(
+        "{:<12} {:>12} {:>12} {:>9} | {:>12} {:>9}",
+        "model", "DP routed", "DP flat", "gap", "TAG routed", "speedup"
+    );
+    for name in ["VGG19", "ResNet101", "Transformer"] {
+        let req = |topo: &Topology| {
+            PlanRequest::new(models::by_name(name, scale).unwrap(), topo.clone())
+                .budget(iters, 24)
+                .seed(7)
+        };
+        let plan_r = tag_planner.plan(&req(&routed)).expect("plan").plan;
+        let plan_f = tag_planner.plan(&req(&flattened)).expect("plan").plan;
+        println!(
+            "{:<12} {:>11.4}s {:>11.4}s {:>8.1}% | {:>11.4}s {:>8.2}x",
+            name,
+            plan_r.times.dp_time,
+            plan_f.times.dp_time,
+            100.0 * (plan_r.times.dp_time / plan_f.times.dp_time - 1.0),
+            plan_r.times.final_time,
+            plan_r.times.speedup
+        );
+    }
 }

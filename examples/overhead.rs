@@ -55,13 +55,13 @@ fn main() {
             .sfb(false);
 
         // --- TAG: GNN inference + MCTS only.
-        let outcome = planner.plan(&request);
+        let outcome = planner.plan(&request).expect("plan");
         tag_s += outcome.overhead_s;
         let dp_iter_time = outcome.plan.times.dp_time;
 
         // --- Repeat traffic on the same (model, topology, config):
         // answered from the plan cache.
-        cached_s += planner.plan(&request).overhead_s;
+        cached_s += planner.plan(&request).expect("plan").overhead_s;
 
         // --- HeteroG: GNN retraining from scratch on this topology.
         // Measured as the wall time of the equivalent self-play +
@@ -71,7 +71,7 @@ fn main() {
         let w = Stopwatch::start();
         for g in 0..retrain_games {
             let replay = request.clone().seed(2000 + ti as u64 + 1000 * (g as u64 + 1));
-            let _ = planner.plan(&replay);
+            let _ = planner.plan(&replay).expect("plan");
         }
         heterog_s += w.elapsed_s() + outcome.overhead_s;
 

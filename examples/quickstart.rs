@@ -36,7 +36,7 @@ fn main() {
     // 2. Plan (pure-MCTS backend by default; plug a GnnMctsBackend into
     //    the builder for GNN-guided search).
     let mut planner = Planner::builder().build();
-    let outcome = planner.plan(&request);
+    let outcome = planner.plan(&request).expect("plan");
     let plan = &outcome.plan;
 
     // 3. Results.
@@ -61,7 +61,7 @@ fn main() {
     println!("plan JSON                  : {} bytes (lossless round-trip)", json.len());
 
     // 5. Repeat traffic hits the plan cache instead of re-searching.
-    let again = planner.plan(&request);
+    let again = planner.plan(&request).expect("plan");
     assert!(again.cache_hit && again.plan == outcome.plan);
     let stats = planner.cache_stats().unwrap();
     println!(
@@ -75,7 +75,7 @@ fn main() {
     //    (workers=1 is byte-identical to the sequential engine; K>1 is
     //    seed-stable in its budgets but explores schedule-dependently,
     //    so it gets its own cache identity.)
-    let fast = planner.plan(&request.clone().workers(4));
+    let fast = planner.plan(&request.clone().workers(4)).expect("plan");
     assert!(!fast.cache_hit, "parallel plans never alias sequential ones");
     let tl = &fast.plan.telemetry;
     println!(

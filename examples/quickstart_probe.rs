@@ -21,7 +21,7 @@ fn main() {
         let request = PlanRequest::new(models::bert(batch, true, 1.0), topo.clone())
             .budget(60, 12)
             .sfb(false);
-        let plan = planner.plan(&request).plan;
+        let plan = planner.plan(&request).expect("plan").plan;
         let oom_rows: Vec<&str> = BASELINE_NAMES
             .iter()
             .copied()

@@ -57,7 +57,7 @@ fn main() {
         let t_dp_sfb = low.evaluate_with_sfb(&dp, Some(&plan_dp)).time.min(t_dp);
 
         // TAG without / with SFB, via the planner.
-        let plan = planner.plan(&request).plan;
+        let plan = planner.plan(&request).expect("plan").plan;
         let t_tag = plan.times.time;
         let t_tag_sfb = plan.times.time_with_sfb.unwrap_or(t_tag).min(t_tag);
 

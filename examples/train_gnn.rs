@@ -103,7 +103,7 @@ fn main() {
     let request = PlanRequest::new(models::vgg19(8, 0.25), testbed())
         .budget(80, 16)
         .seed(7);
-    let outcome = planner.plan(&request);
+    let outcome = planner.plan(&request).expect("plan");
     println!(
         "\nplanner smoke test (trained GNN backend): {:.2}x over DP-NCCL",
         outcome.plan.times.speedup

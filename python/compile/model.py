@@ -27,16 +27,23 @@ paper):
         9  decided flag
         10 is-next flag (this op group's strategy is produced next)
 
-    device node (F_DEV = 5):
+    device node (F_DEV = 7):
         0  #GPUs in group / 8
         1  memory capacity           log1p(GB)
         2  intra-group bandwidth     log1p(Gbps)
         3  peak memory usage         fraction of capacity (feedback)
         4  idling percentage         (feedback)
+        5  attached switch degree    log1p (0 on flat cliques)
+        6  mean route hops to the other groups / 4
 
     op-op edge   (1): log1p(tensor MB)
-    dev-dev edge (2): log1p(inter-group Gbps), link idling percentage
+    dev-dev edge (4): log1p(routed bottleneck Gbps), link idling
+                      percentage, route hops / 8, log1p(route latency us)
     op-dev edge  (1): placement bit (current partial strategy)
+
+The device-side structure features (5/6 and the dev-dev hop/latency
+columns) come from the Rust topology's link graph (cluster::linkgraph);
+flat clique topologies degenerate to (0 switches, 1-hop, 0 latency).
 """
 
 import functools
@@ -52,9 +59,9 @@ N_OP = 64  # max op groups (paper uses <= 60)
 N_DEV = 16  # max device groups
 N_CAND = 128  # max candidate strategy slices per decision
 F_OP = 11  # raw op-node features
-F_DEV = 5  # raw device-node features
+F_DEV = 7  # raw device-node features (incl. link-graph structure)
 F_EDGE_OO = 1
-F_EDGE_DD = 2
+F_EDGE_DD = 4  # routed bw, link idle, route hops, route latency
 F_EDGE_OD = 1
 HIDDEN = 64  # embedding width F
 HEADS = 4
@@ -184,8 +191,8 @@ def gnn_forward(p, feats):
 
     ``feats`` is a dict of one position's feature arrays (unbatched):
         op_feats (N_OP, F_OP), dev_feats (N_DEV, F_DEV),
-        oo_e (N_OP, N_OP, 1), oo_mask (N_OP, N_OP),
-        dd_e (N_DEV, N_DEV, 2), dd_mask (N_DEV, N_DEV),
+        oo_e (N_OP, N_OP, F_EDGE_OO), oo_mask (N_OP, N_OP),
+        dd_e (N_DEV, N_DEV, F_EDGE_DD), dd_mask (N_DEV, N_DEV),
         od_place (N_OP, N_DEV), op_mask (N_OP,), dev_mask (N_DEV,)
     """
     h_op = jax.nn.relu(feats["op_feats"] @ p["enc_op_w"] + p["enc_op_b"])

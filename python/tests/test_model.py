@@ -23,12 +23,12 @@ def _random_feats(rng, batch=None):
     feats = {}
     feats["op_feats"] = mk((n, model.F_OP))
     feats["dev_feats"] = mk((m, model.F_DEV))
-    feats["oo_e"] = mk((n, n, 1))
+    feats["oo_e"] = mk((n, n, model.F_EDGE_OO))
     oo_mask = (rng.rand(n, n) < 0.2).astype(np.float32)
     oo_mask[n_live:, :] = 0
     oo_mask[:, n_live:] = 0
     feats["oo_mask"] = _b(jnp.asarray(oo_mask), batch)
-    feats["dd_e"] = mk((m, m, 2))
+    feats["dd_e"] = mk((m, m, model.F_EDGE_DD))
     dd_mask = np.ones((m, m), np.float32)
     dd_mask[m_live:, :] = 0
     dd_mask[:, m_live:] = 0

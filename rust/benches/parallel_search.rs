@@ -88,7 +88,7 @@ fn main() {
             .seed(1)
             .sfb(false)
             .workers(workers);
-        let outcome = planner.plan(&request);
+        let outcome = planner.plan(&request).expect("plan");
         let tl = &outcome.plan.telemetry;
         let per: Vec<usize> = (0..workers)
             .map(|w| tl.metric(&format!("worker{w}_iterations")).unwrap_or(0.0) as usize)

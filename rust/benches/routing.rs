@@ -1,0 +1,93 @@
+//! Bench: the routed link-graph layer — route-table construction (paid
+//! once per topology, cold) vs cached route queries (the per-evaluation
+//! hot path), and what contention-aware simulation costs on top of the
+//! flat-matrix model.
+//!
+//! Uses the largest hierarchical preset (`multi_rack`: 32 GPUs, 12
+//! machines, 4 racks behind an oversubscribed spine) and its flattened
+//! clique collapse as the baseline.
+
+use tag::cluster::presets::multi_rack;
+use tag::cluster::Topology;
+use tag::dist::Lowering;
+use tag::graph::grouping::group_ops;
+use tag::models;
+use tag::profile::{unique_gpus, CommModel, CostModel};
+use tag::strategy::{enumerate_actions, Strategy};
+use tag::util::bench;
+
+fn main() {
+    println!("== routing: route-table construction (cold) ==");
+    // Preset construction includes graph build + widest-path routing for
+    // all device pairs + derived-matrix extraction + validation.
+    let build = bench("construct[multi_rack]", 1.0, || {
+        let t = multi_rack();
+        assert!(t.is_routed());
+    });
+    let topo = multi_rack();
+    println!(
+        "    -> {} devices, {} nodes, {} links routed in {:.2} ms",
+        topo.num_devices(),
+        topo.link_graph().num_nodes(),
+        topo.link_graph().num_links(),
+        build * 1e3
+    );
+
+    println!("\n== routing: cached route queries (warm) ==");
+    let devs = topo.devices();
+    bench("bw_gbps[all pairs]", 1.0, || {
+        let mut acc = 0.0;
+        for (i, &a) in devs.iter().enumerate() {
+            for &b in &devs[i + 1..] {
+                acc += topo.bw_gbps(a, b);
+            }
+        }
+        assert!(acc > 0.0);
+    });
+    bench("link_profile[all devices]", 1.0, || {
+        let p = topo.link_profile(&devs);
+        assert!(p.bottleneck_gbps > 0.0);
+    });
+
+    println!("\n== simulation: contention-aware (routed) vs naive bottleneck (flat) ==");
+    let flat = Topology::new(
+        "multi-rack-flattened",
+        topo.groups.clone(),
+        topo.inter_bw_gbps.clone(),
+    );
+    let model = models::by_name("VGG19", 0.25).unwrap();
+    let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+    let gg = group_ops(&model, &cost, 24, 7);
+    let comm = CommModel::fit(3);
+    let low_routed = Lowering::new(&gg, &topo, &cost, &comm);
+    let low_flat = Lowering::new(&gg, &flat, &cost, &comm);
+    let strategies: Vec<Strategy> = enumerate_actions(&topo)
+        .into_iter()
+        .map(|a| Strategy::uniform(gg.num_groups(), a))
+        .collect();
+    let n = strategies.len();
+    let t_flat = bench(&format!("evaluate[flat x{n}]"), 1.0, || {
+        for s in &strategies {
+            assert!(low_flat.evaluate_uncached(s).time > 0.0);
+        }
+    });
+    let t_routed = bench(&format!("evaluate[routed x{n}]"), 1.0, || {
+        for s in &strategies {
+            assert!(low_routed.evaluate_uncached(s).time > 0.0);
+        }
+    });
+    println!(
+        "    -> contention overhead: {:.1}% per evaluation ({:.1} vs {:.1} us)",
+        100.0 * (t_routed / t_flat - 1.0),
+        t_routed / n as f64 * 1e6,
+        t_flat / n as f64 * 1e6,
+    );
+
+    // The per-mask link-profile memo: after one pass every placement's
+    // O(n²) bottleneck/latency profile is a cache hit.
+    let (hits, misses) = low_routed.mask_memo_stats();
+    println!(
+        "    -> mask link-profile memo: {hits} hits / {misses} misses ({:.0}% hit rate)",
+        100.0 * low_routed.mask_memo_hit_rate()
+    );
+}

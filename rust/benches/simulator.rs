@@ -81,6 +81,7 @@ fn main() {
                 duration: rng.uniform(1e-5, 1e-3),
                 deps,
                 kind: TaskKind::Marker,
+                load: None,
             });
         }
         let m = bench(&format!("engine[{n_tasks} tasks/{n_res} res]"), 1.0, || {

@@ -65,10 +65,14 @@ pub trait SearchBackend {
 
 fn memo_metrics(low: &Lowering<'_>) -> Vec<(String, f64)> {
     let (hits, misses) = low.memo_stats();
+    let (mask_hits, mask_misses) = low.mask_memo_stats();
     vec![
         ("memo_hits".to_string(), hits as f64),
         ("memo_misses".to_string(), misses as f64),
         ("memo_hit_rate".to_string(), low.memo_hit_rate()),
+        ("mask_memo_hits".to_string(), mask_hits as f64),
+        ("mask_memo_misses".to_string(), mask_misses as f64),
+        ("mask_memo_hit_rate".to_string(), low.mask_memo_hit_rate()),
     ]
 }
 

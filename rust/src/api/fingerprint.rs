@@ -109,6 +109,14 @@ pub fn model(graph: &CompGraph) -> u64 {
 /// Fingerprint of a device topology: groups (GPU spec, count, intra
 /// bandwidth) and the inter-group bandwidth matrix.  The display name is
 /// deliberately excluded.
+///
+/// Routed topologies additionally fold the full link graph — node
+/// inventory and every typed link — because two routed clusters can
+/// share a derived matrix yet differ in switch structure (and therefore
+/// in contention behavior).  Flat clique topologies fold *nothing*
+/// extra: their graph is a pure function of the matrix, so their
+/// fingerprints are byte-identical to the pre-link-graph scheme (pinned
+/// in `rust/tests/api.rs`).
 pub fn topology(topo: &Topology) -> u64 {
     let mut h = Fnv::new();
     h.write_usize(topo.num_groups());
@@ -123,6 +131,29 @@ pub fn topology(topo: &Topology) -> u64 {
     for row in &topo.inter_bw_gbps {
         for &bw in row {
             h.write_f64(bw);
+        }
+    }
+    if topo.is_routed() {
+        let g = topo.link_graph();
+        h.write_str("linkgraph");
+        h.write_usize(g.num_nodes());
+        for node in g.nodes() {
+            match node {
+                crate::cluster::NodeKind::Device(d) => {
+                    h.write(&[1]).write_usize(d.group).write_usize(d.idx);
+                }
+                crate::cluster::NodeKind::Switch { level } => {
+                    h.write(&[2]).write(&[*level]);
+                }
+            }
+        }
+        h.write_usize(g.num_links());
+        for l in g.links() {
+            h.write_usize(l.a)
+                .write_usize(l.b)
+                .write_f64(l.bw_gbps)
+                .write_f64(l.latency_s)
+                .write(&[l.kind.index()]);
         }
     }
     h.finish()
@@ -176,6 +207,24 @@ mod tests {
             vec![10.0, 10.0, 0.0],
         ];
         assert_ne!(topology(&a), topology(&bigger), "group count changes fp");
+    }
+
+    #[test]
+    fn routed_link_graph_is_folded_into_the_fingerprint() {
+        // Same groups, same *derived* matrix — but one is a physical
+        // switch fabric and one is a flattened clique.  They simulate
+        // differently (contention, latency), so they must never share
+        // cached plans.
+        let routed = crate::cluster::presets::nvlink_island();
+        let flat = crate::cluster::Topology::new(
+            "flattened",
+            routed.groups.clone(),
+            routed.inter_bw_gbps.clone(),
+        );
+        assert_eq!(routed.inter_bw_gbps, flat.inter_bw_gbps);
+        assert_ne!(topology(&routed), topology(&flat));
+        // And routed fingerprints are stable.
+        assert_eq!(topology(&routed), topology(&crate::cluster::presets::nvlink_island()));
     }
 
     #[test]

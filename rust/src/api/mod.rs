@@ -23,12 +23,17 @@
 //! let request = PlanRequest::new(models::vgg19(48, 0.5), testbed())
 //!     .budget(200, 24)
 //!     .seed(42);
-//! let outcome = planner.plan(&request);
+//! let outcome = planner.plan(&request).expect("valid request");
 //! println!("speed-up over DP-NCCL: {:.2}x", outcome.plan.times.speedup);
 //! let json = outcome.plan.encode(); // persist / serve
 //! let back = tag::api::DeploymentPlan::decode(&json).unwrap();
 //! assert_eq!(back, outcome.plan);
 //! ```
+//!
+//! [`Planner::plan`] returns a [`Result`](crate::util::error::Result):
+//! a malformed topology (asymmetric matrix, empty group, a mutated
+//! derived view that no longer matches its link graph) surfaces as a
+//! plan error instead of aborting the process.
 
 pub mod backend;
 pub mod cache;
@@ -53,6 +58,7 @@ use crate::cluster::Topology;
 use crate::coordinator::{self, Prepared, SessionResult};
 use crate::dist::Lowering;
 use crate::strategy::enumerate_actions;
+use crate::util::error::{Context, Result};
 use crate::util::Stopwatch;
 
 /// A plan plus the per-call serving facts that must stay *outside* the
@@ -159,6 +165,10 @@ impl Planner {
 
     /// Produce (or serve from cache) a deployment plan for `request`.
     ///
+    /// The request's topology is validated first: a malformed topology
+    /// (asymmetric matrix, empty group, stale derived view) returns an
+    /// `Err` instead of aborting — the planning service stays up.
+    ///
     /// With the default sequential search (`workers == 1`) the returned
     /// [`DeploymentPlan`] is a pure function of the request and the
     /// backend configuration: repeat calls are bit-identical whether
@@ -168,12 +178,20 @@ impl Planner {
     /// to a different (equally valid) plan — which is why parallel
     /// requests get their own config fingerprint and never alias
     /// sequential ones.
-    pub fn plan(&mut self, request: &PlanRequest) -> PlanOutcome {
+    pub fn plan(&mut self, request: &PlanRequest) -> Result<PlanOutcome> {
         let watch = Stopwatch::start();
+        request
+            .topology
+            .validate()
+            .with_context(|| format!("invalid topology `{}`", request.topology.name))?;
         let key = self.key_for(request);
         if let Some(cache) = &mut self.cache {
             if let Some(plan) = cache.get(&key) {
-                return PlanOutcome { plan, cache_hit: true, overhead_s: watch.elapsed_s() };
+                return Ok(PlanOutcome {
+                    plan,
+                    cache_hit: true,
+                    overhead_s: watch.elapsed_s(),
+                });
             }
         }
 
@@ -232,7 +250,7 @@ impl Planner {
         if let Some(cache) = &mut self.cache {
             cache.insert(key, plan.clone());
         }
-        PlanOutcome { plan, cache_hit: false, overhead_s: watch.elapsed_s() }
+        Ok(PlanOutcome { plan, cache_hit: false, overhead_s: watch.elapsed_s() })
     }
 }
 
@@ -293,7 +311,7 @@ mod tests {
     #[test]
     fn plan_call_produces_consistent_plan() {
         let mut planner = Planner::builder().without_cache().build();
-        let out = planner.plan(&small_request());
+        let out = planner.plan(&small_request()).unwrap();
         assert!(!out.cache_hit);
         let p = &out.plan;
         assert_eq!(p.model_name, "VGG19");
@@ -310,8 +328,8 @@ mod tests {
     fn cache_serves_repeat_traffic() {
         let mut planner = Planner::builder().build();
         let req = small_request();
-        let first = planner.plan(&req);
-        let second = planner.plan(&req);
+        let first = planner.plan(&req).unwrap();
+        let second = planner.plan(&req).unwrap();
         assert!(!first.cache_hit);
         assert!(second.cache_hit);
         assert_eq!(first.plan, second.plan);
@@ -323,10 +341,10 @@ mod tests {
     #[test]
     fn different_request_knobs_miss_the_cache() {
         let mut planner = Planner::builder().build();
-        let _ = planner.plan(&small_request());
-        let out = planner.plan(&small_request().seed(4));
+        let _ = planner.plan(&small_request()).unwrap();
+        let out = planner.plan(&small_request().seed(4)).unwrap();
         assert!(!out.cache_hit);
-        let out = planner.plan(&small_request().sfb(false));
+        let out = planner.plan(&small_request().sfb(false)).unwrap();
         assert!(!out.cache_hit);
         assert_eq!(planner.cache_stats().unwrap().entries, 3);
     }
@@ -337,12 +355,12 @@ mod tests {
         // prepare knobs differ; a changed seed re-prepares (the cost
         // model is seeded) while a changed topology swaps the entry.
         let mut planner = Planner::builder().without_cache().build();
-        let a = planner.plan(&small_request());
-        let b = planner.plan(&small_request());
+        let a = planner.plan(&small_request()).unwrap();
+        let b = planner.plan(&small_request()).unwrap();
         assert_eq!(a.plan, b.plan, "same request replans identically");
-        let c = planner.plan(&PlanRequest::new(models::vgg19(8, 0.25), sfb_pair())
-            .budget(30, 10)
-            .seed(3));
+        let c = planner
+            .plan(&PlanRequest::new(models::vgg19(8, 0.25), sfb_pair()).budget(30, 10).seed(3))
+            .unwrap();
         assert_ne!(a.plan.topology_fingerprint, c.plan.topology_fingerprint);
     }
 
@@ -350,10 +368,47 @@ mod tests {
     fn baseline_backend_plans_carry_sweep_rows() {
         let mut planner =
             Planner::builder().backend(BaselineSweepBackend::new()).build();
-        let out = planner.plan(&small_request());
+        let out = planner.plan(&small_request()).unwrap();
         assert_eq!(out.plan.backend, "baseline-sweep");
         for name in BASELINE_NAMES {
             assert!(out.plan.telemetry.metric(name).is_some(), "{name} row missing");
         }
+    }
+
+    #[test]
+    fn malformed_topology_surfaces_as_plan_error_not_abort() {
+        let mut planner = Planner::builder().build();
+        let mut req = small_request();
+        // Corrupt the (publicly mutable) derived matrix: asymmetric.
+        req.topology.inter_bw_gbps[0][1] = 1.0;
+        let err = planner.plan(&req).unwrap_err().to_string();
+        assert!(err.contains("invalid topology"), "{err}");
+        assert!(err.contains("symmetric"), "{err}");
+        // A symmetric but stale derived view is rejected too.
+        let mut req = small_request();
+        req.topology.inter_bw_gbps[0][1] = 1.0;
+        req.topology.inter_bw_gbps[1][0] = 1.0;
+        let err = planner.plan(&req).unwrap_err().to_string();
+        assert!(err.contains("stale derived view"), "{err}");
+        // The planner still serves valid requests afterwards.
+        assert!(planner.plan(&small_request()).is_ok());
+    }
+
+    #[test]
+    fn mask_memo_hit_rate_rides_in_plan_telemetry() {
+        let mut planner = Planner::builder().without_cache().build();
+        let plan = planner.plan(&small_request()).unwrap().plan;
+        let rate = plan.telemetry.metric("mask_memo_hit_rate").expect("row present");
+        assert!((0.0..=1.0).contains(&rate));
+        assert!(plan.telemetry.metric("mask_memo_misses").unwrap() >= 1.0);
+        // Deterministic across independent planners (fresh lowering per
+        // plan call keeps the counters a pure function of the request).
+        let plan2 = Planner::builder()
+            .without_cache()
+            .build()
+            .plan(&small_request())
+            .unwrap()
+            .plan;
+        assert_eq!(plan, plan2);
     }
 }

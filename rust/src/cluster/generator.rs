@@ -1,10 +1,21 @@
-//! Random device-topology generator (paper §5.2).
+//! Random device-topology generators.
 //!
-//! "A random device topology is produced with a machine number in [1, 6],
-//! [1, 8] GPUs per machine of a GPU type among 3 types, intra-machine
-//! bandwidth between [64, 160] Gbps (to simulate the absence or presence
-//! of NVLink) and inter-machine bandwidth within [20, 50] Gbps."
+//! [`random_topology`] samples flat topologies with the distribution of
+//! §5.2: "a random device topology is produced with a machine number in
+//! [1, 6], [1, 8] GPUs per machine of a GPU type among 3 types,
+//! intra-machine bandwidth between [64, 160] Gbps (to simulate the
+//! absence or presence of NVLink) and inter-machine bandwidth within
+//! [20, 50] Gbps."
+//!
+//! [`random_hierarchical_topology`] samples *routed* topologies —
+//! racks of machines behind PCIe host bridges, top-of-rack switches and
+//! (for multi-rack samples) a spine — exercising the link-graph routing
+//! and contention model on structures the flat matrix cannot express.
+//! Machines flip between an NVLink-island fabric (direct device clique)
+//! and a PCIe-switch fabric; either way every machine uplinks through
+//! its host bridge, so cross-machine routes are genuinely multi-hop.
 
+use super::linkgraph::{LinkGraph, LinkKind};
 use super::{DeviceGroup, Topology, RANDOM_GPU_TYPES};
 use crate::util::Rng;
 
@@ -35,6 +46,83 @@ pub fn random_topologies(base_seed: u64, n: usize) -> Vec<Topology> {
         .map(|i| {
             let mut rng = Rng::new(base_seed.wrapping_add(i as u64));
             random_topology(&mut rng)
+        })
+        .collect()
+}
+
+/// Sample a random hierarchical (routed) topology:
+///
+/// * [1, 4] racks x [1, 3] machines per rack (each machine one device
+///   group, so at most 12 groups);
+/// * per machine: a GPU type among 3 types, [1, 4] GPUs, and a fabric —
+///   NVLink island (direct clique, [100, 160] Gbps) or PCIe switch
+///   ([32, 64] Gbps) with probability ½ each;
+/// * every machine uplinks through its host bridge to the rack's ToR at
+///   [10, 40] Gbps ethernet; multi-rack samples add a spine with
+///   [10, 40] Gbps rack uplinks (often oversubscribed).
+pub fn random_hierarchical_topology(rng: &mut Rng) -> Topology {
+    let racks = rng.range(1, 4);
+    let per_rack = rng.range(1, 3);
+    let machines = racks * per_rack;
+
+    let mut groups = Vec::with_capacity(machines);
+    let mut nvlink = Vec::with_capacity(machines);
+    for _ in 0..machines {
+        let gpu = RANDOM_GPU_TYPES[rng.below(RANDOM_GPU_TYPES.len())];
+        let count = rng.range(1, 4);
+        let is_nvlink = rng.chance(0.5);
+        let intra = if is_nvlink {
+            rng.uniform(100.0, 160.0)
+        } else {
+            rng.uniform(32.0, 64.0)
+        };
+        nvlink.push(is_nvlink);
+        groups.push(DeviceGroup { gpu, count, intra_bw_gbps: intra });
+    }
+
+    let mut b = LinkGraph::builder();
+    let dev_nodes = b.add_group_devices(&groups);
+    let spine = if racks > 1 { Some(b.add_switch(2)) } else { None };
+    for rack in 0..racks {
+        let tor = b.add_switch(1);
+        if let Some(spine) = spine {
+            b.link_default(tor, spine, rng.uniform(10.0, 40.0), LinkKind::Ethernet);
+        }
+        for machine in 0..per_rack {
+            let gi = rack * per_rack + machine;
+            let bridge = b.add_switch(0);
+            b.link_default(bridge, tor, rng.uniform(10.0, 40.0), LinkKind::Ethernet);
+            let nodes = &dev_nodes[gi];
+            if nvlink[gi] {
+                // NVLink island: device clique at the intra bandwidth,
+                // PCIe uplinks narrower than NVLink so intra routes stay
+                // on the island.
+                for (i, &a) in nodes.iter().enumerate() {
+                    for &c in &nodes[i + 1..] {
+                        b.link_default(a, c, groups[gi].intra_bw_gbps, LinkKind::NvLink);
+                    }
+                    b.link_default(a, bridge, rng.uniform(32.0, 64.0), LinkKind::Pcie);
+                }
+            } else {
+                // PCIe fabric: devices meet at the host bridge, so the
+                // intra path (device-bridge-device) bottlenecks at the
+                // declared intra bandwidth.
+                for &a in nodes {
+                    b.link_default(a, bridge, groups[gi].intra_bw_gbps, LinkKind::Pcie);
+                }
+            }
+        }
+    }
+    Topology::routed(format!("hier-{racks}r{per_rack}m"), groups, b.build())
+        .expect("generated hierarchical topology must be valid")
+}
+
+/// Sample `n` random hierarchical topologies from consecutive sub-seeds.
+pub fn random_hierarchical_topologies(base_seed: u64, n: usize) -> Vec<Topology> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Rng::new(base_seed.wrapping_add(i as u64));
+            random_hierarchical_topology(&mut rng)
         })
         .collect()
 }
@@ -76,5 +164,38 @@ mod tests {
         let counts: std::collections::HashSet<usize> =
             a.iter().map(|t| t.num_groups()).collect();
         assert!(counts.len() > 2);
+    }
+
+    #[test]
+    fn hierarchical_respects_ranges_and_routes() {
+        let mut saw_multi_rack = false;
+        for i in 0..60 {
+            let mut rng = Rng::new(900 + i);
+            let t = random_hierarchical_topology(&mut rng);
+            assert!(t.is_routed());
+            assert!((1..=12).contains(&t.num_groups()));
+            for g in &t.groups {
+                assert!((1..=4).contains(&g.count));
+                assert!((32.0..=160.0).contains(&g.intra_bw_gbps));
+            }
+            t.validate().unwrap();
+            if t.num_groups() > 1 {
+                // Cross-machine routes are genuinely multi-hop.
+                assert!(t.group_route(0, 1).hops() >= 4);
+                saw_multi_rack |= t.group_route(0, t.num_groups() - 1).hops() >= 6;
+            }
+        }
+        assert!(saw_multi_rack, "no multi-rack sample in 60 draws");
+    }
+
+    #[test]
+    fn hierarchical_deterministic_per_seed() {
+        let a = random_hierarchical_topologies(3, 8);
+        let b = random_hierarchical_topologies(3, 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.num_groups(), y.num_groups());
+            assert_eq!(x.num_devices(), y.num_devices());
+            assert_eq!(x.inter_bw_gbps, y.inter_bw_gbps);
+        }
     }
 }

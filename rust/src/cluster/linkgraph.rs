@@ -1,0 +1,588 @@
+//! The routed device link graph: devices *and* switches as nodes, typed
+//! links with bandwidth and latency, and deterministic widest-path
+//! routing with a cached per-topology route table.
+//!
+//! The paper's headline claim is deployment onto *any* device topology,
+//! and real clusters are not cliques: GPUs hang off PCIe host bridges,
+//! machines hang off top-of-rack switches, racks share an oversubscribed
+//! spine.  This module is the physical layer under
+//! [`Topology`](super::Topology):
+//!
+//! * **Flat topologies** (the original group-list + pairwise-matrix
+//!   form) become *clique* link graphs: one direct device-device link
+//!   per pair, bandwidth straight from the matrix, zero latency.  A
+//!   clique routes every pair over its direct link, so every bandwidth
+//!   query reproduces the flat matrix **bit for bit** — the
+//!   flat-matrix ⇒ clique-graph equivalence contract pinned by
+//!   `rust/tests/api.rs`.
+//! * **Routed topologies** (built through [`LinkGraphBuilder`]) may
+//!   contain switch nodes and multi-hop paths.  Routing is
+//!   *widest-path*: maximize the path's bottleneck bandwidth, break
+//!   ties by fewest hops, then by lowest accumulated latency, then by
+//!   smallest predecessor node id — fully deterministic.  The route
+//!   table is computed once per topology and shared (`Arc`) across
+//!   clones.
+//!
+//! Routed links additionally carry *occupancy* in the simulator: the
+//! [`crate::dist`] lowering stamps each inter-machine transfer with its
+//! route's link ids, and [`crate::sim`] charges concurrent transfers
+//! that share a link a proportional bandwidth share (see
+//! [`crate::sim::LinkLoad`]).  That is what makes an oversubscribed
+//! spine cost more than the per-flow bottleneck suggests.
+
+use crate::cluster::{DeviceGroup, DeviceId};
+use crate::util::error::Result;
+
+/// Physical link technology.  For clique (flat-matrix) graphs the kind
+/// is decorative; routed presets and the hierarchical generator use it
+/// to pick default latencies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    NvLink,
+    Pcie,
+    Ethernet,
+}
+
+impl LinkKind {
+    /// Per-hop latency used by the routed presets and the hierarchical
+    /// generator.
+    pub fn default_latency_s(self) -> f64 {
+        match self {
+            LinkKind::NvLink => 0.7e-6,
+            LinkKind::Pcie => 1.5e-6,
+            LinkKind::Ethernet => 5.0e-6,
+        }
+    }
+
+    /// Stable discriminant for fingerprinting.
+    pub fn index(self) -> u8 {
+        match self {
+            LinkKind::NvLink => 0,
+            LinkKind::Pcie => 1,
+            LinkKind::Ethernet => 2,
+        }
+    }
+}
+
+/// A node of the link graph: a concrete device or a switch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    Device(DeviceId),
+    /// A switch at a hierarchy level (0 = host bridge, 1 = top-of-rack,
+    /// 2 = spine, ...).  Levels are descriptive, not semantic.
+    Switch { level: u8 },
+}
+
+/// An undirected link between two nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub a: usize,
+    pub b: usize,
+    pub bw_gbps: f64,
+    pub latency_s: f64,
+    pub kind: LinkKind,
+}
+
+/// One routed device-pair path: the traversed link ids, the path's
+/// bottleneck bandwidth and its accumulated latency.  The degenerate
+/// same-device route has no links, infinite bandwidth and zero latency.
+///
+/// The link sequence rides behind an `Arc` so the lowering can stamp a
+/// transfer task's contention footprint with a refcount bump instead of
+/// a per-task heap allocation (the evaluation hot path is otherwise
+/// allocation-free by design).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Route {
+    pub links: std::sync::Arc<[u32]>,
+    pub bottleneck_gbps: f64,
+    pub latency_s: f64,
+}
+
+impl Route {
+    pub fn hops(&self) -> usize {
+        self.links.len()
+    }
+
+    fn same_device() -> Self {
+        Route { links: Vec::new().into(), bottleneck_gbps: f64::INFINITY, latency_s: 0.0 }
+    }
+}
+
+/// The cached per-topology routing result: one [`Route`] per ordered
+/// device pair (flat device indices).  Symmetric by construction —
+/// `route(b, a)` is `route(a, b)` with the link sequence reversed.
+#[derive(Clone, Debug)]
+pub struct RouteTable {
+    n: usize,
+    routes: Vec<Route>,
+}
+
+impl RouteTable {
+    pub fn num_devices(&self) -> usize {
+        self.n
+    }
+
+    /// The route between two flat device indices.
+    pub fn route(&self, a: usize, b: usize) -> &Route {
+        &self.routes[a * self.n + b]
+    }
+}
+
+/// Devices + switches + typed links.
+#[derive(Clone, Debug)]
+pub struct LinkGraph {
+    nodes: Vec<NodeKind>,
+    links: Vec<Link>,
+    /// `adj[node]` = (peer node, link id), in link-insertion order.
+    adj: Vec<Vec<(usize, u32)>>,
+    /// Flat device index -> node id (devices in `(group, idx)` order).
+    device_nodes: Vec<usize>,
+    /// Built by [`LinkGraph::clique`] from a flat matrix: routes are the
+    /// direct links and reproduce the matrix bit for bit.
+    clique: bool,
+}
+
+impl LinkGraph {
+    pub fn builder() -> LinkGraphBuilder {
+        LinkGraphBuilder::default()
+    }
+
+    /// The clique graph of a flat (group list + pairwise matrix)
+    /// topology: one zero-latency direct link per device pair, intra
+    /// bandwidth within a group, the matrix entry across groups.
+    pub fn clique(groups: &[DeviceGroup], inter_bw_gbps: &[Vec<f64>]) -> Self {
+        let mut b = LinkGraphBuilder::default();
+        let mut flat: Vec<(usize, DeviceId)> = Vec::new();
+        for (gi, g) in groups.iter().enumerate() {
+            for di in 0..g.count {
+                let d = DeviceId { group: gi, idx: di };
+                flat.push((b.add_device(d), d));
+            }
+        }
+        for (i, &(ni, di)) in flat.iter().enumerate() {
+            for &(nj, dj) in &flat[i + 1..] {
+                let (bw, kind) = if di.group == dj.group {
+                    (groups[di.group].intra_bw_gbps, LinkKind::Pcie)
+                } else {
+                    (inter_bw_gbps[di.group][dj.group], LinkKind::Ethernet)
+                };
+                b.link(ni, nj, bw, 0.0, kind);
+            }
+        }
+        let mut g = b.build();
+        g.clique = true;
+        g
+    }
+
+    pub fn is_clique(&self) -> bool {
+        self.clique
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.device_nodes.len()
+    }
+
+    pub fn nodes(&self) -> &[NodeKind] {
+        &self.nodes
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Node id of a flat device index.
+    pub fn device_node(&self, flat: usize) -> usize {
+        self.device_nodes[flat]
+    }
+
+    /// The device each flat index maps to (insertion order).
+    pub fn device_ids(&self) -> impl Iterator<Item = DeviceId> + '_ {
+        self.device_nodes.iter().map(|&n| match self.nodes[n] {
+            NodeKind::Device(d) => d,
+            NodeKind::Switch { .. } => unreachable!("device_nodes points at a switch"),
+        })
+    }
+
+    /// Number of links incident to a node.
+    pub fn degree(&self, node: usize) -> usize {
+        self.adj[node].len()
+    }
+
+    /// Largest degree among switches directly attached to a device
+    /// (0 when the device attaches to no switch — e.g. in a clique).
+    pub fn attached_switch_degree(&self, flat_device: usize) -> usize {
+        self.adj[self.device_nodes[flat_device]]
+            .iter()
+            .filter(|&&(peer, _)| matches!(self.nodes[peer], NodeKind::Switch { .. }))
+            .map(|&(peer, _)| self.degree(peer))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sanity-check the graph structure itself (link endpoints in range,
+    /// bandwidths positive and finite, latencies non-negative).
+    pub fn check(&self) -> Result<()> {
+        for l in &self.links {
+            crate::ensure!(
+                l.a < self.nodes.len() && l.b < self.nodes.len() && l.a != l.b,
+                "link endpoints out of range or self-link ({}, {})",
+                l.a,
+                l.b
+            );
+            crate::ensure!(
+                l.bw_gbps.is_finite() && l.bw_gbps > 0.0,
+                "link ({}, {}) bandwidth must be positive and finite, got {}",
+                l.a,
+                l.b,
+                l.bw_gbps
+            );
+            crate::ensure!(
+                l.latency_s.is_finite() && l.latency_s >= 0.0,
+                "link ({}, {}) latency must be finite and non-negative, got {}",
+                l.a,
+                l.b,
+                l.latency_s
+            );
+        }
+        for &n in &self.device_nodes {
+            crate::ensure!(
+                matches!(self.nodes[n], NodeKind::Device(_)),
+                "device node table points at a switch"
+            );
+        }
+        Ok(())
+    }
+
+    /// Compute the full device-pair route table.
+    ///
+    /// Cliques route every pair over its direct link (a flat matrix *is*
+    /// the route set — the router only chooses among multi-hop paths
+    /// when the fabric contains switches).  Routed graphs run the
+    /// deterministic widest-path search per source device.  Errors when
+    /// some device pair is disconnected.
+    pub fn route_table(&self) -> Result<RouteTable> {
+        let n = self.device_nodes.len();
+        let mut routes = vec![Route::same_device(); n * n];
+        if self.clique {
+            // Direct links only; every pair has exactly one.
+            let mut node_to_flat = vec![usize::MAX; self.nodes.len()];
+            for (flat, &node) in self.device_nodes.iter().enumerate() {
+                node_to_flat[node] = flat;
+            }
+            for (lid, l) in self.links.iter().enumerate() {
+                let (fa, fb) = (node_to_flat[l.a], node_to_flat[l.b]);
+                let direct = Route {
+                    links: vec![lid as u32].into(),
+                    bottleneck_gbps: l.bw_gbps,
+                    latency_s: l.latency_s,
+                };
+                routes[fa * n + fb] = direct.clone();
+                routes[fb * n + fa] = direct;
+            }
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    crate::ensure!(
+                        !routes[a * n + b].links.is_empty(),
+                        "clique graph is missing the ({a}, {b}) direct link"
+                    );
+                }
+            }
+            return Ok(RouteTable { n, routes });
+        }
+
+        // Widest-path search from each source device; destinations with a
+        // smaller flat index reuse the mirrored route so the table is
+        // symmetric by construction.
+        for src in 0..n {
+            let (prev_link, prev_node, bn) = self.widest_from(self.device_nodes[src]);
+            for dst in (src + 1)..n {
+                let dst_node = self.device_nodes[dst];
+                crate::ensure!(
+                    bn[dst_node] > 0.0,
+                    "no route between devices {src} and {dst} (disconnected link graph)"
+                );
+                let mut links = Vec::new();
+                let mut latency = 0.0;
+                let mut at = dst_node;
+                while at != self.device_nodes[src] {
+                    let lid = prev_link[at];
+                    links.push(lid);
+                    latency += self.links[lid as usize].latency_s;
+                    at = prev_node[at];
+                }
+                // Collected dst -> src: the unreversed sequence is the
+                // mirror route, the reversed one the forward route.
+                let rev = Route {
+                    links: links.clone().into(),
+                    bottleneck_gbps: bn[dst_node],
+                    latency_s: latency,
+                };
+                links.reverse();
+                let fwd = Route {
+                    links: links.into(),
+                    bottleneck_gbps: rev.bottleneck_gbps,
+                    latency_s: rev.latency_s,
+                };
+                routes[src * n + dst] = fwd;
+                routes[dst * n + src] = rev;
+            }
+        }
+        Ok(RouteTable { n, routes })
+    }
+
+    /// Deterministic widest-path (max-bottleneck) search from `src`:
+    /// ties broken by fewest hops, then lowest latency, then smallest
+    /// predecessor node id.  Returns per-node (incoming link, previous
+    /// node, bottleneck); unreachable nodes keep bottleneck 0.
+    fn widest_from(&self, src: usize) -> (Vec<u32>, Vec<usize>, Vec<f64>) {
+        let nn = self.nodes.len();
+        let mut bn = vec![0.0f64; nn];
+        let mut hops = vec![usize::MAX; nn];
+        let mut lat = vec![f64::INFINITY; nn];
+        let mut prev_node = vec![usize::MAX; nn];
+        let mut prev_link = vec![u32::MAX; nn];
+        let mut visited = vec![false; nn];
+        bn[src] = f64::INFINITY;
+        hops[src] = 0;
+        lat[src] = 0.0;
+
+        for _ in 0..nn {
+            // Select the unvisited node with the widest bottleneck,
+            // scanning in ascending id order so ties are deterministic.
+            let mut u = usize::MAX;
+            for (cand, &v) in visited.iter().enumerate() {
+                if v || bn[cand] <= 0.0 {
+                    continue;
+                }
+                if u == usize::MAX
+                    || bn[cand] > bn[u]
+                    || (bn[cand] == bn[u] && hops[cand] < hops[u])
+                {
+                    u = cand;
+                }
+            }
+            if u == usize::MAX {
+                break;
+            }
+            visited[u] = true;
+            for &(v, lid) in &self.adj[u] {
+                if visited[v] {
+                    continue;
+                }
+                let l = &self.links[lid as usize];
+                let nb = bn[u].min(l.bw_gbps);
+                let nh = hops[u] + 1;
+                let nl = lat[u] + l.latency_s;
+                let better = nb > bn[v]
+                    || (nb == bn[v] && nh < hops[v])
+                    || (nb == bn[v] && nh == hops[v] && nl < lat[v])
+                    || (nb == bn[v] && nh == hops[v] && nl == lat[v] && u < prev_node[v]);
+                if better {
+                    bn[v] = nb;
+                    hops[v] = nh;
+                    lat[v] = nl;
+                    prev_node[v] = u;
+                    prev_link[v] = lid;
+                }
+            }
+        }
+        (prev_link, prev_node, bn)
+    }
+}
+
+/// Incremental construction of a routed [`LinkGraph`].
+///
+/// Devices **must** be added in flat `(group, idx)` order — the order
+/// [`Topology::devices`](super::Topology::devices) enumerates — which
+/// [`Topology::routed`](super::Topology::routed) verifies.
+#[derive(Default)]
+pub struct LinkGraphBuilder {
+    nodes: Vec<NodeKind>,
+    links: Vec<Link>,
+    device_nodes: Vec<usize>,
+}
+
+impl LinkGraphBuilder {
+    /// Add a device node; returns its node id.
+    pub fn add_device(&mut self, d: DeviceId) -> usize {
+        self.nodes.push(NodeKind::Device(d));
+        self.device_nodes.push(self.nodes.len() - 1);
+        self.nodes.len() - 1
+    }
+
+    /// Register every group's devices in the flat `(group, idx)` order
+    /// [`Topology::routed`](super::Topology::routed) requires; returns
+    /// the node ids per group.  Call this first, before adding switches.
+    pub fn add_group_devices(&mut self, groups: &[DeviceGroup]) -> Vec<Vec<usize>> {
+        groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                (0..g.count)
+                    .map(|di| self.add_device(DeviceId { group: gi, idx: di }))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Add a switch node at a hierarchy level; returns its node id.
+    pub fn add_switch(&mut self, level: u8) -> usize {
+        self.nodes.push(NodeKind::Switch { level });
+        self.nodes.len() - 1
+    }
+
+    /// Add an undirected link.
+    pub fn link(&mut self, a: usize, b: usize, bw_gbps: f64, latency_s: f64, kind: LinkKind) {
+        self.links.push(Link { a, b, bw_gbps, latency_s, kind });
+    }
+
+    /// Convenience: link with the kind's default latency.
+    pub fn link_default(&mut self, a: usize, b: usize, bw_gbps: f64, kind: LinkKind) {
+        self.link(a, b, bw_gbps, kind.default_latency_s(), kind);
+    }
+
+    pub fn build(self) -> LinkGraph {
+        let mut adj: Vec<Vec<(usize, u32)>> = vec![Vec::new(); self.nodes.len()];
+        for (lid, l) in self.links.iter().enumerate() {
+            adj[l.a].push((l.b, lid as u32));
+            adj[l.b].push((l.a, lid as u32));
+        }
+        LinkGraph {
+            nodes: self.nodes,
+            links: self.links,
+            adj,
+            device_nodes: self.device_nodes,
+            clique: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DeviceGroup, P100, V100_16G};
+
+    fn two_group_flat() -> (Vec<DeviceGroup>, Vec<Vec<f64>>) {
+        (
+            vec![
+                DeviceGroup { gpu: V100_16G, count: 2, intra_bw_gbps: 128.0 },
+                DeviceGroup { gpu: P100, count: 2, intra_bw_gbps: 64.0 },
+            ],
+            vec![vec![0.0, 25.0], vec![25.0, 0.0]],
+        )
+    }
+
+    #[test]
+    fn clique_routes_are_direct_links() {
+        let (groups, inter) = two_group_flat();
+        let g = LinkGraph::clique(&groups, &inter);
+        assert!(g.is_clique());
+        assert_eq!(g.num_devices(), 4);
+        assert_eq!(g.num_links(), 6); // complete graph on 4 devices
+        let rt = g.route_table().unwrap();
+        // Intra pair: direct at intra bandwidth, one hop, zero latency.
+        let r = rt.route(0, 1);
+        assert_eq!(r.hops(), 1);
+        assert_eq!(r.bottleneck_gbps, 128.0);
+        assert_eq!(r.latency_s, 0.0);
+        // Cross pair: the matrix entry, never a relay — even though a
+        // two-hop path through the other group would be wider is not
+        // possible here; the clique contract pins direct routing.
+        let r = rt.route(0, 2);
+        assert_eq!(r.hops(), 1);
+        assert_eq!(r.bottleneck_gbps, 25.0);
+        // Same-device route is free.
+        assert!(rt.route(3, 3).bottleneck_gbps.is_infinite());
+        assert_eq!(rt.route(3, 3).hops(), 0);
+    }
+
+    #[test]
+    fn widest_path_prefers_wider_multi_hop_route() {
+        // d0 - narrow direct link - d1, but both also hang off a fat
+        // switch: the router must take the 2-hop wide path.
+        let mut b = LinkGraph::builder();
+        let d0 = b.add_device(DeviceId { group: 0, idx: 0 });
+        let d1 = b.add_device(DeviceId { group: 1, idx: 0 });
+        let sw = b.add_switch(0);
+        b.link(d0, d1, 10.0, 1e-6, LinkKind::Ethernet);
+        b.link(d0, sw, 100.0, 1e-6, LinkKind::Pcie);
+        b.link(sw, d1, 100.0, 1e-6, LinkKind::Pcie);
+        let g = b.build();
+        g.check().unwrap();
+        let rt = g.route_table().unwrap();
+        let r = rt.route(0, 1);
+        assert_eq!(r.hops(), 2);
+        assert_eq!(r.bottleneck_gbps, 100.0);
+        assert!((r.latency_s - 2e-6).abs() < 1e-18);
+        // Reverse route mirrors the forward one.
+        let rev = rt.route(1, 0);
+        assert_eq!(rev.bottleneck_gbps, 100.0);
+        let back: Vec<u32> = rev.links.iter().rev().copied().collect();
+        assert_eq!(&back[..], &r.links[..]);
+    }
+
+    #[test]
+    fn equal_width_ties_break_by_fewest_hops() {
+        // Two equal-bandwidth paths: direct (1 hop) vs through a switch
+        // (2 hops) — the direct link must win.
+        let mut b = LinkGraph::builder();
+        let d0 = b.add_device(DeviceId { group: 0, idx: 0 });
+        let d1 = b.add_device(DeviceId { group: 1, idx: 0 });
+        let sw = b.add_switch(0);
+        b.link(d0, d1, 50.0, 1e-6, LinkKind::Ethernet);
+        b.link(d0, sw, 50.0, 1e-6, LinkKind::Ethernet);
+        b.link(sw, d1, 50.0, 1e-6, LinkKind::Ethernet);
+        let rt = b.build().route_table().unwrap();
+        assert_eq!(rt.route(0, 1).hops(), 1);
+    }
+
+    #[test]
+    fn disconnected_devices_are_an_error() {
+        let mut b = LinkGraph::builder();
+        b.add_device(DeviceId { group: 0, idx: 0 });
+        b.add_device(DeviceId { group: 1, idx: 0 });
+        let g = b.build();
+        assert!(g.route_table().is_err());
+    }
+
+    #[test]
+    fn switch_degree_visibility() {
+        let mut b = LinkGraph::builder();
+        let d0 = b.add_device(DeviceId { group: 0, idx: 0 });
+        let d1 = b.add_device(DeviceId { group: 0, idx: 1 });
+        let d2 = b.add_device(DeviceId { group: 1, idx: 0 });
+        let sw = b.add_switch(0);
+        b.link_default(d0, sw, 64.0, LinkKind::Pcie);
+        b.link_default(d1, sw, 64.0, LinkKind::Pcie);
+        b.link_default(d2, sw, 64.0, LinkKind::Pcie);
+        let g = b.build();
+        assert_eq!(g.attached_switch_degree(0), 3);
+        assert_eq!(g.degree(sw), 3);
+        // A clique device attaches to no switch.
+        let (groups, inter) = two_group_flat();
+        let c = LinkGraph::clique(&groups, &inter);
+        assert_eq!(c.attached_switch_degree(0), 0);
+    }
+
+    #[test]
+    fn invalid_links_rejected_by_check() {
+        let mut b = LinkGraph::builder();
+        let d0 = b.add_device(DeviceId { group: 0, idx: 0 });
+        let d1 = b.add_device(DeviceId { group: 0, idx: 1 });
+        b.link(d0, d1, -5.0, 0.0, LinkKind::Ethernet);
+        assert!(b.build().check().is_err());
+        let mut b = LinkGraph::builder();
+        let d0 = b.add_device(DeviceId { group: 0, idx: 0 });
+        let d1 = b.add_device(DeviceId { group: 0, idx: 1 });
+        b.link(d0, d1, 64.0, f64::NAN, LinkKind::Ethernet);
+        assert!(b.build().check().is_err());
+    }
+}

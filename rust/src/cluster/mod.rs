@@ -1,20 +1,44 @@
 //! Device topology descriptions (paper §2.2, §5.2).
 //!
 //! A [`Topology`] is a set of [`DeviceGroup`]s — homogeneous GPUs with
-//! uniform pairwise intra-group bandwidth, usually one multi-GPU machine —
-//! plus a pairwise inter-group bandwidth matrix.  This is exactly the
-//! "device graph" fed to the strategy creator.
+//! uniform pairwise intra-group bandwidth, usually one multi-GPU machine
+//! — backed by a routed **link graph** ([`linkgraph`]): devices *and*
+//! switches as nodes, typed links with bandwidth and latency, and a
+//! cached deterministic route table.  Every bandwidth query
+//! ([`Topology::bw_gbps`], [`Topology::bottleneck_bw_gbps`],
+//! [`Topology::group_route`]) answers from the routes.
 //!
-//! [`presets`] defines the paper's *testbed*, *cloud*, and homogeneous
-//! evaluation clusters; [`generator`] samples random topologies with the
-//! distribution of §5.2 (used for GNN training and the generalization
-//! experiments of Tables 7/8).
+//! Two construction paths:
+//!
+//! * [`Topology::new`] / [`Topology::try_new`] — the original flat form
+//!   (groups + pairwise inter-group matrix).  The matrix becomes a
+//!   *clique* link graph whose direct-link routes reproduce the matrix
+//!   **bit for bit** (the equivalence contract pinned in
+//!   `rust/tests/api.rs`), so flat topologies behave exactly as before
+//!   this layer existed.
+//! * [`Topology::routed`] — an explicit [`linkgraph::LinkGraph`] with
+//!   switches and multi-hop paths.  The `inter_bw_gbps` matrix is then
+//!   a *derived view*: entry `[i][j]` is the routed bottleneck between
+//!   representative devices of groups `i` and `j`.
+//!
+//! [`presets`] defines the paper's *testbed*, *cloud* and homogeneous
+//! evaluation clusters plus hierarchical clusters (an NVLink-island
+//! machine pair, a multi-rack oversubscribed-ethernet pod);
+//! [`generator`] samples random flat topologies with the distribution of
+//! §5.2 and random hierarchical (switched) topologies for the
+//! generalization experiments.
 
 pub mod generator;
+pub mod linkgraph;
 pub mod presets;
 
-pub use generator::random_topology;
-pub use presets::{cloud, homogeneous, sfb_pair, testbed};
+pub use generator::{random_hierarchical_topology, random_topology};
+pub use linkgraph::{Link, LinkGraph, LinkGraphBuilder, LinkKind, NodeKind, Route, RouteTable};
+pub use presets::{cloud, homogeneous, multi_rack, nvlink_island, sfb_pair, testbed};
+
+use std::sync::Arc;
+
+use crate::util::error::Result;
 
 /// A GPU model with its effective compute rate and memory.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -57,17 +81,9 @@ pub struct DeviceGroup {
     pub gpu: GpuType,
     pub count: usize,
     /// Pairwise bandwidth between GPUs in this group, Gbit/s
-    /// (NVLink ~ 160+, PCIe ~ 64-128).
+    /// (NVLink ~ 160+, PCIe ~ 64-128).  For routed topologies this must
+    /// equal the routed intra-group path bottleneck (validated).
     pub intra_bw_gbps: f64,
-}
-
-/// A full device topology: groups + pairwise inter-group bandwidth.
-#[derive(Clone, Debug)]
-pub struct Topology {
-    pub name: String,
-    pub groups: Vec<DeviceGroup>,
-    /// `inter_bw[i][j]` in Gbit/s; diagonal unused (use intra_bw).
-    pub inter_bw_gbps: Vec<Vec<f64>>,
 }
 
 /// Globally unique device id: (group index, index within group).
@@ -77,30 +93,179 @@ pub struct DeviceId {
     pub idx: usize,
 }
 
+/// The routed link characteristics of a device set: the bottleneck
+/// bandwidth among all pairs (`tau` in the SFB formulation) and the
+/// worst pairwise path latency.  Cached per placement mask by
+/// [`crate::dist::Lowering`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkProfile {
+    pub bottleneck_gbps: f64,
+    pub max_latency_s: f64,
+}
+
+/// A full device topology: groups + the routed link graph underneath.
+///
+/// `inter_bw_gbps` is kept as a **derived view** of the routes (for flat
+/// topologies it is the constructor's matrix verbatim).  The link graph
+/// and route table ride behind `Arc`s, so clones share them.  The public
+/// fields exist for inspection and fingerprinting; mutating them leaves
+/// the routes stale — rebuild through a constructor instead (the
+/// [`Planner`](crate::api::Planner) validates consistency per request).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub groups: Vec<DeviceGroup>,
+    /// `inter_bw[i][j]` in Gbit/s; diagonal unused (use intra_bw).
+    /// Derived: equals the routed group-pair bottleneck bandwidth.
+    pub inter_bw_gbps: Vec<Vec<f64>>,
+    graph: Arc<LinkGraph>,
+    routes: Arc<RouteTable>,
+    /// Flat device index of each group's first device.
+    offsets: Vec<usize>,
+}
+
+fn group_offsets(groups: &[DeviceGroup]) -> Vec<usize> {
+    let mut offsets = Vec::with_capacity(groups.len());
+    let mut at = 0;
+    for g in groups {
+        offsets.push(at);
+        at += g.count;
+    }
+    offsets
+}
+
 impl Topology {
+    /// Flat (matrix) construction; panics on malformed input.  Prefer
+    /// [`Topology::try_new`] where errors should surface as values.
     pub fn new(name: impl Into<String>, groups: Vec<DeviceGroup>, inter: Vec<Vec<f64>>) -> Self {
-        let t = Self { name: name.into(), groups, inter_bw_gbps: inter };
-        t.validate();
-        t
+        Self::try_new(name, groups, inter).unwrap_or_else(|e| panic!("invalid topology: {e}"))
     }
 
-    pub fn validate(&self) {
-        let m = self.groups.len();
-        assert_eq!(self.inter_bw_gbps.len(), m, "inter-bw matrix shape");
-        for row in &self.inter_bw_gbps {
-            assert_eq!(row.len(), m, "inter-bw matrix shape");
+    /// Flat (matrix) construction: the matrix becomes a clique link
+    /// graph whose routes reproduce it bit for bit.
+    pub fn try_new(
+        name: impl Into<String>,
+        groups: Vec<DeviceGroup>,
+        inter: Vec<Vec<f64>>,
+    ) -> Result<Self> {
+        validate_flat(&groups, &inter)?;
+        let graph = LinkGraph::clique(&groups, &inter);
+        let routes = graph.route_table()?;
+        let offsets = group_offsets(&groups);
+        Ok(Self {
+            name: name.into(),
+            groups,
+            inter_bw_gbps: inter,
+            graph: Arc::new(graph),
+            routes: Arc::new(routes),
+            offsets,
+        })
+    }
+
+    /// Routed construction from an explicit link graph (switches,
+    /// multi-hop paths).  The inter-group matrix is derived from the
+    /// routes; each group's declared `intra_bw_gbps` must match its
+    /// routed intra path.
+    pub fn routed(
+        name: impl Into<String>,
+        groups: Vec<DeviceGroup>,
+        graph: LinkGraph,
+    ) -> Result<Self> {
+        validate_groups(&groups)?;
+        graph.check()?;
+        // The builder must have added devices in flat (group, idx) order.
+        let expect: Vec<DeviceId> = groups
+            .iter()
+            .enumerate()
+            .flat_map(|(gi, g)| (0..g.count).map(move |di| DeviceId { group: gi, idx: di }))
+            .collect();
+        let got: Vec<DeviceId> = graph.device_ids().collect();
+        if got != expect {
+            crate::ensure!(
+                got.len() == expect.len(),
+                "link graph must register every group device: got {} devices, \
+                 expected {}",
+                got.len(),
+                expect.len()
+            );
+            let at = got.iter().zip(&expect).position(|(g, e)| g != e).unwrap_or(0);
+            crate::bail!(
+                "link graph devices must be added in flat (group, idx) order: \
+                 position {at} holds {:?}, expected {:?}",
+                got[at],
+                expect[at]
+            );
         }
+        let routes = graph.route_table()?;
+        let offsets = group_offsets(&groups);
+        check_intra_matches_routes(&groups, &offsets, &routes)?;
+        // Derive the inter-group matrix from representative routes.
+        let m = groups.len();
+        let mut inter = vec![vec![0.0; m]; m];
         for i in 0..m {
-            for j in 0..m {
-                assert!(
-                    (self.inter_bw_gbps[i][j] - self.inter_bw_gbps[j][i]).abs() < 1e-9,
-                    "inter-bw must be symmetric"
+            for j in (i + 1)..m {
+                let bw = routes.route(offsets[i], offsets[j]).bottleneck_gbps;
+                inter[i][j] = bw;
+                inter[j][i] = bw;
+            }
+        }
+        Ok(Self {
+            name: name.into(),
+            groups,
+            inter_bw_gbps: inter,
+            graph: Arc::new(graph),
+            routes: Arc::new(routes),
+            offsets,
+        })
+    }
+
+    /// Check the topology's invariants: matrix shape and symmetry, group
+    /// sanity, link-graph structure, and route coverage consistent with
+    /// the (publicly mutable) flat fields.  [`crate::api::Planner`]
+    /// calls this per request so malformed topologies surface as plan
+    /// errors instead of aborts.
+    pub fn validate(&self) -> Result<()> {
+        validate_flat(&self.groups, &self.inter_bw_gbps)?;
+        self.graph.check()?;
+        crate::ensure!(
+            self.offsets.len() == self.groups.len(),
+            "group list mutated after construction ({} groups, {} routed) — rebuild \
+             the topology",
+            self.groups.len(),
+            self.offsets.len()
+        );
+        crate::ensure!(
+            self.graph.num_devices() == self.num_devices()
+                && self.routes.num_devices() == self.num_devices(),
+            "link graph covers {} devices, route table {}, topology declares {}",
+            self.graph.num_devices(),
+            self.routes.num_devices(),
+            self.num_devices()
+        );
+        // The flat fields are a derived view of the routes; a mutated
+        // matrix, intra bandwidth or group list that no longer matches
+        // them is invalid.
+        for (i, &oi) in self.offsets.iter().enumerate() {
+            for (j, &oj) in self.offsets.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let bw = self.routes.route(oi, oj).bottleneck_gbps;
+                crate::ensure!(
+                    bw.is_finite() && bw > 0.0,
+                    "groups {i} and {j} are not connected by any route"
+                );
+                crate::ensure!(
+                    (bw - self.inter_bw_gbps[i][j]).abs() < 1e-9,
+                    "inter-bw[{i}][{j}] = {} does not match the routed bottleneck {} \
+                     (stale derived view — rebuild the topology)",
+                    self.inter_bw_gbps[i][j],
+                    bw
                 );
             }
         }
-        for g in &self.groups {
-            assert!(g.count > 0 && g.intra_bw_gbps > 0.0);
-        }
+        check_intra_matches_routes(&self.groups, &self.offsets, &self.routes)?;
+        Ok(())
     }
 
     pub fn num_groups(&self) -> usize {
@@ -121,17 +286,52 @@ impl Topology {
         out
     }
 
-    /// Bandwidth between two devices in Gbit/s.
+    /// Flat device index (the link graph / route table coordinate).
+    pub fn device_flat_index(&self, d: DeviceId) -> usize {
+        self.offsets[d.group] + d.idx
+    }
+
+    /// The physical link graph under this topology.
+    pub fn link_graph(&self) -> &LinkGraph {
+        &self.graph
+    }
+
+    /// Whether this topology routes over switches / multi-hop paths
+    /// (false for flat clique topologies, whose routes are the direct
+    /// links and reproduce the matrix exactly).
+    pub fn is_routed(&self) -> bool {
+        !self.graph.is_clique()
+    }
+
+    /// The cached route between two devices.
+    pub fn route(&self, a: DeviceId, b: DeviceId) -> &Route {
+        self.routes.route(self.device_flat_index(a), self.device_flat_index(b))
+    }
+
+    /// Accumulated path latency between two devices (0 for the same
+    /// device and for flat clique links).
+    pub fn route_latency_s(&self, a: DeviceId, b: DeviceId) -> f64 {
+        self.route(a, b).latency_s
+    }
+
+    /// The route between two groups' representative devices — what
+    /// inter-machine transfers traverse.
+    pub fn group_route(&self, gi: usize, gj: usize) -> &Route {
+        self.routes.route(self.offsets[gi], self.offsets[gj])
+    }
+
+    /// Routed bandwidth between two groups, Gbit/s (the derived matrix
+    /// view; equal to [`Topology::group_route`]'s bottleneck).
+    pub fn group_bw_gbps(&self, gi: usize, gj: usize) -> f64 {
+        self.inter_bw_gbps[gi][gj]
+    }
+
+    /// Routed bandwidth between two devices in Gbit/s.
     pub fn bw_gbps(&self, a: DeviceId, b: DeviceId) -> f64 {
-        if a.group == b.group {
-            if a.idx == b.idx {
-                f64::INFINITY
-            } else {
-                self.groups[a.group].intra_bw_gbps
-            }
-        } else {
-            self.inter_bw_gbps[a.group][b.group]
+        if a == b {
+            return f64::INFINITY;
         }
+        self.route(a, b).bottleneck_gbps
     }
 
     /// Bytes/second between two devices.
@@ -139,8 +339,8 @@ impl Topology {
         self.bw_gbps(a, b) * 1e9 / 8.0
     }
 
-    /// The bottleneck (minimum) pairwise bandwidth among a device set,
-    /// Gbit/s — `tau` in the SFB formulation.
+    /// The bottleneck (minimum) pairwise routed bandwidth among a device
+    /// set, Gbit/s — `tau` in the SFB formulation.
     pub fn bottleneck_bw_gbps(&self, devs: &[DeviceId]) -> f64 {
         let mut min_bw = f64::INFINITY;
         for (i, &a) in devs.iter().enumerate() {
@@ -149,6 +349,45 @@ impl Topology {
             }
         }
         min_bw
+    }
+
+    /// Bottleneck bandwidth *and* worst pairwise path latency of a
+    /// device set in one O(n²) pass.  The bottleneck folds `min` in the
+    /// same pair order as [`Topology::bottleneck_bw_gbps`], so the two
+    /// agree bit for bit; `dist::Lowering` memoizes this per placement
+    /// mask (the satellite of the lowering hot loop).
+    pub fn link_profile(&self, devs: &[DeviceId]) -> LinkProfile {
+        let mut min_bw = f64::INFINITY;
+        let mut max_lat = 0.0f64;
+        for (i, &a) in devs.iter().enumerate() {
+            for &b in &devs[i + 1..] {
+                let r = self.route(a, b);
+                min_bw = min_bw.min(r.bottleneck_gbps);
+                max_lat = max_lat.max(r.latency_s);
+            }
+        }
+        LinkProfile { bottleneck_gbps: min_bw, max_latency_s: max_lat }
+    }
+
+    /// Largest degree among switches attached to the group's devices
+    /// (0 for flat cliques) — a GNN topology-structure feature.
+    pub fn switch_degree(&self, gi: usize) -> usize {
+        (0..self.groups[gi].count)
+            .map(|di| self.graph.attached_switch_degree(self.offsets[gi] + di))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean route length (hops) from group `gi` to every other group —
+    /// a GNN topology-structure feature.  0 for single-group topologies.
+    pub fn mean_group_hops(&self, gi: usize) -> f64 {
+        let m = self.num_groups();
+        if m <= 1 {
+            return 0.0;
+        }
+        let total: usize =
+            (0..m).filter(|&gj| gj != gi).map(|gj| self.group_route(gi, gj).hops()).sum();
+        total as f64 / (m - 1) as f64
     }
 
     /// Total memory across a group, bytes.
@@ -179,6 +418,82 @@ impl Topology {
     }
 }
 
+/// Group-inventory invariants shared by both construction paths.
+fn validate_groups(groups: &[DeviceGroup]) -> Result<()> {
+    let m = groups.len();
+    crate::ensure!(m > 0 && m <= 16, "topology needs 1..=16 device groups, got {m}");
+    for (gi, g) in groups.iter().enumerate() {
+        crate::ensure!(
+            g.count > 0 && g.intra_bw_gbps > 0.0,
+            "device group {gi} must have devices and positive intra bandwidth"
+        );
+    }
+    Ok(())
+}
+
+/// Declared intra bandwidth must be the routed intra-path bottleneck of
+/// *every* device pair in the group (DeviceGroup models homogeneous,
+/// uniformly-connected GPUs) — checked at routed construction and on
+/// every re-validation (a mutated `intra_bw_gbps` is as stale as a
+/// mutated inter matrix: routes, and therefore simulated times, still
+/// use the physical links).
+fn check_intra_matches_routes(
+    groups: &[DeviceGroup],
+    offsets: &[usize],
+    routes: &RouteTable,
+) -> Result<()> {
+    for (gi, g) in groups.iter().enumerate() {
+        for a in 0..g.count {
+            for b in (a + 1)..g.count {
+                let r = routes.route(offsets[gi] + a, offsets[gi] + b);
+                crate::ensure!(
+                    (r.bottleneck_gbps - g.intra_bw_gbps).abs() < 1e-9,
+                    "group {gi}: declared intra bandwidth {} does not match the routed \
+                     path bottleneck {} between its devices {a} and {b} (non-uniform \
+                     fabric or stale derived view — rebuild the topology)",
+                    g.intra_bw_gbps,
+                    r.bottleneck_gbps
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The flat-field invariants shared by construction and re-validation.
+fn validate_flat(groups: &[DeviceGroup], inter: &[Vec<f64>]) -> Result<()> {
+    validate_groups(groups)?;
+    let m = groups.len();
+    crate::ensure!(inter.len() == m, "inter-bw matrix shape: {} rows for {m} groups", inter.len());
+    for row in inter {
+        crate::ensure!(
+            row.len() == m,
+            "inter-bw matrix shape: row of {} for {m} groups",
+            row.len()
+        );
+    }
+    for i in 0..m {
+        for j in 0..m {
+            crate::ensure!(
+                (inter[i][j] - inter[j][i]).abs() < 1e-9,
+                "inter-bw must be symmetric (entry [{i}][{j}])"
+            );
+            crate::ensure!(
+                inter[i][j].is_finite() && inter[i][j] >= 0.0,
+                "inter-bw[{i}][{j}] must be finite and non-negative, got {}",
+                inter[i][j]
+            );
+            if i != j {
+                crate::ensure!(
+                    inter[i][j] > 0.0 || m == 1,
+                    "inter-bw[{i}][{j}] must be positive between distinct groups"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +515,7 @@ mod tests {
         assert_eq!(t.num_devices(), 6);
         assert_eq!(t.devices().len(), 6);
         assert_eq!(t.devices()[2], DeviceId { group: 1, idx: 0 });
+        assert_eq!(t.device_flat_index(DeviceId { group: 1, idx: 2 }), 4);
     }
 
     #[test]
@@ -212,6 +528,10 @@ mod tests {
         assert_eq!(t.bw_gbps(a, c), 25.0);
         assert!(t.bw_gbps(a, a).is_infinite());
         assert_eq!(t.bw_bytes_per_s(a, c), 25.0e9 / 8.0);
+        // Clique routes are the direct links: one hop, zero latency.
+        assert_eq!(t.route(a, c).hops(), 1);
+        assert_eq!(t.route_latency_s(a, c), 0.0);
+        assert!(!t.is_routed());
     }
 
     #[test]
@@ -221,6 +541,18 @@ mod tests {
         assert_eq!(t.bottleneck_bw_gbps(&all), 25.0);
         let intra = &all[2..6];
         assert_eq!(t.bottleneck_bw_gbps(intra), 64.0);
+    }
+
+    #[test]
+    fn link_profile_agrees_with_bottleneck_bit_for_bit() {
+        let t = two_groups();
+        let all = t.devices();
+        let p = t.link_profile(&all);
+        assert_eq!(p.bottleneck_gbps.to_bits(), t.bottleneck_bw_gbps(&all).to_bits());
+        assert_eq!(p.max_latency_s, 0.0, "clique paths have zero latency");
+        // Single-device profile: free link.
+        let solo = t.link_profile(&all[..1]);
+        assert!(solo.bottleneck_gbps.is_infinite());
     }
 
     #[test]
@@ -234,6 +566,17 @@ mod tests {
     }
 
     #[test]
+    fn derived_matrix_matches_group_routes() {
+        let t = two_groups();
+        assert_eq!(t.group_bw_gbps(0, 1), 25.0);
+        assert_eq!(t.group_route(0, 1).bottleneck_gbps.to_bits(), 25.0f64.to_bits());
+        assert!(t.validate().is_ok());
+        // Structure features on a clique: no switches, 1-hop everywhere.
+        assert_eq!(t.switch_degree(0), 0);
+        assert_eq!(t.mean_group_hops(0), 1.0);
+    }
+
+    #[test]
     #[should_panic(expected = "symmetric")]
     fn asymmetric_matrix_rejected() {
         Topology::new(
@@ -244,5 +587,48 @@ mod tests {
             ],
             vec![vec![0.0, 10.0], vec![20.0, 0.0]],
         );
+    }
+
+    #[test]
+    fn try_new_reports_errors_as_values() {
+        let bad = Topology::try_new(
+            "bad",
+            vec![DeviceGroup { gpu: T4, count: 0, intra_bw_gbps: 64.0 }],
+            vec![vec![0.0]],
+        );
+        assert!(bad.unwrap_err().to_string().contains("positive intra bandwidth"));
+        let shape = Topology::try_new(
+            "bad",
+            vec![DeviceGroup { gpu: T4, count: 1, intra_bw_gbps: 64.0 }],
+            vec![],
+        );
+        assert!(shape.unwrap_err().to_string().contains("matrix shape"));
+    }
+
+    #[test]
+    fn stale_derived_view_fails_validation() {
+        let mut t = two_groups();
+        t.inter_bw_gbps[0][1] = 5.0;
+        t.inter_bw_gbps[1][0] = 5.0;
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("stale derived view"), "{err}");
+
+        // A mutated intra bandwidth is just as stale: the routes (and
+        // simulated times) still use the constructed links.
+        let mut t = two_groups();
+        t.groups[0].intra_bw_gbps = 50.0;
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("intra"), "{err}");
+
+        // And so is a group pushed after construction.
+        let mut t = two_groups();
+        t.groups.push(DeviceGroup { gpu: T4, count: 1, intra_bw_gbps: 64.0 });
+        t.inter_bw_gbps = vec![
+            vec![0.0, 25.0, 10.0],
+            vec![25.0, 0.0, 10.0],
+            vec![10.0, 10.0, 0.0],
+        ];
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("group list mutated"), "{err}");
     }
 }

@@ -1,5 +1,9 @@
-//! Cluster presets from the paper's evaluation (§5.2).
+//! Cluster presets: the paper's evaluation clusters (§5.2) in flat
+//! (clique) form, plus hierarchical routed clusters — an NVLink-island
+//! machine pair and a multi-rack oversubscribed-ethernet pod — that
+//! exercise the link-graph routing and contention model.
 
+use super::linkgraph::{LinkGraph, LinkKind};
 use super::{DeviceGroup, GpuType, Topology, GTX1080TI, P100, T4, V100_16G, V100_32G};
 
 /// Build a symmetric inter-group matrix where every pair has `bw` Gbps.
@@ -71,9 +75,73 @@ pub fn single(gpu: GpuType) -> Topology {
     )
 }
 
+/// Hierarchical preset: two DGX-style machines.  Each machine is an
+/// NVLink island — 4x V100-32G fully connected at 200 Gbps — whose GPUs
+/// also hang off a PCIe host bridge (64 Gbps); the two host bridges meet
+/// at a 25 Gbps ethernet switch.  Intra-island traffic routes over
+/// NVLink; cross-machine traffic routes GPU → host bridge → ethernet →
+/// host bridge → GPU and contends for the shared ethernet links.
+pub fn nvlink_island() -> Topology {
+    let groups: Vec<DeviceGroup> = (0..2)
+        .map(|_| DeviceGroup { gpu: V100_32G, count: 4, intra_bw_gbps: 200.0 })
+        .collect();
+    let mut b = LinkGraph::builder();
+    let devs = b.add_group_devices(&groups);
+    let eth = b.add_switch(1);
+    for island in &devs {
+        let bridge = b.add_switch(0);
+        for (i, &a) in island.iter().enumerate() {
+            for &c in &island[i + 1..] {
+                b.link_default(a, c, 200.0, LinkKind::NvLink);
+            }
+            b.link_default(a, bridge, 64.0, LinkKind::Pcie);
+        }
+        b.link_default(bridge, eth, 25.0, LinkKind::Ethernet);
+    }
+    Topology::routed("nvlink-island-2x4xV100", groups, b.build())
+        .expect("nvlink_island preset must be valid")
+}
+
+/// Hierarchical preset: a 4-rack pod on oversubscribed ethernet.  Each
+/// rack holds 3 machines (2x V100-16G, 4x T4, 2x P100 — all PCIe
+/// fabrics at 64 Gbps); machines uplink to their top-of-rack switch at
+/// 25 Gbps, and each ToR uplinks to the spine at 20 Gbps — a 3.75:1
+/// oversubscription, so the per-flow cross-rack bottleneck (20 Gbps)
+/// understates what concurrent cross-rack transfers actually get.  The
+/// largest hierarchical preset; `benches/routing.rs` uses it.
+pub fn multi_rack() -> Topology {
+    const RACKS: usize = 4;
+    const MACHINES: usize = 3;
+    let machine_specs: [(GpuType, usize); MACHINES] =
+        [(V100_16G, 2), (T4, 4), (P100, 2)];
+    let mut groups = Vec::new();
+    for _ in 0..RACKS {
+        for (gpu, count) in machine_specs {
+            groups.push(DeviceGroup { gpu, count, intra_bw_gbps: 64.0 });
+        }
+    }
+    let mut b = LinkGraph::builder();
+    let dev_nodes = b.add_group_devices(&groups);
+    let spine = b.add_switch(2);
+    for rack in 0..RACKS {
+        let tor = b.add_switch(1);
+        b.link_default(tor, spine, 20.0, LinkKind::Ethernet);
+        for machine in 0..MACHINES {
+            let bridge = b.add_switch(0);
+            b.link_default(bridge, tor, 25.0, LinkKind::Ethernet);
+            for &d in &dev_nodes[rack * MACHINES + machine] {
+                b.link_default(d, bridge, 64.0, LinkKind::Pcie);
+            }
+        }
+    }
+    Topology::routed("multi-rack-4x3", groups, b.build())
+        .expect("multi_rack preset must be valid")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::DeviceId;
 
     #[test]
     fn testbed_matches_paper() {
@@ -94,9 +162,62 @@ mod tests {
 
     #[test]
     fn presets_validate() {
-        for t in [testbed(), cloud(), homogeneous(), sfb_pair(), single(P100)] {
-            t.validate();
+        for t in [
+            testbed(),
+            cloud(),
+            homogeneous(),
+            sfb_pair(),
+            single(P100),
+            nvlink_island(),
+            multi_rack(),
+        ] {
+            t.validate().unwrap();
             assert!(t.num_devices() >= 1);
         }
+    }
+
+    #[test]
+    fn nvlink_island_routes_hierarchically() {
+        let t = nvlink_island();
+        assert!(t.is_routed());
+        assert_eq!(t.num_groups(), 2);
+        assert_eq!(t.num_devices(), 8);
+        // Intra-island: direct NVLink.
+        let a = DeviceId { group: 0, idx: 0 };
+        let b = DeviceId { group: 0, idx: 1 };
+        assert_eq!(t.bw_gbps(a, b), 200.0);
+        assert_eq!(t.route(a, b).hops(), 1);
+        // Cross-island: 4 hops through both host bridges + ethernet,
+        // ethernet-bottlenecked, with accumulated latency.
+        let c = DeviceId { group: 1, idx: 0 };
+        assert_eq!(t.bw_gbps(a, c), 25.0);
+        assert_eq!(t.route(a, c).hops(), 4);
+        assert!(t.route_latency_s(a, c) > 0.0);
+        // Derived matrix view matches.
+        assert_eq!(t.inter_bw_gbps[0][1], 25.0);
+        // Structure features see the switches.
+        assert!(t.switch_degree(0) >= 5);
+    }
+
+    #[test]
+    fn multi_rack_is_oversubscribed() {
+        let t = multi_rack();
+        assert!(t.is_routed());
+        assert_eq!(t.num_groups(), 12);
+        assert_eq!(t.num_devices(), 32);
+        // In-rack cross-machine: ToR-bottlenecked at 25 Gbps, 4 hops.
+        assert_eq!(t.group_bw_gbps(0, 1), 25.0);
+        assert_eq!(t.group_route(0, 1).hops(), 4);
+        // Cross-rack: spine-bottlenecked at 20 Gbps, 6 hops.
+        assert_eq!(t.group_bw_gbps(0, 3), 20.0);
+        assert_eq!(t.group_route(0, 3).hops(), 6);
+        // Cross-rack routes share the rack uplinks: both groups 0 and 1
+        // reach rack 1 over the same ToR-spine link.
+        let r0 = t.group_route(0, 3);
+        let r1 = t.group_route(1, 3);
+        assert!(
+            r0.links.iter().any(|l| r1.links.contains(l)),
+            "cross-rack routes must share the oversubscribed uplink"
+        );
     }
 }

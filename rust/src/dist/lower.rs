@@ -18,7 +18,18 @@
 //!
 //! Durations come from the profiler's fitted models: per-(group, GPU)
 //! summed linear batch-time models for compute, the fitted GRPC curve
-//! for transfers, and the ring/PS formulas for syncs.
+//! for transfers, and the ring/PS formulas for syncs.  Every bandwidth
+//! is a **routed query** against the topology's link graph; on flat
+//! clique topologies these reproduce the pre-link-graph matrix bit for
+//! bit.  On routed (switched) topologies each inter-machine transfer
+//! additionally carries its route's link footprint
+//! ([`crate::sim::LinkLoad`]) so concurrent transfers sharing a link —
+//! an oversubscribed spine, a host bridge — contend in the simulator,
+//! and collective times charge their paths' accumulated latency.
+//!
+//! Per-placement-mask link characteristics (`tau`, worst path latency)
+//! are memoized next to the mask's device expansion; hit rates ride in
+//! plan telemetry alongside the evaluation memo's.
 //!
 //! ## Batch shares per replication option
 //!
@@ -47,11 +58,11 @@ use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::Arc;
 
-use crate::cluster::{DeviceId, Topology};
+use crate::cluster::{DeviceId, LinkProfile, Topology};
 use crate::graph::grouping::GroupGraph;
 use crate::profile::{CommModel, CostModel};
 use crate::sfb::SfbPlan;
-use crate::sim::{Simulator, Task, TaskGraph, TaskKind};
+use crate::sim::{LinkLoad, Simulator, Task, TaskGraph, TaskKind};
 use crate::strategy::{full_mask, Action, ReplOption, SplitMode, Strategy};
 
 use super::memo::MemoTable;
@@ -104,6 +115,10 @@ struct MaskInfo {
     dev_count: usize,
     /// Per-device capability share (eff-FLOPs proportional), per machine.
     frac_cap: Vec<f64>,
+    /// Routed bottleneck bandwidth + worst path latency of the mask's
+    /// devices — the memoized `Topology::bottleneck_bw_gbps` of the
+    /// lowering hot loop (previously recomputed O(n²) per evaluation).
+    profile: LinkProfile,
 }
 
 impl MaskInfo {
@@ -144,6 +159,10 @@ pub struct Lowering<'a> {
     pub order: Vec<usize>,
     frag: Fragments,
     masks: RefCell<HashMap<u16, Rc<MaskInfo>>>,
+    /// Hit/miss counters of the per-mask cache (placement expansion +
+    /// link profile), reported alongside the evaluation memo stats.
+    mask_hits: Cell<u64>,
+    mask_misses: Cell<u64>,
     /// Shared concurrent transposition table: per-worker `Lowering`s of a
     /// parallel search clone this `Arc` so outcomes are pooled.
     memo: Arc<MemoTable>,
@@ -211,6 +230,8 @@ impl<'a> Lowering<'a> {
             comm,
             frag,
             masks: RefCell::new(HashMap::new()),
+            mask_hits: Cell::new(0),
+            mask_misses: Cell::new(0),
             memo,
             buffers: RefCell::new(EvalBuffers {
                 tg: TaskGraph::new(0),
@@ -246,6 +267,24 @@ impl<'a> Lowering<'a> {
     /// (hits, misses) of the evaluation transposition table.
     pub fn memo_stats(&self) -> (u64, u64) {
         self.memo.stats()
+    }
+
+    /// (hits, misses) of the per-placement-mask cache (device expansion
+    /// + routed link profile — the memoized bottleneck-bandwidth
+    /// satellite).
+    pub fn mask_memo_stats(&self) -> (u64, u64) {
+        (self.mask_hits.get(), self.mask_misses.get())
+    }
+
+    /// Hits / (hits + misses) of the per-mask cache (0.0 when never
+    /// probed).
+    pub fn mask_memo_hit_rate(&self) -> f64 {
+        let (h, m) = self.mask_memo_stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
     }
 
     /// Hits / (hits + misses) of the transposition table (0.0 when it
@@ -287,8 +326,10 @@ impl<'a> Lowering<'a> {
 
     fn mask_info(&self, mask: u16) -> Rc<MaskInfo> {
         if let Some(info) = self.masks.borrow().get(&mask) {
+            self.mask_hits.set(self.mask_hits.get() + 1);
             return Rc::clone(info);
         }
+        self.mask_misses.set(self.mask_misses.get() + 1);
         let devices = self.topo.mask_devices(mask);
         assert!(!devices.is_empty(), "action mask {mask:#x} selects no devices");
         let mut machines: Vec<usize> = devices.iter().map(|d| d.group).collect();
@@ -303,12 +344,14 @@ impl<'a> Lowering<'a> {
             .iter()
             .map(|&dg| self.topo.groups[dg].gpu.effective_flops() / total_eff)
             .collect();
+        let profile = self.topo.link_profile(&devices);
         let info = Rc::new(MaskInfo {
             dev_count: devices.len(),
             devices,
             machines,
             counts,
             frac_cap,
+            profile,
         });
         self.masks.borrow_mut().insert(mask, Rc::clone(&info));
         info
@@ -369,6 +412,27 @@ impl<'a> Lowering<'a> {
         (self.dev_frac(a, info, mi, split) * info.counts[mi] as f64).min(1.0)
     }
 
+    /// Duration + contention footprint of an inter-machine transfer of
+    /// `bytes` from group `src` to group `dst`.  Flat cliques keep the
+    /// exact fitted-curve duration and no footprint (bit-identical to
+    /// the pre-link-graph lowering); routed topologies split the fixed
+    /// latency (curve intercept + route latency) from the
+    /// bandwidth-scalable share, which the simulator stretches by
+    /// per-link occupancy.
+    fn transfer_task_parts(&self, bytes: f64, src: usize, dst: usize) -> (f64, Option<LinkLoad>) {
+        let bw = self.topo.group_bw_gbps(src, dst) * 1e9 / 8.0;
+        let (fixed, scalable) = self.comm.transfer_parts(bytes, bw);
+        if self.topo.is_routed() {
+            let route = self.topo.group_route(src, dst);
+            (
+                fixed + route.latency_s,
+                Some(LinkLoad { links: route.links.clone(), scalable_s: scalable }),
+            )
+        } else {
+            (fixed + scalable, None)
+        }
+    }
+
     fn lower_and_simulate(
         &self,
         strategy: &Strategy,
@@ -386,6 +450,8 @@ impl<'a> Lowering<'a> {
         let EvalBuffers { tg, sim, comp, penalty } = &mut *bufs;
         tg.tasks.clear();
         tg.num_resources = 2 * m + 1;
+        tg.num_links =
+            if self.topo.is_routed() { self.topo.link_graph().num_links() } else { 0 };
         comp.clear();
         comp.resize(k * m, usize::MAX);
         penalty.clear();
@@ -414,23 +480,38 @@ impl<'a> Lowering<'a> {
                     duration: dur,
                     deps: Vec::new(),
                     kind: TaskKind::Compute { group: g, dev_group: dg },
+                    load: None,
                 });
             }
             if a.option == ReplOption::ModelParallel && info.dev_count > 1 {
                 let bytes = MP_INTERNAL_COMM_FRAC * self.frag.act_bytes[g];
-                let bw = self.topo.bottleneck_bw_gbps(&info.devices) * 1e9 / 8.0;
+                // Memoized routed bottleneck of the placement + worst
+                // path latency (0 on cliques).
+                let bw = info.profile.bottleneck_gbps * 1e9 / 8.0;
+                let src_dg = info.machines[0];
+                let dst_dg = *info.machines.last().unwrap();
+                let (fixed, scalable) = self.comm.transfer_parts(bytes, bw);
+                // On routed topologies the internal cut traffic occupies
+                // the representative cross-placement route, so it both
+                // suffers and causes shared-link contention (cliques
+                // keep the exact pre-link-graph duration).
+                let (duration, load) = if self.topo.is_routed() && src_dg != dst_dg {
+                    let route = self.topo.group_route(src_dg, dst_dg);
+                    (
+                        fixed + info.profile.max_latency_s,
+                        Some(LinkLoad { links: route.links.clone(), scalable_s: scalable }),
+                    )
+                } else {
+                    (fixed + scalable + info.profile.max_latency_s, None)
+                };
                 let deps: Vec<usize> =
                     info.machines.iter().map(|&dg| comp[g * m + dg]).collect();
                 penalty[g] = tg.push(Task {
-                    resource: m + info.machines[0],
-                    duration: self.comm.transfer_time(bytes, bw),
+                    resource: m + src_dg,
+                    duration,
                     deps,
-                    kind: TaskKind::Transfer {
-                        from: g,
-                        to: g,
-                        src_dg: info.machines[0],
-                        dst_dg: *info.machines.last().unwrap(),
-                    },
+                    kind: TaskKind::Transfer { from: g, to: g, src_dg, dst_dg },
+                    load,
                 });
             }
         }
@@ -460,22 +541,24 @@ impl<'a> Lowering<'a> {
                             .iter()
                             .copied()
                             .max_by(|&x, &y| {
-                                self.topo.inter_bw_gbps[x][b]
-                                    .partial_cmp(&self.topo.inter_bw_gbps[y][b])
+                                self.topo
+                                    .group_bw_gbps(x, b)
+                                    .partial_cmp(&self.topo.group_bw_gbps(y, b))
                                     .unwrap()
                                     .then(y.cmp(&x))
                             })
                             .unwrap();
-                        let bw = self.topo.inter_bw_gbps[src][b] * 1e9 / 8.0;
+                        let (duration, load) = self.transfer_task_parts(deficit, src, b);
                         let mut deps = vec![comp[i * m + src]];
                         if penalty[i] != usize::MAX {
                             deps.push(penalty[i]);
                         }
                         let t = tg.push(Task {
                             resource: m + b,
-                            duration: self.comm.transfer_time(deficit, bw),
+                            duration,
                             deps,
                             kind: TaskKind::Transfer { from: i, to: j, src_dg: src, dst_dg: b },
+                            load,
                         });
                         tg.tasks[consumer].deps.push(t);
                     }
@@ -487,23 +570,25 @@ impl<'a> Lowering<'a> {
                         .iter()
                         .copied()
                         .max_by(|&x, &y| {
-                            self.topo.inter_bw_gbps[x][b]
-                                .partial_cmp(&self.topo.inter_bw_gbps[y][b])
+                            self.topo
+                                .group_bw_gbps(x, b)
+                                .partial_cmp(&self.topo.group_bw_gbps(y, b))
                                 .unwrap()
                                 .then(y.cmp(&x))
                         })
                         .unwrap();
                     if need > 1.0 {
-                        let bw = self.topo.inter_bw_gbps[src][b] * 1e9 / 8.0;
+                        let (duration, load) = self.transfer_task_parts(need, src, b);
                         let mut deps = vec![comp[i * m + src]];
                         if penalty[i] != usize::MAX {
                             deps.push(penalty[i]);
                         }
                         let t = tg.push(Task {
                             resource: m + src,
-                            duration: self.comm.transfer_time(need, bw),
+                            duration,
                             deps,
                             kind: TaskKind::Transfer { from: i, to: j, src_dg: src, dst_dg: b },
+                            load,
                         });
                         tg.tasks[consumer].deps.push(t);
                     }
@@ -533,7 +618,7 @@ impl<'a> Lowering<'a> {
             }
             let dur = match a.option {
                 ReplOption::AllReduce => {
-                    self.comm.allreduce_time(sync_bytes, &info.devices, self.topo)
+                    self.comm.allreduce_time_with(sync_bytes, info.dev_count, info.profile)
                 }
                 _ => {
                     let ps = info.devices[g % info.dev_count];
@@ -551,19 +636,29 @@ impl<'a> Lowering<'a> {
                         duration: 0.0,
                         deps: all,
                         kind: TaskKind::Marker,
+                        load: None,
                     });
                 }
                 deps.push(barrier);
             }
-            tg.push(Task { resource: chan, duration: dur, deps, kind: TaskKind::Sync { group: g } });
+            tg.push(Task {
+                resource: chan,
+                duration: dur,
+                deps,
+                kind: TaskKind::Sync { group: g },
+                load: None,
+            });
             if bcast_bytes > 0.0 {
                 let deps: Vec<usize> =
                     info.machines.iter().map(|&dg| comp[g * m + dg]).collect();
                 tg.push(Task {
                     resource: chan,
-                    duration: self.comm.sfb_broadcast_time(bcast_bytes, &info.devices, self.topo),
+                    duration: self
+                        .comm
+                        .sfb_broadcast_time_with(bcast_bytes, info.dev_count, info.profile),
                     deps,
                     kind: TaskKind::Sync { group: g },
+                    load: None,
                 });
             }
         }
@@ -755,6 +850,36 @@ mod tests {
             assert!(v.is_finite() && *v >= 0.0);
         }
         assert!(fbk.devgroup_peak_mem_frac.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn mask_cache_memoizes_link_profiles() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let dp = Strategy::dp_allreduce(gg.num_groups(), &topo);
+        let _ = low.evaluate_uncached(&dp);
+        let (h1, m1) = low.mask_memo_stats();
+        assert!(m1 >= 1, "first evaluation fills the mask cache");
+        let _ = low.evaluate_uncached(&dp);
+        let (h2, m2) = low.mask_memo_stats();
+        assert_eq!(m2, m1, "repeat evaluation computes no new link profiles");
+        assert!(h2 > h1);
+        assert!(low.mask_memo_hit_rate() > 0.0 && low.mask_memo_hit_rate() <= 1.0);
+    }
+
+    #[test]
+    fn routed_topology_evaluates_with_contention_footprints() {
+        // A hierarchical topology lowers and simulates end to end; its
+        // evaluation is deterministic and reports finite times.
+        let topo = crate::cluster::presets::multi_rack();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let s = Strategy::dp_allreduce(gg.num_groups(), &topo);
+        let a = low.evaluate_uncached(&s);
+        let b = low.evaluate_uncached(&s);
+        assert!(a.time.is_finite() && a.time > 0.0);
+        assert_eq!(a, b, "routed evaluation must be deterministic");
     }
 
     #[test]

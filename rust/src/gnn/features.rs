@@ -9,10 +9,20 @@
 //!                 one-hot[undecided, AR, PS, Dup, MP],
 //!                 log1p(makespan ms), log1p(idle-before-send ms),
 //!                 decided, is-next
-//!   dev node (5): #GPUs/8, log1p(mem GB), log1p(intra Gbps),
-//!                 peak-mem fraction, idle fraction
-//!   op-op edge (1): log1p(tensor MB);  dev-dev edge (2): log1p(Gbps),
-//!   link idle;  op-dev edge (1): placement bit.
+//!   dev node (7): #GPUs/8, log1p(mem GB), log1p(intra Gbps),
+//!                 peak-mem fraction, idle fraction,
+//!                 log1p(attached switch degree), mean route hops / 4
+//!   op-op edge (1): log1p(tensor MB);
+//!   dev-dev edge (4): log1p(routed Gbps), link idle, route hops / 8,
+//!                 log1p(route latency us);
+//!   op-dev edge (1): placement bit.
+//!
+//! The dev-node and dev-dev topology-structure features (switch degree,
+//! route length, path latency) come from the topology's link graph —
+//! for flat cliques they collapse to (0, 1-hop, 0 latency), so the GNN
+//! sees graph-structured topologies rather than bare matrices and the
+//! unseen-topology generalization experiments exercise genuinely
+//! routed inputs.
 
 use crate::cluster::Topology;
 use crate::dist::SimOutcome;
@@ -23,7 +33,9 @@ pub const N_OP: usize = 64;
 pub const N_DEV: usize = 16;
 pub const N_CAND: usize = 128;
 pub const F_OP: usize = 11;
-pub const F_DEV: usize = 5;
+pub const F_DEV: usize = 7;
+/// Raw dev-dev edge feature depth (model.py F_EDGE_DD).
+pub const F_DD: usize = 4;
 pub const B_INFER: usize = 8;
 pub const B_TRAIN: usize = 16;
 
@@ -51,7 +63,7 @@ pub struct Position {
     pub dev_feats: Vec<f32>,   // N_DEV * F_DEV
     pub oo_e: Vec<f32>,        // N_OP * N_OP
     pub oo_mask: Vec<f32>,     // N_OP * N_OP
-    pub dd_e: Vec<f32>,        // N_DEV * N_DEV * 2
+    pub dd_e: Vec<f32>,        // N_DEV * N_DEV * F_DD
     pub dd_mask: Vec<f32>,     // N_DEV * N_DEV
     pub od_place: Vec<f32>,    // N_OP * N_DEV
     pub op_mask: Vec<f32>,     // N_OP
@@ -69,7 +81,7 @@ impl Position {
             dev_feats: vec![0.0; N_DEV * F_DEV],
             oo_e: vec![0.0; N_OP * N_OP],
             oo_mask: vec![0.0; N_OP * N_OP],
-            dd_e: vec![0.0; N_DEV * N_DEV * 2],
+            dd_e: vec![0.0; N_DEV * N_DEV * F_DD],
             dd_mask: vec![0.0; N_DEV * N_DEV],
             od_place: vec![0.0; N_OP * N_DEV],
             op_mask: vec![0.0; N_OP],
@@ -168,6 +180,9 @@ impl<'a> FeatureBuilder<'a> {
                 row[3] = fb.devgroup_peak_mem_frac.get(d).copied().unwrap_or(0.0) as f32;
                 row[4] = fb.devgroup_idle.get(d).copied().unwrap_or(0.0) as f32;
             }
+            // Topology-graph structure (0 / 1-hop degenerate on cliques).
+            row[5] = (self.topo.switch_degree(d) as f64).ln_1p() as f32;
+            row[6] = self.topo.mean_group_hops(d) as f32 / 4.0;
             p.dev_mask[d] = 1.0;
         }
 
@@ -182,22 +197,26 @@ impl<'a> FeatureBuilder<'a> {
             }
         }
 
-        // ---- dev-dev edges
+        // ---- dev-dev edges (routed: per-hop bandwidth, path length,
+        // path latency come from the link graph's route table)
         for a in 0..m {
             for b in 0..m {
                 if a == b {
                     continue;
                 }
-                let idx2 = (a * N_DEV + b) * 2;
-                p.dd_e[idx2] = (self.topo.inter_bw_gbps[a][b]).ln_1p() as f32;
+                let idx = (a * N_DEV + b) * F_DD;
+                p.dd_e[idx] = (self.topo.group_bw_gbps(a, b)).ln_1p() as f32;
                 if self.use_feedback {
-                    p.dd_e[idx2 + 1] = fb
+                    p.dd_e[idx + 1] = fb
                         .link_idle
                         .get(a)
                         .and_then(|r| r.get(b))
                         .copied()
                         .unwrap_or(0.0) as f32;
                 }
+                let route = self.topo.group_route(a, b);
+                p.dd_e[idx + 2] = route.hops() as f32 / 8.0;
+                p.dd_e[idx + 3] = ((route.latency_s * 1e6).max(0.0)).ln_1p() as f32;
                 p.dd_mask[a * N_DEV + b] = 1.0;
             }
         }
@@ -319,6 +338,36 @@ mod tests {
         }
         // Raw features still present.
         assert!(p.op_feats[0] > 0.0);
+    }
+
+    #[test]
+    fn topology_structure_features_distinguish_routed_graphs() {
+        // On a flat clique: no switches, 1-hop routes, zero latency.
+        let (gg, topo, actions, out, s) = setup();
+        let fb = FeatureBuilder::new(&gg, &topo, &actions);
+        let p = fb.build(&s, &out, 1);
+        assert_eq!(p.dev_feats[5], 0.0, "clique devices attach to no switch");
+        assert_eq!(p.dev_feats[6], 0.25, "clique routes are all 1 hop");
+        let idx = F_DD; // row (a=0, b=1): dev 0 -> dev 1
+        assert_eq!(p.dd_e[idx + 2], 1.0 / 8.0);
+        assert_eq!(p.dd_e[idx + 3], 0.0);
+
+        // On a hierarchical topology the structure features light up.
+        let htopo = crate::cluster::presets::nvlink_island();
+        let m = models::vgg19(8, 0.25);
+        let cost = CostModel::profile(&m.ops, &unique_gpus(&htopo), 0.0, 1);
+        let hgg = group_ops(&m, &cost, 12, 7);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&hgg, &htopo, &cost, &comm);
+        let hs = Strategy::empty(hgg.num_groups());
+        let hout = low.evaluate(&hs);
+        let hacts = enumerate_actions(&htopo);
+        let hfb = FeatureBuilder::new(&hgg, &htopo, &hacts);
+        let hp = hfb.build(&hs, &hout, 0);
+        assert!(hp.dev_feats[5] > 0.0, "switch degree visible");
+        let idx = F_DD; // row (a=0, b=1): island 0 -> island 1
+        assert_eq!(hp.dd_e[idx + 2], 4.0 / 8.0);
+        assert!(hp.dd_e[idx + 3] > 0.0);
     }
 
     #[test]

@@ -28,6 +28,7 @@ impl GnnService {
     pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifact_dir.as_ref();
         let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        Self::check_feature_shapes(&manifest)?;
         let runtime = Runtime::cpu()?;
         let infer = runtime
             .load_hlo_text(dir.join("gnn_infer.hlo.txt"))
@@ -37,6 +38,32 @@ impl GnnService {
             .context("load train artifact")?;
         let param_count = manifest.constant("PARAM_COUNT") as usize;
         Ok(Self { manifest, runtime, infer, train, param_count })
+    }
+
+    /// Fail fast when the AOT artifacts were compiled against different
+    /// feature shapes than this build (e.g. artifacts predating the
+    /// link-graph features, F_DEV 5 → 7 / dd_e depth 2 → 4).  Without
+    /// this, every inference errors at batch time and the search
+    /// silently degrades to uniform priors.
+    fn check_feature_shapes(manifest: &Manifest) -> Result<()> {
+        let zero = Position::zero();
+        let arrays = zero.arrays();
+        for spec in manifest.inputs_for("infer").iter().skip(1) {
+            let idx = super::features::FEATURE_ORDER
+                .iter()
+                .position(|&n| n == spec.name)
+                .with_context(|| format!("manifest input `{}` unknown to this build", spec.name))?;
+            let per: i64 = spec.dims[1..].iter().product();
+            crate::ensure!(
+                per as usize == arrays[idx].len(),
+                "artifact feature `{}` has {} elements per position but this build \
+                 expects {} — stale artifacts; rerun `make artifacts`",
+                spec.name,
+                per,
+                arrays[idx].len()
+            );
+        }
+        Ok(())
     }
 
     pub fn platform(&self) -> String {
@@ -231,6 +258,29 @@ mod tests {
             return None;
         }
         Some(GnnService::load("artifacts").unwrap())
+    }
+
+    #[test]
+    fn stale_artifact_shapes_rejected_at_load() {
+        // A manifest compiled before the link-graph features (dd_e depth
+        // 2 instead of 4) must fail the shape check with a rerun hint,
+        // not surface later as per-batch inference errors.
+        use crate::gnn::features::{F_DD, N_DEV};
+        let stale = format!(
+            "input infer 0 params 10\ninput infer 1 dd_e 8,{N_DEV},{N_DEV},2\n"
+        );
+        let m = Manifest::parse(&stale).unwrap();
+        let err = GnnService::check_feature_shapes(&m).unwrap_err().to_string();
+        assert!(err.contains("stale artifacts"), "{err}");
+        let fresh = format!(
+            "input infer 0 params 10\ninput infer 1 dd_e 8,{N_DEV},{N_DEV},{F_DD}\n"
+        );
+        let m = Manifest::parse(&fresh).unwrap();
+        assert!(GnnService::check_feature_shapes(&m).is_ok());
+        // Unknown feature names are rejected too.
+        let unknown = "input infer 0 params 10\ninput infer 1 mystery 8,2\n";
+        let m = Manifest::parse(unknown).unwrap();
+        assert!(GnnService::check_feature_shapes(&m).is_err());
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! )
 //! .budget(200, 24)
 //! .seed(42);
-//! let outcome = planner.plan(&request);
+//! let outcome = planner.plan(&request).expect("valid request");
 //! println!("{:.2}x over DP-NCCL", outcome.plan.times.speedup);
 //! std::fs::write("plan.json", outcome.plan.encode()).unwrap();
 //! ```
@@ -47,8 +47,16 @@
 //!   `workers == 1` is byte-identical to the sequential engine, K > 1
 //!   is seed-stable in its budgets/streams but explores an
 //!   OS-schedule-dependent tree (see [`search`] for the contract),
+//! * a **routed device link graph** ([`cluster::linkgraph`]): devices
+//!   *and* switches as nodes, typed links with bandwidth/latency, and a
+//!   deterministic widest-path route table.  Flat matrix topologies
+//!   become clique graphs that reproduce the matrix bit for bit (the
+//!   equivalence contract pinned in `rust/tests/api.rs`); hierarchical
+//!   topologies (NVLink islands, multi-rack oversubscribed ethernet)
+//!   route over switches and contend for shared links,
 //! * a **discrete-event simulator** ([`sim`]) that provides rewards and
-//!   runtime-feedback features,
+//!   runtime-feedback features, with per-link occupancy so concurrent
+//!   transfers through a shared link split its bandwidth,
 //! * a **sufficient-factor-broadcasting optimizer** ([`sfb`]) that solves a
 //!   min-cut-style ILP per gradient,
 //! * a **graph compiler** ([`dist`]) that rewrites the computation graph

@@ -9,6 +9,8 @@
 //! Examples:
 //!   tag search --model VGG19 --topology testbed --iters 200 --scale 0.5
 //!   tag search --model BERT-Small --topology random:42 --gnn artifacts/params_init.bin
+//!   tag search --model VGG19 --topology multi_rack  # routed + contention
+//!   tag search --model VGG19 --topology hier:7      # random hierarchical
 //!   tag search --model VGG19 --out plan.json     # persist the plan
 //!   tag search --model VGG19 --workers=8         # tree-parallel MCTS
 //!   tag train --games 30 --steps 4 --out artifacts/params_trained.bin
@@ -18,7 +20,10 @@
 //! with `-` (e.g. `--scale -0.5`).  `--workers=K` runs K tree-parallel
 //! search workers over a shared tree (K=1, the default, is the exact
 //! sequential engine; K>1 is seed-stable but schedule-dependent —
-//! `--vloss` tunes the virtual-loss penalty).
+//! `--vloss` tunes the virtual-loss penalty).  The `nvlink_island`,
+//! `multi_rack` and `hier:SEED` topologies are *routed*: they carry a
+//! switch-level link graph, and their simulated times include per-hop
+//! latency and shared-link contention.
 
 use tag::api::{
     BaselineSweepBackend, DeploymentPlan, GnnMctsBackend, Parallelism, PlanRequest,
@@ -55,13 +60,22 @@ fn topology_by_name(name: &str) -> Topology {
         "cloud" => presets::cloud(),
         "homogeneous" | "homog" => presets::homogeneous(),
         "sfb" | "sfb_pair" => presets::sfb_pair(),
+        "nvlink_island" | "nvlink" => presets::nvlink_island(),
+        "multi_rack" | "rack" => presets::multi_rack(),
         other => {
             if let Some(seed) = other.strip_prefix("random:") {
                 let seed: u64 = seed.parse().unwrap_or(0);
                 let mut rng = Rng::new(seed);
                 generator::random_topology(&mut rng)
+            } else if let Some(seed) = other.strip_prefix("hier:") {
+                let seed: u64 = seed.parse().unwrap_or(0);
+                let mut rng = Rng::new(seed);
+                generator::random_hierarchical_topology(&mut rng)
             } else {
-                eprintln!("unknown topology {other} (testbed|cloud|homogeneous|sfb|random:SEED)");
+                eprintln!(
+                    "unknown topology {other} (testbed|cloud|homogeneous|sfb|\
+                     nvlink_island|multi_rack|random:SEED|hier:SEED)"
+                );
                 std::process::exit(2)
             }
         }
@@ -140,8 +154,18 @@ fn cmd_search(args: &Args) {
     };
 
     let topo = request.topology.clone();
-    let outcome = planner.plan(&request);
+    let outcome = planner.plan(&request).unwrap_or_else(|e| {
+        eprintln!("planning failed: {e}");
+        std::process::exit(1)
+    });
     let plan = &outcome.plan;
+    if topo.is_routed() {
+        println!(
+            "routed topology: {} nodes, {} links (contention-aware simulation)",
+            topo.link_graph().num_nodes(),
+            topo.link_graph().num_links()
+        );
+    }
     println!(
         "DP-NCCL baseline: {}   TAG: {}   speed-up: {:.2}x   (search {}, backend {})",
         fmt_secs(plan.times.dp_time),
@@ -177,7 +201,13 @@ fn cmd_search(args: &Args) {
 fn cmd_baselines(args: &Args) {
     let request = request_from(args).sfb(false);
     let mut planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
-    let plan = planner.plan(&request).plan;
+    let plan = planner
+        .plan(&request)
+        .unwrap_or_else(|e| {
+            eprintln!("planning failed: {e}");
+            std::process::exit(1)
+        })
+        .plan;
 
     println!("{:<12} {:>14} {:>10}", "baseline", "iter time", "vs DP");
     let dp = plan
@@ -233,7 +263,10 @@ fn cmd_info() {
             g.total_param_bytes() / 1e6
         );
     }
-    println!("\ntopologies: testbed, cloud, homogeneous, sfb, random:SEED");
+    println!(
+        "\ntopologies: testbed, cloud, homogeneous, sfb, random:SEED \
+         (flat)\n            nvlink_island, multi_rack, hier:SEED (routed + contention)"
+    );
     let ready = std::path::Path::new("artifacts/gnn_infer.hlo.txt").exists();
     println!("\nartifacts: {}", if ready { "ready" } else { "missing (run `make artifacts`)" });
     let _ = ReplOption::ALL;

@@ -6,9 +6,18 @@
 //! time(bytes) at a reference bandwidth, then scaled by the actual link
 //! bandwidth.  Small transfers are latency-dominated (the first segment),
 //! large ones bandwidth-dominated (the second).
+//!
+//! All collective formulas are **path-based**: bandwidths come from the
+//! topology's routed link graph (for flat cliques these are the matrix
+//! entries bit for bit), and routed paths additionally charge their
+//! accumulated per-hop latency — zero on clique links, so flat
+//! topologies keep their exact pre-link-graph times.  The collective
+//! variants taking a [`LinkProfile`] let the `dist` lowering reuse its
+//! per-placement-mask cache instead of recomputing the O(n²) bottleneck
+//! per evaluation.
 
 use super::seglin::SegmentedLinear;
-use crate::cluster::{DeviceId, Topology};
+use crate::cluster::{DeviceId, LinkProfile, Topology};
 use crate::util::Rng;
 
 /// Fixed per-message software latency (GRPC serialization + syscalls).
@@ -51,33 +60,48 @@ impl CommModel {
     /// `bw_bytes_per_s`: evaluate the fitted reference curve and rescale
     /// its bandwidth-dependent part.
     pub fn transfer_time(&self, bytes: f64, bw_bytes_per_s: f64) -> f64 {
+        let (lat, bw) = self.transfer_parts(bytes, bw_bytes_per_s);
+        lat + bw
+    }
+
+    /// The transfer time split into its (fixed software-latency,
+    /// bandwidth-scalable) parts — the sum is exactly
+    /// [`CommModel::transfer_time`].  The scalable part is what link
+    /// contention stretches ([`crate::sim::LinkLoad`]).
+    pub fn transfer_parts(&self, bytes: f64, bw_bytes_per_s: f64) -> (f64, f64) {
         if bytes <= 0.0 {
-            return 0.0;
+            return (0.0, 0.0);
         }
         if !bw_bytes_per_s.is_finite() {
-            return 0.0; // same device
+            return (0.0, 0.0); // same device
         }
         let t_ref = self.grpc_curve.eval(bytes);
         let bw_part = bytes / (REF_BW * GOODPUT);
         let lat_part = (t_ref - bw_part).max(0.0);
-        lat_part + bytes / (bw_bytes_per_s * GOODPUT)
+        (lat_part, bytes / (bw_bytes_per_s * GOODPUT))
     }
 
-    /// Ring AllReduce across `devs`: 2(n-1)/n * bytes over the bottleneck
-    /// link + per-step latencies (2(n-1) steps).
+    /// Ring AllReduce across `devs`: 2(n-1)/n * bytes over the routed
+    /// bottleneck + 2(n-1) ring steps, each charged its path latency.
     pub fn allreduce_time(&self, bytes: f64, devs: &[DeviceId], topo: &Topology) -> f64 {
-        let n = devs.len();
+        self.allreduce_time_with(bytes, devs.len(), topo.link_profile(devs))
+    }
+
+    /// [`CommModel::allreduce_time`] with a precomputed device-set link
+    /// profile (the lowering's per-mask cache).
+    pub fn allreduce_time_with(&self, bytes: f64, n: usize, profile: LinkProfile) -> f64 {
         if n <= 1 || bytes <= 0.0 {
             return 0.0;
         }
-        let bw = topo.bottleneck_bw_gbps(devs) * 1e9 / 8.0 * GOODPUT;
+        let bw = profile.bottleneck_gbps * 1e9 / 8.0 * GOODPUT;
         let steps = 2 * (n - 1);
-        2.0 * (n - 1) as f64 / n as f64 * bytes / bw + steps as f64 * RING_STEP_LATENCY_S
+        2.0 * (n - 1) as f64 / n as f64 * bytes / bw
+            + steps as f64 * (RING_STEP_LATENCY_S + profile.max_latency_s)
     }
 
     /// PS synchronization: all workers push to `ps` and pull back.  The
-    /// PS NIC serializes: total 2(n-1) transfers of `bytes` through the
-    /// slowest worker-PS link.
+    /// PS NIC serializes: total 2(n-1) transfers of `bytes` through each
+    /// worker's routed path to the PS (bandwidth + path latency).
     pub fn ps_time(&self, bytes: f64, devs: &[DeviceId], ps: DeviceId, topo: &Topology) -> f64 {
         let workers: Vec<DeviceId> = devs.iter().copied().filter(|&d| d != ps).collect();
         if workers.is_empty() || bytes <= 0.0 {
@@ -86,28 +110,73 @@ impl CommModel {
         let mut total = 0.0;
         for w in &workers {
             let bw = topo.bw_bytes_per_s(*w, ps);
-            total += 2.0 * self.transfer_time(bytes, bw);
+            total += 2.0 * (self.transfer_time(bytes, bw) + topo.route_latency_s(*w, ps));
         }
         total
     }
 
     /// SFB broadcast of sufficient factors (paper's second objective
-    /// term): D(D-1) transfers of `bytes` over the bottleneck bandwidth
-    /// `tau` among the D devices.
+    /// term): D(D-1) transfers of `bytes` over the routed bottleneck
+    /// bandwidth `tau` among the D devices, each charged the worst path
+    /// latency.
     pub fn sfb_broadcast_time(&self, bytes: f64, devs: &[DeviceId], topo: &Topology) -> f64 {
-        let d = devs.len();
+        self.sfb_broadcast_time_with(bytes, devs.len(), topo.link_profile(devs))
+    }
+
+    /// [`CommModel::sfb_broadcast_time`] with a precomputed device-set
+    /// link profile.
+    pub fn sfb_broadcast_time_with(&self, bytes: f64, d: usize, profile: LinkProfile) -> f64 {
         if d <= 1 || bytes <= 0.0 {
             return 0.0;
         }
-        let tau = topo.bottleneck_bw_gbps(devs) * 1e9 / 8.0 * GOODPUT;
-        (d * (d - 1)) as f64 * bytes / tau
+        let tau = profile.bottleneck_gbps * 1e9 / 8.0 * GOODPUT;
+        (d * (d - 1)) as f64 * bytes / tau + (d * (d - 1)) as f64 * profile.max_latency_s
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::presets::{sfb_pair, testbed};
+    use crate::cluster::presets::{nvlink_island, sfb_pair, testbed};
+
+    #[test]
+    fn transfer_parts_sum_to_transfer_time() {
+        let m = CommModel::fit(1);
+        for bytes in [0.0, 1024.0, 1e6, 512e6] {
+            for bw in [10e9 / 8.0, 100e9 / 8.0, f64::INFINITY] {
+                let (lat, scal) = m.transfer_parts(bytes, bw);
+                assert_eq!((lat + scal).to_bits(), m.transfer_time(bytes, bw).to_bits());
+                assert!(lat >= 0.0 && scal >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn routed_paths_charge_their_latency() {
+        let m = CommModel::fit(9);
+        let t = nvlink_island();
+        let devs = t.devices();
+        let p = t.link_profile(&devs);
+        assert!(p.max_latency_s > 0.0, "cross-island paths have hop latency");
+        let zero_lat = LinkProfile { max_latency_s: 0.0, ..p };
+        let b = 1e6;
+        assert!(
+            m.allreduce_time_with(b, devs.len(), p)
+                > m.allreduce_time_with(b, devs.len(), zero_lat)
+        );
+        assert!(
+            m.sfb_broadcast_time_with(b, devs.len(), p)
+                > m.sfb_broadcast_time_with(b, devs.len(), zero_lat)
+        );
+        // Clique profiles are latency-free, so the `_with` variants agree
+        // with the device-set forms bit for bit.
+        let tb = testbed();
+        let cross = tb.mask_devices(0b11);
+        assert_eq!(
+            m.allreduce_time(b, &cross, &tb).to_bits(),
+            m.allreduce_time_with(b, cross.len(), tb.link_profile(&cross)).to_bits()
+        );
+    }
 
     #[test]
     fn fitted_curve_close_to_truth() {

@@ -17,6 +17,19 @@
 //!   buffers across runs; `dist::Lowering` evaluates hundreds of task
 //!   graphs per search, and reallocation would dominate the simulation
 //!   itself.  [`simulate`] stays as the one-shot convenience wrapper.
+//!
+//! ## Link contention
+//!
+//! A task with a [`LinkLoad`](super::LinkLoad) occupies its physical
+//! links for its whole execution.  At dispatch the engine bumps each
+//! link's occupancy counter and stretches the task's bandwidth-scalable
+//! share by the worst counter along the path (including itself):
+//! `effective = duration + scalable_s * max_occupancy`.  The share is a
+//! *start-time snapshot* — later arrivals slow themselves, not already
+//! in-flight transfers — an approximation that keeps the engine
+//! single-pass and deterministic.  Tasks without loads (all tasks
+//! lowered from flat clique topologies) take `duration` verbatim, so
+//! their schedules are bit-identical to the pre-contention engine.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -73,11 +86,15 @@ pub struct Simulator {
     queues: Vec<BinaryHeap<Key>>,
     resource_free: Vec<bool>,
     events: BinaryHeap<Key>,
+    /// In-flight transfer count per physical link id.
+    link_active: Vec<u32>,
 }
 
 /// Try to start work on resource `r` at time `now`.  Tasks are enqueued
 /// exactly when they become ready, so the head's ready time never lies
 /// in the future; `now.max(ready)` keeps only-ready dispatch explicit.
+/// Starting a task with a link load bumps its links' occupancy and
+/// stretches the scalable share by the worst sharing factor.
 #[allow(clippy::too_many_arguments)]
 fn try_start(
     r: usize,
@@ -85,6 +102,7 @@ fn try_start(
     tg: &TaskGraph,
     queues: &mut [BinaryHeap<Key>],
     resource_free: &mut [bool],
+    link_active: &mut [u32],
     start: &mut [f64],
     busy: &mut [f64],
     events: &mut BinaryHeap<Key>,
@@ -96,11 +114,20 @@ fn try_start(
         return;
     };
     let begin = now.max(ready);
+    let task = &tg.tasks[id];
+    let mut dur = task.duration;
+    if let Some(load) = &task.load {
+        let mut sharing = 0u32;
+        for &l in load.links.iter() {
+            link_active[l as usize] += 1;
+            sharing = sharing.max(link_active[l as usize]);
+        }
+        dur += load.scalable_s * sharing as f64;
+    }
     start[id] = begin;
-    let f = begin + tg.tasks[id].duration;
-    busy[r] += tg.tasks[id].duration;
+    busy[r] += dur;
     resource_free[r] = false;
-    events.push(Key(f, id));
+    events.push(Key(begin + dur, id));
 }
 
 impl Simulator {
@@ -114,7 +141,8 @@ impl Simulator {
         let n = tg.tasks.len();
         let nr = tg.num_resources;
 
-        let Simulator { indeg, succs, ready_at, queues, resource_free, events } = self;
+        let Simulator { indeg, succs, ready_at, queues, resource_free, events, link_active } =
+            self;
         indeg.clear();
         indeg.resize(n, 0);
         ready_at.clear();
@@ -134,6 +162,8 @@ impl Simulator {
         resource_free.clear();
         resource_free.resize(nr, true);
         events.clear();
+        link_active.clear();
+        link_active.resize(tg.num_links, 0);
 
         for (i, t) in tg.tasks.iter().enumerate() {
             indeg[i] = t.deps.len();
@@ -153,7 +183,17 @@ impl Simulator {
             }
         }
         for r in 0..nr {
-            try_start(r, 0.0, tg, queues, resource_free, &mut start, &mut busy, events);
+            try_start(
+                r,
+                0.0,
+                tg,
+                queues,
+                resource_free,
+                link_active,
+                &mut start,
+                &mut busy,
+                events,
+            );
         }
 
         while let Some(Key(t_ev, id)) = events.pop() {
@@ -162,6 +202,11 @@ impl Simulator {
             completed += 1;
             let r = tg.tasks[id].resource;
             resource_free[r] = true;
+            if let Some(load) = &tg.tasks[id].load {
+                for &l in load.links.iter() {
+                    link_active[l as usize] -= 1;
+                }
+            }
             // Release successors (enqueued exactly at their ready time).
             for &s in &succs[id] {
                 indeg[s] -= 1;
@@ -172,10 +217,30 @@ impl Simulator {
             }
             // Start next work on this resource and any resource whose queue
             // just gained a task.
-            try_start(r, now, tg, queues, resource_free, &mut start, &mut busy, events);
+            try_start(
+                r,
+                now,
+                tg,
+                queues,
+                resource_free,
+                link_active,
+                &mut start,
+                &mut busy,
+                events,
+            );
             for &s in &succs[id] {
                 let rs = tg.tasks[s].resource;
-                try_start(rs, now, tg, queues, resource_free, &mut start, &mut busy, events);
+                try_start(
+                    rs,
+                    now,
+                    tg,
+                    queues,
+                    resource_free,
+                    link_active,
+                    &mut start,
+                    &mut busy,
+                    events,
+                );
             }
         }
 
@@ -193,10 +258,20 @@ pub fn simulate(tg: &TaskGraph) -> Schedule {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{Task, TaskKind};
+    use crate::sim::{LinkLoad, Task, TaskKind};
 
     fn t(resource: usize, duration: f64, deps: &[usize]) -> Task {
-        Task { resource, duration, deps: deps.to_vec(), kind: TaskKind::Marker }
+        Task { resource, duration, deps: deps.to_vec(), kind: TaskKind::Marker, load: None }
+    }
+
+    fn loaded(resource: usize, fixed: f64, scalable: f64, links: &[u32]) -> Task {
+        Task {
+            resource,
+            duration: fixed,
+            deps: Vec::new(),
+            kind: TaskKind::Marker,
+            load: Some(LinkLoad { links: links.into(), scalable_s: scalable }),
+        }
     }
 
     #[test]
@@ -240,5 +315,59 @@ mod tests {
                 assert!(s.start[i] >= s.finish[d] - 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn shared_link_contention_stretches_the_later_transfer() {
+        // Two transfers on different NICs (resources) share link 0: the
+        // first dispatches alone (occupancy 1, full share), the second
+        // dispatches while the first is in flight (occupancy 2, half
+        // share => twice the scalable time).
+        let mut tg = TaskGraph::new(2);
+        tg.num_links = 2;
+        let a = tg.push(loaded(0, 0.1, 1.0, &[0, 1]));
+        let b = tg.push(loaded(1, 0.1, 1.0, &[0]));
+        let s = simulate(&tg);
+        assert_eq!(s.finish[a], 0.1 + 1.0);
+        assert_eq!(s.finish[b], 0.1 + 2.0);
+        assert_eq!(s.busy[1], 2.1);
+    }
+
+    #[test]
+    fn disjoint_links_do_not_contend() {
+        let mut tg = TaskGraph::new(2);
+        tg.num_links = 2;
+        let a = tg.push(loaded(0, 0.0, 1.0, &[0]));
+        let b = tg.push(loaded(1, 0.0, 1.0, &[1]));
+        let s = simulate(&tg);
+        assert_eq!(s.finish[a], 1.0);
+        assert_eq!(s.finish[b], 1.0);
+    }
+
+    #[test]
+    fn occupancy_releases_on_completion() {
+        // The second wave of transfers starts after the first completes
+        // and must get a full share again (serialized by dependency).
+        let mut tg = TaskGraph::new(2);
+        tg.num_links = 1;
+        let a = tg.push(loaded(0, 0.0, 1.0, &[0]));
+        let mut late = loaded(1, 0.0, 1.0, &[0]);
+        late.deps.push(a);
+        let b = tg.push(late);
+        let s = simulate(&tg);
+        assert_eq!(s.finish[a], 1.0);
+        assert_eq!(s.finish[b], 2.0, "full share after the link frees up");
+    }
+
+    #[test]
+    fn loadless_graphs_ignore_link_state() {
+        // A graph with links declared but no loads behaves exactly like
+        // the plain engine.
+        let mut tg = TaskGraph::new(1);
+        tg.num_links = 4;
+        let a = tg.push(t(0, 1.0, &[]));
+        tg.push(t(0, 2.0, &[a]));
+        let s = simulate(&tg);
+        assert_eq!(s.makespan, 3.0);
     }
 }

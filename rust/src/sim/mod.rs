@@ -9,6 +9,18 @@
 //! compiler lowers (group graph, topology, strategy) into such a task
 //! graph and interprets the schedule for memory and feedback features.
 //!
+//! ## Link contention
+//!
+//! Tasks may additionally carry a [`LinkLoad`]: the physical link ids
+//! (into the topology's [`crate::cluster::LinkGraph`]) the task's bytes
+//! traverse plus the bandwidth-scalable share of its duration.  The
+//! engine keeps a per-link occupancy count and stretches the scalable
+//! share by the worst sharing factor along the path — concurrent
+//! transfers through one oversubscribed spine link each get a fraction
+//! of it.  Tasks without loads behave exactly as before the contention
+//! model existed (bit-identical schedules), which is how flat clique
+//! topologies keep their pre-link-graph behavior.
+//!
 //! [`dist`]: crate::dist
 
 pub mod engine;
@@ -29,24 +41,47 @@ pub enum TaskKind {
     Marker,
 }
 
+/// The physical-link footprint of a transfer task: which links its
+/// bytes traverse and how much of its duration scales with the
+/// bandwidth share it gets on them.  The effective duration becomes
+/// `duration + scalable_s * sharing` where `sharing` is the worst
+/// per-link occupancy (including this transfer) at dispatch time — a
+/// start-time snapshot that keeps the engine event-driven.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkLoad {
+    /// Link ids into the topology's link graph; must be `< num_links`.
+    /// Shared with the route table (`Arc`), so stamping a task is a
+    /// refcount bump, not an allocation.
+    pub links: std::sync::Arc<[u32]>,
+    /// Seconds of pure bandwidth time at an uncontended full share.
+    pub scalable_s: f64,
+}
+
 #[derive(Clone, Debug)]
 pub struct Task {
     pub resource: usize,
+    /// Fixed duration share (latency, or the whole duration for tasks
+    /// without a [`LinkLoad`]).
     pub duration: f64,
     pub deps: Vec<usize>,
     pub kind: TaskKind,
+    /// Contention footprint; `None` = no link sharing (the duration is
+    /// taken verbatim).
+    pub load: Option<LinkLoad>,
 }
 
-/// A simulation input: tasks + the number of serial resources.
+/// A simulation input: tasks + the number of serial resources + the
+/// number of physical links the tasks' [`LinkLoad`]s may reference.
 #[derive(Clone, Debug, Default)]
 pub struct TaskGraph {
     pub tasks: Vec<Task>,
     pub num_resources: usize,
+    pub num_links: usize,
 }
 
 impl TaskGraph {
     pub fn new(num_resources: usize) -> Self {
-        Self { tasks: Vec::new(), num_resources }
+        Self { tasks: Vec::new(), num_resources, num_links: 0 }
     }
 
     pub fn push(&mut self, t: Task) -> usize {
@@ -57,6 +92,14 @@ impl TaskGraph {
             "task duration must be finite and non-negative, got {}",
             t.duration
         );
+        if let Some(load) = &t.load {
+            assert!(
+                load.scalable_s.is_finite() && load.scalable_s >= 0.0,
+                "scalable duration must be finite and non-negative, got {}",
+                load.scalable_s
+            );
+            debug_assert!(load.links.iter().all(|&l| (l as usize) < self.num_links));
+        }
         debug_assert!(t.resource < self.num_resources);
         debug_assert!(t.deps.iter().all(|&d| d < self.tasks.len()));
         self.tasks.push(t);
@@ -77,7 +120,7 @@ mod tests {
     use super::*;
 
     fn t(resource: usize, duration: f64, deps: &[usize]) -> Task {
-        Task { resource, duration, deps: deps.to_vec(), kind: TaskKind::Marker }
+        Task { resource, duration, deps: deps.to_vec(), kind: TaskKind::Marker, load: None }
     }
 
     #[test]
@@ -180,5 +223,15 @@ mod tests {
     fn negative_duration_rejected_at_push() {
         let mut tg = TaskGraph::new(1);
         tg.push(t(0, -1.0, &[]));
+    }
+
+    #[test]
+    #[should_panic(expected = "scalable duration")]
+    fn nan_scalable_duration_rejected_at_push() {
+        let mut tg = TaskGraph::new(1);
+        tg.num_links = 1;
+        let mut task = t(0, 0.0, &[]);
+        task.load = Some(LinkLoad { links: vec![0].into(), scalable_s: f64::NAN });
+        tg.push(task);
     }
 }

@@ -105,7 +105,8 @@ pub fn baechi_msct(low: &Lowering) -> Strategy {
         let mut best_dev = 0;
         let mut best_fin = f64::INFINITY;
         for (di, d) in devices.iter().enumerate() {
-            // Inputs must arrive from their producers.
+            // Inputs must arrive from their producers over their routed
+            // paths (bandwidth + path latency; latency is 0 on cliques).
             let mut ready = 0.0f64;
             for p in 0..g {
                 let bytes = gg.edges[p][g];
@@ -114,7 +115,9 @@ pub fn baechi_msct(low: &Lowering) -> Strategy {
                 }
                 let src = devices[placed_dev[p]];
                 let bw = topo.bw_bytes_per_s(src, *d);
-                let arrive = finish[p] + low.comm.transfer_time(bytes, bw);
+                let arrive = finish[p]
+                    + low.comm.transfer_time(bytes, bw)
+                    + topo.route_latency_s(src, *d);
                 ready = ready.max(arrive);
             }
             let start = ready.max(avail[di]);

@@ -1,18 +1,23 @@
 //! API-surface integration tests: planner determinism (with and without
-//! the plan cache), lossless plan JSON round-trips, and full baseline
-//! coverage on the paper's preset topologies.
+//! the plan cache), lossless plan JSON round-trips, full baseline
+//! coverage on the paper's preset topologies, the flat-matrix ⇒
+//! clique-link-graph equivalence contract, and the hierarchical
+//! (routed, contention-aware) planning path.
 
 use tag::api::{
-    BaselineSweepBackend, DeploymentPlan, MctsBackend, PlanRequest, Planner,
-    BASELINE_NAMES,
+    fingerprint, BaselineSweepBackend, DeploymentPlan, MctsBackend, PlanRequest,
+    Planner, BASELINE_NAMES,
 };
-use tag::cluster::presets::{homogeneous, sfb_pair, testbed};
+use tag::cluster::presets::{
+    cloud, homogeneous, multi_rack, nvlink_island, sfb_pair, testbed,
+};
+use tag::cluster::Topology;
 use tag::coordinator::{prepare, SearchConfig};
 use tag::dist::Lowering;
 use tag::mcts::{Mcts, UniformPrior};
 use tag::models;
 use tag::search::{run_search, Parallelism, SearchProblem};
-use tag::strategy::{baselines, enumerate_actions};
+use tag::strategy::{baselines, enumerate_actions, Strategy};
 
 fn request(seed: u64) -> PlanRequest {
     PlanRequest::new(models::vgg19(8, 0.25), testbed()).budget(40, 12).seed(seed)
@@ -22,15 +27,15 @@ fn request(seed: u64) -> PlanRequest {
 fn plans_are_deterministic_with_cache_on_and_off() {
     // Cache off: two independent searches must agree bit-for-bit.
     let mut cold = Planner::builder().without_cache().build();
-    let a = cold.plan(&request(3));
-    let b = cold.plan(&request(3));
+    let a = cold.plan(&request(3)).unwrap();
+    let b = cold.plan(&request(3)).unwrap();
     assert!(!a.cache_hit && !b.cache_hit);
     assert_eq!(a.plan, b.plan);
 
     // Cache on: the served copy is the same plan again.
     let mut warm = Planner::builder().build();
-    let c = warm.plan(&request(3));
-    let d = warm.plan(&request(3));
+    let c = warm.plan(&request(3)).unwrap();
+    let d = warm.plan(&request(3)).unwrap();
     assert!(!c.cache_hit && d.cache_hit);
     assert_eq!(c.plan, d.plan);
 
@@ -41,12 +46,147 @@ fn plans_are_deterministic_with_cache_on_and_off() {
     assert_eq!(a.plan.encode(), d.plan.encode());
 }
 
+/// The pre-link-graph topology fingerprint, reimplemented verbatim:
+/// group inventory + flat matrix, nothing else.  Clique topologies must
+/// keep exactly this fingerprint so every plan cached before the
+/// refactor stays addressable.
+fn flat_fingerprint_reference(topo: &Topology) -> u64 {
+    let mut h = fingerprint::Fnv::new();
+    h.write_usize(topo.num_groups());
+    for g in &topo.groups {
+        h.write_str(g.gpu.name);
+        h.write_f64(g.gpu.peak_tflops);
+        h.write_f64(g.gpu.efficiency);
+        h.write_f64(g.gpu.mem_gb);
+        h.write_usize(g.count);
+        h.write_f64(g.intra_bw_gbps);
+    }
+    for row in &topo.inter_bw_gbps {
+        for &bw in row {
+            h.write_f64(bw);
+        }
+    }
+    h.finish()
+}
+
+#[test]
+fn clique_link_graph_reproduces_the_flat_matrix_bit_for_bit() {
+    // The equivalence contract of the link-graph refactor: for every
+    // preset, (1) routed bandwidth queries reproduce the flat matrix /
+    // intra lookups exactly, (2) the O(n²) bottleneck agrees with an
+    // inline flat reference, (3) clique routes add no hops or latency,
+    // and (4) the topology fingerprint is byte-identical to the
+    // pre-refactor scheme.
+    for topo in [testbed(), cloud(), homogeneous(), sfb_pair()] {
+        assert!(!topo.is_routed(), "{}: flat presets stay cliques", topo.name);
+        let devs = topo.devices();
+        let mut flat_min = f64::INFINITY;
+        for (i, &a) in devs.iter().enumerate() {
+            for &b in &devs[i..] {
+                let expect = if a == b {
+                    f64::INFINITY
+                } else if a.group == b.group {
+                    topo.groups[a.group].intra_bw_gbps
+                } else {
+                    topo.inter_bw_gbps[a.group][b.group]
+                };
+                assert_eq!(
+                    topo.bw_gbps(a, b).to_bits(),
+                    expect.to_bits(),
+                    "{}: bw({a:?}, {b:?})",
+                    topo.name
+                );
+                if a != b {
+                    flat_min = flat_min.min(expect);
+                    assert_eq!(topo.route(a, b).hops(), 1);
+                    assert_eq!(topo.route_latency_s(a, b), 0.0);
+                }
+            }
+        }
+        assert_eq!(
+            topo.bottleneck_bw_gbps(&devs).to_bits(),
+            flat_min.to_bits(),
+            "{}: bottleneck",
+            topo.name
+        );
+        assert_eq!(
+            fingerprint::topology(&topo),
+            flat_fingerprint_reference(&topo),
+            "{}: clique fingerprints must stay pre-refactor-identical",
+            topo.name
+        );
+    }
+}
+
+#[test]
+fn rebuilt_flat_topology_serves_identical_plans() {
+    // A Topology reconstructed from a preset's public (groups, matrix)
+    // view is the same deployment problem: same fingerprint, same plan,
+    // and it *hits* the first topology's cache entry.
+    let orig = request(3);
+    let rebuilt = PlanRequest::new(
+        models::vgg19(8, 0.25),
+        Topology::new("rebuilt", orig.topology.groups.clone(), orig.topology.inter_bw_gbps.clone()),
+    )
+    .budget(40, 12)
+    .seed(3);
+    let mut planner = Planner::builder().build();
+    let a = planner.plan(&orig).unwrap();
+    let b = planner.plan(&rebuilt).unwrap();
+    assert!(!a.cache_hit && b.cache_hit);
+    assert_eq!(a.plan, b.plan);
+    assert_eq!(a.plan.encode(), b.plan.encode());
+}
+
+#[test]
+fn hierarchical_preset_plans_end_to_end_with_contention() {
+    // A routed preset goes through the full Planner path...
+    let mut planner = Planner::builder().build();
+    let req = |topo: &Topology| {
+        PlanRequest::new(models::vgg19(8, 0.25), topo.clone()).budget(30, 10).seed(3)
+    };
+    let routed = nvlink_island();
+    let out = planner.plan(&req(&routed)).unwrap();
+    assert!(out.plan.times.final_time.is_finite() && out.plan.times.final_time > 0.0);
+    assert!(out.plan.times.speedup >= 1.0 - 1e-9);
+    let back = DeploymentPlan::decode(&out.plan.encode()).unwrap();
+    assert_eq!(back, out.plan);
+
+    // ...and its simulated times differ from the naive bottleneck model
+    // (the same cluster flattened to its derived pairwise matrix):
+    // routed paths charge per-hop latency and concurrent transfers
+    // share links, which per-flow bottlenecks cannot see.
+    let flattened =
+        Topology::new("flattened", routed.groups.clone(), routed.inter_bw_gbps.clone());
+    let flat_out = planner.plan(&req(&flattened)).unwrap();
+    assert_ne!(
+        out.plan.topology_fingerprint, flat_out.plan.topology_fingerprint,
+        "routed and flattened topologies must never share cache entries"
+    );
+    let cfg = req(&routed).search_config();
+    let prep = prepare(models::vgg19(8, 0.25), &routed, &cfg);
+    let low_routed = Lowering::new(&prep.gg, &routed, &prep.cost, &prep.comm);
+    let low_flat = Lowering::new(&prep.gg, &flattened, &prep.cost, &prep.comm);
+    let dp = Strategy::dp_allreduce(prep.gg.num_groups(), &routed);
+    let t_routed = low_routed.evaluate(&dp).time;
+    let t_flat = low_flat.evaluate(&dp).time;
+    assert!(
+        t_routed > t_flat,
+        "contention + path latency must cost more than the naive bottleneck model \
+         (routed {t_routed} vs flat {t_flat})"
+    );
+
+    // The largest hierarchical preset also plans end to end.
+    let big = planner.plan(&req(&multi_rack())).unwrap();
+    assert!(big.plan.times.final_time.is_finite() && big.plan.times.speedup >= 1.0 - 1e-9);
+}
+
 #[test]
 fn plan_json_round_trip_is_lossless() {
     let mut planner = Planner::builder().without_cache().build();
     // Cover both SFB-on (Some(time_with_sfb), Some(sfb)) and SFB-off.
     for req in [request(5), request(5).sfb(false)] {
-        let plan = planner.plan(&req).plan;
+        let plan = planner.plan(&req).unwrap().plan;
         let json = plan.encode();
         let back = DeploymentPlan::decode(&json).expect("decode");
         assert_eq!(back, plan);
@@ -65,10 +205,10 @@ fn equal_problems_share_cache_entries_across_request_values() {
     // Fingerprints key on structure: a *new* but identical request value
     // (fresh model generation, renamed topology) must hit the cache.
     let mut planner = Planner::builder().build();
-    let first = planner.plan(&request(7));
+    let first = planner.plan(&request(7)).unwrap();
     let mut renamed = request(7);
     renamed.topology.name = "testbed-imposter".into();
-    let second = planner.plan(&renamed);
+    let second = planner.plan(&renamed).unwrap();
     assert!(!first.cache_hit && second.cache_hit);
     assert_eq!(first.plan, second.plan);
 }
@@ -85,8 +225,8 @@ fn backend_identity_partitions_the_cache() {
     assert_ne!(k_default, rootless.key_for(&request(3)));
     assert_ne!(sweep.key_for(&request(3)), rootless.key_for(&request(3)));
     // And the plans really differ in provenance.
-    assert_eq!(sweep.plan(&request(3)).plan.backend, "baseline-sweep");
-    assert_eq!(rootless.plan(&request(3)).plan.backend, "mcts");
+    assert_eq!(sweep.plan(&request(3)).unwrap().plan.backend, "baseline-sweep");
+    assert_eq!(rootless.plan(&request(3)).unwrap().plan.backend, "mcts");
 }
 
 #[test]
@@ -137,7 +277,7 @@ fn baseline_sweep_backend_covers_the_roster_on_two_presets() {
             .budget(30, 10)
             .seed(2)
             .sfb(false);
-        let plan = planner.plan(&req).plan;
+        let plan = planner.plan(&req).unwrap().plan;
         for name in BASELINE_NAMES {
             let t = plan
                 .telemetry
@@ -202,8 +342,8 @@ fn workers_one_is_byte_identical_to_the_sequential_engine() {
     // and the same cache identity — byte for byte.
     let mut a = Planner::builder().without_cache().build();
     let mut b = Planner::builder().without_cache().build();
-    let p1 = a.plan(&request(3));
-    let p2 = b.plan(&request(3).workers(1));
+    let p1 = a.plan(&request(3)).unwrap();
+    let p2 = b.plan(&request(3).workers(1)).unwrap();
     assert_eq!(p1.plan, p2.plan);
     assert_eq!(p1.plan.encode(), p2.plan.encode());
 }
@@ -214,7 +354,7 @@ fn parallel_workers_smoke_and_telemetry_roundtrip() {
     // iteration counts are the exact static split, memo/eval hit rates
     // ride in telemetry, and everything round-trips through JSON.
     let mut planner = Planner::builder().without_cache().build();
-    let out = planner.plan(&request(3).workers(4));
+    let out = planner.plan(&request(3).workers(4)).unwrap();
     let p = &out.plan;
     assert!(p.times.final_time.is_finite() && p.times.final_time > 0.0);
     assert!(p.times.speedup > 0.0);
@@ -246,10 +386,10 @@ fn prepared_state_survives_budget_changes_but_plans_differ() {
     // the planner reuses prepared state yet produces distinct cached
     // entries with possibly different strategies.
     let mut planner = Planner::builder().build();
-    let small = planner.plan(&request(3));
-    let big = planner.plan(&PlanRequest::new(models::vgg19(8, 0.25), testbed())
-        .budget(80, 12)
-        .seed(3));
+    let small = planner.plan(&request(3)).unwrap();
+    let big = planner
+        .plan(&PlanRequest::new(models::vgg19(8, 0.25), testbed()).budget(80, 12).seed(3))
+        .unwrap();
     assert!(!big.cache_hit);
     assert_eq!(
         small.plan.model_fingerprint, big.plan.model_fingerprint,

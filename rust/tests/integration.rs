@@ -175,7 +175,7 @@ fn gnn_guided_search_with_artifacts() {
         tag::api::PlanRequest::new(models::inception_v3(8, 0.25), testbed())
             .budget(40, 12)
             .seed(19);
-    let plan = planner.plan(&request).plan;
+    let plan = planner.plan(&request).expect("plan").plan;
     assert_eq!(plan.backend, "gnn-mcts");
     assert!(plan.times.speedup >= 1.0 - 1e-9);
     assert!(plan.telemetry.metric("gnn_evals").unwrap_or(0.0) > 0.0);

@@ -11,8 +11,11 @@
 //!  * comm model: monotone in bytes, inverse-monotone in bandwidth
 //!  * strategies: evaluation finite for arbitrary random strategies
 //!  * dist memo: cached and cache-bypassed evaluation bit-identical
+//!  * cluster generator: random flat and hierarchical topologies always
+//!    validate; bandwidth symmetric; routes exist between all device
+//!    pairs; a route's bottleneck never exceeds any traversed link
 
-use tag::cluster::generator::random_topology;
+use tag::cluster::generator::{random_hierarchical_topology, random_topology};
 use tag::dist::Lowering;
 use tag::graph::grouping::group_ops;
 use tag::models;
@@ -72,9 +75,65 @@ fn random_task_graph(rng: &mut Rng, n: usize, r: usize) -> TaskGraph {
             duration: rng.uniform(0.0, 1.0),
             deps,
             kind: TaskKind::Marker,
+            load: None,
         });
     }
     tg
+}
+
+#[test]
+fn prop_generator_topologies_route_soundly() {
+    // Random flat AND hierarchical topologies: always valid, bandwidth
+    // symmetric, a route between every device pair, and every route's
+    // bottleneck bounded by each traversed link's bandwidth (with exact
+    // min equality) and its latency equal to the links' sum.
+    for case in 0..40 {
+        let mut rng = Rng::new(8000 + case);
+        for topo in [random_topology(&mut rng), random_hierarchical_topology(&mut rng)] {
+            topo.validate().unwrap_or_else(|e| panic!("case {case} {}: {e}", topo.name));
+            let devs = topo.devices();
+            let links = topo.link_graph().links();
+            for (i, &a) in devs.iter().enumerate() {
+                for &b in &devs[i + 1..] {
+                    assert_eq!(
+                        topo.bw_gbps(a, b).to_bits(),
+                        topo.bw_gbps(b, a).to_bits(),
+                        "case {case} {}: asymmetric bandwidth",
+                        topo.name
+                    );
+                    let route = topo.route(a, b);
+                    assert!(
+                        !route.links.is_empty(),
+                        "case {case} {}: no route {a:?} -> {b:?}",
+                        topo.name
+                    );
+                    let mut min_bw = f64::INFINITY;
+                    let mut lat = 0.0;
+                    for &lid in route.links.iter() {
+                        let link = &links[lid as usize];
+                        assert!(
+                            route.bottleneck_gbps <= link.bw_gbps + 1e-12,
+                            "case {case} {}: bottleneck exceeds a traversed link",
+                            topo.name
+                        );
+                        min_bw = min_bw.min(link.bw_gbps);
+                        lat += link.latency_s;
+                    }
+                    assert_eq!(
+                        route.bottleneck_gbps.to_bits(),
+                        min_bw.to_bits(),
+                        "case {case} {}: bottleneck is not the traversed min",
+                        topo.name
+                    );
+                    assert!(
+                        (route.latency_s - lat).abs() < 1e-15,
+                        "case {case} {}: latency is not the traversed sum",
+                        topo.name
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// The pre-PR-3 engine, verbatim: wake events (`tag >= n` encodes "wake
