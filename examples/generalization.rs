@@ -104,9 +104,8 @@ fn tab7() {
 
     // Disable the root sweep in both arms so the metric compares raw
     // prior quality (the paper's Table 7 setting).
-    let mut pure_planner =
-        Planner::builder().backend(MctsBackend::new().root_sweep(false)).build();
-    let mut tag_planner = gnn.as_ref().map(|(svc, p)| {
+    let pure_planner = Planner::builder().backend(MctsBackend::new().root_sweep(false)).build();
+    let tag_planner = gnn.as_ref().map(|(svc, p)| {
         Planner::builder()
             .backend(GnnMctsBackend::new(svc.clone(), p.clone()).root_sweep(false))
             .build()
@@ -127,7 +126,7 @@ fn tab7() {
             let first_pure = pure.telemetry.first_beats_dp.unwrap_or(iters);
             sum_pure += first_pure as f64;
 
-            match &mut tag_planner {
+            match &tag_planner {
                 Some(planner) => {
                     let guided = planner.plan(&request).expect("plan").plan;
                     sum_tag += guided.telemetry.first_beats_dp.unwrap_or(iters) as f64;
@@ -179,7 +178,7 @@ fn tab8() {
         let mut row = Vec::new();
         for topo in [testbed(), cloud()] {
             for p in [&full.params, &holdout.params] {
-                let mut planner = Planner::builder()
+                let planner = Planner::builder()
                     .backend(GnnMctsBackend::new(svc.clone(), p.clone()))
                     .build();
                 let request =
@@ -210,7 +209,7 @@ fn hier() {
         "{:<14} {:>7} {:>7} {:>6} {:>9} {:>9}",
         "topology", "groups", "links", "hops", "DP (s)", "speedup"
     );
-    let mut planner = Planner::builder().build();
+    let planner = Planner::builder().build();
     for (ti, topo) in random_hierarchical_topologies(0xD00D, n_topos).iter().enumerate() {
         let request =
             PlanRequest::new(models::by_name("InceptionV3", 0.25).unwrap(), topo.clone())

@@ -28,7 +28,7 @@ fn main() {
     let iters = arg("iters", 250.0) as usize;
     let topo = testbed();
 
-    let mut tag_planner = match GnnMctsBackend::from_artifacts(
+    let tag_planner = match GnnMctsBackend::from_artifacts(
         "artifacts",
         "artifacts/params_trained.bin",
     ) {
@@ -41,8 +41,7 @@ fn main() {
             Planner::builder().build()
         }
     };
-    let mut sweep_planner =
-        Planner::builder().backend(BaselineSweepBackend::new()).build();
+    let sweep_planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
 
     println!(
         "\n=== Fig. 5: per-iteration time (s) on {} — scale {scale} ===",
@@ -137,7 +136,7 @@ fn main() {
     }
     println!("\n(*) = strategy OOMs on this cluster in our memory model");
 
-    hierarchical(scale, iters, &mut tag_planner);
+    hierarchical(scale, iters, &tag_planner);
 }
 
 /// The same planning pipeline on a *routed* hierarchical cluster
@@ -146,7 +145,7 @@ fn main() {
 /// cluster.  The routed times include per-hop latency and shared-link
 /// contention; the flattened clique only sees per-flow bottlenecks —
 /// the gap is what the link graph buys.
-fn hierarchical(scale: f64, iters: usize, tag_planner: &mut Planner) {
+fn hierarchical(scale: f64, iters: usize, tag_planner: &Planner) {
     use tag::cluster::presets::nvlink_island;
     use tag::cluster::Topology;
 

@@ -35,7 +35,7 @@ fn main() {
     } else {
         "artifacts/params_init.bin"
     };
-    let mut planner = match GnnMctsBackend::from_artifacts("artifacts", params_path) {
+    let planner = match GnnMctsBackend::from_artifacts("artifacts", params_path) {
         Ok(backend) => Planner::builder().backend(backend).build(),
         Err(_) => Planner::builder().build(),
     };

@@ -35,7 +35,7 @@ fn main() {
 
     // 2. Plan (pure-MCTS backend by default; plug a GnnMctsBackend into
     //    the builder for GNN-guided search).
-    let mut planner = Planner::builder().build();
+    let planner = Planner::builder().build();
     let outcome = planner.plan(&request).expect("plan");
     let plan = &outcome.plan;
 

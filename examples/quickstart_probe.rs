@@ -16,7 +16,7 @@ use tag::strategy::{Action, ReplOption, Strategy};
 
 fn main() {
     let topo = sfb_pair();
-    let mut planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
+    let planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
     for batch in [4, 8, 12, 16, 24] {
         let request = PlanRequest::new(models::bert(batch, true, 1.0), topo.clone())
             .budget(60, 12)

@@ -39,7 +39,7 @@ fn main() {
 
     let mut census: std::collections::HashMap<String, usize> =
         std::collections::HashMap::new();
-    let mut planner = Planner::builder().build();
+    let planner = Planner::builder().build();
 
     for name in models::MODEL_NAMES {
         // Paper: batch size 4 for all models in this experiment.

@@ -97,9 +97,7 @@ fn main() {
     // Serve one plan from the freshly trained checkpoint: the trained
     // weights are part of the backend's cache identity, so this plan can
     // never be confused with one from another checkpoint.
-    let mut planner = Planner::builder()
-        .backend(GnnMctsBackend::new(svc.clone(), trained))
-        .build();
+    let planner = Planner::builder().backend(GnnMctsBackend::new(svc.clone(), trained)).build();
     let request = PlanRequest::new(models::vgg19(8, 0.25), testbed())
         .budget(80, 16)
         .seed(7);

@@ -82,7 +82,7 @@ fn main() {
 
     println!("\n== the same sweep as plan telemetry (api::Planner) ==");
     for &workers in &WORKER_COUNTS {
-        let mut planner = Planner::builder().without_cache().build();
+        let planner = Planner::builder().without_cache().build();
         let request = PlanRequest::new(models::by_name("VGG19", 0.25).unwrap(), cloud())
             .budget(ITERS, 16)
             .seed(1)

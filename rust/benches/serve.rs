@@ -1,0 +1,103 @@
+//! Bench: `tag serve` loopback throughput — the full network path
+//! (TCP connect → HTTP parse → route → plan → respond) in three
+//! serving regimes:
+//!
+//! * **cold cache** — every request a fresh seed: pays a full search,
+//!   the daemon's worst case;
+//! * **warm cache** — one request repeated: fingerprint-keyed
+//!   [`PlanCache`](tag::api::PlanCache) hit, the steady state of
+//!   repeat traffic (serving overhead ≈ transport + JSON encode);
+//! * **coalesced burst** — 8 concurrent identical requests on a fresh
+//!   seed: the singleflight rides them all on ONE search, so the
+//!   per-request cost approaches (search / 8) + transport.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use tag::api::SharedPlanner;
+use tag::serve::{ServeConfig, Server};
+use tag::util::bench;
+
+fn request_for(seed: u64) -> String {
+    format!(r#"{{"model":"VGG19","iterations":30,"max_groups":10,"seed":{seed}}}"#)
+}
+
+fn post_plan(addr: SocketAddr, body: &str) -> u16 {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let raw = format!(
+        "POST /plan HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(raw.as_bytes()).expect("send");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("recv");
+    response
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status line")
+}
+
+fn main() {
+    let config = ServeConfig {
+        port: 0,
+        workers: 8,
+        queue_depth: 64,
+        read_timeout: Duration::from_secs(120),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(config, SharedPlanner::builder().build()).expect("bind");
+    let addr = server.local_addr();
+    let daemon = std::thread::spawn(move || server.run().expect("serve"));
+    println!("== tag serve loopback throughput (VGG19/0.25, 30 iters) ==");
+
+    let mut seed = 1_000u64;
+    let cold = bench("serve[cold cache, fresh seed]", 2.0, || {
+        seed += 1;
+        assert_eq!(post_plan(addr, &request_for(seed)), 200);
+    });
+
+    let warm_body = request_for(1);
+    assert_eq!(post_plan(addr, &warm_body), 200); // populate the cache
+    let warm = bench("serve[warm cache, repeated request]", 1.0, || {
+        assert_eq!(post_plan(addr, &warm_body), 200);
+    });
+
+    const BURST: usize = 8;
+    let mut burst_seed = 2_000_000u64;
+    let burst = bench("serve[coalesced 8-client burst, fresh seed]", 2.0, || {
+        burst_seed += 1;
+        let body = request_for(burst_seed);
+        let clients: Vec<_> = (0..BURST)
+            .map(|_| {
+                let body = body.clone();
+                std::thread::spawn(move || assert_eq!(post_plan(addr, &body), 200))
+            })
+            .collect();
+        for client in clients {
+            client.join().unwrap();
+        }
+    });
+
+    println!("\n    cold search        {:>10.2} ms/request", cold * 1e3);
+    println!("    warm cache         {:>10.2} ms/request", warm * 1e3);
+    println!(
+        "    coalesced burst    {:>10.2} ms/request ({BURST} clients, one search)",
+        burst * 1e3 / BURST as f64
+    );
+    println!(
+        "    cache speed-up {:.0}x, coalescing amortization {:.1}x",
+        cold / warm.max(1e-9),
+        cold / (burst / BURST as f64).max(1e-9)
+    );
+
+    // Clean shutdown so the bench process exits without leaking the
+    // daemon thread.
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(b"POST /shutdown HTTP/1.1\r\n\r\n").unwrap();
+    let mut out = String::new();
+    let _ = stream.read_to_string(&mut out);
+    daemon.join().unwrap();
+}

@@ -60,7 +60,14 @@ pub trait SearchBackend {
     fn fingerprint_token(&self) -> u64;
 
     /// Run the search on a prepared problem.
-    fn search(&mut self, ctx: &SearchContext<'_>) -> BackendOutcome;
+    ///
+    /// Takes `&self`: backends are stateless across calls (their
+    /// configuration is fixed at construction and hashed into
+    /// [`fingerprint_token`](Self::fingerprint_token)), which is what
+    /// lets a `Send + Sync` backend serve concurrent searches through a
+    /// shared [`Planner`](super::Planner) — the `tag serve` worker
+    /// pool's contract.
+    fn search(&self, ctx: &SearchContext<'_>) -> BackendOutcome;
 }
 
 fn memo_metrics(low: &Lowering<'_>) -> Vec<(String, f64)> {
@@ -135,7 +142,7 @@ impl SearchBackend for MctsBackend {
         h.finish()
     }
 
-    fn search(&mut self, ctx: &SearchContext<'_>) -> BackendOutcome {
+    fn search(&self, ctx: &SearchContext<'_>) -> BackendOutcome {
         let par = ctx.cfg.parallelism;
         let priors: Vec<UniformPrior> =
             (0..par.workers.max(1)).map(|_| UniformPrior).collect();
@@ -220,7 +227,7 @@ impl SearchBackend for GnnMctsBackend {
         h.finish()
     }
 
-    fn search(&mut self, ctx: &SearchContext<'_>) -> BackendOutcome {
+    fn search(&self, ctx: &SearchContext<'_>) -> BackendOutcome {
         let par = ctx.cfg.parallelism;
         if par.workers <= 1 {
             // Sequential: the GNN is evaluated in-process, no channels.
@@ -331,7 +338,7 @@ impl SearchBackend for BaselineSweepBackend {
         h.finish()
     }
 
-    fn search(&mut self, ctx: &SearchContext<'_>) -> BackendOutcome {
+    fn search(&self, ctx: &SearchContext<'_>) -> BackendOutcome {
         let dp_time = ctx.low.dp_time();
         let mut metrics = Vec::new();
         let mut best: Option<(f64, Strategy)> = None;

@@ -4,17 +4,28 @@
 //! Keys are exact `(model, topology, config)` fingerprint triples —
 //! repeat traffic for the same deployment problem (the ROADMAP's serving
 //! scenario, and the reuse emphasis of Placeto/TopoOpt) is answered with
-//! a clone of the stored [`DeploymentPlan`] instead of a search.  Like
-//! the memo table, the map is cleared wholesale at capacity: lookups are
-//! exact, entries are cheap to rebuild, and eviction order is irrelevant
-//! for a bounded serving window.
+//! a clone of the stored [`DeploymentPlan`] instead of a search.
+//!
+//! Eviction is **two-generation** (hot/cold), not the memo table's
+//! wholesale clear: when the hot generation fills, it *becomes* the cold
+//! generation and a fresh hot one starts.  A lookup that misses hot but
+//! hits cold promotes the entry back into hot.  A long-running `tag
+//! serve` daemon therefore never faces a fully cold cache after
+//! eviction — at any instant the most recent `capacity` insertions are
+//! retained exactly, and the generation before them remains servable
+//! until a further `capacity` distinct plans displace it.  Entries live
+//! for at most two generations without a hit.
+//!
+//! [`CacheStats`] counters are monotone across generation turnover:
+//! rotation never resets `hits`/`misses` (only [`PlanCache::clear`]
+//! does), so serving dashboards see a continuous hit-rate series.
 
 use std::collections::HashMap;
 
 use super::plan::DeploymentPlan;
 
-/// Default entry cap (a full plan is a few KB; this bounds the cache to
-/// low MBs).
+/// Default per-generation entry cap (a full plan is a few KB; two
+/// generations bound the cache to low MBs).
 pub const DEFAULT_CAPACITY: usize = 1 << 10;
 
 /// Cache key: the three structural fingerprints of a request.
@@ -45,9 +56,11 @@ impl CacheStats {
     }
 }
 
-/// Fingerprint-keyed deployment-plan cache.
+/// Fingerprint-keyed deployment-plan cache with two-generation
+/// (hot/cold) eviction.
 pub struct PlanCache {
-    map: HashMap<PlanKey, DeploymentPlan>,
+    hot: HashMap<PlanKey, DeploymentPlan>,
+    cold: HashMap<PlanKey, DeploymentPlan>,
     capacity: usize,
     hits: u64,
     misses: u64,
@@ -60,49 +73,66 @@ impl Default for PlanCache {
 }
 
 impl PlanCache {
+    /// `capacity` bounds each generation; the cache holds at most about
+    /// `2 * capacity` plans (hot + cold).
     pub fn new(capacity: usize) -> Self {
-        Self { map: HashMap::new(), capacity: capacity.max(1), hits: 0, misses: 0 }
+        Self {
+            hot: HashMap::new(),
+            cold: HashMap::new(),
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+        }
     }
 
-    /// Look up a plan, counting the hit or miss.
+    /// Look up a plan, counting the hit or miss.  A cold-generation hit
+    /// promotes the entry back into the hot generation.
     pub fn get(&mut self, key: &PlanKey) -> Option<DeploymentPlan> {
-        match self.map.get(key) {
-            Some(plan) => {
-                self.hits += 1;
-                Some(plan.clone())
-            }
-            None => {
-                self.misses += 1;
-                None
-            }
+        if let Some(plan) = self.hot.get(key) {
+            self.hits += 1;
+            return Some(plan.clone());
         }
+        if let Some(plan) = self.cold.remove(key) {
+            self.hits += 1;
+            // Promotion does not rotate (that would drop the very
+            // generation being read); `insert` re-establishes the bound
+            // on its next rotation.
+            self.hot.insert(*key, plan.clone());
+            return Some(plan);
+        }
+        self.misses += 1;
+        None
     }
 
-    /// Store a plan; at capacity the table is cleared wholesale (the
-    /// `dist::memo` policy — exact keys, order-free eviction).
+    /// Store a plan.  When the hot generation is full and `key` is new
+    /// to it, hot becomes cold (the previous cold generation — entries
+    /// unused for two full generations — is dropped) and a fresh hot
+    /// generation starts with this entry.
     pub fn insert(&mut self, key: PlanKey, plan: DeploymentPlan) {
-        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
-            self.map.clear();
+        if self.hot.len() >= self.capacity && !self.hot.contains_key(&key) {
+            self.cold = std::mem::take(&mut self.hot);
         }
-        self.map.insert(key, plan);
+        self.cold.remove(&key);
+        self.hot.insert(key, plan);
     }
 
     pub fn clear(&mut self) {
-        self.map.clear();
+        self.hot.clear();
+        self.cold.clear();
         self.hits = 0;
         self.misses = 0;
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.hot.len() + self.cold.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.hot.is_empty() && self.cold.is_empty()
     }
 
     pub fn stats(&self) -> CacheStats {
-        CacheStats { hits: self.hits, misses: self.misses, entries: self.map.len() }
+        CacheStats { hits: self.hits, misses: self.misses, entries: self.len() }
     }
 }
 
@@ -139,23 +169,79 @@ mod tests {
     }
 
     #[test]
-    fn capacity_clears_wholesale() {
+    fn rotation_keeps_the_previous_generation_warm() {
+        // Capacity 2.  Filling hot and inserting a third plan must NOT
+        // leave the cache cold: the displaced generation still serves.
         let mut c = PlanCache::new(2);
         c.insert(key(1), sample_plan());
         c.insert(key(2), sample_plan());
-        assert_eq!(c.len(), 2);
-        c.insert(key(3), sample_plan());
-        assert_eq!(c.len(), 1, "full table cleared before the new entry");
+        c.insert(key(3), sample_plan()); // rotates: cold={1,2}, hot={3}
+        assert_eq!(c.len(), 3);
+        assert!(c.get(&key(1)).is_some(), "previous generation still warm");
+        assert!(c.get(&key(2)).is_some());
         assert!(c.get(&key(3)).is_some());
     }
 
     #[test]
-    fn reinserting_existing_key_does_not_clear() {
+    fn entries_unused_for_two_generations_are_evicted() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(1), sample_plan());
+        c.insert(key(2), sample_plan());
+        c.insert(key(3), sample_plan()); // cold={1,2}, hot={3}
+        c.insert(key(4), sample_plan()); // hot={3,4}
+        c.insert(key(5), sample_plan()); // rotates: cold={3,4}, hot={5}
+        assert!(c.get(&key(1)).is_none(), "two generations old: evicted");
+        assert!(c.get(&key(2)).is_none());
+        assert!(c.get(&key(3)).is_some());
+        assert!(c.get(&key(4)).is_some());
+        assert!(c.get(&key(5)).is_some());
+    }
+
+    #[test]
+    fn cold_hits_promote_back_into_the_hot_generation() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(1), sample_plan());
+        c.insert(key(2), sample_plan());
+        c.insert(key(3), sample_plan()); // cold={1,2}, hot={3}
+        assert!(c.get(&key(1)).is_some()); // promotes 1: hot={1,3}
+        c.insert(key(4), sample_plan()); // rotates: cold={1,3}, hot={4}
+        c.insert(key(5), sample_plan()); // hot={4,5}
+        // 1 was promoted, so it survived the rotation that evicted 2.
+        assert!(c.get(&key(1)).is_some(), "promoted entry survives");
+        assert!(c.get(&key(2)).is_none(), "unpromoted entry evicted");
+    }
+
+    #[test]
+    fn stats_stay_monotone_across_generations() {
+        let mut c = PlanCache::new(2);
+        let mut last = CacheStats::default();
+        for n in 0..20u64 {
+            let _ = c.get(&key(n)); // miss
+            c.insert(key(n), sample_plan());
+            let _ = c.get(&key(n)); // hit
+            let s = c.stats();
+            assert!(s.hits >= last.hits && s.misses >= last.misses, "monotone");
+            assert!(s.hits > last.hits || s.misses > last.misses, "advancing");
+            assert!(s.entries <= 4, "bounded by two generations");
+            last = s;
+        }
+        assert_eq!((last.hits, last.misses), (20, 20));
+        assert!((last.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reinserting_existing_key_does_not_rotate() {
         let mut c = PlanCache::new(2);
         c.insert(key(1), sample_plan());
         c.insert(key(2), sample_plan());
         c.insert(key(2), sample_plan());
         assert_eq!(c.len(), 2);
+        // And a re-insert of a cold key moves it forward instead of
+        // leaving a stale duplicate behind.
+        c.insert(key(3), sample_plan()); // cold={1,2}, hot={3}
+        c.insert(key(1), sample_plan()); // hot={1,3}, cold={2}
+        assert_eq!(c.len(), 3);
+        assert!(c.get(&key(1)).is_some());
     }
 
     #[test]

@@ -10,8 +10,21 @@
 //! hex *strings* by the plan codec, never as numbers.  Object member
 //! order is preserved (objects are association lists, not maps), which
 //! keeps encoding deterministic.
+//!
+//! Since `tag serve`, this parser faces **untrusted network bytes**, so
+//! it is hardened beyond what persistence needed: nesting is capped at
+//! [`MAX_DEPTH`] (deeply nested garbage returns `Err` instead of
+//! overflowing the parse stack), duplicate object keys are rejected
+//! (our encoder never emits them, and first-match [`Json::get`] lookups
+//! must never be smuggled past a validator that saw the second), and
+//! [`Json::parse_bytes`] validates UTF-8 before parsing.  Every
+//! malformed input returns `Err`; none panic.
 
 use crate::util::error::{Error, Result};
+
+/// Maximum container nesting the parser accepts.  Real TAG payloads
+/// nest four levels; anything past this bound is hostile input.
+pub const MAX_DEPTH: usize = 64;
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -126,7 +139,7 @@ impl Json {
     /// trailing garbage rejected).
     pub fn parse(text: &str) -> Result<Json> {
         let bytes = text.as_bytes();
-        let mut p = Parser { bytes, pos: 0 };
+        let mut p = Parser { bytes, pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -134,6 +147,14 @@ impl Json {
             return Err(Error::msg(format!("trailing data at byte {}", p.pos)));
         }
         Ok(v)
+    }
+
+    /// Parse raw bytes (e.g. an HTTP body): UTF-8 is validated first,
+    /// so non-UTF8 input is an `Err`, never a panic.
+    pub fn parse_bytes(bytes: &[u8]) -> Result<Json> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| Error::msg(format!("body is not valid utf-8: {e}")))?;
+        Json::parse(text)
     }
 }
 
@@ -180,6 +201,8 @@ fn write_str(s: &str, out: &mut String) {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl Parser<'_> {
@@ -236,12 +259,22 @@ impl Parser<'_> {
         }
     }
 
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(Error::msg(format!("nesting deeper than {MAX_DEPTH}")));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek()? == b']' {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -252,6 +285,7 @@ impl Parser<'_> {
                 b',' => self.pos += 1,
                 b']' => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 other => {
@@ -266,15 +300,24 @@ impl Parser<'_> {
 
     fn object(&mut self) -> Result<Json> {
         self.expect(b'{')?;
-        let mut members = Vec::new();
+        self.enter()?;
+        let mut members: Vec<(String, Json)> = Vec::new();
+        // Hashed duplicate detection: a linear scan over `members` per
+        // key would be O(n^2), which a single max-size body full of
+        // short keys turns into seconds of worker time.
+        let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
         self.skip_ws();
         if self.peek()? == b'}' {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(members));
         }
         loop {
             self.skip_ws();
             let key = self.string()?;
+            if !seen.insert(key.clone()) {
+                return Err(Error::msg(format!("duplicate object key `{key}`")));
+            }
             self.skip_ws();
             self.expect(b':')?;
             self.skip_ws();
@@ -285,6 +328,7 @@ impl Parser<'_> {
                 b',' => self.pos += 1,
                 b'}' => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(members));
                 }
                 other => {
@@ -452,6 +496,72 @@ mod tests {
         ] {
             assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
         }
+    }
+
+    #[test]
+    fn truncated_documents_rejected() {
+        // Every prefix of a valid document fails cleanly (the decoder
+        // now reads network bodies that may be cut off mid-transfer).
+        let full = r#"{"a":[1.0,true,"xA"],"b":{"c":null}}"#;
+        for cut in 1..full.len() {
+            assert!(Json::parse(&full[..cut]).is_err(), "accepted prefix {cut}");
+        }
+    }
+
+    #[test]
+    fn duplicate_object_keys_rejected() {
+        for bad in [
+            r#"{"a":1.0,"a":2.0}"#,
+            r#"{"a":1.0,"b":{"x":null,"x":null}}"#,
+            r#"{"":0.0,"":0.0}"#,
+        ] {
+            let err = Json::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("duplicate"), "{bad}: {err}");
+        }
+        // Same key at *different* nesting levels is fine.
+        assert!(Json::parse(r#"{"a":{"a":1.0}}"#).is_ok());
+    }
+
+    #[test]
+    fn non_utf8_bytes_rejected() {
+        for bad in [&[0xff, 0xfe][..], &[b'"', 0xc3, b'"'], &[0x80]] {
+            let err = Json::parse_bytes(bad).unwrap_err().to_string();
+            assert!(err.contains("utf-8"), "{err}");
+        }
+        assert!(Json::parse_bytes(b"[1.5]").is_ok());
+    }
+
+    #[test]
+    fn deeply_nested_garbage_errors_instead_of_overflowing() {
+        // Within the cap: fine.
+        let ok = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // One past the cap: clean error.
+        let deep = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = Json::parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "{err}");
+        // Far past the cap (would overflow the stack without the bound):
+        // still a clean error, never a crash.  Unclosed, so even a lazy
+        // parser cannot accept it.
+        let hostile = "[{\"k\":".repeat(20_000);
+        assert!(Json::parse(&hostile).is_err());
+        let hostile_obj = "{\"a\":[".repeat(20_000);
+        assert!(Json::parse_bytes(hostile_obj.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn wrong_scalar_shapes_error_not_panic() {
+        // Type accessors on every mismatched variant return Err.
+        let doc = Json::parse(r#"{"n":1.5,"s":"x","b":true,"a":[],"o":{}}"#).unwrap();
+        assert!(doc.field("n").unwrap().as_str().is_err());
+        assert!(doc.field("n").unwrap().as_bool().is_err());
+        assert!(doc.field("s").unwrap().as_f64().is_err());
+        assert!(doc.field("a").unwrap().as_bool().is_err());
+        assert!(doc.field("o").unwrap().as_arr().is_err());
+        assert!(doc.field("missing").is_err());
+        // Numbers that overflow the integer window are rejected.
+        assert!(Json::parse("1e300").unwrap().as_u64().is_err());
+        assert!(Json::parse("1e16").unwrap().as_u64().is_err());
     }
 
     #[test]

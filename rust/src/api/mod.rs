@@ -19,7 +19,7 @@
 //! use tag::cluster::presets::testbed;
 //! use tag::models;
 //!
-//! let mut planner = Planner::builder().build();
+//! let planner = Planner::builder().build();
 //! let request = PlanRequest::new(models::vgg19(48, 0.5), testbed())
 //!     .budget(200, 24)
 //!     .seed(42);
@@ -34,6 +34,31 @@
 //! a malformed topology (asymmetric matrix, empty group, a mutated
 //! derived view that no longer matches its link graph) surfaces as a
 //! plan error instead of aborting the process.
+//!
+//! ## Sharing a planner across threads
+//!
+//! [`Planner::plan`] takes `&self` — the plan cache and the prepared
+//! memo live behind internal mutexes, and searches themselves run
+//! lock-free — so one planner can serve concurrent callers.  The
+//! default [`Planner`] type erases its backend as `dyn SearchBackend`
+//! (which keeps `!Send` backends like the `Rc`-sharing
+//! [`GnnMctsBackend`] usable); to put a planner behind an `Arc` and
+//! hand it to threads — the [`serve`](crate::serve) daemon's worker
+//! pool — build a [`SharedPlanner`] instead, whose backend is
+//! additionally `Send + Sync`:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tag::api::SharedPlanner;
+//!
+//! let planner: Arc<SharedPlanner> = Arc::new(SharedPlanner::builder().build());
+//! let worker = planner.clone();
+//! std::thread::spawn(move || {
+//!     let _ = worker.cache_stats();
+//! })
+//! .join()
+//! .unwrap();
+//! ```
 
 pub mod backend;
 pub mod cache;
@@ -54,12 +79,14 @@ pub use request::{PlanRequest, SearchBudget};
 
 pub use crate::search::Parallelism;
 
+use std::sync::{Arc, Mutex};
+
 use crate::cluster::Topology;
 use crate::coordinator::{self, Prepared, SessionResult};
 use crate::dist::Lowering;
 use crate::strategy::enumerate_actions;
 use crate::util::error::{Context, Result};
-use crate::util::Stopwatch;
+use crate::util::{lock, Stopwatch};
 
 /// A plan plus the per-call serving facts that must stay *outside* the
 /// deterministic plan: wall time and cache provenance.
@@ -86,12 +113,23 @@ struct PreparedEntry {
 }
 
 /// Builder for [`Planner`]: pick a backend, configure the cache.
-pub struct PlannerBuilder {
-    backend: Box<dyn SearchBackend>,
+///
+/// The type parameter is the *erasure target* for the backend:
+/// `dyn SearchBackend` (the default — accepts any backend) or
+/// `dyn SearchBackend + Send + Sync` (producing a [`SharedPlanner`]
+/// that can cross threads).
+pub struct PlannerBuilder<B: SearchBackend + ?Sized = dyn SearchBackend> {
+    backend: Box<B>,
     cache: Option<usize>,
 }
 
 impl Default for PlannerBuilder {
+    fn default() -> Self {
+        Self { backend: Box::new(MctsBackend::new()), cache: Some(cache::DEFAULT_CAPACITY) }
+    }
+}
+
+impl Default for PlannerBuilder<dyn SearchBackend + Send + Sync> {
     fn default() -> Self {
         Self { backend: Box::new(MctsBackend::new()), cache: Some(cache::DEFAULT_CAPACITY) }
     }
@@ -103,8 +141,21 @@ impl PlannerBuilder {
         self.backend = Box::new(backend);
         self
     }
+}
 
-    /// Cap the plan cache at `capacity` entries.
+impl PlannerBuilder<dyn SearchBackend + Send + Sync> {
+    /// Replace the default [`MctsBackend`].  The shared builder only
+    /// accepts `Send + Sync` backends — a [`GnnMctsBackend`] (which
+    /// shares its PJRT service via `Rc`) cannot cross threads and is
+    /// rejected at compile time.
+    pub fn backend(mut self, backend: impl SearchBackend + Send + Sync + 'static) -> Self {
+        self.backend = Box::new(backend);
+        self
+    }
+}
+
+impl<B: SearchBackend + ?Sized> PlannerBuilder<B> {
+    /// Cap each plan-cache generation at `capacity` entries.
     pub fn cache_capacity(mut self, capacity: usize) -> Self {
         self.cache = Some(capacity);
         self
@@ -116,21 +167,30 @@ impl PlannerBuilder {
         self
     }
 
-    pub fn build(self) -> Planner {
+    pub fn build(self) -> Planner<B> {
         Planner {
             backend: self.backend,
-            cache: self.cache.map(PlanCache::new),
-            prepared: None,
+            cache: self.cache.map(|cap| Mutex::new(PlanCache::new(cap))),
+            prepared: Mutex::new(None),
         }
     }
 }
 
 /// The deployment-planning service: request in, plan out.
-pub struct Planner {
-    backend: Box<dyn SearchBackend>,
-    cache: Option<PlanCache>,
-    prepared: Option<PreparedEntry>,
+///
+/// [`plan`](Self::plan) takes `&self`; the cache and the prepared memo
+/// sit behind internal mutexes held only for map operations, never
+/// across a search — concurrent callers search concurrently.
+pub struct Planner<B: SearchBackend + ?Sized = dyn SearchBackend> {
+    cache: Option<Mutex<PlanCache>>,
+    prepared: Mutex<Option<Arc<PreparedEntry>>>,
+    backend: Box<B>,
 }
+
+/// A [`Planner`] whose backend is `Send + Sync`, so the planner itself
+/// can sit behind an `Arc` and serve threads — the type `tag serve`'s
+/// worker pool shares.  Build with [`SharedPlanner::builder`].
+pub type SharedPlanner = Planner<dyn SearchBackend + Send + Sync>;
 
 impl Default for Planner {
     fn default() -> Self {
@@ -142,7 +202,16 @@ impl Planner {
     pub fn builder() -> PlannerBuilder {
         PlannerBuilder::default()
     }
+}
 
+impl SharedPlanner {
+    /// Builder for a thread-shareable planner ([`SharedPlanner`]).
+    pub fn builder() -> PlannerBuilder<dyn SearchBackend + Send + Sync> {
+        PlannerBuilder::default()
+    }
+}
+
+impl<B: SearchBackend + ?Sized> Planner<B> {
     /// The active backend's name (recorded in every plan).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
@@ -151,7 +220,7 @@ impl Planner {
     /// Cache counters, or `None` when built with
     /// [`PlannerBuilder::without_cache`].
     pub fn cache_stats(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.stats())
+        self.cache.as_ref().map(|c| lock(c).stats())
     }
 
     /// The cache key this request resolves to under the current backend.
@@ -178,15 +247,15 @@ impl Planner {
     /// to a different (equally valid) plan — which is why parallel
     /// requests get their own config fingerprint and never alias
     /// sequential ones.
-    pub fn plan(&mut self, request: &PlanRequest) -> Result<PlanOutcome> {
+    pub fn plan(&self, request: &PlanRequest) -> Result<PlanOutcome> {
         let watch = Stopwatch::start();
         request
             .topology
             .validate()
             .with_context(|| format!("invalid topology `{}`", request.topology.name))?;
         let key = self.key_for(request);
-        if let Some(cache) = &mut self.cache {
-            if let Some(plan) = cache.get(&key) {
+        if let Some(cache) = &self.cache {
+            if let Some(plan) = lock(cache).get(&key) {
                 return Ok(PlanOutcome {
                     plan,
                     cache_hit: true,
@@ -197,23 +266,32 @@ impl Planner {
 
         let cfg = request.search_config();
         let prepare_fp = request.prepare_fingerprint();
-        let reusable = matches!(
-            &self.prepared,
-            Some(e) if e.model_fp == key.model
-                && e.topo_fp == key.topology
-                && e.prepare_fp == prepare_fp
-        );
-        if !reusable {
-            let prepared = coordinator::prepare(request.model.clone(), &request.topology, &cfg);
-            self.prepared = Some(PreparedEntry {
-                model_fp: key.model,
-                topo_fp: key.topology,
-                prepare_fp,
-                prepared,
-                topology: request.topology.clone(),
-            });
-        }
-        let entry = self.prepared.as_ref().expect("prepared state");
+        let matches_request = |e: &PreparedEntry| {
+            e.model_fp == key.model && e.topo_fp == key.topology && e.prepare_fp == prepare_fp
+        };
+        // Clone the memoized prepared state out of the lock (an `Arc`
+        // clone), or rebuild it *outside* the lock — preparation is the
+        // expensive profiling+grouping pass and must not serialize
+        // unrelated concurrent requests.  Two identical racing requests
+        // may both prepare; `prepare` is deterministic, so either
+        // result is interchangeable and the last store wins.
+        let reusable = lock(&self.prepared).as_ref().filter(|e| matches_request(e)).cloned();
+        let entry = match reusable {
+            Some(entry) => entry,
+            None => {
+                let prepared =
+                    coordinator::prepare(request.model.clone(), &request.topology, &cfg);
+                let entry = Arc::new(PreparedEntry {
+                    model_fp: key.model,
+                    topo_fp: key.topology,
+                    prepare_fp,
+                    prepared,
+                    topology: request.topology.clone(),
+                });
+                *lock(&self.prepared) = Some(entry.clone());
+                entry
+            }
+        };
 
         // The Lowering (and its transposition table) is deliberately
         // rebuilt per call rather than memoized in PreparedEntry: plans
@@ -236,8 +314,14 @@ impl Planner {
             cfg: &cfg,
         };
         let out = self.backend.search(&ctx);
-        let session =
-            coordinator::assemble_session(&entry.prepared, &entry.topology, &low, out.result, &cfg, 0.0);
+        let session = coordinator::assemble_session(
+            &entry.prepared,
+            &entry.topology,
+            &low,
+            out.result,
+            &cfg,
+            0.0,
+        );
         let plan = assemble_plan(
             request,
             &session,
@@ -247,8 +331,8 @@ impl Planner {
             out.metrics,
         );
 
-        if let Some(cache) = &mut self.cache {
-            cache.insert(key, plan.clone());
+        if let Some(cache) = &self.cache {
+            lock(cache).insert(key, plan.clone());
         }
         Ok(PlanOutcome { plan, cache_hit: false, overhead_s: watch.elapsed_s() })
     }
@@ -310,7 +394,7 @@ mod tests {
 
     #[test]
     fn plan_call_produces_consistent_plan() {
-        let mut planner = Planner::builder().without_cache().build();
+        let planner = Planner::builder().without_cache().build();
         let out = planner.plan(&small_request()).unwrap();
         assert!(!out.cache_hit);
         let p = &out.plan;
@@ -326,7 +410,7 @@ mod tests {
 
     #[test]
     fn cache_serves_repeat_traffic() {
-        let mut planner = Planner::builder().build();
+        let planner = Planner::builder().build();
         let req = small_request();
         let first = planner.plan(&req).unwrap();
         let second = planner.plan(&req).unwrap();
@@ -340,7 +424,7 @@ mod tests {
 
     #[test]
     fn different_request_knobs_miss_the_cache() {
-        let mut planner = Planner::builder().build();
+        let planner = Planner::builder().build();
         let _ = planner.plan(&small_request()).unwrap();
         let out = planner.plan(&small_request().seed(4)).unwrap();
         assert!(!out.cache_hit);
@@ -354,7 +438,7 @@ mod tests {
         // Different seeds share a cache-missing problem only when the
         // prepare knobs differ; a changed seed re-prepares (the cost
         // model is seeded) while a changed topology swaps the entry.
-        let mut planner = Planner::builder().without_cache().build();
+        let planner = Planner::builder().without_cache().build();
         let a = planner.plan(&small_request()).unwrap();
         let b = planner.plan(&small_request()).unwrap();
         assert_eq!(a.plan, b.plan, "same request replans identically");
@@ -366,8 +450,7 @@ mod tests {
 
     #[test]
     fn baseline_backend_plans_carry_sweep_rows() {
-        let mut planner =
-            Planner::builder().backend(BaselineSweepBackend::new()).build();
+        let planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
         let out = planner.plan(&small_request()).unwrap();
         assert_eq!(out.plan.backend, "baseline-sweep");
         for name in BASELINE_NAMES {
@@ -377,7 +460,7 @@ mod tests {
 
     #[test]
     fn malformed_topology_surfaces_as_plan_error_not_abort() {
-        let mut planner = Planner::builder().build();
+        let planner = Planner::builder().build();
         let mut req = small_request();
         // Corrupt the (publicly mutable) derived matrix: asymmetric.
         req.topology.inter_bw_gbps[0][1] = 1.0;
@@ -395,8 +478,37 @@ mod tests {
     }
 
     #[test]
+    fn shared_planner_serves_concurrent_threads() {
+        use std::sync::Arc;
+
+        // A SharedPlanner behind an Arc, hit by racing threads with the
+        // same request: every thread gets the same (bit-identical) plan
+        // and the cache sees exactly one search (miss) from this key —
+        // the property `tag serve`'s coalescing and metrics build on.
+        // (Concurrent identical misses may each search; here the plans
+        // they produce are identical, so the count of *distinct* plans
+        // is what's pinned, plus hits+misses == lookups.)
+        let planner: Arc<SharedPlanner> = Arc::new(SharedPlanner::builder().build());
+        let warmup = planner.plan(&small_request()).unwrap();
+        assert!(!warmup.cache_hit);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = planner.clone();
+                std::thread::spawn(move || p.plan(&small_request()).unwrap())
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert!(out.cache_hit, "warmed cache serves every thread");
+            assert_eq!(out.plan, warmup.plan);
+        }
+        let stats = planner.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (4, 1, 1));
+    }
+
+    #[test]
     fn mask_memo_hit_rate_rides_in_plan_telemetry() {
-        let mut planner = Planner::builder().without_cache().build();
+        let planner = Planner::builder().without_cache().build();
         let plan = planner.plan(&small_request()).unwrap().plan;
         let rate = plan.telemetry.metric("mask_memo_hit_rate").expect("row present");
         assert!((0.0..=1.0).contains(&rate));

@@ -7,8 +7,29 @@ use crate::coordinator::SearchConfig;
 use crate::graph::grouping::DEFAULT_GROUPS;
 use crate::graph::CompGraph;
 use crate::search::Parallelism;
+use crate::util::error::{Error, Result};
 
 use super::fingerprint::Fnv;
+use super::json::Json;
+
+/// Admission bounds for [`PlanRequest::decode`]d (network) requests.
+/// In-process callers can build arbitrarily heavy requests; a request
+/// arriving over the wire is untrusted, and a single absurd budget must
+/// not be able to pin a serving worker for hours.  Out-of-bounds values
+/// are rejected with `Err`, not clamped — silent clamping would serve a
+/// *different* plan than the one requested.
+pub mod wire_limits {
+    /// Search iterations (`"iterations"`): 1..=this.
+    pub const MAX_ITERATIONS: usize = 100_000;
+    /// Op-group cap (`"max_groups"`): 2..=this.
+    pub const MAX_GROUPS: usize = 128;
+    /// Tree-parallel workers (`"workers"`): 1..=this.
+    pub const MAX_WORKERS: usize = 64;
+    /// Model scale (`"scale"`): within this closed range.
+    pub const SCALE_RANGE: (f64, f64) = (0.01, 4.0);
+    /// Profiler noise (`"profile_noise"`): within this closed range.
+    pub const NOISE_RANGE: (f64, f64) = (0.0, 0.5);
+}
 
 /// How much work the search may spend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -142,12 +163,130 @@ impl PlanRequest {
         h.write_f64(self.profile_noise);
         h.finish()
     }
+
+    /// Decode a *wire* request — the `POST /plan` body of `tag serve` —
+    /// into a fully resolved `PlanRequest`.
+    ///
+    /// The wire form names the model and topology instead of shipping
+    /// their graphs (the daemon owns the model zoo and the topology
+    /// vocabulary; two tenants asking for `"VGG19"` must resolve to the
+    /// same fingerprints, which is what makes coalescing and caching
+    /// across tenants sound):
+    ///
+    /// ```json
+    /// {"model":"VGG19","scale":0.25,"topology":"testbed",
+    ///  "iterations":150,"max_groups":24,"seed":1,"sfb":true,
+    ///  "profile_noise":0.0,"workers":1,"virtual_loss":1.0}
+    /// ```
+    ///
+    /// Only `"model"` is required; every other key has the CLI's
+    /// default.  `"seed"` may be a JSON number or a decimal string
+    /// (full `u64` range — numbers stop at 2^53).  Unknown keys, wrong
+    /// types, out-of-[`wire_limits`] values, unknown models and unknown
+    /// topology specs are all `Err` — never a panic, never a silently
+    /// adjusted request.
+    pub fn decode(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let members = match &root {
+            Json::Obj(members) => members,
+            _ => return Err(Error::msg("request must be a JSON object")),
+        };
+        const KNOWN: [&str; 10] = [
+            "model",
+            "scale",
+            "topology",
+            "iterations",
+            "max_groups",
+            "seed",
+            "sfb",
+            "profile_noise",
+            "workers",
+            "virtual_loss",
+        ];
+        for (key, _) in members {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(Error::msg(format!("unknown request field `{key}`")));
+            }
+        }
+
+        let scale = match root.get("scale") {
+            Some(v) => v.as_f64()?,
+            None => 0.25,
+        };
+        let (lo, hi) = wire_limits::SCALE_RANGE;
+        if !(lo..=hi).contains(&scale) {
+            return Err(Error::msg(format!("scale {scale} outside [{lo}, {hi}]")));
+        }
+        let model_name = root.field("model")?.as_str()?;
+        let model = crate::models::by_name(model_name, scale)
+            .ok_or_else(|| Error::msg(format!("unknown model `{model_name}`")))?;
+
+        let spec = match root.get("topology") {
+            Some(v) => v.as_str()?,
+            None => "testbed",
+        };
+        let topology = crate::cluster::topology_by_spec(spec)
+            .ok_or_else(|| Error::msg(format!("unknown topology spec `{spec}`")))?;
+
+        let bounded = |key: &str, default: usize, min: usize, max: usize| -> Result<usize> {
+            let v = match root.get(key) {
+                Some(v) => v.as_usize()?,
+                None => default,
+            };
+            if v < min || v > max {
+                return Err(Error::msg(format!("{key} {v} outside [{min}, {max}]")));
+            }
+            Ok(v)
+        };
+        let iterations = bounded("iterations", 150, 1, wire_limits::MAX_ITERATIONS)?;
+        let max_groups = bounded("max_groups", DEFAULT_GROUPS, 2, wire_limits::MAX_GROUPS)?;
+        let workers = bounded("workers", 1, 1, wire_limits::MAX_WORKERS)?;
+
+        let seed = match root.get("seed") {
+            None => 1,
+            Some(Json::Str(s)) => s
+                .parse::<u64>()
+                .map_err(|e| Error::msg(format!("bad seed `{s}`: {e}")))?,
+            Some(v) => v.as_u64()?,
+        };
+        let apply_sfb = match root.get("sfb") {
+            Some(v) => v.as_bool()?,
+            None => true,
+        };
+        let profile_noise = match root.get("profile_noise") {
+            Some(v) => v.as_f64()?,
+            None => 0.0,
+        };
+        let (nlo, nhi) = wire_limits::NOISE_RANGE;
+        if !(nlo..=nhi).contains(&profile_noise) {
+            return Err(Error::msg(format!(
+                "profile_noise {profile_noise} outside [{nlo}, {nhi}]"
+            )));
+        }
+        let virtual_loss = match root.get("virtual_loss") {
+            Some(v) => v.as_f64()?,
+            None => 1.0,
+        };
+        if !(virtual_loss.is_finite() && virtual_loss > 0.0 && virtual_loss <= 64.0) {
+            return Err(Error::msg(format!("virtual_loss {virtual_loss} outside (0, 64]")));
+        }
+
+        Ok(Self {
+            model,
+            topology,
+            budget: SearchBudget { iterations, max_groups },
+            seed,
+            apply_sfb,
+            profile_noise,
+            parallelism: Parallelism { workers, virtual_loss },
+        })
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::presets::sfb_pair;
+    use crate::cluster::presets::{sfb_pair, testbed};
     use crate::models;
 
     fn req() -> PlanRequest {
@@ -198,6 +337,73 @@ mod tests {
         // And the knob reaches the engine config.
         assert_eq!(req().workers(4).search_config().parallelism.workers, 4);
         assert_eq!(req().workers(0).search_config().parallelism.workers, 1);
+    }
+
+    #[test]
+    fn wire_decode_resolves_names_and_matches_builder_fingerprints() {
+        let wire = PlanRequest::decode(
+            r#"{"model":"VGG19","scale":0.25,"topology":"sfb","iterations":40,
+                "max_groups":10,"seed":9,"sfb":false,"profile_noise":0.0}"#,
+        )
+        .unwrap();
+        let built = PlanRequest::new(models::by_name("VGG19", 0.25).unwrap(), sfb_pair())
+            .budget(40, 10)
+            .seed(9)
+            .sfb(false);
+        // Same resolution ⇒ same fingerprints ⇒ same cache identity.
+        assert_eq!(wire.config_fingerprint(1), built.config_fingerprint(1));
+        assert_eq!(wire.prepare_fingerprint(), built.prepare_fingerprint());
+        assert_eq!(
+            crate::api::fingerprint::model(&wire.model),
+            crate::api::fingerprint::model(&built.model)
+        );
+        assert_eq!(
+            crate::api::fingerprint::topology(&wire.topology),
+            crate::api::fingerprint::topology(&built.topology)
+        );
+    }
+
+    #[test]
+    fn wire_decode_defaults_match_the_builder_defaults() {
+        let wire = PlanRequest::decode(r#"{"model":"VGG19"}"#).unwrap();
+        let built = PlanRequest::new(models::by_name("VGG19", 0.25).unwrap(), testbed());
+        assert_eq!(wire.config_fingerprint(7), built.config_fingerprint(7));
+        assert_eq!(wire.budget, SearchBudget::default());
+        assert_eq!(wire.seed, 1);
+        assert!(wire.apply_sfb);
+        assert_eq!(wire.parallelism, Parallelism::default());
+        // Seeded generator specs and string seeds resolve too.
+        let r = PlanRequest::decode(
+            r#"{"model":"VGG19","topology":"hier:7","seed":"18446744073709551615"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.seed, u64::MAX);
+        assert!(r.topology.is_routed());
+    }
+
+    #[test]
+    fn wire_decode_rejects_malformed_and_out_of_bounds_requests() {
+        for bad in [
+            "",                                                  // empty
+            "[]",                                                // not an object
+            r#"{"scale":0.25}"#,                                 // model missing
+            r#"{"model":"NoSuchNet"}"#,                          // unknown model
+            r#"{"model":"VGG19","topology":"moon-base"}"#,       // unknown topology
+            r#"{"model":"VGG19","topology":"random:zzz"}"#,      // malformed seed
+            r#"{"model":"VGG19","turbo":true}"#,                 // unknown field
+            r#"{"model":42.0}"#,                                 // wrong type
+            r#"{"model":"VGG19","iterations":0}"#,               // below bounds
+            r#"{"model":"VGG19","iterations":100001}"#,          // above bounds
+            r#"{"model":"VGG19","max_groups":1}"#,               // below bounds
+            r#"{"model":"VGG19","workers":65}"#,                 // above bounds
+            r#"{"model":"VGG19","scale":5.0}"#,                  // above bounds
+            r#"{"model":"VGG19","profile_noise":0.9}"#,          // above bounds
+            r#"{"model":"VGG19","virtual_loss":0.0}"#,           // non-positive
+            r#"{"model":"VGG19","seed":-1.0}"#,                  // negative seed
+            r#"{"model":"VGG19","model":"VGG19"}"#,              // duplicate key
+        ] {
+            assert!(PlanRequest::decode(bad).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

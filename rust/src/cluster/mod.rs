@@ -40,6 +40,35 @@ use std::sync::Arc;
 
 use crate::util::error::Result;
 
+/// Resolve a topology *spec* string: a preset name (`testbed`, `cloud`,
+/// `homogeneous`/`homog`, `sfb`/`sfb_pair`, `nvlink_island`/`nvlink`,
+/// `multi_rack`/`rack`) or a seeded generator (`random:SEED`,
+/// `hier:SEED`).  This is the shared vocabulary of the CLI
+/// (`--topology`) and the `tag serve` wire request (`"topology"`);
+/// `None` means the spec is unknown (a malformed seed is unknown too,
+/// never silently seed 0).
+pub fn topology_by_spec(spec: &str) -> Option<Topology> {
+    match spec {
+        "testbed" => Some(presets::testbed()),
+        "cloud" => Some(presets::cloud()),
+        "homogeneous" | "homog" => Some(presets::homogeneous()),
+        "sfb" | "sfb_pair" => Some(presets::sfb_pair()),
+        "nvlink_island" | "nvlink" => Some(presets::nvlink_island()),
+        "multi_rack" | "rack" => Some(presets::multi_rack()),
+        other => {
+            if let Some(seed) = other.strip_prefix("random:") {
+                let seed: u64 = seed.parse().ok()?;
+                Some(random_topology(&mut crate::util::Rng::new(seed)))
+            } else if let Some(seed) = other.strip_prefix("hier:") {
+                let seed: u64 = seed.parse().ok()?;
+                Some(random_hierarchical_topology(&mut crate::util::Rng::new(seed)))
+            } else {
+                None
+            }
+        }
+    }
+}
+
 /// A GPU model with its effective compute rate and memory.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GpuType {

@@ -16,7 +16,7 @@
 //! ```no_run
 //! use tag::api::{PlanRequest, Planner};
 //!
-//! let mut planner = Planner::builder().build();
+//! let planner = Planner::builder().build();
 //! let request = PlanRequest::new(
 //!     tag::models::vgg19(48, 0.5),
 //!     tag::cluster::presets::testbed(),
@@ -30,6 +30,21 @@
 //!
 //! The planner drives a pluggable [`api::SearchBackend`] — GNN-guided
 //! MCTS, pure MCTS, or a baseline sweep — over the engine layers below.
+//!
+//! ## The serving layer: [`serve`]
+//!
+//! `tag serve` exposes the planner over HTTP/1.1 (std-only, like the
+//! rest of the crate): `POST /plan` takes a wire
+//! [`api::PlanRequest`] (model/topology by name + knobs), `GET
+//! /metrics` reports the plan-cache hit rate, in-flight/coalescing
+//! gauges and per-endpoint latency histograms, and `POST /shutdown`
+//! drains gracefully.  A fixed worker pool behind a **bounded
+//! admission queue** sheds overload with `503 Retry-After`; concurrent
+//! identical requests are **coalesced** (singleflight on the request's
+//! fingerprint triple) into one search with byte-identical responses —
+//! the plan determinism contract (identical request fingerprint ⇒
+//! identical plan bytes; `workers == 1` exact, `workers > 1`
+//! seed-stable) holds across the network boundary.
 //!
 //! ## The engine underneath
 //!
@@ -84,6 +99,7 @@ pub mod partition;
 pub mod profile;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod sfb;
 pub mod sim;
 pub mod strategy;

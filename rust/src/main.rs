@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   search    find a deployment plan for a model on a topology
 //!   baselines evaluate all baseline strategies on the same setup
+//!   serve     run the HTTP planning daemon (POST /plan, GET /metrics)
 //!   train     self-play GNN training (writes a params .bin)
 //!   info      list models, topologies and artifact status
 //!
@@ -15,6 +16,7 @@
 //!   tag search --model VGG19 --workers=8         # tree-parallel MCTS
 //!   tag train --games 30 --steps 4 --out artifacts/params_trained.bin
 //!   tag baselines --model InceptionV3 --topology testbed
+//!   tag serve --port 7878 --workers 4 --queue-depth 64
 //!
 //! Flags accept both `--key value` and `--key=value`; values may start
 //! with `-` (e.g. `--scale -0.5`).  `--workers=K` runs K tree-parallel
@@ -27,18 +29,19 @@
 
 use tag::api::{
     BaselineSweepBackend, DeploymentPlan, GnnMctsBackend, Parallelism, PlanRequest,
-    Planner, BASELINE_NAMES,
+    Planner, SharedPlanner, BASELINE_NAMES,
 };
-use tag::cluster::{generator, presets, Topology};
+use tag::cluster::Topology;
 use tag::coordinator::Trainer;
 use tag::gnn::{params, GnnService};
 use tag::models;
+use tag::serve::{ServeConfig, Server};
 use tag::strategy::ReplOption;
-use tag::util::{fmt_secs, Args, Rng};
+use tag::util::{fmt_secs, Args};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tag <search|baselines|train|info> [options]\n\
+        "usage: tag <search|baselines|serve|train|info> [options]\n\
          run `tag <cmd> --help` for details"
     );
     std::process::exit(2)
@@ -55,31 +58,13 @@ fn parse_args(tokens: &[String]) -> Args {
 }
 
 fn topology_by_name(name: &str) -> Topology {
-    match name {
-        "testbed" => presets::testbed(),
-        "cloud" => presets::cloud(),
-        "homogeneous" | "homog" => presets::homogeneous(),
-        "sfb" | "sfb_pair" => presets::sfb_pair(),
-        "nvlink_island" | "nvlink" => presets::nvlink_island(),
-        "multi_rack" | "rack" => presets::multi_rack(),
-        other => {
-            if let Some(seed) = other.strip_prefix("random:") {
-                let seed: u64 = seed.parse().unwrap_or(0);
-                let mut rng = Rng::new(seed);
-                generator::random_topology(&mut rng)
-            } else if let Some(seed) = other.strip_prefix("hier:") {
-                let seed: u64 = seed.parse().unwrap_or(0);
-                let mut rng = Rng::new(seed);
-                generator::random_hierarchical_topology(&mut rng)
-            } else {
-                eprintln!(
-                    "unknown topology {other} (testbed|cloud|homogeneous|sfb|\
-                     nvlink_island|multi_rack|random:SEED|hier:SEED)"
-                );
-                std::process::exit(2)
-            }
-        }
-    }
+    tag::cluster::topology_by_spec(name).unwrap_or_else(|| {
+        eprintln!(
+            "unknown topology {name} (testbed|cloud|homogeneous|sfb|\
+             nvlink_island|multi_rack|random:SEED|hier:SEED)"
+        );
+        std::process::exit(2)
+    })
 }
 
 /// Build a request from the shared `--model/--topology/--scale/...`
@@ -141,7 +126,7 @@ fn cmd_search(args: &Args) {
     );
 
     let builder = Planner::builder();
-    let mut planner = match args.get("gnn") {
+    let planner = match args.get("gnn") {
         Some(params_path) => {
             let backend = GnnMctsBackend::from_artifacts("artifacts", params_path)
                 .unwrap_or_else(|e| {
@@ -200,7 +185,7 @@ fn cmd_search(args: &Args) {
 
 fn cmd_baselines(args: &Args) {
     let request = request_from(args).sfb(false);
-    let mut planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
+    let planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
     let plan = planner
         .plan(&request)
         .unwrap_or_else(|e| {
@@ -253,6 +238,44 @@ fn cmd_train(args: &Args) {
     println!("saved {} params to {out}", tr.params.len());
 }
 
+fn cmd_serve(args: &Args) {
+    if args.get("gnn").is_some() {
+        // GnnMctsBackend shares its PJRT service via `Rc` and cannot
+        // cross the worker-pool threads; the daemon serves pure MCTS.
+        eprintln!("serve does not support --gnn (the GNN backend is not thread-shareable)");
+        std::process::exit(2);
+    }
+    let config = ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1").to_string(),
+        port: args.num("port", 7878),
+        workers: args.num("workers", 4usize).max(1),
+        queue_depth: args.num("queue-depth", 64usize).max(1),
+        max_body_bytes: args.num("max-body-kb", 1024usize).max(1) * 1024,
+        ..ServeConfig::default()
+    };
+    let planner = SharedPlanner::builder()
+        .cache_capacity(args.num("cache", 1usize << 10).max(1))
+        .build();
+    let server = Server::bind(config.clone(), planner).unwrap_or_else(|e| {
+        eprintln!("bind failed: {e}");
+        std::process::exit(1)
+    });
+    println!(
+        "tag serve listening on http://{} ({} workers, queue depth {})",
+        server.local_addr(),
+        config.workers,
+        config.queue_depth
+    );
+    println!(
+        "endpoints: POST /plan  GET /healthz  GET /metrics  POST /shutdown"
+    );
+    if let Err(e) = server.run() {
+        eprintln!("serve failed: {e}");
+        std::process::exit(1);
+    }
+    println!("drained and shut down");
+}
+
 fn cmd_info() {
     println!("models (name: ops at scale 1.0, params):");
     for g in models::all_models() {
@@ -279,6 +302,7 @@ fn main() {
     match cmd.as_str() {
         "search" => cmd_search(&rest),
         "baselines" => cmd_baselines(&rest),
+        "serve" => cmd_serve(&rest),
         "train" => cmd_train(&rest),
         "info" => cmd_info(),
         _ => usage(),

@@ -1,0 +1,232 @@
+//! In-flight request deduplication (singleflight): N concurrent
+//! requests with the same key trigger **one** computation, and all N
+//! callers receive clones of the one result.
+//!
+//! This is the serving-side complement of the
+//! [`PlanCache`](crate::api::PlanCache): the cache deduplicates across
+//! *time* (a finished plan answers later repeats), the singleflight
+//! deduplicates across *concurrency* (a plan still being searched
+//! answers simultaneous repeats).  Keyed on the request's fingerprint
+//! triple ([`PlanKey`](crate::api::PlanKey)), together they guarantee a
+//! burst of identical requests costs exactly one search — and, because
+//! followers clone the leader's bytes, that every response in the burst
+//! is byte-identical.
+//!
+//! The leader holds a [`Leader`] guard; if it panics (or otherwise
+//! drops the guard without completing), waiting followers receive an
+//! error instead of blocking forever.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::lock;
+
+enum FlightState<V> {
+    Pending,
+    Done(Result<V, String>),
+}
+
+struct Flight<V> {
+    state: Mutex<FlightState<V>>,
+    done: Condvar,
+}
+
+/// What [`SingleFlight::join`] hands a caller.
+pub enum Join<'a, K: Eq + Hash + Clone, V: Clone> {
+    /// First caller for this key: compute, then
+    /// [`complete`](Leader::complete) the guard.
+    Lead(Leader<'a, K, V>),
+    /// A leader was already in flight; this is a clone of its result.
+    /// The caller did *not* compute anything.
+    Coalesced(Result<V, String>),
+}
+
+/// The in-flight table.
+pub struct SingleFlight<K: Eq + Hash + Clone, V: Clone> {
+    flights: Mutex<HashMap<K, Arc<Flight<V>>>>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Default for SingleFlight<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
+    pub fn new() -> Self {
+        Self { flights: Mutex::new(HashMap::new()) }
+    }
+
+    /// Join the flight for `key`: become its leader, or block until the
+    /// current leader finishes and take its result.
+    pub fn join(&self, key: K) -> Join<'_, K, V> {
+        let flight = {
+            let mut flights = lock(&self.flights);
+            match flights.get(&key) {
+                Some(flight) => flight.clone(),
+                None => {
+                    let flight = Arc::new(Flight {
+                        state: Mutex::new(FlightState::Pending),
+                        done: Condvar::new(),
+                    });
+                    flights.insert(key.clone(), flight.clone());
+                    return Join::Lead(Leader { table: self, key, flight, completed: false });
+                }
+            }
+        };
+        let mut state = lock(&flight.state);
+        loop {
+            match &*state {
+                FlightState::Done(result) => return Join::Coalesced(result.clone()),
+                FlightState::Pending => {
+                    state = flight
+                        .done
+                        .wait(state)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
+                }
+            }
+        }
+    }
+
+    /// Keys currently in flight.
+    pub fn in_flight(&self) -> usize {
+        lock(&self.flights).len()
+    }
+
+    fn finish(&self, key: &K, flight: &Arc<Flight<V>>, result: Result<V, String>) {
+        // Remove first so a caller arriving after completion starts a
+        // fresh flight (it will hit the plan cache instead of searching
+        // again); waiters already hold the Arc and still get notified.
+        lock(&self.flights).remove(key);
+        *lock(&flight.state) = FlightState::Done(result);
+        flight.done.notify_all();
+    }
+}
+
+/// Exclusive right (and duty) to produce the value for one key.
+pub struct Leader<'a, K: Eq + Hash + Clone, V: Clone> {
+    table: &'a SingleFlight<K, V>,
+    key: K,
+    flight: Arc<Flight<V>>,
+    completed: bool,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Leader<'_, K, V> {
+    /// Publish the computed result to every coalesced follower.
+    pub fn complete(mut self, result: Result<V, String>) {
+        self.completed = true;
+        self.table.finish(&self.key, &self.flight, result);
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Drop for Leader<'_, K, V> {
+    fn drop(&mut self) {
+        if !self.completed {
+            // Leader panicked (or bailed): fail the followers rather
+            // than strand them on the condvar.
+            self.table.finish(
+                &self.key,
+                &self.flight,
+                Err("in-flight leader failed before completing".to_string()),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn sole_caller_leads_and_next_caller_leads_again() {
+        let sf: SingleFlight<u32, String> = SingleFlight::new();
+        match sf.join(7) {
+            Join::Lead(leader) => leader.complete(Ok("first".into())),
+            Join::Coalesced(_) => panic!("no flight existed"),
+        }
+        assert_eq!(sf.in_flight(), 0, "completed flight removed");
+        // After completion the key is free again — no stale coalescing.
+        assert!(matches!(sf.join(7), Join::Lead(_)));
+    }
+
+    #[test]
+    fn concurrent_joiners_coalesce_onto_one_computation() {
+        let sf: Arc<SingleFlight<u32, String>> = Arc::new(SingleFlight::new());
+        let computations = Arc::new(AtomicUsize::new(0));
+        let start = Arc::new(Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let sf = sf.clone();
+                let computations = computations.clone();
+                let start = start.clone();
+                std::thread::spawn(move || {
+                    start.wait();
+                    match sf.join(42) {
+                        Join::Lead(leader) => {
+                            computations.fetch_add(1, Ordering::SeqCst);
+                            // Linger so peers in this barrier round
+                            // actually coalesce rather than re-lead.
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            let v = "computed".to_string();
+                            leader.complete(Ok(v.clone()));
+                            v
+                        }
+                        Join::Coalesced(result) => result.unwrap(),
+                    }
+                })
+            })
+            .collect();
+        let values: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(values.iter().all(|v| v == "computed"));
+        // Every thread that didn't lead waited for a leader; with the
+        // 30ms linger all barrier-mates coalesce, but even in the worst
+        // schedule each computation served at least one caller and the
+        // table is empty afterwards.
+        assert!(computations.load(Ordering::SeqCst) >= 1);
+        assert!(computations.load(Ordering::SeqCst) <= 8);
+        assert_eq!(sf.in_flight(), 0);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let sf: SingleFlight<u32, u32> = SingleFlight::new();
+        let Join::Lead(a) = sf.join(1) else { panic!("lead 1") };
+        let Join::Lead(b) = sf.join(2) else { panic!("lead 2") };
+        assert_eq!(sf.in_flight(), 2);
+        a.complete(Ok(10));
+        b.complete(Ok(20));
+        assert_eq!(sf.in_flight(), 0);
+    }
+
+    #[test]
+    fn dropped_leader_fails_followers_instead_of_hanging_them() {
+        let sf: Arc<SingleFlight<u32, u32>> = Arc::new(SingleFlight::new());
+        let Join::Lead(leader) = sf.join(5) else { panic!("lead") };
+        let follower = {
+            let sf = sf.clone();
+            std::thread::spawn(move || match sf.join(5) {
+                Join::Coalesced(result) => result,
+                Join::Lead(_) => panic!("leader still in flight"),
+            })
+        };
+        // Give the follower time to actually park on the condvar (a
+        // late joiner would lead instead and fail the match above).
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        drop(leader); // simulates a panicking leader
+        let result = follower.join().unwrap();
+        assert!(result.unwrap_err().contains("leader failed"));
+        assert!(matches!(sf.join(5), Join::Lead(_)), "key usable again");
+    }
+
+    #[test]
+    fn errors_propagate_to_followers_as_errors() {
+        let sf: SingleFlight<u32, u32> = SingleFlight::new();
+        let Join::Lead(leader) = sf.join(9) else { panic!("lead") };
+        leader.complete(Err("search failed".into()));
+        // Next joiner leads again (errors are not cached).
+        assert!(matches!(sf.join(9), Join::Lead(_)));
+    }
+}

@@ -1,0 +1,378 @@
+//! Minimal HTTP/1.1 over `std::io`: a hardened request reader and a
+//! response writer — just enough of RFC 9112 for the planning daemon
+//! (the vendored dependency set has no `hyper`).
+//!
+//! Scope is deliberately narrow: `Content-Length` bodies only (no
+//! chunked transfer coding), one request per connection (every response
+//! carries `Connection: close`), and hard limits on head and body size.
+//! Abuse maps to clean errors, never panics: an oversized head or body
+//! is [`HttpError::TooLarge`] (413), malformed syntax is
+//! [`HttpError::Bad`] (400), and a socket that dies mid-request is
+//! [`HttpError::Io`].  Unknown methods are *parsed* fine — rejecting
+//! them with 405 is the router's decision, not a transport error.
+
+use std::io::{BufRead, Read, Write};
+
+/// Hard limits the reader enforces before allocating.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Request line + headers, bytes.
+    pub max_head_bytes: usize,
+    /// Declared `Content-Length`, bytes.
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self { max_head_bytes: 16 * 1024, max_body_bytes: 1024 * 1024 }
+    }
+}
+
+/// One parsed request.  Header names are lowercased; values are
+/// whitespace-trimmed.  `path` excludes any query string (`query`
+/// keeps it, undecoded).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a (lowercase) header name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed syntax — respond 400.
+    Bad(String),
+    /// Head or body over the configured limit — respond 413.
+    TooLarge(String),
+    /// The connection closed cleanly before the first byte — no
+    /// request was attempted; write nothing.
+    Closed,
+    /// Socket error (including read timeout) mid-request.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// The status this error maps to, or `None` when no response
+    /// should be written (the peer is gone).
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Bad(_) => Some(400),
+            HttpError::TooLarge(_) => Some(413),
+            HttpError::Closed => None,
+            HttpError::Io(e) => match e.kind() {
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => Some(408),
+                _ => None,
+            },
+        }
+    }
+}
+
+fn bad(msg: impl Into<String>) -> HttpError {
+    HttpError::Bad(msg.into())
+}
+
+/// Read one line (up to LF), enforcing the remaining head budget.
+/// Returns the line without its trailing CRLF/LF.
+fn read_line<R: BufRead>(r: &mut R, budget: &mut usize) -> Result<String, HttpError> {
+    let mut raw = Vec::new();
+    loop {
+        if *budget == 0 {
+            return Err(HttpError::TooLarge("request head too large".into()));
+        }
+        let chunk = r.fill_buf().map_err(HttpError::Io)?;
+        if chunk.is_empty() {
+            if raw.is_empty() {
+                return Err(HttpError::Closed);
+            }
+            return Err(bad("connection closed mid-line"));
+        }
+        let want = match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => i + 1,
+            None => chunk.len(),
+        };
+        let take = want.min(*budget);
+        raw.extend_from_slice(&chunk[..take]);
+        r.consume(take);
+        *budget -= take;
+        if raw.last() == Some(&b'\n') {
+            break;
+        }
+    }
+    while matches!(raw.last(), Some(b'\n') | Some(b'\r')) {
+        raw.pop();
+    }
+    String::from_utf8(raw).map_err(|_| bad("non-utf8 bytes in request head"))
+}
+
+/// Read and parse one request.
+pub fn read_request<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Request, HttpError> {
+    let mut head_budget = limits.max_head_bytes;
+    let request_line = read_line(r, &mut head_budget)?;
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or_default().to_string();
+    let target = parts.next().ok_or_else(|| bad("missing request target"))?.to_string();
+    let version = parts.next().ok_or_else(|| bad("missing HTTP version"))?;
+    if parts.next().is_some() {
+        return Err(bad("malformed request line"));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(bad(format!("unsupported version `{version}`")));
+    }
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(bad("malformed method"));
+    }
+    if !target.starts_with('/') {
+        return Err(bad("request target must be origin-form (start with `/`)"));
+    }
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, &mut head_budget) {
+            Ok(line) => line,
+            Err(HttpError::Closed) => return Err(bad("connection closed mid-head")),
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= 64 {
+            return Err(HttpError::TooLarge("too many headers".into()));
+        }
+        let (name, value) = line.split_once(':').ok_or_else(|| bad("malformed header"))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(bad("malformed header name"));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target, None),
+    };
+
+    let request = Request { method, path, query, headers, body: Vec::new() };
+    if request.header("transfer-encoding").is_some() {
+        // Content-Length bodies only: a disagreeing framing header is a
+        // smuggling vector, not a feature gap to paper over.
+        return Err(bad("transfer-encoding not supported (Content-Length only)"));
+    }
+    let content_length = match request.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| bad(format!("malformed Content-Length `{v}`")))?,
+    };
+    if request
+        .headers
+        .iter()
+        .filter(|(n, _)| n == "content-length")
+        .any(|(_, v)| v.trim().parse::<usize>().ok() != Some(content_length))
+    {
+        return Err(bad("conflicting Content-Length headers"));
+    }
+    if content_length > limits.max_body_bytes {
+        return Err(HttpError::TooLarge(format!(
+            "body of {content_length} bytes exceeds the {} byte limit",
+            limits.max_body_bytes
+        )));
+    }
+
+    let mut request = request;
+    if content_length > 0 {
+        let mut body = vec![0u8; content_length];
+        let mut filled = 0;
+        while filled < content_length {
+            let n = r.read(&mut body[filled..]).map_err(HttpError::Io)?;
+            if n == 0 {
+                return Err(bad("connection closed mid-body"));
+            }
+            filled += n;
+        }
+        request.body = body;
+    }
+    Ok(request)
+}
+
+/// Reason phrase for every status the daemon emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+/// One response.  Always written with `Content-Length` and
+/// `Connection: close`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Emitted as `Retry-After: <seconds>` (load shedding).
+    pub retry_after_s: Option<u64>,
+    /// Emitted as `Allow: <methods>` (405 responses).
+    pub allow: Option<&'static str>,
+}
+
+impl Response {
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+            retry_after_s: None,
+            allow: None,
+        }
+    }
+
+    pub fn json(status: u16, body: String) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            retry_after_s: None,
+            allow: None,
+        }
+    }
+
+    /// Serialize head + body.  Building the full byte vector first
+    /// keeps the socket write a single call.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        if let Some(s) = self.retry_after_s {
+            head.push_str(&format!("retry-after: {s}\r\n"));
+        }
+        if let Some(methods) = self.allow {
+            head.push_str(&format!("allow: {methods}\r\n"));
+        }
+        head.push_str("connection: close\r\n\r\n");
+        let mut out = head.into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        w.write_all(&self.to_bytes())?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(raw.to_vec()), &Limits::default())
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let r = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!((r.method.as_str(), r.path.as_str()), ("GET", "/healthz"));
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.body.is_empty());
+        assert_eq!(r.query, None);
+    }
+
+    #[test]
+    fn parses_post_with_content_length_body() {
+        let r = parse(b"POST /plan HTTP/1.1\r\nContent-Length: 4\r\n\r\n{\"a\"").unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"{\"a\"");
+    }
+
+    #[test]
+    fn splits_query_and_lowercases_header_names() {
+        let r = parse(b"GET /metrics?verbose=1 HTTP/1.1\r\nX-Thing: v\r\n\r\n").unwrap();
+        assert_eq!(r.path, "/metrics");
+        assert_eq!(r.query.as_deref(), Some("verbose=1"));
+        assert_eq!(r.header("x-thing"), Some("v"));
+    }
+
+    #[test]
+    fn bare_lf_line_endings_accepted() {
+        let r = parse(b"GET / HTTP/1.1\nHost: x\n\n").unwrap();
+        assert_eq!(r.path, "/");
+    }
+
+    #[test]
+    fn malformed_requests_are_400() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            b"GET /x HTTP/2\r\n\r\n",
+            b"get /x HTTP/1.1\r\n\r\n",
+            b"GET x HTTP/1.1\r\n\r\n",
+            b"GET /x HTTP/1.1 extra\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nbad name: v\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 5\r\n\r\nabcd",
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort",
+            b"GET /x HTT",
+        ] {
+            let err = parse(raw).unwrap_err();
+            assert_eq!(err.status(), Some(400), "{err:?} for {raw:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_head_and_body_are_413() {
+        let limits = Limits { max_head_bytes: 64, max_body_bytes: 8 };
+        let mut big_head = b"GET /x HTTP/1.1\r\n".to_vec();
+        big_head.extend_from_slice(&b"a".repeat(200));
+        let err = read_request(&mut Cursor::new(big_head), &limits).unwrap_err();
+        assert_eq!(err.status(), Some(413));
+
+        let over_body = b"POST /x HTTP/1.1\r\nContent-Length: 9\r\n\r\n123456789".to_vec();
+        let err = read_request(&mut Cursor::new(over_body), &limits).unwrap_err();
+        assert_eq!(err.status(), Some(413), "declared length checked before reading");
+    }
+
+    #[test]
+    fn empty_connection_is_closed_not_bad() {
+        assert!(matches!(parse(b"").unwrap_err(), HttpError::Closed));
+        assert!(parse(b"").unwrap_err().status().is_none());
+    }
+
+    #[test]
+    fn response_bytes_have_exact_framing() {
+        let bytes = Response::text(200, "ok\n").to_bytes();
+        let text = String::from_utf8(bytes).unwrap();
+        assert_eq!(
+            text,
+            "HTTP/1.1 200 OK\r\ncontent-type: text/plain; charset=utf-8\r\n\
+             content-length: 3\r\nconnection: close\r\n\r\nok\n"
+        );
+        let shed = Response { retry_after_s: Some(2), ..Response::text(503, "busy") };
+        let text = String::from_utf8(shed.to_bytes()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("retry-after: 2\r\n"));
+        let nope = Response { allow: Some("POST"), ..Response::text(405, "") };
+        assert!(String::from_utf8(nope.to_bytes()).unwrap().contains("allow: POST\r\n"));
+    }
+}

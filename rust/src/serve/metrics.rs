@@ -1,0 +1,264 @@
+//! Live serving metrics: lock-free counters, gauges and log-scale
+//! latency histograms, rendered as a plain-text exposition (one
+//! `name{label="v"} value` line each, the Prometheus text idiom) by
+//! `GET /metrics`.
+//!
+//! Everything here is atomics — recording a sample on the request hot
+//! path never takes a lock.  Wall-clock latency lives *only* here: the
+//! [`DeploymentPlan`](crate::api::DeploymentPlan) itself stays
+//! deterministic, and timing is a property of the serving process.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+use crate::api::CacheStats;
+
+/// The endpoints metrics are keyed by (plus a catch-all).
+pub const ENDPOINTS: [&str; 5] = ["/plan", "/healthz", "/metrics", "/shutdown", "other"];
+
+/// Index into [`ENDPOINTS`] for a request path.
+pub fn endpoint_index(path: &str) -> usize {
+    ENDPOINTS.iter().position(|&e| e == path).unwrap_or(ENDPOINTS.len() - 1)
+}
+
+/// Histogram bucket upper bounds, seconds.  Log-spaced from 1ms to 30s
+/// — cache hits land left, cold searches right.
+pub const BUCKET_BOUNDS_S: [f64; 10] = [0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0];
+
+/// A fixed-bucket latency histogram (per-bucket counts + sum + count).
+#[derive(Default)]
+pub struct Histogram {
+    /// One count per bound, plus the +Inf overflow bucket.
+    buckets: [AtomicU64; BUCKET_BOUNDS_S.len() + 1],
+    /// Total observed time, microseconds (u64 add keeps this atomic).
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record(&self, seconds: f64) {
+        let idx = BUCKET_BOUNDS_S
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(BUCKET_BOUNDS_S.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((seconds.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Render cumulative (`le`) bucket lines plus `_sum`/`_count`.
+    fn render(&self, name: &str, endpoint: &str, out: &mut String) {
+        let mut cumulative = 0u64;
+        for (i, bound) in BUCKET_BOUNDS_S.iter().enumerate() {
+            cumulative += self.buckets[i].load(Ordering::Relaxed);
+            out.push_str(&format!(
+                "{name}_bucket{{endpoint=\"{endpoint}\",le=\"{bound}\"}} {cumulative}\n"
+            ));
+        }
+        cumulative += self.buckets[BUCKET_BOUNDS_S.len()].load(Ordering::Relaxed);
+        out.push_str(&format!(
+            "{name}_bucket{{endpoint=\"{endpoint}\",le=\"+Inf\"}} {cumulative}\n"
+        ));
+        let sum_s = self.sum_us.load(Ordering::Relaxed) as f64 / 1e6;
+        out.push_str(&format!("{name}_sum{{endpoint=\"{endpoint}\"}} {sum_s:.6}\n"));
+        out.push_str(&format!("{name}_count{{endpoint=\"{endpoint}\"}} {}\n", self.count()));
+    }
+}
+
+/// Every status the daemon can emit, in render order.
+pub const STATUSES: [u16; 8] = [200, 400, 404, 405, 408, 413, 422, 503];
+
+/// All live counters of one serving process.
+#[derive(Default)]
+pub struct ServerMetrics {
+    /// Requests fully read and routed, per endpoint.
+    requests: [AtomicU64; ENDPOINTS.len()],
+    /// Responses by status (parallel arrays; see [`STATUSES`]).
+    statuses: [AtomicU64; STATUSES.len()],
+    /// Requests currently being handled by a worker.
+    in_flight: AtomicI64,
+    /// `/plan` requests answered by joining another request's search.
+    coalesced_total: AtomicU64,
+    /// `/plan` requests currently parked on an in-flight search.
+    coalesce_waiting: AtomicI64,
+    /// Connections shed at admission (503).
+    shed_total: AtomicU64,
+    /// Searches actually executed by this process (singleflight
+    /// leaders that missed the plan cache).
+    searches_total: AtomicU64,
+    /// Handling latency per endpoint.
+    latency: [Histogram; ENDPOINTS.len()],
+}
+
+impl ServerMetrics {
+    pub fn record_request(&self, endpoint: usize) {
+        self.requests[endpoint].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_status(&self, status: u16) {
+        if let Some(i) = STATUSES.iter().position(|&s| s == status) {
+            self.statuses[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_latency(&self, endpoint: usize, seconds: f64) {
+        self.latency[endpoint].record(seconds);
+    }
+
+    pub fn begin_in_flight(&self) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn end_in_flight(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn record_coalesced(&self) {
+        self.coalesced_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn begin_coalesce_wait(&self) {
+        self.coalesce_waiting.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn end_coalesce_wait(&self) {
+        self.coalesce_waiting.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_search(&self) {
+        self.searches_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed_total.load(Ordering::Relaxed)
+    }
+
+    /// Render the full exposition.  `cache` is the planner's live
+    /// [`CacheStats`] (`None` when the planner runs uncached).
+    pub fn render(&self, cache: Option<CacheStats>) -> String {
+        let mut out = String::with_capacity(4096);
+        for (i, endpoint) in ENDPOINTS.iter().enumerate() {
+            out.push_str(&format!(
+                "tag_requests_total{{endpoint=\"{endpoint}\"}} {}\n",
+                self.requests[i].load(Ordering::Relaxed)
+            ));
+        }
+        for (i, status) in STATUSES.iter().enumerate() {
+            out.push_str(&format!(
+                "tag_responses_total{{status=\"{status}\"}} {}\n",
+                self.statuses[i].load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str(&format!("tag_in_flight {}\n", self.in_flight.load(Ordering::Relaxed)));
+        out.push_str(&format!(
+            "tag_coalesced_total {}\n",
+            self.coalesced_total.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "tag_coalesce_waiting {}\n",
+            self.coalesce_waiting.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!("tag_shed_total {}\n", self.shed_total()));
+        out.push_str(&format!(
+            "tag_searches_total {}\n",
+            self.searches_total.load(Ordering::Relaxed)
+        ));
+        if let Some(stats) = cache {
+            out.push_str(&format!("tag_plan_cache_hits {}\n", stats.hits));
+            out.push_str(&format!("tag_plan_cache_misses {}\n", stats.misses));
+            out.push_str(&format!("tag_plan_cache_entries {}\n", stats.entries));
+            out.push_str(&format!("tag_plan_cache_hit_rate {:.6}\n", stats.hit_rate()));
+        }
+        for (i, endpoint) in ENDPOINTS.iter().enumerate() {
+            self.latency[i].render("tag_latency_seconds", endpoint, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pull `name value` (no labels) out of an exposition.
+    fn scrape(text: &str, name: &str) -> Option<f64> {
+        text.lines().find_map(|line| {
+            let (n, v) = line.rsplit_once(' ')?;
+            if n == name {
+                Some(v.parse().unwrap())
+            } else {
+                None
+            }
+        })
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_complete() {
+        let h = Histogram::default();
+        h.record(0.0005); // le=0.001
+        h.record(0.05); // le=0.1
+        h.record(0.05); // le=0.1
+        h.record(120.0); // +Inf overflow
+        assert_eq!(h.count(), 4);
+        let mut out = String::new();
+        h.render("x", "/plan", &mut out);
+        assert!(out.contains("x_bucket{endpoint=\"/plan\",le=\"0.001\"} 1\n"));
+        assert!(out.contains("x_bucket{endpoint=\"/plan\",le=\"0.1\"} 3\n"));
+        assert!(out.contains("x_bucket{endpoint=\"/plan\",le=\"30\"} 3\n"));
+        assert!(out.contains("x_bucket{endpoint=\"/plan\",le=\"+Inf\"} 4\n"));
+        assert!(out.contains("x_count{endpoint=\"/plan\"} 4\n"));
+        let sum: f64 = 0.0005 + 0.05 + 0.05 + 120.0;
+        let rendered: f64 = out
+            .lines()
+            .find(|l| l.starts_with("x_sum"))
+            .and_then(|l| l.rsplit_once(' '))
+            .map(|(_, v)| v.parse().unwrap())
+            .unwrap();
+        assert!((rendered - sum).abs() < 1e-3);
+    }
+
+    #[test]
+    fn render_reports_counters_gauges_and_cache() {
+        let m = ServerMetrics::default();
+        m.record_request(endpoint_index("/plan"));
+        m.record_request(endpoint_index("/plan"));
+        m.record_request(endpoint_index("/nope"));
+        m.record_status(200);
+        m.record_status(503);
+        m.begin_in_flight();
+        m.record_coalesced();
+        m.record_shed();
+        m.record_search();
+        m.record_latency(endpoint_index("/plan"), 0.02);
+        let text = m.render(Some(CacheStats { hits: 3, misses: 1, entries: 2 }));
+        assert_eq!(
+            scrape(&text, "tag_requests_total{endpoint=\"/plan\"}"),
+            Some(2.0)
+        );
+        assert_eq!(
+            scrape(&text, "tag_requests_total{endpoint=\"other\"}"),
+            Some(1.0)
+        );
+        assert_eq!(scrape(&text, "tag_responses_total{status=\"200\"}"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_responses_total{status=\"503\"}"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_in_flight"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_coalesced_total"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_shed_total"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_searches_total"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_plan_cache_hits"), Some(3.0));
+        assert_eq!(scrape(&text, "tag_plan_cache_hit_rate"), Some(0.75));
+        assert_eq!(
+            scrape(&text, "tag_latency_seconds_count{endpoint=\"/plan\"}"),
+            Some(1.0)
+        );
+        // Uncached planner: no cache lines at all.
+        assert!(!m.render(None).contains("tag_plan_cache"));
+    }
+}

@@ -1,0 +1,300 @@
+//! `tag serve` — the planning daemon: TAG's deployment surface as a
+//! network service (ROADMAP north star: answer *"how do I deploy this
+//! graph on this topology"* on demand, for many tenants, under heavy
+//! traffic).
+//!
+//! Zero-dependency by construction, like the rest of the crate: the
+//! transport is [`http`] (a hardened HTTP/1.1 subset over
+//! `std::net`), request handling runs on a fixed [`pool`] of worker
+//! threads behind a **bounded admission queue** (full queue ⇒ `503` +
+//! `Retry-After` at the door, never unbounded buffering), identical
+//! concurrent requests are deduplicated by the [`coalesce`]
+//! singleflight keyed on request fingerprints, and [`metrics`] exposes
+//! live counters, the plan-cache hit rate and per-endpoint latency
+//! histograms.
+//!
+//! ## Determinism across the network boundary
+//!
+//! Two wire requests that decode to the same fingerprint triple get
+//! byte-identical JSON plans, whether they were answered by the same
+//! search (coalesced), the plan cache, or independent re-searches
+//! (`workers == 1` exact; `workers > 1` seed-stable, cached
+//! byte-stable).  The daemon adds no nondeterminism of its own: wall
+//! time lives in `/metrics`, never in a plan.
+//!
+//! ## Lifecycle
+//!
+//! [`Server::bind`] → [`Server::run`] (blocks).  `POST /shutdown`
+//! flips the latch; `run` then stops accepting, lets the pool **drain
+//! every admitted connection** (in-flight searches complete and
+//! respond), joins the workers and returns.
+//!
+//! ```no_run
+//! use tag::api::SharedPlanner;
+//! use tag::serve::{ServeConfig, Server};
+//!
+//! let planner = SharedPlanner::builder().build();
+//! let server = Server::bind(ServeConfig::default(), planner).unwrap();
+//! println!("listening on http://{}", server.local_addr());
+//! server.run().unwrap();
+//! ```
+
+pub mod coalesce;
+pub mod http;
+pub mod metrics;
+pub mod pool;
+pub mod router;
+
+pub use metrics::ServerMetrics;
+pub use router::Router;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::api::SharedPlanner;
+use crate::util::error::{Context, Result};
+use crate::util::Stopwatch;
+
+use http::{HttpError, Limits, Response};
+use pool::{Pool, Rejected};
+
+/// Daemon configuration (`tag serve` flags map 1:1 onto this).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, without port.
+    pub addr: String,
+    /// TCP port; `0` picks an ephemeral port (see
+    /// [`Server::local_addr`]).
+    pub port: u16,
+    /// Worker threads handling requests (searches run here).
+    pub workers: usize,
+    /// Connections admitted beyond the busy workers before the daemon
+    /// sheds with `503`.
+    pub queue_depth: usize,
+    /// Largest accepted request body, bytes.
+    pub max_body_bytes: usize,
+    /// Per-socket read timeout (slow or idle clients cannot hold a
+    /// worker forever).
+    pub read_timeout: Duration,
+    /// Seconds advertised in `Retry-After` on shed responses.
+    pub retry_after_s: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1".to_string(),
+            port: 7878,
+            workers: 4,
+            queue_depth: 64,
+            max_body_bytes: Limits::default().max_body_bytes,
+            read_timeout: Duration::from_secs(10),
+            retry_after_s: 1,
+        }
+    }
+}
+
+/// A bound (but not yet running) planning daemon.
+pub struct Server {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    config: ServeConfig,
+    router: Arc<Router>,
+    metrics: Arc<ServerMetrics>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind the listener and assemble the routing state.  Nothing is
+    /// served until [`run`](Self::run).
+    pub fn bind(config: ServeConfig, planner: SharedPlanner) -> Result<Self> {
+        let listener = TcpListener::bind((config.addr.as_str(), config.port))
+            .with_context(|| format!("bind {}:{}", config.addr, config.port))?;
+        let local_addr = listener.local_addr().context("local_addr")?;
+        let metrics = Arc::new(ServerMetrics::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let router = Arc::new(Router::new(Arc::new(planner), metrics.clone(), shutdown.clone()));
+        Ok(Self { listener, local_addr, config, router, metrics, shutdown })
+    }
+
+    /// The actual bound address (resolves `port: 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// A latch that makes [`run`](Self::run) begin its graceful drain
+    /// when set (the in-process equivalent of `POST /shutdown`, e.g.
+    /// for a host process wiring its own signal handling).
+    pub fn shutdown_latch(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until shut down; then drain admitted work and return.
+    pub fn run(self) -> Result<()> {
+        let limits = Limits { max_body_bytes: self.config.max_body_bytes, ..Limits::default() };
+        let read_timeout = self.config.read_timeout;
+        let router = self.router.clone();
+        let metrics = self.metrics.clone();
+        let pool = Pool::new(
+            self.config.workers,
+            self.config.queue_depth,
+            move |stream: TcpStream| {
+                handle_connection(stream, &router, &metrics, &limits, read_timeout);
+            },
+        );
+
+        // Non-blocking accept so the loop can observe the shutdown
+        // latch promptly (std has no portable listener wakeup).
+        self.listener.set_nonblocking(true).context("set listener non-blocking")?;
+        let mut fatal = None;
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // The stream must block again: workers do real
+                    // timed reads on it.
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    match pool.try_execute(stream) {
+                        Ok(()) => {}
+                        Err(Rejected::Full(stream)) | Err(Rejected::Closed(stream)) => {
+                            self.metrics.record_shed();
+                            self.metrics.record_status(503);
+                            shed(stream, self.config.retry_after_s);
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // Fatal accept failure (e.g. fd exhaustion): stop
+                    // accepting, but still drain below — admitted
+                    // connections were promised service, and the pool's
+                    // workers must be joined, not leaked.
+                    fatal = Some(crate::util::error::Error::from(e));
+                    break;
+                }
+            }
+        }
+
+        // Graceful drain: stop accepting (listener drops), then let the
+        // pool finish every admitted connection before joining.
+        drop(self.listener);
+        pool.shutdown();
+        match fatal {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Shed one connection with `503` + `Retry-After`, without reading the
+/// request (the whole point is to spend nothing on it).
+fn shed(mut stream: TcpStream, retry_after_s: u64) {
+    let response = Response {
+        retry_after_s: Some(retry_after_s),
+        ..Response::text(503, "planning queue full, retry later\n")
+    };
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let _ = response.write_to(&mut stream);
+}
+
+/// Read, route and answer one connection (worker-thread body).
+fn handle_connection(
+    stream: TcpStream,
+    router: &Router,
+    metrics: &ServerMetrics,
+    limits: &Limits,
+    read_timeout: Duration,
+) {
+    metrics.begin_in_flight();
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let _ = stream.set_write_timeout(Some(read_timeout));
+    let mut reader = BufReader::new(&stream);
+    let response = match http::read_request(&mut reader, limits) {
+        Ok(request) => {
+            let endpoint = metrics::endpoint_index(&request.path);
+            metrics.record_request(endpoint);
+            let watch = Stopwatch::start();
+            let response = router.handle(&request);
+            metrics.record_latency(endpoint, watch.elapsed_s());
+            Some(response)
+        }
+        Err(HttpError::Closed) => None,
+        Err(error) => error.status().map(|status| {
+            let detail = match error {
+                HttpError::Bad(msg) | HttpError::TooLarge(msg) => msg,
+                HttpError::Io(e) => e.to_string(),
+                HttpError::Closed => unreachable!("handled above"),
+            };
+            Response::text(status, format!("{detail}\n"))
+        }),
+    };
+    if let Some(response) = response {
+        metrics.record_status(response.status);
+        let mut writer = &stream;
+        let _ = response.write_to(&mut writer);
+    }
+    metrics.end_in_flight();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    /// Bind on an ephemeral port with tight limits for tests.
+    fn start(workers: usize, queue_depth: usize) -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let config = ServeConfig {
+            port: 0,
+            workers,
+            queue_depth,
+            read_timeout: Duration::from_secs(5),
+            ..ServeConfig::default()
+        };
+        let server = Server::bind(config, SharedPlanner::builder().build()).unwrap();
+        let addr = server.local_addr();
+        let handle = std::thread::spawn(move || server.run().unwrap());
+        (addr, handle)
+    }
+
+    fn roundtrip(addr: SocketAddr, raw: &[u8]) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(raw).unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_health_and_shuts_down_cleanly() {
+        let (addr, handle) = start(2, 8);
+        let health = roundtrip(addr, b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+        let metrics = roundtrip(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(metrics.contains("tag_requests_total{endpoint=\"/healthz\"} 1"), "{metrics}");
+        let bye = roundtrip(addr, b"POST /shutdown HTTP/1.1\r\n\r\n");
+        assert!(bye.starts_with("HTTP/1.1 200"), "{bye}");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_and_oversized_requests_get_clean_errors() {
+        let (addr, handle) = start(1, 8);
+        let bad = roundtrip(addr, b"NOT A REQUEST\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+        let huge = roundtrip(
+            addr,
+            format!("POST /plan HTTP/1.1\r\ncontent-length: {}\r\n\r\n", 1 << 30).as_bytes(),
+        );
+        assert!(huge.starts_with("HTTP/1.1 413"), "{huge}");
+        let _ = roundtrip(addr, b"POST /shutdown HTTP/1.1\r\n\r\n");
+        handle.join().unwrap();
+    }
+}

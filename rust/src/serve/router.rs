@@ -1,0 +1,192 @@
+//! Route dispatch: one parsed [`Request`] in, one [`Response`] out.
+//!
+//! | endpoint         | behaviour                                             |
+//! |------------------|-------------------------------------------------------|
+//! | `POST /plan`     | decode wire request → coalesce → plan → JSON plan     |
+//! | `GET /healthz`   | liveness: `200 ok`                                    |
+//! | `GET /metrics`   | plain-text exposition ([`ServerMetrics::render`])     |
+//! | `POST /shutdown` | begin graceful drain; `200`                           |
+//!
+//! `/plan` is where the serving guarantees live: the request's
+//! fingerprint triple keys both the [`SingleFlight`] (concurrent
+//! identical requests ride one search) and the planner's
+//! [`PlanCache`](crate::api::PlanCache) (later identical requests skip
+//! the search).  Followers receive a clone of the leader's *encoded*
+//! response body, so a coalesced burst is byte-identical by
+//! construction — the determinism contract holds across the network
+//! boundary.
+//!
+//! Status mapping: `400` malformed body/unknown names, `404` unknown
+//! path, `405` wrong method (with `Allow`), `422` valid-looking request
+//! the planner rejects (e.g. a topology that fails validation).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::api::{PlanKey, SharedPlanner};
+
+use super::coalesce::{Join, SingleFlight};
+use super::http::{Request, Response};
+use super::metrics::ServerMetrics;
+
+/// Shared routing state: the planner, the in-flight table, the metrics
+/// and the shutdown latch.  One per server, `Arc`-shared with every
+/// worker.
+pub struct Router {
+    pub planner: Arc<SharedPlanner>,
+    pub metrics: Arc<ServerMetrics>,
+    flights: SingleFlight<PlanKey, String>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Router {
+    pub fn new(
+        planner: Arc<SharedPlanner>,
+        metrics: Arc<ServerMetrics>,
+        shutdown: Arc<AtomicBool>,
+    ) -> Self {
+        Self { planner, metrics, flights: SingleFlight::new(), shutdown }
+    }
+
+    /// Dispatch one request.
+    pub fn handle(&self, request: &Request) -> Response {
+        match (request.method.as_str(), request.path.as_str()) {
+            ("POST", "/plan") => self.plan(&request.body),
+            ("GET", "/healthz") => Response::text(200, "ok\n"),
+            ("GET", "/metrics") => {
+                Response::text(200, self.metrics.render(self.planner.cache_stats()))
+            }
+            ("POST", "/shutdown") => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Response::text(200, "draining\n")
+            }
+            (_, "/plan") => method_not_allowed("POST"),
+            (_, "/healthz") | (_, "/metrics") => method_not_allowed("GET"),
+            (_, "/shutdown") => method_not_allowed("POST"),
+            _ => Response::text(404, "unknown endpoint\n"),
+        }
+    }
+
+    /// `POST /plan`: decode, coalesce, search (or wait), respond.
+    fn plan(&self, body: &[u8]) -> Response {
+        let text = match std::str::from_utf8(body) {
+            Ok(text) => text,
+            Err(e) => return Response::text(400, format!("body is not valid utf-8: {e}\n")),
+        };
+        let request = match crate::api::PlanRequest::decode(text) {
+            Ok(request) => request,
+            Err(e) => return Response::text(400, format!("bad plan request: {e}\n")),
+        };
+        let key = self.planner.key_for(&request);
+        // The waiting gauge brackets `join`: a follower sits inside it
+        // for the whole leader search; a leader only transits (join
+        // returns immediately for it).
+        self.metrics.begin_coalesce_wait();
+        let joined = self.flights.join(key);
+        self.metrics.end_coalesce_wait();
+        match joined {
+            Join::Lead(leader) => match self.planner.plan(&request) {
+                Ok(outcome) => {
+                    if !outcome.cache_hit {
+                        self.metrics.record_search();
+                    }
+                    let body = outcome.plan.encode();
+                    leader.complete(Ok(body.clone()));
+                    Response::json(200, body)
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    leader.complete(Err(msg.clone()));
+                    Response::text(422, format!("planning failed: {msg}\n"))
+                }
+            },
+            Join::Coalesced(result) => {
+                self.metrics.record_coalesced();
+                match result {
+                    Ok(body) => Response::json(200, body),
+                    Err(msg) => Response::text(422, format!("planning failed: {msg}\n")),
+                }
+            }
+        }
+    }
+}
+
+fn method_not_allowed(allow: &'static str) -> Response {
+    Response { allow: Some(allow), ..Response::text(405, format!("use {allow}\n")) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::DeploymentPlan;
+
+    fn router() -> Router {
+        Router::new(
+            Arc::new(SharedPlanner::builder().build()),
+            Arc::new(ServerMetrics::default()),
+            Arc::new(AtomicBool::new(false)),
+        )
+    }
+
+    fn request(method: &str, path: &str, body: &[u8]) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            query: None,
+            headers: Vec::new(),
+            body: body.to_vec(),
+        }
+    }
+
+    #[test]
+    fn routes_and_method_guards() {
+        let r = router();
+        assert_eq!(r.handle(&request("GET", "/healthz", b"")).status, 200);
+        assert_eq!(r.handle(&request("GET", "/metrics", b"")).status, 200);
+        assert_eq!(r.handle(&request("GET", "/nope", b"")).status, 404);
+        let resp = r.handle(&request("GET", "/plan", b""));
+        assert_eq!((resp.status, resp.allow), (405, Some("POST")));
+        let resp = r.handle(&request("DELETE", "/healthz", b""));
+        assert_eq!((resp.status, resp.allow), (405, Some("GET")));
+        assert_eq!(r.handle(&request("PUT", "/shutdown", b"")).status, 405);
+    }
+
+    #[test]
+    fn shutdown_endpoint_sets_the_latch() {
+        let r = router();
+        assert!(!r.shutdown.load(Ordering::SeqCst));
+        assert_eq!(r.handle(&request("POST", "/shutdown", b"")).status, 200);
+        assert!(r.shutdown.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn plan_round_trips_and_repeats_hit_the_cache() {
+        let r = router();
+        let body = br#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
+        let first = r.handle(&request("POST", "/plan", body));
+        assert_eq!(first.status, 200, "{:?}", String::from_utf8_lossy(&first.body));
+        let plan = DeploymentPlan::decode(std::str::from_utf8(&first.body).unwrap()).unwrap();
+        assert_eq!(plan.model_name, "VGG19");
+        let second = r.handle(&request("POST", "/plan", body));
+        assert_eq!(second.body, first.body, "served bytes are identical");
+        let stats = r.planner.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+    }
+
+    #[test]
+    fn bad_bodies_are_400_and_do_not_poison_the_router() {
+        let r = router();
+        assert_eq!(r.handle(&request("POST", "/plan", b"not json")).status, 400);
+        assert_eq!(r.handle(&request("POST", "/plan", &[0xff, 0xfe])).status, 400);
+        assert_eq!(
+            r.handle(&request("POST", "/plan", br#"{"model":"NoSuchNet"}"#)).status,
+            400
+        );
+        let ok = r.handle(&request(
+            "POST",
+            "/plan",
+            br#"{"model":"VGG19","iterations":30,"max_groups":10}"#,
+        ));
+        assert_eq!(ok.status, 200, "router still serves after rejections");
+    }
+}

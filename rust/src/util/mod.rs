@@ -15,6 +15,15 @@ pub use args::Args;
 pub use rng::Rng;
 pub use stats::{mean, percentile, stddev};
 
+/// Mutex lock that shrugs off poisoning.  Everything the crate guards
+/// this way (plan cache, prepared memo, in-flight tables, admission
+/// queues) is valid after any panic that interrupted a holder — worst
+/// case an entry is missing, which only costs recomputation.  A serving
+/// daemon must not let one panicked request wedge every later one.
+pub fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Wall-clock stopwatch used by benches and the overhead experiment.
 pub struct Stopwatch {
     start: std::time::Instant,

@@ -26,14 +26,14 @@ fn request(seed: u64) -> PlanRequest {
 #[test]
 fn plans_are_deterministic_with_cache_on_and_off() {
     // Cache off: two independent searches must agree bit-for-bit.
-    let mut cold = Planner::builder().without_cache().build();
+    let cold = Planner::builder().without_cache().build();
     let a = cold.plan(&request(3)).unwrap();
     let b = cold.plan(&request(3)).unwrap();
     assert!(!a.cache_hit && !b.cache_hit);
     assert_eq!(a.plan, b.plan);
 
     // Cache on: the served copy is the same plan again.
-    let mut warm = Planner::builder().build();
+    let warm = Planner::builder().build();
     let c = warm.plan(&request(3)).unwrap();
     let d = warm.plan(&request(3)).unwrap();
     assert!(!c.cache_hit && d.cache_hit);
@@ -130,7 +130,7 @@ fn rebuilt_flat_topology_serves_identical_plans() {
     )
     .budget(40, 12)
     .seed(3);
-    let mut planner = Planner::builder().build();
+    let planner = Planner::builder().build();
     let a = planner.plan(&orig).unwrap();
     let b = planner.plan(&rebuilt).unwrap();
     assert!(!a.cache_hit && b.cache_hit);
@@ -141,7 +141,7 @@ fn rebuilt_flat_topology_serves_identical_plans() {
 #[test]
 fn hierarchical_preset_plans_end_to_end_with_contention() {
     // A routed preset goes through the full Planner path...
-    let mut planner = Planner::builder().build();
+    let planner = Planner::builder().build();
     let req = |topo: &Topology| {
         PlanRequest::new(models::vgg19(8, 0.25), topo.clone()).budget(30, 10).seed(3)
     };
@@ -183,7 +183,7 @@ fn hierarchical_preset_plans_end_to_end_with_contention() {
 
 #[test]
 fn plan_json_round_trip_is_lossless() {
-    let mut planner = Planner::builder().without_cache().build();
+    let planner = Planner::builder().without_cache().build();
     // Cover both SFB-on (Some(time_with_sfb), Some(sfb)) and SFB-off.
     for req in [request(5), request(5).sfb(false)] {
         let plan = planner.plan(&req).unwrap().plan;
@@ -204,7 +204,7 @@ fn plan_json_round_trip_is_lossless() {
 fn equal_problems_share_cache_entries_across_request_values() {
     // Fingerprints key on structure: a *new* but identical request value
     // (fresh model generation, renamed topology) must hit the cache.
-    let mut planner = Planner::builder().build();
+    let planner = Planner::builder().build();
     let first = planner.plan(&request(7)).unwrap();
     let mut renamed = request(7);
     renamed.topology.name = "testbed-imposter".into();
@@ -217,7 +217,7 @@ fn equal_problems_share_cache_entries_across_request_values() {
 fn backend_identity_partitions_the_cache() {
     // The same request through differently-configured backends must not
     // share plans: the backend token is part of the config fingerprint.
-    let mut sweep = Planner::builder().backend(BaselineSweepBackend::new()).build();
+    let sweep = Planner::builder().backend(BaselineSweepBackend::new()).build();
     let mut rootless =
         Planner::builder().backend(MctsBackend::new().root_sweep(false)).build();
     let k_default = Planner::builder().build().key_for(&request(3));
@@ -271,8 +271,7 @@ fn every_baseline_generator_runs_on_preset_topologies() {
 #[test]
 fn baseline_sweep_backend_covers_the_roster_on_two_presets() {
     for topo in [testbed(), sfb_pair()] {
-        let mut planner =
-            Planner::builder().backend(BaselineSweepBackend::new()).build();
+        let planner = Planner::builder().backend(BaselineSweepBackend::new()).build();
         let req = PlanRequest::new(models::inception_v3(8, 0.25), topo.clone())
             .budget(30, 10)
             .seed(2)
@@ -340,8 +339,8 @@ fn workers_one_is_byte_identical_to_the_sequential_engine() {
 
     // Plan level: an explicit `.workers(1)` request is the same plan —
     // and the same cache identity — byte for byte.
-    let mut a = Planner::builder().without_cache().build();
-    let mut b = Planner::builder().without_cache().build();
+    let a = Planner::builder().without_cache().build();
+    let b = Planner::builder().without_cache().build();
     let p1 = a.plan(&request(3)).unwrap();
     let p2 = b.plan(&request(3).workers(1)).unwrap();
     assert_eq!(p1.plan, p2.plan);
@@ -353,7 +352,7 @@ fn parallel_workers_smoke_and_telemetry_roundtrip() {
     // 4 tree-parallel workers: the plan is well-formed, per-worker
     // iteration counts are the exact static split, memo/eval hit rates
     // ride in telemetry, and everything round-trips through JSON.
-    let mut planner = Planner::builder().without_cache().build();
+    let planner = Planner::builder().without_cache().build();
     let out = planner.plan(&request(3).workers(4)).unwrap();
     let p = &out.plan;
     assert!(p.times.final_time.is_finite() && p.times.final_time > 0.0);
@@ -385,7 +384,7 @@ fn prepared_state_survives_budget_changes_but_plans_differ() {
     // Same (model, topology, prepare-knobs), different search budget:
     // the planner reuses prepared state yet produces distinct cached
     // entries with possibly different strategies.
-    let mut planner = Planner::builder().build();
+    let planner = Planner::builder().build();
     let small = planner.plan(&request(3)).unwrap();
     let big = planner
         .plan(&PlanRequest::new(models::vgg19(8, 0.25), testbed()).budget(80, 12).seed(3))

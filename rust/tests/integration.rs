@@ -170,7 +170,7 @@ fn gnn_guided_search_with_artifacts() {
             return;
         }
     };
-    let mut planner = tag::api::Planner::builder().backend(backend).build();
+    let planner = tag::api::Planner::builder().backend(backend).build();
     let request =
         tag::api::PlanRequest::new(models::inception_v3(8, 0.25), testbed())
             .budget(40, 12)

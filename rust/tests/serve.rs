@@ -1,0 +1,268 @@
+//! End-to-end loopback tests for the `tag serve` planning daemon: real
+//! TCP connections against a daemon on an ephemeral port, exercising
+//! the serving guarantees the README states — coalescing of concurrent
+//! identical requests into one search with byte-identical responses,
+//! live `/metrics`, bounded-queue load shedding with `503`, and
+//! graceful drain on shutdown.  Zero non-std dependencies, clients
+//! included.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use tag::api::{DeploymentPlan, SharedPlanner};
+use tag::serve::{ServeConfig, Server};
+
+/// Start a daemon on an ephemeral port; returns its address and the
+/// `run()` thread handle (joins clean after `POST /shutdown`).
+fn start_server(workers: usize, queue_depth: usize) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let config = ServeConfig {
+        port: 0,
+        workers,
+        queue_depth,
+        read_timeout: Duration::from_secs(10),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(config, SharedPlanner::builder().build()).expect("bind");
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().expect("serve"));
+    (addr, handle)
+}
+
+/// Minimal HTTP/1.1 client: one request, read to EOF (the daemon
+/// closes every connection).  Returns (status, headers, body).
+fn http(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut raw = format!("{method} {path} HTTP/1.1\r\n");
+    if let Some(body) = body {
+        raw.push_str(&format!("content-length: {}\r\n", body.len()));
+    }
+    raw.push_str("\r\n");
+    if let Some(body) = body {
+        raw.push_str(body);
+    }
+    stream.write_all(raw.as_bytes()).expect("send");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("recv");
+    let (head, body) = response.split_once("\r\n\r\n").expect("framed response");
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+    (status, head.to_ascii_lowercase(), body.to_string())
+}
+
+fn post_plan(addr: SocketAddr, body: &str) -> (u16, String) {
+    let (status, _, response) = http(addr, "POST", "/plan", Some(body));
+    (status, response)
+}
+
+/// Pull a `name value` line out of the `/metrics` exposition.
+fn metric(addr: SocketAddr, name: &str) -> f64 {
+    let (status, _, text) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    text.lines()
+        .find_map(|line| {
+            let (n, v) = line.rsplit_once(' ')?;
+            if n == name {
+                v.parse().ok()
+            } else {
+                None
+            }
+        })
+        .unwrap_or_else(|| panic!("metric {name} missing from:\n{text}"))
+}
+
+fn shutdown(addr: SocketAddr) {
+    // The queue may still be draining; retry through transient 503s.
+    for _ in 0..600 {
+        let (status, _, _) = http(addr, "POST", "/shutdown", None);
+        if status == 200 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("shutdown never accepted");
+}
+
+const SMALL_PLAN: &str = r#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
+
+#[test]
+fn health_metrics_and_unknown_routes() {
+    let (addr, handle) = start_server(2, 16);
+    let (status, _, body) = http(addr, "GET", "/healthz", None);
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+    let (status, head, _) = http(addr, "GET", "/plan", None);
+    assert_eq!(status, 405);
+    assert!(head.contains("allow: post"), "{head}");
+    let (status, _, _) = http(addr, "GET", "/nowhere", None);
+    assert_eq!(status, 404);
+    assert_eq!(metric(addr, "tag_requests_total{endpoint=\"/healthz\"}"), 1.0);
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_identical_requests_coalesce_to_one_search_with_identical_bytes() {
+    let (addr, handle) = start_server(4, 32);
+    const CLIENTS: usize = 6;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let responses: Vec<(u16, String)> = (0..CLIENTS)
+        .map(|_| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                post_plan(addr, SMALL_PLAN)
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect();
+
+    let (status, first_body) = &responses[0];
+    assert_eq!(*status, 200, "{first_body}");
+    for (status, body) in &responses {
+        assert_eq!(*status, 200);
+        assert_eq!(body, first_body, "coalesced/cached responses are byte-identical");
+    }
+    let plan = DeploymentPlan::decode(first_body).expect("valid plan JSON");
+    assert_eq!(plan.model_name, "VGG19");
+    assert_eq!(plan.telemetry.seed, 3);
+
+    // Scraped FIRST: each `/metrics` scrape is itself a 200 response
+    // (counted after its render), so only the very first scrape after
+    // the burst sees exactly the burst's responses.
+    assert_eq!(metric(addr, "tag_responses_total{status=\"200\"}"), CLIENTS as f64);
+
+    // Exactly one search happened for the whole burst: every other
+    // request either joined the in-flight search (coalesced) or hit
+    // the plan cache after it landed.  This invariant is
+    // schedule-independent — only the coalesced/hit split varies.
+    assert_eq!(metric(addr, "tag_searches_total"), 1.0);
+    assert_eq!(metric(addr, "tag_plan_cache_misses"), 1.0);
+    let coalesced = metric(addr, "tag_coalesced_total");
+    let cache_hits = metric(addr, "tag_plan_cache_hits");
+    assert_eq!(
+        coalesced + cache_hits,
+        (CLIENTS - 1) as f64,
+        "every non-leader was answered without a search"
+    );
+    assert!(metric(addr, "tag_plan_cache_hit_rate") > 0.0 || coalesced >= 5.0);
+
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn distinct_requests_produce_distinct_plans() {
+    let (addr, handle) = start_server(2, 16);
+    let (s1, body1) = post_plan(addr, SMALL_PLAN);
+    let (s2, body2) = post_plan(
+        addr,
+        r#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":4}"#,
+    );
+    assert_eq!((s1, s2), (200, 200));
+    let p1 = DeploymentPlan::decode(&body1).unwrap();
+    let p2 = DeploymentPlan::decode(&body2).unwrap();
+    assert_ne!(p1.config_fingerprint, p2.config_fingerprint, "seeds partition plans");
+    assert_eq!(p1.model_fingerprint, p2.model_fingerprint, "same model resolution");
+    assert_eq!(metric(addr, "tag_searches_total"), 2.0);
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn malformed_plan_bodies_are_rejected_and_the_daemon_survives() {
+    let (addr, handle) = start_server(1, 16);
+    for bad in [
+        "not json at all",
+        r#"{"model":"NoSuchNet"}"#,
+        r#"{"model":"VGG19","turbo":true}"#,
+        r#"{"model":"VGG19","iterations":999999999}"#,
+    ] {
+        let (status, body) = post_plan(addr, bad);
+        assert_eq!(status, 400, "{bad} -> {body}");
+    }
+    let (status, body) = post_plan(addr, SMALL_PLAN);
+    assert_eq!(status, 200, "daemon still serves after rejections: {body}");
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn saturated_queue_sheds_with_503_and_retry_after() {
+    // One worker, queue depth one.  Two idle connections occupy the
+    // worker (blocked reading) and the queue slot; the next connection
+    // must be shed at the door without being read.
+    let (addr, handle) = start_server(1, 1);
+    let hold_worker = TcpStream::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // worker picks it up
+    let hold_queue = TcpStream::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // fills the queue
+
+    let (status, head, body) = http(addr, "GET", "/healthz", None);
+    assert_eq!(status, 503, "{body}");
+    assert!(head.contains("retry-after:"), "shed responses advertise retry: {head}");
+
+    // Release the worker and the queue; the daemon recovers.  (While
+    // saturated even `/metrics` would be shed, so the authoritative
+    // shed count is scraped after the drain.)
+    drop(hold_worker);
+    drop(hold_queue);
+    let mut ok = false;
+    for _ in 0..200 {
+        let (status, _, _) = http(addr, "GET", "/healthz", None);
+        if status == 200 {
+            ok = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(ok, "daemon recovers after the queue drains");
+    assert!(metric(addr, "tag_shed_total") >= 1.0, "shed connections are counted");
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_and_queued_requests() {
+    let (addr, handle) = start_server(2, 16);
+    // Three searches with distinct seeds (no coalescing): more work
+    // than workers, so at least one request is queued when shutdown
+    // arrives.
+    let requests: Vec<_> = (10..13)
+        .map(|seed| {
+            std::thread::spawn(move || {
+                post_plan(
+                    addr,
+                    &format!(
+                        r#"{{"model":"VGG19","iterations":30,"max_groups":10,"seed":{seed}}}"#
+                    ),
+                )
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(200)); // all admitted
+    shutdown(addr);
+    // Every admitted request still gets a full answer during the drain.
+    for request in requests {
+        let (status, body) = request.join().unwrap();
+        assert_eq!(status, 200, "drained request answered: {body}");
+        assert!(DeploymentPlan::decode(&body).is_ok());
+    }
+    handle.join().unwrap();
+    // The listener is gone: new connections are refused.
+    assert!(
+        TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err(),
+        "daemon no longer accepts connections"
+    );
+}
