@@ -18,6 +18,7 @@ fn main() {
             apply_sfb: true,
             profile_noise: 0.0,
             parallelism: Default::default(),
+            deadline_ms: None,
         };
         // Prepare once (profiling + grouping), bench the search.
         let model = models::by_name(name, 0.25).unwrap();

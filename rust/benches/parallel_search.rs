@@ -35,6 +35,7 @@ fn main() {
         apply_sfb: false,
         profile_noise: 0.0,
         parallelism: Parallelism::default(),
+        deadline_ms: None,
     };
     let prep = prepare(models::by_name("VGG19", 0.25).unwrap(), &topo, &cfg);
     let actions = enumerate_actions(&topo);
@@ -63,6 +64,7 @@ fn main() {
                 Parallelism::workers(workers),
                 true,
                 false,
+                None,
             );
             assert_eq!(out.result.iterations, ITERS);
             assert!(out.result.best_time > 0.0);

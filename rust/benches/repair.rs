@@ -1,0 +1,45 @@
+//! Bench: warm plan repair vs cold re-plan on a degraded topology — the
+//! recovery-latency claim behind `tag repair`.  The warm path transplants
+//! the surviving strategy and spends a quarter of the iteration budget;
+//! the cold path re-plans the residual cluster from scratch with the
+//! full budget.  Both must land a valid plan; the point is how much
+//! cheaper recovery is when the survivors seed the search.
+
+use tag::api::{PlanRequest, Planner};
+use tag::cluster::presets::{multi_rack, testbed};
+use tag::cluster::{generate_trace, Topology};
+use tag::models;
+use tag::util::bench;
+
+fn compare(topo: &Topology, iters: usize) {
+    let model = models::by_name("VGG19", 0.25).unwrap();
+    let request = PlanRequest::new(model, topo.clone()).budget(iters, 12).seed(7);
+    let planner = Planner::builder().without_cache().build();
+    let prior = planner.plan(&request).expect("prior plan").plan;
+
+    // One seeded fault spec per topology, drawn deterministically.
+    let faults = generate_trace(topo, 11, 1).pop().expect("one spec");
+    let residual = faults.apply(topo).expect("spec applies");
+    let mut cold_request = request.clone();
+    cold_request.topology = residual.topology;
+
+    let warm = bench(&format!("repair-warm[{} {}]", topo.name, faults.encode()), 2.0, || {
+        let out = planner.repair(&request, &prior, &faults).expect("repair");
+        assert!(out.plan.times.speedup >= 1.0 - 1e-9);
+    });
+    let cold = bench(&format!("replan-cold[{}]", topo.name), 2.0, || {
+        let out = planner.plan(&cold_request).expect("cold plan");
+        assert!(out.plan.times.speedup >= 1.0 - 1e-9);
+    });
+    println!(
+        "  -> repair recovers {:.2}x faster than a cold re-plan\n",
+        cold / warm.max(1e-12)
+    );
+}
+
+fn main() {
+    println!("== plan repair vs cold re-plan (150-iteration budget) ==");
+    for topo in [testbed(), multi_rack()] {
+        compare(&topo, 150);
+    }
+}

@@ -25,7 +25,9 @@ use crate::coordinator::{Prepared, SearchConfig};
 use crate::dist::Lowering;
 use crate::gnn::{params, FeatureBuilder, GnnPrior, GnnService};
 use crate::mcts::{Mcts, SearchResult, UniformPrior};
-use crate::search::{run_search, run_search_with_service, BatchedGnnPrior, SearchProblem};
+use crate::search::{
+    run_search, run_search_with_service, BatchedGnnPrior, CancelToken, SearchProblem,
+};
 use crate::strategy::{baselines, Action, Strategy};
 use crate::util::error::{Context, Result};
 
@@ -39,6 +41,10 @@ pub struct SearchContext<'a> {
     pub low: &'a Lowering<'a>,
     pub actions: &'a [Action],
     pub cfg: &'a SearchConfig,
+    /// Cooperative deadline/cancellation token, when the request set
+    /// one ([`PlanRequest::deadline_ms`](super::PlanRequest)).  `None`
+    /// keeps the search clock-free and byte-deterministic.
+    pub cancel: Option<&'a CancelToken>,
 }
 
 /// What a backend returns: the search result plus deterministic named
@@ -93,6 +99,15 @@ fn parallel_metrics(per_worker_iterations: &[usize]) -> Vec<(String, f64)> {
         rows.push((format!("worker{w}_iterations"), it as f64));
     }
     rows
+}
+
+/// The `timed_out` telemetry row, appended when the request's deadline
+/// fired during (or before) the search: the plan is a valid best-so-far
+/// under a spent clock, and serving layers use the marker to flag it.
+fn timeout_metrics(ctx: &SearchContext<'_>, metrics: &mut Vec<(String, f64)>) {
+    if ctx.cancel.map_or(false, |c| c.is_cancelled()) {
+        metrics.push(("timed_out".to_string(), 1.0));
+    }
 }
 
 fn problem_of<'a>(ctx: &'a SearchContext<'a>) -> SearchProblem<'a> {
@@ -155,9 +170,11 @@ impl SearchBackend for MctsBackend {
             par,
             self.root_sweep,
             false,
+            ctx.cancel,
         );
         let mut metrics = memo_metrics(ctx.low);
         metrics.extend(parallel_metrics(&out.per_worker_iterations));
+        timeout_metrics(ctx, &mut metrics);
         BackendOutcome { result: out.result, metrics }
     }
 }
@@ -236,11 +253,13 @@ impl SearchBackend for GnnMctsBackend {
             let prior = GnnPrior::new(&self.svc, builder, self.params.clone());
             let mut mcts = Mcts::new(ctx.low, ctx.actions.to_vec(), prior, ctx.cfg.seed);
             mcts.root_sweep = self.root_sweep;
+            mcts.cancel = ctx.cancel.cloned();
             let result = mcts.search(ctx.cfg.mcts_iterations);
             let gnn_evals = mcts.prior().evals;
             let mut metrics = memo_metrics(ctx.low);
             metrics.extend(parallel_metrics(&[result.iterations]));
             metrics.push(("gnn_evals".to_string(), gnn_evals as f64));
+            timeout_metrics(ctx, &mut metrics);
             return BackendOutcome { result, metrics };
         }
 
@@ -267,6 +286,7 @@ impl SearchBackend for GnnMctsBackend {
             par,
             self.root_sweep,
             false,
+            ctx.cancel,
             || {
                 eval_stats = serve(&self.svc, &self.params, rx);
             },
@@ -285,6 +305,7 @@ impl SearchBackend for GnnMctsBackend {
         metrics.push(("eval_cache_hits".to_string(), sum_of("eval_cache_hits")));
         metrics.push(("eval_requests".to_string(), eval_stats.requests as f64));
         metrics.push(("eval_batches".to_string(), eval_stats.batches as f64));
+        timeout_metrics(ctx, &mut metrics);
         BackendOutcome { result: out.result, metrics }
     }
 }
@@ -398,11 +419,19 @@ mod tests {
             apply_sfb: false,
             profile_noise: 0.0,
             parallelism: Default::default(),
+            deadline_ms: None,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
         let actions = enumerate_actions(&topo);
-        f(&SearchContext { prep: &prep, topo: &topo, low: &low, actions: &actions, cfg: &cfg })
+        f(&SearchContext {
+            prep: &prep,
+            topo: &topo,
+            low: &low,
+            actions: &actions,
+            cfg: &cfg,
+            cancel: None,
+        })
     }
 
     #[test]
@@ -431,6 +460,27 @@ mod tests {
             assert_eq!(out.result.iterations, BASELINE_NAMES.len());
             // The sweep's best can never lose to its own DP row.
             assert!(out.result.best_time <= out.result.dp_time + 1e-12);
+        });
+    }
+
+    #[test]
+    fn cancelled_context_returns_best_so_far_with_timed_out_row() {
+        with_ctx(|ctx| {
+            let token = CancelToken::new();
+            token.cancel();
+            let cancelled = SearchContext {
+                prep: ctx.prep,
+                topo: ctx.topo,
+                low: ctx.low,
+                actions: ctx.actions,
+                cfg: ctx.cfg,
+                cancel: Some(&token),
+            };
+            let out = MctsBackend::new().search(&cancelled);
+            // No iteration ran, yet the result is a usable fallback.
+            assert_eq!(out.result.iterations, 0);
+            assert!(out.result.best.is_complete());
+            assert!(out.metrics.iter().any(|(n, v)| n == "timed_out" && *v == 1.0));
         });
     }
 

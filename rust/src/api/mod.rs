@@ -81,12 +81,15 @@ pub use crate::search::Parallelism;
 
 use std::sync::{Arc, Mutex};
 
+use crate::cluster::faults::FaultSpec;
 use crate::cluster::Topology;
 use crate::coordinator::{self, Prepared, SessionResult};
 use crate::dist::Lowering;
-use crate::strategy::enumerate_actions;
-use crate::util::error::{Context, Result};
-use crate::util::{lock, Stopwatch};
+use crate::mcts::UniformPrior;
+use crate::search::{CancelToken, SearchTree, Worker};
+use crate::strategy::{enumerate_actions, Action, Strategy};
+use crate::util::error::{Context, Error, Result};
+use crate::util::{lock, Rng, Stopwatch};
 
 /// A plan plus the per-call serving facts that must stay *outside* the
 /// deterministic plan: wall time and cache provenance.
@@ -96,6 +99,24 @@ pub struct PlanOutcome {
     /// Served from the [`PlanCache`] without searching.
     pub cache_hit: bool,
     /// Wall time of this `plan` call (search, or cache lookup).
+    pub overhead_s: f64,
+}
+
+/// What [`Planner::repair`] returns: a fresh plan for the degraded
+/// topology, plus how good the surviving portion of the old plan was on
+/// its own (the warm-start floor the repair search improved from).
+#[derive(Clone, Debug)]
+pub struct RepairOutcome {
+    /// The repaired plan, valid on the residual (post-fault) topology —
+    /// its masks never reference a dead device.
+    pub plan: DeploymentPlan,
+    /// Simulated iteration time of the remapped prior strategy on the
+    /// residual topology, when it was complete and memory-feasible.
+    /// `None` means the old plan could not be carried over (its groups
+    /// changed, or every surviving placement OOMs) and the repair ran
+    /// cold.
+    pub warm_time: Option<f64>,
+    /// Wall time of this `repair` call.
     pub overhead_s: f64,
 }
 
@@ -249,6 +270,11 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
     /// sequential ones.
     pub fn plan(&self, request: &PlanRequest) -> Result<PlanOutcome> {
         let watch = Stopwatch::start();
+        // The deadline clock covers the whole call — validation,
+        // prepare, search — so a served request can never overrun its
+        // budget by stalling before the search starts.  No deadline, no
+        // token: the default path never consults the wall clock.
+        let cancel = request.deadline_ms.map(CancelToken::with_deadline_ms);
         request
             .topology
             .validate()
@@ -312,6 +338,7 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
             low: &low,
             actions: &actions,
             cfg: &cfg,
+            cancel: cancel.as_ref(),
         };
         let out = self.backend.search(&ctx);
         let session = coordinator::assemble_session(
@@ -331,10 +358,148 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
             out.metrics,
         );
 
+        // A timed-out plan is the best-so-far under a spent clock, not
+        // the request's full answer — caching it would pin a degraded
+        // plan for every future caller with the same key.
+        let timed_out = plan.telemetry.metric("timed_out").is_some();
         if let Some(cache) = &self.cache {
-            lock(cache).insert(key, plan.clone());
+            if !timed_out {
+                lock(cache).insert(key, plan.clone());
+            }
         }
         Ok(PlanOutcome { plan, cache_hit: false, overhead_s: watch.elapsed_s() })
+    }
+
+    /// Re-plan a previously produced plan after `faults` hit the
+    /// request's topology.
+    ///
+    /// The faults are applied to `request.topology` to derive the
+    /// residual topology (dead devices removed, severed links dropped,
+    /// degraded links rescaled, routes re-derived); the surviving
+    /// portion of `prior_plan`'s strategy — every placement mask with at
+    /// least one living device, remapped to the residual's group
+    /// numbering — seeds the repair search as its starting incumbent, so
+    /// a short budget suffices to recover a good plan (the search only
+    /// has to *improve* on the survivors, not rediscover them).  The
+    /// repair spends `max(budget.iterations / 4, 1)` iterations and
+    /// honors `request.deadline_ms` like [`plan`](Self::plan).
+    ///
+    /// `prior_plan` must have been produced for this request's model and
+    /// topology (checked by fingerprint).  The returned plan's masks are
+    /// over the *residual* topology's renumbered groups and never
+    /// reference a dead device.  Repaired plans serve a degraded
+    /// emergency path and bypass the plan cache.
+    pub fn repair(
+        &self,
+        request: &PlanRequest,
+        prior_plan: &DeploymentPlan,
+        faults: &FaultSpec,
+    ) -> Result<RepairOutcome> {
+        let watch = Stopwatch::start();
+        let cancel = request.deadline_ms.map(CancelToken::with_deadline_ms);
+        request
+            .topology
+            .validate()
+            .with_context(|| format!("invalid topology `{}`", request.topology.name))?;
+        if fingerprint::model(&request.model) != prior_plan.model_fingerprint {
+            return Err(Error::msg(format!(
+                "prior plan is for model `{}`, not this request's `{}` (fingerprint mismatch)",
+                prior_plan.model_name, request.model.name
+            )));
+        }
+        if fingerprint::topology(&request.topology) != prior_plan.topology_fingerprint {
+            return Err(Error::msg(format!(
+                "prior plan was deployed on topology `{}`, not this request's `{}` \
+                 (fingerprint mismatch)",
+                prior_plan.topology_name, request.topology.name
+            )));
+        }
+        let residual = faults
+            .apply(&request.topology)
+            .with_context(|| format!("applying faults to `{}`", request.topology.name))?;
+
+        let mut degraded = request.clone();
+        degraded.topology = residual.topology.clone();
+        let cfg = degraded.search_config();
+        let prep = coordinator::prepare(degraded.model.clone(), &degraded.topology, &cfg);
+        let low = Lowering::new(&prep.gg, &degraded.topology, &prep.cost, &prep.comm);
+        let actions = enumerate_actions(&degraded.topology);
+
+        // Carry the survivors over: each decided mask keeps its living
+        // devices (remapped to the residual numbering); a slot whose
+        // devices all died falls back to residual-wide DP.
+        let ng = prep.gg.num_groups();
+        let dp = Strategy::dp_allreduce(ng, &degraded.topology);
+        let prior_strategy = prior_plan.strategy.to_strategy();
+        let warm = (prior_strategy.slots.len() == ng).then(|| {
+            let mut s = prior_strategy;
+            for (slot, fallback) in s.slots.iter_mut().zip(&dp.slots) {
+                *slot = match *slot {
+                    Some(a) => match residual.remap_mask(a.mask) {
+                        0 => *fallback,
+                        mask => Some(Action { mask, ..a }),
+                    },
+                    None => *fallback,
+                };
+            }
+            s
+        });
+
+        let budget = (request.budget.iterations / 4).max(1);
+        let tree = SearchTree::new();
+        let mut w =
+            Worker::new(&tree, &low, &actions, UniformPrior, Rng::new(cfg.seed), 1.0);
+        w.cancel = cancel.clone();
+        let mut warm_time = None;
+        if let Some(warm) = &warm {
+            let out = low.evaluate(warm);
+            if !out.oom {
+                // Seed the incumbent: the repair search starts from the
+                // survivors' reward and replaces it only on improvement.
+                warm_time = Some(out.time);
+                w.best = Some((w.dp_time / out.time - 1.0, warm.clone(), out.time));
+            }
+        }
+        w.build_root();
+        w.root_sweep(budget);
+        w.run(budget);
+        let Worker { best, first_beats_dp, iterations, dp_time, .. } = w;
+        let result = crate::search::worker::finish_result(
+            &low,
+            best,
+            dp_time,
+            iterations,
+            first_beats_dp,
+            Vec::new(),
+        );
+
+        let mut metrics = vec![
+            ("repair_budget".to_string(), budget as f64),
+            ("faults".to_string(), faults.faults.len() as f64),
+            ("dead_devices".to_string(), residual.dead_devices.len() as f64),
+            (
+                "warm_feasible".to_string(),
+                if warm_time.is_some() { 1.0 } else { 0.0 },
+            ),
+        ];
+        if let Some(t) = warm_time {
+            metrics.push(("warm_time".to_string(), t));
+        }
+        if cancel.as_ref().map_or(false, |c| c.is_cancelled()) {
+            metrics.push(("timed_out".to_string(), 1.0));
+        }
+
+        let session =
+            coordinator::assemble_session(&prep, &degraded.topology, &low, result, &cfg, 0.0);
+        let mut h = fingerprint::Fnv::new();
+        h.write_str("repair").write_str(&faults.encode());
+        let key = PlanKey {
+            model: fingerprint::model(&degraded.model),
+            topology: fingerprint::topology(&degraded.topology),
+            config: degraded.config_fingerprint(h.finish()),
+        };
+        let plan = assemble_plan(&degraded, &session, &key, "repair", actions.len(), metrics);
+        Ok(RepairOutcome { plan, warm_time, overhead_s: watch.elapsed_s() })
     }
 }
 
@@ -504,6 +669,46 @@ mod tests {
         }
         let stats = planner.cache_stats().unwrap();
         assert_eq!((stats.hits, stats.misses, stats.entries), (4, 1, 1));
+    }
+
+    #[test]
+    fn repair_warm_starts_from_the_surviving_strategy() {
+        let planner = Planner::builder().without_cache().build();
+        let request = small_request();
+        let prior = planner.plan(&request).unwrap().plan;
+        let faults = crate::cluster::FaultSpec::parse("kill:0.0").unwrap();
+        let out = planner.repair(&request, &prior, &faults).unwrap();
+        assert_eq!(out.plan.backend, "repair");
+        assert!(out.plan.topology_name.contains("kill:0.0"));
+        assert_eq!(out.plan.telemetry.metric("dead_devices"), Some(1.0));
+        // The survivors stayed feasible and seeded the incumbent: the
+        // repaired plan can only improve on them.
+        let warm = out.warm_time.expect("survivors remained feasible");
+        assert!(out.plan.times.time <= warm + 1e-12);
+        assert!(out.plan.times.speedup >= 1.0 - 1e-9);
+        // A prior plan for a different model is rejected by fingerprint.
+        let other =
+            PlanRequest::new(models::resnet101(8, 0.25), testbed()).budget(30, 10).seed(3);
+        let err = planner.repair(&other, &prior, &faults).unwrap_err().to_string();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+    }
+
+    #[test]
+    fn deadline_plans_carry_the_timed_out_marker_and_skip_the_cache() {
+        // An iteration budget far beyond what 1 ms of wall clock can
+        // spend: the deadline always fires mid-search, the call still
+        // succeeds with a valid best-so-far plan, flags it, and declines
+        // to cache it.
+        let req = || small_request().budget(100_000, 10).deadline_ms(1);
+        let planner = Planner::builder().build();
+        let out = planner.plan(&req()).unwrap();
+        assert!(out.plan.times.speedup >= 1.0 - 1e-9);
+        assert!(out.plan.telemetry.iterations < 100_000);
+        assert_eq!(out.plan.telemetry.metric("timed_out"), Some(1.0));
+        assert_eq!(planner.cache_stats().unwrap().entries, 0);
+        // Re-planning the same request misses the cache again.
+        let again = planner.plan(&req()).unwrap();
+        assert!(!again.cache_hit);
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub mod wire_limits {
     pub const SCALE_RANGE: (f64, f64) = (0.01, 4.0);
     /// Profiler noise (`"profile_noise"`): within this closed range.
     pub const NOISE_RANGE: (f64, f64) = (0.0, 0.5);
+    /// Search deadline (`"deadline_ms"`): 1..=this (one hour).
+    pub const MAX_DEADLINE_MS: u64 = 3_600_000;
 }
 
 /// How much work the search may spend.
@@ -64,6 +66,12 @@ pub struct PlanRequest {
     /// Tree-parallel search workers + virtual loss ([`crate::search`]).
     /// `workers == 1` (the default) is the sequential engine.
     pub parallelism: Parallelism,
+    /// Wall-clock budget for the whole plan call (validation + prepare +
+    /// search), milliseconds.  On expiry the search stops and returns
+    /// its best-so-far (flagged `timed_out` in plan telemetry) instead
+    /// of running to the iteration budget.  `None` (the default) never
+    /// consults the clock — the deterministic path.
+    pub deadline_ms: Option<u64>,
 }
 
 impl PlanRequest {
@@ -78,6 +86,7 @@ impl PlanRequest {
             apply_sfb: true,
             profile_noise: 0.0,
             parallelism: Parallelism::default(),
+            deadline_ms: None,
         }
     }
 
@@ -114,6 +123,12 @@ impl PlanRequest {
         self
     }
 
+    /// Bound the plan call by a wall-clock deadline (milliseconds).
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
     /// The coordinator-level configuration this request lowers to.
     pub fn search_config(&self) -> SearchConfig {
         SearchConfig {
@@ -123,6 +138,7 @@ impl PlanRequest {
             apply_sfb: self.apply_sfb,
             profile_noise: self.profile_noise,
             parallelism: self.parallelism,
+            deadline_ms: self.deadline_ms,
         }
     }
 
@@ -136,6 +152,11 @@ impl PlanRequest {
     /// explores an OS-schedule-dependent tree, and its cached plan must
     /// never be served for a deterministic sequential request (or for a
     /// different worker count).
+    ///
+    /// A deadline partitions the cache the same way: a deadline-bounded
+    /// search may stop early with a different (best-so-far) plan, so it
+    /// must never alias the unbounded request.  `None` hashes nothing —
+    /// deadline-free requests keep their pre-deadline fingerprints.
     pub fn config_fingerprint(&self, backend_token: u64) -> u64 {
         let mut h = Fnv::new();
         h.write_usize(self.budget.iterations);
@@ -147,6 +168,9 @@ impl PlanRequest {
         if self.parallelism != Parallelism::default() {
             h.write_usize(self.parallelism.workers);
             h.write_f64(self.parallelism.virtual_loss);
+        }
+        if let Some(d) = self.deadline_ms {
+            h.write_u64(d);
         }
         h.finish()
     }
@@ -191,7 +215,7 @@ impl PlanRequest {
             Json::Obj(members) => members,
             _ => return Err(Error::msg("request must be a JSON object")),
         };
-        const KNOWN: [&str; 10] = [
+        const KNOWN: [&str; 11] = [
             "model",
             "scale",
             "topology",
@@ -202,6 +226,7 @@ impl PlanRequest {
             "profile_noise",
             "workers",
             "virtual_loss",
+            "deadline_ms",
         ];
         for (key, _) in members {
             if !KNOWN.contains(&key.as_str()) {
@@ -270,6 +295,19 @@ impl PlanRequest {
         if !(virtual_loss.is_finite() && virtual_loss > 0.0 && virtual_loss <= 64.0) {
             return Err(Error::msg(format!("virtual_loss {virtual_loss} outside (0, 64]")));
         }
+        let deadline_ms = match root.get("deadline_ms") {
+            None => None,
+            Some(v) => {
+                let d = v.as_u64()?;
+                if d < 1 || d > wire_limits::MAX_DEADLINE_MS {
+                    return Err(Error::msg(format!(
+                        "deadline_ms {d} outside [1, {}]",
+                        wire_limits::MAX_DEADLINE_MS
+                    )));
+                }
+                Some(d)
+            }
+        };
 
         Ok(Self {
             model,
@@ -279,6 +317,7 @@ impl PlanRequest {
             apply_sfb,
             profile_noise,
             parallelism: Parallelism { workers, virtual_loss },
+            deadline_ms,
         })
     }
 }
@@ -399,11 +438,32 @@ mod tests {
             r#"{"model":"VGG19","scale":5.0}"#,                  // above bounds
             r#"{"model":"VGG19","profile_noise":0.9}"#,          // above bounds
             r#"{"model":"VGG19","virtual_loss":0.0}"#,           // non-positive
+            r#"{"model":"VGG19","deadline_ms":0}"#,              // below bounds
+            r#"{"model":"VGG19","deadline_ms":3600001}"#,        // above bounds
             r#"{"model":"VGG19","seed":-1.0}"#,                  // negative seed
             r#"{"model":"VGG19","model":"VGG19"}"#,              // duplicate key
         ] {
             assert!(PlanRequest::decode(bad).is_err(), "accepted {bad:?}");
         }
+    }
+
+    #[test]
+    fn deadline_partitions_the_cache_but_not_prepared_state() {
+        // No deadline hashes nothing: fingerprints stay back-compatible.
+        let base = req().config_fingerprint(1);
+        assert_ne!(base, req().deadline_ms(500).config_fingerprint(1));
+        assert_ne!(
+            req().deadline_ms(500).config_fingerprint(1),
+            req().deadline_ms(501).config_fingerprint(1)
+        );
+        // Profiling/grouping don't consult the clock: prepared state is
+        // shared between bounded and unbounded requests.
+        assert_eq!(req().prepare_fingerprint(), req().deadline_ms(500).prepare_fingerprint());
+        // The knob reaches the engine config and decodes off the wire.
+        assert_eq!(req().deadline_ms(500).search_config().deadline_ms, Some(500));
+        let wire =
+            PlanRequest::decode(r#"{"model":"VGG19","deadline_ms":5000}"#).unwrap();
+        assert_eq!(wire.deadline_ms, Some(5000));
     }
 
     #[test]

@@ -1,0 +1,561 @@
+//! Failure injection: typed faults applied to a [`Topology`], yielding a
+//! validated *residual* topology with re-derived routes.
+//!
+//! TAG assumes a healthy cluster, but the heterogeneous fleets it
+//! targets are exactly where links saturate, NICs flap and machines get
+//! preempted.  This module is the substrate of the fault-tolerance
+//! layer: a [`FaultSpec`] describes what broke (kill a device, sever a
+//! link, degrade a link's bandwidth), [`FaultSpec::apply`] rebuilds the
+//! topology *without* the broken hardware — through the ordinary
+//! constructors, so every invariant (route coverage, uniform group
+//! fabrics, derived matrix view) is re-checked — and the resulting
+//! [`Residual`] carries the old-group → new-group mapping that plan
+//! repair uses to transplant the surviving portion of an old strategy.
+//!
+//! Unreachable hardware is an **explicit error**, never a silent
+//! exclusion: severing the only uplink of a rack fails with the route
+//! table's disconnection error instead of producing a topology that
+//! plans traffic into a void.
+//!
+//! Semantics per construction path:
+//!
+//! * **Routed topologies** (switched link graphs): faults act on the
+//!   physical links themselves.  Killed devices disappear along with
+//!   their incident links; severed links disappear; degraded links keep
+//!   their latency and kind at `factor ×` bandwidth.  Surviving devices
+//!   are renumbered densely in the original `(group, idx)` order, and
+//!   the route table and inter-group matrix are re-derived from what is
+//!   left.
+//! * **Flat topologies** (group list + pairwise matrix): the matrix has
+//!   no individual wires, so link faults act on the *fabric* the
+//!   targeted link belongs to — degrading an inter-group link scales
+//!   that group pair's matrix entry, degrading an intra-group link
+//!   scales the group's uniform intra bandwidth.  Severing a single
+//!   clique link would make the fabric non-uniform, which the flat form
+//!   cannot represent; it is rejected with an explanatory error (kill
+//!   the device or degrade the fabric instead).
+//!
+//! [`generate_trace`] draws deterministic seeded fault specs for tests
+//! and benches: every returned spec is guaranteed to apply successfully
+//! to the topology it was drawn for.
+
+use super::linkgraph::NodeKind;
+use super::{DeviceGroup, DeviceId, Topology};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+/// One injected failure.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Remove a device (machine preempted, GPU dropped off the bus).
+    KillDevice(DeviceId),
+    /// Remove a link of [`Topology::link_graph`] by link id (NIC died,
+    /// cable pulled).
+    SeverLink(usize),
+    /// Scale a link's bandwidth by `factor` in `(0, 1)` (congestion,
+    /// flapping retrains, failed lane).
+    DegradeLink { link: usize, factor: f64 },
+}
+
+/// An ordered set of faults, parsed from / encoded to the compact
+/// `kill:G.I;sever:L;degrade:L*F` grammar shared by the CLI
+/// (`tag repair --faults ...`) and the `POST /repair` wire request.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultSpec {
+    /// Parse the `;`-separated fault grammar: `kill:G.I` (device `I` of
+    /// group `G`), `sever:L` (link id `L`), `degrade:L*F` (link id `L`
+    /// at `F ×` bandwidth, `0 < F < 1`).  Empty segments are ignored;
+    /// an entirely empty spec is an error.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut faults = Vec::new();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(rest) = part.strip_prefix("kill:") {
+                let (g, i) = rest.split_once('.').ok_or_else(|| {
+                    crate::util::error::Error::msg(format!(
+                        "bad kill fault `{part}`: expected kill:GROUP.INDEX"
+                    ))
+                })?;
+                let group: usize = g
+                    .parse()
+                    .map_err(|_| crate::util::error::Error::msg(format!("bad group in `{part}`")))?;
+                let idx: usize = i
+                    .parse()
+                    .map_err(|_| crate::util::error::Error::msg(format!("bad index in `{part}`")))?;
+                faults.push(Fault::KillDevice(DeviceId { group, idx }));
+            } else if let Some(rest) = part.strip_prefix("sever:") {
+                let link: usize = rest.parse().map_err(|_| {
+                    crate::util::error::Error::msg(format!("bad link id in `{part}`"))
+                })?;
+                faults.push(Fault::SeverLink(link));
+            } else if let Some(rest) = part.strip_prefix("degrade:") {
+                let (l, f) = rest.split_once('*').ok_or_else(|| {
+                    crate::util::error::Error::msg(format!(
+                        "bad degrade fault `{part}`: expected degrade:LINK*FACTOR"
+                    ))
+                })?;
+                let link: usize = l
+                    .parse()
+                    .map_err(|_| crate::util::error::Error::msg(format!("bad link id in `{part}`")))?;
+                let factor: f64 = f
+                    .parse()
+                    .map_err(|_| crate::util::error::Error::msg(format!("bad factor in `{part}`")))?;
+                crate::ensure!(
+                    factor > 0.0 && factor < 1.0,
+                    "degrade factor must be in (0, 1), got {factor}"
+                );
+                faults.push(Fault::DegradeLink { link, factor });
+            } else {
+                crate::bail!(
+                    "unknown fault `{part}` (expected kill:G.I, sever:L or degrade:L*F)"
+                );
+            }
+        }
+        crate::ensure!(!faults.is_empty(), "empty fault spec");
+        Ok(Self { faults })
+    }
+
+    /// Render back to the parse grammar (`parse(encode(s)) == s`).
+    pub fn encode(&self) -> String {
+        self.faults
+            .iter()
+            .map(|f| match f {
+                Fault::KillDevice(d) => format!("kill:{}.{}", d.group, d.idx),
+                Fault::SeverLink(l) => format!("sever:{l}"),
+                Fault::DegradeLink { link, factor } => format!("degrade:{link}*{factor}"),
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Apply every fault to `topo`, rebuilding the topology through its
+    /// ordinary constructors so all invariants are re-validated.  Errors
+    /// when a fault targets hardware the topology does not have, when
+    /// the faults kill every device, or when the residual cluster is
+    /// disconnected (severed the only path between surviving devices) —
+    /// the planner must never receive a topology it would silently plan
+    /// dead or unreachable hardware onto.
+    pub fn apply(&self, topo: &Topology) -> Result<Residual> {
+        crate::ensure!(!self.faults.is_empty(), "empty fault spec");
+        let graph = topo.link_graph();
+        let num_links = graph.num_links();
+
+        // Validate targets and collect per-kind effects up front.
+        let mut dead = vec![false; topo.num_devices()];
+        let mut dead_devices: Vec<DeviceId> = Vec::new();
+        let mut severed = vec![false; num_links];
+        let mut degrade = vec![1.0f64; num_links];
+        let mut link_touched = vec![false; num_links];
+        for f in &self.faults {
+            match *f {
+                Fault::KillDevice(d) => {
+                    crate::ensure!(
+                        d.group < topo.num_groups() && d.idx < topo.groups[d.group].count,
+                        "kill target ({}, {}) is not a device of `{}`",
+                        d.group,
+                        d.idx,
+                        topo.name
+                    );
+                    let flat = topo.device_flat_index(d);
+                    crate::ensure!(!dead[flat], "device ({}, {}) killed twice", d.group, d.idx);
+                    dead[flat] = true;
+                    dead_devices.push(d);
+                }
+                Fault::SeverLink(l) => {
+                    crate::ensure!(l < num_links, "link {l} is not a link of `{}`", topo.name);
+                    crate::ensure!(!link_touched[l], "link {l} targeted by two faults");
+                    link_touched[l] = true;
+                    severed[l] = true;
+                }
+                Fault::DegradeLink { link, factor } => {
+                    crate::ensure!(link < num_links, "link {link} is not a link of `{}`", topo.name);
+                    crate::ensure!(!link_touched[link], "link {link} targeted by two faults");
+                    crate::ensure!(
+                        factor > 0.0 && factor < 1.0,
+                        "degrade factor must be in (0, 1), got {factor}"
+                    );
+                    link_touched[link] = true;
+                    degrade[link] = factor;
+                }
+            }
+        }
+        dead_devices.sort();
+
+        // Survivor counts and the old-group -> new-group mapping.
+        let mut survivors: Vec<usize> = topo.groups.iter().map(|g| g.count).collect();
+        for d in &dead_devices {
+            survivors[d.group] -= 1;
+        }
+        crate::ensure!(
+            survivors.iter().any(|&c| c > 0),
+            "faults kill every device of `{}` — nothing left to plan on",
+            topo.name
+        );
+        let mut group_map: Vec<Option<usize>> = Vec::with_capacity(topo.num_groups());
+        let mut next = 0;
+        for &c in &survivors {
+            if c > 0 {
+                group_map.push(Some(next));
+                next += 1;
+            } else {
+                group_map.push(None);
+            }
+        }
+
+        let name = format!("{}+{}", topo.name, self.encode());
+        let topology = if topo.is_routed() {
+            self.apply_routed(topo, &name, &dead, &severed, &degrade, &survivors, &group_map)?
+        } else {
+            self.apply_flat(topo, &name, &severed, &degrade, &survivors)?
+        };
+        Ok(Residual { topology, group_map, dead_devices })
+    }
+
+    /// Routed rebuild: drop dead devices (and their incident links) and
+    /// severed links, scale degraded links, keep every switch, renumber
+    /// the survivors densely in the original `(group, idx)` order.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_routed(
+        &self,
+        topo: &Topology,
+        name: &str,
+        dead: &[bool],
+        severed: &[bool],
+        degrade: &[f64],
+        survivors: &[usize],
+        group_map: &[Option<usize>],
+    ) -> Result<Topology> {
+        let graph = topo.link_graph();
+        let mut b = super::linkgraph::LinkGraphBuilder::default();
+        let mut node_map = vec![usize::MAX; graph.num_nodes()];
+        let mut next_idx = vec![0usize; topo.num_groups()];
+        for (nid, node) in graph.nodes().iter().enumerate() {
+            match *node {
+                NodeKind::Device(d) => {
+                    if dead[topo.device_flat_index(d)] {
+                        continue;
+                    }
+                    let new_group = group_map[d.group]
+                        .expect("surviving device in a group with no survivors");
+                    let idx = next_idx[d.group];
+                    next_idx[d.group] += 1;
+                    node_map[nid] = b.add_device(DeviceId { group: new_group, idx });
+                }
+                NodeKind::Switch { level } => {
+                    node_map[nid] = b.add_switch(level);
+                }
+            }
+        }
+        for (lid, l) in graph.links().iter().enumerate() {
+            if severed[lid] || node_map[l.a] == usize::MAX || node_map[l.b] == usize::MAX {
+                continue;
+            }
+            b.link(node_map[l.a], node_map[l.b], l.bw_gbps * degrade[lid], l.latency_s, l.kind);
+        }
+        let groups: Vec<DeviceGroup> = topo
+            .groups
+            .iter()
+            .zip(survivors)
+            .filter(|(_, &c)| c > 0)
+            .map(|(g, &c)| DeviceGroup { gpu: g.gpu, count: c, intra_bw_gbps: g.intra_bw_gbps })
+            .collect();
+        Topology::routed(name, groups, b.build())
+    }
+
+    /// Flat rebuild: link faults act on the fabric the link belongs to
+    /// (the matrix has no individual wires), kills shrink group counts.
+    fn apply_flat(
+        &self,
+        topo: &Topology,
+        name: &str,
+        severed: &[bool],
+        degrade: &[f64],
+        survivors: &[usize],
+    ) -> Result<Topology> {
+        let graph = topo.link_graph();
+        let mut inter = topo.inter_bw_gbps.clone();
+        let mut intra: Vec<f64> = topo.groups.iter().map(|g| g.intra_bw_gbps).collect();
+        for (lid, l) in graph.links().iter().enumerate() {
+            if severed[lid] {
+                crate::bail!(
+                    "flat topology `{}` has uniform group fabrics; severing clique link \
+                     {lid} is not representable — kill a device or degrade the fabric \
+                     instead",
+                    topo.name
+                );
+            }
+            if degrade[lid] == 1.0 {
+                continue;
+            }
+            let (da, db) = match (graph.nodes()[l.a], graph.nodes()[l.b]) {
+                (NodeKind::Device(a), NodeKind::Device(b)) => (a, b),
+                _ => unreachable!("clique graphs hold only device nodes"),
+            };
+            if da.group == db.group {
+                intra[da.group] *= degrade[lid];
+            } else {
+                inter[da.group][db.group] *= degrade[lid];
+                inter[db.group][da.group] *= degrade[lid];
+            }
+        }
+        let groups: Vec<DeviceGroup> = topo
+            .groups
+            .iter()
+            .zip(survivors)
+            .zip(&intra)
+            .filter(|((_, &c), _)| c > 0)
+            .map(|((g, &c), &bw)| DeviceGroup { gpu: g.gpu, count: c, intra_bw_gbps: bw })
+            .collect();
+        let keep: Vec<usize> =
+            (0..topo.num_groups()).filter(|&gi| survivors[gi] > 0).collect();
+        let inter: Vec<Vec<f64>> = keep
+            .iter()
+            .map(|&i| keep.iter().map(|&j| inter[i][j]).collect())
+            .collect();
+        Topology::try_new(name, groups, inter)
+    }
+}
+
+/// The validated outcome of [`FaultSpec::apply`]: the rebuilt topology
+/// plus the bookkeeping plan repair needs to transplant a pre-fault
+/// strategy onto the post-fault cluster.
+#[derive(Clone, Debug)]
+pub struct Residual {
+    /// The degraded topology, rebuilt and re-validated from scratch.
+    pub topology: Topology,
+    /// Old group index → new group index; `None` when every device of
+    /// the old group died.
+    pub group_map: Vec<Option<usize>>,
+    /// The killed devices, in old coordinates, sorted.
+    pub dead_devices: Vec<DeviceId>,
+}
+
+impl Residual {
+    /// Translate a pre-fault placement bitmask into residual
+    /// coordinates.  Bits of groups that died entirely are dropped; a
+    /// result of 0 means nothing of the placement survived.
+    pub fn remap_mask(&self, mask: u16) -> u16 {
+        let mut out = 0u16;
+        for (old, new) in self.group_map.iter().enumerate() {
+            if mask & (1 << old) != 0 {
+                if let Some(n) = new {
+                    out |= 1 << n;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Draw `n` deterministic fault specs for `topo`: each spec holds 1..=3
+/// faults and is guaranteed to apply successfully (draws that would not
+/// — severing the only uplink, killing the last device — are discarded
+/// and redrawn, boundedly).  Fixed `(topo, seed)` reproduces the trace
+/// exactly; tests and benches lean on that.
+pub fn generate_trace(topo: &Topology, seed: u64, n: usize) -> Vec<FaultSpec> {
+    let mut rng = Rng::new(seed);
+    let graph = topo.link_graph();
+    let mut out = Vec::with_capacity(n);
+    let mut attempts = 0usize;
+    while out.len() < n && attempts < n.max(1) * 64 {
+        attempts += 1;
+        let count = rng.range(1, 3);
+        let mut spec = FaultSpec::default();
+        for _ in 0..count {
+            // Flat topologies cannot represent severed clique links;
+            // draw only kills and fabric degradations for them.
+            let kinds = if topo.is_routed() { 3 } else { 2 };
+            let fault = match rng.below(kinds) {
+                0 => {
+                    let group = rng.below(topo.num_groups());
+                    let idx = rng.below(topo.groups[group].count);
+                    Fault::KillDevice(DeviceId { group, idx })
+                }
+                1 => Fault::DegradeLink {
+                    link: rng.below(graph.num_links()),
+                    factor: rng.range(1, 9) as f64 / 10.0,
+                },
+                _ => Fault::SeverLink(rng.below(graph.num_links())),
+            };
+            spec.faults.push(fault);
+        }
+        if spec.apply(topo).is_ok() {
+            out.push(spec);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::{multi_rack, sfb_pair, testbed};
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let text = "kill:2.0;sever:5;degrade:3*0.5";
+        let spec = FaultSpec::parse(text).unwrap();
+        assert_eq!(spec.faults.len(), 3);
+        assert_eq!(spec.encode(), text);
+        assert_eq!(FaultSpec::parse(&spec.encode()).unwrap(), spec);
+        // Whitespace and empty segments are tolerated.
+        let spec2 = FaultSpec::parse(" kill:2.0 ; ; sever:5;degrade:3*0.5").unwrap();
+        assert_eq!(spec2, spec);
+    }
+
+    #[test]
+    fn spec_grammar_rejects_malformed_input() {
+        assert!(FaultSpec::parse("").is_err());
+        assert!(FaultSpec::parse("explode:1").is_err());
+        assert!(FaultSpec::parse("kill:3").is_err()); // missing .idx
+        assert!(FaultSpec::parse("degrade:3*1.5").is_err()); // factor >= 1
+        assert!(FaultSpec::parse("degrade:3*0").is_err()); // factor <= 0
+        assert!(FaultSpec::parse("sever:x").is_err());
+    }
+
+    #[test]
+    fn kill_shrinks_a_flat_group() {
+        let t = testbed();
+        let r = FaultSpec::parse("kill:0.0").unwrap().apply(&t).unwrap();
+        assert_eq!(r.topology.num_groups(), 7);
+        assert_eq!(r.topology.groups[0].count, 3);
+        assert_eq!(r.topology.num_devices(), t.num_devices() - 1);
+        assert_eq!(r.dead_devices, vec![DeviceId { group: 0, idx: 0 }]);
+        assert!(r.group_map.iter().all(|m| m.is_some()));
+        r.topology.validate().unwrap();
+    }
+
+    #[test]
+    fn killing_a_whole_group_drops_it_and_remaps_masks() {
+        let t = sfb_pair();
+        let r = FaultSpec::parse("kill:0.0").unwrap().apply(&t).unwrap();
+        assert_eq!(r.topology.num_groups(), 1);
+        assert_eq!(r.group_map, vec![None, Some(0)]);
+        assert_eq!(r.remap_mask(0b11), 0b1);
+        assert_eq!(r.remap_mask(0b01), 0); // nothing survived
+        r.topology.validate().unwrap();
+    }
+
+    #[test]
+    fn killing_everything_is_an_error() {
+        let t = sfb_pair();
+        let err =
+            FaultSpec::parse("kill:0.0;kill:1.0").unwrap().apply(&t).unwrap_err().to_string();
+        assert!(err.contains("kill every device"), "{err}");
+        let dup = FaultSpec::parse("kill:0.0;kill:0.0").unwrap().apply(&t).unwrap_err();
+        assert!(dup.to_string().contains("twice"));
+        let oob = FaultSpec::parse("kill:9.0").unwrap().apply(&t).unwrap_err();
+        assert!(oob.to_string().contains("not a device"));
+    }
+
+    #[test]
+    fn degrading_a_flat_link_scales_the_fabric() {
+        let t = testbed();
+        let g = t.link_graph();
+        // Find one inter-group and one intra-group clique link.
+        let inter = g
+            .links()
+            .iter()
+            .position(|l| match (g.nodes()[l.a], g.nodes()[l.b]) {
+                (NodeKind::Device(a), NodeKind::Device(b)) => a.group != b.group,
+                _ => false,
+            })
+            .unwrap();
+        let r = FaultSpec::parse(&format!("degrade:{inter}*0.5")).unwrap().apply(&t).unwrap();
+        let (da, db) = match (g.nodes()[g.links()[inter].a], g.nodes()[g.links()[inter].b]) {
+            (NodeKind::Device(a), NodeKind::Device(b)) => (a, b),
+            _ => unreachable!(),
+        };
+        assert_eq!(
+            r.topology.inter_bw_gbps[da.group][db.group],
+            t.inter_bw_gbps[da.group][db.group] * 0.5
+        );
+        r.topology.validate().unwrap();
+
+        let intra = g
+            .links()
+            .iter()
+            .position(|l| match (g.nodes()[l.a], g.nodes()[l.b]) {
+                (NodeKind::Device(a), NodeKind::Device(b)) => a.group == b.group,
+                _ => false,
+            })
+            .unwrap();
+        let (da, _) = match (g.nodes()[g.links()[intra].a], g.nodes()[g.links()[intra].b]) {
+            (NodeKind::Device(a), NodeKind::Device(b)) => (a, b),
+            _ => unreachable!(),
+        };
+        let r = FaultSpec::parse(&format!("degrade:{intra}*0.5")).unwrap().apply(&t).unwrap();
+        assert_eq!(
+            r.topology.groups[da.group].intra_bw_gbps,
+            t.groups[da.group].intra_bw_gbps * 0.5
+        );
+        r.topology.validate().unwrap();
+    }
+
+    #[test]
+    fn severing_a_flat_link_is_rejected_with_guidance() {
+        let t = testbed();
+        let err = FaultSpec::parse("sever:0").unwrap().apply(&t).unwrap_err().to_string();
+        assert!(err.contains("not representable"), "{err}");
+    }
+
+    #[test]
+    fn routed_kill_renumbers_and_revalidates() {
+        let t = multi_rack();
+        let r = FaultSpec::parse("kill:0.0").unwrap().apply(&t).unwrap();
+        assert_eq!(r.topology.num_groups(), 12);
+        assert_eq!(r.topology.groups[0].count, 1);
+        assert_eq!(r.topology.num_devices(), 31);
+        r.topology.validate().unwrap();
+        // Surviving cross-rack routes are unchanged by the kill.
+        assert_eq!(r.topology.group_bw_gbps(0, 3), t.group_bw_gbps(0, 3));
+    }
+
+    #[test]
+    fn severing_the_only_uplink_is_a_disconnection_error() {
+        let t = multi_rack();
+        let g = t.link_graph();
+        // ToR-spine uplinks are the only 20 Gbps links.
+        let uplink = g.links().iter().position(|l| l.bw_gbps == 20.0).unwrap();
+        let err =
+            FaultSpec::parse(&format!("sever:{uplink}")).unwrap().apply(&t).unwrap_err();
+        assert!(err.to_string().contains("disconnected"), "{err}");
+    }
+
+    #[test]
+    fn degrading_a_routed_uplink_halves_the_cross_rack_bandwidth() {
+        let t = multi_rack();
+        let g = t.link_graph();
+        let uplink = g.links().iter().position(|l| l.bw_gbps == 20.0).unwrap();
+        let r =
+            FaultSpec::parse(&format!("degrade:{uplink}*0.5")).unwrap().apply(&t).unwrap();
+        // Rack 0's spine uplink at 10 Gbps bottlenecks its cross-rack
+        // routes; other racks keep their 20 Gbps pairs.
+        assert_eq!(r.topology.group_bw_gbps(0, 3), 10.0);
+        assert_eq!(r.topology.group_bw_gbps(3, 6), 20.0);
+        r.topology.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_generation_is_deterministic_and_always_applies() {
+        for topo in [testbed(), multi_rack()] {
+            let a = generate_trace(&topo, 7, 8);
+            let b = generate_trace(&topo, 7, 8);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), 8);
+            for spec in &a {
+                let r = spec.apply(&topo).unwrap();
+                r.topology.validate().unwrap();
+            }
+            let c = generate_trace(&topo, 8, 8);
+            assert_ne!(a, c, "different seeds must differ");
+        }
+    }
+}

@@ -26,12 +26,17 @@
 //! machine pair, a multi-rack oversubscribed-ethernet pod);
 //! [`generator`] samples random flat topologies with the distribution of
 //! §5.2 and random hierarchical (switched) topologies for the
-//! generalization experiments.
+//! generalization experiments.  [`faults`] injects failures (killed
+//! devices, severed or degraded links) and rebuilds the *residual*
+//! topology through these same constructors, so a degraded cluster is
+//! re-validated end to end before anything is planned onto it.
 
+pub mod faults;
 pub mod generator;
 pub mod linkgraph;
 pub mod presets;
 
+pub use faults::{generate_trace, Fault, FaultSpec, Residual};
 pub use generator::{random_hierarchical_topology, random_topology};
 pub use linkgraph::{Link, LinkGraph, LinkGraphBuilder, LinkKind, NodeKind, Route, RouteTable};
 pub use presets::{cloud, homogeneous, multi_rack, nvlink_island, sfb_pair, testbed};

@@ -36,6 +36,11 @@ pub struct SearchConfig {
     pub profile_noise: f64,
     /// Tree-parallel search workers + virtual loss ([`crate::search`]).
     pub parallelism: Parallelism,
+    /// Wall-clock search budget in milliseconds: when it expires the
+    /// search stops early and the best-so-far strategy stands (MCTS is
+    /// anytime).  `None` (the default) runs the full iteration budget
+    /// and keeps plans fully deterministic.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for SearchConfig {
@@ -47,6 +52,7 @@ impl Default for SearchConfig {
             apply_sfb: true,
             profile_noise: 0.0,
             parallelism: Parallelism::default(),
+            deadline_ms: None,
         }
     }
 }
@@ -110,10 +116,15 @@ pub fn search_session(
     let watch = Stopwatch::start();
     let low = Lowering::new(&prep.gg, topo, &prep.cost, &prep.comm);
     let actions = enumerate_actions(topo);
+    // The deadline clock starts here, bounding the search itself.
+    // (`api::Planner` instead starts its token before prepare, so the
+    // full request path is covered when serving.)
+    let cancel = cfg.deadline_ms.map(search::CancelToken::with_deadline_ms);
 
     let search = match prior {
         Some(prior) => {
             let mut mcts = Mcts::new(&low, actions.clone(), prior, cfg.seed);
+            mcts.cancel = cancel.clone();
             mcts.search(cfg.mcts_iterations)
         }
         None if cfg.parallelism.workers > 1 => {
@@ -135,11 +146,13 @@ pub fn search_session(
                 cfg.parallelism,
                 true,
                 false,
+                cancel.as_ref(),
             )
             .result
         }
         None => {
             let mut mcts = Mcts::new(&low, actions.clone(), UniformPrior, cfg.seed);
+            mcts.cancel = cancel.clone();
             mcts.search(cfg.mcts_iterations)
         }
     };
@@ -257,6 +270,7 @@ impl<'a> Trainer<'a> {
             apply_sfb: false,
             profile_noise: 0.0,
             parallelism: Default::default(),
+            deadline_ms: None,
         };
         let prep = prepare(model, &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
@@ -349,6 +363,7 @@ mod tests {
             apply_sfb: true,
             profile_noise: 0.0,
             parallelism: Default::default(),
+            deadline_ms: None,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let res = search_session(&prep, &topo, None, &cfg);
@@ -368,6 +383,7 @@ mod tests {
             apply_sfb: true,
             profile_noise: 0.0,
             parallelism: Default::default(),
+            deadline_ms: None,
         };
         let prep = prepare(models::transformer(8, 0.25), &topo, &cfg);
         let res = search_session(&prep, &topo, None, &cfg);
@@ -396,6 +412,7 @@ mod tests {
             apply_sfb: false,
             profile_noise: 0.0,
             parallelism: Default::default(),
+            deadline_ms: None,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let actions = enumerate_actions(&topo);

@@ -46,6 +46,21 @@
 //! identical plan bytes; `workers == 1` exact, `workers > 1`
 //! seed-stable) holds across the network boundary.
 //!
+//! ## Fault tolerance
+//!
+//! The planning stack degrades instead of dying.  [`cluster::faults`]
+//! injects typed failures (kill a device, sever a link, degrade a
+//! link's bandwidth) into any topology and rebuilds a validated
+//! *residual* with re-derived routes — stranded hardware is an explicit
+//! error.  [`api::PlanRequest`]`::deadline_ms` threads a cooperative
+//! [`search::CancelToken`] through every search worker, so an expiring
+//! budget returns the best plan found so far (flagged `timed_out` in
+//! telemetry, never cached).  [`api::Planner::repair`] re-plans a prior
+//! plan on the degraded topology warm-started from its surviving
+//! placements (`tag repair`, `POST /repair`).  The daemon isolates
+//! handler panics behind `catch_unwind` (`500` + `tag_panics_total`;
+//! the worker survives) and enforces socket read/write timeouts.
+//!
 //! ## The engine underneath
 //!
 //! * a **heterogeneous GNN** (JAX/Pallas, AOT-compiled to HLO and executed

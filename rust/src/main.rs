@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   search    find a deployment plan for a model on a topology
 //!   baselines evaluate all baseline strategies on the same setup
+//!   repair    re-plan a saved plan after device/link failures
 //!   serve     run the HTTP planning daemon (POST /plan, GET /metrics)
 //!   train     self-play GNN training (writes a params .bin)
 //!   info      list models, topologies and artifact status
@@ -14,6 +15,8 @@
 //!   tag search --model VGG19 --topology hier:7      # random hierarchical
 //!   tag search --model VGG19 --out plan.json     # persist the plan
 //!   tag search --model VGG19 --workers=8         # tree-parallel MCTS
+//!   tag search --model VGG19 --deadline-ms 500   # best plan within 500ms
+//!   tag repair --plan plan.json --faults "kill:0.1;degrade:2*0.5"
 //!   tag train --games 30 --steps 4 --out artifacts/params_trained.bin
 //!   tag baselines --model InceptionV3 --topology testbed
 //!   tag serve --port 7878 --workers 4 --queue-depth 64
@@ -31,7 +34,7 @@ use tag::api::{
     BaselineSweepBackend, DeploymentPlan, GnnMctsBackend, Parallelism, PlanRequest,
     Planner, SharedPlanner, BASELINE_NAMES,
 };
-use tag::cluster::Topology;
+use tag::cluster::{FaultSpec, Topology};
 use tag::coordinator::Trainer;
 use tag::gnn::{params, GnnService};
 use tag::models;
@@ -41,7 +44,7 @@ use tag::util::{fmt_secs, Args};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tag <search|baselines|serve|train|info> [options]\n\
+        "usage: tag <search|baselines|repair|serve|train|info> [options]\n\
          run `tag <cmd> --help` for details"
     );
     std::process::exit(2)
@@ -77,7 +80,7 @@ fn request_from(args: &Args) -> PlanRequest {
         eprintln!("unknown model {model_name}; see `tag info`");
         std::process::exit(2)
     });
-    PlanRequest::new(model, topo)
+    let mut request = PlanRequest::new(model, topo)
         .budget(args.num("iters", 150), args.num("groups", 24))
         .seed(args.num("seed", 1))
         .sfb(!args.flag("no-sfb"))
@@ -85,7 +88,13 @@ fn request_from(args: &Args) -> PlanRequest {
         .parallelism(Parallelism {
             workers: args.num("workers", 1usize).max(1),
             virtual_loss: args.num("vloss", 1.0),
-        })
+        });
+    if args.get("deadline-ms").is_some() {
+        // A deadline makes the search return its best-so-far when the
+        // clock expires instead of running the full iteration budget.
+        request = request.deadline_ms(args.num("deadline-ms", 0u64).max(1));
+    }
+    request
 }
 
 fn describe_strategy(plan: &DeploymentPlan, topo: &Topology) {
@@ -159,6 +168,12 @@ fn cmd_search(args: &Args) {
         fmt_secs(outcome.overhead_s),
         plan.backend,
     );
+    if plan.telemetry.metric("timed_out").is_some() {
+        println!(
+            "deadline expired after {} of {} iterations: plan is the best found so far",
+            plan.telemetry.iterations, request.budget.iterations
+        );
+    }
     if let (Some(sfb), Some(t)) = (&plan.sfb, plan.times.time_with_sfb) {
         println!(
             "SFB: {} of {} gradients covered, predicted saving {}, time with SFB {}",
@@ -209,6 +224,87 @@ fn cmd_baselines(args: &Args) {
             dp / t,
             if oom { "  (OOM)" } else { "" }
         );
+    }
+}
+
+fn cmd_repair(args: &Args) {
+    let path = args.get("plan").unwrap_or_else(|| {
+        eprintln!("repair needs --plan <file> (a plan written by `tag search --out`)");
+        std::process::exit(2)
+    });
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("failed to read {path}: {e}");
+        std::process::exit(1)
+    });
+    let prior = DeploymentPlan::decode(&text).unwrap_or_else(|e| {
+        eprintln!("{path} is not a deployment plan: {e}");
+        std::process::exit(1)
+    });
+    let spec = args.get("faults").unwrap_or_else(|| {
+        eprintln!("repair needs --faults \"kill:G.I;sever:L;degrade:L*F\"");
+        std::process::exit(2)
+    });
+    let faults = FaultSpec::parse(spec).unwrap_or_else(|e| {
+        eprintln!("bad fault spec: {e}");
+        std::process::exit(2)
+    });
+    let request = request_from(args);
+    let planner = Planner::builder().build();
+    let outcome = planner.repair(&request, &prior, &faults).unwrap_or_else(|e| {
+        eprintln!("repair failed: {e}");
+        std::process::exit(1)
+    });
+    let plan = &outcome.plan;
+    let dead = plan.telemetry.metric("dead_devices").unwrap_or(0.0) as usize;
+    println!(
+        "faults: {}   residual topology: {} ({} of {} GPUs alive)",
+        faults.encode(),
+        plan.topology_name,
+        request.topology.num_devices() - dead,
+        request.topology.num_devices(),
+    );
+    match outcome.warm_time {
+        Some(t) => println!("surviving placements (warm incumbent): {}", fmt_secs(t)),
+        None => println!("surviving placements infeasible on the residual; cold restart"),
+    }
+    println!(
+        "repaired: {}   DP on residual: {}   speed-up: {:.2}x   ({} iterations, {})",
+        fmt_secs(plan.times.final_time),
+        fmt_secs(plan.times.dp_time),
+        plan.times.speedup,
+        plan.telemetry.iterations,
+        fmt_secs(outcome.overhead_s),
+    );
+    if let Some(warm) = outcome.warm_time {
+        let gain = warm / plan.times.final_time;
+        println!("repair recovered {gain:.2}x over the degraded survivors");
+    }
+
+    if args.flag("cold") {
+        // Honest comparison: a from-scratch plan on the same residual
+        // topology with the *full* budget (the repair used a quarter).
+        let residual = faults.apply(&request.topology).expect("faults applied above");
+        let mut cold_request = request.clone();
+        cold_request.topology = residual.topology;
+        let cold = planner.plan(&cold_request).unwrap_or_else(|e| {
+            eprintln!("cold re-plan failed: {e}");
+            std::process::exit(1)
+        });
+        println!(
+            "cold re-plan: {} in {} (repair: {} in {})",
+            fmt_secs(cold.plan.times.final_time),
+            fmt_secs(cold.overhead_s),
+            fmt_secs(plan.times.final_time),
+            fmt_secs(outcome.overhead_s),
+        );
+    }
+
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, plan.encode()).unwrap_or_else(|e| {
+            eprintln!("failed to write {out}: {e}");
+            std::process::exit(1)
+        });
+        println!("repaired plan written to {out}");
     }
 }
 
@@ -267,7 +363,7 @@ fn cmd_serve(args: &Args) {
         config.queue_depth
     );
     println!(
-        "endpoints: POST /plan  GET /healthz  GET /metrics  POST /shutdown"
+        "endpoints: POST /plan  POST /repair  GET /healthz  GET /metrics  POST /shutdown"
     );
     if let Err(e) = server.run() {
         eprintln!("serve failed: {e}");
@@ -302,6 +398,7 @@ fn main() {
     match cmd.as_str() {
         "search" => cmd_search(&rest),
         "baselines" => cmd_baselines(&rest),
+        "repair" => cmd_repair(&rest),
         "serve" => cmd_serve(&rest),
         "train" => cmd_train(&rest),
         "info" => cmd_info(),

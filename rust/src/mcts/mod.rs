@@ -23,7 +23,7 @@
 
 use crate::dist::{Lowering, SimOutcome};
 use crate::search::worker::{finish_result, harvest_examples, Worker};
-use crate::search::SearchTree;
+use crate::search::{CancelToken, SearchTree};
 use crate::strategy::{Action, Strategy};
 use crate::util::Rng;
 
@@ -130,6 +130,11 @@ pub struct Mcts<'a, P: PriorProvider> {
     /// Probe every root action once before PUCT (on by default).  The
     /// Table 7 experiment disables it to compare raw prior quality.
     pub root_sweep: bool,
+    /// Optional cooperative cancellation ([`CancelToken`]): when it
+    /// fires mid-search the engine stops early and returns its
+    /// best-so-far strategy.  `None` (the default) leaves the trajectory
+    /// byte-identical to the pre-deadline engine.
+    pub cancel: Option<CancelToken>,
 }
 
 impl<'a, P: PriorProvider> Mcts<'a, P> {
@@ -144,6 +149,7 @@ impl<'a, P: PriorProvider> Mcts<'a, P> {
             dp_time,
             collect_examples: false,
             root_sweep: true,
+            cancel: None,
         }
     }
 
@@ -166,6 +172,7 @@ impl<'a, P: PriorProvider> Mcts<'a, P> {
             self.rng.clone(),
             1.0,
         );
+        worker.cancel = self.cancel.clone();
         worker.build_root();
         if self.root_sweep {
             worker.root_sweep(iterations);

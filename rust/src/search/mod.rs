@@ -42,8 +42,9 @@ pub use eval::BatchedGnnPrior;
 pub use tree::{Node, SearchTree, UNEXPANDED};
 pub use worker::{harvest_examples, Worker};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
 use crate::cluster::Topology;
 use crate::dist::Lowering;
@@ -54,6 +55,46 @@ use crate::strategy::{Action, Strategy};
 use crate::util::Rng;
 
 use worker::finish_result;
+
+/// Cooperative cancellation for a running search: a shared flag (set by
+/// [`CancelToken::cancel`]) plus an optional wall-clock deadline.  Every
+/// [`Worker`] holding a clone checks the token between iterations and
+/// stops early with its best-so-far strategy intact — MCTS is anytime,
+/// so a deadline degrades plan quality, never validity.  Searches run
+/// *without* a token take the exact same code path as before this type
+/// existed (the determinism contract is untouched).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that only fires on an explicit [`CancelToken::cancel`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A token that additionally fires once `ms` milliseconds have
+    /// elapsed from now.
+    pub fn with_deadline_ms(ms: u64) -> Self {
+        Self {
+            flag: Arc::new(AtomicBool::new(false)),
+            deadline: Some(Instant::now() + Duration::from_millis(ms)),
+        }
+    }
+
+    /// Fire the token explicitly (all clones observe it).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the flag was set or the deadline has passed.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+            || self.deadline.map_or(false, |d| Instant::now() >= d)
+    }
+}
 
 /// How a search spreads over threads.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -137,6 +178,7 @@ pub fn run_search<P: PriorProvider + Send>(
     par: Parallelism,
     root_sweep: bool,
     collect_examples: bool,
+    cancel: Option<&CancelToken>,
 ) -> ParallelSearch {
     run_search_with_service(
         prob,
@@ -147,6 +189,7 @@ pub fn run_search<P: PriorProvider + Send>(
         par,
         root_sweep,
         collect_examples,
+        cancel,
         || (),
     )
 }
@@ -170,6 +213,7 @@ pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
     par: Parallelism,
     root_sweep: bool,
     collect_examples: bool,
+    cancel: Option<&CancelToken>,
     service: S,
 ) -> ParallelSearch {
     let k = priors.len();
@@ -185,6 +229,7 @@ pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
         let tree = SearchTree::new();
         let mut w =
             Worker::new(&tree, low, prob.actions, prior, Rng::new(seed), par.virtual_loss);
+        w.cancel = cancel.cloned();
         w.build_root();
         if root_sweep {
             w.root_sweep(iterations);
@@ -242,6 +287,7 @@ pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
                         Rng::new(worker_seed(seed, wi)),
                         par.virtual_loss,
                     );
+                    w.cancel = cancel.cloned();
                     if wi == 0 {
                         // Root build AND root sweep both happen before the
                         // barrier: record_sweep overwrites edge means, so
@@ -364,6 +410,7 @@ mod tests {
             Parallelism::default(),
             true,
             false,
+            None,
         );
         assert_eq!(par.result.best, seq.best);
         assert_eq!(par.result.best_time.to_bits(), seq.best_time.to_bits());
@@ -388,6 +435,7 @@ mod tests {
             Parallelism::workers(4),
             true,
             false,
+            None,
         );
         assert_eq!(par.per_worker_iterations.iter().sum::<usize>(), 42);
         assert_eq!(par.per_worker_iterations.len(), 4);
@@ -412,6 +460,7 @@ mod tests {
             Parallelism::workers(4),
             true,
             false,
+            None,
         );
         let (hits, misses) = low.memo_stats();
         assert!(misses > 0, "cold table must miss");
@@ -423,5 +472,42 @@ mod tests {
         assert_eq!(worker_seed(7, 0), 7);
         assert_ne!(worker_seed(7, 1), worker_seed(7, 2));
         assert_eq!(worker_seed(7, 3), worker_seed(7, 3));
+    }
+
+    #[test]
+    fn cancelled_search_returns_a_valid_best_so_far() {
+        let su = setup();
+        let low = Lowering::new(&su.gg, &su.topo, &su.cost, &su.comm);
+        let token = CancelToken::new();
+        token.cancel();
+        let par = run_search(
+            &su.problem(),
+            &low,
+            vec![UniformPrior],
+            40,
+            5,
+            Parallelism::default(),
+            true,
+            false,
+            Some(&token),
+        );
+        // Cancelled before any iteration: the DP reference stands in,
+        // still a complete, feasible strategy.
+        assert_eq!(par.result.iterations, 0);
+        assert!(par.result.best.is_complete());
+        assert_eq!(par.result.best_time.to_bits(), par.result.dp_time.to_bits());
+    }
+
+    #[test]
+    fn deadline_tokens_fire_and_clones_share_the_flag() {
+        let t = CancelToken::with_deadline_ms(0);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.is_cancelled());
+
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!b.is_cancelled());
+        a.cancel();
+        assert!(b.is_cancelled());
     }
 }

@@ -65,6 +65,10 @@ pub struct Worker<'a, P: PriorProvider> {
     pub first_beats_dp: Option<usize>,
     /// Iterations this worker has consumed (root sweep included).
     pub iterations: usize,
+    /// Cooperative cancellation, checked between iterations: when the
+    /// token fires the worker stops early with its best-so-far intact.
+    /// `None` (the default) preserves the exact uncancelled trajectory.
+    pub cancel: Option<super::CancelToken>,
 }
 
 impl<'a, P: PriorProvider> Worker<'a, P> {
@@ -89,7 +93,13 @@ impl<'a, P: PriorProvider> Worker<'a, P> {
             best: None,
             first_beats_dp: None,
             iterations: 0,
+            cancel: None,
         }
+    }
+
+    /// Whether the worker's cancel token (if any) has fired.
+    fn cancelled(&self) -> bool {
+        self.cancel.as_ref().map_or(false, |c| c.is_cancelled())
     }
 
     /// Evaluate the empty strategy, query the prior and push the root
@@ -136,7 +146,7 @@ impl<'a, P: PriorProvider> Worker<'a, P> {
     pub fn root_sweep(&mut self, budget: usize) {
         let root = self.tree.get(self.root);
         for a0 in 0..self.actions.len() {
-            if self.iterations >= budget {
+            if self.iterations >= budget || self.cancelled() {
                 break;
             }
             self.iterations += 1;
@@ -153,6 +163,9 @@ impl<'a, P: PriorProvider> Worker<'a, P> {
         let ng = self.low.gg.num_groups();
         let na = self.actions.len();
         while self.iterations < budget {
+            if self.cancelled() {
+                break;
+            }
             self.iterations += 1;
 
             // ---- selection (virtual loss marks the path in flight)

@@ -13,7 +13,8 @@ use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use crate::api::CacheStats;
 
 /// The endpoints metrics are keyed by (plus a catch-all).
-pub const ENDPOINTS: [&str; 5] = ["/plan", "/healthz", "/metrics", "/shutdown", "other"];
+pub const ENDPOINTS: [&str; 6] =
+    ["/plan", "/repair", "/healthz", "/metrics", "/shutdown", "other"];
 
 /// Index into [`ENDPOINTS`] for a request path.
 pub fn endpoint_index(path: &str) -> usize {
@@ -69,7 +70,7 @@ impl Histogram {
 }
 
 /// Every status the daemon can emit, in render order.
-pub const STATUSES: [u16; 8] = [200, 400, 404, 405, 408, 413, 422, 503];
+pub const STATUSES: [u16; 10] = [200, 400, 404, 405, 408, 413, 422, 500, 503, 504];
 
 /// All live counters of one serving process.
 #[derive(Default)]
@@ -86,6 +87,12 @@ pub struct ServerMetrics {
     coalesce_waiting: AtomicI64,
     /// Connections shed at admission (503).
     shed_total: AtomicU64,
+    /// Handler panics caught and converted to 500 (the worker and the
+    /// daemon both survive; see `serve::handle_connection`).
+    panics_total: AtomicU64,
+    /// Connections admitted to the pool queue but not yet picked up by
+    /// a worker — the live admission-queue depth.
+    queue_depth: AtomicI64,
     /// Searches actually executed by this process (singleflight
     /// leaders that missed the plan cache).
     searches_total: AtomicU64,
@@ -140,6 +147,26 @@ impl ServerMetrics {
         self.shed_total.load(Ordering::Relaxed)
     }
 
+    pub fn record_panic(&self) {
+        self.panics_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn panics_total(&self) -> u64 {
+        self.panics_total.load(Ordering::Relaxed)
+    }
+
+    pub fn begin_queued(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn end_queued(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> i64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
     /// Render the full exposition.  `cache` is the planner's live
     /// [`CacheStats`] (`None` when the planner runs uncached).
     pub fn render(&self, cache: Option<CacheStats>) -> String {
@@ -166,6 +193,8 @@ impl ServerMetrics {
             self.coalesce_waiting.load(Ordering::Relaxed)
         ));
         out.push_str(&format!("tag_shed_total {}\n", self.shed_total()));
+        out.push_str(&format!("tag_panics_total {}\n", self.panics_total()));
+        out.push_str(&format!("tag_queue_depth {}\n", self.queue_depth()));
         out.push_str(&format!(
             "tag_searches_total {}\n",
             self.searches_total.load(Ordering::Relaxed)
@@ -236,6 +265,10 @@ mod tests {
         m.record_coalesced();
         m.record_shed();
         m.record_search();
+        m.record_panic();
+        m.begin_queued();
+        m.begin_queued();
+        m.end_queued();
         m.record_latency(endpoint_index("/plan"), 0.02);
         let text = m.render(Some(CacheStats { hits: 3, misses: 1, entries: 2 }));
         assert_eq!(
@@ -251,6 +284,8 @@ mod tests {
         assert_eq!(scrape(&text, "tag_in_flight"), Some(1.0));
         assert_eq!(scrape(&text, "tag_coalesced_total"), Some(1.0));
         assert_eq!(scrape(&text, "tag_shed_total"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_panics_total"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_queue_depth"), Some(1.0));
         assert_eq!(scrape(&text, "tag_searches_total"), Some(1.0));
         assert_eq!(scrape(&text, "tag_plan_cache_hits"), Some(3.0));
         assert_eq!(scrape(&text, "tag_plan_cache_hit_rate"), Some(0.75));

@@ -13,6 +13,25 @@
 //! live counters, the plan-cache hit rate and per-endpoint latency
 //! histograms.
 //!
+//! ## Fault tolerance
+//!
+//! The daemon is built to keep answering through partial failure:
+//!
+//! - **Panic isolation** — each request is handled under
+//!   `catch_unwind`; a panicking handler answers `500`, bumps
+//!   `tag_panics_total`, and the worker thread (and every other
+//!   request) carries on.
+//! - **Deadlines** — a request carrying `deadline_ms` gets the best
+//!   plan found when the budget expires (`timed_out` telemetry row); a
+//!   deadline spent before the search even starts is refused with
+//!   `504` instead of a fabricated answer.
+//! - **Socket timeouts** — per-connection read *and* write timeouts,
+//!   so a stalled peer can never pin a worker.
+//! - **Degraded re-planning** — `POST /repair` takes a prior plan plus
+//!   a fault spec (killed devices, severed or degraded links) and
+//!   re-plans on the residual topology, warm-started from the
+//!   surviving placements (see [`crate::cluster::faults`]).
+//!
 //! ## Determinism across the network boundary
 //!
 //! Two wire requests that decode to the same fingerprint triple get
@@ -116,7 +135,12 @@ impl Server {
         let local_addr = listener.local_addr().context("local_addr")?;
         let metrics = Arc::new(ServerMetrics::default());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let router = Arc::new(Router::new(Arc::new(planner), metrics.clone(), shutdown.clone()));
+        let router = Arc::new(Router::new(
+            Arc::new(planner),
+            metrics.clone(),
+            shutdown.clone(),
+            config.workers,
+        ));
         Ok(Self { listener, local_addr, config, router, metrics, shutdown })
     }
 
@@ -159,7 +183,7 @@ impl Server {
                         continue;
                     }
                     match pool.try_execute(stream) {
-                        Ok(()) => {}
+                        Ok(()) => self.metrics.begin_queued(),
                         Err(Rejected::Full(stream)) | Err(Rejected::Closed(stream)) => {
                             self.metrics.record_shed();
                             self.metrics.record_status(503);
@@ -212,6 +236,7 @@ fn handle_connection(
     limits: &Limits,
     read_timeout: Duration,
 ) {
+    metrics.end_queued();
     metrics.begin_in_flight();
     let _ = stream.set_read_timeout(Some(read_timeout));
     let _ = stream.set_write_timeout(Some(read_timeout));
@@ -221,7 +246,16 @@ fn handle_connection(
             let endpoint = metrics::endpoint_index(&request.path);
             metrics.record_request(endpoint);
             let watch = Stopwatch::start();
-            let response = router.handle(&request);
+            // Panic isolation: a handler that panics (a planner bug, a
+            // poisoned lock) answers 500 and the worker keeps serving —
+            // one bad request must never take the daemon down.
+            let response = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                router.handle(&request)
+            }))
+            .unwrap_or_else(|_| {
+                metrics.record_panic();
+                Response::text(500, "internal error: request handler panicked\n")
+            });
             metrics.record_latency(endpoint, watch.elapsed_s());
             Some(response)
         }
@@ -276,7 +310,8 @@ mod tests {
         let (addr, handle) = start(2, 8);
         let health = roundtrip(addr, b"GET /healthz HTTP/1.1\r\n\r\n");
         assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
-        assert!(health.ends_with("ok\n"), "{health}");
+        assert!(health.contains("\"status\":\"ok\""), "{health}");
+        assert!(health.contains("\"workers\":2"), "{health}");
         let metrics = roundtrip(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
         assert!(metrics.contains("tag_requests_total{endpoint=\"/healthz\"} 1"), "{metrics}");
         let bye = roundtrip(addr, b"POST /shutdown HTTP/1.1\r\n\r\n");

@@ -113,7 +113,14 @@ impl<T: Send + 'static> Pool<T> {
                     .name(format!("tag-serve-worker-{i}"))
                     .spawn(move || {
                         while let Some(item) = queue.pop() {
-                            handler(item);
+                            // Backstop: the serve layer catches handler
+                            // panics itself (and answers 500), but the
+                            // worker must outlive a panic from *any*
+                            // handler — a dead worker silently shrinks
+                            // the pool for the rest of the process.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| handler(item)),
+                            );
                         }
                     })
                     .expect("spawn pool worker")
@@ -205,6 +212,21 @@ mod tests {
         }
         pool.shutdown(); // joins only after all five ran
         assert_eq!(done.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn panicking_handler_does_not_kill_the_worker() {
+        let (tx, rx) = mpsc::channel::<usize>();
+        let pool = Pool::new(1, 4, move |n: usize| {
+            if n == 0 {
+                panic!("injected handler panic");
+            }
+            tx.send(n).unwrap();
+        });
+        pool.try_execute(0).unwrap(); // panics inside the handler
+        pool.try_execute(7).unwrap(); // same (sole) worker must survive
+        assert_eq!(rx.recv().unwrap(), 7);
+        pool.shutdown();
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! | endpoint         | behaviour                                             |
 //! |------------------|-------------------------------------------------------|
 //! | `POST /plan`     | decode wire request → coalesce → plan → JSON plan     |
-//! | `GET /healthz`   | liveness: `200 ok`                                    |
+//! | `POST /repair`   | prior plan + fault spec → warm re-plan on the residual|
+//! | `GET /healthz`   | readiness JSON: workers, queue depth, panics          |
 //! | `GET /metrics`   | plain-text exposition ([`ServerMetrics::render`])     |
 //! | `POST /shutdown` | begin graceful drain; `200`                           |
 //!
@@ -18,12 +19,18 @@
 //!
 //! Status mapping: `400` malformed body/unknown names, `404` unknown
 //! path, `405` wrong method (with `Allow`), `422` valid-looking request
-//! the planner rejects (e.g. a topology that fails validation).
+//! the planner rejects (e.g. a topology that fails validation), `504`
+//! a deadline that expired before the search ran a single iteration —
+//! the plan would be a pure fallback, so it is refused rather than
+//! served as an answer.  Partial searches (deadline hit mid-run) still
+//! return `200`; callers spot them by the `timed_out` telemetry row.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::api::{PlanKey, SharedPlanner};
+use crate::api::json::Json;
+use crate::api::{DeploymentPlan, PlanKey, SharedPlanner};
+use crate::cluster::FaultSpec;
 
 use super::coalesce::{Join, SingleFlight};
 use super::http::{Request, Response};
@@ -35,8 +42,10 @@ use super::metrics::ServerMetrics;
 pub struct Router {
     pub planner: Arc<SharedPlanner>,
     pub metrics: Arc<ServerMetrics>,
-    flights: SingleFlight<PlanKey, String>,
+    flights: SingleFlight<PlanKey, (u16, String)>,
     shutdown: Arc<AtomicBool>,
+    /// Worker-pool size, reported by `/healthz`.
+    workers: usize,
 }
 
 impl Router {
@@ -44,15 +53,17 @@ impl Router {
         planner: Arc<SharedPlanner>,
         metrics: Arc<ServerMetrics>,
         shutdown: Arc<AtomicBool>,
+        workers: usize,
     ) -> Self {
-        Self { planner, metrics, flights: SingleFlight::new(), shutdown }
+        Self { planner, metrics, flights: SingleFlight::new(), shutdown, workers }
     }
 
     /// Dispatch one request.
     pub fn handle(&self, request: &Request) -> Response {
         match (request.method.as_str(), request.path.as_str()) {
             ("POST", "/plan") => self.plan(&request.body),
-            ("GET", "/healthz") => Response::text(200, "ok\n"),
+            ("POST", "/repair") => self.repair(&request.body),
+            ("GET", "/healthz") => self.healthz(),
             ("GET", "/metrics") => {
                 Response::text(200, self.metrics.render(self.planner.cache_stats()))
             }
@@ -60,11 +71,26 @@ impl Router {
                 self.shutdown.store(true, Ordering::SeqCst);
                 Response::text(200, "draining\n")
             }
-            (_, "/plan") => method_not_allowed("POST"),
+            (_, "/plan") | (_, "/repair") => method_not_allowed("POST"),
             (_, "/healthz") | (_, "/metrics") => method_not_allowed("GET"),
             (_, "/shutdown") => method_not_allowed("POST"),
             _ => Response::text(404, "unknown endpoint\n"),
         }
+    }
+
+    /// `GET /healthz`: readiness detail.  Stays `200` whenever the
+    /// process can answer at all — panics and queue depth are reported,
+    /// not failed on (a daemon that caught a panic is still serving).
+    fn healthz(&self) -> Response {
+        let mut body = Json::Obj(vec![
+            ("status".to_string(), Json::Str("ok".to_string())),
+            ("workers".to_string(), Json::Num(self.workers as f64)),
+            ("queue_depth".to_string(), Json::Num(self.metrics.queue_depth() as f64)),
+            ("panics_total".to_string(), Json::Num(self.metrics.panics_total() as f64)),
+        ])
+        .encode();
+        body.push('\n');
+        Response::json(200, body)
     }
 
     /// `POST /plan`: decode, coalesce, search (or wait), respond.
@@ -85,29 +111,107 @@ impl Router {
         let joined = self.flights.join(key);
         self.metrics.end_coalesce_wait();
         match joined {
-            Join::Lead(leader) => match self.planner.plan(&request) {
-                Ok(outcome) => {
-                    if !outcome.cache_hit {
-                        self.metrics.record_search();
+            Join::Lead(leader) => {
+                let (status, body) = match self.planner.plan(&request) {
+                    Ok(outcome) => {
+                        if !outcome.cache_hit {
+                            self.metrics.record_search();
+                        }
+                        plan_payload(&outcome.plan)
                     }
-                    let body = outcome.plan.encode();
-                    leader.complete(Ok(body.clone()));
-                    Response::json(200, body)
-                }
-                Err(e) => {
-                    let msg = e.to_string();
-                    leader.complete(Err(msg.clone()));
-                    Response::text(422, format!("planning failed: {msg}\n"))
-                }
-            },
+                    Err(e) => (422, format!("planning failed: {e}\n")),
+                };
+                // Followers get the leader's status too: a coalesced
+                // burst behind an expired deadline is 504 across the
+                // board, not one 504 and N fabricated 200s.
+                leader.complete(Ok((status, body.clone())));
+                respond(status, body)
+            }
             Join::Coalesced(result) => {
                 self.metrics.record_coalesced();
                 match result {
-                    Ok(body) => Response::json(200, body),
+                    Ok((status, body)) => respond(status, body),
                     Err(msg) => Response::text(422, format!("planning failed: {msg}\n")),
                 }
             }
         }
+    }
+
+    /// `POST /repair`: a plan-request body plus `"faults"` (the
+    /// [`FaultSpec`] grammar) and `"plan"` (the prior
+    /// [`DeploymentPlan`], nested verbatim).  Repairs are emergency
+    /// one-offs over a degraded topology — they bypass both the plan
+    /// cache and the singleflight table.
+    fn repair(&self, body: &[u8]) -> Response {
+        let text = match std::str::from_utf8(body) {
+            Ok(text) => text,
+            Err(e) => return Response::text(400, format!("body is not valid utf-8: {e}\n")),
+        };
+        let root = match Json::parse(text) {
+            Ok(root) => root,
+            Err(e) => return Response::text(400, format!("bad repair request: {e}\n")),
+        };
+        let members = match &root {
+            Json::Obj(members) => members,
+            _ => return Response::text(400, "repair request must be a JSON object\n"),
+        };
+        let faults = match root.field("faults").and_then(|v| v.as_str()) {
+            Ok(spec) => match FaultSpec::parse(spec) {
+                Ok(faults) => faults,
+                Err(e) => return Response::text(400, format!("bad fault spec: {e}\n")),
+            },
+            Err(e) => return Response::text(400, format!("bad repair request: {e}\n")),
+        };
+        let prior = match root
+            .field("plan")
+            .map(|v| v.encode())
+            .and_then(|text| DeploymentPlan::decode(&text))
+        {
+            Ok(prior) => prior,
+            Err(e) => return Response::text(400, format!("bad prior plan: {e}\n")),
+        };
+        // Everything except `faults`/`plan` is an ordinary wire plan
+        // request; re-encode the remainder and reuse its decoder (which
+        // also rejects unknown fields).
+        let request_obj = Json::Obj(
+            members
+                .iter()
+                .filter(|(k, _)| k != "faults" && k != "plan")
+                .cloned()
+                .collect(),
+        );
+        let request = match crate::api::PlanRequest::decode(&request_obj.encode()) {
+            Ok(request) => request,
+            Err(e) => return Response::text(400, format!("bad repair request: {e}\n")),
+        };
+        match self.planner.repair(&request, &prior, &faults) {
+            Ok(outcome) => {
+                self.metrics.record_search();
+                let (status, body) = plan_payload(&outcome.plan);
+                respond(status, body)
+            }
+            Err(e) => Response::text(422, format!("repair failed: {e}\n")),
+        }
+    }
+}
+
+/// Status + body for a produced plan.  A `timed_out` plan with zero
+/// search iterations means the deadline was spent before the search
+/// started — nothing in it reflects this request beyond the DP
+/// fallback, so it maps to `504` instead of masquerading as an answer.
+fn plan_payload(plan: &DeploymentPlan) -> (u16, String) {
+    let timed_out = plan.telemetry.metric("timed_out").is_some();
+    if timed_out && plan.telemetry.iterations == 0 {
+        return (504, "deadline expired before the search started\n".to_string());
+    }
+    (200, plan.encode())
+}
+
+fn respond(status: u16, body: String) -> Response {
+    if status == 200 {
+        Response::json(200, body)
+    } else {
+        Response::text(status, body)
     }
 }
 
@@ -125,6 +229,7 @@ mod tests {
             Arc::new(SharedPlanner::builder().build()),
             Arc::new(ServerMetrics::default()),
             Arc::new(AtomicBool::new(false)),
+            2,
         )
     }
 
@@ -146,9 +251,83 @@ mod tests {
         assert_eq!(r.handle(&request("GET", "/nope", b"")).status, 404);
         let resp = r.handle(&request("GET", "/plan", b""));
         assert_eq!((resp.status, resp.allow), (405, Some("POST")));
+        let resp = r.handle(&request("GET", "/repair", b""));
+        assert_eq!((resp.status, resp.allow), (405, Some("POST")));
         let resp = r.handle(&request("DELETE", "/healthz", b""));
         assert_eq!((resp.status, resp.allow), (405, Some("GET")));
         assert_eq!(r.handle(&request("PUT", "/shutdown", b"")).status, 405);
+    }
+
+    #[test]
+    fn healthz_reports_readiness_detail() {
+        let r = router();
+        r.metrics.record_panic();
+        let resp = r.handle(&request("GET", "/healthz", b""));
+        assert_eq!(resp.status, 200);
+        let body = String::from_utf8(resp.body).unwrap();
+        assert!(body.contains("\"status\":\"ok\""), "{body}");
+        assert!(body.contains("\"workers\":2"), "{body}");
+        assert!(body.contains("\"queue_depth\":0"), "{body}");
+        assert!(body.contains("\"panics_total\":1"), "{body}");
+    }
+
+    #[test]
+    fn repair_round_trips_over_the_wire() {
+        let r = router();
+        let body = br#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
+        let planned = r.handle(&request("POST", "/plan", body));
+        assert_eq!(planned.status, 200);
+        let plan_json = std::str::from_utf8(&planned.body).unwrap();
+        let repair_body = format!(
+            r#"{{"model":"VGG19","iterations":30,"max_groups":10,"seed":3,"faults":"kill:0.0","plan":{plan_json}}}"#
+        );
+        let repaired = r.handle(&request("POST", "/repair", repair_body.as_bytes()));
+        assert_eq!(
+            repaired.status,
+            200,
+            "{:?}",
+            String::from_utf8_lossy(&repaired.body)
+        );
+        let plan = DeploymentPlan::decode(std::str::from_utf8(&repaired.body).unwrap()).unwrap();
+        assert_eq!(plan.backend, "repair");
+        assert!(plan.topology_name.contains("kill:0.0"), "{}", plan.topology_name);
+
+        // Malformed repairs are 400, wrong-model priors are 422.
+        assert_eq!(r.handle(&request("POST", "/repair", b"not json")).status, 400);
+        let no_faults =
+            format!(r#"{{"model":"VGG19","iterations":30,"max_groups":10,"plan":{plan_json}}}"#);
+        assert_eq!(r.handle(&request("POST", "/repair", no_faults.as_bytes())).status, 400);
+        let bad_spec = format!(
+            r#"{{"model":"VGG19","iterations":30,"max_groups":10,"faults":"melt:7","plan":{plan_json}}}"#
+        );
+        assert_eq!(r.handle(&request("POST", "/repair", bad_spec.as_bytes())).status, 400);
+        let wrong_model = format!(
+            r#"{{"model":"AlexNet","iterations":30,"max_groups":10,"faults":"kill:0.0","plan":{plan_json}}}"#
+        );
+        assert_eq!(
+            r.handle(&request("POST", "/repair", wrong_model.as_bytes())).status,
+            422
+        );
+    }
+
+    #[test]
+    fn expired_deadline_payload_maps_to_504_only_at_zero_iterations() {
+        // Exercise the mapping on a real plan with synthetic timeout
+        // telemetry (driving a wall clock to expire at exactly iteration
+        // zero would be a race, not a test).
+        let r = router();
+        let body = br#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
+        let resp = r.handle(&request("POST", "/plan", body));
+        assert_eq!(resp.status, 200);
+        let mut plan =
+            DeploymentPlan::decode(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(plan_payload(&plan).0, 200, "no timeout row, no 504");
+
+        plan.telemetry.metrics.push(("timed_out".to_string(), 1.0));
+        assert_eq!(plan_payload(&plan).0, 200, "partial search still serves its best");
+        plan.telemetry.iterations = 0;
+        let (status, body) = plan_payload(&plan);
+        assert_eq!(status, 504, "{body}");
     }
 
     #[test]

@@ -241,6 +241,7 @@ fn every_baseline_generator_runs_on_preset_topologies() {
             apply_sfb: false,
             profile_noise: 0.0,
             parallelism: Default::default(),
+            deadline_ms: None,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
@@ -302,6 +303,7 @@ fn workers_one_is_byte_identical_to_the_sequential_engine() {
         apply_sfb: false,
         profile_noise: 0.0,
         parallelism: Default::default(),
+        deadline_ms: None,
     };
     let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
     let actions = enumerate_actions(&topo);
@@ -327,6 +329,7 @@ fn workers_one_is_byte_identical_to_the_sequential_engine() {
         Parallelism::default(),
         true,
         false,
+        None,
     );
     assert_eq!(par.result.best, seq.best);
     assert_eq!(par.result.best_time.to_bits(), seq.best_time.to_bits());

@@ -1,0 +1,219 @@
+//! Fault-tolerance integration: seeded fault traces always yield sound
+//! residual topologies, plan repair on a degraded cluster avoids dead
+//! hardware deterministically, and the serving daemon survives a
+//! panicking backend with a clean `500` (chaos-style, over real TCP).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use tag::api::{
+    BackendOutcome, PlanRequest, Planner, SearchBackend, SearchContext, SharedPlanner,
+};
+use tag::cluster::presets::{multi_rack, nvlink_island, testbed};
+use tag::cluster::{generate_trace, FaultSpec};
+use tag::models;
+use tag::serve::{ServeConfig, Server};
+
+#[test]
+fn seeded_fault_traces_yield_sound_residuals() {
+    for topo in [testbed(), multi_rack(), nvlink_island()] {
+        let specs = generate_trace(&topo, 42, 12);
+        assert!(!specs.is_empty(), "no specs drawn for {}", topo.name);
+        for spec in &specs {
+            // The grammar round-trips.
+            assert_eq!(&FaultSpec::parse(&spec.encode()).unwrap(), spec);
+
+            let residual = spec.apply(&topo).expect("trace specs always apply");
+            let t = &residual.topology;
+            t.validate().unwrap_or_else(|e| panic!("{}: {e}", t.name));
+            assert_eq!(
+                t.num_devices(),
+                topo.num_devices() - residual.dead_devices.len(),
+                "{}",
+                t.name
+            );
+
+            // Dense renumbering: the map covers every residual group
+            // exactly once.
+            let mut seen = vec![false; t.num_groups()];
+            for &m in residual.group_map.iter().flatten() {
+                assert!(!seen[m], "{}: residual group {m} mapped twice", t.name);
+                seen[m] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{}: unmapped residual group", t.name);
+
+            // Sound routes: every surviving group pair keeps a positive,
+            // symmetric bottleneck bandwidth (a disconnected residual is
+            // rejected by `apply`, never returned).
+            for i in 0..t.num_groups() {
+                for j in 0..t.num_groups() {
+                    if i == j {
+                        continue;
+                    }
+                    let bw = t.inter_bw_gbps[i][j];
+                    assert!(bw > 0.0, "{}: bw[{i}][{j}] = {bw}", t.name);
+                    assert!(
+                        (bw - t.inter_bw_gbps[j][i]).abs() < 1e-9,
+                        "{}: asymmetric residual matrix",
+                        t.name
+                    );
+                }
+            }
+
+            // The all-groups placement mask survives remapping into the
+            // residual's (smaller) group space.
+            let full = u16::MAX >> (16 - topo.num_groups());
+            let mapped = residual.remap_mask(full);
+            assert!(mapped != 0, "{}: full mask remapped to nothing", t.name);
+            assert_eq!(u32::from(mapped) >> t.num_groups(), 0, "{}", t.name);
+        }
+        // Determinism: the same seed draws the same trace.
+        assert_eq!(generate_trace(&topo, 42, 12), specs);
+    }
+}
+
+#[test]
+fn repair_on_multi_rack_avoids_dead_hardware_and_is_deterministic() {
+    let topo = multi_rack();
+    let model = models::by_name("VGG19", 0.25).unwrap();
+    let request = PlanRequest::new(model, topo.clone()).budget(60, 10).seed(7);
+    let planner = Planner::builder().build();
+    let prior = planner.plan(&request).expect("prior plan").plan;
+
+    let faults = FaultSpec::parse("kill:0.0").unwrap();
+    let out = planner.repair(&request, &prior, &faults).expect("repair");
+    let plan = &out.plan;
+    assert_eq!(plan.backend, "repair");
+    assert!(plan.topology_name.contains("kill:0.0"), "{}", plan.topology_name);
+    assert!(plan.times.speedup >= 1.0 - 1e-9, "repair lost to residual DP");
+
+    // Every placement mask stays inside the residual's group space —
+    // nothing is placed on (or beyond) dead hardware.
+    let residual = faults.apply(&topo).unwrap();
+    let ng = residual.topology.num_groups();
+    for a in plan.strategy.slots.iter().flatten() {
+        assert!(a.mask != 0, "empty placement mask");
+        assert_eq!(u32::from(a.mask) >> ng, 0, "mask {:#b} escapes {ng} groups", a.mask);
+    }
+
+    // Warm start: a feasible surviving strategy bounds the repair from
+    // above (the incumbent is only ever replaced by something better).
+    if let Some(warm) = out.warm_time {
+        assert!(
+            plan.times.final_time <= warm + 1e-12,
+            "repair ({}) worse than its own warm start ({warm})",
+            plan.times.final_time
+        );
+    }
+
+    // Determinism: same (request, prior, faults) → byte-identical plan.
+    let again = planner.repair(&request, &prior, &faults).expect("repair again");
+    assert_eq!(again.plan.encode(), plan.encode());
+}
+
+/// A backend that always panics mid-search — the chaos probe for the
+/// daemon's panic isolation.
+struct PanicBackend;
+
+impl SearchBackend for PanicBackend {
+    fn name(&self) -> &'static str {
+        "panic-injector"
+    }
+
+    fn fingerprint_token(&self) -> u64 {
+        0xdead
+    }
+
+    fn search(&self, _ctx: &SearchContext<'_>) -> BackendOutcome {
+        panic!("injected backend panic (chaos test)")
+    }
+}
+
+/// One-shot HTTP client: returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut raw = format!("{method} {path} HTTP/1.1\r\n");
+    if let Some(body) = body {
+        raw.push_str(&format!("content-length: {}\r\n", body.len()));
+    }
+    raw.push_str("\r\n");
+    if let Some(body) = body {
+        raw.push_str(body);
+    }
+    stream.write_all(raw.as_bytes()).expect("send");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("recv");
+    let (head, body) = response.split_once("\r\n\r\n").expect("framed response");
+    let status: u16 = head.split(' ').nth(1).and_then(|s| s.parse().ok()).expect("status");
+    (status, body.to_string())
+}
+
+#[test]
+fn serve_survives_a_panicking_backend_with_500s() {
+    let config = ServeConfig {
+        port: 0,
+        workers: 2,
+        queue_depth: 8,
+        read_timeout: Duration::from_secs(10),
+        ..ServeConfig::default()
+    };
+    let planner = SharedPlanner::builder().backend(PanicBackend).build();
+    let server = Server::bind(config, planner).expect("bind");
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().expect("serve"));
+
+    let body = r#"{"model":"VGG19","iterations":10,"max_groups":8}"#;
+    let (status, text) = http(addr, "POST", "/plan", Some(body));
+    assert_eq!(status, 500, "{text}");
+
+    // The worker survived: the daemon keeps answering and reports the
+    // caught panic in both readiness and metrics.
+    let (status, health) = http(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200, "{health}");
+    assert!(health.contains("\"status\":\"ok\""), "{health}");
+    assert!(health.contains("\"panics_total\":1"), "{health}");
+
+    let (status, text) = http(addr, "POST", "/plan", Some(body));
+    assert_eq!(status, 500, "second panic also isolated: {text}");
+
+    let (status, metrics) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(metrics.contains("tag_panics_total 2"), "{metrics}");
+    assert!(metrics.contains("tag_responses_total{status=\"500\"} 2"), "{metrics}");
+
+    let (status, _) = http(addr, "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    handle.join().unwrap();
+}
+
+#[test]
+fn repair_round_trips_through_the_daemon() {
+    let config = ServeConfig {
+        port: 0,
+        workers: 2,
+        queue_depth: 8,
+        read_timeout: Duration::from_secs(10),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(config, SharedPlanner::builder().build()).expect("bind");
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().expect("serve"));
+
+    let body = r#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
+    let (status, plan_json) = http(addr, "POST", "/plan", Some(body));
+    assert_eq!(status, 200, "{plan_json}");
+    let repair_body = format!(
+        r#"{{"model":"VGG19","iterations":30,"max_groups":10,"seed":3,"faults":"kill:0.0","plan":{plan_json}}}"#
+    );
+    let (status, repaired) = http(addr, "POST", "/repair", Some(&repair_body));
+    assert_eq!(status, 200, "{repaired}");
+    let plan = tag::api::DeploymentPlan::decode(&repaired).expect("repaired plan JSON");
+    assert_eq!(plan.backend, "repair");
+    assert!(plan.topology_name.contains("kill:0.0"), "{}", plan.topology_name);
+
+    let (status, _) = http(addr, "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    handle.join().unwrap();
+}

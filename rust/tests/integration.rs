@@ -17,6 +17,7 @@ fn cfg(iters: usize, seed: u64) -> SearchConfig {
         apply_sfb: true,
         profile_noise: 0.0,
         parallelism: Default::default(),
+        deadline_ms: None,
     }
 }
 

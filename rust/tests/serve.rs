@@ -99,7 +99,10 @@ const SMALL_PLAN: &str = r#"{"model":"VGG19","iterations":30,"max_groups":10,"se
 fn health_metrics_and_unknown_routes() {
     let (addr, handle) = start_server(2, 16);
     let (status, _, body) = http(addr, "GET", "/healthz", None);
-    assert_eq!((status, body.as_str()), (200, "ok\n"));
+    assert_eq!(status, 200);
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    assert!(body.contains("\"workers\":2"), "{body}");
+    assert!(body.contains("\"panics_total\":0"), "{body}");
     let (status, head, _) = http(addr, "GET", "/plan", None);
     assert_eq!(status, 405);
     assert!(head.contains("allow: post"), "{head}");
