@@ -1,0 +1,70 @@
+//! Fleet mode walkthrough: a multi-tenant job stream on an
+//! oversubscribed cluster, replayed under both scheduling policies.
+//!
+//!   cargo run --release --example fleet_replay [-- jobs=12 seed=7 iters=16]
+//!
+//! The scenario is the one the fleet scheduler exists for: `multi_rack`
+//! (4 racks x 3 machines, 32 GPUs, 3.75:1 spine oversubscription)
+//! receives a seeded Poisson stream of 1-8 GPU training jobs.  The
+//! **FIFO** baseline grants every job the whole cluster and serializes;
+//! the **best-fit** policy leases each job a topology-aware residual
+//! slice (tightest PCIe-local group first) and runs tenants
+//! concurrently, backfilling small jobs past a stuck head-of-queue.
+//! Every admitted job is planned by the same `tag::api::Planner` on
+//! exactly the devices it holds, so schedule quality and placement
+//! quality come from one model of the hardware.
+//!
+//! Both replays run on a virtual clock and are byte-deterministic for a
+//! fixed seed; expect best-fit to win makespan, mean JCT and
+//! utilization by a wide margin on this oversubscribed preset.
+
+use tag::api::SharedPlanner;
+use tag::cluster::presets::multi_rack;
+use tag::fleet::{generate_jobs, replay, FleetConfig, Policy};
+
+fn arg(name: &str, default: usize) -> usize {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}="))?.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let topo = multi_rack();
+    let jobs = generate_jobs(&topo, arg("seed", 7) as u64, arg("jobs", 12), 15.0);
+    println!(
+        "fleet replay: {} jobs on {} ({} GPUs over {} machines)\n",
+        jobs.len(),
+        topo.name,
+        topo.num_devices(),
+        topo.num_groups()
+    );
+
+    let planner = SharedPlanner::builder().build();
+    let mut reports = Vec::new();
+    for policy in [Policy::Fifo, Policy::BestFit] {
+        let cfg = FleetConfig {
+            policy,
+            iterations: arg("iters", 16),
+            max_groups: 10,
+            ..FleetConfig::default()
+        };
+        let report = replay(&planner, &topo, &jobs, &cfg).expect("replay");
+        print!("{}", report.render());
+        println!();
+        reports.push(report);
+    }
+
+    let (fifo, best) = (&reports[0], &reports[1]);
+    println!(
+        "best-fit vs fifo: makespan {:.2}x better, mean jct {:.2}x better, \
+         utilization {:.3} -> {:.3}",
+        fifo.makespan_s / best.makespan_s.max(1e-12),
+        fifo.mean_jct_s / best.mean_jct_s.max(1e-12),
+        fifo.utilization,
+        best.utilization
+    );
+    assert!(
+        best.makespan_s <= fifo.makespan_s,
+        "residual-aware packing should never lose to whole-cluster FIFO here"
+    );
+}

@@ -1,0 +1,42 @@
+//! Bench: fleet replay throughput — FIFO whole-cluster baseline vs
+//! residual-aware best-fit on the oversubscribed `multi_rack` preset.
+//! Reports both the wall time of the replay itself (scheduler + per-job
+//! searches) and the *virtual* schedule quality each policy produced
+//! (makespan / mean JCT / utilization), since the latter is the number
+//! the policy exists to move.
+
+use tag::api::SharedPlanner;
+use tag::cluster::presets::multi_rack;
+use tag::fleet::{generate_jobs, replay, FleetConfig, Policy};
+use tag::util::bench;
+
+fn main() {
+    let topo = multi_rack();
+    let jobs = generate_jobs(&topo, 7, 12, 15.0);
+    println!(
+        "== fleet replay: {} jobs on {} ({} GPUs) ==",
+        jobs.len(),
+        topo.name,
+        topo.num_devices()
+    );
+    for policy in [Policy::Fifo, Policy::BestFit] {
+        let cfg = FleetConfig { policy, iterations: 16, max_groups: 10, ..FleetConfig::default() };
+        // Fresh planner per measured run: a warm cache would turn the
+        // second policy's searches into lookups and skew the wall time.
+        let wall = bench(&format!("fleet-replay[{}]", policy.name()), 2.0, || {
+            let planner = SharedPlanner::builder().build();
+            let report = replay(&planner, &topo, &jobs, &cfg).expect("replay");
+            assert_eq!(report.jobs.len(), jobs.len());
+        });
+        let planner = SharedPlanner::builder().build();
+        let report = replay(&planner, &topo, &jobs, &cfg).expect("replay");
+        println!(
+            "  -> {}: wall {:.3}s  makespan {:.1}s  mean jct {:.1}s  utilization {:.3}\n",
+            policy.name(),
+            wall,
+            report.makespan_s,
+            report.mean_jct_s,
+            report.utilization
+        );
+    }
+}

@@ -36,12 +36,26 @@ pub struct PlanKey {
     pub config: u64,
 }
 
-/// Hit/miss counters exposed for serving dashboards.
+/// Hit/miss counters plus generation occupancy, exposed for serving
+/// dashboards (`tag_plan_cache_*` in `GET /metrics`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Total live entries (`hot_entries + cold_entries`).
     pub entries: usize,
+    /// Entries in the current (hot) generation.
+    pub hot_entries: usize,
+    /// Entries surviving from the previous (cold) generation.
+    pub cold_entries: usize,
+    /// Per-generation entry cap (the cache holds at most about
+    /// `2 * capacity` plans).
+    pub capacity: usize,
+    /// Cold-generation hits promoted back into hot (lifetime count).
+    pub promotions: u64,
+    /// Generation turnovers: hot filled and became cold (lifetime
+    /// count).
+    pub rotations: u64,
 }
 
 impl CacheStats {
@@ -54,6 +68,16 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Live entries over the two-generation bound `2 * capacity`;
+    /// 0.0 for a degenerate zero capacity.
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.entries as f64 / (2 * self.capacity) as f64
+        }
+    }
 }
 
 /// Fingerprint-keyed deployment-plan cache with two-generation
@@ -64,6 +88,8 @@ pub struct PlanCache {
     capacity: usize,
     hits: u64,
     misses: u64,
+    promotions: u64,
+    rotations: u64,
 }
 
 impl Default for PlanCache {
@@ -82,6 +108,8 @@ impl PlanCache {
             capacity: capacity.max(1),
             hits: 0,
             misses: 0,
+            promotions: 0,
+            rotations: 0,
         }
     }
 
@@ -94,6 +122,7 @@ impl PlanCache {
         }
         if let Some(plan) = self.cold.remove(key) {
             self.hits += 1;
+            self.promotions += 1;
             // Promotion does not rotate (that would drop the very
             // generation being read); `insert` re-establishes the bound
             // on its next rotation.
@@ -111,6 +140,7 @@ impl PlanCache {
     pub fn insert(&mut self, key: PlanKey, plan: DeploymentPlan) {
         if self.hot.len() >= self.capacity && !self.hot.contains_key(&key) {
             self.cold = std::mem::take(&mut self.hot);
+            self.rotations += 1;
         }
         self.cold.remove(&key);
         self.hot.insert(key, plan);
@@ -121,6 +151,8 @@ impl PlanCache {
         self.cold.clear();
         self.hits = 0;
         self.misses = 0;
+        self.promotions = 0;
+        self.rotations = 0;
     }
 
     pub fn len(&self) -> usize {
@@ -132,7 +164,16 @@ impl PlanCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        CacheStats { hits: self.hits, misses: self.misses, entries: self.len() }
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            entries: self.len(),
+            hot_entries: self.hot.len(),
+            cold_entries: self.cold.len(),
+            capacity: self.capacity,
+            promotions: self.promotions,
+            rotations: self.rotations,
+        }
     }
 }
 
@@ -251,7 +292,28 @@ mod tests {
         let _ = c.get(&key(1));
         c.clear();
         assert!(c.is_empty());
-        assert_eq!(c.stats(), CacheStats::default());
+        // Everything except the structural capacity resets.
+        assert_eq!(c.stats(), CacheStats { capacity: 4, ..CacheStats::default() });
         assert_eq!(c.stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn generation_stats_track_occupancy_promotions_and_rotations() {
+        let mut c = PlanCache::new(2);
+        assert_eq!(c.stats().occupancy(), 0.0);
+        c.insert(key(1), sample_plan());
+        c.insert(key(2), sample_plan());
+        let s = c.stats();
+        assert_eq!((s.hot_entries, s.cold_entries, s.capacity), (2, 0, 2));
+        assert!((s.occupancy() - 0.5).abs() < 1e-12);
+        c.insert(key(3), sample_plan()); // rotates: cold={1,2}, hot={3}
+        let s = c.stats();
+        assert_eq!((s.hot_entries, s.cold_entries, s.rotations), (1, 2, 1));
+        assert!((s.occupancy() - 0.75).abs() < 1e-12);
+        let _ = c.get(&key(1)); // cold hit promotes
+        let s = c.stats();
+        assert_eq!((s.hot_entries, s.cold_entries, s.promotions), (2, 1, 1));
+        c.clear();
+        assert_eq!((c.stats().promotions, c.stats().rotations), (0, 0));
     }
 }

@@ -39,10 +39,12 @@
 //! and benches: every returned spec is guaranteed to apply successfully
 //! to the topology it was drawn for.
 
-use super::linkgraph::NodeKind;
-use super::{DeviceGroup, DeviceId, Topology};
+use super::residual::{self, ResidualSpec};
+use super::{DeviceId, Topology};
 use crate::util::error::Result;
 use crate::util::Rng;
+
+pub use super::residual::Residual;
 
 /// One injected failure.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -147,11 +149,10 @@ impl FaultSpec {
         let graph = topo.link_graph();
         let num_links = graph.num_links();
 
-        // Validate targets and collect per-kind effects up front.
-        let mut dead = vec![false; topo.num_devices()];
-        let mut dead_devices: Vec<DeviceId> = Vec::new();
-        let mut severed = vec![false; num_links];
-        let mut degrade = vec![1.0f64; num_links];
+        // Validate targets and lower the faults onto a residual spec;
+        // the rebuild itself is the shared `cluster::residual` path
+        // (also used by the fleet lease layer).
+        let mut spec = ResidualSpec::clean(topo);
         let mut link_touched = vec![false; num_links];
         for f in &self.faults {
             match *f {
@@ -164,15 +165,15 @@ impl FaultSpec {
                         topo.name
                     );
                     let flat = topo.device_flat_index(d);
-                    crate::ensure!(!dead[flat], "device ({}, {}) killed twice", d.group, d.idx);
-                    dead[flat] = true;
-                    dead_devices.push(d);
+                    let twice = spec.dead[flat];
+                    crate::ensure!(!twice, "device ({}, {}) killed twice", d.group, d.idx);
+                    spec.dead[flat] = true;
                 }
                 Fault::SeverLink(l) => {
                     crate::ensure!(l < num_links, "link {l} is not a link of `{}`", topo.name);
                     crate::ensure!(!link_touched[l], "link {l} targeted by two faults");
                     link_touched[l] = true;
-                    severed[l] = true;
+                    spec.severed[l] = true;
                 }
                 Fault::DegradeLink { link, factor } => {
                     crate::ensure!(link < num_links, "link {link} is not a link of `{}`", topo.name);
@@ -182,175 +183,13 @@ impl FaultSpec {
                         "degrade factor must be in (0, 1), got {factor}"
                     );
                     link_touched[link] = true;
-                    degrade[link] = factor;
+                    spec.degrade[link] = factor;
                 }
-            }
-        }
-        dead_devices.sort();
-
-        // Survivor counts and the old-group -> new-group mapping.
-        let mut survivors: Vec<usize> = topo.groups.iter().map(|g| g.count).collect();
-        for d in &dead_devices {
-            survivors[d.group] -= 1;
-        }
-        crate::ensure!(
-            survivors.iter().any(|&c| c > 0),
-            "faults kill every device of `{}` — nothing left to plan on",
-            topo.name
-        );
-        let mut group_map: Vec<Option<usize>> = Vec::with_capacity(topo.num_groups());
-        let mut next = 0;
-        for &c in &survivors {
-            if c > 0 {
-                group_map.push(Some(next));
-                next += 1;
-            } else {
-                group_map.push(None);
             }
         }
 
         let name = format!("{}+{}", topo.name, self.encode());
-        let topology = if topo.is_routed() {
-            self.apply_routed(topo, &name, &dead, &severed, &degrade, &survivors, &group_map)?
-        } else {
-            self.apply_flat(topo, &name, &severed, &degrade, &survivors)?
-        };
-        Ok(Residual { topology, group_map, dead_devices })
-    }
-
-    /// Routed rebuild: drop dead devices (and their incident links) and
-    /// severed links, scale degraded links, keep every switch, renumber
-    /// the survivors densely in the original `(group, idx)` order.
-    #[allow(clippy::too_many_arguments)]
-    fn apply_routed(
-        &self,
-        topo: &Topology,
-        name: &str,
-        dead: &[bool],
-        severed: &[bool],
-        degrade: &[f64],
-        survivors: &[usize],
-        group_map: &[Option<usize>],
-    ) -> Result<Topology> {
-        let graph = topo.link_graph();
-        let mut b = super::linkgraph::LinkGraphBuilder::default();
-        let mut node_map = vec![usize::MAX; graph.num_nodes()];
-        let mut next_idx = vec![0usize; topo.num_groups()];
-        for (nid, node) in graph.nodes().iter().enumerate() {
-            match *node {
-                NodeKind::Device(d) => {
-                    if dead[topo.device_flat_index(d)] {
-                        continue;
-                    }
-                    let new_group = group_map[d.group]
-                        .expect("surviving device in a group with no survivors");
-                    let idx = next_idx[d.group];
-                    next_idx[d.group] += 1;
-                    node_map[nid] = b.add_device(DeviceId { group: new_group, idx });
-                }
-                NodeKind::Switch { level } => {
-                    node_map[nid] = b.add_switch(level);
-                }
-            }
-        }
-        for (lid, l) in graph.links().iter().enumerate() {
-            if severed[lid] || node_map[l.a] == usize::MAX || node_map[l.b] == usize::MAX {
-                continue;
-            }
-            b.link(node_map[l.a], node_map[l.b], l.bw_gbps * degrade[lid], l.latency_s, l.kind);
-        }
-        let groups: Vec<DeviceGroup> = topo
-            .groups
-            .iter()
-            .zip(survivors)
-            .filter(|(_, &c)| c > 0)
-            .map(|(g, &c)| DeviceGroup { gpu: g.gpu, count: c, intra_bw_gbps: g.intra_bw_gbps })
-            .collect();
-        Topology::routed(name, groups, b.build())
-    }
-
-    /// Flat rebuild: link faults act on the fabric the link belongs to
-    /// (the matrix has no individual wires), kills shrink group counts.
-    fn apply_flat(
-        &self,
-        topo: &Topology,
-        name: &str,
-        severed: &[bool],
-        degrade: &[f64],
-        survivors: &[usize],
-    ) -> Result<Topology> {
-        let graph = topo.link_graph();
-        let mut inter = topo.inter_bw_gbps.clone();
-        let mut intra: Vec<f64> = topo.groups.iter().map(|g| g.intra_bw_gbps).collect();
-        for (lid, l) in graph.links().iter().enumerate() {
-            if severed[lid] {
-                crate::bail!(
-                    "flat topology `{}` has uniform group fabrics; severing clique link \
-                     {lid} is not representable — kill a device or degrade the fabric \
-                     instead",
-                    topo.name
-                );
-            }
-            if degrade[lid] == 1.0 {
-                continue;
-            }
-            let (da, db) = match (graph.nodes()[l.a], graph.nodes()[l.b]) {
-                (NodeKind::Device(a), NodeKind::Device(b)) => (a, b),
-                _ => unreachable!("clique graphs hold only device nodes"),
-            };
-            if da.group == db.group {
-                intra[da.group] *= degrade[lid];
-            } else {
-                inter[da.group][db.group] *= degrade[lid];
-                inter[db.group][da.group] *= degrade[lid];
-            }
-        }
-        let groups: Vec<DeviceGroup> = topo
-            .groups
-            .iter()
-            .zip(survivors)
-            .zip(&intra)
-            .filter(|((_, &c), _)| c > 0)
-            .map(|((g, &c), &bw)| DeviceGroup { gpu: g.gpu, count: c, intra_bw_gbps: bw })
-            .collect();
-        let keep: Vec<usize> =
-            (0..topo.num_groups()).filter(|&gi| survivors[gi] > 0).collect();
-        let inter: Vec<Vec<f64>> = keep
-            .iter()
-            .map(|&i| keep.iter().map(|&j| inter[i][j]).collect())
-            .collect();
-        Topology::try_new(name, groups, inter)
-    }
-}
-
-/// The validated outcome of [`FaultSpec::apply`]: the rebuilt topology
-/// plus the bookkeeping plan repair needs to transplant a pre-fault
-/// strategy onto the post-fault cluster.
-#[derive(Clone, Debug)]
-pub struct Residual {
-    /// The degraded topology, rebuilt and re-validated from scratch.
-    pub topology: Topology,
-    /// Old group index → new group index; `None` when every device of
-    /// the old group died.
-    pub group_map: Vec<Option<usize>>,
-    /// The killed devices, in old coordinates, sorted.
-    pub dead_devices: Vec<DeviceId>,
-}
-
-impl Residual {
-    /// Translate a pre-fault placement bitmask into residual
-    /// coordinates.  Bits of groups that died entirely are dropped; a
-    /// result of 0 means nothing of the placement survived.
-    pub fn remap_mask(&self, mask: u16) -> u16 {
-        let mut out = 0u16;
-        for (old, new) in self.group_map.iter().enumerate() {
-            if mask & (1 << old) != 0 {
-                if let Some(n) = new {
-                    out |= 1 << n;
-                }
-            }
-        }
-        out
+        residual::build(topo, &name, &spec)
     }
 }
 
@@ -396,6 +235,7 @@ pub fn generate_trace(topo: &Topology, seed: u64, n: usize) -> Vec<FaultSpec> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::linkgraph::NodeKind;
     use crate::cluster::presets::{multi_rack, sfb_pair, testbed};
 
     #[test]

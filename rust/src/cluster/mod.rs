@@ -29,14 +29,20 @@
 //! generalization experiments.  [`faults`] injects failures (killed
 //! devices, severed or degraded links) and rebuilds the *residual*
 //! topology through these same constructors, so a degraded cluster is
-//! re-validated end to end before anything is planned onto it.
+//! re-validated end to end before anything is planned onto it.  The
+//! rebuild itself lives in [`residual`] — one deterministic
+//! dead-node-removal / link-rebuild / re-route path shared by fault
+//! injection and the [`crate::fleet`] lease layer, so the two can
+//! never drift apart.
 
 pub mod faults;
 pub mod generator;
 pub mod linkgraph;
 pub mod presets;
+pub mod residual;
 
-pub use faults::{generate_trace, Fault, FaultSpec, Residual};
+pub use faults::{generate_trace, Fault, FaultSpec};
+pub use residual::{Residual, ResidualSpec};
 pub use generator::{random_hierarchical_topology, random_topology};
 pub use linkgraph::{Link, LinkGraph, LinkGraphBuilder, LinkKind, NodeKind, Route, RouteTable};
 pub use presets::{cloud, homogeneous, multi_rack, nvlink_island, sfb_pair, testbed};

@@ -1,0 +1,320 @@
+//! Shared residual-topology construction: rebuild a [`Topology`]
+//! *without* a set of devices (and, for routed topologies, without or
+//! with degraded links), through the ordinary constructors so every
+//! invariant — route coverage, uniform group fabrics, the derived
+//! matrix view — is re-checked from scratch.
+//!
+//! Two subsystems remove hardware from a topology and must agree on
+//! the result bit for bit:
+//!
+//! * [`crate::cluster::faults`] — hardware *broke*: a [`FaultSpec`]
+//!   (kill/sever/degrade) is validated and lowered onto a
+//!   [`ResidualSpec`] here.
+//! * [`crate::fleet`] — hardware is *taken*: the lease layer removes
+//!   devices held by (or not granted to) running jobs to materialize
+//!   free-capacity views and per-job slice topologies.
+//!
+//! Keeping one builder means fault repair and leasing cannot drift
+//! apart: both see the same dense renumbering (survivors keep their
+//! relative `(group, idx)` order, empty groups drop out), the same
+//! link rebuild (switches always survive; a link survives iff both
+//! endpoints do), and the same [`Residual`] bookkeeping
+//! (`group_map`, [`Residual::remap_mask`]).
+//!
+//! Determinism contract: node and link iteration order of the source
+//! graph is preserved, so a [`build`] that removes *nothing*
+//! reproduces the base topology's structural fingerprint exactly
+//! (names are display-only and excluded from fingerprints) — the
+//! lease/release restoration property in `rust/tests/fleet.rs` rests
+//! on this.
+//!
+//! [`FaultSpec`]: crate::cluster::faults::FaultSpec
+
+use super::linkgraph::NodeKind;
+use super::{DeviceGroup, DeviceId, Topology};
+use crate::util::error::Result;
+
+/// What to remove or rescale when rebuilding `topo`: per-flat-device
+/// removal flags plus per-link sever/degrade vectors.  Built against
+/// one topology; applying it to another is a length-mismatch error.
+#[derive(Clone, Debug)]
+pub struct ResidualSpec {
+    /// One flag per flat device index; `true` removes the device and
+    /// every link incident to it.
+    pub dead: Vec<bool>,
+    /// One flag per link id; `true` removes the link (routed
+    /// topologies only — a flat clique cannot represent a missing
+    /// wire).
+    pub severed: Vec<bool>,
+    /// One factor per link id in `(0, 1]`; `1.0` leaves the link
+    /// untouched.
+    pub degrade: Vec<f64>,
+}
+
+impl ResidualSpec {
+    /// A spec that removes and rescales nothing.
+    pub fn clean(topo: &Topology) -> Self {
+        let num_links = topo.link_graph().num_links();
+        Self {
+            dead: vec![false; topo.num_devices()],
+            severed: vec![false; num_links],
+            degrade: vec![1.0; num_links],
+        }
+    }
+
+    /// A pure device-removal spec: `remove[flat] == true` drops that
+    /// device, all links survive at full bandwidth.
+    pub fn remove_devices(topo: &Topology, remove: &[bool]) -> Self {
+        let mut spec = Self::clean(topo);
+        spec.dead.copy_from_slice(remove);
+        spec
+    }
+}
+
+/// The validated outcome of a residual rebuild ([`build`],
+/// [`FaultSpec::apply`]): the shrunken topology plus the bookkeeping
+/// that plan repair and the fleet lease layer need to translate
+/// old-coordinate placements onto the new cluster.
+///
+/// [`FaultSpec::apply`]: crate::cluster::faults::FaultSpec::apply
+#[derive(Clone, Debug)]
+pub struct Residual {
+    /// The rebuilt topology, re-validated from scratch.
+    pub topology: Topology,
+    /// Old group index → new group index; `None` when every device of
+    /// the old group was removed.
+    pub group_map: Vec<Option<usize>>,
+    /// The removed devices, in old coordinates, sorted.
+    pub dead_devices: Vec<DeviceId>,
+}
+
+impl Residual {
+    /// Translate an old-coordinate placement bitmask into residual
+    /// coordinates.  Bits of groups that vanished entirely are
+    /// dropped; a result of 0 means nothing of the placement
+    /// survived.
+    pub fn remap_mask(&self, mask: u16) -> u16 {
+        let mut out = 0u16;
+        for (old, new) in self.group_map.iter().enumerate() {
+            if mask & (1 << old) != 0 {
+                if let Some(n) = new {
+                    out |= 1 << n;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Rebuild `topo` without the hardware `spec` removes, as `name`.
+/// Errors when the spec removes every device or when the remainder is
+/// disconnected (the route table's coverage error) — a planner must
+/// never receive a topology that would silently place work onto dead
+/// or unreachable hardware.
+pub fn build(topo: &Topology, name: &str, spec: &ResidualSpec) -> Result<Residual> {
+    let num_links = topo.link_graph().num_links();
+    crate::ensure!(
+        spec.dead.len() == topo.num_devices()
+            && spec.severed.len() == num_links
+            && spec.degrade.len() == num_links,
+        "residual spec was built for a different topology than `{}`",
+        topo.name
+    );
+
+    // Removed devices in flat order (flat index is monotone in
+    // `(group, idx)`, so this comes out sorted).
+    let mut dead_devices: Vec<DeviceId> = Vec::new();
+    let mut flat = 0usize;
+    for (gi, g) in topo.groups.iter().enumerate() {
+        for idx in 0..g.count {
+            if spec.dead[flat] {
+                dead_devices.push(DeviceId { group: gi, idx });
+            }
+            flat += 1;
+        }
+    }
+
+    // Survivor counts and the old-group -> new-group mapping.
+    let mut survivors: Vec<usize> = topo.groups.iter().map(|g| g.count).collect();
+    for d in &dead_devices {
+        survivors[d.group] -= 1;
+    }
+    crate::ensure!(
+        survivors.iter().any(|&c| c > 0),
+        "removals kill every device of `{}` — nothing left to plan on",
+        topo.name
+    );
+    let mut group_map: Vec<Option<usize>> = Vec::with_capacity(topo.num_groups());
+    let mut next = 0;
+    for &c in &survivors {
+        if c > 0 {
+            group_map.push(Some(next));
+            next += 1;
+        } else {
+            group_map.push(None);
+        }
+    }
+
+    let topology = if topo.is_routed() {
+        build_routed(topo, name, spec, &survivors, &group_map)?
+    } else {
+        build_flat(topo, name, spec, &survivors)?
+    };
+    Ok(Residual { topology, group_map, dead_devices })
+}
+
+/// Routed rebuild: drop removed devices (and their incident links) and
+/// severed links, scale degraded links, keep every switch, renumber
+/// the survivors densely in the original `(group, idx)` order.
+fn build_routed(
+    topo: &Topology,
+    name: &str,
+    spec: &ResidualSpec,
+    survivors: &[usize],
+    group_map: &[Option<usize>],
+) -> Result<Topology> {
+    let graph = topo.link_graph();
+    let mut b = super::linkgraph::LinkGraphBuilder::default();
+    let mut node_map = vec![usize::MAX; graph.num_nodes()];
+    let mut next_idx = vec![0usize; topo.num_groups()];
+    for (nid, node) in graph.nodes().iter().enumerate() {
+        match *node {
+            NodeKind::Device(d) => {
+                if spec.dead[topo.device_flat_index(d)] {
+                    continue;
+                }
+                let new_group =
+                    group_map[d.group].expect("surviving device in a group with no survivors");
+                let idx = next_idx[d.group];
+                next_idx[d.group] += 1;
+                node_map[nid] = b.add_device(DeviceId { group: new_group, idx });
+            }
+            NodeKind::Switch { level } => {
+                node_map[nid] = b.add_switch(level);
+            }
+        }
+    }
+    for (lid, l) in graph.links().iter().enumerate() {
+        if spec.severed[lid] || node_map[l.a] == usize::MAX || node_map[l.b] == usize::MAX {
+            continue;
+        }
+        b.link(node_map[l.a], node_map[l.b], l.bw_gbps * spec.degrade[lid], l.latency_s, l.kind);
+    }
+    let groups: Vec<DeviceGroup> = topo
+        .groups
+        .iter()
+        .zip(survivors)
+        .filter(|(_, &c)| c > 0)
+        .map(|(g, &c)| DeviceGroup { gpu: g.gpu, count: c, intra_bw_gbps: g.intra_bw_gbps })
+        .collect();
+    Topology::routed(name, groups, b.build())
+}
+
+/// Flat rebuild: link effects act on the fabric the link belongs to
+/// (the matrix has no individual wires), removals shrink group counts.
+fn build_flat(
+    topo: &Topology,
+    name: &str,
+    spec: &ResidualSpec,
+    survivors: &[usize],
+) -> Result<Topology> {
+    let graph = topo.link_graph();
+    let mut inter = topo.inter_bw_gbps.clone();
+    let mut intra: Vec<f64> = topo.groups.iter().map(|g| g.intra_bw_gbps).collect();
+    for (lid, l) in graph.links().iter().enumerate() {
+        if spec.severed[lid] {
+            crate::bail!(
+                "flat topology `{}` has uniform group fabrics; severing clique link \
+                 {lid} is not representable — kill a device or degrade the fabric \
+                 instead",
+                topo.name
+            );
+        }
+        if spec.degrade[lid] == 1.0 {
+            continue;
+        }
+        let (da, db) = match (graph.nodes()[l.a], graph.nodes()[l.b]) {
+            (NodeKind::Device(a), NodeKind::Device(b)) => (a, b),
+            _ => unreachable!("clique graphs hold only device nodes"),
+        };
+        if da.group == db.group {
+            intra[da.group] *= spec.degrade[lid];
+        } else {
+            inter[da.group][db.group] *= spec.degrade[lid];
+            inter[db.group][da.group] *= spec.degrade[lid];
+        }
+    }
+    let groups: Vec<DeviceGroup> = topo
+        .groups
+        .iter()
+        .zip(survivors)
+        .zip(&intra)
+        .filter(|((_, &c), _)| c > 0)
+        .map(|((g, &c), &bw)| DeviceGroup { gpu: g.gpu, count: c, intra_bw_gbps: bw })
+        .collect();
+    let keep: Vec<usize> = (0..topo.num_groups()).filter(|&gi| survivors[gi] > 0).collect();
+    let inter: Vec<Vec<f64>> =
+        keep.iter().map(|&i| keep.iter().map(|&j| inter[i][j]).collect()).collect();
+    Topology::try_new(name, groups, inter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::fingerprint;
+    use crate::cluster::presets::{multi_rack, nvlink_island, testbed};
+
+    #[test]
+    fn empty_spec_reproduces_the_base_fingerprint() {
+        // The restoration property the fleet lease layer depends on:
+        // rebuilding with nothing removed is structurally identical to
+        // the base, for both construction paths.
+        for topo in [testbed(), nvlink_island(), multi_rack()] {
+            let r = build(&topo, "copy", &ResidualSpec::clean(&topo)).unwrap();
+            assert!(r.dead_devices.is_empty());
+            assert!(r.group_map.iter().enumerate().all(|(i, m)| *m == Some(i)));
+            assert_eq!(
+                fingerprint::topology(&r.topology),
+                fingerprint::topology(&topo),
+                "no-removal rebuild of `{}` must be bit-identical",
+                topo.name
+            );
+        }
+    }
+
+    #[test]
+    fn device_removal_renumbers_densely() {
+        let t = multi_rack();
+        let mut remove = vec![false; t.num_devices()];
+        // Remove all of group 1 (the first T4 machine) and one V100.
+        remove[t.device_flat_index(DeviceId { group: 0, idx: 1 })] = true;
+        for idx in 0..t.groups[1].count {
+            remove[t.device_flat_index(DeviceId { group: 1, idx })] = true;
+        }
+        let r = build(&t, "shrunk", &ResidualSpec::remove_devices(&t, &remove)).unwrap();
+        assert_eq!(r.topology.num_groups(), 11);
+        assert_eq!(r.topology.num_devices(), t.num_devices() - 5);
+        assert_eq!(r.group_map[0], Some(0));
+        assert_eq!(r.group_map[1], None);
+        assert_eq!(r.group_map[2], Some(1));
+        assert_eq!(r.remap_mask(0b111), 0b11);
+        assert_eq!(r.dead_devices.len(), 5);
+        r.topology.validate().unwrap();
+    }
+
+    #[test]
+    fn mismatched_spec_is_rejected() {
+        let t = testbed();
+        let err = build(&t, "x", &ResidualSpec::clean(&multi_rack())).unwrap_err();
+        assert!(err.to_string().contains("different topology"), "{err}");
+    }
+
+    #[test]
+    fn removing_everything_is_an_error() {
+        let t = testbed();
+        let remove = vec![true; t.num_devices()];
+        let err =
+            build(&t, "x", &ResidualSpec::remove_devices(&t, &remove)).unwrap_err().to_string();
+        assert!(err.contains("kill every device"), "{err}");
+    }
+}

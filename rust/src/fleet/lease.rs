@@ -1,0 +1,277 @@
+//! The lease/residual layer: one shared cluster, many concurrent
+//! holders.
+//!
+//! [`ClusterState`] tracks which devices of a base [`Topology`] are
+//! leased to running jobs.  A [`lease`](ClusterState::lease) grants an
+//! explicit device set and materializes a validated *slice* topology —
+//! the base minus every device the lease was **not** granted, rebuilt
+//! and re-routed through [`crate::cluster::residual`] (the same path
+//! fault injection uses) — for the planner to search against.
+//! [`release`](ClusterState::release) restores the capacity exactly:
+//! the bookkeeping is a per-device bitvec, so lease/release sequences
+//! cannot leave residue, and [`free_view`](ClusterState::free_view) of
+//! a fully released cluster is bit-identical to the base (the
+//! fingerprint-restoration property pinned in `rust/tests/fleet.rs`).
+//!
+//! Link capacity is handled structurally rather than fractionally: a
+//! slice keeps every switch and every link between its surviving
+//! nodes, so two leases in the same rack still share (and will each
+//! be modeled as owning) the rack uplink.  Fractional link leasing is
+//! a later refinement; device exclusivity — the invariant that
+//! concurrent leases never overlap — is enforced here.
+
+use crate::cluster::residual::{self, ResidualSpec};
+use crate::cluster::{DeviceId, Residual, Topology};
+use crate::util::error::Result;
+
+/// Opaque handle identifying one active lease.  Ids are never reused
+/// within a [`ClusterState`]'s lifetime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LeaseId(pub u64);
+
+/// A granted lease: the devices (base coordinates), the validated
+/// slice topology to plan on, and the base-group → slice-group map.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub id: LeaseId,
+    /// Granted devices in base coordinates, sorted.
+    pub devices: Vec<DeviceId>,
+    /// The leased slice: a re-routed, re-validated topology holding
+    /// exactly `devices` (plus all switches), groups renumbered
+    /// densely.
+    pub topology: Topology,
+    /// Base group index → slice group index; `None` when the lease
+    /// holds no device of that base group.
+    pub group_map: Vec<Option<usize>>,
+}
+
+/// The shared cluster: the base topology plus the live lease ledger.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    base: Topology,
+    /// One flag per flat device index; `true` = leased out.
+    leased: Vec<bool>,
+    /// Active leases in grant order (deterministic iteration).
+    active: Vec<(LeaseId, Vec<DeviceId>)>,
+    next_id: u64,
+}
+
+impl ClusterState {
+    /// Wrap a validated base topology; everything starts free.
+    pub fn new(base: Topology) -> Result<Self> {
+        base.validate()?;
+        let n = base.num_devices();
+        Ok(Self { base, leased: vec![false; n], active: Vec::new(), next_id: 0 })
+    }
+
+    pub fn base(&self) -> &Topology {
+        &self.base
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.base.num_devices()
+    }
+
+    pub fn leased_devices(&self) -> usize {
+        self.leased.iter().filter(|&&l| l).count()
+    }
+
+    pub fn free_devices(&self) -> usize {
+        self.num_devices() - self.leased_devices()
+    }
+
+    pub fn active_leases(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_free(&self, d: DeviceId) -> bool {
+        d.group < self.base.num_groups()
+            && d.idx < self.base.groups[d.group].count
+            && !self.leased[self.base.device_flat_index(d)]
+    }
+
+    /// Free-device count per base group.
+    pub fn free_per_group(&self) -> Vec<usize> {
+        let mut free = Vec::with_capacity(self.base.num_groups());
+        let mut flat = 0usize;
+        for g in &self.base.groups {
+            let mut n = 0;
+            for _ in 0..g.count {
+                if !self.leased[flat] {
+                    n += 1;
+                }
+                flat += 1;
+            }
+            free.push(n);
+        }
+        free
+    }
+
+    /// The residual view of everything currently *free*: what a new
+    /// arrival could be planned against.  With no active leases this
+    /// is exactly the base (identity `group_map`, cloned topology);
+    /// errors when every device is leased out.
+    pub fn free_view(&self) -> Result<Residual> {
+        if self.active.is_empty() {
+            return Ok(Residual {
+                topology: self.base.clone(),
+                group_map: (0..self.base.num_groups()).map(Some).collect(),
+                dead_devices: Vec::new(),
+            });
+        }
+        let name = format!("{}~free", self.base.name);
+        residual::build(&self.base, &name, &ResidualSpec::remove_devices(&self.base, &self.leased))
+    }
+
+    /// Grant a lease on an explicit device set.  Errors when the set
+    /// is empty, names hardware the base does not have, repeats a
+    /// device, overlaps an active lease, or when the requested slice
+    /// is disconnected (route coverage is re-validated on the rebuild).
+    /// On any error the ledger is unchanged.
+    pub fn lease(&mut self, devices: &[DeviceId]) -> Result<Lease> {
+        crate::ensure!(!devices.is_empty(), "empty lease request");
+        let mut granted = vec![false; self.num_devices()];
+        for &d in devices {
+            crate::ensure!(
+                d.group < self.base.num_groups() && d.idx < self.base.groups[d.group].count,
+                "lease target ({}, {}) is not a device of `{}`",
+                d.group,
+                d.idx,
+                self.base.name
+            );
+            let flat = self.base.device_flat_index(d);
+            crate::ensure!(!granted[flat], "device ({}, {}) requested twice", d.group, d.idx);
+            crate::ensure!(
+                !self.leased[flat],
+                "device ({}, {}) is already leased",
+                d.group,
+                d.idx
+            );
+            granted[flat] = true;
+        }
+        let id = LeaseId(self.next_id);
+
+        let (topology, group_map) = if devices.len() == self.num_devices() {
+            // Whole-cluster lease (the FIFO baseline): the slice *is*
+            // the base — skip the rebuild so repeat jobs share the
+            // base topology's plan-cache fingerprint.
+            (self.base.clone(), (0..self.base.num_groups()).map(Some).collect())
+        } else {
+            // The slice removes everything NOT granted.
+            let keep_out: Vec<bool> = granted.iter().map(|&g| !g).collect();
+            let name = format!("{}~lease{}", self.base.name, id.0);
+            let r = residual::build(
+                &self.base,
+                &name,
+                &ResidualSpec::remove_devices(&self.base, &keep_out),
+            )?;
+            (r.topology, r.group_map)
+        };
+
+        // Commit only after the rebuild validated.
+        let mut sorted: Vec<DeviceId> = devices.to_vec();
+        sorted.sort();
+        for &d in &sorted {
+            self.leased[self.base.device_flat_index(d)] = true;
+        }
+        self.next_id += 1;
+        self.active.push((id, sorted.clone()));
+        Ok(Lease { id, devices: sorted, topology, group_map })
+    }
+
+    /// Return a lease's devices to the free pool.  Errors on an
+    /// unknown (or already released) id.
+    pub fn release(&mut self, id: LeaseId) -> Result<Vec<DeviceId>> {
+        let pos = self
+            .active
+            .iter()
+            .position(|(l, _)| *l == id)
+            .ok_or_else(|| crate::util::error::Error::msg(format!("unknown lease {}", id.0)))?;
+        let (_, devices) = self.active.remove(pos);
+        for &d in &devices {
+            self.leased[self.base.device_flat_index(d)] = false;
+        }
+        Ok(devices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::fingerprint;
+    use crate::cluster::presets::{multi_rack, testbed};
+
+    #[test]
+    fn lease_grants_a_validated_slice_and_release_restores() {
+        let mut c = ClusterState::new(multi_rack()).unwrap();
+        let before = fingerprint::topology(&c.free_view().unwrap().topology);
+        let want = [
+            DeviceId { group: 1, idx: 0 },
+            DeviceId { group: 1, idx: 1 },
+            DeviceId { group: 1, idx: 2 },
+            DeviceId { group: 1, idx: 3 },
+        ];
+        let lease = c.lease(&want).unwrap();
+        assert_eq!(lease.topology.num_devices(), 4);
+        assert_eq!(lease.topology.num_groups(), 1);
+        assert_eq!(lease.group_map[1], Some(0));
+        assert_eq!(lease.group_map[0], None);
+        lease.topology.validate().unwrap();
+        assert_eq!((c.free_devices(), c.leased_devices(), c.active_leases()), (28, 4, 1));
+        assert!(!c.is_free(want[0]));
+
+        let returned = c.release(lease.id).unwrap();
+        assert_eq!(returned, want.to_vec());
+        assert_eq!((c.free_devices(), c.active_leases()), (32, 0));
+        let after = fingerprint::topology(&c.free_view().unwrap().topology);
+        assert_eq!(before, after, "release restores the base exactly");
+    }
+
+    #[test]
+    fn whole_cluster_lease_is_the_base_itself() {
+        let t = testbed();
+        let mut c = ClusterState::new(t.clone()).unwrap();
+        let lease = c.lease(&t.devices()).unwrap();
+        assert_eq!(
+            fingerprint::topology(&lease.topology),
+            fingerprint::topology(&t),
+            "FIFO whole-cluster slices share the base fingerprint"
+        );
+        assert_eq!(c.free_devices(), 0);
+        assert!(c.free_view().is_err(), "nothing free to view");
+        c.release(lease.id).unwrap();
+        assert_eq!(c.free_devices(), t.num_devices());
+    }
+
+    #[test]
+    fn overlapping_and_bogus_leases_are_rejected_without_side_effects() {
+        let mut c = ClusterState::new(testbed()).unwrap();
+        let d = DeviceId { group: 0, idx: 0 };
+        let held = c.lease(&[d]).unwrap();
+        assert!(c.lease(&[d]).unwrap_err().to_string().contains("already leased"));
+        assert!(c.lease(&[]).is_err());
+        assert!(c
+            .lease(&[DeviceId { group: 99, idx: 0 }])
+            .unwrap_err()
+            .to_string()
+            .contains("not a device"));
+        let twice = [DeviceId { group: 1, idx: 0 }, DeviceId { group: 1, idx: 0 }];
+        assert!(c.lease(&twice).unwrap_err().to_string().contains("twice"));
+        // Failed grants must not leak into the ledger.
+        assert_eq!((c.active_leases(), c.leased_devices()), (1, 1));
+        c.release(held.id).unwrap();
+        assert!(c.release(held.id).is_err(), "double release is an error");
+    }
+
+    #[test]
+    fn free_view_excludes_leased_devices() {
+        let mut c = ClusterState::new(testbed()).unwrap();
+        let lease = c
+            .lease(&[DeviceId { group: 0, idx: 0 }, DeviceId { group: 0, idx: 1 }])
+            .unwrap();
+        let free = c.free_view().unwrap();
+        assert_eq!(free.topology.num_devices(), c.free_devices());
+        assert_eq!(free.dead_devices, lease.devices);
+        free.topology.validate().unwrap();
+    }
+}

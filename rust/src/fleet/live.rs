@@ -1,0 +1,373 @@
+//! Live fleet tenancy for `tag serve`: one shared [`ClusterState`]
+//! behind a mutex, exposed as `POST /fleet/submit`, `POST
+//! /fleet/complete` and `GET /fleet/status`.
+//!
+//! A submission is an ordinary wire plan request (the `POST /plan`
+//! grammar) plus a `"gpus"` demand — and **without** a `"topology"`
+//! key: the whole point is that the daemon chooses the slice.  Admission
+//! picks devices with [`best_fit_devices`], leases them, and plans the
+//! model on the leased slice; the lease is held until the tenant calls
+//! `/fleet/complete` (training ran to its end) and its devices return
+//! to the pool.  When the free pool cannot fit the demand the
+//! submission is shed with `503` and a `Retry-After` scaled by how many
+//! tenants must finish first — the same backpressure idiom as the
+//! admission queue, one level up.
+//!
+//! The lock is held only for ledger mutation, never across a search:
+//! concurrent submissions plan concurrently on disjoint slices.
+
+use std::sync::Mutex;
+
+use crate::api::json::Json;
+use crate::api::{PlanRequest, SharedPlanner};
+use crate::cluster::{DeviceId, Topology};
+use crate::util::error::Result;
+
+use super::lease::{ClusterState, LeaseId};
+use super::sched::best_fit_devices;
+
+/// One admitted tenant: its lease plus what we planned for it.
+#[derive(Clone, Debug)]
+struct ActiveJob {
+    job: u64,
+    lease: LeaseId,
+    model: String,
+    gpus: usize,
+    devices: Vec<DeviceId>,
+    iter_time_s: f64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    cluster: ClusterState,
+    active: Vec<ActiveJob>,
+    submitted: u64,
+    completed: u64,
+    rejected: u64,
+    failed: u64,
+    next_job: u64,
+}
+
+/// The daemon's fleet ledger (cluster + active tenants + counters).
+pub struct FleetState {
+    inner: Mutex<Inner>,
+}
+
+/// What one submission resolved to; the router maps these to HTTP.
+#[derive(Debug)]
+pub enum SubmitOutcome {
+    /// Admitted, leased and planned: the JSON response body (`200`).
+    Planned(String),
+    /// The free pool cannot fit the demand right now (`503`).
+    Busy { reason: String, retry_after_s: u64 },
+    /// Malformed or never-satisfiable request (`400`).
+    Invalid(String),
+    /// Admitted but planning failed; the lease was rolled back (`422`).
+    Failed(String),
+}
+
+impl FleetState {
+    /// Wrap a validated base topology; everything starts free.
+    pub fn new(base: Topology) -> Result<Self> {
+        Ok(Self {
+            inner: Mutex::new(Inner {
+                cluster: ClusterState::new(base)?,
+                active: Vec::new(),
+                submitted: 0,
+                completed: 0,
+                rejected: 0,
+                failed: 0,
+                next_job: 0,
+            }),
+        })
+    }
+
+    /// Lock the ledger, recovering from a poisoned mutex (a panicking
+    /// handler thread must not take the fleet down with it — counters
+    /// are monotone and the lease bitvec is always consistent between
+    /// lock sections).
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// `POST /fleet/submit`: decode, admit, lease, plan on the slice.
+    pub fn submit(&self, planner: &SharedPlanner, body: &[u8]) -> SubmitOutcome {
+        let text = match std::str::from_utf8(body) {
+            Ok(text) => text,
+            Err(e) => return SubmitOutcome::Invalid(format!("body is not valid utf-8: {e}")),
+        };
+        let root = match Json::parse(text) {
+            Ok(root) => root,
+            Err(e) => return SubmitOutcome::Invalid(format!("bad fleet request: {e}")),
+        };
+        let members = match &root {
+            Json::Obj(members) => members,
+            _ => return SubmitOutcome::Invalid("fleet request must be a JSON object".to_string()),
+        };
+        if root.get("topology").is_some() {
+            return SubmitOutcome::Invalid(
+                "fleet submissions plan on the leased slice; remove `topology`".to_string(),
+            );
+        }
+        let gpus = match root.field("gpus").and_then(|v| v.as_usize()) {
+            Ok(gpus) if gpus >= 1 => gpus,
+            Ok(gpus) => return SubmitOutcome::Invalid(format!("gpus {gpus} must be >= 1")),
+            Err(e) => return SubmitOutcome::Invalid(format!("bad fleet request: {e}")),
+        };
+        // Everything except `gpus` is an ordinary wire plan request;
+        // reuse its decoder (which also rejects unknown fields).  The
+        // decoded default topology is discarded for the leased slice.
+        let request_obj =
+            Json::Obj(members.iter().filter(|(k, _)| k != "gpus").cloned().collect());
+        let mut request = match PlanRequest::decode(&request_obj.encode()) {
+            Ok(request) => request,
+            Err(e) => return SubmitOutcome::Invalid(format!("bad fleet request: {e}")),
+        };
+
+        // Admission: lease under the lock, plan outside it.
+        let (job, lease) = {
+            let mut inner = self.lock();
+            let total = inner.cluster.num_devices();
+            if gpus > total {
+                return SubmitOutcome::Invalid(format!(
+                    "gpus {gpus} exceeds the cluster's {total} devices"
+                ));
+            }
+            let devices = match best_fit_devices(&inner.cluster, gpus) {
+                Some(devices) => devices,
+                None => {
+                    inner.rejected += 1;
+                    let free = inner.cluster.free_devices();
+                    return SubmitOutcome::Busy {
+                        reason: format!("{gpus} GPUs requested, {free} free"),
+                        retry_after_s: 1 + inner.active.len() as u64,
+                    };
+                }
+            };
+            let lease = match inner.cluster.lease(&devices) {
+                Ok(lease) => lease,
+                Err(e) => {
+                    inner.failed += 1;
+                    return SubmitOutcome::Failed(format!("lease failed: {e}"));
+                }
+            };
+            inner.submitted += 1;
+            let job = inner.next_job;
+            inner.next_job += 1;
+            (job, lease)
+        };
+
+        request.topology = lease.topology.clone();
+        let outcome = match planner.plan(&request) {
+            Ok(outcome) => outcome,
+            Err(e) => {
+                let mut inner = self.lock();
+                let _ = inner.cluster.release(lease.id);
+                inner.failed += 1;
+                return SubmitOutcome::Failed(format!("planning failed: {e}"));
+            }
+        };
+
+        let iter_time_s = outcome.plan.times.final_time;
+        let devices_json = Json::Arr(
+            lease
+                .devices
+                .iter()
+                .map(|d| Json::Str(format!("{}.{}", d.group, d.idx)))
+                .collect(),
+        );
+        let mut body = Json::Obj(vec![
+            ("job".to_string(), Json::Num(job as f64)),
+            ("model".to_string(), Json::Str(outcome.plan.model_name.clone())),
+            ("gpus".to_string(), Json::Num(gpus as f64)),
+            ("devices".to_string(), devices_json),
+            ("groups".to_string(), Json::Num(lease.topology.num_groups() as f64)),
+            ("iter_time_s".to_string(), Json::Num(iter_time_s)),
+            ("speedup".to_string(), Json::Num(outcome.plan.times.speedup)),
+            ("cache_hit".to_string(), Json::Bool(outcome.cache_hit)),
+        ])
+        .encode();
+        body.push('\n');
+
+        let mut inner = self.lock();
+        inner.active.push(ActiveJob {
+            job,
+            lease: lease.id,
+            model: outcome.plan.model_name.clone(),
+            gpus,
+            devices: lease.devices,
+            iter_time_s,
+        });
+        SubmitOutcome::Planned(body)
+    }
+
+    /// `POST /fleet/complete`: `{"job": N}` returns job `N`'s devices
+    /// to the pool.  `(status, body)`.
+    pub fn complete(&self, body: &[u8]) -> (u16, String) {
+        let job = match std::str::from_utf8(body)
+            .map_err(|e| crate::util::error::Error::msg(format!("body is not valid utf-8: {e}")))
+            .and_then(Json::parse)
+            .and_then(|root| root.field("job").and_then(Json::as_u64))
+        {
+            Ok(job) => job,
+            Err(e) => return (400, format!("bad complete request: {e}\n")),
+        };
+        let mut inner = self.lock();
+        let pos = match inner.active.iter().position(|a| a.job == job) {
+            Some(pos) => pos,
+            None => return (404, format!("unknown job {job}\n")),
+        };
+        let done = inner.active.remove(pos);
+        if let Err(e) = inner.cluster.release(done.lease) {
+            // Unreachable while the ledger invariant holds (every
+            // active job owns a live lease), but never panic a worker.
+            return (500, format!("release failed: {e}\n"));
+        }
+        inner.completed += 1;
+        let mut body = Json::Obj(vec![
+            ("job".to_string(), Json::Num(job as f64)),
+            ("released".to_string(), Json::Num(done.devices.len() as f64)),
+        ])
+        .encode();
+        body.push('\n');
+        (200, body)
+    }
+
+    /// `GET /fleet/status`: the live ledger as JSON.
+    pub fn status(&self) -> String {
+        let inner = self.lock();
+        let active = inner
+            .active
+            .iter()
+            .map(|a| {
+                Json::Obj(vec![
+                    ("job".to_string(), Json::Num(a.job as f64)),
+                    ("model".to_string(), Json::Str(a.model.clone())),
+                    ("gpus".to_string(), Json::Num(a.gpus as f64)),
+                    (
+                        "devices".to_string(),
+                        Json::Arr(
+                            a.devices
+                                .iter()
+                                .map(|d| Json::Str(format!("{}.{}", d.group, d.idx)))
+                                .collect(),
+                        ),
+                    ),
+                    ("iter_time_s".to_string(), Json::Num(a.iter_time_s)),
+                ])
+            })
+            .collect();
+        let mut body = Json::Obj(vec![
+            ("topology".to_string(), Json::Str(inner.cluster.base().name.clone())),
+            ("devices".to_string(), Json::Num(inner.cluster.num_devices() as f64)),
+            ("leased".to_string(), Json::Num(inner.cluster.leased_devices() as f64)),
+            ("free".to_string(), Json::Num(inner.cluster.free_devices() as f64)),
+            ("active".to_string(), Json::Arr(active)),
+            ("submitted".to_string(), Json::Num(inner.submitted as f64)),
+            ("completed".to_string(), Json::Num(inner.completed as f64)),
+            ("rejected".to_string(), Json::Num(inner.rejected as f64)),
+            ("failed".to_string(), Json::Num(inner.failed as f64)),
+        ])
+        .encode();
+        body.push('\n');
+        body
+    }
+
+    /// Append `tag_fleet_*` lines to a `/metrics` exposition.
+    pub fn render_metrics(&self, out: &mut String) {
+        let inner = self.lock();
+        let total = inner.cluster.num_devices();
+        let leased = inner.cluster.leased_devices();
+        out.push_str(&format!("tag_fleet_submitted_total {}\n", inner.submitted));
+        out.push_str(&format!("tag_fleet_completed_total {}\n", inner.completed));
+        out.push_str(&format!("tag_fleet_rejected_total {}\n", inner.rejected));
+        out.push_str(&format!("tag_fleet_failed_total {}\n", inner.failed));
+        out.push_str(&format!("tag_fleet_active_jobs {}\n", inner.active.len()));
+        out.push_str(&format!("tag_fleet_devices_total {total}\n"));
+        out.push_str(&format!("tag_fleet_devices_leased {leased}\n"));
+        out.push_str(&format!("tag_fleet_devices_free {}\n", total - leased));
+        let utilization = if total > 0 { leased as f64 / total as f64 } else { 0.0 };
+        out.push_str(&format!("tag_fleet_utilization {utilization:.6}\n"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::testbed;
+
+    const SUBMIT: &[u8] = br#"{"model":"VGG19","iterations":20,"max_groups":8,"seed":1,"gpus":2}"#;
+
+    fn fleet() -> (FleetState, SharedPlanner) {
+        (FleetState::new(testbed()).unwrap(), SharedPlanner::builder().build())
+    }
+
+    #[test]
+    fn submit_leases_plans_and_complete_releases() {
+        let (f, p) = fleet();
+        let body = match f.submit(&p, SUBMIT) {
+            SubmitOutcome::Planned(body) => body,
+            other => panic!("expected Planned, got {other:?}"),
+        };
+        assert!(body.contains("\"job\":0"), "{body}");
+        assert!(body.contains("\"gpus\":2"), "{body}");
+        assert!(body.contains("\"iter_time_s\":"), "{body}");
+
+        let status = f.status();
+        assert!(status.contains("\"leased\":2"), "{status}");
+        assert!(status.contains("\"model\":\"VGG19\""), "{status}");
+        let mut metrics = String::new();
+        f.render_metrics(&mut metrics);
+        assert!(metrics.contains("tag_fleet_devices_leased 2\n"), "{metrics}");
+        assert!(metrics.contains("tag_fleet_active_jobs 1\n"), "{metrics}");
+
+        let (status, body) = f.complete(br#"{"job":0}"#);
+        assert_eq!(status, 200, "{body}");
+        assert!(body.contains("\"released\":2"), "{body}");
+        let after = f.status();
+        assert!(after.contains("\"leased\":0"), "{after}");
+        assert!(after.contains("\"completed\":1"), "{after}");
+    }
+
+    #[test]
+    fn oversubscription_is_busy_and_impossible_demands_are_invalid() {
+        let (f, p) = fleet();
+        let whole = br#"{"model":"VGG19","iterations":20,"max_groups":8,"gpus":16}"#;
+        assert!(matches!(f.submit(&p, whole), SubmitOutcome::Planned(_)));
+        match f.submit(&p, SUBMIT) {
+            SubmitOutcome::Busy { retry_after_s, .. } => assert_eq!(retry_after_s, 2),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        let huge = br#"{"model":"VGG19","gpus":999}"#;
+        assert!(matches!(f.submit(&p, huge), SubmitOutcome::Invalid(_)));
+        let mut metrics = String::new();
+        f.render_metrics(&mut metrics);
+        assert!(metrics.contains("tag_fleet_rejected_total 1\n"), "{metrics}");
+    }
+
+    #[test]
+    fn malformed_submissions_and_completions_are_rejected() {
+        let (f, p) = fleet();
+        for bad in [
+            &b"not json"[..],
+            br#"{"model":"VGG19"}"#,                      // gpus missing
+            br#"{"model":"VGG19","gpus":0}"#,             // zero demand
+            br#"{"model":"VGG19","gpus":2,"topology":"testbed"}"#, // slice is ours
+            br#"{"model":"VGG19","gpus":2,"turbo":true}"#, // unknown field
+            br#"{"gpus":2}"#,                             // model missing
+        ] {
+            assert!(
+                matches!(f.submit(&p, bad), SubmitOutcome::Invalid(_)),
+                "accepted {:?}",
+                String::from_utf8_lossy(bad)
+            );
+        }
+        assert_eq!(f.complete(b"not json").0, 400);
+        assert_eq!(f.complete(br#"{"job":99}"#).0, 404);
+        let status = f.status();
+        assert!(status.contains("\"leased\":0"), "{status}");
+    }
+}

@@ -1,0 +1,41 @@
+//! Fleet scheduling: multi-tenant planning over a leased cluster with
+//! online job streams.
+//!
+//! The planner (one model, one topology, one deployment) answers the
+//! question a *single* tenant asks.  A leased GPU fleet faces the
+//! harder one: jobs arrive over time, each demanding a few devices of
+//! a shared cluster, and the operator chooses **which devices** each
+//! job gets before the planner chooses how to use them.  That choice
+//! interacts with the device topology exactly the way the paper's
+//! placement does — four T4s behind one PCIe bridge beat four devices
+//! scattered across racks — so the scheduler and the planner share one
+//! vocabulary: a lease materializes a validated residual [`Topology`]
+//! (the [`crate::cluster::residual`] path fault injection also uses),
+//! and the planner searches that slice as if it were the whole world.
+//!
+//! Three layers:
+//!
+//! * [`lease`] — [`ClusterState`]: the capacity ledger.  Leases grant
+//!   exclusive device sets, materialize re-routed slice topologies,
+//!   and release restores the base bit-for-bit.
+//! * [`sched`] + [`trace`] — deterministic offline replay: a seeded
+//!   Poisson job stream ([`generate_jobs`]) replayed under a policy
+//!   ([`Policy::Fifo`] whole-cluster baseline vs [`Policy::BestFit`]
+//!   residual-aware packing with bounded backfill) on a virtual
+//!   clock; [`FleetReport`] carries makespan, mean JCT and
+//!   utilization.  `tag fleet` is the CLI face.
+//! * [`live`] — [`FleetState`]: the same admission logic as a serving
+//!   daemon ledger behind `POST /fleet/submit` / `/fleet/complete` /
+//!   `GET /fleet/status`.
+//!
+//! [`Topology`]: crate::cluster::Topology
+
+pub mod lease;
+pub mod live;
+pub mod sched;
+pub mod trace;
+
+pub use lease::{ClusterState, Lease, LeaseId};
+pub use live::{FleetState, SubmitOutcome};
+pub use sched::{best_fit_devices, replay, FleetConfig, FleetReport, JobRow, Policy};
+pub use trace::{generate_jobs, JobSpec, TRACE_MODELS};

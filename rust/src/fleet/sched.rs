@@ -1,0 +1,469 @@
+//! The fleet scheduler: a deterministic event loop replaying a job
+//! stream onto one shared [`ClusterState`], planning every admitted
+//! job through the existing [`Planner`] against its leased slice.
+//!
+//! Time is **virtual**: the loop advances a `f64` clock from event to
+//! event (arrivals from the trace, completions from `steps ×` the
+//! planned iteration time), never reads a wall clock, and breaks ties
+//! deterministically (completions before arrivals at equal time;
+//! lower job id first among simultaneous completions).  A fixed
+//! `(trace, config)` therefore replays byte-for-byte — asserted in
+//! `rust/tests/fleet.rs` — as long as the per-plan determinism
+//! contract holds (`workers == 1`, no deadline; both knobs are still
+//! plumbed through for throughput runs that trade determinism away).
+//!
+//! Two policies:
+//!
+//! * [`Policy::Fifo`] — the naive baseline: each job leases the
+//!   **whole cluster** and runs exclusively; arrivals queue behind it
+//!   in order.  Planning sees the full topology every time (so repeat
+//!   shapes hit the plan cache), but an 8-GPU job still serializes a
+//!   32-GPU pod.
+//! * [`Policy::BestFit`] — residual-aware: each job leases only the
+//!   devices it demands, chosen by [`best_fit_devices`] (tightest
+//!   single group first, then greedily fewest groups), and jobs run
+//!   concurrently.  A bounded backfill window lets small jobs overtake
+//!   a head-of-queue job that does not fit yet — position 0 is always
+//!   examined first, so the head is never starved, and the window
+//!   bounds how far overtaking reaches.
+
+use std::collections::VecDeque;
+
+use crate::api::{PlanRequest, Planner, SearchBackend};
+use crate::cluster::{DeviceId, Topology};
+use crate::models;
+use crate::util::error::Result;
+
+use super::lease::{ClusterState, LeaseId};
+use super::trace::JobSpec;
+
+/// Scheduling policy for [`replay`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Whole-cluster exclusive leases, strict arrival order.
+    Fifo,
+    /// Demand-sized leases via [`best_fit_devices`], bounded backfill.
+    BestFit,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::BestFit => "best-fit",
+        }
+    }
+
+    /// Parse a CLI/wire policy name.
+    pub fn parse(text: &str) -> Option<Policy> {
+        match text {
+            "fifo" => Some(Policy::Fifo),
+            "best-fit" | "bestfit" | "best_fit" => Some(Policy::BestFit),
+            _ => None,
+        }
+    }
+}
+
+/// Replay knobs shared by every job of a run.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub policy: Policy,
+    /// Search iterations per plan.
+    pub iterations: usize,
+    /// Op-group cap per plan.
+    pub max_groups: usize,
+    /// Tree-parallel search workers per plan (1 = byte-deterministic).
+    pub workers: usize,
+    /// Per-plan deadline; `None` runs the full budget
+    /// (deterministic).
+    pub deadline_ms: Option<u64>,
+    /// How many queue positions past the head backfill may examine
+    /// (BestFit only; 0 = strict head-of-queue).
+    pub backfill: usize,
+    /// Run the SFB optimizer on each plan.
+    pub sfb: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            policy: Policy::BestFit,
+            iterations: 16,
+            max_groups: 10,
+            workers: 1,
+            deadline_ms: None,
+            backfill: 4,
+            sfb: false,
+        }
+    }
+}
+
+/// Per-job outcome of a replay.
+#[derive(Clone, Debug)]
+pub struct JobRow {
+    pub id: usize,
+    pub model: String,
+    /// Devices demanded (== leased under BestFit; FIFO leases the
+    /// whole cluster regardless).
+    pub gpus: usize,
+    /// Groups of the leased slice the job planned against.
+    pub groups: usize,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+    /// Planned iteration time on the leased slice.
+    pub iter_time_s: f64,
+    /// Whether the plan came from the cache (excluded from
+    /// [`FleetReport::render`]: it depends on planner history, not on
+    /// the schedule).
+    pub cache_hit: bool,
+}
+
+/// Everything a replay produced.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub policy: Policy,
+    pub total_devices: usize,
+    /// One row per job, in job-id order, all completed.
+    pub jobs: Vec<JobRow>,
+    /// Virtual time from 0 to the last completion.
+    pub makespan_s: f64,
+    /// Mean of `finish - arrival` (queue wait included).
+    pub mean_jct_s: f64,
+    /// Demanded device-seconds over cluster device-seconds:
+    /// `Σ gpus·(finish-start) / (total_devices · makespan)`.  The
+    /// demand basis is identical across policies, so the FIFO gap to
+    /// 1.0 is exactly the capacity its exclusive leases waste.
+    pub utilization: f64,
+    /// Plans computed (== jobs) and how many were cache hits —
+    /// planner-history-dependent, reported but never rendered.
+    pub plans: usize,
+    pub cache_hits: usize,
+}
+
+impl FleetReport {
+    /// Deterministic human-readable table: a pure function of the
+    /// schedule (no wall times, no cache state), so two replays of the
+    /// same trace under the same config render byte-identically.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(256 + 64 * self.jobs.len());
+        out.push_str(&format!(
+            "fleet replay: policy={} jobs={} devices={}\n",
+            self.policy.name(),
+            self.jobs.len(),
+            self.total_devices
+        ));
+        out.push_str(&format!(
+            "  {:>3} {:<12} {:>4} {:>6} {:>9} {:>9} {:>9} {:>10}\n",
+            "id", "model", "gpus", "groups", "arrive", "start", "finish", "iter(s)"
+        ));
+        for j in &self.jobs {
+            out.push_str(&format!(
+                "  {:>3} {:<12} {:>4} {:>6} {:>9.3} {:>9.3} {:>9.3} {:>10.6}\n",
+                j.id, j.model, j.gpus, j.groups, j.arrival_s, j.start_s, j.finish_s, j.iter_time_s
+            ));
+        }
+        out.push_str(&format!(
+            "  makespan {:.3}s  mean jct {:.3}s  utilization {:.3}\n",
+            self.makespan_s, self.mean_jct_s, self.utilization
+        ));
+        out
+    }
+}
+
+/// Deterministic best-fit device selection against the current free
+/// pool: the single free group that fits the demand most tightly
+/// (fewest spare devices, lowest index on ties); otherwise greedily
+/// span the fewest groups (most-free first, lowest index on ties).
+/// Within a group, lowest free indices are taken first.  `None` when
+/// the demand exceeds the free count (or is zero).
+pub fn best_fit_devices(state: &ClusterState, gpus: usize) -> Option<Vec<DeviceId>> {
+    if gpus == 0 || gpus > state.free_devices() {
+        return None;
+    }
+    let free = state.free_per_group();
+    let mut chosen = Vec::with_capacity(gpus);
+    let tightest = (0..free.len()).filter(|&g| free[g] >= gpus).min_by_key(|&g| (free[g], g));
+    match tightest {
+        Some(g) => take_free(state, g, gpus, &mut chosen),
+        None => {
+            let mut order: Vec<usize> = (0..free.len()).filter(|&g| free[g] > 0).collect();
+            order.sort_by(|&a, &b| free[b].cmp(&free[a]).then(a.cmp(&b)));
+            let mut need = gpus;
+            for g in order {
+                if need == 0 {
+                    break;
+                }
+                let n = free[g].min(need);
+                take_free(state, g, n, &mut chosen);
+                need -= n;
+            }
+        }
+    }
+    Some(chosen)
+}
+
+/// Append the first `n` free devices of group `g`, ascending index.
+fn take_free(state: &ClusterState, g: usize, n: usize, out: &mut Vec<DeviceId>) {
+    let mut taken = 0;
+    let count = state.base().groups[g].count;
+    for idx in 0..count {
+        if taken == n {
+            break;
+        }
+        let d = DeviceId { group: g, idx };
+        if state.is_free(d) {
+            out.push(d);
+            taken += 1;
+        }
+    }
+    debug_assert_eq!(taken, n, "free_per_group promised {n} free devices in group {g}");
+}
+
+struct Running {
+    job: usize,
+    lease: LeaseId,
+    finish_s: f64,
+}
+
+struct Sim<'a, B: SearchBackend + ?Sized> {
+    planner: &'a Planner<B>,
+    jobs: &'a [JobSpec],
+    cfg: &'a FleetConfig,
+    cluster: ClusterState,
+    queue: VecDeque<usize>,
+    running: Vec<Running>,
+    rows: Vec<Option<JobRow>>,
+    clock: f64,
+    plans: usize,
+    cache_hits: usize,
+}
+
+impl<B: SearchBackend + ?Sized> Sim<'_, B> {
+    /// Lease `devices`, plan the job on the slice, and put it on the
+    /// run list with its virtual completion time.
+    fn start(&mut self, job: usize, devices: &[DeviceId]) -> Result<()> {
+        let spec = &self.jobs[job];
+        let lease = self.cluster.lease(devices)?;
+        let model = models::by_name(&spec.model, spec.scale).ok_or_else(|| {
+            crate::util::error::Error::msg(format!("job {}: unknown model {}", job, spec.model))
+        })?;
+        let mut request = PlanRequest::new(model, lease.topology.clone())
+            .budget(self.cfg.iterations, self.cfg.max_groups)
+            .seed(spec.seed)
+            .sfb(self.cfg.sfb)
+            .workers(self.cfg.workers.max(1));
+        if let Some(ms) = self.cfg.deadline_ms {
+            request = request.deadline_ms(ms.max(1));
+        }
+        let outcome = self.planner.plan(&request)?;
+        self.plans += 1;
+        if outcome.cache_hit {
+            self.cache_hits += 1;
+        }
+        let iter_time_s = outcome.plan.times.final_time;
+        crate::ensure!(
+            iter_time_s.is_finite() && iter_time_s > 0.0,
+            "job {job}: degenerate planned iteration time {iter_time_s}"
+        );
+        let finish_s = self.clock + spec.steps * iter_time_s;
+        self.rows[job] = Some(JobRow {
+            id: spec.id,
+            model: spec.model.clone(),
+            gpus: spec.gpus,
+            groups: lease.topology.num_groups(),
+            arrival_s: spec.arrival_s,
+            start_s: self.clock,
+            finish_s,
+            iter_time_s,
+            cache_hit: outcome.cache_hit,
+        });
+        self.running.push(Running { job, lease: lease.id, finish_s });
+        Ok(())
+    }
+
+    /// Admit everything the policy allows at the current clock.
+    fn admit(&mut self) -> Result<()> {
+        match self.cfg.policy {
+            Policy::Fifo => {
+                // Exclusive tenancy: one whole-cluster lease at a time.
+                if self.running.is_empty() {
+                    if let Some(&job) = self.queue.front() {
+                        let all = self.cluster.base().devices();
+                        self.start(job, &all)?;
+                        let _ = self.queue.pop_front();
+                    }
+                }
+            }
+            Policy::BestFit => {
+                let mut i = 0;
+                while i < self.queue.len() && i <= self.cfg.backfill {
+                    let job = self.queue[i];
+                    match best_fit_devices(&self.cluster, self.jobs[job].gpus) {
+                        Some(devices) => {
+                            self.start(job, &devices)?;
+                            let _ = self.queue.remove(i);
+                        }
+                        None => i += 1,
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The earliest completion, ties broken by job id.
+    fn next_completion(&self) -> Option<usize> {
+        (0..self.running.len()).min_by(|&a, &b| {
+            let (ra, rb) = (&self.running[a], &self.running[b]);
+            ra.finish_s
+                .partial_cmp(&rb.finish_s)
+                .expect("finish times are finite")
+                .then(self.jobs[ra.job].id.cmp(&self.jobs[rb.job].id))
+        })
+    }
+}
+
+/// Replay `jobs` (any order; sorted internally by `(arrival, id)`)
+/// onto `base` under `cfg`, planning each admitted job with `planner`.
+/// Every job completes or the replay errors — jobs demanding more
+/// devices than the cluster has are rejected up front.
+pub fn replay<B: SearchBackend + ?Sized>(
+    planner: &Planner<B>,
+    base: &Topology,
+    jobs: &[JobSpec],
+    cfg: &FleetConfig,
+) -> Result<FleetReport> {
+    let cluster = ClusterState::new(base.clone())?;
+    let total_devices = cluster.num_devices();
+    for j in jobs {
+        crate::ensure!(
+            j.gpus >= 1 && j.gpus <= total_devices,
+            "job {} demands {} GPUs but `{}` has {}",
+            j.id,
+            j.gpus,
+            base.name,
+            total_devices
+        );
+        crate::ensure!(
+            j.arrival_s.is_finite() && j.arrival_s >= 0.0 && j.steps.is_finite() && j.steps > 0.0,
+            "job {} has a degenerate arrival or step count",
+            j.id
+        );
+    }
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| {
+        jobs[a]
+            .arrival_s
+            .partial_cmp(&jobs[b].arrival_s)
+            .expect("arrivals are finite")
+            .then(jobs[a].id.cmp(&jobs[b].id))
+    });
+
+    let mut sim = Sim {
+        planner,
+        jobs,
+        cfg,
+        cluster,
+        queue: VecDeque::new(),
+        running: Vec::new(),
+        rows: vec![None; jobs.len()],
+        clock: 0.0,
+        plans: 0,
+        cache_hits: 0,
+    };
+
+    let mut next_arrival = 0usize;
+    loop {
+        sim.admit()?;
+        let arrival = order.get(next_arrival).map(|&j| jobs[j].arrival_s);
+        let completion = sim.next_completion();
+        // Completions win ties: freed capacity admits queued work
+        // before the simultaneous arrival joins the queue.
+        let take_completion = match (arrival, completion) {
+            (None, None) => break,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (Some(at), Some(ri)) => sim.running[ri].finish_s <= at,
+        };
+        if take_completion {
+            let done = sim.running.swap_remove(completion.expect("checked above"));
+            sim.clock = done.finish_s;
+            sim.cluster.release(done.lease)?;
+        } else {
+            sim.clock = arrival.expect("checked above");
+            sim.queue.push_back(order[next_arrival]);
+            next_arrival += 1;
+        }
+    }
+    crate::ensure!(
+        sim.queue.is_empty() && sim.running.is_empty(),
+        "replay ended with unfinished jobs"
+    );
+    crate::ensure!(
+        sim.cluster.active_leases() == 0 && sim.cluster.free_devices() == total_devices,
+        "replay leaked leases"
+    );
+
+    let rows: Vec<JobRow> =
+        sim.rows.into_iter().map(|r| r.expect("every job completed")).collect();
+    let makespan_s = rows.iter().map(|r| r.finish_s).fold(0.0f64, f64::max);
+    let mean_jct_s = if rows.is_empty() {
+        0.0
+    } else {
+        rows.iter().map(|r| r.finish_s - r.arrival_s).sum::<f64>() / rows.len() as f64
+    };
+    let busy: f64 = rows.iter().map(|r| r.gpus as f64 * (r.finish_s - r.start_s)).sum();
+    let utilization = if makespan_s > 0.0 {
+        busy / (total_devices as f64 * makespan_s)
+    } else {
+        0.0
+    };
+    Ok(FleetReport {
+        policy: cfg.policy,
+        total_devices,
+        jobs: rows,
+        makespan_s,
+        mean_jct_s,
+        utilization,
+        plans: sim.plans,
+        cache_hits: sim.cache_hits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::multi_rack;
+
+    #[test]
+    fn best_fit_prefers_the_tightest_group_then_fewest_groups() {
+        let mut c = ClusterState::new(multi_rack()).unwrap();
+        // Demand 4: the T4 machines (4 free) fit exactly; group 1 is
+        // the lowest-indexed tight fit.
+        let d = best_fit_devices(&c, 4).unwrap();
+        assert!(d.iter().all(|x| x.group == 1));
+        let lease = c.lease(&d).unwrap();
+        // Demand 2: V100 pairs (2 free) are now the tightest.
+        let d2 = best_fit_devices(&c, 2).unwrap();
+        assert!(d2.iter().all(|x| x.group == 0));
+        // Demand 5: no single group fits; spans the fewest groups,
+        // most-free first (a 4-wide T4 machine plus one more device).
+        let d5 = best_fit_devices(&c, 5).unwrap();
+        assert_eq!(d5.len(), 5);
+        assert_eq!(d5.iter().filter(|x| x.group == 4).count(), 4, "{d5:?}");
+        // Infeasible demands are None, zero is None.
+        assert!(best_fit_devices(&c, 0).is_none());
+        assert!(best_fit_devices(&c, 999).is_none());
+        c.release(lease.id).unwrap();
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [Policy::Fifo, Policy::BestFit] {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("bestfit"), Some(Policy::BestFit));
+        assert_eq!(Policy::parse("lifo"), None);
+    }
+}

@@ -1,0 +1,96 @@
+//! Seeded job-stream generation: Poisson arrivals of heterogeneous
+//! planning jobs, in the `cluster::generator` idiom — pure
+//! [`Rng`]-driven, no wall clock, fixed `(topology, seed)` reproduces
+//! the trace byte for byte.
+//!
+//! A [`JobSpec`] is everything the fleet scheduler needs to know about
+//! one tenant: which model at which scale, how many GPUs it demands,
+//! how many training steps it will run (virtual service time = `steps
+//! ×` the planned iteration time, so a better placement finishes the
+//! job sooner), when it arrives, and the search seed its plan uses.
+
+use crate::cluster::Topology;
+use crate::util::Rng;
+
+/// The model slate traces draw from (all comm-heavy enough that
+/// placement quality moves the iteration time).
+pub const TRACE_MODELS: [&str; 3] = ["VGG19", "ResNet101", "InceptionV3"];
+
+/// One job of the stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Dense job id (== index in the generated trace).
+    pub id: usize,
+    /// Model name, resolved via [`crate::models::by_name`] at plan
+    /// time.
+    pub model: String,
+    /// Model scale factor.
+    pub scale: f64,
+    /// Devices the job demands.
+    pub gpus: usize,
+    /// Training steps to run; virtual service time is `steps *
+    /// iter_time` of the plan the job receives.
+    pub steps: f64,
+    /// Arrival time on the virtual clock, seconds.
+    pub arrival_s: f64,
+    /// Search seed for this job's plan.
+    pub seed: u64,
+}
+
+/// Draw `n` jobs with exponential interarrival gaps of mean
+/// `mean_interarrival_s` (a Poisson arrival process), GPU demands in
+/// `[1, num_devices/4]` and step counts in `[60, 240]`.  Deterministic
+/// in `(topo, seed, n, mean_interarrival_s)`; arrivals come out
+/// sorted.
+pub fn generate_jobs(
+    topo: &Topology,
+    seed: u64,
+    n: usize,
+    mean_interarrival_s: f64,
+) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    let max_gpus = (topo.num_devices() / 4).max(1);
+    let mut at = 0.0f64;
+    (0..n)
+        .map(|id| {
+            // Inverse-CDF exponential draw; `1 - u` is in (0, 1] so the
+            // log is finite.
+            at += -mean_interarrival_s * (1.0 - rng.next_f64()).ln();
+            JobSpec {
+                id,
+                model: TRACE_MODELS[rng.below(TRACE_MODELS.len())].to_string(),
+                scale: 0.25,
+                gpus: rng.range(1, max_gpus),
+                steps: rng.range(60, 240) as f64,
+                arrival_s: at,
+                seed: rng.next_u64(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets::multi_rack;
+
+    #[test]
+    fn traces_are_deterministic_sorted_and_bounded() {
+        let t = multi_rack();
+        let a = generate_jobs(&t, 7, 16, 20.0);
+        let b = generate_jobs(&t, 7, 16, 20.0);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        let mut last = 0.0;
+        for (i, j) in a.iter().enumerate() {
+            assert_eq!(j.id, i);
+            assert!(j.arrival_s >= last, "arrivals sorted");
+            last = j.arrival_s;
+            assert!(j.gpus >= 1 && j.gpus <= t.num_devices() / 4);
+            assert!((60.0..=240.0).contains(&j.steps));
+            assert!(TRACE_MODELS.contains(&j.model.as_str()));
+        }
+        let c = generate_jobs(&t, 8, 16, 20.0);
+        assert_ne!(a, c, "different seeds differ");
+    }
+}

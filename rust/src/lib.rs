@@ -46,6 +46,21 @@
 //! identical plan bytes; `workers == 1` exact, `workers > 1`
 //! seed-stable) holds across the network boundary.
 //!
+//! ## Fleet mode: [`fleet`]
+//!
+//! One planner, many tenants.  [`fleet`] layers a multi-tenant
+//! scheduler over the planner: a [`fleet::ClusterState`] leases
+//! exclusive device sets out of one shared topology and materializes a
+//! validated residual slice per lease (the [`cluster::residual`] path
+//! fault injection uses), so every admitted job is planned on exactly
+//! the hardware it holds.  `tag fleet` replays a seeded Poisson job
+//! stream ([`fleet::generate_jobs`]) on a deterministic virtual clock
+//! under two policies — FIFO whole-cluster exclusive vs residual-aware
+//! best-fit with bounded backfill — and reports makespan, mean job
+//! completion time and cluster utilization; `tag serve` exposes the
+//! same admission logic live as `POST /fleet/submit` / `/fleet/complete`
+//! / `GET /fleet/status` with `tag_fleet_*` metrics.
+//!
 //! ## Fault tolerance
 //!
 //! The planning stack degrades instead of dying.  [`cluster::faults`]
@@ -106,6 +121,7 @@ pub mod api;
 pub mod cluster;
 pub mod coordinator;
 pub mod dist;
+pub mod fleet;
 pub mod gnn;
 pub mod graph;
 pub mod mcts;

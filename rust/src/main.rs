@@ -4,6 +4,7 @@
 //!   search    find a deployment plan for a model on a topology
 //!   baselines evaluate all baseline strategies on the same setup
 //!   repair    re-plan a saved plan after device/link failures
+//!   fleet     replay a multi-tenant job stream (FIFO vs best-fit)
 //!   serve     run the HTTP planning daemon (POST /plan, GET /metrics)
 //!   train     self-play GNN training (writes a params .bin)
 //!   info      list models, topologies and artifact status
@@ -19,6 +20,7 @@
 //!   tag repair --plan plan.json --faults "kill:0.1;degrade:2*0.5"
 //!   tag train --games 30 --steps 4 --out artifacts/params_trained.bin
 //!   tag baselines --model InceptionV3 --topology testbed
+//!   tag fleet --topology multi_rack --jobs 12 --seed 7 --policy both
 //!   tag serve --port 7878 --workers 4 --queue-depth 64
 //!
 //! Flags accept both `--key value` and `--key=value`; values may start
@@ -44,7 +46,7 @@ use tag::util::{fmt_secs, Args};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tag <search|baselines|repair|serve|train|info> [options]\n\
+        "usage: tag <search|baselines|repair|fleet|serve|train|info> [options]\n\
          run `tag <cmd> --help` for details"
     );
     std::process::exit(2)
@@ -334,6 +336,70 @@ fn cmd_train(args: &Args) {
     println!("saved {} params to {out}", tr.params.len());
 }
 
+fn cmd_fleet(args: &Args) {
+    use tag::fleet::{generate_jobs, replay, FleetConfig, Policy};
+
+    let topo = topology_by_name(args.get("topology").unwrap_or("multi_rack"));
+    let jobs = generate_jobs(
+        &topo,
+        args.num("seed", 7),
+        args.num("jobs", 8usize),
+        args.num("mean-arrival", 20.0),
+    );
+    let policies: Vec<Policy> = match args.get("policy").unwrap_or("both") {
+        "both" => vec![Policy::Fifo, Policy::BestFit],
+        name => match Policy::parse(name) {
+            Some(policy) => vec![policy],
+            None => {
+                eprintln!("unknown policy {name} (fifo|best-fit|both)");
+                std::process::exit(2)
+            }
+        },
+    };
+    let mut config = FleetConfig {
+        iterations: args.num("iters", 16usize),
+        max_groups: args.num("groups", 10usize),
+        workers: args.num("workers", 1usize).max(1),
+        backfill: args.num("backfill", 4usize),
+        sfb: args.flag("sfb"),
+        ..FleetConfig::default()
+    };
+    if args.get("deadline-ms").is_some() {
+        config.deadline_ms = Some(args.num("deadline-ms", 0u64).max(1));
+    }
+
+    println!(
+        "fleet: topology={} ({} GPUs), {} jobs, seed {}",
+        topo.name,
+        topo.num_devices(),
+        jobs.len(),
+        args.num::<u64>("seed", 7)
+    );
+    // One shared planner across policies: FIFO's whole-cluster plans
+    // and best-fit's slice plans occupy disjoint cache keys, so the
+    // comparison stays fair while repeat shapes within a policy reuse
+    // their searches.
+    let planner = SharedPlanner::builder().build();
+    let mut reports = Vec::new();
+    for policy in policies {
+        config.policy = policy;
+        let report = replay(&planner, &topo, &jobs, &config).unwrap_or_else(|e| {
+            eprintln!("fleet replay failed: {e}");
+            std::process::exit(1)
+        });
+        print!("{}", report.render());
+        reports.push(report);
+    }
+    if let [fifo, best] = reports.as_slice() {
+        println!(
+            "best-fit vs fifo: makespan {:.2}x  mean jct {:.2}x  utilization {:.2}x",
+            fifo.makespan_s / best.makespan_s.max(1e-12),
+            fifo.mean_jct_s / best.mean_jct_s.max(1e-12),
+            best.utilization / fifo.utilization.max(1e-12),
+        );
+    }
+}
+
 fn cmd_serve(args: &Args) {
     if args.get("gnn").is_some() {
         // GnnMctsBackend shares its PJRT service via `Rc` and cannot
@@ -347,6 +413,7 @@ fn cmd_serve(args: &Args) {
         workers: args.num("workers", 4usize).max(1),
         queue_depth: args.num("queue-depth", 64usize).max(1),
         max_body_bytes: args.num("max-body-kb", 1024usize).max(1) * 1024,
+        fleet_topology: args.get("fleet-topology").unwrap_or("multi_rack").to_string(),
         ..ServeConfig::default()
     };
     let planner = SharedPlanner::builder()
@@ -362,9 +429,9 @@ fn cmd_serve(args: &Args) {
         config.workers,
         config.queue_depth
     );
-    println!(
-        "endpoints: POST /plan  POST /repair  GET /healthz  GET /metrics  POST /shutdown"
-    );
+    println!("endpoints: POST /plan  POST /repair  POST /fleet/submit  POST /fleet/complete");
+    println!("           GET /fleet/status  GET /healthz  GET /metrics  POST /shutdown");
+    println!("fleet topology: {}", config.fleet_topology);
     if let Err(e) = server.run() {
         eprintln!("serve failed: {e}");
         std::process::exit(1);
@@ -399,6 +466,7 @@ fn main() {
         "search" => cmd_search(&rest),
         "baselines" => cmd_baselines(&rest),
         "repair" => cmd_repair(&rest),
+        "fleet" => cmd_fleet(&rest),
         "serve" => cmd_serve(&rest),
         "train" => cmd_train(&rest),
         "info" => cmd_info(),

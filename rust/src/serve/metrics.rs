@@ -13,8 +13,17 @@ use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use crate::api::CacheStats;
 
 /// The endpoints metrics are keyed by (plus a catch-all).
-pub const ENDPOINTS: [&str; 6] =
-    ["/plan", "/repair", "/healthz", "/metrics", "/shutdown", "other"];
+pub const ENDPOINTS: [&str; 9] = [
+    "/plan",
+    "/repair",
+    "/fleet/submit",
+    "/fleet/complete",
+    "/fleet/status",
+    "/healthz",
+    "/metrics",
+    "/shutdown",
+    "other",
+];
 
 /// Index into [`ENDPOINTS`] for a request path.
 pub fn endpoint_index(path: &str) -> usize {
@@ -204,6 +213,12 @@ impl ServerMetrics {
             out.push_str(&format!("tag_plan_cache_misses {}\n", stats.misses));
             out.push_str(&format!("tag_plan_cache_entries {}\n", stats.entries));
             out.push_str(&format!("tag_plan_cache_hit_rate {:.6}\n", stats.hit_rate()));
+            out.push_str(&format!("tag_plan_cache_hot_entries {}\n", stats.hot_entries));
+            out.push_str(&format!("tag_plan_cache_cold_entries {}\n", stats.cold_entries));
+            out.push_str(&format!("tag_plan_cache_capacity {}\n", stats.capacity));
+            out.push_str(&format!("tag_plan_cache_occupancy {:.6}\n", stats.occupancy()));
+            out.push_str(&format!("tag_plan_cache_promotions_total {}\n", stats.promotions));
+            out.push_str(&format!("tag_plan_cache_rotations_total {}\n", stats.rotations));
         }
         for (i, endpoint) in ENDPOINTS.iter().enumerate() {
             self.latency[i].render("tag_latency_seconds", endpoint, &mut out);
@@ -270,7 +285,16 @@ mod tests {
         m.begin_queued();
         m.end_queued();
         m.record_latency(endpoint_index("/plan"), 0.02);
-        let text = m.render(Some(CacheStats { hits: 3, misses: 1, entries: 2 }));
+        let text = m.render(Some(CacheStats {
+            hits: 3,
+            misses: 1,
+            entries: 2,
+            hot_entries: 1,
+            cold_entries: 1,
+            capacity: 4,
+            promotions: 1,
+            rotations: 2,
+        }));
         assert_eq!(
             scrape(&text, "tag_requests_total{endpoint=\"/plan\"}"),
             Some(2.0)
@@ -289,6 +313,12 @@ mod tests {
         assert_eq!(scrape(&text, "tag_searches_total"), Some(1.0));
         assert_eq!(scrape(&text, "tag_plan_cache_hits"), Some(3.0));
         assert_eq!(scrape(&text, "tag_plan_cache_hit_rate"), Some(0.75));
+        assert_eq!(scrape(&text, "tag_plan_cache_hot_entries"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_plan_cache_cold_entries"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_plan_cache_capacity"), Some(4.0));
+        assert_eq!(scrape(&text, "tag_plan_cache_occupancy"), Some(0.25));
+        assert_eq!(scrape(&text, "tag_plan_cache_promotions_total"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_plan_cache_rotations_total"), Some(2.0));
         assert_eq!(
             scrape(&text, "tag_latency_seconds_count{endpoint=\"/plan\"}"),
             Some(1.0)

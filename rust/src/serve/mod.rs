@@ -13,6 +13,14 @@
 //! live counters, the plan-cache hit rate and per-endpoint latency
 //! histograms.
 //!
+//! ## Fleet mode
+//!
+//! The daemon also runs the multi-tenant fleet ledger
+//! ([`crate::fleet::FleetState`] over [`ServeConfig::fleet_topology`]):
+//! `POST /fleet/submit` leases best-fit devices and plans on the slice,
+//! `POST /fleet/complete` returns them, `GET /fleet/status` shows the
+//! live ledger, and `/metrics` grows `tag_fleet_*` gauges.
+//!
 //! ## Fault tolerance
 //!
 //! The daemon is built to keep answering through partial failure:
@@ -98,8 +106,13 @@ pub struct ServeConfig {
     /// Per-socket read timeout (slow or idle clients cannot hold a
     /// worker forever).
     pub read_timeout: Duration,
-    /// Seconds advertised in `Retry-After` on shed responses.
+    /// Base seconds advertised in `Retry-After` on shed responses; the
+    /// daemon adds the current queue's estimated drain time on top
+    /// (see [`retry_after_for`]).
     pub retry_after_s: u64,
+    /// Topology spec (preset name or `random:SEED`/`hier:SEED`) the
+    /// `/fleet/*` endpoints lease devices out of.
+    pub fleet_topology: String,
 }
 
 impl Default for ServeConfig {
@@ -112,6 +125,7 @@ impl Default for ServeConfig {
             max_body_bytes: Limits::default().max_body_bytes,
             read_timeout: Duration::from_secs(10),
             retry_after_s: 1,
+            fleet_topology: "multi_rack".to_string(),
         }
     }
 }
@@ -135,11 +149,19 @@ impl Server {
         let local_addr = listener.local_addr().context("local_addr")?;
         let metrics = Arc::new(ServerMetrics::default());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let base = crate::cluster::topology_by_spec(&config.fleet_topology).ok_or_else(|| {
+            crate::util::error::Error::msg(format!(
+                "unknown fleet topology spec `{}`",
+                config.fleet_topology
+            ))
+        })?;
+        let fleet = Arc::new(crate::fleet::FleetState::new(base)?);
         let router = Arc::new(Router::new(
             Arc::new(planner),
             metrics.clone(),
             shutdown.clone(),
             config.workers,
+            fleet,
         ));
         Ok(Self { listener, local_addr, config, router, metrics, shutdown })
     }
@@ -187,7 +209,12 @@ impl Server {
                         Err(Rejected::Full(stream)) | Err(Rejected::Closed(stream)) => {
                             self.metrics.record_shed();
                             self.metrics.record_status(503);
-                            shed(stream, self.config.retry_after_s);
+                            let retry = retry_after_for(
+                                self.config.retry_after_s,
+                                pool.queued(),
+                                self.config.workers,
+                            );
+                            shed(stream, retry);
                         }
                     }
                 }
@@ -215,6 +242,17 @@ impl Server {
             None => Ok(()),
         }
     }
+}
+
+/// `Retry-After` seconds for a shed response: the configured base plus
+/// the estimated drain time of the current queue (`ceil(queued /
+/// workers)`, each slot costing about a second of search).  A client
+/// shed by a nearly-empty daemon retries quickly; one shed by a deep
+/// backlog backs off proportionally instead of hammering the door — a
+/// constant hint would herd every shed client back at the same instant.
+fn retry_after_for(base_s: u64, queued: usize, workers: usize) -> u64 {
+    let workers = workers.max(1) as u64;
+    base_s.max(1) + (queued as u64 + workers - 1) / workers
 }
 
 /// Shed one connection with `503` + `Retry-After`, without reading the
@@ -317,6 +355,16 @@ mod tests {
         let bye = roundtrip(addr, b"POST /shutdown HTTP/1.1\r\n\r\n");
         assert!(bye.starts_with("HTTP/1.1 200"), "{bye}");
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_depth() {
+        assert_eq!(retry_after_for(1, 0, 4), 1, "empty queue: just the base");
+        assert_eq!(retry_after_for(1, 1, 1), 2);
+        assert_eq!(retry_after_for(1, 8, 4), 3, "ceil(8/4) on top of the base");
+        assert_eq!(retry_after_for(1, 9, 4), 4);
+        assert_eq!(retry_after_for(0, 0, 0), 1, "degenerate config still hints >= 1s");
+        assert_eq!(retry_after_for(2, 3, 2), 4);
     }
 
     #[test]

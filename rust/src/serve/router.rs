@@ -1,12 +1,15 @@
 //! Route dispatch: one parsed [`Request`] in, one [`Response`] out.
 //!
-//! | endpoint         | behaviour                                             |
-//! |------------------|-------------------------------------------------------|
-//! | `POST /plan`     | decode wire request → coalesce → plan → JSON plan     |
-//! | `POST /repair`   | prior plan + fault spec → warm re-plan on the residual|
-//! | `GET /healthz`   | readiness JSON: workers, queue depth, panics          |
-//! | `GET /metrics`   | plain-text exposition ([`ServerMetrics::render`])     |
-//! | `POST /shutdown` | begin graceful drain; `200`                           |
+//! | endpoint               | behaviour                                             |
+//! |------------------------|-------------------------------------------------------|
+//! | `POST /plan`           | decode wire request → coalesce → plan → JSON plan     |
+//! | `POST /repair`         | prior plan + fault spec → warm re-plan on the residual|
+//! | `POST /fleet/submit`   | plan request + `gpus` → lease best-fit slice → plan   |
+//! | `POST /fleet/complete` | `{"job": N}` → release job `N`'s leased devices       |
+//! | `GET /fleet/status`    | live fleet ledger JSON (leases, tenants, counters)    |
+//! | `GET /healthz`         | readiness JSON: workers, queue depth, panics          |
+//! | `GET /metrics`         | plain-text exposition ([`ServerMetrics::render`])     |
+//! | `POST /shutdown`       | begin graceful drain; `200`                           |
 //!
 //! `/plan` is where the serving guarantees live: the request's
 //! fingerprint triple keys both the [`SingleFlight`] (concurrent
@@ -31,6 +34,7 @@ use std::sync::Arc;
 use crate::api::json::Json;
 use crate::api::{DeploymentPlan, PlanKey, SharedPlanner};
 use crate::cluster::FaultSpec;
+use crate::fleet::{FleetState, SubmitOutcome};
 
 use super::coalesce::{Join, SingleFlight};
 use super::http::{Request, Response};
@@ -42,6 +46,8 @@ use super::metrics::ServerMetrics;
 pub struct Router {
     pub planner: Arc<SharedPlanner>,
     pub metrics: Arc<ServerMetrics>,
+    /// The multi-tenant fleet ledger behind `/fleet/*`.
+    pub fleet: Arc<FleetState>,
     flights: SingleFlight<PlanKey, (u16, String)>,
     shutdown: Arc<AtomicBool>,
     /// Worker-pool size, reported by `/healthz`.
@@ -54,8 +60,9 @@ impl Router {
         metrics: Arc<ServerMetrics>,
         shutdown: Arc<AtomicBool>,
         workers: usize,
+        fleet: Arc<FleetState>,
     ) -> Self {
-        Self { planner, metrics, flights: SingleFlight::new(), shutdown, workers }
+        Self { planner, metrics, fleet, flights: SingleFlight::new(), shutdown, workers }
     }
 
     /// Dispatch one request.
@@ -63,18 +70,45 @@ impl Router {
         match (request.method.as_str(), request.path.as_str()) {
             ("POST", "/plan") => self.plan(&request.body),
             ("POST", "/repair") => self.repair(&request.body),
+            ("POST", "/fleet/submit") => self.fleet_submit(&request.body),
+            ("POST", "/fleet/complete") => {
+                let (status, body) = self.fleet.complete(&request.body);
+                respond(status, body)
+            }
+            ("GET", "/fleet/status") => Response::json(200, self.fleet.status()),
             ("GET", "/healthz") => self.healthz(),
             ("GET", "/metrics") => {
-                Response::text(200, self.metrics.render(self.planner.cache_stats()))
+                let mut text = self.metrics.render(self.planner.cache_stats());
+                self.fleet.render_metrics(&mut text);
+                Response::text(200, text)
             }
             ("POST", "/shutdown") => {
                 self.shutdown.store(true, Ordering::SeqCst);
                 Response::text(200, "draining\n")
             }
-            (_, "/plan") | (_, "/repair") => method_not_allowed("POST"),
-            (_, "/healthz") | (_, "/metrics") => method_not_allowed("GET"),
+            (_, "/plan") | (_, "/repair") | (_, "/fleet/submit") | (_, "/fleet/complete") => {
+                method_not_allowed("POST")
+            }
+            (_, "/healthz") | (_, "/metrics") | (_, "/fleet/status") => method_not_allowed("GET"),
             (_, "/shutdown") => method_not_allowed("POST"),
             _ => Response::text(404, "unknown endpoint\n"),
+        }
+    }
+
+    /// `POST /fleet/submit`: lease a best-fit slice, plan on it.
+    /// Submissions bypass the singleflight table — two tenants with
+    /// identical bodies must get *different* leases, not one shared
+    /// response (the plan cache still deduplicates the search when two
+    /// leases materialize fingerprint-identical slices).
+    fn fleet_submit(&self, body: &[u8]) -> Response {
+        match self.fleet.submit(&self.planner, body) {
+            SubmitOutcome::Planned(body) => Response::json(200, body),
+            SubmitOutcome::Busy { reason, retry_after_s } => Response {
+                retry_after_s: Some(retry_after_s),
+                ..Response::text(503, format!("fleet busy: {reason}\n"))
+            },
+            SubmitOutcome::Invalid(msg) => Response::text(400, format!("{msg}\n")),
+            SubmitOutcome::Failed(msg) => Response::text(422, format!("{msg}\n")),
         }
     }
 
@@ -230,6 +264,7 @@ mod tests {
             Arc::new(ServerMetrics::default()),
             Arc::new(AtomicBool::new(false)),
             2,
+            Arc::new(FleetState::new(crate::cluster::presets::testbed()).unwrap()),
         )
     }
 
@@ -253,6 +288,10 @@ mod tests {
         assert_eq!((resp.status, resp.allow), (405, Some("POST")));
         let resp = r.handle(&request("GET", "/repair", b""));
         assert_eq!((resp.status, resp.allow), (405, Some("POST")));
+        let resp = r.handle(&request("GET", "/fleet/submit", b""));
+        assert_eq!((resp.status, resp.allow), (405, Some("POST")));
+        let resp = r.handle(&request("POST", "/fleet/status", b""));
+        assert_eq!((resp.status, resp.allow), (405, Some("GET")));
         let resp = r.handle(&request("DELETE", "/healthz", b""));
         assert_eq!((resp.status, resp.allow), (405, Some("GET")));
         assert_eq!(r.handle(&request("PUT", "/shutdown", b"")).status, 405);
@@ -328,6 +367,39 @@ mod tests {
         plan.telemetry.iterations = 0;
         let (status, body) = plan_payload(&plan);
         assert_eq!(status, 504, "{body}");
+    }
+
+    #[test]
+    fn fleet_endpoints_round_trip_a_tenancy() {
+        let r = router();
+        let body = br#"{"model":"VGG19","iterations":20,"max_groups":8,"seed":1,"gpus":2}"#;
+        let resp = r.handle(&request("POST", "/fleet/submit", body));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let planned = String::from_utf8(resp.body).unwrap();
+        assert!(planned.contains("\"job\":0"), "{planned}");
+
+        let status = r.handle(&request("GET", "/fleet/status", b""));
+        let status = String::from_utf8(status.body).unwrap();
+        assert!(status.contains("\"leased\":2"), "{status}");
+
+        let metrics = r.handle(&request("GET", "/metrics", b""));
+        let metrics = String::from_utf8(metrics.body).unwrap();
+        assert!(metrics.contains("tag_fleet_devices_leased 2\n"), "{metrics}");
+        assert!(metrics.contains("tag_plan_cache_occupancy"), "{metrics}");
+
+        // An unsatisfiable-right-now demand sheds with Retry-After.
+        let big = br#"{"model":"VGG19","iterations":20,"max_groups":8,"gpus":16}"#;
+        let busy = r.handle(&request("POST", "/fleet/submit", big));
+        assert_eq!(busy.status, 503);
+        assert!(busy.retry_after_s.is_some());
+
+        let done = r.handle(&request("POST", "/fleet/complete", br#"{"job":0}"#));
+        assert_eq!(done.status, 200);
+        let after = r.handle(&request("GET", "/fleet/status", b""));
+        let after = String::from_utf8(after.body).unwrap();
+        assert!(after.contains("\"leased\":0"), "{after}");
+        assert_eq!(r.handle(&request("POST", "/fleet/complete", br#"{"job":0}"#)).status, 404);
+        assert_eq!(r.handle(&request("POST", "/fleet/submit", b"not json")).status, 400);
     }
 
     #[test]

@@ -214,7 +214,9 @@ fn saturated_queue_sheds_with_503_and_retry_after() {
 
     let (status, head, body) = http(addr, "GET", "/healthz", None);
     assert_eq!(status, 503, "{body}");
-    assert!(head.contains("retry-after:"), "shed responses advertise retry: {head}");
+    // The hint is derived from the live queue: base 1s + ceil(1 queued
+    // / 1 worker) = 2, not the constant the config started from.
+    assert!(head.contains("retry-after: 2"), "shed responses advertise derived retry: {head}");
 
     // Release the worker and the queue; the daemon recovers.  (While
     // saturated even `/metrics` would be shed, so the authoritative
