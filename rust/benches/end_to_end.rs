@@ -19,6 +19,7 @@ fn main() {
             profile_noise: 0.0,
             parallelism: Default::default(),
             deadline_ms: None,
+            delta: true,
         };
         // Prepare once (profiling + grouping), bench the search.
         let model = models::by_name(name, 0.25).unwrap();

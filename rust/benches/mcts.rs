@@ -10,8 +10,8 @@ use tag::graph::grouping::group_ops;
 use tag::mcts::{Mcts, UniformPrior};
 use tag::models;
 use tag::profile::{unique_gpus, CommModel, CostModel};
-use tag::strategy::enumerate_actions;
-use tag::util::bench;
+use tag::strategy::{enumerate_actions, Strategy};
+use tag::util::{bench, Rng};
 
 fn main() {
     let topo = testbed();
@@ -60,5 +60,75 @@ fn main() {
             "    -> warm search speed-up: {:.1}x ({hits} hits / {misses} misses across runs)",
             cold / warm
         );
+    }
+
+    println!("\n== delta evaluation: 1-flip walk, incremental vs full ==");
+    {
+        // The dominant evaluation pattern of MCTS expansion: each child
+        // strategy differs from its parent in one group.  Walk a seeded
+        // 1-flip chain with delta on (fragment store + frontier-restart
+        // simulation) and off (full lower-and-simulate every step), and
+        // verify the two arms produce bit-identical results.
+        const STEPS: usize = 64;
+        let model = models::by_name("VGG19", 0.25).unwrap();
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&model, &cost, 24, 7);
+        let comm = CommModel::fit(3);
+        let actions = enumerate_actions(&topo);
+        let ng = gg.num_groups();
+        let walk = |low: &Lowering| -> f64 {
+            let mut rng = Rng::new(41);
+            let mut s = Strategy::dp_allreduce(ng, &topo);
+            let mut acc = 0.0;
+            for _ in 0..STEPS {
+                s.slots[rng.below(ng)] = Some(*rng.choose(&actions));
+                acc += low.evaluate(&s).time;
+            }
+            acc
+        };
+        let low_on = Lowering::new(&gg, &topo, &cost, &comm);
+        let low_off = Lowering::new(&gg, &topo, &cost, &comm);
+        low_off.set_delta(false);
+        let sum_on = walk(&low_on);
+        let sum_off = walk(&low_off);
+        assert_eq!(
+            sum_on.to_bits(),
+            sum_off.to_bits(),
+            "delta walk diverged from the full walk"
+        );
+        // Clear the memo each run so every step re-evaluates: the off
+        // arm pays full lowering+simulation, the on arm its delta path.
+        let m_on = bench("evalwalk[delta on]", 1.5, || {
+            low_on.clear_memo();
+            assert!(walk(&low_on) > 0.0);
+        });
+        println!("    -> {:.0} evals/s", STEPS as f64 / m_on);
+        let m_off = bench("evalwalk[delta off]", 1.5, || {
+            low_off.clear_memo();
+            assert!(walk(&low_off) > 0.0);
+        });
+        println!("    -> {:.0} evals/s", STEPS as f64 / m_off);
+        let stats = low_on.delta_stats();
+        println!(
+            "    -> delta speed-up: {:.1}x (delta_hit_rate {:.3}, frontier_restart_frac {:.3}, fragment_hit_rate {:.3})",
+            m_off / m_on,
+            stats.delta_hit_rate(),
+            stats.frontier_restart_frac(),
+            low_on.fragment_hit_rate(),
+        );
+        let json = format!(
+            "{{\n  \"bench\": \"delta_flip_walk\",\n  \"model\": \"VGG19\",\n  \"groups\": 24,\n  \"steps\": {STEPS},\n  \"evals_per_s_on\": {:.1},\n  \"evals_per_s_off\": {:.1},\n  \"speedup\": {:.3},\n  \"delta_hit_rate\": {:.4},\n  \"frontier_restart_frac\": {:.4},\n  \"fragment_hit_rate\": {:.4},\n  \"checksum_bits_equal\": true\n}}\n",
+            STEPS as f64 / m_on,
+            STEPS as f64 / m_off,
+            m_off / m_on,
+            stats.delta_hit_rate(),
+            stats.frontier_restart_frac(),
+            low_on.fragment_hit_rate(),
+        );
+        if let Err(e) = std::fs::write("BENCH_delta.json", &json) {
+            eprintln!("    (could not write BENCH_delta.json: {e})");
+        } else {
+            println!("    wrote BENCH_delta.json");
+        }
     }
 }

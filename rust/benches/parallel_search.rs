@@ -36,6 +36,7 @@ fn main() {
         profile_noise: 0.0,
         parallelism: Parallelism::default(),
         deadline_ms: None,
+        delta: true,
     };
     let prep = prepare(models::by_name("VGG19", 0.25).unwrap(), &topo, &cfg);
     let actions = enumerate_actions(&topo);
@@ -79,6 +80,50 @@ fn main() {
             "      {workers:>2} workers: {:>12}  speed-up {:.2}x",
             fmt_secs(t),
             t1 / t
+        );
+    }
+
+    println!("\n== delta evaluation under tree-parallel search ==");
+    for &workers in &[1usize, 4] {
+        let mut arms = [0.0f64; 2];
+        for (i, &delta) in [true, false].iter().enumerate() {
+            let label = if delta { "on" } else { "off" };
+            let m = bench(&format!("search{ITERS}[workers={workers},delta {label}]"), 1.5, || {
+                // Fresh Lowering per run (cold memo + cold fragments):
+                // the off arm pays full lowering+simulation for every
+                // unique strategy; the on arm shares fragments and
+                // frontier-restarts across all workers' evaluations.
+                let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
+                low.set_delta(delta);
+                let prob = SearchProblem {
+                    gg: &prep.gg,
+                    topo: &topo,
+                    cost: &prep.cost,
+                    comm: &prep.comm,
+                    actions: &actions,
+                };
+                let out = run_search(
+                    &prob,
+                    &low,
+                    (0..workers).map(|_| UniformPrior).collect(),
+                    ITERS,
+                    1,
+                    Parallelism::workers(workers),
+                    true,
+                    false,
+                    None,
+                );
+                assert_eq!(out.result.iterations, ITERS);
+                assert!(out.result.best_time > 0.0);
+            });
+            arms[i] = m;
+            println!("    -> {:.0} iterations/s", ITERS as f64 / m);
+        }
+        println!(
+            "    workers={workers}: delta speed-up {:.2}x (on {} vs off {})",
+            arms[1] / arms[0],
+            fmt_secs(arms[0]),
+            fmt_secs(arms[1]),
         );
     }
 

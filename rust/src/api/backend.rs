@@ -79,6 +79,8 @@ pub trait SearchBackend {
 fn memo_metrics(low: &Lowering<'_>) -> Vec<(String, f64)> {
     let (hits, misses) = low.memo_stats();
     let (mask_hits, mask_misses) = low.mask_memo_stats();
+    let (frag_hits, frag_misses) = low.fragment_stats();
+    let delta = low.delta_stats();
     vec![
         ("memo_hits".to_string(), hits as f64),
         ("memo_misses".to_string(), misses as f64),
@@ -86,6 +88,13 @@ fn memo_metrics(low: &Lowering<'_>) -> Vec<(String, f64)> {
         ("mask_memo_hits".to_string(), mask_hits as f64),
         ("mask_memo_misses".to_string(), mask_misses as f64),
         ("mask_memo_hit_rate".to_string(), low.mask_memo_hit_rate()),
+        ("fragment_hits".to_string(), frag_hits as f64),
+        ("fragment_misses".to_string(), frag_misses as f64),
+        ("fragment_hit_rate".to_string(), low.fragment_hit_rate()),
+        ("delta_evals".to_string(), delta.delta_evals as f64),
+        ("full_evals".to_string(), delta.full_evals as f64),
+        ("delta_hit_rate".to_string(), delta.delta_hit_rate()),
+        ("frontier_restart_frac".to_string(), delta.frontier_restart_frac()),
     ]
 }
 
@@ -420,6 +429,7 @@ mod tests {
             profile_noise: 0.0,
             parallelism: Default::default(),
             deadline_ms: None,
+            delta: true,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);

@@ -331,6 +331,7 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
             &entry.prepared.cost,
             &entry.prepared.comm,
         );
+        low.set_delta(cfg.delta);
         let actions = enumerate_actions(&entry.topology);
         let ctx = SearchContext {
             prep: &entry.prepared,
@@ -423,6 +424,7 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
         let cfg = degraded.search_config();
         let prep = coordinator::prepare(degraded.model.clone(), &degraded.topology, &cfg);
         let low = Lowering::new(&prep.gg, &degraded.topology, &prep.cost, &prep.comm);
+        low.set_delta(cfg.delta);
         let actions = enumerate_actions(&degraded.topology);
 
         // Carry the survivors over: each decided mask keeps its living

@@ -72,6 +72,13 @@ pub struct PlanRequest {
     /// of running to the iteration budget.  `None` (the default) never
     /// consults the clock — the deterministic path.
     pub deadline_ms: Option<u64>,
+    /// Incremental (delta) evaluation — fragment-cached lowering plus
+    /// frontier-restart simulation ([`crate::dist::fragments`]).  Purely
+    /// a performance knob: evaluation outcomes, and therefore plans, are
+    /// bit-identical with it on or off, so it does **not** enter
+    /// [`config_fingerprint`](Self::config_fingerprint).  Default on;
+    /// the CLI's `--no-delta` flag clears it.
+    pub delta: bool,
 }
 
 impl PlanRequest {
@@ -87,6 +94,7 @@ impl PlanRequest {
             profile_noise: 0.0,
             parallelism: Parallelism::default(),
             deadline_ms: None,
+            delta: true,
         }
     }
 
@@ -129,6 +137,14 @@ impl PlanRequest {
         self
     }
 
+    /// Toggle incremental (delta) evaluation (default on).  Off forces
+    /// every evaluation down the full lower-and-simulate path; outcomes
+    /// are bit-identical either way.
+    pub fn delta(mut self, on: bool) -> Self {
+        self.delta = on;
+        self
+    }
+
     /// The coordinator-level configuration this request lowers to.
     pub fn search_config(&self) -> SearchConfig {
         SearchConfig {
@@ -139,6 +155,7 @@ impl PlanRequest {
             profile_noise: self.profile_noise,
             parallelism: self.parallelism,
             deadline_ms: self.deadline_ms,
+            delta: self.delta,
         }
     }
 
@@ -157,6 +174,12 @@ impl PlanRequest {
     /// search may stop early with a different (best-so-far) plan, so it
     /// must never alias the unbounded request.  `None` hashes nothing —
     /// deadline-free requests keep their pre-deadline fingerprints.
+    ///
+    /// `delta` is deliberately *not* hashed: incremental evaluation is
+    /// bit-identical to the full path (property-pinned in
+    /// `tests/properties.rs`), so a delta-off request may soundly be
+    /// served the cached plan of a delta-on one — the same reasoning
+    /// that keeps `workers == 1` out of the fingerprint.
     pub fn config_fingerprint(&self, backend_token: u64) -> u64 {
         let mut h = Fnv::new();
         h.write_usize(self.budget.iterations);
@@ -215,7 +238,7 @@ impl PlanRequest {
             Json::Obj(members) => members,
             _ => return Err(Error::msg("request must be a JSON object")),
         };
-        const KNOWN: [&str; 11] = [
+        const KNOWN: [&str; 12] = [
             "model",
             "scale",
             "topology",
@@ -227,6 +250,7 @@ impl PlanRequest {
             "workers",
             "virtual_loss",
             "deadline_ms",
+            "delta",
         ];
         for (key, _) in members {
             if !KNOWN.contains(&key.as_str()) {
@@ -308,6 +332,10 @@ impl PlanRequest {
                 Some(d)
             }
         };
+        let delta = match root.get("delta") {
+            Some(v) => v.as_bool()?,
+            None => true,
+        };
 
         Ok(Self {
             model,
@@ -318,6 +346,7 @@ impl PlanRequest {
             profile_noise,
             parallelism: Parallelism { workers, virtual_loss },
             deadline_ms,
+            delta,
         })
     }
 }
@@ -464,6 +493,21 @@ mod tests {
         let wire =
             PlanRequest::decode(r#"{"model":"VGG19","deadline_ms":5000}"#).unwrap();
         assert_eq!(wire.deadline_ms, Some(5000));
+    }
+
+    #[test]
+    fn delta_knob_decodes_but_never_partitions_the_cache() {
+        // Bit-identical outcomes ⇒ delta on/off share one cache identity.
+        let base = req().config_fingerprint(1);
+        assert_eq!(base, req().delta(false).config_fingerprint(1));
+        assert_eq!(req().prepare_fingerprint(), req().delta(false).prepare_fingerprint());
+        // The knob reaches the engine config and decodes off the wire.
+        assert!(req().search_config().delta);
+        assert!(!req().delta(false).search_config().delta);
+        let wire = PlanRequest::decode(r#"{"model":"VGG19","delta":false}"#).unwrap();
+        assert!(!wire.delta);
+        let default = PlanRequest::decode(r#"{"model":"VGG19"}"#).unwrap();
+        assert!(default.delta, "absent wire key keeps the default (on)");
     }
 
     #[test]

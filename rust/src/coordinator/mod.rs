@@ -41,6 +41,12 @@ pub struct SearchConfig {
     /// anytime).  `None` (the default) runs the full iteration budget
     /// and keeps plans fully deterministic.
     pub deadline_ms: Option<u64>,
+    /// Incremental (delta) evaluation: fragment-cached lowering +
+    /// frontier-restart simulation ([`crate::dist`]).  Purely a
+    /// performance knob — outcomes and plans are bit-identical either
+    /// way, so it does not enter plan fingerprints.  Default on; the
+    /// CLI's `--no-delta` flag clears it.
+    pub delta: bool,
 }
 
 impl Default for SearchConfig {
@@ -53,6 +59,7 @@ impl Default for SearchConfig {
             profile_noise: 0.0,
             parallelism: Parallelism::default(),
             deadline_ms: None,
+            delta: true,
         }
     }
 }
@@ -115,6 +122,7 @@ pub fn search_session(
 ) -> SessionResult {
     let watch = Stopwatch::start();
     let low = Lowering::new(&prep.gg, topo, &prep.cost, &prep.comm);
+    low.set_delta(cfg.delta);
     let actions = enumerate_actions(topo);
     // The deadline clock starts here, bounding the search itself.
     // (`api::Planner` instead starts its token before prepare, so the
@@ -271,6 +279,7 @@ impl<'a> Trainer<'a> {
             profile_noise: 0.0,
             parallelism: Default::default(),
             deadline_ms: None,
+            delta: true,
         };
         let prep = prepare(model, &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
@@ -364,6 +373,7 @@ mod tests {
             profile_noise: 0.0,
             parallelism: Default::default(),
             deadline_ms: None,
+            delta: true,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let res = search_session(&prep, &topo, None, &cfg);
@@ -384,6 +394,7 @@ mod tests {
             profile_noise: 0.0,
             parallelism: Default::default(),
             deadline_ms: None,
+            delta: true,
         };
         let prep = prepare(models::transformer(8, 0.25), &topo, &cfg);
         let res = search_session(&prep, &topo, None, &cfg);
@@ -413,6 +424,7 @@ mod tests {
             profile_noise: 0.0,
             parallelism: Default::default(),
             deadline_ms: None,
+            delta: true,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let actions = enumerate_actions(&topo);

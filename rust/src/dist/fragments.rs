@@ -1,0 +1,500 @@
+//! Shared fragment store for incremental lowering (the delta-evaluation
+//! tentpole).
+//!
+//! Lowering a strategy decomposes into per-group and per-edge pieces
+//! whose durations, link footprints, and emission decisions depend only
+//! on `(group, resolved action, split mode)` — never on what the *other*
+//! groups chose.  Re-lowering a strategy that differs from a previously
+//! evaluated one in a single group therefore recomputes `k - 1` groups'
+//! worth of fitted-model and routed-bandwidth queries for nothing.  The
+//! [`FragmentStore`] memoizes those pieces once, keyed exactly, so every
+//! subsequent build replays them verbatim — the cached values are the
+//! bit-identical outputs of the same pure computations, which is what
+//! keeps the delta path's bit-identity contract trivial on the lowering
+//! side.
+//!
+//! Like the evaluation memo ([`super::MemoTable`]), the store is sharded
+//! and `RwLock`-striped with relaxed-atomic hit/miss counters, and every
+//! shard evicts by two-generation rotation ([`super::memo`]'s `TwoGen`),
+//! so parallel search workers share one instance behind an `Arc` and
+//! long-lived daemons never face a cold store after eviction.  The store
+//! also carries the **delta-simulation counters** (delta vs full
+//! simulations, replayed vs simulated tasks) precisely because it is the
+//! one object all workers of a search share — plan telemetry reads one
+//! aggregate regardless of parallelism.
+//!
+//! [`MaskProfileMemo`] is the cross-worker tier of the per-mask
+//! `LinkProfile` cache: each `Lowering` keeps its own cheap `Rc` map of
+//! fully expanded placements (preserving its exact per-instance hit/miss
+//! accounting), but the expensive routed link-profile computation behind
+//! it is shared, so per-worker lowerings of a parallel search stop
+//! rebuilding identical profiles from scratch.
+//!
+//! [`EvalCaches`] bundles the three shared handles — evaluation memo,
+//! fragment store, mask-profile memo — into the one clone-to-share value
+//! that [`super::Lowering::with_caches`] accepts and
+//! [`super::Lowering::caches_handle`] returns.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::cluster::LinkProfile;
+use crate::sim::LinkLoad;
+
+use super::memo::{MemoTable, TwoGen};
+
+/// Lock stripes per fragment kind (a power of two, masked like the
+/// evaluation memo's).
+pub const FRAGMENT_SHARDS: usize = 16;
+
+/// Per-shard per-generation entry caps.  Group fragments are bounded by
+/// `groups × actions`; edge fragments by `edges × actions²`, hence the
+/// larger cap.
+const GROUP_SHARD_CAPACITY: usize = 1 << 12;
+const EDGE_SHARD_CAPACITY: usize = 1 << 13;
+
+/// Key of a group's lowered fragment: the group index, its resolved
+/// action word (`(mask << 3) | option`, the evaluation-memo encoding),
+/// and the batch-split mode (which changes per-device shares).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    pub group: u32,
+    pub action: u32,
+    pub proportional: bool,
+}
+
+/// Key of an inter-group edge's lowered fragment: the edge index in the
+/// group graph's forward-edge list plus both endpoints' resolved action
+/// words and the split mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct EdgeKey {
+    pub edge: u32,
+    pub producer: u32,
+    pub consumer: u32,
+    pub proportional: bool,
+}
+
+/// The model-parallel internal-communication task of a group fragment.
+#[derive(Clone, Debug)]
+pub(crate) struct PenaltyFragment {
+    pub(crate) duration: f64,
+    pub(crate) src_dg: usize,
+    pub(crate) dst_dg: usize,
+    pub(crate) load: Option<LinkLoad>,
+}
+
+/// Everything about lowering one group that depends only on its own
+/// resolved action: clamped base compute durations (per entry of the
+/// mask's machine list), the optional MP internal-comm task, and the
+/// optional plan-free gradient-sync duration.
+#[derive(Clone, Debug, Default)]
+pub struct GroupFragment {
+    pub(crate) comp: Vec<f64>,
+    pub(crate) penalty: Option<PenaltyFragment>,
+    pub(crate) sync: Option<f64>,
+}
+
+/// One emitted transfer of an edge fragment.
+#[derive(Clone, Debug)]
+pub(crate) struct TransferFragment {
+    pub(crate) resource: usize,
+    pub(crate) duration: f64,
+    /// Producer machine (device group) the bytes travel from.
+    pub(crate) src: usize,
+    pub(crate) load: Option<LinkLoad>,
+}
+
+/// Per-consumer-machine emission decision of an edge fragment.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct EdgeEmit {
+    /// The consumer machine also hosts the producer: the consumer task
+    /// gains a direct dependency on the co-located producer compute.
+    pub(crate) local: bool,
+    /// The NIC transfer to emit (deficit-gather or full remote fetch),
+    /// `None` when the local share suffices or the volume is negligible.
+    pub(crate) transfer: Option<TransferFragment>,
+}
+
+/// Everything about lowering one inter-group edge that depends only on
+/// the two endpoints' resolved actions: one [`EdgeEmit`] per consumer
+/// machine, in the consumer mask's machine order.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeFragment {
+    pub(crate) emits: Vec<EdgeEmit>,
+}
+
+fn shard_of(words: &[u64]) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        h ^= w;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h >> 32) as usize & (FRAGMENT_SHARDS - 1)
+}
+
+/// Aggregate counters of the incremental-evaluation path, shared across
+/// all workers of a search (they live in the [`FragmentStore`] every
+/// worker's `Lowering` holds).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// Evaluations served by frontier-restart (or identical-graph)
+    /// delta simulation.
+    pub delta_evals: u64,
+    /// Evaluations that lowered a graph and simulated it from t=0.
+    pub full_evals: u64,
+    /// Tasks replayed verbatim from a previous schedule across all
+    /// delta evaluations.
+    pub replayed_tasks: u64,
+    /// Total tasks of all delta-evaluated graphs (replayed + re-run).
+    pub simulated_tasks: u64,
+}
+
+impl DeltaStats {
+    /// Delta evaluations over all from-scratch-or-delta evaluations.
+    pub fn delta_hit_rate(&self) -> f64 {
+        let total = self.delta_evals + self.full_evals;
+        if total == 0 {
+            0.0
+        } else {
+            self.delta_evals as f64 / total as f64
+        }
+    }
+
+    /// Fraction of delta-evaluated tasks replayed from the previous
+    /// schedule instead of re-simulated (1.0 = pure replay).
+    pub fn frontier_restart_frac(&self) -> f64 {
+        if self.simulated_tasks == 0 {
+            0.0
+        } else {
+            self.replayed_tasks as f64 / self.simulated_tasks as f64
+        }
+    }
+}
+
+/// Sharded, lock-striped store of lowered group/edge fragments with
+/// exact hit/miss accounting, plus the shared delta-simulation
+/// counters.  All methods take `&self`; clone an `Arc<FragmentStore>`
+/// (or a whole [`EvalCaches`]) to share it across search workers.
+pub struct FragmentStore {
+    groups: Vec<RwLock<TwoGen<GroupKey, Arc<GroupFragment>>>>,
+    edges: Vec<RwLock<TwoGen<EdgeKey, Arc<EdgeFragment>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    delta_evals: AtomicU64,
+    full_evals: AtomicU64,
+    replayed_tasks: AtomicU64,
+    simulated_tasks: AtomicU64,
+}
+
+impl Default for FragmentStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FragmentStore {
+    pub fn new() -> Self {
+        Self {
+            groups: (0..FRAGMENT_SHARDS)
+                .map(|_| RwLock::new(TwoGen::new(GROUP_SHARD_CAPACITY)))
+                .collect(),
+            edges: (0..FRAGMENT_SHARDS)
+                .map(|_| RwLock::new(TwoGen::new(EDGE_SHARD_CAPACITY)))
+                .collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            delta_evals: AtomicU64::new(0),
+            full_evals: AtomicU64::new(0),
+            replayed_tasks: AtomicU64::new(0),
+            simulated_tasks: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the fragment for `key`, computing and caching it on a miss.
+    pub(crate) fn group(
+        &self,
+        key: GroupKey,
+        make: impl FnOnce() -> GroupFragment,
+    ) -> Arc<GroupFragment> {
+        let words = [u64::from(key.group) << 33 | u64::from(key.action) << 1
+            | u64::from(key.proportional)];
+        let shard = &self.groups[shard_of(&words)];
+        if let Some(f) = shard.read().unwrap().peek_hot(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(f);
+        }
+        let mut shard = shard.write().unwrap();
+        if let Some(f) = shard.get_promote(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(f);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let f = Arc::new(make());
+        shard.insert(key, Arc::clone(&f));
+        f
+    }
+
+    /// Fetch the fragment for `key`, computing and caching it on a miss.
+    pub(crate) fn edge(
+        &self,
+        key: EdgeKey,
+        make: impl FnOnce() -> EdgeFragment,
+    ) -> Arc<EdgeFragment> {
+        let words = [
+            u64::from(key.edge) << 1 | u64::from(key.proportional),
+            u64::from(key.producer) << 32 | u64::from(key.consumer),
+        ];
+        let shard = &self.edges[shard_of(&words)];
+        if let Some(f) = shard.read().unwrap().peek_hot(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(f);
+        }
+        let mut shard = shard.write().unwrap();
+        if let Some(f) = shard.get_promote(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(f);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let f = Arc::new(make());
+        shard.insert(key, Arc::clone(&f));
+        f
+    }
+
+    /// (hits, misses) across group and edge lookups since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Hits / (hits + misses), 0.0 when never probed.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Cached fragment count (group + edge, both generations).
+    pub fn len(&self) -> usize {
+        self.groups.iter().map(|s| s.read().unwrap().len()).sum::<usize>()
+            + self.edges.iter().map(|s| s.read().unwrap().len()).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub(crate) fn record_delta(&self, replayed: usize, total: usize) {
+        self.delta_evals.fetch_add(1, Ordering::Relaxed);
+        self.replayed_tasks.fetch_add(replayed as u64, Ordering::Relaxed);
+        self.simulated_tasks.fetch_add(total as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_full(&self) {
+        self.full_evals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the shared delta-simulation counters.
+    pub fn delta_stats(&self) -> DeltaStats {
+        DeltaStats {
+            delta_evals: self.delta_evals.load(Ordering::Relaxed),
+            full_evals: self.full_evals.load(Ordering::Relaxed),
+            replayed_tasks: self.replayed_tasks.load(Ordering::Relaxed),
+            simulated_tasks: self.simulated_tasks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Cross-worker tier of the per-mask `LinkProfile` cache: mask →
+/// routed bottleneck bandwidth + worst path latency, shared behind an
+/// `Arc` so parallel workers compute each profile once.  Unbounded by
+/// design — a profile is two `f64`s and masks are 16-bit.
+#[derive(Default)]
+pub struct MaskProfileMemo {
+    map: RwLock<HashMap<u16, LinkProfile>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MaskProfileMemo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the profile for `mask`, computing and caching it on a miss.
+    pub(crate) fn get_or(&self, mask: u16, make: impl FnOnce() -> LinkProfile) -> LinkProfile {
+        if let Some(p) = self.map.read().unwrap().get(&mask) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *p;
+        }
+        let mut map = self.map.write().unwrap();
+        if let Some(p) = map.get(&mask) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *p;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let p = make();
+        map.insert(mask, p);
+        p
+    }
+
+    /// (hits, misses) of the shared tier.  Sequential searches only see
+    /// misses here (their per-`Lowering` tier absorbs repeats); hits
+    /// measure cross-worker reuse.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The three shared evaluation caches as one clone-to-share bundle:
+/// per-worker `Lowering`s of a parallel search clone this so outcomes,
+/// lowered fragments, and link profiles are all pooled.
+#[derive(Clone, Default)]
+pub struct EvalCaches {
+    pub memo: Arc<MemoTable>,
+    pub fragments: Arc<FragmentStore>,
+    pub profiles: Arc<MaskProfileMemo>,
+}
+
+impl EvalCaches {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gkey(g: u32, a: u32) -> GroupKey {
+        GroupKey { group: g, action: a, proportional: false }
+    }
+
+    #[test]
+    fn group_fragments_compute_once_and_hit_after() {
+        let store = FragmentStore::new();
+        let mut built = 0;
+        for _ in 0..3 {
+            let f = store.group(gkey(1, 9), || {
+                built += 1;
+                GroupFragment { comp: vec![1.5, 2.5], penalty: None, sync: Some(0.25) }
+            });
+            assert_eq!(f.comp, vec![1.5, 2.5]);
+            assert_eq!(f.sync, Some(0.25));
+        }
+        assert_eq!(built, 1, "fragment computed exactly once");
+        assert_eq!(store.stats(), (2, 1));
+        assert!((store.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_are_distinct_fragments() {
+        let store = FragmentStore::new();
+        let _ = store.group(gkey(1, 9), || GroupFragment { comp: vec![1.0], ..Default::default() });
+        let _ = store.group(gkey(1, 10), || GroupFragment { comp: vec![2.0], ..Default::default() });
+        let _ = store.group(
+            GroupKey { group: 1, action: 9, proportional: true },
+            || GroupFragment { comp: vec![3.0], ..Default::default() },
+        );
+        let f = store.group(gkey(1, 9), || unreachable!("must hit"));
+        assert_eq!(f.comp, vec![1.0]);
+        assert_eq!(store.len(), 3);
+    }
+
+    #[test]
+    fn edge_fragments_key_on_both_endpoint_actions() {
+        let store = FragmentStore::new();
+        let ek = |p: u32, c: u32| EdgeKey { edge: 4, producer: p, consumer: c, proportional: false };
+        let _ = store.edge(ek(9, 10), EdgeFragment::default);
+        let _ = store.edge(ek(10, 9), EdgeFragment::default);
+        assert_eq!(store.stats(), (0, 2), "swapped endpoints are distinct keys");
+        let _ = store.edge(ek(9, 10), || unreachable!("must hit"));
+        assert_eq!(store.stats(), (1, 2));
+    }
+
+    #[test]
+    fn concurrent_lookups_account_exactly() {
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 50;
+        const KEYS: u32 = 32;
+        let store = FragmentStore::new();
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let store = &store;
+                s.spawn(move || {
+                    for _ in 0..ROUNDS {
+                        for k in 0..KEYS {
+                            let f = store.group(gkey(k, 7), || GroupFragment {
+                                comp: vec![f64::from(k)],
+                                ..Default::default()
+                            });
+                            assert_eq!(f.comp[0], f64::from(k));
+                        }
+                    }
+                });
+            }
+        });
+        let (hits, misses) = store.stats();
+        assert_eq!(hits + misses, (THREADS * ROUNDS) as u64 * u64::from(KEYS));
+        assert_eq!(misses, u64::from(KEYS), "write lock makes each key miss exactly once");
+        assert_eq!(store.len(), KEYS as usize);
+    }
+
+    #[test]
+    fn mask_profile_memo_shares_and_counts() {
+        let memo = MaskProfileMemo::new();
+        let mut built = 0;
+        for _ in 0..4 {
+            let p = memo.get_or(0b1011, || {
+                built += 1;
+                LinkProfile { bottleneck_gbps: 10.0, max_latency_s: 2e-6 }
+            });
+            assert_eq!(p.bottleneck_gbps, 10.0);
+        }
+        assert_eq!(built, 1);
+        assert_eq!(memo.stats(), (3, 1));
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn delta_stats_rates() {
+        let store = FragmentStore::new();
+        assert_eq!(store.delta_stats().delta_hit_rate(), 0.0);
+        assert_eq!(store.delta_stats().frontier_restart_frac(), 0.0);
+        store.record_delta(90, 100);
+        store.record_delta(60, 100);
+        store.record_full();
+        let d = store.delta_stats();
+        assert_eq!(
+            d,
+            DeltaStats {
+                delta_evals: 2,
+                full_evals: 1,
+                replayed_tasks: 150,
+                simulated_tasks: 200
+            }
+        );
+        assert!((d.delta_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((d.frontier_restart_frac() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_caches_clone_shares_all_three_tiers() {
+        let caches = EvalCaches::new();
+        let clone = caches.clone();
+        assert!(Arc::ptr_eq(&caches.memo, &clone.memo));
+        assert!(Arc::ptr_eq(&caches.fragments, &clone.fragments));
+        assert!(Arc::ptr_eq(&caches.profiles, &clone.profiles));
+    }
+}

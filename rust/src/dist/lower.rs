@@ -31,6 +31,36 @@
 //! are memoized next to the mask's device expansion; hit rates ride in
 //! plan telemetry alongside the evaluation memo's.
 //!
+//! ## Incremental (delta) evaluation
+//!
+//! An MCTS step typically flips one group's action and re-evaluates; the
+//! evaluation memo only helps on exact signature repeats.  Two layers
+//! exploit that locality (both default-on, disabled together by
+//! [`Lowering::set_delta`] — the `--no-delta` escape hatch):
+//!
+//! * **Fragment-cached lowering** — everything about lowering one group
+//!   (clamped base compute durations, the MP internal-comm task, the
+//!   plan-free sync duration) or one inter-group edge (per-consumer-
+//!   machine emission decisions and transfer tasks) depends only on the
+//!   endpoints' resolved actions and the split mode.  Those pieces are
+//!   fetched from the shared [`FragmentStore`]
+//!   ([`super::fragments`]), so a re-lowering recomputes only the
+//!   flipped groups' fragments and replays every other group's verbatim.
+//! * **Frontier-restart simulation** — each evaluation keeps its lowered
+//!   graph, per-task construction keys, and [`Schedule`] in a small
+//!   neighbor ring.  When a new signature differs from a ring entry in
+//!   `1..=`[`DELTA_MAX_FLIPS`] group words, the graphs are matched task
+//!   by construction site, a divergence horizon is proven (see
+//!   [`divergence_horizon`]), and [`Simulator::resume`] replays the
+//!   unchanged schedule prefix instead of re-simulating from t=0.
+//!
+//! Both layers replay bit-identical values of the same pure
+//! computations, so `evaluate` with delta on returns **bit-identical**
+//! outcomes (time, OOM, every `Feedback` field) to a from-scratch
+//! evaluation — pinned by `rust/tests/properties.rs` over a random flip
+//! corpus.  Delta hit counters aggregate in the shared store and ride in
+//! plan telemetry as `delta_hit_rate` / `frontier_restart_frac`.
+//!
 //! ## Batch shares per replication option
 //!
 //! * `AllReduce`/`Ps` — data parallel over the placement's devices
@@ -54,7 +84,7 @@
 //! outcome OOM (reward −1 in the search).
 
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::Arc;
 
@@ -62,9 +92,13 @@ use crate::cluster::{DeviceId, LinkProfile, Topology};
 use crate::graph::grouping::GroupGraph;
 use crate::profile::{CommModel, CostModel};
 use crate::sfb::SfbPlan;
-use crate::sim::{LinkLoad, Simulator, Task, TaskGraph, TaskKind};
+use crate::sim::{LinkLoad, Schedule, Simulator, Task, TaskGraph, TaskKind};
 use crate::strategy::{full_mask, Action, ReplOption, SplitMode, Strategy};
 
+use super::fragments::{
+    DeltaStats, EdgeEmit, EdgeFragment, EdgeKey, EvalCaches, FragmentStore, GroupFragment,
+    GroupKey, MaskProfileMemo, PenaltyFragment, TransferFragment,
+};
 use super::memo::MemoTable;
 
 /// Weights + gradients per replicated parameter byte (Adam slots are
@@ -77,6 +111,30 @@ pub const ACT_LIVE_FRAC: f64 = 0.40;
 pub const MP_INTERNAL_COMM_FRAC: f64 = 0.25;
 /// Partition-imbalance slack of the internal METIS split.
 pub const MP_IMBALANCE: f64 = 1.10;
+
+/// Maximum number of differing group words for a ring entry to qualify
+/// as a delta neighbor (flips beyond this re-lower too much of the graph
+/// for frontier restart to pay off).
+pub const DELTA_MAX_FLIPS: usize = 4;
+/// Recent evaluations kept as frontier-restart candidates.
+const NEIGHBOR_RING: usize = 4;
+
+// Construction-site keys: every pushed task gets a stable u64 key
+// identifying *where in the lowering* it came from (section tag in the
+// top bits), unique within one build.  Matching two lowered graphs by
+// key is what lets the delta path align tasks across signature flips.
+const KEY_COMP: u64 = 1 << 60;
+const KEY_PENALTY: u64 = 2 << 60;
+const KEY_EDGE: u64 = 3 << 60;
+const KEY_BARRIER: u64 = 4 << 60;
+const KEY_SYNC: u64 = 5 << 60;
+const KEY_BCAST: u64 = 6 << 60;
+
+/// The evaluation memo's per-group word: `(mask << 3) | option` — also
+/// the fragment-store key encoding.
+fn action_word(a: Action) -> u32 {
+    (a.mask as u32) << 3 | a.option.index() as u32
+}
 
 /// Runtime-feedback features extracted from the simulated schedule
 /// (part 3 of Table 1; consumed by `gnn::features`).
@@ -139,13 +197,197 @@ struct Fragments {
     param_bytes: Vec<f64>,
 }
 
-struct EvalBuffers {
+/// One evaluation's lowered graph + schedule, kept for frontier restart.
+struct EvalRecord {
+    /// The evaluation-memo signature this record was built for.
+    sig: Vec<u32>,
     tg: TaskGraph,
+    /// Construction-site key per task (parallel to `tg.tasks`).
+    keys: Vec<u64>,
+    /// key → task id of this record's graph.
+    index: HashMap<u64, usize>,
+    sched: Schedule,
+}
+
+impl Default for EvalRecord {
+    fn default() -> Self {
+        Self {
+            sig: Vec::new(),
+            tg: TaskGraph::new(0),
+            keys: Vec::new(),
+            index: HashMap::new(),
+            sched: Schedule::default(),
+        }
+    }
+}
+
+/// Ring of recent evaluations (the frontier-restart candidates) plus a
+/// spare record recycled as build scratch so the hot path stops
+/// allocating task graphs.
+#[derive(Default)]
+struct Ring {
+    records: VecDeque<EvalRecord>,
+    spare: Option<EvalRecord>,
+}
+
+impl Ring {
+    fn take_scratch(&mut self) -> EvalRecord {
+        self.spare.take().unwrap_or_default()
+    }
+
+    fn give_back(&mut self, rec: EvalRecord) {
+        self.spare = Some(rec);
+    }
+
+    fn push(&mut self, rec: EvalRecord) {
+        if self.records.len() >= NEIGHBOR_RING {
+            self.spare = self.records.pop_front();
+        }
+        self.records.push_back(rec);
+    }
+
+    /// The ring entry whose signature differs from `sig` in the fewest
+    /// group words, requiring an identical flags word and a distance in
+    /// `1..=DELTA_MAX_FLIPS` (distance 0 is the memo's job); ties go to
+    /// the most recent entry.
+    fn best_neighbor(&self, sig: &[u32]) -> Option<&EvalRecord> {
+        let mut best: Option<(&EvalRecord, usize)> = None;
+        for rec in self.records.iter().rev() {
+            if rec.sig.len() != sig.len() || rec.sig.last() != sig.last() {
+                continue;
+            }
+            let groups = sig.len() - 1;
+            let dist = (0..groups).filter(|&g| rec.sig[g] != sig[g]).count();
+            if dist == 0 || dist > DELTA_MAX_FLIPS {
+                continue;
+            }
+            if best.map_or(true, |(_, d)| dist < d) {
+                best = Some((rec, dist));
+            }
+        }
+        best.map(|(r, _)| r)
+    }
+}
+
+struct EvalBuffers {
     sim: Simulator,
     /// Compute-task id per (group, machine), `usize::MAX` = absent.
     comp: Vec<usize>,
     /// MP internal-comm task id per group, `usize::MAX` = absent.
     penalty: Vec<usize>,
+    /// Group fragments of the build in flight (sync durations are read
+    /// back in the sync section).
+    gfrags: Vec<Arc<GroupFragment>>,
+    /// Scratch of [`divergence_horizon`]: new-task → old-task id.
+    delta_map: Vec<usize>,
+    /// New tasks bit-identical to their mapped old task (deps included).
+    delta_clean: Vec<bool>,
+    /// New tasks matching an old construction site and structure but
+    /// with a different duration or link load.
+    delta_soft: Vec<bool>,
+    /// Old tasks matched by some new task.
+    delta_matched: Vec<bool>,
+}
+
+fn loads_equal(a: &Option<LinkLoad>, b: &Option<LinkLoad>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(a), Some(b)) => {
+            a.scalable_s.to_bits() == b.scalable_s.to_bits()
+                && (Arc::ptr_eq(&a.links, &b.links) || a.links == b.links)
+        }
+        _ => false,
+    }
+}
+
+/// Match `rec`'s tasks against neighbor `nb` by construction-site key
+/// and compute the divergence horizon T\*: the earliest time at which a
+/// from-scratch simulation of `rec.tg` could differ from `nb`'s
+/// schedule.  Fills the caller's scratch vectors; `map`/`clean` feed
+/// [`Simulator::resume`] afterwards.
+///
+/// Tasks classify as **clean** (same site, bit-equal content, all deps
+/// clean and mapped — replayable), **soft** (same site, resource, kind,
+/// and dep structure, but a different duration or link load), or
+/// **dirty** (unmatched).  Difference points, whose minimum is T\*:
+///
+/// * a soft task with all-clean deps diverges no earlier than its old
+///   *dispatch* — FIFO queues order on `(ready, id)` only, and the
+///   site-keyed match is monotone in task id (both builds emit sections
+///   in one canonical order), so the prefix before that dispatch is
+///   unaffected by a payload-only change;
+/// * a dirty new task with all-clean deps enters its queue at its ready
+///   time (the max of its mapped deps' old finishes);
+/// * an old task matched by no new task stops influencing the run at
+///   its old dispatch (queued-but-undispatched entries never affect
+///   which *other* task a resource pops).
+///
+/// Every other changed task is downstream of one of the above, so its
+/// effects land at or after T\*.  `+∞` means the graphs are bit-
+/// identical; `<= 0` means divergence at t=0 (caller falls back to a
+/// full run).
+fn divergence_horizon(
+    rec: &EvalRecord,
+    nb: &EvalRecord,
+    map: &mut Vec<usize>,
+    clean: &mut Vec<bool>,
+    soft: &mut Vec<bool>,
+    matched_old: &mut Vec<bool>,
+) -> f64 {
+    let n = rec.tg.tasks.len();
+    let n_old = nb.tg.tasks.len();
+    map.clear();
+    map.resize(n, usize::MAX);
+    clean.clear();
+    clean.resize(n, false);
+    soft.clear();
+    soft.resize(n, false);
+    matched_old.clear();
+    matched_old.resize(n_old, false);
+
+    let mut horizon = f64::INFINITY;
+    for i in 0..n {
+        let t = &rec.tg.tasks[i];
+        let o = nb.index.get(&rec.keys[i]).copied().unwrap_or(usize::MAX);
+        // Deps precede their task in the push order, so `map`/`clean`/
+        // `soft` of every dep are already decided.
+        let structure = o != usize::MAX && {
+            let p = &nb.tg.tasks[o];
+            t.resource == p.resource
+                && t.kind == p.kind
+                && t.deps.len() == p.deps.len()
+                && t.deps
+                    .iter()
+                    .zip(&p.deps)
+                    .all(|(&dn, &dold)| map[dn] == dold && (clean[dn] || soft[dn]))
+        };
+        let deps_clean = t.deps.iter().all(|&d| clean[d]);
+        if structure {
+            let p = &nb.tg.tasks[o];
+            map[i] = o;
+            matched_old[o] = true;
+            let same_payload = t.duration.to_bits() == p.duration.to_bits()
+                && loads_equal(&t.load, &p.load);
+            if same_payload && deps_clean {
+                clean[i] = true;
+            } else {
+                soft[i] = true;
+                if deps_clean {
+                    horizon = horizon.min(nb.sched.start[o]);
+                }
+            }
+        } else if deps_clean {
+            let ready =
+                t.deps.iter().map(|&d| nb.sched.finish[map[d]]).fold(0.0f64, f64::max);
+            horizon = horizon.min(ready);
+        }
+    }
+    for o in 0..n_old {
+        if !matched_old[o] {
+            horizon = horizon.min(nb.sched.start[o]);
+        }
+    }
+    horizon
 }
 
 /// The strategy → task-graph compiler with its transposition table.
@@ -163,9 +405,14 @@ pub struct Lowering<'a> {
     /// link profile), reported alongside the evaluation memo stats.
     mask_hits: Cell<u64>,
     mask_misses: Cell<u64>,
-    /// Shared concurrent transposition table: per-worker `Lowering`s of a
-    /// parallel search clone this `Arc` so outcomes are pooled.
-    memo: Arc<MemoTable>,
+    /// Shared evaluation caches (transposition table, fragment store,
+    /// mask-profile memo): per-worker `Lowering`s of a parallel search
+    /// clone this bundle so all three tiers are pooled.
+    caches: EvalCaches,
+    /// Incremental evaluation on/off (fragment store + frontier
+    /// restart together; results are bit-identical either way).
+    delta: Cell<bool>,
+    ring: RefCell<Ring>,
     buffers: RefCell<EvalBuffers>,
     dp_cache: Cell<f64>,
 }
@@ -177,19 +424,43 @@ impl<'a> Lowering<'a> {
         cost: &'a CostModel,
         comm: &'a CommModel,
     ) -> Self {
-        Self::with_memo(gg, topo, cost, comm, Arc::new(MemoTable::new()))
+        Self::with_caches(gg, topo, cost, comm, EvalCaches::new())
     }
 
-    /// Build a lowering that shares `memo` with other lowerings — how the
-    /// tree-parallel search workers of [`crate::search`] pool their
-    /// evaluation outcomes (each worker owns a `Lowering`, all of them one
-    /// table).
+    /// Build a lowering that shares `memo` with other lowerings (fresh
+    /// fragment/profile tiers).  Prefer [`Lowering::with_caches`], which
+    /// shares all three.
     pub fn with_memo(
         gg: &'a GroupGraph,
         topo: &'a Topology,
         cost: &'a CostModel,
         comm: &'a CommModel,
         memo: Arc<MemoTable>,
+    ) -> Self {
+        Self::with_caches(
+            gg,
+            topo,
+            cost,
+            comm,
+            EvalCaches {
+                memo,
+                fragments: Arc::new(FragmentStore::new()),
+                profiles: Arc::new(MaskProfileMemo::new()),
+            },
+        )
+    }
+
+    /// Build a lowering that shares the full evaluation-cache bundle
+    /// with other lowerings — how the tree-parallel search workers of
+    /// [`crate::search`] pool outcomes, lowered fragments, and link
+    /// profiles (each worker owns a `Lowering`, all of them one set of
+    /// caches).
+    pub fn with_caches(
+        gg: &'a GroupGraph,
+        topo: &'a Topology,
+        cost: &'a CostModel,
+        comm: &'a CommModel,
+        caches: EvalCaches,
     ) -> Self {
         let m = topo.num_groups();
         let k = gg.num_groups();
@@ -232,12 +503,18 @@ impl<'a> Lowering<'a> {
             masks: RefCell::new(HashMap::new()),
             mask_hits: Cell::new(0),
             mask_misses: Cell::new(0),
-            memo,
+            caches,
+            delta: Cell::new(true),
+            ring: RefCell::new(Ring::default()),
             buffers: RefCell::new(EvalBuffers {
-                tg: TaskGraph::new(0),
                 sim: Simulator::new(),
                 comp: Vec::new(),
                 penalty: Vec::new(),
+                gfrags: Vec::new(),
+                delta_map: Vec::new(),
+                delta_clean: Vec::new(),
+                delta_soft: Vec::new(),
+                delta_matched: Vec::new(),
             }),
             dp_cache: Cell::new(f64::NAN),
         }
@@ -266,7 +543,7 @@ impl<'a> Lowering<'a> {
 
     /// (hits, misses) of the evaluation transposition table.
     pub fn memo_stats(&self) -> (u64, u64) {
-        self.memo.stats()
+        self.caches.memo.stats()
     }
 
     /// (hits, misses) of the per-placement-mask cache (device expansion
@@ -287,21 +564,61 @@ impl<'a> Lowering<'a> {
         }
     }
 
+    /// (hits, misses) of the shared cross-worker mask-profile tier
+    /// (sequential searches only miss here; hits measure reuse across
+    /// workers sharing one [`EvalCaches`]).
+    pub fn mask_profile_shared_stats(&self) -> (u64, u64) {
+        self.caches.profiles.stats()
+    }
+
     /// Hits / (hits + misses) of the transposition table (0.0 when it
     /// has never been probed).
     pub fn memo_hit_rate(&self) -> f64 {
-        self.memo.hit_rate()
+        self.caches.memo.hit_rate()
+    }
+
+    /// (hits, misses) of the shared lowered-fragment store.
+    pub fn fragment_stats(&self) -> (u64, u64) {
+        self.caches.fragments.stats()
+    }
+
+    /// Hits / (hits + misses) of the fragment store (0.0 when never
+    /// probed).
+    pub fn fragment_hit_rate(&self) -> f64 {
+        self.caches.fragments.hit_rate()
+    }
+
+    /// Snapshot of the shared delta-simulation counters.
+    pub fn delta_stats(&self) -> DeltaStats {
+        self.caches.fragments.delta_stats()
+    }
+
+    /// Enable/disable incremental evaluation (fragment store + frontier
+    /// restart).  Purely a performance knob: outcomes are bit-identical
+    /// either way.
+    pub fn set_delta(&self, on: bool) {
+        self.delta.set(on);
+    }
+
+    pub fn delta_enabled(&self) -> bool {
+        self.delta.get()
     }
 
     /// Drop all cached evaluations (used by the cold/warm benchmarks).
     pub fn clear_memo(&self) {
-        self.memo.clear();
+        self.caches.memo.clear();
     }
 
     /// The shared transposition table, for per-worker lowerings built
     /// through [`Lowering::with_memo`].
     pub fn memo_handle(&self) -> Arc<MemoTable> {
-        Arc::clone(&self.memo)
+        Arc::clone(&self.caches.memo)
+    }
+
+    /// The full shared cache bundle, for per-worker lowerings built
+    /// through [`Lowering::with_caches`].
+    pub fn caches_handle(&self) -> EvalCaches {
+        self.caches.clone()
     }
 
     /// Resolve a (possibly partial) strategy to per-group effective
@@ -315,8 +632,8 @@ impl<'a> Lowering<'a> {
     /// Exact memo key: resolved action per group + a flags word.
     fn signature(&self, acts: &[Action], s: &Strategy) -> Box<[u32]> {
         let mut key = Vec::with_capacity(acts.len() + 1);
-        for a in acts {
-            key.push((a.mask as u32) << 3 | a.option.index() as u32);
+        for &a in acts {
+            key.push(action_word(a));
         }
         let flags = u32::from(s.split == SplitMode::Proportional)
             | (u32::from(s.sync_barrier) << 1);
@@ -344,7 +661,9 @@ impl<'a> Lowering<'a> {
             .iter()
             .map(|&dg| self.topo.groups[dg].gpu.effective_flops() / total_eff)
             .collect();
-        let profile = self.topo.link_profile(&devices);
+        // The expensive routed-profile computation is shared across
+        // workers; this instance's Rc map stays the first-level tier.
+        let profile = self.caches.profiles.get_or(mask, || self.topo.link_profile(&devices));
         let info = Rc::new(MaskInfo {
             dev_count: devices.len(),
             devices,
@@ -361,20 +680,21 @@ impl<'a> Lowering<'a> {
     pub fn evaluate(&self, strategy: &Strategy) -> SimOutcome {
         let acts = self.resolve(strategy);
         let key = self.signature(&acts, strategy);
-        if let Some(hit) = self.memo.get(&key) {
+        if let Some(hit) = self.caches.memo.get(&key) {
             return hit;
         }
-        let out = self.lower_and_simulate(strategy, &acts, None);
-        self.memo.insert(key, out.clone());
+        let out = self.evaluate_miss(strategy, &acts, &key);
+        self.caches.memo.insert(key, out.clone());
         out
     }
 
     /// Evaluation bypassing the transposition table (bit-identical to
     /// [`Lowering::evaluate`]; used by property tests and the cold/warm
-    /// benchmarks).
+    /// benchmarks).  Never consults the neighbor ring or the delta
+    /// counters.
     pub fn evaluate_uncached(&self, strategy: &Strategy) -> SimOutcome {
         let acts = self.resolve(strategy);
-        self.lower_and_simulate(strategy, &acts, None)
+        self.lower_and_simulate_full(strategy, &acts, None)
     }
 
     /// Evaluate with an SFB plan folded in: covered gradients leave the
@@ -385,7 +705,7 @@ impl<'a> Lowering<'a> {
             None => self.evaluate(strategy),
             Some(p) => {
                 let acts = self.resolve(strategy);
-                self.lower_and_simulate(strategy, &acts, Some(p))
+                self.lower_and_simulate_full(strategy, &acts, Some(p))
             }
         }
     }
@@ -433,101 +753,94 @@ impl<'a> Lowering<'a> {
         }
     }
 
-    fn lower_and_simulate(
+    /// Everything about lowering group `g` that depends only on its own
+    /// resolved action and the split mode — the cacheable fragment.
+    fn make_group_fragment(
         &self,
-        strategy: &Strategy,
-        acts: &[Action],
-        plan: Option<&SfbPlan>,
-    ) -> SimOutcome {
+        g: usize,
+        a: Action,
+        info: &MaskInfo,
+        split: SplitMode,
+    ) -> GroupFragment {
         let m = self.topo.num_groups();
-        let k = self.gg.num_groups();
-        let chan = 2 * m;
-        let split = strategy.split;
-
-        let infos: Vec<Rc<MaskInfo>> = acts.iter().map(|a| self.mask_info(a.mask)).collect();
-
-        let mut bufs = self.buffers.borrow_mut();
-        let EvalBuffers { tg, sim, comp, penalty } = &mut *bufs;
-        tg.tasks.clear();
-        tg.num_resources = 2 * m + 1;
-        tg.num_links =
-            if self.topo.is_routed() { self.topo.link_graph().num_links() } else { 0 };
-        comp.clear();
-        comp.resize(k * m, usize::MAX);
-        penalty.clear();
-        penalty.resize(k, usize::MAX);
-
-        // ---- compute tasks (one per group per machine) + MP internal comm
-        for g in 0..k {
-            let a = acts[g];
-            let info = &infos[g];
-            for (mi, &dg) in info.machines.iter().enumerate() {
+        let comp: Vec<f64> = info
+            .machines
+            .iter()
+            .enumerate()
+            .map(|(mi, &dg)| {
                 let (i0, s0) = self.frag.lin[g * m + dg];
                 // NaN-preserving clamps: the push-time duration guard must
                 // see a corrupted cost model, not a silent 0.
-                let mut dur = match a.option {
+                match a.option {
                     ReplOption::AllReduce | ReplOption::Ps | ReplOption::Duplicate => {
                         (i0 + s0 * self.dev_frac(a, info, mi, split)).clamp(0.0, f64::INFINITY)
                     }
                     ReplOption::ModelParallel => ((i0 + s0) * info.frac_cap[mi] * MP_IMBALANCE)
                         .clamp(0.0, f64::INFINITY),
-                };
-                if let Some(p) = plan {
-                    dur += p.per_group[g].extra_compute_s;
                 }
-                comp[g * m + dg] = tg.push(Task {
-                    resource: dg,
-                    duration: dur,
-                    deps: Vec::new(),
-                    kind: TaskKind::Compute { group: g, dev_group: dg },
-                    load: None,
-                });
-            }
-            if a.option == ReplOption::ModelParallel && info.dev_count > 1 {
-                let bytes = MP_INTERNAL_COMM_FRAC * self.frag.act_bytes[g];
-                // Memoized routed bottleneck of the placement + worst
-                // path latency (0 on cliques).
-                let bw = info.profile.bottleneck_gbps * 1e9 / 8.0;
-                let src_dg = info.machines[0];
-                let dst_dg = *info.machines.last().unwrap();
-                let (fixed, scalable) = self.comm.transfer_parts(bytes, bw);
-                // On routed topologies the internal cut traffic occupies
-                // the representative cross-placement route, so it both
-                // suffers and causes shared-link contention (cliques
-                // keep the exact pre-link-graph duration).
-                let (duration, load) = if self.topo.is_routed() && src_dg != dst_dg {
-                    let route = self.topo.group_route(src_dg, dst_dg);
-                    (
-                        fixed + info.profile.max_latency_s,
-                        Some(LinkLoad { links: route.links.clone(), scalable_s: scalable }),
-                    )
-                } else {
-                    (fixed + scalable + info.profile.max_latency_s, None)
-                };
-                let deps: Vec<usize> =
-                    info.machines.iter().map(|&dg| comp[g * m + dg]).collect();
-                penalty[g] = tg.push(Task {
-                    resource: m + src_dg,
-                    duration,
-                    deps,
-                    kind: TaskKind::Transfer { from: g, to: g, src_dg, dst_dg },
-                    load,
-                });
-            }
-        }
+            })
+            .collect();
+        let penalty = (a.option == ReplOption::ModelParallel && info.dev_count > 1).then(|| {
+            let bytes = MP_INTERNAL_COMM_FRAC * self.frag.act_bytes[g];
+            // Memoized routed bottleneck of the placement + worst
+            // path latency (0 on cliques).
+            let bw = info.profile.bottleneck_gbps * 1e9 / 8.0;
+            let src_dg = info.machines[0];
+            let dst_dg = *info.machines.last().unwrap();
+            let (fixed, scalable) = self.comm.transfer_parts(bytes, bw);
+            // On routed topologies the internal cut traffic occupies
+            // the representative cross-placement route, so it both
+            // suffers and causes shared-link contention (cliques
+            // keep the exact pre-link-graph duration).
+            let (duration, load) = if self.topo.is_routed() && src_dg != dst_dg {
+                let route = self.topo.group_route(src_dg, dst_dg);
+                (
+                    fixed + info.profile.max_latency_s,
+                    Some(LinkLoad { links: route.links.clone(), scalable_s: scalable }),
+                )
+            } else {
+                (fixed + scalable + info.profile.max_latency_s, None)
+            };
+            PenaltyFragment { duration, src_dg, dst_dg, load }
+        });
+        let sync = (matches!(a.option, ReplOption::AllReduce | ReplOption::Ps)
+            && info.dev_count >= 2
+            && self.frag.grad_bytes[g] > 0.0)
+            .then(|| match a.option {
+                ReplOption::AllReduce => self.comm.allreduce_time_with(
+                    self.frag.grad_bytes[g],
+                    info.dev_count,
+                    info.profile,
+                ),
+                _ => {
+                    let ps = info.devices[g % info.dev_count];
+                    self.comm.ps_time(self.frag.grad_bytes[g], &info.devices, ps, self.topo)
+                }
+            });
+        GroupFragment { comp, penalty, sync }
+    }
 
-        // ---- inter-group tensor transfers (NIC-serialized)
-        for &(i, j, bytes) in &self.frag.edges {
-            let (ai, aj) = (acts[i], acts[j]);
-            let (fi, fj) = (&infos[i], &infos[j]);
-            for (mj, &b) in fj.machines.iter().enumerate() {
+    /// Everything about lowering one inter-group edge that depends only
+    /// on the endpoints' resolved actions and the split mode.
+    fn make_edge_fragment(
+        &self,
+        bytes: f64,
+        ai: Action,
+        aj: Action,
+        fi: &MaskInfo,
+        fj: &MaskInfo,
+        split: SplitMode,
+    ) -> EdgeFragment {
+        let m = self.topo.num_groups();
+        let emits = fj
+            .machines
+            .iter()
+            .enumerate()
+            .map(|(mj, &b)| {
                 let need = bytes * self.machine_frac(aj, fj, mj, split);
-                let local = fi.machine_pos(b);
-                let consumer = comp[j * m + b];
-                if let Some(pi_local) = local {
+                if let Some(pi_local) = fi.machine_pos(b) {
                     // Local share is free; gather any deficit from the best
                     // remote producer machine on b's inbound NIC.
-                    tg.tasks[consumer].deps.push(comp[i * m + b]);
                     let have = if ai.option == ReplOption::Duplicate {
                         bytes
                     } else {
@@ -536,7 +849,7 @@ impl<'a> Lowering<'a> {
                     let deficit = (need - have).max(0.0);
                     let remotes: Vec<usize> =
                         fi.machines.iter().copied().filter(|&a| a != b).collect();
-                    if deficit > 1.0 && !remotes.is_empty() {
+                    let transfer = (deficit > 1.0 && !remotes.is_empty()).then(|| {
                         let src = remotes
                             .iter()
                             .copied()
@@ -549,19 +862,9 @@ impl<'a> Lowering<'a> {
                             })
                             .unwrap();
                         let (duration, load) = self.transfer_task_parts(deficit, src, b);
-                        let mut deps = vec![comp[i * m + src]];
-                        if penalty[i] != usize::MAX {
-                            deps.push(penalty[i]);
-                        }
-                        let t = tg.push(Task {
-                            resource: m + b,
-                            duration,
-                            deps,
-                            kind: TaskKind::Transfer { from: i, to: j, src_dg: src, dst_dg: b },
-                            load,
-                        });
-                        tg.tasks[consumer].deps.push(t);
-                    }
+                        TransferFragment { resource: m + b, duration, src, load }
+                    });
+                    EdgeEmit { local: true, transfer }
                 } else {
                     // Remote consumer machine: full needed share travels
                     // from the best producer machine over its NIC.
@@ -577,21 +880,131 @@ impl<'a> Lowering<'a> {
                                 .then(y.cmp(&x))
                         })
                         .unwrap();
-                    if need > 1.0 {
+                    let transfer = (need > 1.0).then(|| {
                         let (duration, load) = self.transfer_task_parts(need, src, b);
-                        let mut deps = vec![comp[i * m + src]];
-                        if penalty[i] != usize::MAX {
-                            deps.push(penalty[i]);
-                        }
-                        let t = tg.push(Task {
-                            resource: m + src,
-                            duration,
-                            deps,
-                            kind: TaskKind::Transfer { from: i, to: j, src_dg: src, dst_dg: b },
-                            load,
-                        });
-                        tg.tasks[consumer].deps.push(t);
+                        TransferFragment { resource: m + src, duration, src, load }
+                    });
+                    EdgeEmit { local: false, transfer }
+                }
+            })
+            .collect();
+        EdgeFragment { emits }
+    }
+
+    /// Lower `strategy` into `rec`'s task graph (+ construction keys and
+    /// key index).  With delta on, group/edge fragments come from the
+    /// shared store; with delta off they are computed inline — the
+    /// emitted graph is bit-identical either way.
+    fn lower_into(
+        &self,
+        strategy: &Strategy,
+        acts: &[Action],
+        infos: &[Rc<MaskInfo>],
+        plan: Option<&SfbPlan>,
+        rec: &mut EvalRecord,
+    ) {
+        let m = self.topo.num_groups();
+        let k = self.gg.num_groups();
+        let chan = 2 * m;
+        let split = strategy.split;
+        let prop = split == SplitMode::Proportional;
+        let use_store = self.delta.get();
+
+        let mut bufs = self.buffers.borrow_mut();
+        let EvalBuffers { comp, penalty, gfrags, .. } = &mut *bufs;
+        let EvalRecord { tg, keys, index, .. } = rec;
+        tg.tasks.clear();
+        tg.num_resources = 2 * m + 1;
+        tg.num_links =
+            if self.topo.is_routed() { self.topo.link_graph().num_links() } else { 0 };
+        keys.clear();
+        comp.clear();
+        comp.resize(k * m, usize::MAX);
+        penalty.clear();
+        penalty.resize(k, usize::MAX);
+        gfrags.clear();
+
+        // ---- compute tasks (one per group per machine) + MP internal comm
+        for g in 0..k {
+            let a = acts[g];
+            let info = &infos[g];
+            let gkey = GroupKey { group: g as u32, action: action_word(a), proportional: prop };
+            let frag = if use_store {
+                self.caches.fragments.group(gkey, || self.make_group_fragment(g, a, info, split))
+            } else {
+                Arc::new(self.make_group_fragment(g, a, info, split))
+            };
+            for (mi, &dg) in info.machines.iter().enumerate() {
+                let mut dur = frag.comp[mi];
+                if let Some(p) = plan {
+                    dur += p.per_group[g].extra_compute_s;
+                }
+                comp[g * m + dg] = tg.push(Task {
+                    resource: dg,
+                    duration: dur,
+                    deps: Vec::new(),
+                    kind: TaskKind::Compute { group: g, dev_group: dg },
+                    load: None,
+                });
+                keys.push(KEY_COMP | (g as u64) << 16 | dg as u64);
+            }
+            if let Some(pen) = &frag.penalty {
+                let deps: Vec<usize> =
+                    info.machines.iter().map(|&dg| comp[g * m + dg]).collect();
+                penalty[g] = tg.push(Task {
+                    resource: m + pen.src_dg,
+                    duration: pen.duration,
+                    deps,
+                    kind: TaskKind::Transfer {
+                        from: g,
+                        to: g,
+                        src_dg: pen.src_dg,
+                        dst_dg: pen.dst_dg,
+                    },
+                    load: pen.load.clone(),
+                });
+                keys.push(KEY_PENALTY | g as u64);
+            }
+            gfrags.push(frag);
+        }
+
+        // ---- inter-group tensor transfers (NIC-serialized)
+        for (e, &(i, j, bytes)) in self.frag.edges.iter().enumerate() {
+            let (ai, aj) = (acts[i], acts[j]);
+            let (fi, fj) = (&infos[i], &infos[j]);
+            let ekey = EdgeKey {
+                edge: e as u32,
+                producer: action_word(ai),
+                consumer: action_word(aj),
+                proportional: prop,
+            };
+            let frag = if use_store {
+                self.caches
+                    .fragments
+                    .edge(ekey, || self.make_edge_fragment(bytes, ai, aj, fi, fj, split))
+            } else {
+                Arc::new(self.make_edge_fragment(bytes, ai, aj, fi, fj, split))
+            };
+            for (mj, &b) in fj.machines.iter().enumerate() {
+                let emit = &frag.emits[mj];
+                let consumer = comp[j * m + b];
+                if emit.local {
+                    tg.tasks[consumer].deps.push(comp[i * m + b]);
+                }
+                if let Some(tr) = &emit.transfer {
+                    let mut deps = vec![comp[i * m + tr.src]];
+                    if penalty[i] != usize::MAX {
+                        deps.push(penalty[i]);
                     }
+                    let t = tg.push(Task {
+                        resource: tr.resource,
+                        duration: tr.duration,
+                        deps,
+                        kind: TaskKind::Transfer { from: i, to: j, src_dg: tr.src, dst_dg: b },
+                        load: tr.load.clone(),
+                    });
+                    keys.push(KEY_EDGE | (e as u64) << 20 | b as u64);
+                    tg.tasks[consumer].deps.push(t);
                 }
                 if penalty[i] != usize::MAX {
                     tg.tasks[consumer].deps.push(penalty[i]);
@@ -602,27 +1015,28 @@ impl<'a> Lowering<'a> {
         // ---- gradient synchronization + SFB broadcast on the channel
         let mut barrier = usize::MAX;
         for g in 0..k {
+            let Some(base_sync) = gfrags[g].sync else { continue };
             let a = acts[g];
-            if !matches!(a.option, ReplOption::AllReduce | ReplOption::Ps) {
-                continue;
-            }
             let info = &infos[g];
-            if info.dev_count < 2 || self.frag.grad_bytes[g] <= 0.0 {
-                continue;
-            }
-            let mut sync_bytes = self.frag.grad_bytes[g];
-            let mut bcast_bytes = 0.0;
-            if let Some(p) = plan {
-                sync_bytes = (sync_bytes - p.per_group[g].saved_sync_bytes).max(0.0);
-                bcast_bytes = p.per_group[g].broadcast_bytes;
-            }
-            let dur = match a.option {
-                ReplOption::AllReduce => {
-                    self.comm.allreduce_time_with(sync_bytes, info.dev_count, info.profile)
-                }
-                _ => {
-                    let ps = info.devices[g % info.dev_count];
-                    self.comm.ps_time(sync_bytes, &info.devices, ps, self.topo)
+            let (dur, bcast_bytes) = match plan {
+                // The fragment caches the plan-free sync duration.
+                None => (base_sync, 0.0),
+                Some(p) => {
+                    let sync_bytes = (self.frag.grad_bytes[g]
+                        - p.per_group[g].saved_sync_bytes)
+                        .max(0.0);
+                    let dur = match a.option {
+                        ReplOption::AllReduce => self.comm.allreduce_time_with(
+                            sync_bytes,
+                            info.dev_count,
+                            info.profile,
+                        ),
+                        _ => {
+                            let ps = info.devices[g % info.dev_count];
+                            self.comm.ps_time(sync_bytes, &info.devices, ps, self.topo)
+                        }
+                    };
+                    (dur, p.per_group[g].broadcast_bytes)
                 }
             };
             let mut deps: Vec<usize> =
@@ -638,6 +1052,7 @@ impl<'a> Lowering<'a> {
                         kind: TaskKind::Marker,
                         load: None,
                     });
+                    keys.push(KEY_BARRIER);
                 }
                 deps.push(barrier);
             }
@@ -648,6 +1063,7 @@ impl<'a> Lowering<'a> {
                 kind: TaskKind::Sync { group: g },
                 load: None,
             });
+            keys.push(KEY_SYNC | g as u64);
             if bcast_bytes > 0.0 {
                 let deps: Vec<usize> =
                     info.machines.iter().map(|&dg| comp[g * m + dg]).collect();
@@ -660,13 +1076,32 @@ impl<'a> Lowering<'a> {
                     kind: TaskKind::Sync { group: g },
                     load: None,
                 });
+                keys.push(KEY_BCAST | g as u64);
             }
         }
 
-        // ---- simulate
-        let sched = sim.run(tg);
+        debug_assert_eq!(keys.len(), tg.tasks.len());
+        index.clear();
+        index.reserve(keys.len());
+        for (t, &key) in keys.iter().enumerate() {
+            let dup = index.insert(key, t);
+            debug_assert!(dup.is_none(), "construction keys must be unique");
+        }
+    }
 
-        // ---- feedback extraction
+    /// Feedback extraction + analytic memory/OOM over a simulated
+    /// schedule (shared by the full and delta simulation paths).
+    fn outcome_from(
+        &self,
+        split: SplitMode,
+        acts: &[Action],
+        infos: &[Rc<MaskInfo>],
+        tg: &TaskGraph,
+        sched: &Schedule,
+    ) -> SimOutcome {
+        let m = self.topo.num_groups();
+        let k = self.gg.num_groups();
+
         let mut fb = Feedback {
             group_makespan: vec![0.0; k],
             group_idle_before_send: vec![0.0; k],
@@ -733,6 +1168,91 @@ impl<'a> Lowering<'a> {
 
         SimOutcome { time: sched.makespan.max(1e-9), oom, feedback: fb }
     }
+
+    /// Memo-miss evaluation: lower, try the frontier-restart delta path
+    /// against the neighbor ring, fall back to a full simulation, and
+    /// retire the record into the ring.
+    fn evaluate_miss(&self, strategy: &Strategy, acts: &[Action], sig: &[u32]) -> SimOutcome {
+        let infos: Vec<Rc<MaskInfo>> = acts.iter().map(|a| self.mask_info(a.mask)).collect();
+        let mut ring = self.ring.borrow_mut();
+        let mut rec = ring.take_scratch();
+        self.lower_into(strategy, acts, &infos, None, &mut rec);
+        let n = rec.tg.tasks.len();
+
+        let mut simulated = false;
+        if self.delta.get() {
+            if let Some(nb) = ring.best_neighbor(sig) {
+                let mut bufs = self.buffers.borrow_mut();
+                let EvalBuffers { sim, delta_map, delta_clean, delta_soft, delta_matched, .. } =
+                    &mut *bufs;
+                let horizon = divergence_horizon(
+                    &rec,
+                    nb,
+                    delta_map,
+                    delta_clean,
+                    delta_soft,
+                    delta_matched,
+                );
+                if horizon.is_infinite() {
+                    // Bit-identical graphs (the memo entry was evicted):
+                    // the schedule replays wholesale.  Feedback and
+                    // memory still recompute below — they depend on the
+                    // actions, not just the graph.
+                    rec.sched.clone_from(&nb.sched);
+                    self.caches.fragments.record_delta(n, n);
+                    simulated = true;
+                } else if horizon > 0.0 {
+                    // `resume`'s map must only carry provably identical
+                    // tasks; soft-matched entries were mapped for
+                    // structure matching only.
+                    for i in 0..n {
+                        if !delta_clean[i] {
+                            delta_map[i] = usize::MAX;
+                        }
+                    }
+                    let replayed = (0..n)
+                        .filter(|&i| {
+                            delta_map[i] != usize::MAX
+                                && nb.sched.start[delta_map[i]] < horizon
+                        })
+                        .count();
+                    rec.sched = sim.resume(&rec.tg, &nb.sched, delta_map, horizon);
+                    self.caches.fragments.record_delta(replayed, n);
+                    simulated = true;
+                }
+                // horizon <= 0: divergence at t=0 — nothing to replay.
+            }
+        }
+        if !simulated {
+            rec.sched = self.buffers.borrow_mut().sim.run(&rec.tg);
+            self.caches.fragments.record_full();
+        }
+
+        let out = self.outcome_from(strategy.split, acts, &infos, &rec.tg, &rec.sched);
+        rec.sig.clear();
+        rec.sig.extend_from_slice(sig);
+        ring.push(rec);
+        out
+    }
+
+    /// Always-full evaluation path (uncached/SFB callers): lower,
+    /// simulate from t=0, recycle the record as scratch without
+    /// entering the neighbor ring or touching the delta counters.
+    fn lower_and_simulate_full(
+        &self,
+        strategy: &Strategy,
+        acts: &[Action],
+        plan: Option<&SfbPlan>,
+    ) -> SimOutcome {
+        let infos: Vec<Rc<MaskInfo>> = acts.iter().map(|a| self.mask_info(a.mask)).collect();
+        let mut ring = self.ring.borrow_mut();
+        let mut rec = ring.take_scratch();
+        self.lower_into(strategy, acts, &infos, plan, &mut rec);
+        rec.sched = self.buffers.borrow_mut().sim.run(&rec.tg);
+        let out = self.outcome_from(strategy.split, acts, &infos, &rec.tg, &rec.sched);
+        ring.give_back(rec);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -750,6 +1270,24 @@ mod tests {
         let gg = group_ops(&m, &cost, 12, 7);
         let comm = CommModel::fit(3);
         (gg, cost, comm)
+    }
+
+    /// Bitwise equality over every f64 an outcome carries (== would
+    /// accept -0.0 vs 0.0 and reject nothing else, but the delta
+    /// contract is exact bit identity).
+    fn assert_outcome_bits_eq(a: &SimOutcome, b: &SimOutcome) {
+        assert_eq!(a.time.to_bits(), b.time.to_bits());
+        assert_eq!(a.oom, b.oom);
+        let (fa, fb) = (&a.feedback, &b.feedback);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&fa.group_makespan), bits(&fb.group_makespan));
+        assert_eq!(bits(&fa.group_idle_before_send), bits(&fb.group_idle_before_send));
+        assert_eq!(bits(&fa.devgroup_peak_mem_frac), bits(&fb.devgroup_peak_mem_frac));
+        assert_eq!(bits(&fa.devgroup_idle), bits(&fb.devgroup_idle));
+        assert_eq!(fa.link_idle.len(), fb.link_idle.len());
+        for (ra, rb) in fa.link_idle.iter().zip(&fb.link_idle) {
+            assert_eq!(bits(ra), bits(rb));
+        }
     }
 
     #[test]
@@ -894,5 +1432,87 @@ mod tests {
         let t_even = low.evaluate(&even).time;
         let t_prop = low.evaluate(&prop).time;
         assert!(t_prop <= t_even + 1e-12, "prop {t_prop} vs even {t_even}");
+    }
+
+    #[test]
+    fn delta_path_bit_identical_on_single_flips() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        let ng = gg.num_groups();
+        let base = Strategy::dp_allreduce(ng, &topo);
+        let _ = low.evaluate(&base);
+        // Option flips on the full mask first: AllReduce→Ps changes only
+        // the group's sync task, so its divergence horizon is the old
+        // sync dispatch — a guaranteed frontier restart.  Mask flips from
+        // the general enumeration may legitimately fall back (a new
+        // compute root diverges at t=0); bit-identity must hold for all.
+        let full = full_mask(&topo);
+        let mut flips: Vec<Action> =
+            [ReplOption::Ps, ReplOption::Duplicate, ReplOption::ModelParallel]
+                .into_iter()
+                .map(|option| Action { mask: full, option })
+                .collect();
+        flips.extend(enumerate_actions(&topo).into_iter().take(4));
+        for a in flips {
+            let mut s = base.clone();
+            s.slots[low.order[1]] = Some(a);
+            let fast = low.evaluate(&s);
+            // A fresh Lowering so the oracle shares nothing with the
+            // delta-evaluated instance.
+            let oracle = Lowering::new(&gg, &topo, &cost, &comm);
+            oracle.set_delta(false);
+            let slow = oracle.evaluate_uncached(&s);
+            assert_outcome_bits_eq(&fast, &slow);
+        }
+        let d = low.delta_stats();
+        assert!(d.delta_evals >= 1, "some single flip must take the delta path: {d:?}");
+        assert!(low.fragment_hit_rate() > 0.0, "flips must reuse unchanged fragments");
+    }
+
+    #[test]
+    fn delta_disabled_still_exact_and_counts_full() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        low.set_delta(false);
+        assert!(!low.delta_enabled());
+        let ng = gg.num_groups();
+        let base = Strategy::dp_allreduce(ng, &topo);
+        let _ = low.evaluate(&base);
+        for a in enumerate_actions(&topo).into_iter().take(4) {
+            let mut s = base.clone();
+            s.slots[low.order[1]] = Some(a);
+            let off = low.evaluate(&s);
+            let oracle = Lowering::new(&gg, &topo, &cost, &comm);
+            let on = oracle.evaluate_uncached(&s);
+            assert_outcome_bits_eq(&off, &on);
+        }
+        let d = low.delta_stats();
+        assert_eq!(d.delta_evals, 0, "delta off must never frontier-restart");
+        assert!(d.full_evals >= 1);
+        assert_eq!(low.fragment_stats(), (0, 0), "delta off must bypass the store");
+    }
+
+    #[test]
+    fn with_caches_shares_fragments_across_lowerings() {
+        let topo = testbed();
+        let (gg, cost, comm) = setup(&topo);
+        let first = Lowering::new(&gg, &topo, &cost, &comm);
+        let dp = Strategy::dp_allreduce(gg.num_groups(), &topo);
+        let a = first.evaluate(&dp);
+        let (_, misses_first) = first.fragment_stats();
+        assert!(misses_first >= 1, "first build fills the store");
+        let second =
+            Lowering::with_caches(&gg, &topo, &cost, &comm, first.caches_handle());
+        // The second lowering's memo hits (shared table), so force the
+        // build path to exercise fragment reuse.
+        let b = second.evaluate_uncached(&dp);
+        assert_eq!(a, b);
+        let (hits, misses) = second.fragment_stats();
+        assert_eq!(misses, misses_first, "second build computes no new fragments");
+        assert!(hits >= misses_first, "every fragment replays from the shared store");
+        let (ph, pm) = second.mask_profile_shared_stats();
+        assert!(ph >= 1 && pm >= 1, "link profiles shared across lowerings: {ph}/{pm}");
     }
 }

@@ -29,8 +29,25 @@
 //! on one lock.  `dist::Lowering` holds the table behind an `Arc`
 //! ([`Lowering::memo_handle`](super::Lowering::memo_handle)), so per-worker
 //! lowerings can pool their outcomes.
+//!
+//! ## Eviction: two generations, not a wholesale clear
+//!
+//! A full shard used to be cleared outright, which left long-lived
+//! `tag serve` / `tag fleet` daemons facing a fully cold stripe right
+//! after the eviction — dropping exactly the warmest entries.  Shards
+//! now rotate through **two generations** ([`TwoGen`], the
+//! `api/cache.rs` idiom): when the hot generation fills, it *becomes*
+//! the cold generation and a fresh hot one starts; a lookup that misses
+//! hot but hits cold promotes the entry back into hot.  At any instant
+//! the most recent `SHARD_CAPACITY` insertions are retained exactly,
+//! and an entry survives at most two generations without a hit.
+//! Searches small enough never to rotate (every bounded MCTS run in the
+//! tests and benches) see byte-identical hit/miss sequences to the old
+//! single-map table.
 
+use std::borrow::Borrow;
 use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
@@ -41,10 +58,9 @@ use super::lower::SimOutcome;
 /// sweeps stay trivial.
 pub const MEMO_SHARDS: usize = 16;
 
-/// Hard cap on cached entries across all shards; a shard is cleared
-/// wholesale when its share fills (searches are bounded, so eviction
-/// order is irrelevant — this only guards pathological long-lived
-/// `Lowering` instances).
+/// Soft cap on cached entries across all shards: each shard keeps at
+/// most `2 * SHARD_CAPACITY` entries (hot + cold generation), so the
+/// table holds at most `2 * MEMO_CAPACITY` outcomes.
 pub const MEMO_CAPACITY: usize = 1 << 16;
 
 const SHARD_CAPACITY: usize = MEMO_CAPACITY / MEMO_SHARDS;
@@ -57,19 +73,86 @@ fn shard_index(key: &[u32]) -> usize {
         h ^= w as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
-    // High bits are the best-mixed ones for a non-power-of-two-agnostic
-    // reduction; MEMO_SHARDS is a power of two so a mask would also do.
-    (h >> 32) as usize % MEMO_SHARDS
+    // High bits are the best-mixed ones; MEMO_SHARDS is a power of two,
+    // so reduce with a mask instead of the previous `%`.
+    (h >> 32) as usize & (MEMO_SHARDS - 1)
 }
 
-#[derive(Default)]
-struct Shard {
-    map: HashMap<Box<[u32]>, SimOutcome>,
+/// A two-generation (hot/cold) bounded map: the `api/cache.rs` eviction
+/// idiom, factored out so the evaluation memo and the fragment store
+/// share it.  When the hot generation reaches `capacity` and a *new*
+/// key arrives, hot becomes cold (dropping the previous cold
+/// generation) and a fresh hot generation starts.  Reads that miss hot
+/// but hit cold promote the entry back into hot, so actively reused
+/// entries never age out.
+pub(crate) struct TwoGen<K, V> {
+    hot: HashMap<K, V>,
+    cold: HashMap<K, V>,
+    capacity: usize,
 }
+
+impl<K: Eq + Hash, V> TwoGen<K, V> {
+    pub(crate) fn new(capacity: usize) -> Self {
+        Self { hot: HashMap::new(), cold: HashMap::new(), capacity: capacity.max(1) }
+    }
+
+    /// Hot-generation lookup only — safe under a shared (read) lock.
+    pub(crate) fn peek_hot<Q>(&self, key: &Q) -> Option<&V>
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized,
+    {
+        self.hot.get(key)
+    }
+
+    /// Full lookup with cold→hot promotion; needs the exclusive lock.
+    pub(crate) fn get_promote<Q>(&mut self, key: &Q) -> Option<&V>
+    where
+        K: Borrow<Q> + Clone,
+        Q: Eq + Hash + ?Sized,
+    {
+        // Double-check hot (the caller may have dropped a read lock
+        // between its hot miss and acquiring the write lock).
+        if self.hot.contains_key(key) {
+            return self.hot.get(key);
+        }
+        if let Some((k, v)) = self.cold.remove_entry(key) {
+            // Promotion does not rotate (that would drop the very
+            // generation being read); `insert` re-establishes the bound
+            // on its next rotation.
+            self.hot.insert(k, v);
+            return self.hot.get(key);
+        }
+        None
+    }
+
+    pub(crate) fn insert(&mut self, key: K, value: V) {
+        if self.hot.len() >= self.capacity && !self.hot.contains_key(&key) {
+            self.cold = std::mem::take(&mut self.hot);
+        }
+        self.cold.remove(&key);
+        self.hot.insert(key, value);
+    }
+
+    pub(crate) fn clear(&mut self) {
+        self.hot.clear();
+        self.cold.clear();
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.hot.len() + self.cold.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.hot.is_empty() && self.cold.is_empty()
+    }
+}
+
+type Shard = TwoGen<Box<[u32]>, SimOutcome>;
 
 /// Sharded, lock-striped evaluation cache with exact hit/miss
-/// accounting.  All methods take `&self`; clone an `Arc<MemoTable>` to
-/// share it across search workers.
+/// accounting and two-generation eviction.  All methods take `&self`;
+/// clone an `Arc<MemoTable>` to share it across search workers.
 pub struct MemoTable {
     shards: Vec<RwLock<Shard>>,
     hits: AtomicU64,
@@ -85,15 +168,22 @@ impl Default for MemoTable {
 impl MemoTable {
     pub fn new() -> Self {
         Self {
-            shards: (0..MEMO_SHARDS).map(|_| RwLock::new(Shard::default())).collect(),
+            shards: (0..MEMO_SHARDS).map(|_| RwLock::new(TwoGen::new(SHARD_CAPACITY))).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
     }
 
     pub fn get(&self, key: &[u32]) -> Option<SimOutcome> {
-        let shard = self.shards[shard_index(key)].read().unwrap();
-        match shard.map.get(key) {
+        let shard = &self.shards[shard_index(key)];
+        // Fast path: hot-generation hit under the shared lock.
+        if let Some(v) = shard.read().unwrap().peek_hot(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(v.clone());
+        }
+        // Slow path: the exclusive lock allows cold→hot promotion.
+        let mut shard = shard.write().unwrap();
+        match shard.get_promote(key) {
             Some(v) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(v.clone())
@@ -106,27 +196,23 @@ impl MemoTable {
     }
 
     pub fn insert(&self, key: Box<[u32]>, value: SimOutcome) {
-        let mut shard = self.shards[shard_index(&key)].write().unwrap();
-        if shard.map.len() >= SHARD_CAPACITY {
-            shard.map.clear();
-        }
-        shard.map.insert(key, value);
+        self.shards[shard_index(&key)].write().unwrap().insert(key, value);
     }
 
     pub fn clear(&self) {
         for shard in &self.shards {
-            shard.write().unwrap().map.clear();
+            shard.write().unwrap().clear();
         }
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().map.len()).sum()
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.shards.iter().all(|s| s.read().unwrap().map.is_empty())
+        self.shards.iter().all(|s| s.read().unwrap().is_empty())
     }
 
     /// (hits, misses) since construction or the last `clear`.
@@ -147,7 +233,7 @@ impl MemoTable {
 
     /// Entry count per stripe (test/diagnostic visibility into striping).
     pub fn shard_lens(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.read().unwrap().map.len()).collect()
+        self.shards.iter().map(|s| s.read().unwrap().len()).collect()
     }
 }
 
@@ -237,5 +323,50 @@ mod tests {
         assert!(misses >= KEYS as u64, "each key must miss at least once");
         assert!(hits > 0, "steady state must hit");
         assert_eq!(m.len(), KEYS);
+    }
+
+    #[test]
+    fn rotation_keeps_the_previous_generation_warm() {
+        // A tiny TwoGen directly: filling hot and inserting one more must
+        // not leave the map cold, and unused entries die after two
+        // generations while promoted ones survive.
+        let mut g: TwoGen<u32, u32> = TwoGen::new(2);
+        g.insert(1, 10);
+        g.insert(2, 20);
+        g.insert(3, 30); // rotates: cold={1,2}, hot={3}
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.get_promote(&1), Some(&10)); // promotes 1 into hot
+        g.insert(4, 40); // rotates: cold={1,3}, hot={4}
+        g.insert(5, 50); // hot={4,5}
+        assert!(g.get_promote(&1).is_some(), "promoted entry survives");
+        assert!(g.get_promote(&2).is_none(), "two generations old: evicted");
+        // Re-inserting an existing hot key never rotates.
+        let mut g: TwoGen<u32, u32> = TwoGen::new(2);
+        g.insert(1, 10);
+        g.insert(2, 20);
+        g.insert(2, 21);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.peek_hot(&2), Some(&21));
+    }
+
+    #[test]
+    fn memo_eviction_is_generational_not_wholesale() {
+        // Overfill one logical table far past capacity: the table must
+        // stay bounded by two generations per shard and still serve
+        // recently inserted keys (the old wholesale clear dropped them).
+        let m = MemoTable::new();
+        let total = MEMO_CAPACITY * 3;
+        let mut last = Vec::new();
+        for i in 0..total as u32 {
+            let key: Box<[u32]> = vec![i, i ^ 0x5bd1, 9].into_boxed_slice();
+            m.insert(key.clone(), outcome(f64::from(i)));
+            if i as usize >= total - 64 {
+                last.push(key);
+            }
+        }
+        assert!(m.len() <= 2 * MEMO_CAPACITY);
+        for key in &last {
+            assert!(m.get(key).is_some(), "freshly inserted keys must survive eviction");
+        }
     }
 }

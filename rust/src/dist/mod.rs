@@ -27,23 +27,32 @@
 //!   signature**: the per-group *effective* action vector after the
 //!   paper's footnote-2 completion rule, so distinct partial strategies
 //!   that complete to the same deployment share one cache entry.  The
-//!   table is sharded and `RwLock`-striped with atomic counters — the
-//!   one implementation behind both the sequential engine and the
-//!   tree-parallel workers of [`crate::search`], which share it through
-//!   [`Lowering::memo_handle`].
-//! * per-group task *fragments* (summed linear batch-time models per
-//!   machine, the inter-group edge list, mask → device-set expansions)
-//!   are precomputed once in [`Lowering::new`] and stitched per strategy
-//!   instead of re-deriving them from the op graph on every call.
+//!   table is sharded and `RwLock`-striped with atomic counters, and
+//!   evicts by two-generation hot/cold rotation so long-lived daemons
+//!   never drop their warmest entries wholesale.
+//! * [`fragments`] — the **incremental-evaluation layer**: a shared
+//!   [`FragmentStore`] memoizes per-group and per-edge lowered pieces
+//!   keyed on the resolved actions, and each `Lowering` keeps a small
+//!   ring of recent (graph, schedule) records so a signature differing
+//!   from a neighbor in a few groups re-simulates only from its proven
+//!   divergence horizon ([`crate::sim::Simulator::resume`]).  Outcomes
+//!   are bit-identical with the path on or off; `delta_hit_rate` /
+//!   `frontier_restart_frac` ride in plan telemetry.
+//! * all three shared tiers (evaluation memo, fragment store, mask
+//!   link-profile memo) travel as one [`EvalCaches`] bundle, cloned into
+//!   the per-worker `Lowering`s of [`crate::search`] through
+//!   [`Lowering::with_caches`].
 //! * the discrete-event simulator's indegree/successor/queue buffers are
 //!   preallocated and reused across evaluations
 //!   ([`crate::sim::Simulator`]).
 //!
 //! [`Strategy`]: crate::strategy::Strategy
 
+pub mod fragments;
 pub mod lower;
 pub mod memo;
 pub mod rewrite;
 
-pub use lower::{Feedback, Lowering, SimOutcome};
+pub use fragments::{DeltaStats, EvalCaches, FragmentStore, MaskProfileMemo};
+pub use lower::{Feedback, Lowering, SimOutcome, DELTA_MAX_FLIPS};
 pub use rewrite::{rewrite as rewrite_graph, DistGraph};

@@ -101,7 +101,14 @@
 //!   route over switches and contend for shared links,
 //! * a **discrete-event simulator** ([`sim`]) that provides rewards and
 //!   runtime-feedback features, with per-link occupancy so concurrent
-//!   transfers through a shared link split its bandwidth,
+//!   transfers through a shared link split its bandwidth, and a
+//!   frontier-restart mode ([`sim::Simulator::resume`]) that replays a
+//!   previous schedule up to a proven divergence horizon,
+//! * an **incremental-evaluation layer** ([`dist::fragments`]): a
+//!   shared fragment store memoizes per-group/per-edge lowered pieces
+//!   and neighboring strategies re-simulate only their divergent tail —
+//!   bit-identical to full evaluation, property-pinned, `--no-delta` to
+//!   disable,
 //! * a **sufficient-factor-broadcasting optimizer** ([`sfb`]) that solves a
 //!   min-cut-style ILP per gradient,
 //! * a **graph compiler** ([`dist`]) that rewrites the computation graph

@@ -27,7 +27,9 @@
 //! with `-` (e.g. `--scale -0.5`).  `--workers=K` runs K tree-parallel
 //! search workers over a shared tree (K=1, the default, is the exact
 //! sequential engine; K>1 is seed-stable but schedule-dependent —
-//! `--vloss` tunes the virtual-loss penalty).  The `nvlink_island`,
+//! `--vloss` tunes the virtual-loss penalty).  `--no-delta` disables
+//! incremental (delta) evaluation — plans are bit-identical either
+//! way; the flag exists for benchmarking and as an escape hatch.  The `nvlink_island`,
 //! `multi_rack` and `hier:SEED` topologies are *routed*: they carry a
 //! switch-level link graph, and their simulated times include per-hop
 //! latency and shared-link contention.
@@ -86,6 +88,7 @@ fn request_from(args: &Args) -> PlanRequest {
         .budget(args.num("iters", 150), args.num("groups", 24))
         .seed(args.num("seed", 1))
         .sfb(!args.flag("no-sfb"))
+        .delta(!args.flag("no-delta"))
         .profile_noise(args.num("noise", 0.0))
         .parallelism(Parallelism {
             workers: args.num("workers", 1usize).max(1),

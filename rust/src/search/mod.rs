@@ -165,9 +165,10 @@ struct WorkerOutcome {
 /// Run a (possibly parallel) MCTS over `prob` with one prior provider
 /// per worker.  `low` is the calling thread's lowering — the inline
 /// engine at one worker, the pre-warm/harvest lowering otherwise; the
-/// spawned workers build their own lowerings sharing its memo table
-/// ([`Lowering::memo_handle`]).  See the module docs for the
-/// determinism contract.
+/// spawned workers build their own lowerings sharing its evaluation
+/// caches (memo table, fragment store, mask-profile memo —
+/// [`Lowering::caches_handle`]) and its delta-evaluation setting.  See
+/// the module docs for the determinism contract.
 #[allow(clippy::too_many_arguments)]
 pub fn run_search<P: PriorProvider + Send>(
     prob: &SearchProblem<'_>,
@@ -256,12 +257,13 @@ pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
     // thread: every worker needs dp_time for its reward scale, and one
     // evaluation + K guaranteed hits beats K racing misses.
     let dp_time = low.dp_time();
-    let memo = low.memo_handle();
+    let caches = low.caches_handle();
+    let delta = low.delta_enabled();
 
     let tree = SearchTree::new();
     let root_idx = AtomicUsize::new(UNEXPANDED);
     let barrier = Barrier::new(k);
-    let memo_ref = &memo;
+    let caches_ref = &caches;
     let outcomes: Vec<WorkerOutcome> = std::thread::scope(|s| {
         let handles: Vec<_> = priors
             .into_iter()
@@ -272,13 +274,14 @@ pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
                 let barrier = &barrier;
                 let budget = budgets[wi];
                 s.spawn(move || {
-                    let low = Lowering::with_memo(
+                    let low = Lowering::with_caches(
                         prob.gg,
                         prob.topo,
                         prob.cost,
                         prob.comm,
-                        Arc::clone(memo_ref),
+                        caches_ref.clone(),
                     );
+                    low.set_delta(delta);
                     let mut w = Worker::new(
                         tree,
                         &low,

@@ -105,6 +105,16 @@ pub struct ServerMetrics {
     /// Searches actually executed by this process (singleflight
     /// leaders that missed the plan cache).
     searches_total: AtomicU64,
+    /// Evaluation-cache counters, accumulated from the telemetry of
+    /// every search this process actually ran (leaders only — cache
+    /// hits and coalesce followers re-serve an already-counted search).
+    /// See [`Self::record_eval_metrics`].
+    memo_hits: AtomicU64,
+    memo_misses: AtomicU64,
+    fragment_hits: AtomicU64,
+    fragment_misses: AtomicU64,
+    delta_evals: AtomicU64,
+    full_evals: AtomicU64,
     /// Handling latency per endpoint.
     latency: [Histogram; ENDPOINTS.len()],
 }
@@ -150,6 +160,26 @@ impl ServerMetrics {
 
     pub fn record_search(&self) {
         self.searches_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one executed search's plan-telemetry rows into the live
+    /// evaluation-cache counters (`tag_memo_*`, `tag_fragment_*`,
+    /// `tag_delta_*`).  Unknown rows are ignored, so this accepts the
+    /// telemetry of any backend; rate gauges are derived at render time
+    /// from the accumulated counts, never averaged across plans.
+    pub fn record_eval_metrics(&self, rows: &[(String, f64)]) {
+        for (name, value) in rows {
+            let counter = match name.as_str() {
+                "memo_hits" => &self.memo_hits,
+                "memo_misses" => &self.memo_misses,
+                "fragment_hits" => &self.fragment_hits,
+                "fragment_misses" => &self.fragment_misses,
+                "delta_evals" => &self.delta_evals,
+                "full_evals" => &self.full_evals,
+                _ => continue,
+            };
+            counter.fetch_add(*value as u64, Ordering::Relaxed);
+        }
     }
 
     pub fn shed_total(&self) -> u64 {
@@ -208,6 +238,28 @@ impl ServerMetrics {
             "tag_searches_total {}\n",
             self.searches_total.load(Ordering::Relaxed)
         ));
+        let rate = |hits: u64, misses: u64| -> f64 {
+            let total = hits + misses;
+            if total == 0 { 0.0 } else { hits as f64 / total as f64 }
+        };
+        let memo_hits = self.memo_hits.load(Ordering::Relaxed);
+        let memo_misses = self.memo_misses.load(Ordering::Relaxed);
+        out.push_str(&format!("tag_memo_hits_total {memo_hits}\n"));
+        out.push_str(&format!("tag_memo_misses_total {memo_misses}\n"));
+        out.push_str(&format!("tag_memo_hit_rate {:.6}\n", rate(memo_hits, memo_misses)));
+        let frag_hits = self.fragment_hits.load(Ordering::Relaxed);
+        let frag_misses = self.fragment_misses.load(Ordering::Relaxed);
+        out.push_str(&format!("tag_fragment_hits_total {frag_hits}\n"));
+        out.push_str(&format!("tag_fragment_misses_total {frag_misses}\n"));
+        out.push_str(&format!(
+            "tag_fragment_hit_rate {:.6}\n",
+            rate(frag_hits, frag_misses)
+        ));
+        let delta = self.delta_evals.load(Ordering::Relaxed);
+        let full = self.full_evals.load(Ordering::Relaxed);
+        out.push_str(&format!("tag_delta_evals_total {delta}\n"));
+        out.push_str(&format!("tag_full_evals_total {full}\n"));
+        out.push_str(&format!("tag_delta_hit_rate {:.6}\n", rate(delta, full)));
         if let Some(stats) = cache {
             out.push_str(&format!("tag_plan_cache_hits {}\n", stats.hits));
             out.push_str(&format!("tag_plan_cache_misses {}\n", stats.misses));
@@ -325,5 +377,39 @@ mod tests {
         );
         // Uncached planner: no cache lines at all.
         assert!(!m.render(None).contains("tag_plan_cache"));
+    }
+
+    #[test]
+    fn eval_metrics_accumulate_across_searches_and_derive_rates() {
+        let m = ServerMetrics::default();
+        // Zero state still renders (rates degrade to 0, not NaN).
+        let text = m.render(None);
+        assert_eq!(scrape(&text, "tag_memo_hit_rate"), Some(0.0));
+        assert_eq!(scrape(&text, "tag_delta_hit_rate"), Some(0.0));
+        // Two searches' telemetry fold into one running total; unknown
+        // rows (here `timed_out`) are ignored.
+        let rows1: Vec<(String, f64)> = vec![
+            ("memo_hits".into(), 6.0),
+            ("memo_misses".into(), 2.0),
+            ("fragment_hits".into(), 30.0),
+            ("fragment_misses".into(), 10.0),
+            ("delta_evals".into(), 3.0),
+            ("full_evals".into(), 1.0),
+            ("timed_out".into(), 1.0),
+        ];
+        let rows2: Vec<(String, f64)> =
+            vec![("memo_hits".into(), 2.0), ("fragment_misses".into(), 10.0)];
+        m.record_eval_metrics(&rows1);
+        m.record_eval_metrics(&rows2);
+        let text = m.render(None);
+        assert_eq!(scrape(&text, "tag_memo_hits_total"), Some(8.0));
+        assert_eq!(scrape(&text, "tag_memo_misses_total"), Some(2.0));
+        assert_eq!(scrape(&text, "tag_memo_hit_rate"), Some(0.8));
+        assert_eq!(scrape(&text, "tag_fragment_hits_total"), Some(30.0));
+        assert_eq!(scrape(&text, "tag_fragment_misses_total"), Some(20.0));
+        assert_eq!(scrape(&text, "tag_fragment_hit_rate"), Some(0.6));
+        assert_eq!(scrape(&text, "tag_delta_evals_total"), Some(3.0));
+        assert_eq!(scrape(&text, "tag_full_evals_total"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_delta_hit_rate"), Some(0.75));
     }
 }

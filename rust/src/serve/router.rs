@@ -150,6 +150,11 @@ impl Router {
                     Ok(outcome) => {
                         if !outcome.cache_hit {
                             self.metrics.record_search();
+                            // Leaders only: a cached plan's telemetry
+                            // describes a search some earlier leader
+                            // already folded in.
+                            self.metrics
+                                .record_eval_metrics(&outcome.plan.telemetry.metrics);
                         }
                         plan_payload(&outcome.plan)
                     }
@@ -221,6 +226,7 @@ impl Router {
         match self.planner.repair(&request, &prior, &faults) {
             Ok(outcome) => {
                 self.metrics.record_search();
+                self.metrics.record_eval_metrics(&outcome.plan.telemetry.metrics);
                 let (status, body) = plan_payload(&outcome.plan);
                 respond(status, body)
             }
@@ -347,6 +353,38 @@ mod tests {
             r.handle(&request("POST", "/repair", wrong_model.as_bytes())).status,
             422
         );
+    }
+
+    #[test]
+    fn executed_searches_feed_the_eval_cache_gauges() {
+        let r = router();
+        let body = br#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
+        assert_eq!(r.handle(&request("POST", "/plan", body)).status, 200);
+        let text = r.handle(&request("GET", "/metrics", b""));
+        let text = String::from_utf8(text.body).unwrap();
+        let gauge = |name: &str| -> f64 {
+            text.lines()
+                .find_map(|l| l.strip_prefix(name).and_then(|v| v.trim().parse().ok()))
+                .unwrap_or_else(|| panic!("missing {name} in {text}"))
+        };
+        // The leader's search really evaluated strategies: misses land
+        // first (cold memo), and the delta layer reports its split.
+        assert!(gauge("tag_memo_misses_total ") >= 1.0, "{text}");
+        assert!(gauge("tag_delta_evals_total ") + gauge("tag_full_evals_total ") >= 1.0);
+        assert!(text.contains("tag_fragment_hit_rate "), "{text}");
+        let searches = gauge("tag_searches_total ");
+        let misses = gauge("tag_memo_misses_total ");
+        // A cache-hit replay must not double-count the same telemetry.
+        assert_eq!(r.handle(&request("POST", "/plan", body)).status, 200);
+        let again = String::from_utf8(r.handle(&request("GET", "/metrics", b"")).body).unwrap();
+        let re_gauge = |name: &str| -> f64 {
+            again
+                .lines()
+                .find_map(|l| l.strip_prefix(name).and_then(|v| v.trim().parse().ok()))
+                .unwrap()
+        };
+        assert_eq!(re_gauge("tag_searches_total "), searches);
+        assert_eq!(re_gauge("tag_memo_misses_total "), misses);
     }
 
     #[test]

@@ -30,6 +30,23 @@
 //! single-pass and deterministic.  Tasks without loads (all tasks
 //! lowered from flat clique topologies) take `duration` verbatim, so
 //! their schedules are bit-identical to the pre-contention engine.
+//!
+//! ## Frontier restart ([`Simulator::resume`])
+//!
+//! The incremental-evaluation path in `dist` re-simulates a task graph
+//! that differs from a previously simulated one only in a few groups'
+//! tasks.  Because dispatch is only-ready and event-ordered, the
+//! executed prefix of a simulation is a pure function of the tasks whose
+//! ready times precede the first divergence: `resume` **replays** the
+//! previous [`Schedule`]'s values for every unchanged task that started
+//! before a caller-proven divergence horizon (restoring queue contents,
+//! in-flight events, link occupancy, and per-resource busy sums
+//! bit-exactly — [`Schedule::eff`] records each task's
+//! contention-stretched duration for precisely this purpose), then runs
+//! the ordinary event loop ([`drain`]) over the remaining cone.  The
+//! result is bit-identical to a from-scratch [`Simulator::run`] of the
+//! same graph; `rust/tests/properties.rs` pins this over a random flip
+//! corpus.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -41,6 +58,11 @@ use super::TaskGraph;
 pub struct Schedule {
     pub start: Vec<f64>,
     pub finish: Vec<f64>,
+    /// Effective (contention-stretched) duration actually charged per
+    /// task.  Not always bit-equal to `finish - start` under floating
+    /// point, which is why the dispatch-time value is recorded: the
+    /// frontier-restart replay must reproduce `busy` sums exactly.
+    pub eff: Vec<f64>,
     pub busy: Vec<f64>,
     pub makespan: f64,
 }
@@ -104,6 +126,7 @@ fn try_start(
     resource_free: &mut [bool],
     link_active: &mut [u32],
     start: &mut [f64],
+    eff: &mut [f64],
     busy: &mut [f64],
     events: &mut BinaryHeap<Key>,
 ) {
@@ -125,9 +148,83 @@ fn try_start(
         dur += load.scalable_s * sharing as f64;
     }
     start[id] = begin;
+    eff[id] = dur;
     busy[r] += dur;
     resource_free[r] = false;
     events.push(Key(begin + dur, id));
+}
+
+/// The event loop shared by [`Simulator::run`] and
+/// [`Simulator::resume`]: pop completions in (time, id) order, release
+/// successors at their exact ready times, and refill the freed resource
+/// plus any resource whose queue just gained a task.  Returns the number
+/// of completions processed.
+#[allow(clippy::too_many_arguments)]
+fn drain(
+    tg: &TaskGraph,
+    indeg: &mut [usize],
+    succs: &[Vec<usize>],
+    ready_at: &mut [f64],
+    queues: &mut [BinaryHeap<Key>],
+    resource_free: &mut [bool],
+    link_active: &mut [u32],
+    events: &mut BinaryHeap<Key>,
+    start: &mut [f64],
+    finish: &mut [f64],
+    eff: &mut [f64],
+    busy: &mut [f64],
+) -> usize {
+    let mut completed = 0usize;
+    while let Some(Key(t_ev, id)) = events.pop() {
+        let now = t_ev;
+        finish[id] = t_ev;
+        completed += 1;
+        let r = tg.tasks[id].resource;
+        resource_free[r] = true;
+        if let Some(load) = &tg.tasks[id].load {
+            for &l in load.links.iter() {
+                link_active[l as usize] -= 1;
+            }
+        }
+        // Release successors (enqueued exactly at their ready time).
+        for &s in &succs[id] {
+            indeg[s] -= 1;
+            ready_at[s] = ready_at[s].max(t_ev);
+            if indeg[s] == 0 {
+                queues[tg.tasks[s].resource].push(Key(ready_at[s], s));
+            }
+        }
+        // Start next work on this resource and any resource whose queue
+        // just gained a task.
+        try_start(
+            r,
+            now,
+            tg,
+            queues,
+            resource_free,
+            link_active,
+            start,
+            eff,
+            busy,
+            events,
+        );
+        for &s in &succs[id] {
+            let rs = tg.tasks[s].resource;
+            try_start(
+                rs,
+                now,
+                tg,
+                queues,
+                resource_free,
+                link_active,
+                start,
+                eff,
+                busy,
+                events,
+            );
+        }
+    }
+    completed
 }
 
 impl Simulator {
@@ -135,35 +232,41 @@ impl Simulator {
         Self::default()
     }
 
+    /// Clear and resize the reusable buffers for a graph of `n` tasks on
+    /// `nr` resources.
+    fn reset(&mut self, n: usize, nr: usize, num_links: usize) {
+        self.indeg.clear();
+        self.indeg.resize(n, 0);
+        self.ready_at.clear();
+        self.ready_at.resize(n, 0.0);
+        for s in self.succs.iter_mut() {
+            s.clear();
+        }
+        if self.succs.len() < n {
+            self.succs.resize_with(n, Vec::new);
+        }
+        for q in self.queues.iter_mut() {
+            q.clear();
+        }
+        if self.queues.len() < nr {
+            self.queues.resize_with(nr, BinaryHeap::new);
+        }
+        self.resource_free.clear();
+        self.resource_free.resize(nr, true);
+        self.events.clear();
+        self.link_active.clear();
+        self.link_active.resize(num_links, 0);
+    }
+
     /// Run the task graph to completion. Panics on dependency cycles
     /// (impossible for graphs built through `TaskGraph::push`).
     pub fn run(&mut self, tg: &TaskGraph) -> Schedule {
         let n = tg.tasks.len();
         let nr = tg.num_resources;
+        self.reset(n, nr, tg.num_links);
 
         let Simulator { indeg, succs, ready_at, queues, resource_free, events, link_active } =
             self;
-        indeg.clear();
-        indeg.resize(n, 0);
-        ready_at.clear();
-        ready_at.resize(n, 0.0);
-        for s in succs.iter_mut() {
-            s.clear();
-        }
-        if succs.len() < n {
-            succs.resize_with(n, Vec::new);
-        }
-        for q in queues.iter_mut() {
-            q.clear();
-        }
-        if queues.len() < nr {
-            queues.resize_with(nr, BinaryHeap::new);
-        }
-        resource_free.clear();
-        resource_free.resize(nr, true);
-        events.clear();
-        link_active.clear();
-        link_active.resize(tg.num_links, 0);
 
         for (i, t) in tg.tasks.iter().enumerate() {
             indeg[i] = t.deps.len();
@@ -174,8 +277,8 @@ impl Simulator {
 
         let mut start = vec![f64::NAN; n];
         let mut finish = vec![f64::NAN; n];
+        let mut eff = vec![0.0; n];
         let mut busy = vec![0.0; nr];
-        let mut completed = 0usize;
 
         for i in 0..n {
             if indeg[i] == 0 {
@@ -191,62 +294,178 @@ impl Simulator {
                 resource_free,
                 link_active,
                 &mut start,
+                &mut eff,
                 &mut busy,
                 events,
             );
         }
 
-        while let Some(Key(t_ev, id)) = events.pop() {
-            let now = t_ev;
-            finish[id] = t_ev;
-            completed += 1;
-            let r = tg.tasks[id].resource;
-            resource_free[r] = true;
-            if let Some(load) = &tg.tasks[id].load {
-                for &l in load.links.iter() {
-                    link_active[l as usize] -= 1;
+        let completed = drain(
+            tg,
+            indeg,
+            succs,
+            ready_at,
+            queues,
+            resource_free,
+            link_active,
+            events,
+            &mut start,
+            &mut finish,
+            &mut eff,
+            &mut busy,
+        );
+
+        assert_eq!(completed, n, "dependency cycle or unreachable tasks");
+        let makespan = finish.iter().copied().fold(0.0f64, f64::max);
+        Schedule { start, finish, eff, busy, makespan }
+    }
+
+    /// Re-simulate `tg` by replaying the prefix of a previous schedule
+    /// up to a divergence `horizon` and event-looping the rest.
+    ///
+    /// `map[i]` gives, for each task of `tg`, the id of a task in the
+    /// previously simulated graph that is **provably identical** up to
+    /// and including its dependency structure (`usize::MAX` = no such
+    /// task).  `prev` is that previous graph's schedule.  The caller
+    /// must guarantee the *divergence-horizon contract*:
+    ///
+    /// 1. every task of the previous graph that started before `horizon`
+    ///    is mapped to by some task of `tg`, and
+    /// 2. every unmapped task of `tg` (and every task of the previous
+    ///    graph not mapped to) becomes ready at or after `horizon`.
+    ///
+    /// Under that contract a from-scratch [`Simulator::run`] of `tg`
+    /// executes the mapped prefix with exactly the previous schedule's
+    /// times, so replaying it is bit-identical: replay restores per-task
+    /// start/finish/eff, per-resource busy sums (in dispatch order —
+    /// same-start ties on a serial resource can only involve
+    /// zero-duration tasks, whose `+0.0` contributions are
+    /// order-immune), queued-but-undispatched tasks at their exact ready
+    /// keys, in-flight completion events, and link occupancy.  `horizon`
+    /// must be positive and finite; callers handle the degenerate cases
+    /// (no divergence / divergence at t=0) themselves.
+    pub fn resume(
+        &mut self,
+        tg: &TaskGraph,
+        prev: &Schedule,
+        map: &[usize],
+        horizon: f64,
+    ) -> Schedule {
+        let n = tg.tasks.len();
+        let nr = tg.num_resources;
+        debug_assert_eq!(map.len(), n);
+        debug_assert!(horizon > 0.0 && horizon.is_finite());
+        self.reset(n, nr, tg.num_links);
+
+        let Simulator { indeg, succs, ready_at, queues, resource_free, events, link_active } =
+            self;
+
+        for (i, t) in tg.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                succs[d].push(i);
+            }
+        }
+
+        let mut start = vec![f64::NAN; n];
+        let mut finish = vec![f64::NAN; n];
+        let mut eff = vec![0.0; n];
+        let mut busy = vec![0.0; nr];
+        let mut completed = 0usize;
+        // Completed strictly before the horizon (replayed and finished).
+        let mut done = vec![false; n];
+
+        let replayed = |i: usize| map[i] != usize::MAX && prev.start[map[i]] < horizon;
+
+        // ---- phase 1: replay the executed prefix in dispatch order.
+        let mut replay: Vec<usize> = (0..n).filter(|&i| replayed(i)).collect();
+        replay.sort_by(|&a, &b| {
+            prev.start[map[a]]
+                .partial_cmp(&prev.start[map[b]])
+                .unwrap_or(Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for &i in &replay {
+            let o = map[i];
+            start[i] = prev.start[o];
+            finish[i] = prev.finish[o];
+            eff[i] = prev.eff[o];
+            busy[tg.tasks[i].resource] += prev.eff[o];
+            if prev.finish[o] < horizon {
+                done[i] = true;
+                completed += 1;
+            } else {
+                // In flight at the horizon: its completion event is still
+                // pending, its resource is occupied, its links are held.
+                resource_free[tg.tasks[i].resource] = false;
+                events.push(Key(prev.finish[o], i));
+                if let Some(load) = &tg.tasks[i].load {
+                    for &l in load.links.iter() {
+                        link_active[l as usize] += 1;
+                    }
                 }
             }
-            // Release successors (enqueued exactly at their ready time).
-            for &s in &succs[id] {
-                indeg[s] -= 1;
-                ready_at[s] = ready_at[s].max(t_ev);
-                if indeg[s] == 0 {
-                    queues[tg.tasks[s].resource].push(Key(ready_at[s], s));
+        }
+
+        // ---- phase 2: reconstruct indegrees, ready times, and queue
+        // contents for everything not yet dispatched.
+        for i in 0..n {
+            if replayed(i) {
+                continue;
+            }
+            let mut live = 0usize;
+            let mut ready = 0.0f64;
+            for &d in &tg.tasks[i].deps {
+                if done[d] {
+                    ready = ready.max(finish[d]);
+                } else {
+                    live += 1;
                 }
             }
-            // Start next work on this resource and any resource whose queue
-            // just gained a task.
+            indeg[i] = live;
+            ready_at[i] = ready;
+            if live == 0 {
+                queues[tg.tasks[i].resource].push(Key(ready, i));
+            }
+        }
+
+        // Belt-and-braces: a no-op on a consistent frontier (every free
+        // resource has an empty queue), but guarantees progress instead
+        // of a completion-count panic if a caller ever under-proves its
+        // horizon.
+        for r in 0..nr {
             try_start(
                 r,
-                now,
+                0.0,
                 tg,
                 queues,
                 resource_free,
                 link_active,
                 &mut start,
+                &mut eff,
                 &mut busy,
                 events,
             );
-            for &s in &succs[id] {
-                let rs = tg.tasks[s].resource;
-                try_start(
-                    rs,
-                    now,
-                    tg,
-                    queues,
-                    resource_free,
-                    link_active,
-                    &mut start,
-                    &mut busy,
-                    events,
-                );
-            }
         }
+
+        // ---- phase 3: ordinary event loop over the remaining cone.
+        completed += drain(
+            tg,
+            indeg,
+            succs,
+            ready_at,
+            queues,
+            resource_free,
+            link_active,
+            events,
+            &mut start,
+            &mut finish,
+            &mut eff,
+            &mut busy,
+        );
 
         assert_eq!(completed, n, "dependency cycle or unreachable tasks");
         let makespan = finish.iter().copied().fold(0.0f64, f64::max);
-        Schedule { start, finish, busy, makespan }
+        Schedule { start, finish, eff, busy, makespan }
     }
 }
 
@@ -272,6 +491,19 @@ mod tests {
             kind: TaskKind::Marker,
             load: Some(LinkLoad { links: links.into(), scalable_s: scalable }),
         }
+    }
+
+    fn assert_bit_identical(a: &Schedule, b: &Schedule) {
+        assert_eq!(a.start.len(), b.start.len());
+        for i in 0..a.start.len() {
+            assert_eq!(a.start[i].to_bits(), b.start[i].to_bits(), "start[{i}]");
+            assert_eq!(a.finish[i].to_bits(), b.finish[i].to_bits(), "finish[{i}]");
+            assert_eq!(a.eff[i].to_bits(), b.eff[i].to_bits(), "eff[{i}]");
+        }
+        for r in 0..a.busy.len() {
+            assert_eq!(a.busy[r].to_bits(), b.busy[r].to_bits(), "busy[{r}]");
+        }
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
     }
 
     #[test]
@@ -331,6 +563,7 @@ mod tests {
         assert_eq!(s.finish[a], 0.1 + 1.0);
         assert_eq!(s.finish[b], 0.1 + 2.0);
         assert_eq!(s.busy[1], 2.1);
+        assert_eq!(s.eff[b], 2.1);
     }
 
     #[test]
@@ -369,5 +602,88 @@ mod tests {
         tg.push(t(0, 2.0, &[a]));
         let s = simulate(&tg);
         assert_eq!(s.makespan, 3.0);
+    }
+
+    /// Chain/diamond graph shared by the resume tests: a changed tail
+    /// task after an unchanged prefix.
+    fn prefix_suffix_graphs(tail_dur: f64) -> (TaskGraph, TaskGraph) {
+        let build = |d: f64| {
+            let mut tg = TaskGraph::new(3);
+            let a = tg.push(t(0, 2.0, &[]));
+            let b = tg.push(t(1, 3.0, &[]));
+            let c = tg.push(t(2, 1.0, &[a]));
+            let e = tg.push(t(0, d, &[b, c])); // the flipped task
+            tg.push(t(1, 1.0, &[e]));
+            tg
+        };
+        (build(1.0), build(tail_dur))
+    }
+
+    #[test]
+    fn resume_matches_full_run_bit_for_bit() {
+        let (old_tg, new_tg) = prefix_suffix_graphs(5.0);
+        let mut sim = Simulator::new();
+        let prev = sim.run(&old_tg);
+        // Tasks 0..3 are identical (id-mapped 1:1); tasks 3,4 diverge.
+        // The changed task becomes ready at max(finish[b], finish[c]) = 3.
+        let map = [0, 1, 2, usize::MAX, usize::MAX];
+        let horizon = 3.0;
+        let resumed = sim.resume(&new_tg, &prev, &map, horizon);
+        let full = Simulator::new().run(&new_tg);
+        assert_bit_identical(&resumed, &full);
+        assert_eq!(resumed.makespan, 9.0);
+    }
+
+    #[test]
+    fn resume_restores_in_flight_link_occupancy() {
+        // Transfer `a` holds link 0 across the horizon; a post-horizon
+        // transfer must still see the doubled sharing factor.
+        let build = |tail: f64| {
+            let mut tg = TaskGraph::new(3);
+            tg.num_links = 1;
+            let long = tg.push(loaded(0, 0.0, 4.0, &[0])); // holds link 0 until t=4
+            let gate = tg.push(t(1, 1.0, &[]));
+            let mut second = loaded(2, 0.0, 1.0, &[0]);
+            second.deps.push(gate);
+            let s2 = tg.push(second); // dispatches at 1 with sharing 2
+            tg.push(t(1, tail, &[s2, long]));
+            tg
+        };
+        let old_tg = build(1.0);
+        let new_tg = build(7.0);
+        let mut sim = Simulator::new();
+        let prev = sim.run(&old_tg);
+        // Divergence: only the tail task differs; it becomes ready at
+        // max(finish[s2], finish[long]) = 4.  Everything earlier replays,
+        // including the in-flight `long` transfer and its link hold.
+        let map = [0, 1, 2, usize::MAX];
+        let resumed = sim.resume(&new_tg, &prev, &map, 2.0);
+        let full = Simulator::new().run(&new_tg);
+        assert_bit_identical(&resumed, &full);
+    }
+
+    #[test]
+    fn resume_replays_queued_but_undispatched_tasks() {
+        // Two tasks contend for resource 0; the second is queued (ready,
+        // undispatched) at the horizon and must dispatch at the same
+        // instant a full run would.
+        let build = |tail: f64| {
+            let mut tg = TaskGraph::new(2);
+            let first = tg.push(t(0, 5.0, &[]));
+            let gate = tg.push(t(1, 1.0, &[]));
+            let queued = tg.push(t(0, 2.0, &[gate])); // ready at 1, starts at 5
+            tg.push(t(1, tail, &[first, queued]));
+            tg
+        };
+        let old_tg = build(1.0);
+        let new_tg = build(3.0);
+        let mut sim = Simulator::new();
+        let prev = sim.run(&old_tg);
+        let map = [0, 1, 2, usize::MAX];
+        // Horizon between the queued task's ready time and its start.
+        let resumed = sim.resume(&new_tg, &prev, &map, 4.0);
+        let full = Simulator::new().run(&new_tg);
+        assert_bit_identical(&resumed, &full);
+        assert_eq!(resumed.start[2], 5.0);
     }
 }

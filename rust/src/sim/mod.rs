@@ -21,7 +21,18 @@
 //! model existed (bit-identical schedules), which is how flat clique
 //! topologies keep their pre-link-graph behavior.
 //!
+//! ## Frontier restart
+//!
+//! [`Simulator::resume`] re-runs only the tail of a simulation: given a
+//! previous [`Schedule`], a task mapping and a *divergence horizon* (a
+//! time before which the caller proves the two task graphs dispatch
+//! identically), it replays every mapped task that started before the
+//! horizon and runs the event loop for the rest — bit-identical to a
+//! full run.  The [`dist::fragments`] incremental-evaluation layer
+//! computes those horizons for neighboring search strategies.
+//!
 //! [`dist`]: crate::dist
+//! [`dist::fragments`]: crate::dist::fragments
 
 pub mod engine;
 

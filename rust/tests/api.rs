@@ -242,6 +242,7 @@ fn every_baseline_generator_runs_on_preset_topologies() {
             profile_noise: 0.0,
             parallelism: Default::default(),
             deadline_ms: None,
+            delta: true,
         };
         let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
         let low = Lowering::new(&prep.gg, &topo, &prep.cost, &prep.comm);
@@ -304,6 +305,7 @@ fn workers_one_is_byte_identical_to_the_sequential_engine() {
         profile_noise: 0.0,
         parallelism: Default::default(),
         deadline_ms: None,
+        delta: true,
     };
     let prep = prepare(models::vgg19(8, 0.25), &topo, &cfg);
     let actions = enumerate_actions(&topo);

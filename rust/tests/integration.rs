@@ -18,6 +18,7 @@ fn cfg(iters: usize, seed: u64) -> SearchConfig {
         profile_noise: 0.0,
         parallelism: Default::default(),
         deadline_ms: None,
+        delta: true,
     }
 }
 

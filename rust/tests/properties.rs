@@ -11,12 +11,18 @@
 //!  * comm model: monotone in bytes, inverse-monotone in bandwidth
 //!  * strategies: evaluation finite for arbitrary random strategies
 //!  * dist memo: cached and cache-bypassed evaluation bit-identical
+//!  * delta evaluation: the incremental (fragment-cached + frontier
+//!    restart) path is bit-identical to full lower-and-simulate — time,
+//!    OOM verdict and every Feedback vector — over seeded single- and
+//!    multi-group flips, on flat and routed presets, sequentially and
+//!    with parallel workers over one shared cache bundle
 //!  * cluster generator: random flat and hierarchical topologies always
 //!    validate; bandwidth symmetric; routes exist between all device
 //!    pairs; a route's bottleneck never exceeds any traversed link
 
 use tag::cluster::generator::{random_hierarchical_topology, random_topology};
-use tag::dist::Lowering;
+use tag::cluster::presets::{multi_rack, sfb_pair, testbed};
+use tag::dist::{EvalCaches, Lowering, SimOutcome, DELTA_MAX_FLIPS};
 use tag::graph::grouping::group_ops;
 use tag::models;
 use tag::partition::{check_balance, partition, PartGraph};
@@ -491,6 +497,136 @@ fn prop_memo_cached_and_uncached_bit_identical() {
         }
         let (hits, _misses) = low.memo_stats();
         assert!(hits >= 25, "case {case}: memo never hit ({hits})");
+    }
+}
+
+/// Bit-exact outcome comparison: `to_bits` on every float (stricter
+/// than `==`, which would let `-0.0 == 0.0` or differing NaN payloads
+/// slip through), plus the OOM verdict.
+fn assert_outcomes_bit_identical(fast: &SimOutcome, slow: &SimOutcome, ctx: &str) {
+    assert_eq!(fast.time.to_bits(), slow.time.to_bits(), "{ctx}: time");
+    assert_eq!(fast.oom, slow.oom, "{ctx}: oom");
+    let pairs = [
+        (&fast.feedback.group_makespan, &slow.feedback.group_makespan, "group_makespan"),
+        (
+            &fast.feedback.group_idle_before_send,
+            &slow.feedback.group_idle_before_send,
+            "group_idle_before_send",
+        ),
+        (
+            &fast.feedback.devgroup_peak_mem_frac,
+            &slow.feedback.devgroup_peak_mem_frac,
+            "devgroup_peak_mem_frac",
+        ),
+        (&fast.feedback.devgroup_idle, &slow.feedback.devgroup_idle, "devgroup_idle"),
+    ];
+    for (a, b, name) in pairs {
+        assert_eq!(a.len(), b.len(), "{ctx}: {name} length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}[{i}]");
+        }
+    }
+    assert_eq!(fast.feedback.link_idle.len(), slow.feedback.link_idle.len(), "{ctx}: link_idle");
+    for (i, (ra, rb)) in
+        fast.feedback.link_idle.iter().zip(slow.feedback.link_idle.iter()).enumerate()
+    {
+        assert_eq!(ra.len(), rb.len(), "{ctx}: link_idle[{i}] length");
+        for (j, (x, y)) in ra.iter().zip(rb.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: link_idle[{i}][{j}]");
+        }
+    }
+}
+
+#[test]
+fn prop_delta_evaluation_bit_identical_to_full() {
+    // Seeded walks of single- and multi-group flips on three presets
+    // (incl. the routed `multi_rack`, whose transfers carry link loads
+    // and contention): the delta-enabled evaluation must be bit-exact
+    // against a delta-disabled oracle Lowering that always lowers and
+    // simulates from scratch.
+    let model = models::by_name("VGG19", 0.25).unwrap();
+    for (pi, topo) in [testbed(), sfb_pair(), multi_rack()].into_iter().enumerate() {
+        let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+        let gg = group_ops(&model, &cost, 12, pi as u64);
+        let comm = CommModel::fit(3);
+        let low = Lowering::new(&gg, &topo, &cost, &comm);
+        assert!(low.delta_enabled(), "delta defaults on");
+        let oracle = Lowering::new(&gg, &topo, &cost, &comm);
+        oracle.set_delta(false);
+        let actions = enumerate_actions(&topo);
+        let ng = gg.num_groups();
+        let mut rng = Rng::new(9000 + pi as u64);
+        let mut s = Strategy::dp_allreduce(ng, &topo);
+        for step in 0..24 {
+            // Half the walk flips one group (the delta sweet spot), the
+            // rest flips up to the neighbor-eligibility cap.
+            let flips =
+                if step % 2 == 0 { 1 } else { 1 + rng.below(DELTA_MAX_FLIPS) };
+            for _ in 0..flips {
+                s.slots[rng.below(ng)] = Some(*rng.choose(&actions));
+            }
+            let fast = low.evaluate(&s);
+            let slow = oracle.evaluate_uncached(&s);
+            assert_outcomes_bit_identical(
+                &fast,
+                &slow,
+                &format!("preset {} step {step}", topo.name),
+            );
+        }
+        let stats = low.delta_stats();
+        assert!(
+            stats.delta_evals >= 1,
+            "preset {}: the delta path never fired ({stats:?})",
+            topo.name
+        );
+        assert!(low.fragment_hit_rate() > 0.0, "preset {}: fragments never hit", topo.name);
+        let (ohits, omisses) = oracle.fragment_stats();
+        assert_eq!((ohits, omisses), (0, 0), "delta-off oracle must bypass the store");
+    }
+}
+
+#[test]
+fn prop_delta_bit_identical_across_shared_cache_workers() {
+    // The serving/search configuration: several workers, each with its
+    // own Lowering but all over ONE shared EvalCaches bundle (memo +
+    // fragment store + mask profiles), evaluating interleaved flip
+    // walks concurrently.  Every worker checks its own outcomes against
+    // a private delta-off oracle, so a cross-thread fragment collision
+    // or a stale memo entry surfaces as a bit mismatch here.
+    let model = models::by_name("VGG19", 0.25).unwrap();
+    let topo = multi_rack();
+    let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+    let gg = group_ops(&model, &cost, 10, 3);
+    let comm = CommModel::fit(3);
+    let actions = enumerate_actions(&topo);
+    let ng = gg.num_groups();
+    for workers in [1usize, 4] {
+        let caches = EvalCaches::new();
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let caches = caches.clone();
+                let (gg, topo, cost, comm, actions) = (&gg, &topo, &cost, &comm, &actions);
+                scope.spawn(move || {
+                    let low = Lowering::with_caches(gg, topo, cost, comm, caches);
+                    let oracle = Lowering::new(gg, topo, cost, comm);
+                    oracle.set_delta(false);
+                    let mut rng = Rng::new(9500 + w as u64);
+                    let mut s = Strategy::dp_allreduce(ng, topo);
+                    for step in 0..12 {
+                        for _ in 0..(1 + rng.below(2)) {
+                            s.slots[rng.below(ng)] = Some(*rng.choose(actions));
+                        }
+                        let fast = low.evaluate(&s);
+                        let slow = oracle.evaluate_uncached(&s);
+                        assert_outcomes_bit_identical(
+                            &fast,
+                            &slow,
+                            &format!("workers={workers} worker {w} step {step}"),
+                        );
+                    }
+                });
+            }
+        });
     }
 }
 
