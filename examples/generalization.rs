@@ -20,7 +20,7 @@
 //! Every arm is a `tag::api::Planner` plan call; backends encode the
 //! experiment's search variant (pure vs GNN-guided, root sweep on/off).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use tag::api::{
     BaselineSweepBackend, GnnMctsBackend, MctsBackend, PlanRequest, Planner,
@@ -237,16 +237,16 @@ fn hier() {
     println!();
 }
 
-fn load_trained_gnn() -> Option<(Rc<GnnService>, Vec<f32>)> {
+fn load_trained_gnn() -> Option<(Arc<GnnService>, Vec<f32>)> {
     let svc = GnnService::load("artifacts").ok()?;
     if !std::path::Path::new("artifacts/params_trained.bin").exists() {
         return None;
     }
     let p = params::load_params("artifacts/params_trained.bin").ok()?;
-    Some((Rc::new(svc), p))
+    Some((Arc::new(svc), p))
 }
 
-fn load_gnn_service() -> Option<(Rc<GnnService>, Vec<f32>)> {
+fn load_gnn_service() -> Option<(Arc<GnnService>, Vec<f32>)> {
     let svc = GnnService::load("artifacts").ok()?;
     let path = if std::path::Path::new("artifacts/params_trained.bin").exists() {
         "artifacts/params_trained.bin"
@@ -254,5 +254,5 @@ fn load_gnn_service() -> Option<(Rc<GnnService>, Vec<f32>)> {
         "artifacts/params_init.bin"
     };
     let p = params::load_params(path).ok()?;
-    Some((Rc::new(svc), p))
+    Some((Arc::new(svc), p))
 }

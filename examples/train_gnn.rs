@@ -18,7 +18,7 @@
 //! smoke-tested through `tag::api::Planner` (the surface the other
 //! examples serve plans from).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use tag::api::{GnnMctsBackend, PlanRequest, Planner};
 use tag::cluster::presets::testbed;
@@ -41,7 +41,7 @@ fn smooth(xs: &[f32], w: usize) -> Vec<f32> {
 fn main() {
     let games = arg("games", 24);
     let steps = arg("steps", 4);
-    let svc = Rc::new(
+    let svc = Arc::new(
         GnnService::load("artifacts")
             .expect("artifacts missing — run `make artifacts` first"),
     );

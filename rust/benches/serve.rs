@@ -1,5 +1,5 @@
 //! Bench: `tag serve` loopback throughput — the full network path
-//! (TCP connect → HTTP parse → route → plan → respond) in three
+//! (TCP connect → HTTP parse → route → plan → respond) in the daemon's
 //! serving regimes:
 //!
 //! * **cold cache** — every request a fresh seed: pays a full search,
@@ -9,25 +9,37 @@
 //!   repeat traffic (serving overhead ≈ transport + JSON encode);
 //! * **coalesced burst** — 8 concurrent identical requests on a fresh
 //!   seed: the singleflight rides them all on ONE search, so the
-//!   per-request cost approaches (search / 8) + transport.
+//!   per-request cost approaches (search / 8) + transport;
+//! * **saturation curve** — C concurrent clients hammering the warm
+//!   cache, keep-alive (one persistent connection per client) vs the
+//!   pre-keep-alive baseline (one connection per request): what
+//!   connection reuse plus parallel accept buys at each concurrency;
+//! * **boot latency** — time-to-first-plan for a fresh daemon (full
+//!   search) vs one warm-booted from a populated plan store (pure
+//!   cache hit).
+//!
+//! Results land in `BENCH_serve.json`.
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
 use tag::api::SharedPlanner;
 use tag::serve::{ServeConfig, Server};
-use tag::util::bench;
+use tag::util::{bench, Stopwatch};
 
 fn request_for(seed: u64) -> String {
     format!(r#"{{"model":"VGG19","iterations":30,"max_groups":10,"seed":{seed}}}"#)
 }
 
+/// One-shot client: `Connection: close`, read to EOF.  This is exactly
+/// the pre-keep-alive serving contract, so it doubles as the baseline
+/// arm of the saturation curve.
 fn post_plan(addr: SocketAddr, body: &str) -> u16 {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
     let raw = format!(
-        "POST /plan HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+        "POST /plan HTTP/1.1\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{body}",
         body.len()
     );
     stream.write_all(raw.as_bytes()).expect("send");
@@ -40,6 +52,76 @@ fn post_plan(addr: SocketAddr, body: &str) -> u16 {
         .expect("status line")
 }
 
+/// Persistent client: `requests` sequential round-trips on ONE
+/// connection, each response consumed by its Content-Length framing.
+fn post_plan_keep_alive(addr: SocketAddr, body: &str, requests: usize) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let raw = format!(
+        "POST /plan HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    for _ in 0..requests {
+        stream.write_all(raw.as_bytes()).expect("send");
+        let mut head = String::new();
+        let mut len = 0usize;
+        loop {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).expect("read") > 0, "early EOF");
+            if line == "\r\n" {
+                break;
+            }
+            if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+                len = v.trim().parse().expect("length");
+            }
+            head.push_str(&line);
+        }
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).expect("body");
+    }
+}
+
+/// One saturation cell: C clients × R warm-cache requests each.
+/// Returns aggregate requests/s.
+fn saturation_cell(addr: SocketAddr, clients: usize, per_client: usize, keep_alive: bool) -> f64 {
+    let body = request_for(1);
+    let watch = Stopwatch::start();
+    let threads: Vec<_> = (0..clients)
+        .map(|_| {
+            let body = body.clone();
+            std::thread::spawn(move || {
+                if keep_alive {
+                    post_plan_keep_alive(addr, &body, per_client);
+                } else {
+                    for _ in 0..per_client {
+                        assert_eq!(post_plan(addr, &body), 200);
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    (clients * per_client) as f64 / watch.elapsed_s()
+}
+
+fn start_daemon(config: ServeConfig) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Server::bind(config, SharedPlanner::builder().build()).expect("bind");
+    let addr = server.local_addr();
+    (addr, std::thread::spawn(move || server.run().expect("serve")))
+}
+
+fn stop_daemon(addr: SocketAddr, daemon: std::thread::JoinHandle<()>) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(b"POST /shutdown HTTP/1.1\r\nconnection: close\r\n\r\n").unwrap();
+    let mut out = String::new();
+    let _ = stream.read_to_string(&mut out);
+    daemon.join().unwrap();
+}
+
 fn main() {
     let config = ServeConfig {
         port: 0,
@@ -48,9 +130,7 @@ fn main() {
         read_timeout: Duration::from_secs(120),
         ..ServeConfig::default()
     };
-    let server = Server::bind(config, SharedPlanner::builder().build()).expect("bind");
-    let addr = server.local_addr();
-    let daemon = std::thread::spawn(move || server.run().expect("serve"));
+    let (addr, daemon) = start_daemon(config.clone());
     println!("== tag serve loopback throughput (VGG19/0.25, 30 iters) ==");
 
     let mut seed = 1_000u64;
@@ -93,11 +173,86 @@ fn main() {
         cold / (burst / BURST as f64).max(1e-9)
     );
 
-    // Clean shutdown so the bench process exits without leaking the
-    // daemon thread.
-    let mut stream = TcpStream::connect(addr).expect("connect");
-    stream.write_all(b"POST /shutdown HTTP/1.1\r\n\r\n").unwrap();
-    let mut out = String::new();
-    let _ = stream.read_to_string(&mut out);
-    daemon.join().unwrap();
+    // ------------------------------------------------- saturation curve
+    // Warm-cache traffic (search cost off the table) so the curve
+    // isolates the serving path: connection setup, parse, route,
+    // encode.  The close arm is the pre-keep-alive daemon's contract
+    // at the same worker count.
+    const PER_CLIENT: usize = 100;
+    println!(
+        "\n== saturation: {} workers, {} acceptors, {} warm requests/client ==",
+        config.workers, config.accept_threads, PER_CLIENT
+    );
+    println!("    {:>8} {:>16} {:>16} {:>8}", "clients", "close req/s", "keep-alive req/s", "gain");
+    let mut curve = Vec::new();
+    for clients in [1usize, 2, 4, 8, 16] {
+        let rps_close = saturation_cell(addr, clients, PER_CLIENT, false);
+        let rps_keep = saturation_cell(addr, clients, PER_CLIENT, true);
+        println!(
+            "    {clients:>8} {rps_close:>16.0} {rps_keep:>16.0} {:>7.2}x",
+            rps_keep / rps_close.max(1e-9)
+        );
+        curve.push((clients, rps_close, rps_keep));
+    }
+    stop_daemon(addr, daemon);
+
+    // ------------------------------------------------- boot latency
+    // Populate a plan store, then compare time-to-first-plan for a
+    // cold daemon (no store: full search) against a warm-booted one
+    // (journal replayed into the cache at bind).
+    let store_dir = std::env::temp_dir().join(format!("tag-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store_config = ServeConfig {
+        store_dir: Some(store_dir.to_string_lossy().to_string()),
+        ..config.clone()
+    };
+    let (addr, daemon) = start_daemon(store_config.clone());
+    for seed in 1..=3u64 {
+        assert_eq!(post_plan(addr, &request_for(seed)), 200);
+    }
+    stop_daemon(addr, daemon);
+
+    let watch = Stopwatch::start();
+    let (addr, daemon) = start_daemon(config.clone());
+    assert_eq!(post_plan(addr, &request_for(1)), 200);
+    let cold_boot = watch.elapsed_s();
+    stop_daemon(addr, daemon);
+
+    let watch = Stopwatch::start();
+    let (addr, daemon) = start_daemon(store_config);
+    assert_eq!(post_plan(addr, &request_for(1)), 200);
+    let warm_boot = watch.elapsed_s();
+    stop_daemon(addr, daemon);
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    println!("\n== boot-to-first-plan ==");
+    println!("    cold boot (no store)   {:>10.2} ms", cold_boot * 1e3);
+    println!("    warm boot (plan store) {:>10.2} ms", warm_boot * 1e3);
+    println!("    warm-boot speed-up {:.1}x", cold_boot / warm_boot.max(1e-9));
+
+    let curve_json: Vec<String> = curve
+        .iter()
+        .map(|(clients, close, keep)| {
+            format!(
+                "    {{\"clients\": {clients}, \"close_rps\": {close:.1}, \
+                 \"keep_alive_rps\": {keep:.1}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve_loopback\",\n  \"model\": \"VGG19\",\n  \"workers\": {},\n  \"accept_threads\": {},\n  \"per_client_requests\": {PER_CLIENT},\n  \"cold_ms_per_request\": {:.3},\n  \"warm_ms_per_request\": {:.3},\n  \"coalesced_ms_per_request\": {:.3},\n  \"saturation\": [\n{}\n  ],\n  \"cold_boot_first_plan_ms\": {:.3},\n  \"warm_boot_first_plan_ms\": {:.3}\n}}\n",
+        config.workers,
+        config.accept_threads,
+        cold * 1e3,
+        warm * 1e3,
+        burst * 1e3 / BURST as f64,
+        curve_json.join(",\n"),
+        cold_boot * 1e3,
+        warm_boot * 1e3,
+    );
+    if let Err(e) = std::fs::write("BENCH_serve.json", &json) {
+        eprintln!("    (could not write BENCH_serve.json: {e})");
+    } else {
+        println!("    wrote BENCH_serve.json");
+    }
 }

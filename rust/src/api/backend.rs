@@ -17,7 +17,7 @@
 //!   counters, GNN evaluation counts) that the planner folds into plan
 //!   telemetry.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::Topology;
 use crate::coordinator::batch::{eval_channel, serve, EvalStats};
@@ -192,13 +192,15 @@ impl SearchBackend for MctsBackend {
 
 /// MCTS guided by the compiled heterogeneous GNN (§4.2.1/§4.2.2).
 ///
-/// The service is shared (`Rc`) so a trainer and a planner can use the
-/// same loaded artifacts; the parameter vector is owned because it is
-/// part of the backend's identity (its fingerprint token hashes every
-/// weight — plans from different checkpoints never collide in the
-/// cache).
+/// The service is shared (`Arc`) so a trainer and a planner can use
+/// the same loaded artifacts, and so one backend instance can serve a
+/// whole worker pool (`tag serve --gnn` hands a single
+/// `SharedPlanner`-wrapped backend to every serving thread); the
+/// parameter vector is owned because it is part of the backend's
+/// identity (its fingerprint token hashes every weight — plans from
+/// different checkpoints never collide in the cache).
 pub struct GnnMctsBackend {
-    pub svc: Rc<GnnService>,
+    pub svc: Arc<GnnService>,
     /// Private so `params_hash` can never go stale: the checkpoint is
     /// fixed at construction (build a new backend to swap checkpoints).
     params: Vec<f32>,
@@ -211,7 +213,7 @@ pub struct GnnMctsBackend {
 }
 
 impl GnnMctsBackend {
-    pub fn new(svc: Rc<GnnService>, params: Vec<f32>) -> Self {
+    pub fn new(svc: Arc<GnnService>, params: Vec<f32>) -> Self {
         let mut h = Fnv::new();
         h.write_usize(params.len());
         for &p in &params {
@@ -230,7 +232,7 @@ impl GnnMctsBackend {
     pub fn from_artifacts(artifact_dir: &str, params_path: &str) -> Result<Self> {
         let svc = GnnService::load(artifact_dir).context("load GNN artifacts")?;
         let p = params::load_params(params_path).context("load GNN params")?;
-        Ok(Self::new(Rc::new(svc), p))
+        Ok(Self::new(Arc::new(svc), p))
     }
 
     pub fn root_sweep(mut self, on: bool) -> Self {
@@ -272,9 +274,12 @@ impl SearchBackend for GnnMctsBackend {
             return BackendOutcome { result, metrics };
         }
 
-        // Parallel: the PJRT executable is not `Send`, so the compiled
-        // GNN stays on this thread running the dynamic-batching evaluator
-        // while the K workers submit positions through EvalClients.
+        // Parallel: a single dynamic-batching evaluator runs on this
+        // thread while the K workers submit positions through
+        // EvalClients.  Centralizing evaluation keeps batching effective
+        // and matches how a real PJRT executable (one device queue)
+        // would be driven, even though the stub service itself is
+        // Send + Sync and shared via `Arc`.
         let (client, rx) = eval_channel();
         let priors: Vec<BatchedGnnPrior<'_>> = (0..par.workers)
             .map(|_| {
@@ -318,6 +323,14 @@ impl SearchBackend for GnnMctsBackend {
         BackendOutcome { result: out.result, metrics }
     }
 }
+
+// The serving pool hands one `GnnMctsBackend` to many worker threads;
+// regressing either bound (e.g. by reintroducing `Rc` in `GnnService`)
+// must fail at compile time, not at the `SharedPlanner` call site.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<GnnMctsBackend>();
+};
 
 // ------------------------------------------------------- baseline sweep
 

@@ -41,11 +41,13 @@
 //! memo live behind internal mutexes, and searches themselves run
 //! lock-free — so one planner can serve concurrent callers.  The
 //! default [`Planner`] type erases its backend as `dyn SearchBackend`
-//! (which keeps `!Send` backends like the `Rc`-sharing
-//! [`GnnMctsBackend`] usable); to put a planner behind an `Arc` and
-//! hand it to threads — the [`serve`](crate::serve) daemon's worker
-//! pool — build a [`SharedPlanner`] instead, whose backend is
-//! additionally `Send + Sync`:
+//! (which keeps hypothetical `!Send` backends usable); to put a
+//! planner behind an `Arc` and hand it to threads — the
+//! [`serve`](crate::serve) daemon's worker pool — build a
+//! [`SharedPlanner`] instead, whose backend is additionally
+//! `Send + Sync`.  Every built-in backend qualifies: the
+//! [`GnnMctsBackend`] shares its GNN service via `Arc`, so `tag serve
+//! --gnn` hands one learned backend to the whole pool.
 //!
 //! ```
 //! use std::sync::Arc;
@@ -166,9 +168,10 @@ impl PlannerBuilder {
 
 impl PlannerBuilder<dyn SearchBackend + Send + Sync> {
     /// Replace the default [`MctsBackend`].  The shared builder only
-    /// accepts `Send + Sync` backends — a [`GnnMctsBackend`] (which
-    /// shares its PJRT service via `Rc`) cannot cross threads and is
-    /// rejected at compile time.
+    /// accepts `Send + Sync` backends; every built-in backend —
+    /// [`GnnMctsBackend`] included, which shares its GNN service via
+    /// `Arc` — qualifies, and anything `!Send` is rejected at compile
+    /// time.
     pub fn backend(mut self, backend: impl SearchBackend + Send + Sync + 'static) -> Self {
         self.backend = Box::new(backend);
         self
@@ -242,6 +245,26 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
     /// [`PlannerBuilder::without_cache`].
     pub fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| lock(c).stats())
+    }
+
+    /// Seed the plan cache with previously produced plans — the warm
+    /// boot path of the persistent plan store
+    /// ([`serve::store::PlanStore`](crate::serve::store::PlanStore)).
+    /// Counts neither hits nor misses ([`PlanCache::insert`] is not a
+    /// lookup), so `tag_searches_total` and the cache hit-rate series
+    /// start clean; a subsequent request for a seeded key is an
+    /// ordinary cache hit serving the stored plan byte-for-byte.
+    /// Returns how many entries were installed (0 for a planner built
+    /// [`without_cache`](PlannerBuilder::without_cache)).
+    pub fn warm(&self, entries: impl IntoIterator<Item = (PlanKey, DeploymentPlan)>) -> usize {
+        let Some(cache) = &self.cache else { return 0 };
+        let mut cache = lock(cache);
+        let mut installed = 0;
+        for (key, plan) in entries {
+            cache.insert(key, plan);
+            installed += 1;
+        }
+        installed
     }
 
     /// The cache key this request resolves to under the current backend.
@@ -587,6 +610,32 @@ mod tests {
         let stats = planner.cache_stats().unwrap();
         assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
         assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warm_seeded_cache_serves_without_searching_or_counting_misses() {
+        // Simulate the plan store's warm boot: plans produced by one
+        // planner lifetime seed a fresh planner, whose first request
+        // is then a clean cache hit — no search, no recorded miss,
+        // byte-identical encoding.
+        let donor = Planner::builder().build();
+        let req = small_request();
+        let produced = donor.plan(&req).unwrap();
+        let key = donor.key_for(&req);
+
+        let fresh = Planner::builder().build();
+        assert_eq!(fresh.warm([(key, produced.plan.clone())]), 1);
+        let stats = fresh.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (0, 0, 1));
+        let served = fresh.plan(&req).unwrap();
+        assert!(served.cache_hit, "seeded entry serves as a hit");
+        assert_eq!(served.plan.encode(), produced.plan.encode());
+        let stats = fresh.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 0));
+
+        // An uncached planner ignores the seed.
+        let uncached = Planner::builder().without_cache().build();
+        assert_eq!(uncached.warm([(key, produced.plan)]), 0);
     }
 
     #[test]

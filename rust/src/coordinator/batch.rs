@@ -1,7 +1,9 @@
 //! Batched leaf-evaluation service.
 //!
-//! PJRT executables are not `Send`, so the compiled GNN lives on one
-//! *evaluator thread*; search workers (parallel MCTS over different
+//! A real PJRT executable is driven through one device queue, so the
+//! compiled GNN lives on one *evaluator thread* (the stub service is
+//! `Send + Sync`, but centralized evaluation is what makes batching
+//! work); search workers (parallel MCTS over different
 //! models/topologies) submit [`Position`]s through an MPSC channel and
 //! block on a reply channel.  The evaluator drains up to `B_INFER`
 //! requests (with a short linger once at least one is pending) and runs
@@ -88,7 +90,16 @@ pub fn serve(svc: &GnnService, params: &[f32], rx: Receiver<EvalRequest>) -> Eva
                 }
             }
             Err(e) => {
-                eprintln!("batched inference failed: {e}");
+                // Warn once per process (see `GnnPrior::priors`): on the
+                // stub runtime every batch fails, and a serving daemon
+                // must not pay per-batch stderr writes.
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "batched inference failed: {e} \
+                         (warning suppressed after first occurrence)"
+                    );
+                });
                 // Reply with uniform fallbacks so workers don't deadlock.
                 for req in pending {
                     let n = crate::gnn::features::N_CAND;

@@ -233,8 +233,17 @@ impl PriorProvider for GnnPrior<'_> {
                 out
             }
             Err(e) => {
-                // Degrade to uniform rather than aborting a search.
-                eprintln!("GNN inference failed ({e}); falling back to uniform");
+                // Degrade to uniform rather than aborting a search.  Warn
+                // once per process: a serving daemon on the stub runtime
+                // hits this on every eval, and per-eval stderr writes
+                // would swamp the daemon's log.
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "GNN inference failed ({e}); falling back to uniform \
+                         (warning suppressed after first occurrence)"
+                    );
+                });
                 vec![1.0 / actions.len() as f32; actions.len()]
             }
         }

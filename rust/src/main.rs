@@ -22,6 +22,7 @@
 //!   tag baselines --model InceptionV3 --topology testbed
 //!   tag fleet --topology multi_rack --jobs 12 --seed 7 --policy both
 //!   tag serve --port 7878 --workers 4 --queue-depth 64
+//!   tag serve --gnn artifacts --store /var/lib/tag  # learned backend + warm boots
 //!
 //! Flags accept both `--key value` and `--key=value`; values may start
 //! with `-` (e.g. `--scale -0.5`).  `--workers=K` runs K tree-parallel
@@ -404,37 +405,55 @@ fn cmd_fleet(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
-    if args.get("gnn").is_some() {
-        // GnnMctsBackend shares its PJRT service via `Rc` and cannot
-        // cross the worker-pool threads; the daemon serves pure MCTS.
-        eprintln!("serve does not support --gnn (the GNN backend is not thread-shareable)");
-        std::process::exit(2);
-    }
     let config = ServeConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1").to_string(),
         port: args.num("port", 7878),
         workers: args.num("workers", 4usize).max(1),
         queue_depth: args.num("queue-depth", 64usize).max(1),
+        accept_threads: args.num("accept-threads", 2usize).max(1),
+        max_requests_per_conn: args.num("keep-alive-requests", 256usize).max(1),
         max_body_bytes: args.num("max-body-kb", 1024usize).max(1) * 1024,
         fleet_topology: args.get("fleet-topology").unwrap_or("multi_rack").to_string(),
+        store_dir: args.get("store").map(str::to_string),
         ..ServeConfig::default()
     };
-    let planner = SharedPlanner::builder()
-        .cache_capacity(args.num("cache", 1usize << 10).max(1))
-        .build();
+    let builder =
+        SharedPlanner::builder().cache_capacity(args.num("cache", 1usize << 10).max(1));
+    // The GNN backend is `Send + Sync` (the service sits behind an
+    // `Arc`), so one learned backend serves the whole worker pool.
+    let planner = match args.get("gnn") {
+        Some(dir) => {
+            let default_params = format!("{dir}/params_init.bin");
+            let params_path = args.get("gnn-params").unwrap_or(&default_params);
+            let backend =
+                GnnMctsBackend::from_artifacts(dir, params_path).unwrap_or_else(|e| {
+                    eprintln!("GNN backend unavailable ({e}); run `make artifacts`");
+                    std::process::exit(2)
+                });
+            builder.backend(backend).build()
+        }
+        None => builder.build(),
+    };
+    let backend_name = planner.backend_name();
     let server = Server::bind(config.clone(), planner).unwrap_or_else(|e| {
         eprintln!("bind failed: {e}");
         std::process::exit(1)
     });
     println!(
-        "tag serve listening on http://{} ({} workers, queue depth {})",
+        "tag serve listening on http://{} ({} workers, queue depth {}, \
+         {} acceptors, backend {})",
         server.local_addr(),
         config.workers,
-        config.queue_depth
+        config.queue_depth,
+        config.accept_threads,
+        backend_name,
     );
     println!("endpoints: POST /plan  POST /repair  POST /fleet/submit  POST /fleet/complete");
     println!("           GET /fleet/status  GET /healthz  GET /metrics  POST /shutdown");
     println!("fleet topology: {}", config.fleet_topology);
+    if let Some(dir) = &config.store_dir {
+        println!("plan store: {dir}/plans.journal (warm boot)");
+    }
     if let Err(e) = server.run() {
         eprintln!("serve failed: {e}");
         std::process::exit(1);

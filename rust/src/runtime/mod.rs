@@ -11,10 +11,13 @@
 //! same API over a **stub**: [`Runtime::cpu`] succeeds (so callers can
 //! construct the client and query the platform), [`Literal`] provides the
 //! host-side tensor plumbing the GNN service builds its batches with, and
-//! [`Runtime::load_hlo_text`] reports a descriptive error.  Every caller
-//! already degrades gracefully when artifacts cannot be loaded (searches
-//! fall back to uniform priors), which keeps the search hot path fully
-//! functional without PJRT.
+//! [`Runtime::load_hlo_text`] validates that the artifact file exists and
+//! returns a deferred [`Executable`] whose [`Executable::run`] reports a
+//! descriptive error.  Splitting load (succeeds) from run (fails) lets
+//! `GnnService::load` — and therefore `tag serve --gnn` — come up against
+//! real artifact directories; every caller already degrades gracefully
+//! when execution is unavailable (searches fall back to uniform priors),
+//! which keeps the search hot path fully functional without PJRT.
 
 use std::path::Path;
 
@@ -79,14 +82,15 @@ impl Runtime {
         self.platform.to_string()
     }
 
-    /// Load an HLO-text artifact and compile it.  Always fails in this
-    /// build: the xla bindings are not vendored.
+    /// Load an HLO-text artifact and compile it.  The stub validates
+    /// that the artifact exists (a missing file is a configuration
+    /// error worth failing fast on) and defers the "no bindings"
+    /// error to [`Executable::run`], so services holding compiled
+    /// artifacts can be constructed and shared without PJRT.
     pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
         let path = path.as_ref();
-        Err(crate::util::error::Error::msg(format!(
-            "PJRT unavailable: xla bindings are not vendored in this build, \
-             cannot compile {path:?}"
-        )))
+        crate::ensure!(path.exists(), "HLO artifact not found: {path:?}");
+        Ok(Executable { name: path.display().to_string() })
     }
 }
 
@@ -139,9 +143,18 @@ mod tests {
     }
 
     #[test]
-    fn load_reports_missing_bindings() {
+    fn load_defers_missing_bindings_to_run() {
         let rt = Runtime::cpu().unwrap();
-        let err = rt.load_hlo_text("artifacts/gnn_infer.hlo.txt").unwrap_err();
+        // A missing artifact fails at load time.
+        let err = rt.load_hlo_text("no/such/artifact.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("not found"), "{err}");
+        // An existing artifact loads; execution reports the stub.
+        let path = std::env::temp_dir()
+            .join(format!("tag-runtime-test-{}.hlo.txt", std::process::id()));
+        std::fs::write(&path, "HloModule stub\n").unwrap();
+        let exe = rt.load_hlo_text(&path).unwrap();
+        let err = exe.run(&[]).unwrap_err();
         assert!(err.to_string().contains("PJRT unavailable"), "{err}");
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -3,13 +3,26 @@
 //! (the vendored dependency set has no `hyper`).
 //!
 //! Scope is deliberately narrow: `Content-Length` bodies only (no
-//! chunked transfer coding), one request per connection (every response
-//! carries `Connection: close`), and hard limits on head and body size.
+//! chunked transfer coding), persistent connections with explicit
+//! framing (every response carries `Content-Length` plus a
+//! `Connection: keep-alive`/`close` verdict), and hard limits on head
+//! and body size.  Keep-alive follows RFC 9112 defaults — HTTP/1.1
+//! persists unless the client says `Connection: close`; HTTP/1.0
+//! closes unless the client says `Connection: keep-alive` — and
+//! because responses are always Content-Length framed, pipelined
+//! requests already buffered behind the current one parse cleanly on
+//! the next [`read_request`] call.
+//!
 //! Abuse maps to clean errors, never panics: an oversized head or body
 //! is [`HttpError::TooLarge`] (413), malformed syntax is
-//! [`HttpError::Bad`] (400), and a socket that dies mid-request is
-//! [`HttpError::Io`].  Unknown methods are *parsed* fine — rejecting
-//! them with 405 is the router's decision, not a transport error.
+//! [`HttpError::Bad`] (400), a socket that dies mid-request is
+//! [`HttpError::Io`], and a connection that goes quiet *between*
+//! requests is [`HttpError::Idle`] (reaped silently — an idle
+//! keep-alive peer is not an error).  Duplicate `Content-Length`
+//! headers are rejected outright: with persistent connections, any
+//! framing ambiguity is a request-smuggling vector.  Unknown methods
+//! are *parsed* fine — rejecting them with 405 is the router's
+//! decision, not a transport error.
 
 use std::io::{BufRead, Read, Write};
 
@@ -38,12 +51,34 @@ pub struct Request {
     pub query: Option<String>,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// `true` for `HTTP/1.1` requests, `false` for `HTTP/1.0` — the
+    /// version decides the keep-alive default.
+    pub http11: bool,
 }
 
 impl Request {
-    /// First value of a (lowercase) header name.
+    /// First value of a header name (matched case-insensitively).
     pub fn header(&self, name: &str) -> Option<&str> {
-        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should persist after this request, per
+    /// RFC 9112: a `close` token always wins; otherwise HTTP/1.1
+    /// defaults to keep-alive and HTTP/1.0 requires an explicit
+    /// `keep-alive` token.  Tokens are matched case-insensitively.
+    pub fn wants_keep_alive(&self) -> bool {
+        let (mut close, mut keep) = (false, false);
+        if let Some(value) = self.header("connection") {
+            for token in value.split(',') {
+                let token = token.trim();
+                close |= token.eq_ignore_ascii_case("close");
+                keep |= token.eq_ignore_ascii_case("keep-alive");
+            }
+        }
+        !close && (self.http11 || keep)
     }
 }
 
@@ -57,18 +92,21 @@ pub enum HttpError {
     /// The connection closed cleanly before the first byte — no
     /// request was attempted; write nothing.
     Closed,
+    /// The read timeout fired before the first byte of a request: an
+    /// idle keep-alive connection.  Reap silently; write nothing.
+    Idle,
     /// Socket error (including read timeout) mid-request.
     Io(std::io::Error),
 }
 
 impl HttpError {
     /// The status this error maps to, or `None` when no response
-    /// should be written (the peer is gone).
+    /// should be written (the peer is gone or merely idle).
     pub fn status(&self) -> Option<u16> {
         match self {
             HttpError::Bad(_) => Some(400),
             HttpError::TooLarge(_) => Some(413),
-            HttpError::Closed => None,
+            HttpError::Closed | HttpError::Idle => None,
             HttpError::Io(e) => match e.kind() {
                 std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => Some(408),
                 _ => None,
@@ -89,7 +127,23 @@ fn read_line<R: BufRead>(r: &mut R, budget: &mut usize) -> Result<String, HttpEr
         if *budget == 0 {
             return Err(HttpError::TooLarge("request head too large".into()));
         }
-        let chunk = r.fill_buf().map_err(HttpError::Io)?;
+        let chunk = match r.fill_buf() {
+            Ok(chunk) => chunk,
+            // A timeout before the first byte of the line is an idle
+            // connection, not a stalled request.  `read_request`
+            // remaps Idle back to a 408 for header lines, where bytes
+            // of the request have already been consumed.
+            Err(e)
+                if raw.is_empty()
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Err(HttpError::Idle)
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        };
         if chunk.is_empty() {
             if raw.is_empty() {
                 return Err(HttpError::Closed);
@@ -128,6 +182,7 @@ pub fn read_request<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Request, H
     if version != "HTTP/1.1" && version != "HTTP/1.0" {
         return Err(bad(format!("unsupported version `{version}`")));
     }
+    let http11 = version == "HTTP/1.1";
     if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
         return Err(bad("malformed method"));
     }
@@ -140,6 +195,14 @@ pub fn read_request<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Request, H
         let line = match read_line(r, &mut head_budget) {
             Ok(line) => line,
             Err(HttpError::Closed) => return Err(bad("connection closed mid-head")),
+            // Mid-head silence is a stalled request (408), not an idle
+            // connection: the request line was already consumed.
+            Err(HttpError::Idle) => {
+                return Err(HttpError::Io(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "timed out reading request head",
+                )))
+            }
             Err(e) => return Err(e),
         };
         if line.is_empty() {
@@ -160,11 +223,17 @@ pub fn read_request<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Request, H
         None => (target, None),
     };
 
-    let request = Request { method, path, query, headers, body: Vec::new() };
+    let request = Request { method, path, query, headers, body: Vec::new(), http11 };
     if request.header("transfer-encoding").is_some() {
         // Content-Length bodies only: a disagreeing framing header is a
         // smuggling vector, not a feature gap to paper over.
         return Err(bad("transfer-encoding not supported (Content-Length only)"));
+    }
+    // Any repetition of Content-Length — identical values included —
+    // is rejected: on a persistent connection a downstream that frames
+    // differently would desynchronize, the classic smuggling setup.
+    if request.headers.iter().filter(|(n, _)| n == "content-length").count() > 1 {
+        return Err(bad("duplicate Content-Length headers"));
     }
     let content_length = match request.header("content-length") {
         None => 0,
@@ -172,14 +241,6 @@ pub fn read_request<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Request, H
             .parse::<usize>()
             .map_err(|_| bad(format!("malformed Content-Length `{v}`")))?,
     };
-    if request
-        .headers
-        .iter()
-        .filter(|(n, _)| n == "content-length")
-        .any(|(_, v)| v.trim().parse::<usize>().ok() != Some(content_length))
-    {
-        return Err(bad("conflicting Content-Length headers"));
-    }
     if content_length > limits.max_body_bytes {
         return Err(HttpError::TooLarge(format!(
             "body of {content_length} bytes exceeds the {} byte limit",
@@ -220,8 +281,9 @@ pub fn reason(status: u16) -> &'static str {
     }
 }
 
-/// One response.  Always written with `Content-Length` and
-/// `Connection: close`.
+/// One response.  Always written with `Content-Length` (the framing
+/// keep-alive and pipelining depend on) and an explicit
+/// `Connection: keep-alive`/`close` verdict.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Response {
     pub status: u16,
@@ -231,6 +293,10 @@ pub struct Response {
     pub retry_after_s: Option<u64>,
     /// Emitted as `Allow: <methods>` (405 responses).
     pub allow: Option<&'static str>,
+    /// `true` emits `connection: close` and the server tears the
+    /// connection down after writing; `false` emits
+    /// `connection: keep-alive`.
+    pub close: bool,
 }
 
 impl Response {
@@ -241,6 +307,7 @@ impl Response {
             body: body.into().into_bytes(),
             retry_after_s: None,
             allow: None,
+            close: false,
         }
     }
 
@@ -251,6 +318,7 @@ impl Response {
             body: body.into_bytes(),
             retry_after_s: None,
             allow: None,
+            close: false,
         }
     }
 
@@ -270,7 +338,11 @@ impl Response {
         if let Some(methods) = self.allow {
             head.push_str(&format!("allow: {methods}\r\n"));
         }
-        head.push_str("connection: close\r\n\r\n");
+        head.push_str(if self.close {
+            "connection: close\r\n\r\n"
+        } else {
+            "connection: keep-alive\r\n\r\n"
+        });
         let mut out = head.into_bytes();
         out.extend_from_slice(&self.body);
         out
@@ -333,6 +405,8 @@ mod tests {
             b"GET /x HTTP/1.1\r\nbad name: v\r\n\r\n",
             b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
             b"POST /x HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 5\r\n\r\nabcd",
+            b"POST /x HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 4\r\n\r\nabcd",
+            b"POST /x HTTP/1.1\r\nContent-Length: 4\r\ncontent-LENGTH: 4\r\n\r\nabcd",
             b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
             b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort",
             b"GET /x HTT",
@@ -368,6 +442,13 @@ mod tests {
         assert_eq!(
             text,
             "HTTP/1.1 200 OK\r\ncontent-type: text/plain; charset=utf-8\r\n\
+             content-length: 3\r\nconnection: keep-alive\r\n\r\nok\n"
+        );
+        let closing = Response { close: true, ..Response::text(200, "ok\n") };
+        let text = String::from_utf8(closing.to_bytes()).unwrap();
+        assert_eq!(
+            text,
+            "HTTP/1.1 200 OK\r\ncontent-type: text/plain; charset=utf-8\r\n\
              content-length: 3\r\nconnection: close\r\n\r\nok\n"
         );
         let shed = Response { retry_after_s: Some(2), ..Response::text(503, "busy") };
@@ -376,5 +457,44 @@ mod tests {
         assert!(text.contains("retry-after: 2\r\n"));
         let nope = Response { allow: Some("POST"), ..Response::text(405, "") };
         assert!(String::from_utf8(nope.to_bytes()).unwrap().contains("allow: POST\r\n"));
+    }
+
+    #[test]
+    fn keep_alive_negotiation_follows_rfc_9112_defaults() {
+        // (request head, expected wants_keep_alive)
+        for (raw, expect) in [
+            (&b"GET / HTTP/1.1\r\n\r\n"[..], true),
+            (b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n", false),
+            (b"GET / HTTP/1.1\r\nConnection: CLOSE\r\n\r\n", false),
+            (b"GET / HTTP/1.1\r\nCONNECTION: Keep-Alive\r\n\r\n", true),
+            (b"GET / HTTP/1.1\r\nConnection: keep-alive, close\r\n\r\n", false),
+            (b"GET / HTTP/1.0\r\n\r\n", false),
+            (b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", true),
+            (b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n", true),
+        ] {
+            let r = parse(raw).unwrap();
+            assert_eq!(r.wants_keep_alive(), expect, "for {:?}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn header_lookup_is_case_insensitive() {
+        let r = parse(b"GET / HTTP/1.1\r\nX-Mixed-Case: v\r\n\r\n").unwrap();
+        assert_eq!(r.header("x-mixed-case"), Some("v"));
+        assert_eq!(r.header("X-Mixed-Case"), Some("v"));
+        assert_eq!(r.header("X-MIXED-CASE"), Some("v"));
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /c HTTP/1.1\r\n\r\n";
+        let mut cursor = Cursor::new(raw.to_vec());
+        let limits = Limits::default();
+        let a = read_request(&mut cursor, &limits).unwrap();
+        let b = read_request(&mut cursor, &limits).unwrap();
+        let c = read_request(&mut cursor, &limits).unwrap();
+        assert_eq!((a.path.as_str(), b.path.as_str(), c.path.as_str()), ("/a", "/b", "/c"));
+        assert_eq!(b.body, b"hi");
+        assert!(matches!(read_request(&mut cursor, &limits).unwrap_err(), HttpError::Closed));
     }
 }

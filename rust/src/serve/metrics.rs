@@ -78,6 +78,49 @@ impl Histogram {
     }
 }
 
+/// Bucket upper bounds for the requests-per-connection histogram
+/// (power-of-two spaced; keep-alive depth, not time).
+pub const CONN_BUCKET_BOUNDS: [u64; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Requests served on one connection before it closed — the live
+/// measure of how well keep-alive amortizes connection setup (an
+/// all-in-`le="1"` histogram means every client still reconnects per
+/// request).
+#[derive(Default)]
+pub struct ConnHistogram {
+    buckets: [AtomicU64; CONN_BUCKET_BOUNDS.len() + 1],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl ConnHistogram {
+    pub fn record(&self, requests: u64) {
+        let idx = CONN_BUCKET_BOUNDS
+            .iter()
+            .position(|&b| requests <= b)
+            .unwrap_or(CONN_BUCKET_BOUNDS.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(requests, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    fn render(&self, name: &str, out: &mut String) {
+        let mut cumulative = 0u64;
+        for (i, bound) in CONN_BUCKET_BOUNDS.iter().enumerate() {
+            cumulative += self.buckets[i].load(Ordering::Relaxed);
+            out.push_str(&format!("{name}_bucket{{le=\"{bound}\"}} {cumulative}\n"));
+        }
+        cumulative += self.buckets[CONN_BUCKET_BOUNDS.len()].load(Ordering::Relaxed);
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cumulative}\n"));
+        out.push_str(&format!("{name}_sum {}\n", self.sum.load(Ordering::Relaxed)));
+        out.push_str(&format!("{name}_count {}\n", self.count()));
+    }
+}
+
 /// Every status the daemon can emit, in render order.
 pub const STATUSES: [u16; 10] = [200, 400, 404, 405, 408, 413, 422, 500, 503, 504];
 
@@ -90,6 +133,11 @@ pub struct ServerMetrics {
     statuses: [AtomicU64; STATUSES.len()],
     /// Requests currently being handled by a worker.
     in_flight: AtomicI64,
+    /// Connections currently open on a worker (a keep-alive connection
+    /// counts once across its whole lifetime).
+    connections_active: AtomicI64,
+    /// Requests served per completed connection.
+    requests_per_conn: ConnHistogram,
     /// `/plan` requests answered by joining another request's search.
     coalesced_total: AtomicU64,
     /// `/plan` requests currently parked on an in-flight search.
@@ -140,6 +188,24 @@ impl ServerMetrics {
 
     pub fn end_in_flight(&self) {
         self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn begin_connection(&self) {
+        self.connections_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn end_connection(&self) {
+        self.connections_active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn connections_active(&self) -> i64 {
+        self.connections_active.load(Ordering::Relaxed)
+    }
+
+    /// Record how many requests a now-closed connection served (0 for
+    /// a connection that closed before a full request arrived).
+    pub fn record_requests_per_conn(&self, served: usize) {
+        self.requests_per_conn.record(served as u64);
     }
 
     pub fn record_coalesced(&self) {
@@ -223,6 +289,8 @@ impl ServerMetrics {
             ));
         }
         out.push_str(&format!("tag_in_flight {}\n", self.in_flight.load(Ordering::Relaxed)));
+        out.push_str(&format!("tag_connections_active {}\n", self.connections_active()));
+        self.requests_per_conn.render("tag_requests_per_conn", &mut out);
         out.push_str(&format!(
             "tag_coalesced_total {}\n",
             self.coalesced_total.load(Ordering::Relaxed)
@@ -377,6 +445,26 @@ mod tests {
         );
         // Uncached planner: no cache lines at all.
         assert!(!m.render(None).contains("tag_plan_cache"));
+    }
+
+    #[test]
+    fn connection_gauge_and_per_conn_histogram_render() {
+        let m = ServerMetrics::default();
+        m.begin_connection();
+        m.begin_connection();
+        m.end_connection();
+        m.record_requests_per_conn(1); // le="1"
+        m.record_requests_per_conn(3); // le="4"
+        m.record_requests_per_conn(500); // +Inf overflow
+        let text = m.render(None);
+        assert_eq!(scrape(&text, "tag_connections_active"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_requests_per_conn_bucket{le=\"1\"}"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_requests_per_conn_bucket{le=\"2\"}"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_requests_per_conn_bucket{le=\"4\"}"), Some(2.0));
+        assert_eq!(scrape(&text, "tag_requests_per_conn_bucket{le=\"256\"}"), Some(2.0));
+        assert_eq!(scrape(&text, "tag_requests_per_conn_bucket{le=\"+Inf\"}"), Some(3.0));
+        assert_eq!(scrape(&text, "tag_requests_per_conn_sum"), Some(504.0));
+        assert_eq!(scrape(&text, "tag_requests_per_conn_count"), Some(3.0));
     }
 
     #[test]

@@ -4,14 +4,26 @@
 //! traffic).
 //!
 //! Zero-dependency by construction, like the rest of the crate: the
-//! transport is [`http`] (a hardened HTTP/1.1 subset over
-//! `std::net`), request handling runs on a fixed [`pool`] of worker
-//! threads behind a **bounded admission queue** (full queue ⇒ `503` +
-//! `Retry-After` at the door, never unbounded buffering), identical
-//! concurrent requests are deduplicated by the [`coalesce`]
+//! transport is [`http`] (a hardened HTTP/1.1 subset over `std::net`
+//! with **keep-alive** — a connection serves many requests, bounded by
+//! [`ServeConfig::max_requests_per_conn`] and reaped after
+//! [`ServeConfig::read_timeout`] of idleness), connections are
+//! accepted by [`ServeConfig::accept_threads`] parallel acceptors over
+//! one shared listener, request handling runs on a fixed [`pool`] of
+//! worker threads behind a **bounded admission queue** (full queue ⇒
+//! `503` + `Retry-After` at the door, never unbounded buffering),
+//! identical concurrent requests are deduplicated by the [`coalesce`]
 //! singleflight keyed on request fingerprints, and [`metrics`] exposes
 //! live counters, the plan-cache hit rate and per-endpoint latency
 //! histograms.
+//!
+//! ## Warm boots
+//!
+//! With [`ServeConfig::store_dir`] set, every produced plan is
+//! journaled to the disk-backed [`store::PlanStore`] and replayed into
+//! the plan cache at bind time: a restarted daemon (or a fresh replica
+//! pointed at the same directory) answers previously-planned requests
+//! as cache hits — no search, byte-identical bodies.
 //!
 //! ## Fleet mode
 //!
@@ -54,7 +66,9 @@
 //! [`Server::bind`] → [`Server::run`] (blocks).  `POST /shutdown`
 //! flips the latch; `run` then stops accepting, lets the pool **drain
 //! every admitted connection** (in-flight searches complete and
-//! respond), joins the workers and returns.
+//! respond; draining responses carry `connection: close`, so
+//! keep-alive clients are released rather than parked), joins the
+//! acceptors and workers and returns.
 //!
 //! ```no_run
 //! use tag::api::SharedPlanner;
@@ -71,19 +85,21 @@ pub mod http;
 pub mod metrics;
 pub mod pool;
 pub mod router;
+pub mod store;
 
 pub use metrics::ServerMetrics;
 pub use router::Router;
+pub use store::PlanStore;
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::api::SharedPlanner;
 use crate::util::error::{Context, Result};
-use crate::util::Stopwatch;
+use crate::util::{lock, Stopwatch};
 
 use http::{HttpError, Limits, Response};
 use pool::{Pool, Rejected};
@@ -103,9 +119,21 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     /// Largest accepted request body, bytes.
     pub max_body_bytes: usize,
-    /// Per-socket read timeout (slow or idle clients cannot hold a
-    /// worker forever).
+    /// Per-socket read timeout: a slow peer mid-request gets `408`,
+    /// and a keep-alive connection idle this long between requests is
+    /// reaped silently — either way a client cannot hold a worker
+    /// forever.
     pub read_timeout: Duration,
+    /// Parallel acceptor threads over the shared listener, so
+    /// connection setup no longer serializes behind one core.
+    pub accept_threads: usize,
+    /// Requests served on one keep-alive connection before the daemon
+    /// closes it (`connection: close` on the final response) — bounds
+    /// how long one client can pin a worker under open competition.
+    pub max_requests_per_conn: usize,
+    /// Directory for the persistent plan store ([`store::PlanStore`]).
+    /// `None` serves from the in-memory cache only.
+    pub store_dir: Option<String>,
     /// Base seconds advertised in `Retry-After` on shed responses; the
     /// daemon adds the current queue's estimated drain time on top
     /// (see [`retry_after_for`]).
@@ -124,6 +152,9 @@ impl Default for ServeConfig {
             queue_depth: 64,
             max_body_bytes: Limits::default().max_body_bytes,
             read_timeout: Duration::from_secs(10),
+            accept_threads: 2,
+            max_requests_per_conn: 256,
+            store_dir: None,
             retry_after_s: 1,
             fleet_topology: "multi_rack".to_string(),
         }
@@ -156,12 +187,24 @@ impl Server {
             ))
         })?;
         let fleet = Arc::new(crate::fleet::FleetState::new(base)?);
+        // Warm boot: replay the journal into the plan cache before the
+        // first request, so a restart answers known traffic without a
+        // single search.
+        let store = match &config.store_dir {
+            Some(dir) => {
+                let (store, loaded) = store::PlanStore::open(dir)?;
+                planner.warm(loaded);
+                Some(Arc::new(store))
+            }
+            None => None,
+        };
         let router = Arc::new(Router::new(
             Arc::new(planner),
             metrics.clone(),
             shutdown.clone(),
             config.workers,
             fleet,
+            store,
         ));
         Ok(Self { listener, local_addr, config, router, metrics, shutdown })
     }
@@ -182,64 +225,107 @@ impl Server {
     pub fn run(self) -> Result<()> {
         let limits = Limits { max_body_bytes: self.config.max_body_bytes, ..Limits::default() };
         let read_timeout = self.config.read_timeout;
+        let max_requests = self.config.max_requests_per_conn.max(1);
         let router = self.router.clone();
         let metrics = self.metrics.clone();
         let pool = Pool::new(
             self.config.workers,
             self.config.queue_depth,
             move |stream: TcpStream| {
-                handle_connection(stream, &router, &metrics, &limits, read_timeout);
+                handle_connection(stream, &router, &metrics, &limits, read_timeout, max_requests);
             },
         );
 
-        // Non-blocking accept so the loop can observe the shutdown
-        // latch promptly (std has no portable listener wakeup).
+        // Non-blocking accept so every acceptor can observe the
+        // shutdown latch promptly (std has no portable listener
+        // wakeup).  The acceptor clones share this one open file
+        // description, so the flag applies to all of them, and the
+        // kernel hands each incoming connection to exactly one.
         self.listener.set_nonblocking(true).context("set listener non-blocking")?;
-        let mut fatal = None;
-        while !self.shutdown.load(Ordering::SeqCst) {
-            match self.listener.accept() {
-                Ok((stream, _peer)) => {
-                    // The stream must block again: workers do real
-                    // timed reads on it.
-                    if stream.set_nonblocking(false).is_err() {
-                        continue;
-                    }
-                    match pool.try_execute(stream) {
-                        Ok(()) => self.metrics.begin_queued(),
-                        Err(Rejected::Full(stream)) | Err(Rejected::Closed(stream)) => {
-                            self.metrics.record_shed();
-                            self.metrics.record_status(503);
-                            let retry = retry_after_for(
-                                self.config.retry_after_s,
-                                pool.queued(),
-                                self.config.workers,
-                            );
-                            shed(stream, retry);
-                        }
-                    }
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(2));
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                Err(e) => {
-                    // Fatal accept failure (e.g. fd exhaustion): stop
-                    // accepting, but still drain below — admitted
-                    // connections were promised service, and the pool's
-                    // workers must be joined, not leaked.
-                    fatal = Some(crate::util::error::Error::from(e));
-                    break;
-                }
-            }
+        let mut listeners = Vec::new();
+        for _ in 0..self.config.accept_threads.max(1) {
+            listeners.push(self.listener.try_clone().context("clone listener for acceptor")?);
         }
+        let fatal: Mutex<Option<crate::util::error::Error>> = Mutex::new(None);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            for (i, listener) in listeners.into_iter().enumerate() {
+                let pool = &pool;
+                let fatal = &fatal;
+                let stop = &stop;
+                let shutdown: &AtomicBool = &self.shutdown;
+                let metrics: &ServerMetrics = &self.metrics;
+                let config = &self.config;
+                std::thread::Builder::new()
+                    .name(format!("tag-serve-accept-{i}"))
+                    .spawn_scoped(scope, move || {
+                        accept_loop(listener, pool, metrics, config, shutdown, stop, fatal);
+                    })
+                    .expect("spawn acceptor thread");
+            }
+            // The scope joins every acceptor before returning.
+        });
 
-        // Graceful drain: stop accepting (listener drops), then let the
-        // pool finish every admitted connection before joining.
+        // Graceful drain: accepting has stopped (each acceptor dropped
+        // its listener clone when it returned), so let the pool finish
+        // every admitted connection before joining the workers.
         drop(self.listener);
         pool.shutdown();
-        match fatal {
+        match lock(&fatal).take() {
             Some(e) => Err(e),
             None => Ok(()),
+        }
+    }
+}
+
+/// One acceptor thread: accept until the shutdown latch flips (or any
+/// acceptor hits a fatal error), admitting connections to the worker
+/// pool and shedding at the door when its queue is full.
+fn accept_loop(
+    listener: TcpListener,
+    pool: &Pool<TcpStream>,
+    metrics: &ServerMetrics,
+    config: &ServeConfig,
+    shutdown: &AtomicBool,
+    stop: &AtomicBool,
+    fatal: &Mutex<Option<crate::util::error::Error>>,
+) {
+    while !shutdown.load(Ordering::SeqCst) && !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The stream must block again: workers do real timed
+                // reads on it (accepted sockets inherit the listener's
+                // non-blocking flag on some platforms).
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                match pool.try_execute(stream) {
+                    Ok(()) => metrics.begin_queued(),
+                    Err(Rejected::Full(stream)) | Err(Rejected::Closed(stream)) => {
+                        metrics.record_shed();
+                        metrics.record_status(503);
+                        let retry =
+                            retry_after_for(config.retry_after_s, pool.queued(), config.workers);
+                        shed(stream, retry);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                // Fatal accept failure (e.g. fd exhaustion): stop every
+                // acceptor, but still drain afterwards — admitted
+                // connections were promised service, and the pool's
+                // workers must be joined, not leaked.  First error wins.
+                let mut slot = lock(fatal);
+                if slot.is_none() {
+                    *slot = Some(crate::util::error::Error::from(e));
+                }
+                stop.store(true, Ordering::SeqCst);
+                break;
+            }
         }
     }
 }
@@ -260,59 +346,94 @@ fn retry_after_for(base_s: u64, queued: usize, workers: usize) -> u64 {
 fn shed(mut stream: TcpStream, retry_after_s: u64) {
     let response = Response {
         retry_after_s: Some(retry_after_s),
+        close: true,
         ..Response::text(503, "planning queue full, retry later\n")
     };
     let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
     let _ = response.write_to(&mut stream);
 }
 
-/// Read, route and answer one connection (worker-thread body).
+/// Serve one connection to completion (worker-thread body): a
+/// keep-alive loop reading, routing and answering requests until the
+/// client disconnects or asks to close, the per-connection request cap
+/// is reached, the daemon starts draining, or the connection goes
+/// idle/bad.  Responses are always `Content-Length` framed, so
+/// pipelined requests simply wait in the `BufReader` for the next
+/// iteration.
 fn handle_connection(
     stream: TcpStream,
     router: &Router,
     metrics: &ServerMetrics,
     limits: &Limits,
     read_timeout: Duration,
+    max_requests: usize,
 ) {
     metrics.end_queued();
-    metrics.begin_in_flight();
+    metrics.begin_connection();
     let _ = stream.set_read_timeout(Some(read_timeout));
     let _ = stream.set_write_timeout(Some(read_timeout));
     let mut reader = BufReader::new(&stream);
-    let response = match http::read_request(&mut reader, limits) {
-        Ok(request) => {
-            let endpoint = metrics::endpoint_index(&request.path);
-            metrics.record_request(endpoint);
-            let watch = Stopwatch::start();
-            // Panic isolation: a handler that panics (a planner bug, a
-            // poisoned lock) answers 500 and the worker keeps serving —
-            // one bad request must never take the daemon down.
-            let response = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                router.handle(&request)
-            }))
-            .unwrap_or_else(|_| {
-                metrics.record_panic();
-                Response::text(500, "internal error: request handler panicked\n")
-            });
-            metrics.record_latency(endpoint, watch.elapsed_s());
-            Some(response)
+    let mut served = 0usize;
+    loop {
+        match http::read_request(&mut reader, limits) {
+            Ok(request) => {
+                served += 1;
+                metrics.begin_in_flight();
+                let endpoint = metrics::endpoint_index(&request.path);
+                metrics.record_request(endpoint);
+                let watch = Stopwatch::start();
+                // Panic isolation: a handler that panics (a planner
+                // bug, a poisoned lock) answers 500 and the worker
+                // keeps serving — one bad request must never take the
+                // daemon down.
+                let mut response = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    router.handle(&request)
+                }))
+                .unwrap_or_else(|_| {
+                    metrics.record_panic();
+                    Response::text(500, "internal error: request handler panicked\n")
+                });
+                metrics.record_latency(endpoint, watch.elapsed_s());
+                metrics.end_in_flight();
+                // Close when the client asked to, the per-connection
+                // cap is reached, or the daemon is draining (a parked
+                // keep-alive client must not stall shutdown).
+                response.close = !request.wants_keep_alive()
+                    || served >= max_requests
+                    || router.draining();
+                metrics.record_status(response.status);
+                let closing = response.close;
+                let mut writer = &stream;
+                if response.write_to(&mut writer).is_err() || closing {
+                    break;
+                }
+            }
+            // A peer that disconnected or went idle between requests
+            // is reaped silently — on a persistent connection that is
+            // the normal end of life, not an error.
+            Err(HttpError::Closed) | Err(HttpError::Idle) => break,
+            Err(error) => {
+                if let Some(status) = error.status() {
+                    let detail = match error {
+                        HttpError::Bad(msg) | HttpError::TooLarge(msg) => msg,
+                        HttpError::Io(e) => e.to_string(),
+                        HttpError::Closed | HttpError::Idle => unreachable!("handled above"),
+                    };
+                    // Transport errors always close: after a malformed
+                    // or half-read request the framing is unknown, and
+                    // resyncing on it would be a smuggling vector.
+                    let response =
+                        Response { close: true, ..Response::text(status, format!("{detail}\n")) };
+                    metrics.record_status(status);
+                    let mut writer = &stream;
+                    let _ = response.write_to(&mut writer);
+                }
+                break;
+            }
         }
-        Err(HttpError::Closed) => None,
-        Err(error) => error.status().map(|status| {
-            let detail = match error {
-                HttpError::Bad(msg) | HttpError::TooLarge(msg) => msg,
-                HttpError::Io(e) => e.to_string(),
-                HttpError::Closed => unreachable!("handled above"),
-            };
-            Response::text(status, format!("{detail}\n"))
-        }),
-    };
-    if let Some(response) = response {
-        metrics.record_status(response.status);
-        let mut writer = &stream;
-        let _ = response.write_to(&mut writer);
     }
-    metrics.end_in_flight();
+    metrics.record_requests_per_conn(served);
+    metrics.end_connection();
 }
 
 #[cfg(test)]
@@ -346,14 +467,33 @@ mod tests {
     #[test]
     fn serves_health_and_shuts_down_cleanly() {
         let (addr, handle) = start(2, 8);
-        let health = roundtrip(addr, b"GET /healthz HTTP/1.1\r\n\r\n");
+        let health = roundtrip(addr, b"GET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n");
         assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
+        assert!(health.contains("connection: close\r\n"), "{health}");
         assert!(health.contains("\"status\":\"ok\""), "{health}");
         assert!(health.contains("\"workers\":2"), "{health}");
-        let metrics = roundtrip(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+        let metrics = roundtrip(addr, b"GET /metrics HTTP/1.1\r\nconnection: close\r\n\r\n");
         assert!(metrics.contains("tag_requests_total{endpoint=\"/healthz\"} 1"), "{metrics}");
-        let bye = roundtrip(addr, b"POST /shutdown HTTP/1.1\r\n\r\n");
+        let bye = roundtrip(addr, b"POST /shutdown HTTP/1.1\r\nconnection: close\r\n\r\n");
         assert!(bye.starts_with("HTTP/1.1 200"), "{bye}");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn keep_alive_connection_serves_many_then_drains_on_shutdown() {
+        let (addr, handle) = start(2, 8);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        // The shutdown response must carry `connection: close` (the
+        // daemon is draining) and the server must then close, so a
+        // read-to-EOF sees exactly three framed responses.
+        stream.write_all(b"POST /shutdown HTTP/1.1\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert_eq!(out.matches("HTTP/1.1 200 OK\r\n").count(), 3, "{out}");
+        assert_eq!(out.matches("connection: keep-alive\r\n").count(), 2, "{out}");
+        assert_eq!(out.matches("connection: close\r\n").count(), 1, "{out}");
         handle.join().unwrap();
     }
 
@@ -372,12 +512,13 @@ mod tests {
         let (addr, handle) = start(1, 8);
         let bad = roundtrip(addr, b"NOT A REQUEST\r\n\r\n");
         assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+        assert!(bad.contains("connection: close\r\n"), "errors close: {bad}");
         let huge = roundtrip(
             addr,
             format!("POST /plan HTTP/1.1\r\ncontent-length: {}\r\n\r\n", 1 << 30).as_bytes(),
         );
         assert!(huge.starts_with("HTTP/1.1 413"), "{huge}");
-        let _ = roundtrip(addr, b"POST /shutdown HTTP/1.1\r\n\r\n");
+        let _ = roundtrip(addr, b"POST /shutdown HTTP/1.1\r\nconnection: close\r\n\r\n");
         handle.join().unwrap();
     }
 }

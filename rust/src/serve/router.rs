@@ -39,6 +39,7 @@ use crate::fleet::{FleetState, SubmitOutcome};
 use super::coalesce::{Join, SingleFlight};
 use super::http::{Request, Response};
 use super::metrics::ServerMetrics;
+use super::store::PlanStore;
 
 /// Shared routing state: the planner, the in-flight table, the metrics
 /// and the shutdown latch.  One per server, `Arc`-shared with every
@@ -48,6 +49,8 @@ pub struct Router {
     pub metrics: Arc<ServerMetrics>,
     /// The multi-tenant fleet ledger behind `/fleet/*`.
     pub fleet: Arc<FleetState>,
+    /// Persistent plan journal (`None` when serving memory-only).
+    store: Option<Arc<PlanStore>>,
     flights: SingleFlight<PlanKey, (u16, String)>,
     shutdown: Arc<AtomicBool>,
     /// Worker-pool size, reported by `/healthz`.
@@ -61,8 +64,16 @@ impl Router {
         shutdown: Arc<AtomicBool>,
         workers: usize,
         fleet: Arc<FleetState>,
+        store: Option<Arc<PlanStore>>,
     ) -> Self {
-        Self { planner, metrics, fleet, flights: SingleFlight::new(), shutdown, workers }
+        Self { planner, metrics, fleet, store, flights: SingleFlight::new(), shutdown, workers }
+    }
+
+    /// Whether the shutdown latch has flipped — connection loops use
+    /// this to close keep-alive clients instead of parking them
+    /// through the drain.
+    pub fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
     }
 
     /// Dispatch one request.
@@ -80,6 +91,9 @@ impl Router {
             ("GET", "/metrics") => {
                 let mut text = self.metrics.render(self.planner.cache_stats());
                 self.fleet.render_metrics(&mut text);
+                if let Some(store) = &self.store {
+                    store.render_metrics(&mut text);
+                }
                 Response::text(200, text)
             }
             ("POST", "/shutdown") => {
@@ -148,6 +162,7 @@ impl Router {
             Join::Lead(leader) => {
                 let (status, body) = match self.planner.plan(&request) {
                     Ok(outcome) => {
+                        let (status, body) = plan_payload(&outcome.plan);
                         if !outcome.cache_hit {
                             self.metrics.record_search();
                             // Leaders only: a cached plan's telemetry
@@ -155,8 +170,20 @@ impl Router {
                             // already folded in.
                             self.metrics
                                 .record_eval_metrics(&outcome.plan.telemetry.metrics);
+                            // Journal fresh full plans so the next boot
+                            // starts warm.  Mirrors the cache's own
+                            // policy exactly: timed-out plans (partial
+                            // 200s included) are neither cached nor
+                            // persisted.
+                            let timed_out =
+                                outcome.plan.telemetry.metric("timed_out").is_some();
+                            if status == 200 && !timed_out {
+                                if let Some(store) = &self.store {
+                                    store.append(&key, &body);
+                                }
+                            }
                         }
-                        plan_payload(&outcome.plan)
+                        (status, body)
                     }
                     Err(e) => (422, format!("planning failed: {e}\n")),
                 };
@@ -271,6 +298,7 @@ mod tests {
             Arc::new(AtomicBool::new(false)),
             2,
             Arc::new(FleetState::new(crate::cluster::presets::testbed()).unwrap()),
+            None,
         )
     }
 
@@ -281,6 +309,7 @@ mod tests {
             query: None,
             headers: Vec::new(),
             body: body.to_vec(),
+            http11: true,
         }
     }
 
@@ -444,8 +473,10 @@ mod tests {
     fn shutdown_endpoint_sets_the_latch() {
         let r = router();
         assert!(!r.shutdown.load(Ordering::SeqCst));
+        assert!(!r.draining());
         assert_eq!(r.handle(&request("POST", "/shutdown", b"")).status, 200);
         assert!(r.shutdown.load(Ordering::SeqCst));
+        assert!(r.draining());
     }
 
     #[test]

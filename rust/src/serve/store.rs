@@ -1,0 +1,452 @@
+//! Disk-backed plan store: a warm boot for the daemon's plan cache.
+//!
+//! The in-memory [`PlanCache`](crate::api::PlanCache) dies with the
+//! process, so every restart of `tag serve` (and every fresh replica
+//! behind a balancer) used to pay a full search per distinct request
+//! before reaching steady state.  This module journals every plan the
+//! daemon produces to `<dir>/plans.journal`; on the next boot the
+//! journal is replayed into the cache via
+//! [`Planner::warm`](crate::api::Planner::warm), so a previously
+//! planned request is answered as a cache hit — no search executed,
+//! byte-identical body (the `api/json.rs` codec is canonical and
+//! lossless, and cache hits re-encode the stored plan).
+//!
+//! # Journal format
+//!
+//! One record per plan, text header + JSON body:
+//!
+//! ```text
+//! tagplan1 <model> <topology> <config> <len> <fnv>\n
+//! <len bytes of api/json-encoded DeploymentPlan>\n
+//! ```
+//!
+//! where the three key fields are 16-digit lowercase hex fingerprints
+//! (the [`PlanKey`] triple), `len` is the body length in bytes, and
+//! `fnv` is the FNV-1a checksum of the body.  Records are
+//! **append-only**; when the same key is produced again (cache
+//! eviction forced a re-search), the later record wins at load time.
+//!
+//! # Corruption tolerance
+//!
+//! Appends are buffered writes with no fsync — a crash can tear the
+//! tail.  `open` therefore replays the journal strictly
+//! front-to-back and stops at the *first* record that fails any check
+//! (bad magic, unparsable header, short body, checksum mismatch,
+//! undecodable plan): everything before it loads, everything from it
+//! on is dropped, the file is truncated back to the last good record
+//! so garbage never accumulates, and the event is counted in
+//! `tag_plan_store_corrupt_total` (and logged to stderr).  A corrupt
+//! journal is **never** a boot failure.
+//!
+//! # What is deliberately not persisted
+//!
+//! The fragment store (`dist/fragments.rs`) is *not* journaled
+//! alongside plans: `api::Planner::plan` rebuilds its `Lowering` (and
+//! thus its fragment/memo caches) per call precisely so plan telemetry
+//! is bit-identical regardless of daemon history.  A warm fragment
+//! store would make `memo_hits`/`fragment_hits` depend on what
+//! previous processes computed, breaking that contract; it stays a
+//! ROADMAP follow-up until telemetry is allowed to vary.
+
+use std::collections::HashSet;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::api::fingerprint::{self, Fnv};
+use crate::api::{DeploymentPlan, PlanKey};
+use crate::util::error::{Context, Result};
+use crate::util::lock;
+
+/// Magic token opening every journal record.
+const MAGIC: &str = "tagplan1";
+/// Upper bound on a single encoded plan; anything larger in a header
+/// is corruption, not a plan.
+const MAX_RECORD_BYTES: usize = 16 * 1024 * 1024;
+
+/// Counter snapshot for `GET /metrics` and tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Distinct plan keys known to the journal (loaded + appended).
+    pub entries: u64,
+    /// Plans replayed into the cache at boot.
+    pub loads: u64,
+    /// Plans appended by this process.
+    pub appends: u64,
+    /// Corrupt-tail events skipped at boot (at most one per boot).
+    pub corrupt: u64,
+}
+
+struct Inner {
+    file: File,
+    /// Keys already present in the journal; duplicate appends (a
+    /// coalescing race, or a re-search after cache eviction re-deriving
+    /// the same plan) are skipped.
+    keys: HashSet<PlanKey>,
+}
+
+/// Append-only journal of produced plans.  One instance per daemon,
+/// shared across the worker pool (`&self` append under a mutex).
+pub struct PlanStore {
+    path: PathBuf,
+    inner: Mutex<Inner>,
+    loads: AtomicU64,
+    appends: AtomicU64,
+    corrupt: AtomicU64,
+}
+
+impl PlanStore {
+    /// Open (creating if needed) the journal under `dir` and replay
+    /// it.  Returns the store plus the surviving `(key, plan)` pairs
+    /// in journal order with later duplicates already folded — feed
+    /// them to [`Planner::warm`](crate::api::Planner::warm).
+    pub fn open(dir: impl AsRef<Path>) -> Result<(Self, Vec<(PlanKey, DeploymentPlan)>)> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create plan store directory {}", dir.display()))?;
+        let path = dir.join("plans.journal");
+        let raw = match std::fs::read(&path) {
+            Ok(raw) => raw,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => {
+                return Err(e).with_context(|| format!("read plan journal {}", path.display()))
+            }
+        };
+
+        let (records, good_len, corrupt) = replay(&raw);
+        if corrupt > 0 {
+            eprintln!(
+                "tag serve: plan store {}: dropped {} corrupt trailing byte(s) after {} good record(s)",
+                path.display(),
+                raw.len() - good_len,
+                records.len(),
+            );
+        }
+
+        // Fold duplicates: later records win, but keep first-seen order
+        // so warm-boot cache population is deterministic.
+        let mut order: Vec<PlanKey> = Vec::new();
+        let mut keys: HashSet<PlanKey> = HashSet::new();
+        let mut latest: std::collections::HashMap<PlanKey, DeploymentPlan> =
+            std::collections::HashMap::new();
+        for (key, plan) in records {
+            if keys.insert(key) {
+                order.push(key);
+            }
+            latest.insert(key, plan);
+        }
+        let loaded: Vec<(PlanKey, DeploymentPlan)> = order
+            .iter()
+            .map(|key| (*key, latest.remove(key).expect("every ordered key was inserted")))
+            .collect();
+
+        let file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open plan journal {}", path.display()))?;
+        if good_len < raw.len() {
+            // Truncate the corrupt tail so it cannot shadow future
+            // appends.  (The file may have grown since `read` only if
+            // another process shares the dir — unsupported; last
+            // writer wins.)
+            file.set_len(good_len as u64)
+                .with_context(|| format!("truncate corrupt tail of {}", path.display()))?;
+        }
+
+        let store = Self {
+            path,
+            inner: Mutex::new(Inner { file, keys }),
+            loads: AtomicU64::new(loaded.len() as u64),
+            appends: AtomicU64::new(0),
+            corrupt: AtomicU64::new(u64::from(corrupt > 0)),
+        };
+        Ok((store, loaded))
+    }
+
+    /// Journal one produced plan.  Best-effort: an I/O failure is
+    /// logged and dropped (the daemon must keep serving; the plan is
+    /// simply not warm after the next restart).  Returns whether a
+    /// record was written (`false` for duplicates and errors).
+    pub fn append(&self, key: &PlanKey, encoded_plan: &str) -> bool {
+        let mut inner = lock(&self.inner);
+        if !inner.keys.insert(*key) {
+            return false;
+        }
+        let body = encoded_plan.as_bytes();
+        let mut fnv = Fnv::new();
+        fnv.write(body);
+        let header = format!(
+            "{MAGIC} {} {} {} {} {}\n",
+            fingerprint::to_hex(key.model),
+            fingerprint::to_hex(key.topology),
+            fingerprint::to_hex(key.config),
+            body.len(),
+            fingerprint::to_hex(fnv.finish()),
+        );
+        let mut record = header.into_bytes();
+        record.extend_from_slice(body);
+        record.push(b'\n');
+        let wrote = inner.file.write_all(&record).and_then(|()| inner.file.flush());
+        match wrote {
+            Ok(()) => {
+                self.appends.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(e) => {
+                // Forget the key so a later attempt can retry the write.
+                inner.keys.remove(key);
+                eprintln!("tag serve: plan store {}: append failed: {e}", self.path.display());
+                false
+            }
+        }
+    }
+
+    /// Journal file path (diagnostics, tests).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            entries: lock(&self.inner).keys.len() as u64,
+            loads: self.loads.load(Ordering::Relaxed),
+            appends: self.appends.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Append the `tag_plan_store_*` gauge lines to a Prometheus-style
+    /// text exposition.
+    pub fn render_metrics(&self, out: &mut String) {
+        let stats = self.stats();
+        let mut gauge = |name: &str, help: &str, value: u64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {value}\n"
+            ));
+        };
+        gauge("tag_plan_store_entries", "Distinct plan keys in the journal.", stats.entries);
+        gauge("tag_plan_store_loads", "Plans replayed into the cache at boot.", stats.loads);
+        gauge("tag_plan_store_appends", "Plans journaled by this process.", stats.appends);
+        let name = "tag_plan_store_corrupt_total";
+        out.push_str(&format!(
+            "# HELP {name} Corrupt journal tails dropped at boot.\n# TYPE {name} counter\n{name} {}\n",
+            stats.corrupt
+        ));
+    }
+}
+
+/// Replay a journal image.  Returns the good records in file order,
+/// the byte length of the valid prefix, and whether a corrupt tail was
+/// dropped.
+fn replay(raw: &[u8]) -> (Vec<(PlanKey, DeploymentPlan)>, usize, bool) {
+    let mut records = Vec::new();
+    let mut offset = 0usize;
+    while offset < raw.len() {
+        match parse_record(&raw[offset..]) {
+            Some((key, plan, consumed)) => {
+                records.push((key, plan));
+                offset += consumed;
+            }
+            None => return (records, offset, true),
+        }
+    }
+    (records, offset, false)
+}
+
+/// Parse one record at the start of `raw`.  `None` means corrupt.
+fn parse_record(raw: &[u8]) -> Option<(PlanKey, DeploymentPlan, usize)> {
+    let newline = raw.iter().position(|&b| b == b'\n')?;
+    let header = std::str::from_utf8(&raw[..newline]).ok()?;
+    let mut parts = header.split(' ');
+    if parts.next()? != MAGIC {
+        return None;
+    }
+    let model = fingerprint::from_hex(parts.next()?)?;
+    let topology = fingerprint::from_hex(parts.next()?)?;
+    let config = fingerprint::from_hex(parts.next()?)?;
+    let len: usize = parts.next()?.parse().ok()?;
+    let checksum = fingerprint::from_hex(parts.next()?)?;
+    if parts.next().is_some() || len > MAX_RECORD_BYTES {
+        return None;
+    }
+    let body_start = newline + 1;
+    let body_end = body_start.checked_add(len)?;
+    // Body plus its trailing newline must be fully present.
+    if body_end >= raw.len() || raw[body_end] != b'\n' {
+        return None;
+    }
+    let body = &raw[body_start..body_end];
+    let mut fnv = Fnv::new();
+    fnv.write(body);
+    if fnv.finish() != checksum {
+        return None;
+    }
+    let text = std::str::from_utf8(body).ok()?;
+    let plan = DeploymentPlan::decode(text).ok()?;
+    Some((PlanKey { model, topology, config }, plan, body_end + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::plan::tests::sample_plan;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tag-store-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn key(n: u64) -> PlanKey {
+        PlanKey { model: n, topology: n ^ 0xabcd, config: n.wrapping_mul(31) }
+    }
+
+    #[test]
+    fn round_trips_plans_across_reopen() {
+        let dir = tempdir("roundtrip");
+        let plan = sample_plan();
+        {
+            let (store, loaded) = PlanStore::open(&dir).unwrap();
+            assert!(loaded.is_empty());
+            assert!(store.append(&key(1), &plan.encode()));
+            assert!(store.append(&key(2), &plan.encode()));
+            // Duplicate key: skipped.
+            assert!(!store.append(&key(1), &plan.encode()));
+            let stats = store.stats();
+            assert_eq!((stats.entries, stats.appends, stats.corrupt), (2, 2, 0));
+        }
+        let (store, loaded) = PlanStore::open(&dir).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, key(1));
+        assert_eq!(loaded[1].0, key(2));
+        assert_eq!(loaded[0].1, plan);
+        // Loaded bodies re-encode byte-identically (canonical codec).
+        assert_eq!(loaded[1].1.encode(), plan.encode());
+        let stats = store.stats();
+        assert_eq!((stats.entries, stats.loads, stats.corrupt), (2, 2, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_tails_are_skipped_truncated_and_counted() {
+        let plan = sample_plan();
+        let encoded = plan.encode();
+        // Each case: (tag, bytes to append after one good record).
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("garbage", b"not a record at all".to_vec()),
+            ("truncated-head", b"tagplan1 0000".to_vec()),
+            ("truncated-body", {
+                let mut fnv = Fnv::new();
+                fnv.write(encoded.as_bytes());
+                format!(
+                    "tagplan1 {} {} {} {} {}\n{}",
+                    fingerprint::to_hex(7),
+                    fingerprint::to_hex(8),
+                    fingerprint::to_hex(9),
+                    encoded.len(),
+                    fingerprint::to_hex(fnv.finish()),
+                    &encoded[..encoded.len() / 2],
+                )
+                .into_bytes()
+            }),
+            ("bad-checksum", {
+                format!(
+                    "tagplan1 {} {} {} {} {}\n{encoded}\n",
+                    fingerprint::to_hex(7),
+                    fingerprint::to_hex(8),
+                    fingerprint::to_hex(9),
+                    encoded.len(),
+                    fingerprint::to_hex(0xdeadbeef),
+                )
+                .into_bytes()
+            }),
+        ];
+        for (tag, tail) in cases {
+            let dir = tempdir(tag);
+            let path = {
+                let (store, _) = PlanStore::open(&dir).unwrap();
+                assert!(store.append(&key(1), &encoded));
+                store.path().to_path_buf()
+            };
+            let good_len = std::fs::metadata(&path).unwrap().len();
+            let mut file = OpenOptions::new().append(true).open(&path).unwrap();
+            file.write_all(&tail).unwrap();
+            drop(file);
+
+            let (store, loaded) = PlanStore::open(&dir).unwrap();
+            assert_eq!(loaded.len(), 1, "good prefix survives ({tag})");
+            assert_eq!(loaded[0].0, key(1));
+            assert_eq!(store.stats().corrupt, 1, "corrupt tail counted ({tag})");
+            assert_eq!(
+                std::fs::metadata(&path).unwrap().len(),
+                good_len,
+                "tail truncated back to the last good record ({tag})"
+            );
+            // The truncated journal accepts appends again and reloads
+            // cleanly (corruption never poisons future boots).
+            assert!(store.append(&key(2), &encoded));
+            drop(store);
+            let (store, loaded) = PlanStore::open(&dir).unwrap();
+            assert_eq!(loaded.len(), 2);
+            assert_eq!(store.stats().corrupt, 0);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn later_duplicate_records_win_at_load() {
+        let dir = tempdir("dupes");
+        let plan = sample_plan();
+        let mut other = sample_plan();
+        other.backend = "gnn-mcts".into();
+        {
+            let (store, _) = PlanStore::open(&dir).unwrap();
+            assert!(store.append(&key(1), &plan.encode()));
+        }
+        {
+            // A second process-lifetime re-deriving key(1): its in-memory
+            // dedup set starts from the journal, so the append is skipped…
+            let (store, _) = PlanStore::open(&dir).unwrap();
+            assert!(!store.append(&key(1), &other.encode()));
+            // …but a hand-written later record (simulating an older
+            // build that did re-append) must win at load time.
+            let body = other.encode();
+            let mut fnv = Fnv::new();
+            fnv.write(body.as_bytes());
+            let record = format!(
+                "tagplan1 {} {} {} {} {}\n{body}\n",
+                fingerprint::to_hex(key(1).model),
+                fingerprint::to_hex(key(1).topology),
+                fingerprint::to_hex(key(1).config),
+                body.len(),
+                fingerprint::to_hex(fnv.finish()),
+            );
+            let mut file = OpenOptions::new().append(true).open(store.path()).unwrap();
+            file.write_all(record.as_bytes()).unwrap();
+        }
+        let (store, loaded) = PlanStore::open(&dir).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].1.backend, "gnn-mcts", "later record wins");
+        assert_eq!(store.stats().corrupt, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_and_missing_journals_load_clean() {
+        let dir = tempdir("empty");
+        let (store, loaded) = PlanStore::open(&dir).unwrap();
+        assert!(loaded.is_empty());
+        let stats = store.stats();
+        assert_eq!((stats.entries, stats.loads, stats.appends, stats.corrupt), (0, 0, 0, 0));
+        let mut text = String::new();
+        store.render_metrics(&mut text);
+        assert!(text.contains("tag_plan_store_entries 0\n"));
+        assert!(text.contains("tag_plan_store_corrupt_total 0\n"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -134,7 +134,7 @@ impl SearchBackend for PanicBackend {
 fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    let mut raw = format!("{method} {path} HTTP/1.1\r\n");
+    let mut raw = format!("{method} {path} HTTP/1.1\r\nconnection: close\r\n");
     if let Some(body) = body {
         raw.push_str(&format!("content-length: {}\r\n", body.len()));
     }

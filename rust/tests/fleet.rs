@@ -180,7 +180,7 @@ fn residual_aware_beats_fifo_on_an_oversubscribed_multi_rack() {
 fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String, String) {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
-    let mut raw = format!("{method} {path} HTTP/1.1\r\n");
+    let mut raw = format!("{method} {path} HTTP/1.1\r\nconnection: close\r\n");
     if let Some(body) = body {
         raw.push_str(&format!("content-length: {}\r\n", body.len()));
     }

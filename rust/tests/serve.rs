@@ -2,36 +2,50 @@
 //! TCP connections against a daemon on an ephemeral port, exercising
 //! the serving guarantees the README states — coalescing of concurrent
 //! identical requests into one search with byte-identical responses,
-//! live `/metrics`, bounded-queue load shedding with `503`, and
-//! graceful drain on shutdown.  Zero non-std dependencies, clients
-//! included.
+//! HTTP/1.1 keep-alive (sequential and pipelined requests on one
+//! connection, idle reaping, per-connection request caps), warm boots
+//! from the persistent plan store, the shared GNN backend under
+//! concurrency, live `/metrics`, bounded-queue load shedding with
+//! `503`, and graceful drain on shutdown.  Zero non-std dependencies,
+//! clients included.
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use tag::api::{DeploymentPlan, SharedPlanner};
 use tag::serve::{ServeConfig, Server};
 
-/// Start a daemon on an ephemeral port; returns its address and the
-/// `run()` thread handle (joins clean after `POST /shutdown`).
-fn start_server(workers: usize, queue_depth: usize) -> (SocketAddr, std::thread::JoinHandle<()>) {
-    let config = ServeConfig {
-        port: 0,
-        workers,
-        queue_depth,
-        read_timeout: Duration::from_secs(10),
-        ..ServeConfig::default()
-    };
-    let server = Server::bind(config, SharedPlanner::builder().build()).expect("bind");
+/// Start a daemon with an explicit config (the port is forced
+/// ephemeral); returns its address and the `run()` thread handle
+/// (joins clean after `POST /shutdown`).
+fn start_with(
+    config: ServeConfig,
+    planner: SharedPlanner,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let config = ServeConfig { port: 0, ..config };
+    let server = Server::bind(config, planner).expect("bind");
     let addr = server.local_addr();
     let handle = std::thread::spawn(move || server.run().expect("serve"));
     (addr, handle)
 }
 
-/// Minimal HTTP/1.1 client: one request, read to EOF (the daemon
-/// closes every connection).  Returns (status, headers, body).
+fn start_server(workers: usize, queue_depth: usize) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    start_with(
+        ServeConfig {
+            workers,
+            queue_depth,
+            read_timeout: Duration::from_secs(10),
+            ..ServeConfig::default()
+        },
+        SharedPlanner::builder().build(),
+    )
+}
+
+/// Minimal one-shot HTTP/1.1 client: sends `Connection: close` and
+/// reads to EOF.  Returns (status, headers, body).
 fn http(
     addr: SocketAddr,
     method: &str,
@@ -40,7 +54,7 @@ fn http(
 ) -> (u16, String, String) {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
-    let mut raw = format!("{method} {path} HTTP/1.1\r\n");
+    let mut raw = format!("{method} {path} HTTP/1.1\r\nconnection: close\r\n");
     if let Some(body) = body {
         raw.push_str(&format!("content-length: {}\r\n", body.len()));
     }
@@ -63,6 +77,73 @@ fn http(
 fn post_plan(addr: SocketAddr, body: &str) -> (u16, String) {
     let (status, _, response) = http(addr, "POST", "/plan", Some(body));
     (status, response)
+}
+
+/// A persistent (keep-alive) client: many requests on one connection,
+/// each response read by its `Content-Length` framing.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Self { stream, reader }
+    }
+
+    fn send_raw(&mut self, raw: &[u8]) {
+        self.stream.write_all(raw).expect("send");
+    }
+
+    fn send(&mut self, method: &str, path: &str, body: Option<&str>) {
+        let mut raw = format!("{method} {path} HTTP/1.1\r\n");
+        if let Some(body) = body {
+            raw.push_str(&format!("content-length: {}\r\n", body.len()));
+        }
+        raw.push_str("\r\n");
+        if let Some(body) = body {
+            raw.push_str(body);
+        }
+        self.send_raw(raw.as_bytes());
+    }
+
+    /// Read one framed response: (status, lowercased head, body).
+    fn read_response(&mut self) -> (u16, String, String) {
+        let mut head = String::new();
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).expect("read head");
+            assert!(n > 0, "connection closed mid-head (after {head:?})");
+            if line == "\r\n" {
+                break;
+            }
+            head.push_str(&line);
+        }
+        let head = head.to_ascii_lowercase();
+        let status: u16 = head
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("content-length:"))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or_else(|| panic!("no content-length in {head:?}"));
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).expect("read body");
+        (status, head, String::from_utf8(body).expect("utf-8 body"))
+    }
+
+    /// The server closed its end: the next read sees EOF.
+    fn assert_eof(&mut self) {
+        let mut rest = String::new();
+        self.reader.read_to_string(&mut rest).expect("read eof");
+        assert!(rest.is_empty(), "unexpected trailing bytes: {rest:?}");
+    }
 }
 
 /// Pull a `name value` line out of the `/metrics` exposition.
@@ -91,6 +172,13 @@ fn shutdown(addr: SocketAddr) {
         std::thread::sleep(Duration::from_millis(50));
     }
     panic!("shutdown never accepted");
+}
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tag-serve-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
 }
 
 const SMALL_PLAN: &str = r#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
@@ -199,6 +287,306 @@ fn malformed_plan_bodies_are_rejected_and_the_daemon_survives() {
     assert_eq!(status, 200, "daemon still serves after rejections: {body}");
     shutdown(addr);
     handle.join().unwrap();
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_byte_identical_to_fresh_connections() {
+    let (addr, handle) = start_server(2, 16);
+    let mut client = Client::connect(addr);
+    let mut bodies = Vec::new();
+    for i in 0..3 {
+        client.send("POST", "/plan", Some(SMALL_PLAN));
+        let (status, head, body) = client.read_response();
+        assert_eq!(status, 200, "request {i}: {body}");
+        assert!(head.contains("connection: keep-alive"), "request {i}: {head}");
+        bodies.push(body);
+    }
+    assert_eq!(bodies[0], bodies[1]);
+    assert_eq!(bodies[1], bodies[2]);
+    // A fresh one-shot connection sees the same bytes: the transport
+    // (keep-alive vs close) never leaks into the payload.
+    let (status, fresh) = post_plan(addr, SMALL_PLAN);
+    assert_eq!(status, 200);
+    assert_eq!(fresh, bodies[0], "keep-alive and one-shot responses are byte-identical");
+    // One search served all four: the rest were cache hits.
+    assert_eq!(metric(addr, "tag_searches_total"), 1.0);
+    drop(client);
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let (addr, handle) = start_server(1, 16);
+    let mut client = Client::connect(addr);
+    // Both requests in one write; one worker answers them in order
+    // because responses are Content-Length framed and the second
+    // request waits in the connection's BufReader.
+    client.send_raw(b"GET /healthz HTTP/1.1\r\n\r\nGET /nowhere HTTP/1.1\r\n\r\n");
+    let (status, _, body) = client.read_response();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    let (status, _, _) = client.read_response();
+    assert_eq!(status, 404, "second pipelined response, in order");
+    drop(client);
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn request_head_split_across_writes_still_parses() {
+    let (addr, handle) = start_server(1, 16);
+    let mut client = Client::connect(addr);
+    client.send_raw(b"GET /heal");
+    std::thread::sleep(Duration::from_millis(50));
+    client.send_raw(b"thz HTTP/1.1\r\nconnect");
+    std::thread::sleep(Duration::from_millis(50));
+    client.send_raw(b"ion: close\r\n\r\n");
+    let (status, head, body) = client.read_response();
+    assert_eq!(status, 200, "{body}");
+    assert!(head.contains("connection: close"), "{head}");
+    client.assert_eof();
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn connection_close_token_is_case_insensitive() {
+    let (addr, handle) = start_server(1, 16);
+    let mut client = Client::connect(addr);
+    client.send_raw(b"GET /healthz HTTP/1.1\r\nConnection: CLOSE\r\n\r\n");
+    let (status, head, _) = client.read_response();
+    assert_eq!(status, 200);
+    assert!(head.contains("connection: close"), "{head}");
+    client.assert_eof();
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn http10_defaults_to_close_and_idle_connections_are_reaped() {
+    let (addr, handle) = start_with(
+        ServeConfig {
+            workers: 2,
+            queue_depth: 16,
+            read_timeout: Duration::from_millis(300),
+            ..ServeConfig::default()
+        },
+        SharedPlanner::builder().build(),
+    );
+
+    // HTTP/1.0 without an explicit keep-alive token closes.
+    let mut client = Client::connect(addr);
+    client.send_raw(b"GET /healthz HTTP/1.0\r\n\r\n");
+    let (status, head, _) = client.read_response();
+    assert_eq!(status, 200);
+    assert!(head.contains("connection: close"), "{head}");
+    client.assert_eof();
+
+    // A connection that never sends a request is reaped silently after
+    // the idle timeout: no 408, no bytes, just EOF.
+    let mut silent = Client::connect(addr);
+    silent.assert_eof();
+
+    // A keep-alive connection is reaped after one idle timeout between
+    // requests — the first request is still answered normally.
+    let mut idle = Client::connect(addr);
+    idle.send("GET", "/healthz", None);
+    let (status, head, _) = idle.read_response();
+    assert_eq!(status, 200);
+    assert!(head.contains("connection: keep-alive"), "{head}");
+    idle.assert_eof();
+
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn per_connection_request_cap_is_enforced() {
+    let (addr, handle) = start_with(
+        ServeConfig {
+            workers: 1,
+            queue_depth: 16,
+            max_requests_per_conn: 2,
+            read_timeout: Duration::from_secs(10),
+            ..ServeConfig::default()
+        },
+        SharedPlanner::builder().build(),
+    );
+    let mut client = Client::connect(addr);
+    // Three pipelined requests: the cap closes the connection after
+    // the second response; the third request is never read.
+    client.send_raw(
+        b"GET /healthz HTTP/1.1\r\n\r\nGET /healthz HTTP/1.1\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n",
+    );
+    let (status, head, _) = client.read_response();
+    assert_eq!(status, 200);
+    assert!(head.contains("connection: keep-alive"), "{head}");
+    let (status, head, _) = client.read_response();
+    assert_eq!(status, 200);
+    assert!(head.contains("connection: close"), "cap reached: {head}");
+    client.assert_eof();
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn duplicate_content_length_headers_are_rejected() {
+    let (addr, handle) = start_server(1, 16);
+    let mut client = Client::connect(addr);
+    client.send_raw(
+        b"POST /plan HTTP/1.1\r\ncontent-length: 4\r\nContent-Length: 4\r\n\r\nabcd",
+    );
+    let (status, head, body) = client.read_response();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("duplicate Content-Length"), "{body}");
+    assert!(head.contains("connection: close"), "framing errors close: {head}");
+    client.assert_eof();
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn warm_store_restart_answers_previously_planned_requests_without_searching() {
+    let dir = tempdir("warm-restart");
+    let store_dir = dir.to_string_lossy().to_string();
+    let config = ServeConfig {
+        workers: 2,
+        queue_depth: 16,
+        read_timeout: Duration::from_secs(10),
+        store_dir: Some(store_dir),
+        ..ServeConfig::default()
+    };
+
+    // First daemon lifetime: plan once, journaling the result.
+    let (addr, handle) = start_with(config.clone(), SharedPlanner::builder().build());
+    let (status, first_body) = post_plan(addr, SMALL_PLAN);
+    assert_eq!(status, 200, "{first_body}");
+    assert_eq!(metric(addr, "tag_searches_total"), 1.0);
+    assert_eq!(metric(addr, "tag_plan_store_appends"), 1.0);
+    assert_eq!(metric(addr, "tag_plan_store_entries"), 1.0);
+    shutdown(addr);
+    handle.join().unwrap();
+
+    // Second daemon lifetime, same directory: the journal warms the
+    // cache at boot, so the identical request is a pure cache hit —
+    // no search executed, byte-identical body.
+    let (addr, handle) = start_with(config, SharedPlanner::builder().build());
+    assert_eq!(metric(addr, "tag_plan_store_loads"), 1.0);
+    let (status, warm_body) = post_plan(addr, SMALL_PLAN);
+    assert_eq!(status, 200, "{warm_body}");
+    assert_eq!(warm_body, first_body, "warm-boot responses are byte-identical");
+    assert_eq!(metric(addr, "tag_searches_total"), 0.0, "no search after a warm boot");
+    assert_eq!(metric(addr, "tag_plan_cache_hits"), 1.0);
+    shutdown(addr);
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_store_tail_never_fails_boot_and_good_records_stay_warm() {
+    let dir = tempdir("corrupt-tail");
+    let store_dir = dir.to_string_lossy().to_string();
+    let config = ServeConfig {
+        workers: 2,
+        queue_depth: 16,
+        read_timeout: Duration::from_secs(10),
+        store_dir: Some(store_dir),
+        ..ServeConfig::default()
+    };
+
+    let (addr, handle) = start_with(config.clone(), SharedPlanner::builder().build());
+    let (status, first_body) = post_plan(addr, SMALL_PLAN);
+    assert_eq!(status, 200, "{first_body}");
+    shutdown(addr);
+    handle.join().unwrap();
+
+    // Tear the journal tail, as a crash mid-append would.
+    let journal = dir.join("plans.journal");
+    let mut file = std::fs::OpenOptions::new().append(true).open(&journal).unwrap();
+    file.write_all(b"tagplan1 torn-by-a-crash").unwrap();
+    drop(file);
+
+    // The daemon boots anyway: the corrupt tail is dropped and
+    // counted, the good record still warms the cache.
+    let (addr, handle) = start_with(config, SharedPlanner::builder().build());
+    assert_eq!(metric(addr, "tag_plan_store_corrupt_total"), 1.0);
+    assert_eq!(metric(addr, "tag_plan_store_loads"), 1.0);
+    let (status, warm_body) = post_plan(addr, SMALL_PLAN);
+    assert_eq!(status, 200);
+    assert_eq!(warm_body, first_body);
+    assert_eq!(metric(addr, "tag_searches_total"), 0.0);
+    shutdown(addr);
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gnn_backend_serves_concurrent_plan_requests_through_the_pool() {
+    // Stub artifacts: enough for `GnnService::load` (manifest, params,
+    // HLO text files); inference itself runs on the PJRT stub and
+    // degrades to uniform priors, which is exactly the serving path —
+    // the point here is one `Send + Sync` backend shared by the whole
+    // worker pool over real TCP.
+    let dir = tempdir("gnn-artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "const PARAM_COUNT 8\ninput infer 0 params 8\ninput train 0 params 8\n",
+    )
+    .unwrap();
+    tag::gnn::params::save_params(dir.join("params_init.bin"), &[0.1f32; 8]).unwrap();
+    std::fs::write(dir.join("gnn_infer.hlo.txt"), "HloModule stub_infer\n").unwrap();
+    std::fs::write(dir.join("gnn_train.hlo.txt"), "HloModule stub_train\n").unwrap();
+
+    let backend = tag::api::GnnMctsBackend::from_artifacts(
+        &dir.to_string_lossy(),
+        &dir.join("params_init.bin").to_string_lossy(),
+    )
+    .expect("stub artifacts load");
+    let planner = SharedPlanner::builder().backend(backend).build();
+    let (addr, handle) = start_with(
+        ServeConfig {
+            workers: 4,
+            queue_depth: 16,
+            read_timeout: Duration::from_secs(10),
+            ..ServeConfig::default()
+        },
+        planner,
+    );
+
+    const CLIENTS: usize = 4;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let responses: Vec<(u16, String)> = (0..CLIENTS)
+        .map(|seed| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                post_plan(
+                    addr,
+                    &format!(
+                        r#"{{"model":"VGG19","iterations":25,"max_groups":8,"seed":{}}}"#,
+                        100 + seed
+                    ),
+                )
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect();
+
+    for (status, body) in &responses {
+        assert_eq!(*status, 200, "{body}");
+        let plan = DeploymentPlan::decode(body).expect("valid plan");
+        assert_eq!(plan.backend, "gnn-mcts", "the learned backend served this plan");
+        assert!(plan.telemetry.metric("gnn_evals").unwrap_or(0.0) > 0.0, "{body}");
+    }
+    assert_eq!(metric(addr, "tag_searches_total"), CLIENTS as f64, "distinct seeds");
+
+    shutdown(addr);
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
