@@ -298,18 +298,24 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
         // budget by stalling before the search starts.  No deadline, no
         // token: the default path never consults the wall clock.
         let cancel = request.deadline_ms.map(CancelToken::with_deadline_ms);
-        request
-            .topology
-            .validate()
-            .with_context(|| format!("invalid topology `{}`", request.topology.name))?;
+        {
+            let _s = crate::obs::span("validate");
+            request
+                .topology
+                .validate()
+                .with_context(|| format!("invalid topology `{}`", request.topology.name))?;
+        }
         let key = self.key_for(request);
-        if let Some(cache) = &self.cache {
-            if let Some(plan) = lock(cache).get(&key) {
-                return Ok(PlanOutcome {
-                    plan,
-                    cache_hit: true,
-                    overhead_s: watch.elapsed_s(),
-                });
+        {
+            let _s = crate::obs::span("cache.lookup");
+            if let Some(cache) = &self.cache {
+                if let Some(plan) = lock(cache).get(&key) {
+                    return Ok(PlanOutcome {
+                        plan,
+                        cache_hit: true,
+                        overhead_s: watch.elapsed_s(),
+                    });
+                }
             }
         }
 
@@ -328,6 +334,7 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
         let entry = match reusable {
             Some(entry) => entry,
             None => {
+                let _s = crate::obs::span("prepare");
                 let prepared =
                     coordinator::prepare(request.model.clone(), &request.topology, &cfg);
                 let entry = Arc::new(PreparedEntry {
@@ -364,7 +371,11 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
             cfg: &cfg,
             cancel: cancel.as_ref(),
         };
-        let out = self.backend.search(&ctx);
+        let out = {
+            let _s = crate::obs::span("search");
+            self.backend.search(&ctx)
+        };
+        let _s = crate::obs::span("assemble");
         let session = coordinator::assemble_session(
             &entry.prepared,
             &entry.topology,
@@ -381,6 +392,7 @@ impl<B: SearchBackend + ?Sized> Planner<B> {
             actions.len(),
             out.metrics,
         );
+        drop(_s);
 
         // A timed-out plan is the best-so-far under a spent clock, not
         // the request's full answer — caching it would pin a degraded

@@ -79,6 +79,14 @@ pub struct PlanRequest {
     /// [`config_fingerprint`](Self::config_fingerprint).  Default on;
     /// the CLI's `--no-delta` flag clears it.
     pub delta: bool,
+    /// Record an [`crate::obs`] span trace for this request when the
+    /// daemon serves it (flight recorder, `GET /debug/trace`).  Purely
+    /// observational: spans never touch plan bytes, fingerprints or
+    /// RNG streams, so — by the same reasoning as `delta` — this knob
+    /// does **not** enter [`config_fingerprint`](Self::config_fingerprint).
+    /// Default on; the wire form's `"trace": false` (or the CLI's
+    /// `--no-trace`) opts out.
+    pub trace: bool,
 }
 
 impl PlanRequest {
@@ -95,6 +103,7 @@ impl PlanRequest {
             parallelism: Parallelism::default(),
             deadline_ms: None,
             delta: true,
+            trace: true,
         }
     }
 
@@ -145,6 +154,13 @@ impl PlanRequest {
         self
     }
 
+    /// Toggle per-request span tracing in the serving daemon (default
+    /// on).  Observational only — plans are byte-identical either way.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
     /// The coordinator-level configuration this request lowers to.
     pub fn search_config(&self) -> SearchConfig {
         SearchConfig {
@@ -180,6 +196,10 @@ impl PlanRequest {
     /// `tests/properties.rs`), so a delta-off request may soundly be
     /// served the cached plan of a delta-on one — the same reasoning
     /// that keeps `workers == 1` out of the fingerprint.
+    ///
+    /// `trace` is likewise unhashed: span tracing is observational only
+    /// (timestamps never enter plan bytes), so traced and untraced
+    /// requests share one cache identity.
     pub fn config_fingerprint(&self, backend_token: u64) -> u64 {
         let mut h = Fnv::new();
         h.write_usize(self.budget.iterations);
@@ -238,7 +258,7 @@ impl PlanRequest {
             Json::Obj(members) => members,
             _ => return Err(Error::msg("request must be a JSON object")),
         };
-        const KNOWN: [&str; 12] = [
+        const KNOWN: [&str; 13] = [
             "model",
             "scale",
             "topology",
@@ -251,6 +271,7 @@ impl PlanRequest {
             "virtual_loss",
             "deadline_ms",
             "delta",
+            "trace",
         ];
         for (key, _) in members {
             if !KNOWN.contains(&key.as_str()) {
@@ -336,6 +357,10 @@ impl PlanRequest {
             Some(v) => v.as_bool()?,
             None => true,
         };
+        let trace = match root.get("trace") {
+            Some(v) => v.as_bool()?,
+            None => true,
+        };
 
         Ok(Self {
             model,
@@ -347,6 +372,7 @@ impl PlanRequest {
             parallelism: Parallelism { workers, virtual_loss },
             deadline_ms,
             delta,
+            trace,
         })
     }
 }
@@ -508,6 +534,19 @@ mod tests {
         assert!(!wire.delta);
         let default = PlanRequest::decode(r#"{"model":"VGG19"}"#).unwrap();
         assert!(default.delta, "absent wire key keeps the default (on)");
+    }
+
+    #[test]
+    fn trace_knob_decodes_but_never_partitions_the_cache() {
+        // Spans never touch plan bytes ⇒ traced and untraced requests
+        // share one cache identity (same reasoning as `delta`).
+        let base = req().config_fingerprint(1);
+        assert_eq!(base, req().trace(false).config_fingerprint(1));
+        assert_eq!(req().prepare_fingerprint(), req().trace(false).prepare_fingerprint());
+        let wire = PlanRequest::decode(r#"{"model":"VGG19","trace":false}"#).unwrap();
+        assert!(!wire.trace);
+        let default = PlanRequest::decode(r#"{"model":"VGG19"}"#).unwrap();
+        assert!(default.trace, "absent wire key keeps the default (on)");
     }
 
     #[test]

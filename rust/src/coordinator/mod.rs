@@ -186,6 +186,7 @@ pub fn assemble_session(
         low.evaluate(&Strategy::dp_allreduce(prep.gg.num_groups(), topo)).oom;
 
     let (sfb, time_with_sfb) = if cfg.apply_sfb {
+        let _s = crate::obs::span("sfb");
         let plan = sfb::optimize(&prep.graph, &prep.gg, topo, &prep.cost, &strategy);
         let t = low.evaluate_with_sfb(&strategy, Some(&plan)).time;
         (Some(plan), Some(t))

@@ -1176,9 +1176,13 @@ impl<'a> Lowering<'a> {
         let infos: Vec<Rc<MaskInfo>> = acts.iter().map(|a| self.mask_info(a.mask)).collect();
         let mut ring = self.ring.borrow_mut();
         let mut rec = ring.take_scratch();
-        self.lower_into(strategy, acts, &infos, None, &mut rec);
+        {
+            let _s = crate::obs::span("lower");
+            self.lower_into(strategy, acts, &infos, None, &mut rec);
+        }
         let n = rec.tg.tasks.len();
 
+        let sim_span = crate::obs::span("simulate");
         let mut simulated = false;
         if self.delta.get() {
             if let Some(nb) = ring.best_neighbor(sig) {
@@ -1227,6 +1231,7 @@ impl<'a> Lowering<'a> {
             rec.sched = self.buffers.borrow_mut().sim.run(&rec.tg);
             self.caches.fragments.record_full();
         }
+        drop(sim_span);
 
         let out = self.outcome_from(strategy.split, acts, &infos, &rec.tg, &rec.sched);
         rec.sig.clear();
@@ -1247,11 +1252,43 @@ impl<'a> Lowering<'a> {
         let infos: Vec<Rc<MaskInfo>> = acts.iter().map(|a| self.mask_info(a.mask)).collect();
         let mut ring = self.ring.borrow_mut();
         let mut rec = ring.take_scratch();
-        self.lower_into(strategy, acts, &infos, plan, &mut rec);
-        rec.sched = self.buffers.borrow_mut().sim.run(&rec.tg);
+        {
+            let _s = crate::obs::span("lower");
+            self.lower_into(strategy, acts, &infos, plan, &mut rec);
+        }
+        {
+            let _s = crate::obs::span("simulate");
+            rec.sched = self.buffers.borrow_mut().sim.run(&rec.tg);
+        }
         let out = self.outcome_from(strategy.split, acts, &infos, &rec.tg, &rec.sched);
         ring.give_back(rec);
         out
+    }
+
+    /// Lower `strategy` and simulate it from scratch, returning the
+    /// lowered task graph and its schedule alongside the outcome — the
+    /// plan-explainability path ([`crate::obs::explain`]) that needs
+    /// the per-task intervals a [`SimOutcome`] deliberately discards.
+    /// Bypasses the memo and the neighbor ring (no counters touched),
+    /// and the outcome is bit-identical to [`Lowering::evaluate`] of
+    /// the same strategy — the delta layers replay the same pure
+    /// computations this path runs in full.
+    pub fn explain_schedule(
+        &self,
+        strategy: &Strategy,
+        plan: Option<&SfbPlan>,
+    ) -> (TaskGraph, Schedule, SimOutcome) {
+        let acts = self.resolve(strategy);
+        let infos: Vec<Rc<MaskInfo>> = acts.iter().map(|a| self.mask_info(a.mask)).collect();
+        let mut ring = self.ring.borrow_mut();
+        let mut rec = ring.take_scratch();
+        self.lower_into(strategy, &acts, &infos, plan, &mut rec);
+        rec.sched = self.buffers.borrow_mut().sim.run(&rec.tg);
+        let out = self.outcome_from(strategy.split, &acts, &infos, &rec.tg, &rec.sched);
+        let tg = rec.tg.clone();
+        let sched = rec.sched.clone();
+        ring.give_back(rec);
+        (tg, sched, out)
     }
 }
 

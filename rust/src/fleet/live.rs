@@ -276,21 +276,66 @@ impl FleetState {
         body
     }
 
-    /// Append `tag_fleet_*` lines to a `/metrics` exposition.
+    /// Append `tag_fleet_*` lines (with `# HELP`/`# TYPE` metadata) to
+    /// a `/metrics` exposition.
     pub fn render_metrics(&self, out: &mut String) {
         let inner = self.lock();
         let total = inner.cluster.num_devices();
         let leased = inner.cluster.leased_devices();
-        out.push_str(&format!("tag_fleet_submitted_total {}\n", inner.submitted));
-        out.push_str(&format!("tag_fleet_completed_total {}\n", inner.completed));
-        out.push_str(&format!("tag_fleet_rejected_total {}\n", inner.rejected));
-        out.push_str(&format!("tag_fleet_failed_total {}\n", inner.failed));
-        out.push_str(&format!("tag_fleet_active_jobs {}\n", inner.active.len()));
-        out.push_str(&format!("tag_fleet_devices_total {total}\n"));
-        out.push_str(&format!("tag_fleet_devices_leased {leased}\n"));
-        out.push_str(&format!("tag_fleet_devices_free {}\n", total - leased));
+        let mut series = |name: &str, kind: &str, help: &str, value: f64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        };
+        series(
+            "tag_fleet_submitted_total",
+            "counter",
+            "Fleet jobs submitted.",
+            inner.submitted as f64,
+        );
+        series(
+            "tag_fleet_completed_total",
+            "counter",
+            "Fleet jobs completed and released.",
+            inner.completed as f64,
+        );
+        series(
+            "tag_fleet_rejected_total",
+            "counter",
+            "Fleet submissions rejected (no feasible lease).",
+            inner.rejected as f64,
+        );
+        series(
+            "tag_fleet_failed_total",
+            "counter",
+            "Fleet submissions whose planning failed.",
+            inner.failed as f64,
+        );
+        series(
+            "tag_fleet_active_jobs",
+            "gauge",
+            "Jobs currently holding a lease.",
+            inner.active.len() as f64,
+        );
+        series("tag_fleet_devices_total", "gauge", "Devices in the fleet.", total as f64);
+        series(
+            "tag_fleet_devices_leased",
+            "gauge",
+            "Devices currently leased out.",
+            leased as f64,
+        );
+        series(
+            "tag_fleet_devices_free",
+            "gauge",
+            "Devices currently free.",
+            (total - leased) as f64,
+        );
         let utilization = if total > 0 { leased as f64 / total as f64 } else { 0.0 };
-        out.push_str(&format!("tag_fleet_utilization {utilization:.6}\n"));
+        out.push_str(&format!(
+            "# HELP tag_fleet_utilization Fraction of devices leased.\n\
+             # TYPE tag_fleet_utilization gauge\n\
+             tag_fleet_utilization {utilization:.6}\n"
+        ));
     }
 }
 

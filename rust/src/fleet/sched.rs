@@ -256,7 +256,10 @@ impl<B: SearchBackend + ?Sized> Sim<'_, B> {
         if let Some(ms) = self.cfg.deadline_ms {
             request = request.deadline_ms(ms.max(1));
         }
-        let outcome = self.planner.plan(&request)?;
+        let outcome = {
+            let _s = crate::obs::span_arg("fleet.job", spec.id as i64);
+            self.planner.plan(&request)?
+        };
         self.plans += 1;
         if outcome.cache_hit {
             self.cache_hits += 1;

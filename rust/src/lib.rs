@@ -61,6 +61,23 @@
 //! same admission logic live as `POST /fleet/submit` / `/fleet/complete`
 //! / `GET /fleet/status` with `tag_fleet_*` metrics.
 //!
+//! ## Observability: [`obs`]
+//!
+//! The planner is not a black box.  [`obs`] threads hierarchical
+//! **spans** (admission → coalesce → cache lookup → prepare → search
+//! workers → lowering → simulation → SFB) through the whole request
+//! lifecycle on lock-free per-thread buffers; the daemon retains the
+//! last N request traces in a bounded **flight recorder** exported as
+//! Chrome trace-event JSON (Perfetto-loadable) via `GET /debug/trace`
+//! and `tag search --trace-out`.  `tag explain --plan plan.json` /
+//! `POST /explain` recompute a plan's simulated schedule and decompose
+//! its critical path into named compute/comm/sync/idle components,
+//! top-k contended links with sharing factors, per-group SFB savings
+//! and memo/fragment/delta attribution ([`obs::explain`]).
+//! **Determinism contract**: spans record wall-clock timestamps but
+//! never touch plan bytes, fingerprints or RNG streams — every
+//! bit-identity property holds with tracing on or off.
+//!
 //! ## Fault tolerance
 //!
 //! The planning stack degrades instead of dying.  [`cluster::faults`]
@@ -133,6 +150,7 @@ pub mod gnn;
 pub mod graph;
 pub mod mcts;
 pub mod models;
+pub mod obs;
 pub mod partition;
 pub mod profile;
 pub mod runtime;

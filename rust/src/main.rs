@@ -4,6 +4,7 @@
 //!   search    find a deployment plan for a model on a topology
 //!   baselines evaluate all baseline strategies on the same setup
 //!   repair    re-plan a saved plan after device/link failures
+//!   explain   re-simulate a saved plan and break down where time goes
 //!   fleet     replay a multi-tenant job stream (FIFO vs best-fit)
 //!   serve     run the HTTP planning daemon (POST /plan, GET /metrics)
 //!   train     self-play GNN training (writes a params .bin)
@@ -17,6 +18,8 @@
 //!   tag search --model VGG19 --out plan.json     # persist the plan
 //!   tag search --model VGG19 --workers=8         # tree-parallel MCTS
 //!   tag search --model VGG19 --deadline-ms 500   # best plan within 500ms
+//!   tag search --model VGG19 --out plan.json --trace-out trace.json
+//!   tag explain --plan plan.json                  # where does the time go?
 //!   tag repair --plan plan.json --faults "kill:0.1;degrade:2*0.5"
 //!   tag train --games 30 --steps 4 --out artifacts/params_trained.bin
 //!   tag baselines --model InceptionV3 --topology testbed
@@ -49,7 +52,7 @@ use tag::util::{fmt_secs, Args};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tag <search|baselines|repair|fleet|serve|train|info> [options]\n\
+        "usage: tag <search|baselines|repair|explain|fleet|serve|train|info> [options]\n\
          run `tag <cmd> --help` for details"
     );
     std::process::exit(2)
@@ -90,6 +93,7 @@ fn request_from(args: &Args) -> PlanRequest {
         .seed(args.num("seed", 1))
         .sfb(!args.flag("no-sfb"))
         .delta(!args.flag("no-delta"))
+        .trace(!args.flag("no-trace"))
         .profile_noise(args.num("noise", 0.0))
         .parallelism(Parallelism {
             workers: args.num("workers", 1usize).max(1),
@@ -154,10 +158,31 @@ fn cmd_search(args: &Args) {
     };
 
     let topo = request.topology.clone();
-    let outcome = planner.plan(&request).unwrap_or_else(|e| {
+    // `--trace-out FILE` records the whole planning lifecycle as a
+    // Chrome trace-event file loadable at ui.perfetto.dev.  The tracer
+    // only observes (spans never touch plan bytes), so the plan is
+    // bit-identical with or without it.
+    let tracer = match args.get("trace-out") {
+        Some(_) => tag::obs::Tracer::enabled("tag search"),
+        None => tag::obs::Tracer::disabled(),
+    };
+    let outcome = {
+        let _g = tracer.install();
+        let _root = tag::obs::span("plan");
+        planner.plan(&request)
+    }
+    .unwrap_or_else(|e| {
         eprintln!("planning failed: {e}");
         std::process::exit(1)
     });
+    if let (Some(path), Some(trace)) = (args.get("trace-out"), tracer.finish()) {
+        let json = tag::obs::chrome_trace_json(&[std::sync::Arc::new(trace)]);
+        std::fs::write(path, json).unwrap_or_else(|e| {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1)
+        });
+        println!("trace written to {path} (load it at ui.perfetto.dev)");
+    }
     let plan = &outcome.plan;
     if topo.is_routed() {
         println!(
@@ -314,6 +339,30 @@ fn cmd_repair(args: &Args) {
     }
 }
 
+fn cmd_explain(args: &Args) {
+    let path = args.get("plan").unwrap_or_else(|| {
+        eprintln!("explain needs --plan <file> (a plan written by `tag search --out`)");
+        std::process::exit(2)
+    });
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("failed to read {path}: {e}");
+        std::process::exit(1)
+    });
+    let plan = DeploymentPlan::decode(&text).unwrap_or_else(|e| {
+        eprintln!("{path} is not a deployment plan: {e}");
+        std::process::exit(1)
+    });
+    // The shared `--model/--topology/...` flags must describe the same
+    // problem the plan was searched on; `explain` re-verifies the
+    // fingerprints and re-simulates deterministically.
+    let request = request_from(args);
+    let report = tag::obs::explain::explain(&request, &plan).unwrap_or_else(|e| {
+        eprintln!("explain failed: {e}");
+        std::process::exit(1)
+    });
+    println!("{}", report.encode());
+}
+
 fn cmd_train(args: &Args) {
     let svc = GnnService::load("artifacts").expect("load artifacts (make artifacts)");
     let init = args.get("init").unwrap_or("artifacts/params_init.bin");
@@ -415,6 +464,8 @@ fn cmd_serve(args: &Args) {
         max_body_bytes: args.num("max-body-kb", 1024usize).max(1) * 1024,
         fleet_topology: args.get("fleet-topology").unwrap_or("multi_rack").to_string(),
         store_dir: args.get("store").map(str::to_string),
+        slow_ms: args.get("slow-ms").map(|_| args.num("slow-ms", 0u64)),
+        trace_ring: args.num("trace-ring", 64usize).max(1),
         ..ServeConfig::default()
     };
     let builder =
@@ -448,8 +499,9 @@ fn cmd_serve(args: &Args) {
         config.accept_threads,
         backend_name,
     );
-    println!("endpoints: POST /plan  POST /repair  POST /fleet/submit  POST /fleet/complete");
-    println!("           GET /fleet/status  GET /healthz  GET /metrics  POST /shutdown");
+    println!("endpoints: POST /plan  POST /repair  POST /explain  POST /fleet/submit");
+    println!("           POST /fleet/complete  GET /fleet/status  GET /healthz");
+    println!("           GET /metrics  GET /debug/trace  POST /shutdown");
     println!("fleet topology: {}", config.fleet_topology);
     if let Some(dir) = &config.store_dir {
         println!("plan store: {dir}/plans.journal (warm boot)");
@@ -488,6 +540,7 @@ fn main() {
         "search" => cmd_search(&rest),
         "baselines" => cmd_baselines(&rest),
         "repair" => cmd_repair(&rest),
+        "explain" => cmd_explain(&rest),
         "fleet" => cmd_fleet(&rest),
         "serve" => cmd_serve(&rest),
         "train" => cmd_train(&rest),

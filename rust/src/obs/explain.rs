@@ -1,0 +1,426 @@
+//! Plan explainability — turn a served [`DeploymentPlan`] back into
+//! human-readable answers about *where its iteration time goes*.
+//!
+//! [`explain`] recomputes the plan's simulated schedule from scratch
+//! (same prepare + lowering + simulation path the search used, bypassing
+//! every cache) and reports:
+//!
+//! * a **critical-path decomposition**: the one dependency-or-queueing
+//!   chain of tasks that determines the makespan, split into named
+//!   compute / communication / sync / idle components, per op group —
+//!   the segments tile `[0, makespan]` exactly, so the decomposition
+//!   attributes 100% of simulated iteration time and its endpoint
+//!   reproduces the plan's reported time bit for bit,
+//! * the **top-k contended links**: for every transfer that was
+//!   stretched by link sharing, the links its bytes traversed, with
+//!   per-link transfer counts, worst sharing factors and the extra
+//!   seconds lost to contention (a transfer stretched on a multi-hop
+//!   route is charged to each link it traverses — *exposure*, not an
+//!   exact single-link blame, which the worst-share contention model
+//!   does not define),
+//! * **per-group SFB savings**: the SFB optimizer re-run on the plan's
+//!   strategy, with saved sync bytes / extra compute / broadcast bytes
+//!   per group and a bit-for-bit check against the plan's reported
+//!   `time_with_sfb`,
+//! * the plan's **search attribution** telemetry (memo/fragment/delta
+//!   counters and any backend metrics) passed through verbatim.
+//!
+//! The caller must present the *same* model, topology and
+//! profile-noise knob the plan was produced with (checked by
+//! fingerprint); the prepare seed is taken from the plan's telemetry,
+//! so a request with a different search seed still reproduces the
+//! plan's cost model and grouping.
+
+use crate::api::json::Json;
+use crate::api::{fingerprint, DeploymentPlan, PlanRequest};
+use crate::coordinator;
+use crate::dist::Lowering;
+use crate::sim::{critical_path, Schedule, TaskGraph, TaskKind};
+use crate::util::error::{Error, Result};
+
+/// How many contended links the report keeps.
+pub const TOP_LINKS: usize = 5;
+
+/// How many of the longest critical-path segments the report lists
+/// individually (the totals always cover all of them).
+pub const TOP_SEGMENTS: usize = 10;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Per-group critical-path time, seconds.
+#[derive(Clone, Copy, Default)]
+struct GroupShare {
+    compute_s: f64,
+    comm_s: f64,
+    sync_s: f64,
+}
+
+/// Per-link contention exposure, aggregated over transfers.
+#[derive(Clone, Copy, Default)]
+struct LinkShare {
+    transfers: usize,
+    max_sharing: f64,
+    /// Extra seconds lost to sharing: `scalable_s * (sharing - 1)`.
+    extra_s: f64,
+    /// Scalable seconds at an uncontended full share.
+    traffic_s: f64,
+}
+
+/// Recompute `plan`'s simulated schedule under `request`'s model and
+/// topology and explain where its iteration time goes.
+///
+/// Errors if the request's model or topology fingerprints don't match
+/// the plan's (the plan was produced for different hardware or a
+/// different graph), or if re-preparation doesn't reproduce the plan's
+/// op grouping (a `profile_noise` mismatch).
+pub fn explain(request: &PlanRequest, plan: &DeploymentPlan) -> Result<Json> {
+    if fingerprint::model(&request.model) != plan.model_fingerprint {
+        return Err(Error::msg(format!(
+            "plan is for model `{}`, not this request's `{}` (fingerprint mismatch)",
+            plan.model_name, request.model.name
+        )));
+    }
+    if fingerprint::topology(&request.topology) != plan.topology_fingerprint {
+        return Err(Error::msg(format!(
+            "plan was deployed on topology `{}`, not this request's `{}` \
+             (fingerprint mismatch)",
+            plan.topology_name, request.topology.name
+        )));
+    }
+
+    // Prepare with the *plan's* seed: the cost model and grouping
+    // depend on it, and the request's search seed may legitimately
+    // differ from the seed the plan was produced under.
+    let mut cfg = request.search_config();
+    cfg.seed = plan.telemetry.seed;
+    let prep = {
+        let _s = crate::obs::span("explain.prepare");
+        coordinator::prepare(request.model.clone(), &request.topology, &cfg)
+    };
+    if prep.gg.num_groups() != plan.telemetry.num_groups {
+        return Err(Error::msg(format!(
+            "re-preparation produced {} op groups but the plan has {} — \
+             the request's profile/grouping knobs differ from the plan's",
+            prep.gg.num_groups(),
+            plan.telemetry.num_groups
+        )));
+    }
+    let strategy = plan.strategy.to_strategy();
+    if strategy.slots.len() != prep.gg.num_groups() {
+        return Err(Error::msg(format!(
+            "plan strategy has {} slots for {} op groups",
+            strategy.slots.len(),
+            prep.gg.num_groups()
+        )));
+    }
+
+    let low = Lowering::new(&prep.gg, &request.topology, &prep.cost, &prep.comm);
+    low.set_delta(cfg.delta);
+    let (tg, sched, out) = {
+        let _s = crate::obs::span("explain.simulate");
+        low.explain_schedule(&strategy, None)
+    };
+    let reproduces = out.time.to_bits() == plan.times.time.to_bits();
+
+    let critical = critical_section(&tg, &sched, out.time, prep.gg.num_groups());
+    let links = link_section(&tg, &sched, &request.topology);
+
+    let sfb = if cfg.apply_sfb {
+        let _s = crate::obs::span("explain.sfb");
+        let sfb_plan = crate::sfb::optimize(
+            &prep.graph,
+            &prep.gg,
+            &request.topology,
+            &prep.cost,
+            &strategy,
+        );
+        let with_sfb = low.evaluate_with_sfb(&strategy, Some(&sfb_plan));
+        let reproduces_sfb = plan
+            .times
+            .time_with_sfb
+            .map(|t| t.to_bits() == with_sfb.time.to_bits());
+        let per_group: Vec<Json> = sfb_plan
+            .per_group
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.gradients_covered > 0)
+            .map(|(i, g)| {
+                obj(vec![
+                    ("group", num(i as f64)),
+                    ("gradients_covered", num(g.gradients_covered as f64)),
+                    ("saved_sync_bytes", num(g.saved_sync_bytes)),
+                    ("extra_compute_s", num(g.extra_compute_s)),
+                    ("broadcast_bytes", num(g.broadcast_bytes)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("predicted_saving_s", num(sfb_plan.predicted_saving_s)),
+            ("time_with_sfb_s", num(with_sfb.time)),
+            (
+                "reproduces_reported_time_with_sfb",
+                reproduces_sfb.map_or(Json::Null, Json::Bool),
+            ),
+            ("per_group", Json::Arr(per_group)),
+        ])
+    } else {
+        Json::Null
+    };
+
+    let attribution = Json::Obj(
+        plan.telemetry
+            .metrics
+            .iter()
+            .map(|(k, v)| (k.clone(), num(*v)))
+            .collect(),
+    );
+
+    Ok(obj(vec![
+        ("model", Json::Str(plan.model_name.clone())),
+        ("topology", Json::Str(plan.topology_name.clone())),
+        ("backend", Json::Str(plan.backend.clone())),
+        ("num_groups", num(plan.telemetry.num_groups as f64)),
+        ("total_s", num(out.time)),
+        ("reported_time_s", num(plan.times.time)),
+        ("reproduces_reported_time", Json::Bool(reproduces)),
+        ("critical_path", critical),
+        ("contended_links", links),
+        ("sfb", sfb),
+        ("attribution", attribution),
+    ]))
+}
+
+fn kind_label(kind: Option<TaskKind>) -> (&'static str, Option<usize>) {
+    match kind {
+        Some(TaskKind::Compute { group, .. }) => ("compute", Some(group)),
+        Some(TaskKind::Transfer { from, .. }) => ("comm", Some(from)),
+        Some(TaskKind::Sync { group }) => ("sync", Some(group)),
+        Some(TaskKind::Marker) => ("idle", None),
+        None => ("idle", None),
+    }
+}
+
+fn critical_section(tg: &TaskGraph, sched: &Schedule, total_s: f64, num_groups: usize) -> Json {
+    let segments = critical_path(tg, sched);
+    let mut compute_s = 0.0;
+    let mut comm_s = 0.0;
+    let mut sync_s = 0.0;
+    let mut idle_s = 0.0;
+    let mut per_group = vec![GroupShare::default(); num_groups];
+    for seg in &segments {
+        let dur = seg.end - seg.start;
+        let (label, group) = kind_label(seg.task.map(|t| tg.tasks[t].kind));
+        match label {
+            "compute" => compute_s += dur,
+            "comm" => comm_s += dur,
+            "sync" => sync_s += dur,
+            _ => idle_s += dur,
+        }
+        if let Some(g) = group {
+            if g < num_groups {
+                match label {
+                    "compute" => per_group[g].compute_s += dur,
+                    "comm" => per_group[g].comm_s += dur,
+                    "sync" => per_group[g].sync_s += dur,
+                    _ => {}
+                }
+            }
+        }
+    }
+    // The segments tile [0, makespan] with shared endpoints, so the
+    // path's endpoint *is* the simulated time — no float re-summing.
+    let end_s = segments.last().map_or(0.0, |s| s.end);
+    let attributed = compute_s + comm_s + sync_s + idle_s;
+    let attributed_fraction = if total_s > 0.0 { attributed / total_s } else { 1.0 };
+
+    let mut longest: Vec<&crate::sim::CriticalSegment> = segments.iter().collect();
+    longest.sort_by(|a, b| {
+        (b.end - b.start)
+            .partial_cmp(&(a.end - a.start))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.start.partial_cmp(&b.start).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    longest.truncate(TOP_SEGMENTS);
+    let longest: Vec<Json> = longest
+        .iter()
+        .map(|seg| {
+            let (label, group) = kind_label(seg.task.map(|t| tg.tasks[t].kind));
+            obj(vec![
+                ("kind", Json::Str(label.to_string())),
+                ("group", group.map_or(Json::Null, |g| num(g as f64))),
+                ("start_s", num(seg.start)),
+                ("dur_s", num(seg.end - seg.start)),
+            ])
+        })
+        .collect();
+
+    let groups: Vec<Json> = per_group
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.compute_s > 0.0 || s.comm_s > 0.0 || s.sync_s > 0.0)
+        .map(|(g, s)| {
+            obj(vec![
+                ("group", num(g as f64)),
+                ("compute_s", num(s.compute_s)),
+                ("comm_s", num(s.comm_s)),
+                ("sync_s", num(s.sync_s)),
+            ])
+        })
+        .collect();
+
+    obj(vec![
+        ("segments", num(segments.len() as f64)),
+        ("end_s", num(end_s)),
+        ("compute_s", num(compute_s)),
+        ("comm_s", num(comm_s)),
+        ("sync_s", num(sync_s)),
+        ("idle_s", num(idle_s)),
+        ("attributed_fraction", num(attributed_fraction)),
+        ("per_group", Json::Arr(groups)),
+        ("longest_segments", Json::Arr(longest)),
+    ])
+}
+
+fn link_section(tg: &TaskGraph, sched: &Schedule, topo: &crate::cluster::Topology) -> Json {
+    let lg = topo.link_graph();
+    let mut shares = vec![LinkShare::default(); tg.num_links];
+    for (t, task) in tg.tasks.iter().enumerate() {
+        let Some(load) = &task.load else { continue };
+        if load.scalable_s <= 0.0 {
+            continue;
+        }
+        // eff = duration + scalable_s * sharing (worst share along the
+        // path at dispatch time) — recover the sharing factor.
+        let sharing = (sched.eff[t] - task.duration) / load.scalable_s;
+        let extra = load.scalable_s * (sharing - 1.0).max(0.0);
+        for &l in load.links.iter() {
+            let s = &mut shares[l as usize];
+            s.transfers += 1;
+            s.max_sharing = s.max_sharing.max(sharing);
+            s.extra_s += extra;
+            s.traffic_s += load.scalable_s;
+        }
+    }
+    let mut ranked: Vec<(usize, LinkShare)> = shares
+        .into_iter()
+        .enumerate()
+        .filter(|(_, s)| s.transfers > 0)
+        .collect();
+    ranked.sort_by(|a, b| {
+        b.1.extra_s
+            .partial_cmp(&a.1.extra_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.1.traffic_s.partial_cmp(&a.1.traffic_s).unwrap_or(std::cmp::Ordering::Equal))
+            .then(a.0.cmp(&b.0))
+    });
+    ranked.truncate(TOP_LINKS);
+    Json::Arr(
+        ranked
+            .into_iter()
+            .map(|(id, s)| {
+                let link = lg.links().get(id);
+                obj(vec![
+                    ("link", num(id as f64)),
+                    (
+                        "kind",
+                        link.map_or(Json::Null, |l| Json::Str(format!("{:?}", l.kind))),
+                    ),
+                    ("bw_gbps", link.map_or(Json::Null, |l| num(l.bw_gbps))),
+                    ("transfers", num(s.transfers as f64)),
+                    ("max_sharing", num(s.max_sharing)),
+                    ("contention_s", num(s.extra_s)),
+                    ("traffic_s", num(s.traffic_s)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Planner;
+
+    fn multi_rack_request() -> PlanRequest {
+        PlanRequest::new(crate::models::vgg19(32, 0.5), crate::cluster::presets::multi_rack())
+            .budget(30, 8)
+            .seed(7)
+    }
+
+    #[test]
+    fn explain_reproduces_a_multi_rack_plan_bit_for_bit() {
+        let planner = Planner::builder().build();
+        let request = multi_rack_request();
+        let plan = planner.plan(&request).expect("plan").plan;
+        let report = explain(&request, &plan).expect("explain");
+
+        assert!(report.field("reproduces_reported_time").unwrap().as_bool().unwrap());
+        let total = report.field("total_s").unwrap().as_f64().unwrap();
+        assert_eq!(total.to_bits(), plan.times.time.to_bits());
+
+        let cp = report.field("critical_path").unwrap();
+        // The decomposition attributes (essentially) all simulated time
+        // to named components — the acceptance bar is ≥ 95%.
+        let frac = cp.field("attributed_fraction").unwrap().as_f64().unwrap();
+        assert!(frac >= 0.95, "attributed {frac}");
+        // ... and the path's endpoint is the reported time, bit for bit.
+        let end = cp.field("end_s").unwrap().as_f64().unwrap();
+        assert_eq!(end.to_bits(), plan.times.time.to_bits());
+
+        // multi_rack routes over an oversubscribed spine: transfers
+        // exist, so the contended-links table is populated.
+        let sums: f64 = ["compute_s", "comm_s", "sync_s", "idle_s"]
+            .iter()
+            .map(|k| cp.field(k).unwrap().as_f64().unwrap())
+            .sum();
+        assert!((sums - total).abs() <= 1e-9 * total.max(1.0));
+
+        // The report round-trips through the crate's JSON encoder.
+        let text = report.encode();
+        Json::parse(&text).expect("valid JSON");
+    }
+
+    #[test]
+    fn explain_checks_sfb_reproduction() {
+        let planner = Planner::builder().build();
+        let request = multi_rack_request();
+        let plan = planner.plan(&request).expect("plan").plan;
+        let report = explain(&request, &plan).expect("explain");
+        let sfb = report.field("sfb").unwrap();
+        if plan.times.time_with_sfb.is_some() {
+            assert!(sfb.field("reproduces_reported_time_with_sfb").unwrap().as_bool().unwrap());
+        }
+    }
+
+    #[test]
+    fn explain_rejects_a_plan_for_a_different_model() {
+        let planner = Planner::builder().build();
+        let request = multi_rack_request();
+        let plan = planner.plan(&request).expect("plan").plan;
+        let other = PlanRequest::new(
+            crate::models::vgg19(64, 0.5),
+            crate::cluster::presets::multi_rack(),
+        );
+        let err = explain(&other, &plan).unwrap_err().to_string();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+    }
+
+    #[test]
+    fn explain_rejects_a_plan_for_a_different_topology() {
+        let planner = Planner::builder().build();
+        let request = multi_rack_request();
+        let plan = planner.plan(&request).expect("plan").plan;
+        let other = PlanRequest::new(
+            crate::models::vgg19(32, 0.5),
+            crate::cluster::presets::testbed(),
+        );
+        let err = explain(&other, &plan).unwrap_err().to_string();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+    }
+}

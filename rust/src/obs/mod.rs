@@ -1,0 +1,563 @@
+//! Observability: hierarchical spans, a bounded flight recorder, and
+//! plan explainability (the [`explain`] submodule).
+//!
+//! The planner's request lifecycle — admission → coalesce → cache
+//! lookup → prepare → per-worker MCTS iterations → lowering →
+//! simulation → SFB pass — is instrumented with [`span`] guards.  A
+//! span is recorded only while a [`Tracer`] is installed on the
+//! current thread ([`Tracer::install`]); with no tracer installed a
+//! guard costs one thread-local read and a branch, and nothing is
+//! allocated.  Recording is lock-free on the hot path: spans land in a
+//! per-thread buffer and are flushed to the shared trace in batches.
+//!
+//! ## Determinism contract
+//!
+//! Timestamps are monotonic-clock readings and live **only** in traces
+//! (`/debug/trace`, `--trace-out`) and in `/metrics` — they never enter
+//! a [`DeploymentPlan`](crate::api::DeploymentPlan), a fingerprint, or
+//! anything else a plan's bytes are derived from.  Tracing on/off
+//! therefore yields byte-identical plans; `rust/tests/properties.rs`
+//! pins this at `workers == 1` (full plan bytes) and `workers == 4`
+//! (evaluation-layer outcomes).
+//!
+//! ## Flight recorder
+//!
+//! The daemon retains the last N request traces in a [`FlightRecorder`]
+//! ring; `GET /debug/trace` exports them as Chrome trace-event JSON
+//! ([`chrome_trace_json`]) which loads directly in Perfetto or
+//! `chrome://tracing`.  Memory is bounded twice over: each trace caps
+//! its span count ([`MAX_SPANS_PER_TRACE`], overflow counted, never
+//! grown) and the ring evicts its oldest trace once full (evictions
+//! surface as `tag_trace_dropped_total`).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::api::json::Json;
+use crate::util::lock;
+
+pub mod explain;
+
+/// Hard per-trace span cap: spans past it are dropped (and counted in
+/// [`Trace::truncated`]) instead of growing the trace without bound —
+/// a deep search emits per-iteration spans, and one runaway request
+/// must not balloon the daemon's flight-recorder memory.
+pub const MAX_SPANS_PER_TRACE: usize = 4096;
+
+/// Per-thread buffer size before spans flush to the shared trace (one
+/// mutex acquisition amortized over this many spans).
+const FLUSH_BATCH: usize = 64;
+
+/// One closed span: a named interval on one traced thread.  Times are
+/// nanoseconds since the owning trace's epoch (a monotonic
+/// [`Instant`]), so they order and nest exactly; they carry no
+/// wall-clock meaning and never touch plan bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    /// Optional integer payload (worker index, fleet job id, …);
+    /// negative = none.
+    pub arg: i64,
+    /// Trace-local thread id, allocated per [`Tracer::install`].
+    pub tid: u32,
+    /// Nesting depth under the thread's outermost span (0 = root).
+    pub depth: u16,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Shared state of one in-progress trace.
+struct TraceInner {
+    label: String,
+    epoch: Instant,
+    spans: Mutex<Vec<SpanRecord>>,
+    truncated: AtomicU64,
+    next_tid: AtomicU64,
+}
+
+/// A finished trace: what [`Tracer::finish`] returns and the
+/// [`FlightRecorder`] retains.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub label: String,
+    /// Sorted by `(tid, start_ns)`; on one tid spans nest by interval
+    /// containment (guard drop order is stack order).
+    pub spans: Vec<SpanRecord>,
+    /// Spans dropped past [`MAX_SPANS_PER_TRACE`].
+    pub truncated: u64,
+}
+
+impl Trace {
+    /// Total `dur_ns` per span name, in first-appearance order — the
+    /// compact phase summary slow-request logging emits.
+    pub fn phase_totals(&self) -> Vec<(&'static str, u64)> {
+        let mut totals: Vec<(&'static str, u64)> = Vec::new();
+        for s in &self.spans {
+            match totals.iter_mut().find(|(n, _)| *n == s.name) {
+                Some((_, t)) => *t += s.dur_ns,
+                None => totals.push((s.name, s.dur_ns)),
+            }
+        }
+        totals
+    }
+
+    /// End of the latest span, ns since the trace epoch (0 if empty).
+    pub fn total_ns(&self) -> u64 {
+        self.spans.iter().map(|s| s.start_ns + s.dur_ns).max().unwrap_or(0)
+    }
+}
+
+/// A handle to one trace — cheap to clone, `None` inside means
+/// disabled (every operation is a no-op).  The ambient tracer of a
+/// thread is whatever was last [`install`](Tracer::install)ed on it;
+/// worker threads inherit it by capturing [`Tracer::current`] before
+/// spawning and installing the clone inside the thread.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<TraceInner>>);
+
+impl Tracer {
+    /// A tracer that records nothing (the default everywhere tracing
+    /// was not explicitly requested).
+    pub fn disabled() -> Self {
+        Self(None)
+    }
+
+    /// Start a new trace; `label` names it in exports (e.g. the
+    /// request endpoint).
+    pub fn enabled(label: &str) -> Self {
+        Self(Some(Arc::new(TraceInner {
+            label: label.to_string(),
+            epoch: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+            truncated: AtomicU64::new(0),
+            next_tid: AtomicU64::new(0),
+        })))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The calling thread's ambient tracer (disabled when none is
+    /// installed).  Capture this *before* spawning scoped workers and
+    /// [`install`](Tracer::install) the clone inside each.
+    pub fn current() -> Self {
+        CTX.with(|c| Self(c.borrow().as_ref().map(|ctx| Arc::clone(&ctx.inner))))
+    }
+
+    /// Install this tracer on the current thread until the returned
+    /// guard drops (which flushes the thread's buffered spans and
+    /// restores whatever tracer was installed before).  Disabled
+    /// tracers install nothing.
+    pub fn install(&self) -> InstallGuard {
+        match &self.0 {
+            None => InstallGuard { installed: false, prev: None },
+            Some(inner) => {
+                let tid = inner.next_tid.fetch_add(1, Ordering::Relaxed) as u32;
+                let prev = CTX.with(|c| {
+                    c.borrow_mut().replace(ThreadCtx {
+                        inner: Arc::clone(inner),
+                        tid,
+                        depth: 0,
+                        buf: Vec::with_capacity(FLUSH_BATCH),
+                    })
+                });
+                InstallGuard { installed: true, prev }
+            }
+        }
+    }
+
+    /// Close the trace and take its spans (sorted by `(tid,
+    /// start_ns)`).  `None` for a disabled tracer.  Every install
+    /// guard must have dropped first — spans still buffered on other
+    /// threads are not in the snapshot.
+    pub fn finish(self) -> Option<Trace> {
+        let inner = self.0?;
+        let mut spans = std::mem::take(&mut *lock(&inner.spans));
+        spans.sort_by_key(|s| (s.tid, s.start_ns, std::cmp::Reverse(s.dur_ns)));
+        Some(Trace {
+            label: inner.label.clone(),
+            spans,
+            truncated: inner.truncated.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// Per-thread tracing state (the TLS slot [`span`] reads).
+struct ThreadCtx {
+    inner: Arc<TraceInner>,
+    tid: u32,
+    depth: u16,
+    buf: Vec<SpanRecord>,
+}
+
+impl ThreadCtx {
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let mut spans = lock(&self.inner.spans);
+        for s in self.buf.drain(..) {
+            if spans.len() < MAX_SPANS_PER_TRACE {
+                spans.push(s);
+            } else {
+                self.inner.truncated.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static CTX: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+/// Restores the previously installed tracer on drop (see
+/// [`Tracer::install`]).
+pub struct InstallGuard {
+    installed: bool,
+    prev: Option<ThreadCtx>,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        if !self.installed {
+            return;
+        }
+        let prev = self.prev.take();
+        CTX.with(|c| {
+            let mut slot = c.borrow_mut();
+            if let Some(ctx) = slot.as_mut() {
+                ctx.flush();
+            }
+            *slot = prev;
+        });
+    }
+}
+
+/// Open a span named `name` on the current thread; it closes (and is
+/// recorded) when the returned guard drops.  Inert when no tracer is
+/// installed.
+pub fn span(name: &'static str) -> SpanGuard {
+    span_arg(name, -1)
+}
+
+/// [`span`] with an integer payload (worker index, fleet job id, …).
+pub fn span_arg(name: &'static str, arg: i64) -> SpanGuard {
+    let start = CTX.with(|c| {
+        let mut slot = c.borrow_mut();
+        let ctx = slot.as_mut()?;
+        ctx.depth = ctx.depth.saturating_add(1);
+        Some(Instant::now())
+    });
+    SpanGuard { start, name, arg }
+}
+
+/// Live span: records itself into the thread buffer on drop.
+pub struct SpanGuard {
+    start: Option<Instant>,
+    name: &'static str,
+    arg: i64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let end = Instant::now();
+        CTX.with(|c| {
+            let mut slot = c.borrow_mut();
+            let Some(ctx) = slot.as_mut() else { return };
+            ctx.depth = ctx.depth.saturating_sub(1);
+            ctx.buf.push(SpanRecord {
+                name: self.name,
+                arg: self.arg,
+                tid: ctx.tid,
+                depth: ctx.depth,
+                start_ns: start.duration_since(ctx.inner.epoch).as_nanos() as u64,
+                dur_ns: end.duration_since(start).as_nanos() as u64,
+            });
+            if ctx.buf.len() >= FLUSH_BATCH {
+                ctx.flush();
+            }
+        });
+    }
+}
+
+/// Bounded ring of the most recent finished traces — the daemon's
+/// flight recorder behind `GET /debug/trace`.
+pub struct FlightRecorder {
+    ring: Mutex<VecDeque<Arc<Trace>>>,
+    cap: usize,
+    dropped: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// A recorder retaining the last `cap` traces (`cap` is clamped to
+    /// at least 1).
+    pub fn new(cap: usize) -> Self {
+        Self { ring: Mutex::new(VecDeque::new()), cap: cap.max(1), dropped: AtomicU64::new(0) }
+    }
+
+    /// Retain `trace`, evicting the oldest once full.  Returns whether
+    /// an eviction happened (the caller bumps
+    /// `tag_trace_dropped_total`).
+    pub fn push(&self, trace: Trace) -> bool {
+        let mut ring = lock(&self.ring);
+        let evicted = ring.len() >= self.cap;
+        if evicted {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(Arc::new(trace));
+        evicted
+    }
+
+    /// Traces evicted over the recorder's lifetime.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        lock(&self.ring).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The retained traces, oldest first.
+    pub fn snapshot(&self) -> Vec<Arc<Trace>> {
+        lock(&self.ring).iter().cloned().collect()
+    }
+
+    /// The whole ring as Chrome trace-event JSON.
+    pub fn export_chrome(&self) -> String {
+        chrome_trace_json(&self.snapshot())
+    }
+}
+
+/// Encode traces in the Chrome trace-event format (the JSON object
+/// form, `{"traceEvents": [...]}`), loadable by Perfetto and
+/// `chrome://tracing`.  Each trace becomes its own process (`pid` =
+/// position + 1, named by a `process_name` metadata event); spans are
+/// complete (`ph: "X"`) events with microsecond `ts`/`dur`.
+pub fn chrome_trace_json(traces: &[Arc<Trace>]) -> String {
+    let mut events = Vec::new();
+    for (i, trace) in traces.iter().enumerate() {
+        let pid = (i + 1) as f64;
+        events.push(Json::Obj(vec![
+            ("ph".to_string(), Json::Str("M".to_string())),
+            ("pid".to_string(), Json::Num(pid)),
+            ("tid".to_string(), Json::Num(0.0)),
+            ("name".to_string(), Json::Str("process_name".to_string())),
+            (
+                "args".to_string(),
+                Json::Obj(vec![("name".to_string(), Json::Str(trace.label.clone()))]),
+            ),
+        ]));
+        for s in &trace.spans {
+            let mut args = vec![("depth".to_string(), Json::Num(s.depth as f64))];
+            if s.arg >= 0 {
+                args.push(("arg".to_string(), Json::Num(s.arg as f64)));
+            }
+            if trace.truncated > 0 {
+                // Stamped on every span so a truncated export is
+                // self-describing wherever the viewer lands.
+                args.push(("truncated".to_string(), Json::Num(trace.truncated as f64)));
+            }
+            events.push(Json::Obj(vec![
+                ("ph".to_string(), Json::Str("X".to_string())),
+                ("name".to_string(), Json::Str(s.name.to_string())),
+                ("cat".to_string(), Json::Str("tag".to_string())),
+                ("pid".to_string(), Json::Num(pid)),
+                ("tid".to_string(), Json::Num(s.tid as f64)),
+                ("ts".to_string(), Json::Num(s.start_ns as f64 / 1000.0)),
+                ("dur".to_string(), Json::Num(s.dur_ns as f64 / 1000.0)),
+                ("args".to_string(), Json::Obj(args)),
+            ]));
+        }
+    }
+    Json::Obj(vec![
+        ("traceEvents".to_string(), Json::Arr(events)),
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+    ])
+    .encode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_spans_are_inert() {
+        let tracer = Tracer::disabled();
+        assert!(!tracer.is_enabled());
+        let _g = tracer.install();
+        {
+            let _a = span("outer");
+            let _b = span("inner");
+        }
+        drop(_g);
+        assert!(tracer.finish().is_none());
+        // No ambient tracer: current() is disabled too.
+        assert!(!Tracer::current().is_enabled());
+    }
+
+    #[test]
+    fn spans_nest_by_interval_containment() {
+        let tracer = Tracer::enabled("test");
+        {
+            let _g = tracer.install();
+            let _root = span("root");
+            {
+                let _a = span_arg("child_a", 3);
+                let _aa = span("grandchild");
+            }
+            let _b = span("child_b");
+        }
+        let trace = tracer.finish().unwrap();
+        assert_eq!(trace.label, "test");
+        assert_eq!(trace.truncated, 0);
+        let names: Vec<_> = trace.spans.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["root", "child_a", "grandchild", "child_b"]);
+        let by_name =
+            |n: &str| *trace.spans.iter().find(|s| s.name == n).unwrap();
+        let root = by_name("root");
+        assert_eq!(root.depth, 0);
+        assert_eq!(by_name("child_a").depth, 1);
+        assert_eq!(by_name("grandchild").depth, 2);
+        assert_eq!(by_name("child_a").arg, 3);
+        assert_eq!(root.arg, -1);
+        // Every child interval sits inside the root's.
+        for s in &trace.spans {
+            assert!(s.start_ns >= root.start_ns, "{}", s.name);
+            assert!(s.start_ns + s.dur_ns <= root.start_ns + root.dur_ns, "{}", s.name);
+        }
+        // Phase totals keep first-appearance order and include everything.
+        let totals = trace.phase_totals();
+        assert_eq!(totals.len(), 4);
+        assert_eq!(totals[0].0, "root");
+        assert!(trace.total_ns() >= root.dur_ns);
+    }
+
+    #[test]
+    fn tracer_propagates_into_scoped_threads() {
+        let tracer = Tracer::enabled("threads");
+        {
+            let _g = tracer.install();
+            let _root = span("root");
+            let ambient = Tracer::current();
+            assert!(ambient.is_enabled());
+            std::thread::scope(|s| {
+                for w in 0..2 {
+                    let t = ambient.clone();
+                    s.spawn(move || {
+                        let _g = t.install();
+                        let _s = span_arg("worker", w);
+                    });
+                }
+            });
+        }
+        let trace = tracer.finish().unwrap();
+        let workers: Vec<_> = trace.spans.iter().filter(|s| s.name == "worker").collect();
+        assert_eq!(workers.len(), 2);
+        // Each install got its own trace-local tid, distinct from the
+        // root thread's.
+        let root_tid = trace.spans.iter().find(|s| s.name == "root").unwrap().tid;
+        assert!(workers.iter().all(|s| s.tid != root_tid));
+        assert_ne!(workers[0].tid, workers[1].tid);
+    }
+
+    #[test]
+    fn install_guard_restores_the_previous_tracer() {
+        let outer = Tracer::enabled("outer");
+        let inner = Tracer::enabled("inner");
+        let _og = outer.install();
+        {
+            let _ig = inner.install();
+            let _s = span("inner_span");
+        }
+        {
+            let _s = span("outer_span");
+        }
+        drop(_og);
+        let it = inner.finish().unwrap();
+        let ot = outer.finish().unwrap();
+        assert_eq!(it.spans.len(), 1);
+        assert_eq!(it.spans[0].name, "inner_span");
+        assert_eq!(ot.spans.len(), 1);
+        assert_eq!(ot.spans[0].name, "outer_span");
+    }
+
+    #[test]
+    fn span_cap_truncates_and_counts() {
+        let tracer = Tracer::enabled("cap");
+        {
+            let _g = tracer.install();
+            for _ in 0..(MAX_SPANS_PER_TRACE + 10) {
+                let _s = span("tick");
+            }
+        }
+        let trace = tracer.finish().unwrap();
+        assert_eq!(trace.spans.len(), MAX_SPANS_PER_TRACE);
+        assert_eq!(trace.truncated, 10);
+    }
+
+    #[test]
+    fn flight_recorder_ring_evicts_oldest_and_counts_drops() {
+        let rec = FlightRecorder::new(2);
+        assert!(rec.is_empty());
+        let mk = |label: &str| {
+            let t = Tracer::enabled(label);
+            {
+                let _g = t.install();
+                let _s = span("x");
+            }
+            t.finish().unwrap()
+        };
+        assert!(!rec.push(mk("a")));
+        assert!(!rec.push(mk("b")));
+        assert!(rec.push(mk("c")), "third push evicts");
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.dropped_total(), 1);
+        let labels: Vec<_> = rec.snapshot().iter().map(|t| t.label.clone()).collect();
+        assert_eq!(labels, vec!["b", "c"]);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let rec = FlightRecorder::new(4);
+        let t = Tracer::enabled("/plan");
+        {
+            let _g = t.install();
+            let _root = span("request");
+            let _child = span_arg("search.worker", 0);
+        }
+        rec.push(t.finish().unwrap());
+        let text = rec.export_chrome();
+        let root = Json::parse(&text).unwrap();
+        let events = root.field("traceEvents").unwrap().as_arr().unwrap();
+        // One metadata event + two spans.
+        assert_eq!(events.len(), 3);
+        let meta = &events[0];
+        assert_eq!(meta.field("ph").unwrap().as_str().unwrap(), "M");
+        let span_evs: Vec<_> = events
+            .iter()
+            .filter(|e| e.field("ph").map(|p| p.as_str().unwrap()) == Ok("X"))
+            .collect();
+        assert_eq!(span_evs.len(), 2);
+        for e in span_evs {
+            assert!(e.field("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.field("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert_eq!(e.field("pid").unwrap().as_u64().unwrap(), 1);
+            e.field("tid").unwrap().as_u64().unwrap();
+            e.field("name").unwrap().as_str().unwrap();
+        }
+        // An empty recorder still exports a loadable document.
+        let empty = FlightRecorder::new(1).export_chrome();
+        let root = Json::parse(&empty).unwrap();
+        assert_eq!(root.field("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

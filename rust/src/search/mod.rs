@@ -225,6 +225,7 @@ pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
 
     if k == 1 {
         // Inline sequential path — byte-identical to `Mcts::search`.
+        let _s = crate::obs::span_arg("search.worker", 0);
         let mut priors = priors;
         let prior = priors.pop().expect("one prior");
         let tree = SearchTree::new();
@@ -259,6 +260,10 @@ pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
     let dp_time = low.dp_time();
     let caches = low.caches_handle();
     let delta = low.delta_enabled();
+    // Spawned scope threads don't inherit the caller's thread-local
+    // tracer — capture it here and install it in each worker so their
+    // spans land in the same trace (under fresh per-thread track ids).
+    let tracer = crate::obs::Tracer::current();
 
     let tree = SearchTree::new();
     let root_idx = AtomicUsize::new(UNEXPANDED);
@@ -273,7 +278,10 @@ pub fn run_search_with_service<P: PriorProvider + Send, S: FnOnce()>(
                 let root_idx = &root_idx;
                 let barrier = &barrier;
                 let budget = budgets[wi];
+                let tracer = tracer.clone();
                 s.spawn(move || {
+                    let _install = tracer.install();
+                    let _s = crate::obs::span_arg("search.worker", wi as i64);
                     let low = Lowering::with_caches(
                         prob.gg,
                         prob.topo,

@@ -9,18 +9,21 @@
 //! deterministic, and timing is a property of the serving process.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::Instant;
 
 use crate::api::CacheStats;
 
 /// The endpoints metrics are keyed by (plus a catch-all).
-pub const ENDPOINTS: [&str; 9] = [
+pub const ENDPOINTS: [&str; 11] = [
     "/plan",
     "/repair",
+    "/explain",
     "/fleet/submit",
     "/fleet/complete",
     "/fleet/status",
     "/healthz",
     "/metrics",
+    "/debug/trace",
     "/shutdown",
     "other",
 ];
@@ -125,8 +128,9 @@ impl ConnHistogram {
 pub const STATUSES: [u16; 10] = [200, 400, 404, 405, 408, 413, 422, 500, 503, 504];
 
 /// All live counters of one serving process.
-#[derive(Default)]
 pub struct ServerMetrics {
+    /// Process start, for `tag_uptime_seconds`.
+    started: Instant,
     /// Requests fully read and routed, per endpoint.
     requests: [AtomicU64; ENDPOINTS.len()],
     /// Responses by status (parallel arrays; see [`STATUSES`]).
@@ -163,8 +167,45 @@ pub struct ServerMetrics {
     fragment_misses: AtomicU64,
     delta_evals: AtomicU64,
     full_evals: AtomicU64,
+    /// Traces retained by the flight recorder.
+    traces_recorded: AtomicU64,
+    /// Traces evicted from the flight-recorder ring (its memory bound
+    /// at work — a high rate means the ring is too small for the
+    /// request rate).
+    trace_dropped: AtomicU64,
+    /// Slow-request log lines actually emitted (post-throttle).
+    slow_logged: AtomicU64,
     /// Handling latency per endpoint.
     latency: [Histogram; ENDPOINTS.len()],
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self {
+            started: Instant::now(),
+            requests: Default::default(),
+            statuses: Default::default(),
+            in_flight: Default::default(),
+            connections_active: Default::default(),
+            requests_per_conn: Default::default(),
+            coalesced_total: Default::default(),
+            coalesce_waiting: Default::default(),
+            shed_total: Default::default(),
+            panics_total: Default::default(),
+            queue_depth: Default::default(),
+            searches_total: Default::default(),
+            memo_hits: Default::default(),
+            memo_misses: Default::default(),
+            fragment_hits: Default::default(),
+            fragment_misses: Default::default(),
+            delta_evals: Default::default(),
+            full_evals: Default::default(),
+            traces_recorded: Default::default(),
+            trace_dropped: Default::default(),
+            slow_logged: Default::default(),
+            latency: Default::default(),
+        }
+    }
 }
 
 impl ServerMetrics {
@@ -272,36 +313,125 @@ impl ServerMetrics {
         self.queue_depth.load(Ordering::Relaxed)
     }
 
+    /// Record one trace pushed into the flight recorder (`evicted` =
+    /// the ring was full and dropped its oldest trace).
+    pub fn record_trace(&self, evicted: bool) {
+        self.traces_recorded.fetch_add(1, Ordering::Relaxed);
+        if evicted {
+            self.trace_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn trace_dropped_total(&self) -> u64 {
+        self.trace_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one slow-request log line emitted.
+    pub fn record_slow_logged(&self) {
+        self.slow_logged.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Render the full exposition.  `cache` is the planner's live
-    /// [`CacheStats`] (`None` when the planner runs uncached).
+    /// [`CacheStats`] (`None` when the planner runs uncached — the
+    /// `tag_plan_cache_*` gauges then render as zeros rather than
+    /// silently disappearing, so dashboards never lose the series).
+    ///
+    /// Every `tag_*` series is preceded by `# HELP` / `# TYPE` comment
+    /// lines (once per metric name, before its first sample — what a
+    /// strict Prometheus text-format parser requires).
     pub fn render(&self, cache: Option<CacheStats>) -> String {
-        let mut out = String::with_capacity(4096);
+        // `# HELP name help` + `# TYPE name kind`, once per series.
+        fn meta(out: &mut String, name: &str, kind: &str, help: &str) {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        }
+        let mut out = String::with_capacity(8192);
+        meta(&mut out, "tag_build_info", "gauge", "Build metadata; always 1.");
+        out.push_str(&format!(
+            "tag_build_info{{version=\"{}\"}} 1\n",
+            env!("CARGO_PKG_VERSION")
+        ));
+        meta(
+            &mut out,
+            "tag_uptime_seconds",
+            "gauge",
+            "Seconds since this serving process started.",
+        );
+        out.push_str(&format!(
+            "tag_uptime_seconds {:.3}\n",
+            self.started.elapsed().as_secs_f64()
+        ));
+        meta(
+            &mut out,
+            "tag_requests_total",
+            "counter",
+            "Requests fully read and routed, per endpoint.",
+        );
         for (i, endpoint) in ENDPOINTS.iter().enumerate() {
             out.push_str(&format!(
                 "tag_requests_total{{endpoint=\"{endpoint}\"}} {}\n",
                 self.requests[i].load(Ordering::Relaxed)
             ));
         }
+        meta(&mut out, "tag_responses_total", "counter", "Responses by HTTP status.");
         for (i, status) in STATUSES.iter().enumerate() {
             out.push_str(&format!(
                 "tag_responses_total{{status=\"{status}\"}} {}\n",
                 self.statuses[i].load(Ordering::Relaxed)
             ));
         }
+        meta(&mut out, "tag_in_flight", "gauge", "Requests currently being handled.");
         out.push_str(&format!("tag_in_flight {}\n", self.in_flight.load(Ordering::Relaxed)));
+        meta(
+            &mut out,
+            "tag_connections_active",
+            "gauge",
+            "Connections currently open on a worker.",
+        );
         out.push_str(&format!("tag_connections_active {}\n", self.connections_active()));
+        meta(
+            &mut out,
+            "tag_requests_per_conn",
+            "histogram",
+            "Requests served per completed keep-alive connection.",
+        );
         self.requests_per_conn.render("tag_requests_per_conn", &mut out);
+        meta(
+            &mut out,
+            "tag_coalesced_total",
+            "counter",
+            "Plan requests answered by joining another request's search.",
+        );
         out.push_str(&format!(
             "tag_coalesced_total {}\n",
             self.coalesced_total.load(Ordering::Relaxed)
         ));
+        meta(
+            &mut out,
+            "tag_coalesce_waiting",
+            "gauge",
+            "Plan requests currently parked on an in-flight search.",
+        );
         out.push_str(&format!(
             "tag_coalesce_waiting {}\n",
             self.coalesce_waiting.load(Ordering::Relaxed)
         ));
+        meta(&mut out, "tag_shed_total", "counter", "Connections shed at admission (503).");
         out.push_str(&format!("tag_shed_total {}\n", self.shed_total()));
+        meta(
+            &mut out,
+            "tag_panics_total",
+            "counter",
+            "Handler panics caught and converted to 500.",
+        );
         out.push_str(&format!("tag_panics_total {}\n", self.panics_total()));
+        meta(&mut out, "tag_queue_depth", "gauge", "Live admission-queue depth.");
         out.push_str(&format!("tag_queue_depth {}\n", self.queue_depth()));
+        meta(
+            &mut out,
+            "tag_searches_total",
+            "counter",
+            "Searches actually executed by this process.",
+        );
         out.push_str(&format!(
             "tag_searches_total {}\n",
             self.searches_total.load(Ordering::Relaxed)
@@ -312,34 +442,100 @@ impl ServerMetrics {
         };
         let memo_hits = self.memo_hits.load(Ordering::Relaxed);
         let memo_misses = self.memo_misses.load(Ordering::Relaxed);
+        meta(&mut out, "tag_memo_hits_total", "counter", "Evaluation-memo hits.");
         out.push_str(&format!("tag_memo_hits_total {memo_hits}\n"));
+        meta(&mut out, "tag_memo_misses_total", "counter", "Evaluation-memo misses.");
         out.push_str(&format!("tag_memo_misses_total {memo_misses}\n"));
+        meta(&mut out, "tag_memo_hit_rate", "gauge", "Evaluation-memo hit rate.");
         out.push_str(&format!("tag_memo_hit_rate {:.6}\n", rate(memo_hits, memo_misses)));
         let frag_hits = self.fragment_hits.load(Ordering::Relaxed);
         let frag_misses = self.fragment_misses.load(Ordering::Relaxed);
+        meta(&mut out, "tag_fragment_hits_total", "counter", "Fragment-store hits.");
         out.push_str(&format!("tag_fragment_hits_total {frag_hits}\n"));
+        meta(&mut out, "tag_fragment_misses_total", "counter", "Fragment-store misses.");
         out.push_str(&format!("tag_fragment_misses_total {frag_misses}\n"));
+        meta(&mut out, "tag_fragment_hit_rate", "gauge", "Fragment-store hit rate.");
         out.push_str(&format!(
             "tag_fragment_hit_rate {:.6}\n",
             rate(frag_hits, frag_misses)
         ));
         let delta = self.delta_evals.load(Ordering::Relaxed);
         let full = self.full_evals.load(Ordering::Relaxed);
+        meta(&mut out, "tag_delta_evals_total", "counter", "Incremental (delta) evaluations.");
         out.push_str(&format!("tag_delta_evals_total {delta}\n"));
+        meta(&mut out, "tag_full_evals_total", "counter", "Full lower-and-simulate evaluations.");
         out.push_str(&format!("tag_full_evals_total {full}\n"));
+        meta(&mut out, "tag_delta_hit_rate", "gauge", "Delta share of all evaluations.");
         out.push_str(&format!("tag_delta_hit_rate {:.6}\n", rate(delta, full)));
-        if let Some(stats) = cache {
-            out.push_str(&format!("tag_plan_cache_hits {}\n", stats.hits));
-            out.push_str(&format!("tag_plan_cache_misses {}\n", stats.misses));
-            out.push_str(&format!("tag_plan_cache_entries {}\n", stats.entries));
-            out.push_str(&format!("tag_plan_cache_hit_rate {:.6}\n", stats.hit_rate()));
-            out.push_str(&format!("tag_plan_cache_hot_entries {}\n", stats.hot_entries));
-            out.push_str(&format!("tag_plan_cache_cold_entries {}\n", stats.cold_entries));
-            out.push_str(&format!("tag_plan_cache_capacity {}\n", stats.capacity));
-            out.push_str(&format!("tag_plan_cache_occupancy {:.6}\n", stats.occupancy()));
-            out.push_str(&format!("tag_plan_cache_promotions_total {}\n", stats.promotions));
-            out.push_str(&format!("tag_plan_cache_rotations_total {}\n", stats.rotations));
-        }
+        meta(
+            &mut out,
+            "tag_traces_recorded_total",
+            "counter",
+            "Request traces retained by the flight recorder.",
+        );
+        out.push_str(&format!(
+            "tag_traces_recorded_total {}\n",
+            self.traces_recorded.load(Ordering::Relaxed)
+        ));
+        meta(
+            &mut out,
+            "tag_trace_dropped_total",
+            "counter",
+            "Traces evicted from the bounded flight-recorder ring.",
+        );
+        out.push_str(&format!("tag_trace_dropped_total {}\n", self.trace_dropped_total()));
+        meta(
+            &mut out,
+            "tag_slow_logged_total",
+            "counter",
+            "Slow-request log lines emitted (post-throttle).",
+        );
+        out.push_str(&format!(
+            "tag_slow_logged_total {}\n",
+            self.slow_logged.load(Ordering::Relaxed)
+        ));
+        let stats = cache.unwrap_or_default();
+        meta(&mut out, "tag_plan_cache_hits", "counter", "Plan-cache hits.");
+        out.push_str(&format!("tag_plan_cache_hits {}\n", stats.hits));
+        meta(&mut out, "tag_plan_cache_misses", "counter", "Plan-cache misses.");
+        out.push_str(&format!("tag_plan_cache_misses {}\n", stats.misses));
+        meta(&mut out, "tag_plan_cache_entries", "gauge", "Live plan-cache entries.");
+        out.push_str(&format!("tag_plan_cache_entries {}\n", stats.entries));
+        meta(&mut out, "tag_plan_cache_hit_rate", "gauge", "Plan-cache hit rate.");
+        out.push_str(&format!("tag_plan_cache_hit_rate {:.6}\n", stats.hit_rate()));
+        meta(&mut out, "tag_plan_cache_hot_entries", "gauge", "Hot-generation entries.");
+        out.push_str(&format!("tag_plan_cache_hot_entries {}\n", stats.hot_entries));
+        meta(&mut out, "tag_plan_cache_cold_entries", "gauge", "Cold-generation entries.");
+        out.push_str(&format!("tag_plan_cache_cold_entries {}\n", stats.cold_entries));
+        meta(&mut out, "tag_plan_cache_capacity", "gauge", "Per-generation entry cap.");
+        out.push_str(&format!("tag_plan_cache_capacity {}\n", stats.capacity));
+        meta(
+            &mut out,
+            "tag_plan_cache_occupancy",
+            "gauge",
+            "Live entries over the two-generation bound.",
+        );
+        out.push_str(&format!("tag_plan_cache_occupancy {:.6}\n", stats.occupancy()));
+        meta(
+            &mut out,
+            "tag_plan_cache_promotions_total",
+            "counter",
+            "Cold-to-hot entry promotions.",
+        );
+        out.push_str(&format!("tag_plan_cache_promotions_total {}\n", stats.promotions));
+        meta(
+            &mut out,
+            "tag_plan_cache_rotations_total",
+            "counter",
+            "Generation rotations (hot becomes cold).",
+        );
+        out.push_str(&format!("tag_plan_cache_rotations_total {}\n", stats.rotations));
+        meta(
+            &mut out,
+            "tag_latency_seconds",
+            "histogram",
+            "Request handling latency, per endpoint.",
+        );
         for (i, endpoint) in ENDPOINTS.iter().enumerate() {
             self.latency[i].render("tag_latency_seconds", endpoint, &mut out);
         }
@@ -443,8 +639,55 @@ mod tests {
             scrape(&text, "tag_latency_seconds_count{endpoint=\"/plan\"}"),
             Some(1.0)
         );
-        // Uncached planner: no cache lines at all.
-        assert!(!m.render(None).contains("tag_plan_cache"));
+        // Uncached planner: the cache series still render, as zeros —
+        // a scraper never sees the series vanish.
+        let uncached = m.render(None);
+        assert_eq!(scrape(&uncached, "tag_plan_cache_hits"), Some(0.0));
+        assert_eq!(scrape(&uncached, "tag_plan_cache_hit_rate"), Some(0.0));
+        assert_eq!(scrape(&uncached, "tag_plan_cache_occupancy"), Some(0.0));
+    }
+
+    #[test]
+    fn exposition_has_help_and_type_for_every_series() {
+        let m = ServerMetrics::default();
+        m.record_trace(false);
+        m.record_trace(true);
+        m.record_slow_logged();
+        let text = m.render(None);
+        // Every sample line's metric name (label-stripped, histogram
+        // suffixes folded to the base series) must have been declared
+        // by a `# TYPE` line earlier in the page.
+        let mut declared = std::collections::HashSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split(' ').next().unwrap();
+                declared.insert(name.to_string());
+                continue;
+            }
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let name = line.split([' ', '{']).next().unwrap();
+            let base = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(name);
+            assert!(
+                declared.contains(base) || declared.contains(name),
+                "series `{name}` has no preceding # TYPE"
+            );
+        }
+        // Build/uptime/trace series render with sane values.
+        assert_eq!(scrape(&text, "tag_traces_recorded_total"), Some(2.0));
+        assert_eq!(scrape(&text, "tag_trace_dropped_total"), Some(1.0));
+        assert_eq!(scrape(&text, "tag_slow_logged_total"), Some(1.0));
+        assert!(scrape(&text, "tag_uptime_seconds").unwrap() >= 0.0);
+        assert!(text.contains("tag_build_info{version="));
+        assert!(text.contains("# TYPE tag_latency_seconds histogram"));
+        assert!(text.contains("# TYPE tag_requests_per_conn histogram"));
+        // The histogram header appears once, not per endpoint.
+        assert_eq!(text.matches("# TYPE tag_latency_seconds ").count(), 1);
     }
 
     #[test]

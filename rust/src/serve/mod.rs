@@ -141,6 +141,13 @@ pub struct ServeConfig {
     /// Topology spec (preset name or `random:SEED`/`hier:SEED`) the
     /// `/fleet/*` endpoints lease devices out of.
     pub fleet_topology: String,
+    /// Requests slower than this many milliseconds emit one structured
+    /// JSON log line on stderr (throttled to one per second).  `None`
+    /// disables slow-request logging entirely.
+    pub slow_ms: Option<u64>,
+    /// Traces retained by the flight-recorder ring served at
+    /// `GET /debug/trace`; the oldest trace is evicted beyond this.
+    pub trace_ring: usize,
 }
 
 impl Default for ServeConfig {
@@ -157,6 +164,8 @@ impl Default for ServeConfig {
             store_dir: None,
             retry_after_s: 1,
             fleet_topology: "multi_rack".to_string(),
+            slow_ms: None,
+            trace_ring: 64,
         }
     }
 }
@@ -198,6 +207,7 @@ impl Server {
             }
             None => None,
         };
+        let recorder = Arc::new(crate::obs::FlightRecorder::new(config.trace_ring));
         let router = Arc::new(Router::new(
             Arc::new(planner),
             metrics.clone(),
@@ -205,6 +215,8 @@ impl Server {
             config.workers,
             fleet,
             store,
+            recorder,
+            config.slow_ms,
         ));
         Ok(Self { listener, local_addr, config, router, metrics, shutdown })
     }

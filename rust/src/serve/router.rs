@@ -4,11 +4,13 @@
 //! |------------------------|-------------------------------------------------------|
 //! | `POST /plan`           | decode wire request → coalesce → plan → JSON plan     |
 //! | `POST /repair`         | prior plan + fault spec → warm re-plan on the residual|
+//! | `POST /explain`        | prior plan → re-simulate → critical-path breakdown    |
 //! | `POST /fleet/submit`   | plan request + `gpus` → lease best-fit slice → plan   |
 //! | `POST /fleet/complete` | `{"job": N}` → release job `N`'s leased devices       |
 //! | `GET /fleet/status`    | live fleet ledger JSON (leases, tenants, counters)    |
 //! | `GET /healthz`         | readiness JSON: workers, queue depth, panics          |
 //! | `GET /metrics`         | plain-text exposition ([`ServerMetrics::render`])     |
+//! | `GET /debug/trace`     | flight-recorder ring as Chrome trace-event JSON       |
 //! | `POST /shutdown`       | begin graceful drain; `200`                           |
 //!
 //! `/plan` is where the serving guarantees live: the request's
@@ -28,13 +30,15 @@
 //! served as an answer.  Partial searches (deadline hit mid-run) still
 //! return `200`; callers spot them by the `timed_out` telemetry row.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::api::json::Json;
 use crate::api::{DeploymentPlan, PlanKey, SharedPlanner};
 use crate::cluster::FaultSpec;
 use crate::fleet::{FleetState, SubmitOutcome};
+use crate::obs::{FlightRecorder, Trace, Tracer};
 
 use super::coalesce::{Join, SingleFlight};
 use super::http::{Request, Response};
@@ -49,12 +53,23 @@ pub struct Router {
     pub metrics: Arc<ServerMetrics>,
     /// The multi-tenant fleet ledger behind `/fleet/*`.
     pub fleet: Arc<FleetState>,
+    /// Flight recorder behind `GET /debug/trace` — the last N request
+    /// traces, bounded.
+    pub recorder: Arc<FlightRecorder>,
     /// Persistent plan journal (`None` when serving memory-only).
     store: Option<Arc<PlanStore>>,
     flights: SingleFlight<PlanKey, (u16, String)>,
     shutdown: Arc<AtomicBool>,
     /// Worker-pool size, reported by `/healthz`.
     workers: usize,
+    /// Slow-request logging threshold, milliseconds (`None` = off, the
+    /// default).
+    slow_ms: Option<u64>,
+    /// Throttle clock for slow-request logging.
+    slow_epoch: Instant,
+    /// Millisecond (since `slow_epoch`) of the last emitted slow-request
+    /// line; `u64::MAX` = never logged.
+    slow_last_log: AtomicU64,
 }
 
 impl Router {
@@ -65,8 +80,22 @@ impl Router {
         workers: usize,
         fleet: Arc<FleetState>,
         store: Option<Arc<PlanStore>>,
+        recorder: Arc<FlightRecorder>,
+        slow_ms: Option<u64>,
     ) -> Self {
-        Self { planner, metrics, fleet, store, flights: SingleFlight::new(), shutdown, workers }
+        Self {
+            planner,
+            metrics,
+            fleet,
+            recorder,
+            store,
+            flights: SingleFlight::new(),
+            shutdown,
+            workers,
+            slow_ms,
+            slow_epoch: Instant::now(),
+            slow_last_log: AtomicU64::new(u64::MAX),
+        }
     }
 
     /// Whether the shutdown latch has flipped — connection loops use
@@ -81,6 +110,7 @@ impl Router {
         match (request.method.as_str(), request.path.as_str()) {
             ("POST", "/plan") => self.plan(&request.body),
             ("POST", "/repair") => self.repair(&request.body),
+            ("POST", "/explain") => self.explain(&request.body),
             ("POST", "/fleet/submit") => self.fleet_submit(&request.body),
             ("POST", "/fleet/complete") => {
                 let (status, body) = self.fleet.complete(&request.body);
@@ -96,17 +126,98 @@ impl Router {
                 }
                 Response::text(200, text)
             }
+            ("GET", "/debug/trace") => Response::json(200, self.recorder.export_chrome()),
             ("POST", "/shutdown") => {
                 self.shutdown.store(true, Ordering::SeqCst);
                 Response::text(200, "draining\n")
             }
-            (_, "/plan") | (_, "/repair") | (_, "/fleet/submit") | (_, "/fleet/complete") => {
-                method_not_allowed("POST")
+            (_, "/plan") | (_, "/repair") | (_, "/explain") | (_, "/fleet/submit")
+            | (_, "/fleet/complete") => method_not_allowed("POST"),
+            (_, "/healthz") | (_, "/metrics") | (_, "/fleet/status") | (_, "/debug/trace") => {
+                method_not_allowed("GET")
             }
-            (_, "/healthz") | (_, "/metrics") | (_, "/fleet/status") => method_not_allowed("GET"),
             (_, "/shutdown") => method_not_allowed("POST"),
             _ => Response::text(404, "unknown endpoint\n"),
         }
+    }
+
+    /// Run `f` under a fresh per-request trace (when `enabled`), retain
+    /// the finished trace in the flight recorder, and emit a
+    /// slow-request log line if the request overran `--slow-ms`.
+    ///
+    /// Tracing is per-request and observational: the tracer lives in a
+    /// thread-local the planner's span guards read, and the finished
+    /// trace carries only monotonic timestamps — the response bytes are
+    /// identical with tracing on or off.
+    fn traced<F: FnOnce() -> Response>(&self, label: &'static str, enabled: bool, f: F) -> Response {
+        let watch = crate::util::Stopwatch::start();
+        let tracer = if enabled { Tracer::enabled(label) } else { Tracer::disabled() };
+        let response = {
+            let _g = tracer.install();
+            let _root = crate::obs::span("request");
+            f()
+        };
+        let trace = tracer.finish();
+        if let Some(trace) = &trace {
+            let evicted = self.recorder.push(trace.clone());
+            self.metrics.record_trace(evicted);
+        }
+        self.maybe_log_slow(label, &response, watch.elapsed_s(), trace.as_ref());
+        response
+    }
+
+    /// One-line JSON log for a request that overran `--slow-ms`,
+    /// throttled to at most one line per second so a pathological
+    /// workload cannot turn the log into its own bottleneck.
+    fn maybe_log_slow(
+        &self,
+        endpoint: &'static str,
+        response: &Response,
+        elapsed_s: f64,
+        trace: Option<&Trace>,
+    ) {
+        let Some(slow_ms) = self.slow_ms else { return };
+        let elapsed_ms = elapsed_s * 1e3;
+        if elapsed_ms < slow_ms as f64 {
+            return;
+        }
+        let now_ms = self.slow_epoch.elapsed().as_millis() as u64;
+        let last = self.slow_last_log.load(Ordering::Relaxed);
+        if last != u64::MAX && now_ms < last.saturating_add(1000) {
+            return;
+        }
+        if self
+            .slow_last_log
+            .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // another thread claimed this logging slot
+        }
+        let mut fields = vec![
+            ("event".to_string(), Json::Str("slow_request".to_string())),
+            ("endpoint".to_string(), Json::Str(endpoint.to_string())),
+            ("status".to_string(), Json::Num(response.status as f64)),
+            ("elapsed_ms".to_string(), Json::Num(elapsed_ms)),
+        ];
+        // A served plan carries its fingerprint — surface it so the
+        // slow line can be joined against the plan cache and store.
+        if response.status == 200 {
+            if let Ok(body) = Json::parse_bytes(&response.body) {
+                if let Some(fp) = body.get("config_fingerprint") {
+                    fields.push(("config_fingerprint".to_string(), fp.clone()));
+                }
+            }
+        }
+        if let Some(trace) = trace {
+            let phases: Vec<(String, Json)> = trace
+                .phase_totals()
+                .into_iter()
+                .map(|(name, ns)| (name.to_string(), Json::Num(ns as f64 / 1e6)))
+                .collect();
+            fields.push(("phase_ms".to_string(), Json::Obj(phases)));
+        }
+        eprintln!("{}", Json::Obj(fields).encode());
+        self.metrics.record_slow_logged();
     }
 
     /// `POST /fleet/submit`: lease a best-fit slice, plan on it.
@@ -115,15 +226,17 @@ impl Router {
     /// response (the plan cache still deduplicates the search when two
     /// leases materialize fingerprint-identical slices).
     fn fleet_submit(&self, body: &[u8]) -> Response {
-        match self.fleet.submit(&self.planner, body) {
-            SubmitOutcome::Planned(body) => Response::json(200, body),
-            SubmitOutcome::Busy { reason, retry_after_s } => Response {
-                retry_after_s: Some(retry_after_s),
-                ..Response::text(503, format!("fleet busy: {reason}\n"))
-            },
-            SubmitOutcome::Invalid(msg) => Response::text(400, format!("{msg}\n")),
-            SubmitOutcome::Failed(msg) => Response::text(422, format!("{msg}\n")),
-        }
+        self.traced("/fleet/submit", true, || {
+            match self.fleet.submit(&self.planner, body) {
+                SubmitOutcome::Planned(body) => Response::json(200, body),
+                SubmitOutcome::Busy { reason, retry_after_s } => Response {
+                    retry_after_s: Some(retry_after_s),
+                    ..Response::text(503, format!("fleet busy: {reason}\n"))
+                },
+                SubmitOutcome::Invalid(msg) => Response::text(400, format!("{msg}\n")),
+                SubmitOutcome::Failed(msg) => Response::text(422, format!("{msg}\n")),
+            }
+        })
     }
 
     /// `GET /healthz`: readiness detail.  Stays `200` whenever the
@@ -151,56 +264,61 @@ impl Router {
             Ok(request) => request,
             Err(e) => return Response::text(400, format!("bad plan request: {e}\n")),
         };
-        let key = self.planner.key_for(&request);
-        // The waiting gauge brackets `join`: a follower sits inside it
-        // for the whole leader search; a leader only transits (join
-        // returns immediately for it).
-        self.metrics.begin_coalesce_wait();
-        let joined = self.flights.join(key);
-        self.metrics.end_coalesce_wait();
-        match joined {
-            Join::Lead(leader) => {
-                let (status, body) = match self.planner.plan(&request) {
-                    Ok(outcome) => {
-                        let (status, body) = plan_payload(&outcome.plan);
-                        if !outcome.cache_hit {
-                            self.metrics.record_search();
-                            // Leaders only: a cached plan's telemetry
-                            // describes a search some earlier leader
-                            // already folded in.
-                            self.metrics
-                                .record_eval_metrics(&outcome.plan.telemetry.metrics);
-                            // Journal fresh full plans so the next boot
-                            // starts warm.  Mirrors the cache's own
-                            // policy exactly: timed-out plans (partial
-                            // 200s included) are neither cached nor
-                            // persisted.
-                            let timed_out =
-                                outcome.plan.telemetry.metric("timed_out").is_some();
-                            if status == 200 && !timed_out {
-                                if let Some(store) = &self.store {
-                                    store.append(&key, &body);
+        self.traced("/plan", request.trace, || {
+            let key = self.planner.key_for(&request);
+            // The waiting gauge brackets `join`: a follower sits inside
+            // it for the whole leader search; a leader only transits
+            // (join returns immediately for it).
+            self.metrics.begin_coalesce_wait();
+            let joined = {
+                let _s = crate::obs::span("coalesce");
+                self.flights.join(key)
+            };
+            self.metrics.end_coalesce_wait();
+            match joined {
+                Join::Lead(leader) => {
+                    let (status, body) = match self.planner.plan(&request) {
+                        Ok(outcome) => {
+                            let (status, body) = plan_payload(&outcome.plan);
+                            if !outcome.cache_hit {
+                                self.metrics.record_search();
+                                // Leaders only: a cached plan's telemetry
+                                // describes a search some earlier leader
+                                // already folded in.
+                                self.metrics
+                                    .record_eval_metrics(&outcome.plan.telemetry.metrics);
+                                // Journal fresh full plans so the next boot
+                                // starts warm.  Mirrors the cache's own
+                                // policy exactly: timed-out plans (partial
+                                // 200s included) are neither cached nor
+                                // persisted.
+                                let timed_out =
+                                    outcome.plan.telemetry.metric("timed_out").is_some();
+                                if status == 200 && !timed_out {
+                                    if let Some(store) = &self.store {
+                                        store.append(&key, &body);
+                                    }
                                 }
                             }
+                            (status, body)
                         }
-                        (status, body)
+                        Err(e) => (422, format!("planning failed: {e}\n")),
+                    };
+                    // Followers get the leader's status too: a coalesced
+                    // burst behind an expired deadline is 504 across the
+                    // board, not one 504 and N fabricated 200s.
+                    leader.complete(Ok((status, body.clone())));
+                    respond(status, body)
+                }
+                Join::Coalesced(result) => {
+                    self.metrics.record_coalesced();
+                    match result {
+                        Ok((status, body)) => respond(status, body),
+                        Err(msg) => Response::text(422, format!("planning failed: {msg}\n")),
                     }
-                    Err(e) => (422, format!("planning failed: {e}\n")),
-                };
-                // Followers get the leader's status too: a coalesced
-                // burst behind an expired deadline is 504 across the
-                // board, not one 504 and N fabricated 200s.
-                leader.complete(Ok((status, body.clone())));
-                respond(status, body)
-            }
-            Join::Coalesced(result) => {
-                self.metrics.record_coalesced();
-                match result {
-                    Ok((status, body)) => respond(status, body),
-                    Err(msg) => Response::text(422, format!("planning failed: {msg}\n")),
                 }
             }
-        }
+        })
     }
 
     /// `POST /repair`: a plan-request body plus `"faults"` (the
@@ -250,15 +368,62 @@ impl Router {
             Ok(request) => request,
             Err(e) => return Response::text(400, format!("bad repair request: {e}\n")),
         };
-        match self.planner.repair(&request, &prior, &faults) {
-            Ok(outcome) => {
-                self.metrics.record_search();
-                self.metrics.record_eval_metrics(&outcome.plan.telemetry.metrics);
-                let (status, body) = plan_payload(&outcome.plan);
-                respond(status, body)
+        self.traced("/repair", request.trace, || {
+            match self.planner.repair(&request, &prior, &faults) {
+                Ok(outcome) => {
+                    self.metrics.record_search();
+                    self.metrics.record_eval_metrics(&outcome.plan.telemetry.metrics);
+                    let (status, body) = plan_payload(&outcome.plan);
+                    respond(status, body)
+                }
+                Err(e) => Response::text(422, format!("repair failed: {e}\n")),
             }
-            Err(e) => Response::text(422, format!("repair failed: {e}\n")),
-        }
+        })
+    }
+
+    /// `POST /explain`: a plan-request body plus `"plan"` (a previously
+    /// served [`DeploymentPlan`], nested verbatim) → the
+    /// [`crate::obs::explain`] report: critical-path decomposition,
+    /// contended links, SFB savings and search attribution.  Bypasses
+    /// the plan cache and the singleflight table — explanation is a
+    /// read-only re-simulation.
+    fn explain(&self, body: &[u8]) -> Response {
+        let text = match std::str::from_utf8(body) {
+            Ok(text) => text,
+            Err(e) => return Response::text(400, format!("body is not valid utf-8: {e}\n")),
+        };
+        let root = match Json::parse(text) {
+            Ok(root) => root,
+            Err(e) => return Response::text(400, format!("bad explain request: {e}\n")),
+        };
+        let members = match &root {
+            Json::Obj(members) => members,
+            _ => return Response::text(400, "explain request must be a JSON object\n"),
+        };
+        let prior = match root
+            .field("plan")
+            .map(|v| v.encode())
+            .and_then(|text| DeploymentPlan::decode(&text))
+        {
+            Ok(prior) => prior,
+            Err(e) => return Response::text(400, format!("bad prior plan: {e}\n")),
+        };
+        let request_obj =
+            Json::Obj(members.iter().filter(|(k, _)| k != "plan").cloned().collect());
+        let request = match crate::api::PlanRequest::decode(&request_obj.encode()) {
+            Ok(request) => request,
+            Err(e) => return Response::text(400, format!("bad explain request: {e}\n")),
+        };
+        self.traced("/explain", request.trace, || {
+            match crate::obs::explain::explain(&request, &prior) {
+                Ok(report) => {
+                    let mut body = report.encode();
+                    body.push('\n');
+                    Response::json(200, body)
+                }
+                Err(e) => Response::text(422, format!("explain failed: {e}\n")),
+            }
+        })
     }
 }
 
@@ -299,6 +464,8 @@ mod tests {
             2,
             Arc::new(FleetState::new(crate::cluster::presets::testbed()).unwrap()),
             None,
+            Arc::new(FlightRecorder::new(8)),
+            None,
         )
     }
 
@@ -323,6 +490,10 @@ mod tests {
         assert_eq!((resp.status, resp.allow), (405, Some("POST")));
         let resp = r.handle(&request("GET", "/repair", b""));
         assert_eq!((resp.status, resp.allow), (405, Some("POST")));
+        let resp = r.handle(&request("GET", "/explain", b""));
+        assert_eq!((resp.status, resp.allow), (405, Some("POST")));
+        let resp = r.handle(&request("POST", "/debug/trace", b""));
+        assert_eq!((resp.status, resp.allow), (405, Some("GET")));
         let resp = r.handle(&request("GET", "/fleet/submit", b""));
         assert_eq!((resp.status, resp.allow), (405, Some("POST")));
         let resp = r.handle(&request("POST", "/fleet/status", b""));
@@ -382,6 +553,81 @@ mod tests {
             r.handle(&request("POST", "/repair", wrong_model.as_bytes())).status,
             422
         );
+    }
+
+    #[test]
+    fn explain_round_trips_over_the_wire() {
+        let r = router();
+        let body = br#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
+        let planned = r.handle(&request("POST", "/plan", body));
+        assert_eq!(planned.status, 200);
+        let plan_json = std::str::from_utf8(&planned.body).unwrap();
+        let explain_body = format!(
+            r#"{{"model":"VGG19","iterations":30,"max_groups":10,"seed":3,"plan":{plan_json}}}"#
+        );
+        let explained = r.handle(&request("POST", "/explain", explain_body.as_bytes()));
+        assert_eq!(
+            explained.status,
+            200,
+            "{:?}",
+            String::from_utf8_lossy(&explained.body)
+        );
+        let report = Json::parse(std::str::from_utf8(&explained.body).unwrap()).unwrap();
+        assert!(report
+            .field("reproduces_reported_time")
+            .unwrap()
+            .as_bool()
+            .unwrap());
+        let frac = report
+            .field("critical_path")
+            .and_then(|cp| cp.field("attributed_fraction"))
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(frac >= 0.95, "attributed only {frac}");
+
+        // Malformed bodies are 400, a prior for a different model is 422.
+        assert_eq!(r.handle(&request("POST", "/explain", b"not json")).status, 400);
+        assert_eq!(r.handle(&request("POST", "/explain", body)).status, 400);
+        let wrong_model = format!(
+            r#"{{"model":"AlexNet","iterations":30,"max_groups":10,"plan":{plan_json}}}"#
+        );
+        assert_eq!(
+            r.handle(&request("POST", "/explain", wrong_model.as_bytes())).status,
+            422
+        );
+    }
+
+    #[test]
+    fn served_requests_feed_the_flight_recorder() {
+        let r = router();
+        assert!(r.recorder.is_empty());
+        let body = br#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":3}"#;
+        assert_eq!(r.handle(&request("POST", "/plan", body)).status, 200);
+        assert_eq!(r.recorder.len(), 1);
+
+        let resp = r.handle(&request("GET", "/debug/trace", b""));
+        assert_eq!(resp.status, 200);
+        let export = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let events = export.field("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let phase = |e: &Json| e.get("ph").and_then(|p| p.as_str().ok().map(str::to_string));
+        let complete: Vec<&Json> =
+            events.iter().filter(|e| phase(e).as_deref() == Some("X")).collect();
+        let name = |e: &Json| e.get("name").and_then(|n| n.as_str().ok().map(str::to_string));
+        assert!(complete.iter().any(|e| name(e).as_deref() == Some("request")));
+        for e in &complete {
+            for key in ["ts", "dur", "pid", "tid"] {
+                let ok = e.get(key).is_some_and(|v| v.as_f64().is_ok());
+                assert!(ok, "missing numeric {key} in {}", e.encode());
+            }
+        }
+
+        // `"trace": false` opts a request out of the recorder.
+        let quiet = br#"{"model":"VGG19","iterations":30,"max_groups":10,"seed":4,"trace":false}"#;
+        assert_eq!(r.handle(&request("POST", "/plan", quiet)).status, 200);
+        assert_eq!(r.recorder.len(), 1);
+        assert_eq!(r.metrics.trace_dropped_total(), 0);
     }
 
     #[test]

@@ -474,6 +474,100 @@ pub fn simulate(tg: &TaskGraph) -> Schedule {
     Simulator::new().run(tg)
 }
 
+/// One chronological segment of the critical path ([`critical_path`]):
+/// a task's execution interval, or an idle gap (`task == None`) the
+/// walk could not attribute to any predecessor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CriticalSegment {
+    pub task: Option<usize>,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Walk the critical path of a simulated schedule backward from the
+/// makespan-defining task, through whichever predecessor released it —
+/// its latest-finishing dependency or the task that freed its resource
+/// (dispatch is only-ready and serial per resource, so one of the two
+/// always bounds the start time).  Returns chronological segments that
+/// tile `[0, makespan]`: each occupied segment is exactly its task's
+/// `[start, finish]` interval, consecutive segments share endpoints
+/// bit-for-bit, and any unattributed remainder becomes an explicit
+/// idle segment — so the path's endpoints reproduce the makespan
+/// without re-summing floating-point durations.  Deterministic:
+/// ties pick the lowest task id at the head and the highest
+/// predecessor id on the walk.
+pub fn critical_path(tg: &TaskGraph, sched: &Schedule) -> Vec<CriticalSegment> {
+    let n = tg.tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Dispatch order per resource ((start, id)-sorted), so each task
+    // knows which task freed its resource.
+    let mut by_resource: Vec<Vec<usize>> = vec![Vec::new(); tg.num_resources];
+    for (i, task) in tg.tasks.iter().enumerate() {
+        by_resource[task.resource].push(i);
+    }
+    let mut prev_on_resource = vec![usize::MAX; n];
+    for list in &mut by_resource {
+        list.sort_by(|&a, &b| {
+            sched.start[a]
+                .partial_cmp(&sched.start[b])
+                .unwrap_or(Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for w in list.windows(2) {
+            prev_on_resource[w[1]] = w[0];
+        }
+    }
+
+    let mut cur = 0usize;
+    for i in 1..n {
+        if sched.finish[i] > sched.finish[cur] {
+            cur = i;
+        }
+    }
+
+    let better = |p: usize, b: usize| {
+        sched.finish[p] > sched.finish[b] || (sched.finish[p] == sched.finish[b] && p > b)
+    };
+    let mut segments = Vec::new();
+    loop {
+        segments.push(CriticalSegment {
+            task: Some(cur),
+            start: sched.start[cur],
+            end: sched.finish[cur],
+        });
+        let s = sched.start[cur];
+        if s <= 0.0 {
+            break;
+        }
+        let mut best: Option<usize> = None;
+        for &d in &tg.tasks[cur].deps {
+            if best.map_or(true, |b| better(d, b)) {
+                best = Some(d);
+            }
+        }
+        let p = prev_on_resource[cur];
+        if p != usize::MAX && best.map_or(true, |b| better(p, b)) {
+            best = Some(p);
+        }
+        match best {
+            None => {
+                segments.push(CriticalSegment { task: None, start: 0.0, end: s });
+                break;
+            }
+            Some(p) => {
+                if sched.finish[p] < s {
+                    segments.push(CriticalSegment { task: None, start: sched.finish[p], end: s });
+                }
+                cur = p;
+            }
+        }
+    }
+    segments.reverse();
+    segments
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -685,5 +779,75 @@ mod tests {
         let full = Simulator::new().run(&new_tg);
         assert_bit_identical(&resumed, &full);
         assert_eq!(resumed.start[2], 5.0);
+    }
+
+    /// Segments must tile `[0, makespan]` with shared endpoints, and
+    /// every occupied segment must be its task's exact interval.
+    fn assert_tiles_makespan(tg: &TaskGraph, sched: &Schedule, segs: &[CriticalSegment]) {
+        assert!(!segs.is_empty());
+        assert_eq!(segs[0].start.to_bits(), 0.0f64.to_bits());
+        assert_eq!(segs.last().unwrap().end.to_bits(), sched.makespan.to_bits());
+        for w in segs.windows(2) {
+            assert_eq!(w[0].end.to_bits(), w[1].start.to_bits(), "contiguous segments");
+        }
+        for seg in segs {
+            assert!(seg.end >= seg.start);
+            if let Some(t) = seg.task {
+                assert_eq!(seg.start.to_bits(), sched.start[t].to_bits());
+                assert_eq!(seg.end.to_bits(), sched.finish[t].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn critical_path_follows_the_dependency_chain() {
+        let mut tg = TaskGraph::new(2);
+        let a = tg.push(t(0, 2.0, &[]));
+        tg.push(t(1, 0.5, &[])); // off-path filler
+        let b = tg.push(t(1, 3.0, &[a]));
+        let c = tg.push(t(0, 1.0, &[b]));
+        let sched = simulate(&tg);
+        let segs = critical_path(&tg, &sched);
+        assert_tiles_makespan(&tg, &sched, &segs);
+        let tasks: Vec<_> = segs.iter().filter_map(|s| s.task).collect();
+        assert_eq!(tasks, vec![a, b, c]);
+    }
+
+    #[test]
+    fn critical_path_walks_through_resource_queueing() {
+        // The head task is released by the task that freed its
+        // resource, not by its (much earlier) dependency.
+        let mut tg = TaskGraph::new(2);
+        let dep = tg.push(t(1, 0.5, &[]));
+        let hog = tg.push(t(0, 4.0, &[]));
+        let tail = tg.push(t(0, 1.0, &[dep])); // ready at 0.5, starts at 4
+        let sched = simulate(&tg);
+        assert_eq!(sched.start[tail], 4.0);
+        let segs = critical_path(&tg, &sched);
+        assert_tiles_makespan(&tg, &sched, &segs);
+        let tasks: Vec<_> = segs.iter().filter_map(|s| s.task).collect();
+        assert_eq!(tasks, vec![hog, tail], "path goes through the resource hog");
+        assert!(segs.iter().all(|s| s.task.is_some()), "no idle on a packed resource");
+    }
+
+    #[test]
+    fn critical_path_accounts_contention_stretched_transfers() {
+        let mut tg = TaskGraph::new(2);
+        tg.num_links = 1;
+        let a = tg.push(loaded(0, 0.1, 1.0, &[0]));
+        let b = tg.push(loaded(1, 0.1, 1.0, &[0])); // stretched by sharing
+        let sched = simulate(&tg);
+        let segs = critical_path(&tg, &sched);
+        assert_tiles_makespan(&tg, &sched, &segs);
+        // The stretched transfer defines the makespan.
+        assert_eq!(segs.last().unwrap().task, Some(b));
+        let _ = a;
+    }
+
+    #[test]
+    fn critical_path_of_empty_graph_is_empty() {
+        let tg = TaskGraph::new(1);
+        let sched = simulate(&tg);
+        assert!(critical_path(&tg, &sched).is_empty());
     }
 }

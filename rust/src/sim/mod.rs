@@ -36,7 +36,7 @@
 
 pub mod engine;
 
-pub use engine::{simulate, Schedule, Simulator};
+pub use engine::{critical_path, simulate, CriticalSegment, Schedule, Simulator};
 
 /// What a task models — used for runtime-feedback attribution.
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -19,6 +19,8 @@
 //!  * cluster generator: random flat and hierarchical topologies always
 //!    validate; bandwidth symmetric; routes exist between all device
 //!    pairs; a route's bottleneck never exceeds any traversed link
+//!  * observability: an installed tracer never perturbs plan bytes
+//!    (workers=1) or evaluation outcomes (shared-cache workers)
 
 use tag::cluster::generator::{random_hierarchical_topology, random_topology};
 use tag::cluster::presets::{multi_rack, sfb_pair, testbed};
@@ -627,6 +629,90 @@ fn prop_delta_bit_identical_across_shared_cache_workers() {
                 });
             }
         });
+    }
+}
+
+#[test]
+fn prop_tracing_never_perturbs_plan_bytes_or_evaluations() {
+    use tag::api::{PlanRequest, Planner};
+    use tag::obs::Tracer;
+
+    // workers=1 — the exact sequential engine: a fresh planner run
+    // under an installed tracer must produce a byte-identical encoded
+    // plan to an untraced run.  Spans read the monotonic clock but
+    // write only to their own buffers, so nothing they observe may
+    // reach plan bytes, fingerprints or RNG state.
+    let request =
+        PlanRequest::new(models::by_name("VGG19", 0.25).unwrap(), multi_rack())
+            .budget(40, 10)
+            .seed(11);
+    let untraced = Planner::builder().build().plan(&request).unwrap().plan.encode();
+    let tracer = Tracer::enabled("prop");
+    let traced = {
+        let _g = tracer.install();
+        Planner::builder().build().plan(&request).unwrap().plan.encode()
+    };
+    let trace = tracer.finish().expect("enabled tracer yields a trace");
+    assert!(!trace.spans.is_empty(), "the planner emitted no spans under tracing");
+    assert_eq!(untraced, traced, "tracing perturbed plan bytes at workers=1");
+
+    // workers=4 — tree-parallel search is seed-stable but
+    // schedule-dependent (thread interleaving picks among equal-value
+    // expansions), so whole-plan bytes are not comparable run to run
+    // even without tracing.  The contract is checked where parallel
+    // workers actually share state: evaluation over one shared
+    // EvalCaches bundle.  The same seeded flip walks run once untraced
+    // and once traced (fresh shared caches each time); every outcome
+    // must match bit for bit.
+    let model = models::by_name("VGG19", 0.25).unwrap();
+    let topo = multi_rack();
+    let cost = CostModel::profile(&model.ops, &unique_gpus(&topo), 0.0, 1);
+    let gg = group_ops(&model, &cost, 10, 3);
+    let comm = CommModel::fit(3);
+    let actions = enumerate_actions(&topo);
+    let ng = gg.num_groups();
+    let walk = |tracer: &Tracer| -> Vec<Vec<SimOutcome>> {
+        let caches = EvalCaches::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4usize)
+                .map(|w| {
+                    let caches = caches.clone();
+                    let tracer = tracer.clone();
+                    let (gg, topo, cost, comm, actions) =
+                        (&gg, &topo, &cost, &comm, &actions);
+                    scope.spawn(move || {
+                        let _g = tracer.install();
+                        let _s = tag::obs::span_arg("prop.worker", w as i64);
+                        let low = Lowering::with_caches(gg, topo, cost, comm, caches);
+                        let mut rng = Rng::new(9700 + w as u64);
+                        let mut s = Strategy::dp_allreduce(ng, topo);
+                        let mut outs = Vec::new();
+                        for _ in 0..12 {
+                            for _ in 0..(1 + rng.below(2)) {
+                                s.slots[rng.below(ng)] = Some(*rng.choose(actions));
+                            }
+                            outs.push(low.evaluate(&s));
+                        }
+                        outs
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    };
+    let reference = walk(&Tracer::disabled());
+    let tracer = Tracer::enabled("prop-workers");
+    let traced = walk(&tracer);
+    let trace = tracer.finish().expect("enabled tracer yields a trace");
+    assert!(
+        trace.spans.iter().any(|s| s.name == "prop.worker"),
+        "worker spans never recorded"
+    );
+    for (w, (a, b)) in reference.iter().zip(&traced).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (step, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_outcomes_bit_identical(x, y, &format!("traced worker {w} step {step}"));
+        }
     }
 }
 

@@ -627,6 +627,98 @@ fn saturated_queue_sheds_with_503_and_retry_after() {
 }
 
 #[test]
+fn debug_trace_and_explain_round_trip_over_http() {
+    use tag::api::json::Json;
+
+    let (addr, handle) = start_server(2, 16);
+    let (status, plan_body) = post_plan(addr, SMALL_PLAN);
+    assert_eq!(status, 200, "{plan_body}");
+
+    // The plan request was traced into the flight recorder; the export
+    // must be valid Chrome trace-event JSON whose spans nest correctly.
+    let (status, _, text) = http(addr, "GET", "/debug/trace", None);
+    assert_eq!(status, 200);
+    let export = Json::parse(&text).expect("trace export parses as JSON");
+    let events = export.field("traceEvents").unwrap().as_arr().unwrap();
+
+    struct Span {
+        pid: u64,
+        tid: u64,
+        depth: u64,
+        start: f64,
+        end: f64,
+        dur: f64,
+    }
+    let mut spans = Vec::new();
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str().ok()) != Some("X") {
+            continue;
+        }
+        let ts = e.field("ts").unwrap().as_f64().unwrap();
+        let dur = e.field("dur").unwrap().as_f64().unwrap();
+        spans.push(Span {
+            pid: e.field("pid").unwrap().as_u64().unwrap(),
+            tid: e.field("tid").unwrap().as_u64().unwrap(),
+            depth: e.field("args").and_then(|a| a.field("depth")).unwrap().as_u64().unwrap(),
+            start: ts,
+            end: ts + dur,
+            dur,
+        });
+    }
+    assert!(!spans.is_empty(), "no complete events in {text}");
+
+    // Spans on one thread nest by interval containment: every span at
+    // depth d > 0 sits inside a depth d-1 span on its (pid, tid), and
+    // each thread's root covers at least the sum of its direct
+    // children's durations (same-depth spans are disjoint by stack
+    // discipline).
+    const EPS: f64 = 1e-6;
+    for s in spans.iter().filter(|s| s.depth > 0) {
+        let nested = spans.iter().any(|p| {
+            (p.pid, p.tid) == (s.pid, s.tid)
+                && p.depth + 1 == s.depth
+                && p.start <= s.start + EPS
+                && s.end <= p.end + EPS
+        });
+        assert!(nested, "depth-{} span [{}, {}] has no enclosing parent", s.depth, s.start, s.end);
+    }
+    for root in spans.iter().filter(|s| s.depth == 0) {
+        let child_sum: f64 = spans
+            .iter()
+            .filter(|s| (s.pid, s.tid, s.depth) == (root.pid, root.tid, 1))
+            .map(|s| s.dur)
+            .sum();
+        assert!(
+            root.dur + EPS >= child_sum,
+            "root span ({} µs) shorter than its children combined ({child_sum} µs)",
+            root.dur
+        );
+    }
+    assert!(metric(addr, "tag_traces_recorded_total") >= 1.0);
+
+    // `POST /explain` re-simulates the served plan deterministically.
+    let explain_body = format!(
+        r#"{{"model":"VGG19","iterations":30,"max_groups":10,"seed":3,"plan":{plan_body}}}"#
+    );
+    let (status, _, report) = http(addr, "POST", "/explain", Some(&explain_body));
+    assert_eq!(status, 200, "{report}");
+    let report = Json::parse(&report).expect("explain report parses");
+    assert!(report.field("reproduces_reported_time").unwrap().as_bool().unwrap());
+    assert!(
+        report
+            .field("critical_path")
+            .and_then(|cp| cp.field("attributed_fraction"))
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            >= 0.95
+    );
+
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
 fn graceful_shutdown_drains_in_flight_and_queued_requests() {
     let (addr, handle) = start_server(2, 16);
     // Three searches with distinct seeds (no coalescing): more work

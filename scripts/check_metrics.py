@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Validate a `tag serve` /metrics exposition read from stdin.
+
+Checks:
+  * every sample's series (base name, with `_bucket`/`_sum`/`_count`
+    stripped for histograms) is declared by `# HELP` and `# TYPE`
+    lines before any of its samples;
+  * histogram `le` buckets are cumulative (monotone non-decreasing,
+    final bucket `+Inf`) and the `+Inf` bucket equals `_count`;
+  * the always-on series are present even at zero: build info, uptime,
+    the plan-cache gauges, and the flight-recorder counters.
+
+Exit status 0 = valid exposition; diagnostics go to stderr.
+"""
+
+import sys
+
+REQUIRED = [
+    "tag_build_info",
+    "tag_uptime_seconds",
+    "tag_requests_total",
+    "tag_responses_total",
+    "tag_latency_seconds",
+    "tag_plan_cache_hits",
+    "tag_plan_cache_misses",
+    "tag_plan_cache_hit_rate",
+    "tag_plan_cache_occupancy",
+    "tag_traces_recorded_total",
+    "tag_trace_dropped_total",
+    "tag_slow_logged_total",
+]
+
+
+def base_name(sample_name):
+    for suffix in ("_bucket", "_sum", "_count"):
+        if sample_name.endswith(suffix):
+            return sample_name[: -len(suffix)]
+    return sample_name
+
+
+def parse_labels(label_text):
+    labels = {}
+    for part in filter(None, label_text.split(",")):
+        key, _, value = part.partition("=")
+        labels[key.strip()] = value.strip().strip('"')
+    return labels
+
+
+def main():
+    text = sys.stdin.read()
+    errors = []
+    helps, types = set(), {}
+    samples = []  # (name, labels, value)
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            helps.add(line.split()[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        name_part, _, value = line.rpartition(" ")
+        name, _, label_text = name_part.partition("{")
+        try:
+            value = float(value.replace("+Inf", "inf"))
+        except ValueError:
+            errors.append(f"line {lineno}: unparsable value in {line!r}")
+            continue
+        samples.append((name, parse_labels(label_text.rstrip("}")), value))
+
+    if not samples:
+        errors.append("no samples at all")
+
+    for name, _, _ in samples:
+        base = base_name(name)
+        if base not in types:
+            errors.append(f"{name}: no # TYPE for {base}")
+        if base not in helps:
+            errors.append(f"{name}: no # HELP for {base}")
+
+    # Histogram bucket discipline, one series per base-name + non-le
+    # label set.
+    buckets = {}
+    counts = {}
+    for name, labels, value in samples:
+        base = base_name(name)
+        rest = tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+        if name.endswith("_bucket"):
+            buckets.setdefault((base, rest), []).append(
+                (float(labels.get("le", "nan").replace("+Inf", "inf")), value)
+            )
+        elif name.endswith("_count"):
+            counts[(base, rest)] = value
+    for (base, rest), series in buckets.items():
+        if types.get(base) != "histogram":
+            errors.append(f"{base}: has _bucket samples but # TYPE is {types.get(base)}")
+        series.sort()
+        if not series or series[-1][0] != float("inf"):
+            errors.append(f"{base}{dict(rest)}: no +Inf bucket")
+            continue
+        cumulative = [v for _, v in series]
+        if any(b > a for a, b in zip(cumulative[1:], cumulative)):
+            errors.append(f"{base}{dict(rest)}: buckets not cumulative: {cumulative}")
+        total = counts.get((base, rest))
+        if total is None:
+            errors.append(f"{base}{dict(rest)}: missing _count")
+        elif total != cumulative[-1]:
+            errors.append(
+                f"{base}{dict(rest)}: +Inf bucket {cumulative[-1]} != _count {total}"
+            )
+
+    present = {base_name(name) for name, _, _ in samples}
+    for required in REQUIRED:
+        if required not in present:
+            errors.append(f"required series {required} absent")
+
+    for error in errors:
+        print(f"check_metrics: {error}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    print(f"check_metrics: OK ({len(samples)} samples, {len(types)} series)")
+
+
+if __name__ == "__main__":
+    main()
